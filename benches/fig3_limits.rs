@@ -1,0 +1,14 @@
+//! Reproduces Figure 3 / Tables 4-5: small-LM limitation micro-benchmarks
+//! (context-length and multi-step degradation + decomposed counterpart).
+use minions::exp::Exp;
+use minions::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("fig3_limits", "Figure 3 / Tables 4-5 reproduction")
+        .opt("backend", "pjrt | native (equivalence asserted by tests)", Some("native"))
+        .opt("n", "samples per point", Some("32"))
+        .opt("seed", "seed", Some("42"));
+    let a = cli.parse();
+    let mut exp = Exp::new(a.get_or("backend", "pjrt"), a.parse_num("seed", 42)).expect("startup");
+    println!("{}", exp.fig3(a.parse_num("n", 32)).unwrap());
+}

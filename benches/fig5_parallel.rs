@@ -1,0 +1,19 @@
+//! Reproduces Figure 5 (parallel-workload knobs: tasks/round, samples,
+//! chunk granularity) and Figure 4 (capacity vs accuracy + communication
+//! efficiency / information-bottleneck view).
+use minions::exp::Exp;
+use minions::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("fig5_parallel", "Figures 4-5 reproduction")
+        .opt("backend", "pjrt | native (equivalence asserted by tests)", Some("native"))
+        .opt("n", "samples per point", Some("16"))
+        .opt("seed", "seed", Some("42"));
+    let a = cli.parse();
+    let n = a.parse_num("n", 16);
+    let mut exp = Exp::new(a.get_or("backend", "pjrt"), a.parse_num("seed", 42)).expect("startup");
+    println!("== Figure 4: model-size series ==");
+    println!("{}", exp.fig4(n).unwrap());
+    println!("== Figure 5: parallel-workload knobs ==");
+    println!("{}", exp.fig5(n).unwrap());
+}

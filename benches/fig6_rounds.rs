@@ -1,0 +1,14 @@
+//! Reproduces Figure 6 (Minion rounds sweep) and Figure 7 (MinionS
+//! retries-vs-scratchpad round strategies).
+use minions::exp::Exp;
+use minions::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("fig6_rounds", "Figures 6-7 reproduction")
+        .opt("backend", "pjrt | native (equivalence asserted by tests)", Some("native"))
+        .opt("n", "samples per dataset", Some("12"))
+        .opt("seed", "seed", Some("42"));
+    let a = cli.parse();
+    let mut exp = Exp::new(a.get_or("backend", "pjrt"), a.parse_num("seed", 42)).expect("startup");
+    println!("{}", exp.fig6(a.parse_num("n", 12)).unwrap());
+}

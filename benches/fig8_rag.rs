@@ -1,0 +1,18 @@
+//! Reproduces Figure 8 (RAG vs Minion(S) on finance, retrieval-k sweep)
+//! and Tables 7-8 (summarisation rubric: MinionS ≈ remote-only > RAG).
+use minions::exp::Exp;
+use minions::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("fig8_rag", "Figure 8 + Table 7 reproduction")
+        .opt("backend", "pjrt | native (equivalence asserted by tests)", Some("native"))
+        .opt("n", "samples", Some("16"))
+        .opt("seed", "seed", Some("42"));
+    let a = cli.parse();
+    let n = a.parse_num("n", 16);
+    let mut exp = Exp::new(a.get_or("backend", "pjrt"), a.parse_num("seed", 42)).expect("startup");
+    println!("== Figure 8: RAG vs local-remote on finance ==");
+    println!("{}", exp.fig8(n).unwrap());
+    println!("== Table 7: summarisation rubric (BooookScore analogue) ==");
+    println!("{}", exp.summarization(n.min(8)).unwrap());
+}

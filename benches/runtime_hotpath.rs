@@ -1,0 +1,133 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf) + Appendix C latency
+//! model table.
+//!
+//! Measures: PJRT dispatch latency per capacity, end-to-end MinionS
+//! queries/sec, dynamic-batcher occupancy, and prints the analytical
+//! latency ratios with the Prop C.1 bound.
+
+use minions::data;
+use minions::eval::run_protocol;
+use minions::exp::Exp;
+use minions::latency::*;
+use minions::model::{local, remote};
+use minions::protocol::{MinionS, MinionsConfig};
+use minions::runtime::ScoreRequest;
+use minions::sched::{DynamicBatcher, ScoreRow};
+use minions::util::cli::Cli;
+use minions::util::rng::Rng;
+use minions::util::stats::{bench, fmt_duration, Table};
+use minions::vocab::{BATCH, CHUNK, QLEN};
+use std::sync::Arc;
+
+fn rand_request(d: usize, rng: &mut Rng) -> ScoreRequest {
+    ScoreRequest {
+        d,
+        q_tokens: (0..BATCH * QLEN).map(|_| rng.range(16, 4096) as i32).collect(),
+        q_weights: vec![0.2; BATCH * QLEN],
+        c_tokens: (0..BATCH * CHUNK).map(|_| rng.range(4096, 8192) as i32).collect(),
+        c_mask: vec![1.0; BATCH * CHUNK],
+    }
+}
+
+fn main() {
+    let cli = Cli::new("runtime_hotpath", "hot-path microbenchmarks + latency model")
+        .opt("backend", "pjrt | native", Some("pjrt"))
+        .opt("iters", "measured iterations", Some("20"))
+        .opt("seed", "seed", Some("42"));
+    let a = cli.parse();
+    let iters: usize = a.parse_num("iters", 20);
+    let mut exp = Exp::new(a.get_or("backend", "pjrt"), a.parse_num("seed", 42)).expect("startup");
+    let mut rng = Rng::seed_from(7);
+
+    // --- dispatch latency per capacity ---
+    println!("== PJRT score-dispatch latency (B={BATCH}, C={CHUNK}) ==");
+    let mut t = Table::new(&["d", "mean", "p50", "p95", "rows/s"]);
+    for d in [64usize, 128, 256, 1024] {
+        let req = rand_request(d, &mut rng);
+        let backend = Arc::clone(&exp.backend);
+        let s = bench(3, iters, || {
+            backend.score(req.clone()).unwrap();
+        });
+        t.row(vec![
+            d.to_string(),
+            fmt_duration(s.mean),
+            fmt_duration(s.p50),
+            fmt_duration(s.p95),
+            format!("{:.0}", BATCH as f64 / s.mean),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- end-to-end MinionS throughput ---
+    let ds = data::generate("finance", 8, 3);
+    let llama8b = exp.local(local::LLAMA_8B);
+    let gpt4o = exp.remote(remote::GPT_4O);
+    let proto = MinionS::new(llama8b, gpt4o, MinionsConfig::default());
+    let s = bench(1, 3, || {
+        run_protocol(&proto, &ds, 5, true).unwrap();
+    });
+    println!(
+        "== end-to-end MinionS ==\n8 finance queries: {} per batch ({:.2} queries/s)\n",
+        fmt_duration(s.mean),
+        8.0 / s.mean
+    );
+
+    // --- dynamic batcher occupancy under concurrent load ---
+    let batcher = DynamicBatcher::new(
+        Arc::clone(&exp.backend),
+        std::time::Duration::from_millis(5),
+    );
+    let n_rows = 64;
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n_rows)
+        .map(|i| {
+            let b = Arc::clone(&batcher);
+            std::thread::spawn(move || {
+                let mut rng = Rng::seed_from(i as u64);
+                let row = ScoreRow {
+                    d: 128,
+                    q_tokens: (0..QLEN).map(|_| rng.range(16, 4096) as i32).collect(),
+                    q_weights: vec![0.2; QLEN],
+                    c_tokens: (0..CHUNK).map(|_| rng.range(4096, 8192) as i32).collect(),
+                    c_mask: vec![1.0; CHUNK],
+                };
+                b.score_row(row).unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "== dynamic batcher ==\n{n_rows} concurrent rows in {}: occupancy {:.2}, {} dispatches\n",
+        fmt_duration(elapsed),
+        batcher.stats.occupancy(),
+        batcher
+            .stats
+            .dispatches
+            .load(std::sync::atomic::Ordering::Relaxed)
+    );
+    batcher.stop();
+
+    // --- Appendix C latency model ---
+    println!("== Appendix C analytical latency (Llama-8B@4090 + Llama-405B@8xH100) ==");
+    let mut t = Table::new(&["n (tokens)", "T_remote", "T_minionS", "ratio", "Prop C.1 bound"]);
+    for n in [50_000.0f64, 100_000.0, 200_000.0] {
+        let (c, k, s_, p) = (16.0, 2.0, 1.0, 0.3);
+        let n_out_l = 64.0;
+        let a_frac = n_out_l * p * c * k * s_ / n;
+        let t_r = t_remote(&LLAMA_405B, &H100_NODE, n, 128.0);
+        let t_m = t_minions_local(&LLAMA_8B, &RTX_4090, n, n_out_l, c, k, s_, p)
+            + t_minions_remote(&LLAMA_405B, &H100_NODE, n_out_l * p * c * k * s_, 128.0);
+        let bound = prop_c1_bound(&LLAMA_8B, &RTX_4090, &LLAMA_405B, &H100_NODE, a_frac);
+        t.row(vec![
+            format!("{n:.0}"),
+            format!("{:.2}s", t_r),
+            format!("{:.2}s", t_m),
+            format!("{:.2}x", t_m / t_r),
+            format!("{bound:.2}x"),
+        ]);
+    }
+    println!("{}", t.render());
+}

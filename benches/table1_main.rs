@@ -1,0 +1,22 @@
+//! Reproduces Table 1 / Table 6 / Figure 2: the main accuracy-cost grid
+//! plus Table 2 (remote sweep) and Table 3 (retrospective).
+//! Run: cargo bench --bench table1_main [-- --n 32 --backend pjrt]
+use minions::exp::Exp;
+use minions::util::cli::Cli;
+
+fn main() {
+    let cli = Cli::new("table1_main", "Table 1/2/3 + Figure 2 reproduction")
+        .opt("backend", "pjrt | native (equivalence asserted by tests)", Some("native"))
+        .opt("n", "samples per dataset", Some("24"))
+        .opt("seed", "seed", Some("42"));
+    let a = cli.parse();
+    let n = a.parse_num("n", 24);
+    let mut exp = Exp::new(a.get_or("backend", "pjrt"), a.parse_num("seed", 42)).expect("startup");
+    println!("== Table 1 / Table 6 (n={n}) ==");
+    println!("{}", exp.table1(n, Some(std::path::Path::new("figure2.csv"))).unwrap());
+    println!("(figure2.csv written: cost vs macro-accuracy scatter)");
+    println!("== Table 2: remote model sweep ==");
+    println!("{}", exp.table2(n.min(16)).unwrap());
+    println!("== Table 3: point-in-time retrospective ==");
+    println!("{}", exp.table3(n.min(16)).unwrap());
+}

@@ -1,0 +1,59 @@
+//! Scenario: a financial analyst workload (the paper's FinanceBench
+//! motivation) — numeric-reasoning queries over long synthetic 10-K
+//! filings, comparing every system side by side, including the RAG
+//! baselines of §6.5.1.
+//!
+//!     cargo run --release --example finance_analyst
+
+use minions::data;
+use minions::eval::run_protocol;
+use minions::exp::Exp;
+use minions::model::{local, remote};
+use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
+use minions::rag::{Rag, Retriever};
+use minions::util::stats::Table;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let n = 16;
+    let mut exp = Exp::new("pjrt", 1234)?;
+    let gpt4o = exp.remote(remote::GPT_4O);
+    let llama8b = exp.local(local::LLAMA_8B);
+    let ds = data::generate("finance", n, 1234);
+    println!(
+        "finance workload: {n} filings, avg {} tokens each\n",
+        ds.samples[0].context.total_tokens()
+    );
+
+    let systems: Vec<Arc<dyn Protocol>> = vec![
+        Arc::new(RemoteOnly::new(gpt4o.clone())),
+        Arc::new(LocalOnly::new(llama8b.clone())),
+        Arc::new(Minion::new(llama8b.clone(), gpt4o.clone(), 3)),
+        Arc::new(MinionS::new(llama8b.clone(), gpt4o.clone(), MinionsConfig::default())),
+        Arc::new(Rag::new(gpt4o.clone(), Arc::clone(&exp.backend), Retriever::Bm25, 8)),
+        Arc::new(Rag::new(gpt4o.clone(), Arc::clone(&exp.backend), Retriever::Dense, 8)),
+    ];
+
+    let mut t = Table::new(&["System", "Acc", "$/query", "Remote prefill (k)", "Savings vs remote"]);
+    let mut remote_cost = None;
+    for sys in &systems {
+        let r = run_protocol(sys.as_ref(), &ds, 9, true)?;
+        let usd = r.mean_usd();
+        if remote_cost.is_none() {
+            remote_cost = Some(usd);
+        }
+        let savings = match remote_cost {
+            Some(rc) if usd > 0.0 => format!("{:.1}x", rc / usd),
+            _ => "∞".into(),
+        };
+        t.row(vec![
+            r.protocol.clone(),
+            format!("{:.3}", r.accuracy),
+            format!("${usd:.4}"),
+            format!("{:.2}", r.cost.mean_prefill_k()),
+            savings,
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

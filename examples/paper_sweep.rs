@@ -1,0 +1,37 @@
+//! Regenerate every paper exhibit in one run (the full reproduction
+//! sweep; budget ~minutes on one CPU core with the PJRT backend).
+//!
+//!     cargo run --release --example paper_sweep -- [--n 16] [--backend pjrt]
+
+use minions::exp::Exp;
+use minions::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("paper_sweep", "regenerate all paper exhibits")
+        .opt("backend", "pjrt | native", Some("pjrt"))
+        .opt("n", "samples per dataset", Some("16"))
+        .opt("seed", "seed", Some("42"));
+    let a = cli.parse();
+    let n: usize = a.parse_num("n", 16);
+    let mut exp = Exp::new(a.get_or("backend", "pjrt"), a.parse_num("seed", 42))?;
+
+    println!("=== Table 1 / Table 6 / Figure 2 ===");
+    println!("{}", exp.table1(n, Some(std::path::Path::new("figure2.csv")))?);
+    println!("=== Figure 3 / Tables 4-5 ===");
+    println!("{}", exp.fig3(n * 2)?);
+    println!("=== Figure 4 ===");
+    println!("{}", exp.fig4(n)?);
+    println!("=== Figure 5 ===");
+    println!("{}", exp.fig5(n)?);
+    println!("=== Figures 6-7 ===");
+    println!("{}", exp.fig6((n / 2).max(6))?);
+    println!("=== Table 2 ===");
+    println!("{}", exp.table2((n / 2).max(6))?);
+    println!("=== Table 3 ===");
+    println!("{}", exp.table3((n / 2).max(6))?);
+    println!("=== Figure 8 ===");
+    println!("{}", exp.fig8(n)?);
+    println!("=== Table 7 (summarisation) ===");
+    println!("{}", exp.summarization((n / 2).max(4))?);
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: run one MinionS query end-to-end and inspect the exchange.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Loads the AOT-compiled scorer artifacts on the PJRT CPU client, builds
+//! a Llama-8B-class local model + GPT-4o-class remote model, generates a
+//! synthetic FinanceBench-style sample, and runs the decompose → execute
+//! → aggregate loop, printing the protocol transcript and the cost
+//! ledger.
+
+use minions::cost::CostModel;
+use minions::data;
+use minions::eval::score_strict;
+use minions::exp::Exp;
+use minions::model::{local, remote};
+use minions::protocol::{MinionS, MinionsConfig, Protocol};
+use minions::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut exp = Exp::new("pjrt", 42)?;
+    let local_lm = exp.local(local::LLAMA_8B);
+    let remote_lm = exp.remote(remote::GPT_4O);
+
+    let ds = data::generate("finance", 1, 7);
+    let sample = &ds.samples[0];
+    println!("query: {}", sample.query.text);
+    println!(
+        "context: {} docs, {} tokens\n",
+        sample.context.docs.len(),
+        sample.context.total_tokens()
+    );
+
+    let proto = MinionS::new(local_lm, remote_lm, MinionsConfig::default());
+    let mut rng = Rng::seed_from(1);
+    let outcome = proto.run(sample, &mut rng)?;
+
+    for line in &outcome.transcript {
+        println!("--- {line}");
+    }
+    let correct = score_strict(&outcome.answer, &sample.query.answer) >= 0.999;
+    println!("\nanswer: {:?} (truth: {:?}) -> {}", outcome.answer, sample.query.answer,
+        if correct { "CORRECT" } else { "wrong" });
+    println!(
+        "cost: ${:.5} ({} prefill + {} decode remote tokens, {} local jobs)",
+        CostModel::GPT4O_JAN2025.usd(&outcome.ledger),
+        outcome.ledger.remote_prefill,
+        outcome.ledger.remote_decode,
+        outcome.ledger.local_jobs
+    );
+    Ok(())
+}

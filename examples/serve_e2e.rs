@@ -1,0 +1,106 @@
+//! End-to-end serving driver (the DESIGN.md §validation workload).
+//!
+//!     cargo run --release --example serve_e2e
+//!
+//! Starts the full serving stack — PJRT engine + protocols + HTTP
+//! front-end — on an ephemeral port, drives a batch of concurrent client
+//! requests against it (mixed protocols over the three datasets), and
+//! reports accuracy, per-query cost, and latency percentiles. Proves all
+//! three layers compose with Python nowhere on the request path.
+
+use minions::data;
+use minions::exp::Exp;
+use minions::model::{local, remote};
+use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
+use minions::server::{http_get, http_post, Server, ServerState};
+use minions::util::json::Json;
+use minions::util::stats::Summary;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let n_samples = 8usize;
+    let mut exp = Exp::new("pjrt", 42)?;
+    let gpt4o = exp.remote(remote::GPT_4O);
+    let llama8b = exp.local(local::LLAMA_8B);
+
+    let mut datasets = HashMap::new();
+    for name in ["finance", "health", "qasper"] {
+        datasets.insert(name.to_string(), data::generate(name, n_samples, 42));
+    }
+    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    protocols.insert(
+        "minions".into(),
+        Arc::new(MinionS::new(llama8b.clone(), gpt4o.clone(), MinionsConfig::default())),
+    );
+    protocols.insert("minion".into(), Arc::new(Minion::new(llama8b.clone(), gpt4o.clone(), 3)));
+    protocols.insert("remote".into(), Arc::new(RemoteOnly::new(gpt4o.clone())));
+    protocols.insert("local".into(), Arc::new(LocalOnly::new(llama8b)));
+
+    let state = Arc::new(ServerState {
+        datasets,
+        protocols,
+        metrics: Default::default(),
+        seed: 42,
+    });
+    let server = Server::bind(state, "127.0.0.1:0", 4)?;
+    let addr = server.addr.to_string();
+    println!("serving on http://{addr}");
+
+    let total_requests = (3 * n_samples) as u64;
+    let server_thread = std::thread::spawn(move || server.serve(Some(total_requests + 2)));
+
+    // health check
+    assert!(http_get(&addr, "/healthz")?.contains("ok"));
+
+    // drive concurrent clients: every sample of every dataset via minions
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for ds in ["finance", "health", "qasper"] {
+        for i in 0..n_samples {
+            let addr = addr.clone();
+            handles.push(std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"dataset":"{ds}","sample":{i},"protocol":"minions"}}"#
+                );
+                let resp = http_post(&addr, "/v1/query", &body).expect("request");
+                let j = Json::parse(&resp).expect("json");
+                (
+                    j.get("correct").and_then(Json::as_bool).unwrap_or(false),
+                    j.get("usd").and_then(Json::as_f64).unwrap_or(0.0),
+                    j.get("latency_ms").and_then(Json::as_f64).unwrap_or(0.0),
+                )
+            }));
+        }
+    }
+    let mut correct = 0usize;
+    let mut usd_total = 0.0;
+    let mut latencies = Vec::new();
+    for h in handles {
+        let (ok, usd, lat) = h.join().unwrap();
+        correct += ok as usize;
+        usd_total += usd;
+        latencies.push(lat);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s = Summary::of(&latencies);
+    println!(
+        "\n{} requests in {wall:.2}s ({:.2} req/s)",
+        latencies.len(),
+        latencies.len() as f64 / wall
+    );
+    println!(
+        "accuracy: {:.3}   mean cost: ${:.5}/query",
+        correct as f64 / latencies.len() as f64,
+        usd_total / latencies.len() as f64
+    );
+    println!(
+        "latency ms: p50={:.1} p95={:.1} max={:.1}",
+        s.p50, s.p95, s.max
+    );
+
+    let metrics = http_get(&addr, "/metrics")?;
+    println!("server metrics: {metrics}");
+    let _ = server_thread; // server exits after max_requests
+    std::process::exit(0);
+}

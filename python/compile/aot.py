@@ -1,0 +1,164 @@
+"""AOT lowering: JAX model -> HLO *text* artifacts + weight files.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under artifacts/:
+    <variant>.hlo.txt       one per exported (function, shape, d) variant
+    weights_d<d>.bin        MNW1 tensor files (embedding tables)
+    manifest.json           machine-readable index consumed by the rust
+                            runtime (rust/src/runtime/manifest.rs)
+
+Run via `make artifacts` (no-op if inputs unchanged — make handles the
+staleness check).  Python never runs after this step.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .common import (
+    BATCH,
+    CHUNK,
+    D_VARIANTS,
+    EMBED_VARIANTS,
+    QLEN,
+    SCORE_VARIANTS,
+    SEED,
+    VOCAB,
+    WINDOW,
+    wpos_for,
+)
+from .weights import rademacher_table, write_weights
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower jitted-fn IR to HLO text via stablehlo -> XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def score_variant_entry(variant):
+    """Build (fn, example_specs, io-description) for a scorer variant."""
+    b, c, d = variant.batch, variant.chunk, variant.d
+    specs = (
+        _spec((VOCAB, d), jnp.float32),  # emb
+        _spec((WINDOW,), jnp.float32),  # wpos
+        _spec((b, QLEN), jnp.int32),  # q_tokens
+        _spec((b, QLEN), jnp.float32),  # q_weights
+        _spec((b, c), jnp.int32),  # c_tokens
+        _spec((b, c), jnp.float32),  # c_mask
+    )
+    inputs = [
+        {"name": "emb", "shape": [VOCAB, d], "dtype": "f32"},
+        {"name": "wpos", "shape": [WINDOW], "dtype": "f32"},
+        {"name": "q_tokens", "shape": [b, QLEN], "dtype": "i32"},
+        {"name": "q_weights", "shape": [b, QLEN], "dtype": "f32"},
+        {"name": "c_tokens", "shape": [b, c], "dtype": "i32"},
+        {"name": "c_mask", "shape": [b, c], "dtype": "f32"},
+    ]
+    outputs = [
+        {"name": "scores", "shape": [b, c], "dtype": "f32"},
+        {"name": "lse", "shape": [b], "dtype": "f32"},
+    ]
+    return model.local_score_entry, specs, inputs, outputs
+
+
+def embed_variant_entry(variant):
+    b, c, d = variant.batch, variant.chunk, variant.d
+    specs = (
+        _spec((VOCAB, d), jnp.float32),
+        _spec((b, c), jnp.int32),
+        _spec((b, c), jnp.float32),
+    )
+    inputs = [
+        {"name": "emb", "shape": [VOCAB, d], "dtype": "f32"},
+        {"name": "c_tokens", "shape": [b, c], "dtype": "i32"},
+        {"name": "c_mask", "shape": [b, c], "dtype": "f32"},
+    ]
+    outputs = [{"name": "chunk_emb", "shape": [b, d], "dtype": "f32"}]
+    return model.embed_fn, specs, inputs, outputs
+
+
+def build_all(out_dir: Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest = {
+        "format": "minions-artifacts-v1",
+        "vocab": VOCAB,
+        "qlen": QLEN,
+        "window": WINDOW,
+        "batch": BATCH,
+        "chunk": CHUNK,
+        "seed": SEED,
+        "d_variants": {str(d): name for d, name in D_VARIANTS.items()},
+        "modules": [],
+        "weights": [],
+    }
+
+    entries = [(v, "score", *score_variant_entry(v)) for v in SCORE_VARIANTS]
+    entries += [(v, "embed", *embed_variant_entry(v)) for v in EMBED_VARIANTS]
+
+    for variant, kind, fn, specs, inputs, outputs in entries:
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        hlo_path = out_dir / f"{variant.name}.hlo.txt"
+        hlo_path.write_text(text)
+        manifest["modules"].append(
+            {
+                "name": variant.name,
+                "kind": kind,
+                "file": hlo_path.name,
+                "d": variant.d,
+                "batch": variant.batch,
+                "chunk": variant.chunk,
+                "weights": f"weights_d{variant.d}.bin",
+                "inputs": inputs,
+                "outputs": outputs,
+            }
+        )
+        print(f"  wrote {hlo_path.name} ({len(text)} chars)")
+
+    import numpy as np
+
+    for d in sorted({v.d for v in SCORE_VARIANTS} | {v.d for v in EMBED_VARIANTS}):
+        wpath = out_dir / f"weights_d{d}.bin"
+        write_weights(
+            wpath,
+            {
+                "emb": rademacher_table(d),
+                "wpos": np.asarray(wpos_for(d), dtype=np.float32),
+            },
+        )
+        manifest["weights"].append({"file": wpath.name, "d": d, "wpos": wpos_for(d)})
+        print(f"  wrote {wpath.name}")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"  wrote manifest.json ({len(manifest['modules'])} modules)")
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description="Minions AOT artifact builder")
+    parser.add_argument("--out", default="../artifacts", help="artifact output dir")
+    args = parser.parse_args()
+    build_all(Path(args.out))
+
+
+if __name__ == "__main__":
+    main()

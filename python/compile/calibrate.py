@@ -1,0 +1,188 @@
+"""Capability calibration for the simulated model ladder (DESIGN.md §2).
+
+Monte-Carlos the *actual* scoring math (Rademacher embeddings + position-
+weighted window pooling + argmax extraction) over synthetic planted facts.
+
+Distractor tiers (difficulty ladder, mirrored by rust/src/data/):
+    random   — unrelated keys: everyone gets these right (sanity floor)
+    share2   — share 2/3 key tokens with the target (noise-separated)
+    permuted — same 3 key tokens, different order: only positional acuity
+               (the wpos capability knob, growing with d) separates these
+
+Axes swept:
+    d             embedding width (capacity ladder)
+    n_share2/n_permuted  confusable distractor counts
+    n_chunks      chunks concatenated into one softmax (context length)
+    k_parts       instruction multi-step-ness (keys pooled into one query)
+
+Writes `artifacts/calibration.json`: the measured accuracy surface plus the
+per-dataset difficulty constants the Rust generators consume.  Accuracy
+*emerges* from collisions in the hash-embedding space, not a lookup table.
+
+Run via `make artifacts` (after aot.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+from .common import CHUNK, FACT_SLOT, KEY_LEN, SEED, VOCAB, WINDOW, wpos_for
+from .weights import rademacher_table
+
+KEY_POOL = np.arange(16, 4096)
+VAL_POOL = np.arange(4096, VOCAB)
+
+TRIALS = 400
+
+
+def _plant(tokens: np.ndarray, slot: int, key: np.ndarray, val: int) -> None:
+    pos = slot * FACT_SLOT
+    tokens[pos : pos + KEY_LEN] = key
+    tokens[pos + KEY_LEN] = val
+
+
+def simulate(
+    E: np.ndarray,
+    wpos: np.ndarray,
+    n_share2: int,
+    n_permuted: int,
+    n_chunks: int,
+    k_parts: int,
+    trials: int,
+    rng: np.random.Generator,
+) -> float:
+    """Fraction of trials where argmax extraction recovers the target fact."""
+    C = CHUNK * n_chunks
+    n_slots = C // FACT_SLOT - 1
+    hits = 0
+    n_facts = 1 + n_share2 + n_permuted + (k_parts - 1)
+    for _ in range(trials):
+        tokens = rng.choice(VAL_POOL, size=C)  # filler
+        keys = [rng.choice(KEY_POOL, size=KEY_LEN, replace=False) for _ in range(k_parts)]
+        slots = rng.choice(n_slots, size=n_facts, replace=False)
+        target_pos = slots[0] * FACT_SLOT
+        _plant(tokens, slots[0], keys[0], rng.choice(VAL_POOL))
+        si = 1
+        for p_i in range(1, k_parts):  # other parts' facts
+            _plant(tokens, slots[si], keys[p_i], rng.choice(VAL_POOL))
+            si += 1
+        for _ in range(n_share2):  # share 2 of 3 key tokens
+            distract = keys[0].copy()
+            distract[rng.integers(KEY_LEN)] = rng.choice(KEY_POOL)
+            _plant(tokens, slots[si], distract, rng.choice(VAL_POOL))
+            si += 1
+        for _ in range(n_permuted):  # same tokens, wrong order
+            perm = keys[0].copy()
+            while True:
+                rng.shuffle(perm)
+                if not np.array_equal(perm, keys[0]):
+                    break
+            _plant(tokens, slots[si], perm, rng.choice(VAL_POOL))
+            si += 1
+
+        # query: positional weights per key triple, diluted 1/k over parts
+        q = np.zeros(E.shape[1])
+        for key in keys:
+            q += (wpos[:KEY_LEN, None] * E[key]).sum(axis=0)
+        q /= k_parts
+
+        ce = E[tokens]  # [C, d]
+        kwin = np.zeros_like(ce)
+        for j in range(WINDOW):
+            kwin[: C - j] += wpos[j] * ce[j:]
+        scores = kwin @ q
+        hits += int(int(np.argmax(scores)) == int(target_pos))
+    return hits / trials
+
+
+def build_surface(out_dir: Path, trials: int) -> dict:
+    rng = np.random.default_rng(SEED)
+    ds = [64, 128, 256, 1024]
+    tables: dict[str, list] = {"capacity": [], "context": [], "multistep": []}
+
+    # Axis 1: capacity x confusability (single chunk, single task)
+    for d in ds:
+        E = rademacher_table(d)
+        w = np.asarray(wpos_for(d))
+        for n_s2, n_perm in [(0, 0), (2, 1), (4, 2), (6, 4)]:
+            acc = simulate(E, w, n_s2, n_perm, 1, 1, trials, rng)
+            tables["capacity"].append(
+                {"d": d, "n_share2": n_s2, "n_permuted": n_perm, "acc": acc}
+            )
+
+    # Axis 2: context length (paper Table 4 / Fig 3-left shape), d=128.
+    # Confusable facts are distributed throughout the document (a real 10-K
+    # repeats every metric for every period/segment), so the distractor
+    # count a full-context read faces scales with the number of chunks —
+    # this is precisely the penalty MinionS' chunk-level jobs avoid.
+    E = rademacher_table(128)
+    w = np.asarray(wpos_for(128))
+    for n_chunks in [1, 4, 8, 16]:
+        acc = simulate(
+            E, w, 2 * n_chunks, 1 * n_chunks, n_chunks, 1, max(trials // 2, 100), rng
+        )
+        tables["context"].append({"d": 128, "n_chunks": n_chunks, "acc": acc})
+
+    # Axis 3: multi-step pooling (paper Table 5 / Fig 3-right shape), d=128
+    for k in [1, 2, 3, 4]:
+        acc = simulate(E, w, 4, 2, 1, k, max(trials // 2, 100), rng)
+        tables["multistep"].append({"d": 128, "k_parts": k, "acc": acc})
+
+    # Per-dataset difficulty constants consumed by rust/src/data/*.
+    datasets = {
+        "finance": {
+            "n_share2": 4,
+            "n_permuted": 2,
+            "chunks_per_doc": 16,
+            "compute_fraction": 0.5,
+        },
+        "health": {
+            "n_share2": 6,
+            "n_permuted": 3,
+            "chunks_per_doc": 24,
+            "multi_fraction": 0.5,
+        },
+        "qasper": {
+            "n_share2": 3,
+            "n_permuted": 2,
+            "chunks_per_doc": 12,
+            "bool_fraction": 0.3,
+        },
+        "books": {"salient_per_doc": 24, "chunks_per_doc": 32},
+    }
+
+    cal = {
+        "format": "minions-calibration-v1",
+        "trials": trials,
+        "surface": tables,
+        "datasets": datasets,
+    }
+    out = out_dir / "calibration.json"
+    out.write_text(json.dumps(cal, indent=2))
+    print(f"  wrote {out.name}")
+    for row in tables["capacity"]:
+        print(
+            f"    d={row['d']:<5} s2={row['n_share2']:<2} perm={row['n_permuted']:<2} "
+            f"acc={row['acc']:.3f}"
+        )
+    for row in tables["context"]:
+        print(f"    ctx d=128 chunks={row['n_chunks']:<3} acc={row['acc']:.3f}")
+    for row in tables["multistep"]:
+        print(f"    multi d=128 k={row['k_parts']} acc={row['acc']:.3f}")
+    return cal
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--out", default="../artifacts")
+    parser.add_argument("--trials", type=int, default=TRIALS)
+    args = parser.parse_args()
+    build_surface(Path(args.out), args.trials)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Shared build-time constants for the Minions compute substrate.
+
+These constants are mirrored on the Rust side in `rust/src/vocab/mod.rs`
+(and checked against `artifacts/manifest.json` at load time). Python is
+build-time only: it authors the kernels/model, lowers them to HLO text,
+and emits the weight tables; it never runs on the request path.
+"""
+
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# Token space
+# ---------------------------------------------------------------------------
+VOCAB: int = 8192  # total token ids
+PAD: int = 0  # embedding row is pinned to zero
+# ids 1..=15 are reserved markers (BOS/EOS/KEY_MARK/... — semantics live in
+# rust); 16..=4095 key-component tokens; 4096..=8191 value/filler tokens.
+
+# ---------------------------------------------------------------------------
+# Model geometry
+# ---------------------------------------------------------------------------
+KEY_LEN: int = 3  # facts are planted as [k1 k2 k3 v]
+WINDOW: int = 3  # scoring window == KEY_LEN, so the key-aligned window is the unique score maximum (a wider window ties with the window starting one position earlier)
+CHUNK: int = 512  # positions per chunk (local job context length)
+BATCH: int = 8  # jobs per PJRT dispatch on the hot path
+QLEN: int = 16  # max pooled query tokens (k-step query = 3k tokens)
+
+# Capacity ladder: embedding width d simulates model scale. The mapping to
+# the paper's models is documented in DESIGN.md §1.
+D_VARIANTS: dict[int, str] = {
+    64: "local-1b",
+    128: "local-3b",
+    256: "local-8b",
+    1024: "remote",
+}
+
+# Positional acuity: window pooling uses weights w_j ∝ (1 + GAMMA·(mid-j))
+# normalised to sum 1.  γ=0 is order-blind (mean pooling); larger γ makes
+# the scorer distinguish key-token *order*, so order-permuted distractor
+# facts separate the capacity ladder beyond what embedding noise alone
+# provides.  γ grows with d (bigger simulated models read more precisely).
+GAMMA: dict[int, float] = {64: 0.06, 128: 0.18, 256: 0.32, 1024: 0.55}
+
+FACT_SLOT: int = 8  # facts are planted at FACT_SLOT-aligned offsets (no overlap)
+
+
+def wpos_for(d: int, window: int | None = None) -> list[float]:
+    """Window position weights for capacity d (sum to 1, decreasing)."""
+    w = window if window is not None else WINDOW
+    g = GAMMA[d]
+    raw = [1.0 + g * (w - 1 - j) for j in range(w)]
+    s = sum(raw)
+    return [x / s for x in raw]
+
+SEED: int = 0x5EED0
+
+NEG_INF: float = -1.0e30  # masked-score fill
+
+
+@dataclass(frozen=True)
+class ScoreVariant:
+    """One exported scorer artifact (a (d, batch, chunk) instantiation)."""
+
+    d: int
+    batch: int = BATCH
+    chunk: int = CHUNK
+
+    @property
+    def name(self) -> str:
+        return f"score_b{self.batch}_c{self.chunk}_d{self.d}"
+
+
+@dataclass(frozen=True)
+class EmbedVariant:
+    """One exported chunk-encoder artifact (dense retrieval / pooling)."""
+
+    d: int
+    batch: int = BATCH
+    chunk: int = CHUNK
+
+    @property
+    def name(self) -> str:
+        return f"embed_b{self.batch}_c{self.chunk}_d{self.d}"
+
+
+SCORE_VARIANTS = [ScoreVariant(d) for d in D_VARIANTS]
+EMBED_VARIANTS = [EmbedVariant(128)]

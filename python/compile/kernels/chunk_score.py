@@ -1,0 +1,65 @@
+"""Blocked chunk-scoring Pallas kernel (L1 hot-spot #1).
+
+Computes position scores s[b, c] = q[b] . kwin[b, c] with the chunk
+dimension streamed through VMEM in blocks of `block_c` positions.
+
+TPU adaptation notes (DESIGN.md §5): the paper's local models run on
+GPU serving stacks; the equivalent hot loop here is authored for the TPU
+memory hierarchy — the query row stays VMEM-resident across the grid, each
+K block is a [block_c, d] tile that the BlockSpec pipeline streams
+HBM->VMEM, and the inner product is shaped as a [block_c, d] x [d] matmul
+so an MXU lowering sees a systolic-friendly contraction.  `interpret=True`
+is required on CPU PJRT (real-TPU lowering emits a Mosaic custom-call the
+CPU plugin cannot execute).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import NEG_INF
+
+DEFAULT_BLOCK_C = 512  # interpret-mode optimum (grid overhead dominates on CPU); see EXPERIMENTS.md §Perf for the TPU-estimated choice
+
+
+def _score_kernel(q_ref, k_ref, m_ref, o_ref):
+    """One (batch row, K block) tile: o = mask(K @ q)."""
+    q = q_ref[0]  # [d]
+    k = k_ref[0]  # [block_c, d]
+    mask = m_ref[0]  # [block_c]
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32)  # [block_c]
+    o_ref[0] = jnp.where(mask > 0, s, NEG_INF)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def chunk_score(
+    q: jnp.ndarray,
+    kwin: jnp.ndarray,
+    c_mask: jnp.ndarray,
+    *,
+    block_c: int = DEFAULT_BLOCK_C,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """q: [B, d], kwin: [B, C, d], c_mask: [B, C] -> scores [B, C]."""
+    b, c, d = kwin.shape
+    assert q.shape == (b, d), (q.shape, kwin.shape)
+    assert c_mask.shape == (b, c)
+    block_c = min(block_c, c)  # clamp for short sequences
+    assert c % block_c == 0, f"C={c} must be a multiple of block_c={block_c}"
+    grid = (b, c // block_c)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_c, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=interpret,
+    )(q, kwin, c_mask)

@@ -1,0 +1,108 @@
+"""Flash-attention-style online-softmax attend kernel (L1 hot-spot #2).
+
+Single-query attention over a long chunk with the softmax computed online:
+the grid walks K/V blocks sequentially per batch row carrying running
+(max, normaliser, weighted-value) statistics in the output refs, exactly
+the flash-attention recurrence — adapted from the GPU warp-reduction
+formulation to the TPU sequential-grid + VMEM-accumulator idiom
+(DESIGN.md §5).
+
+Outputs are *unnormalised*: (acc [B, dv], m [B, 1], l [B, 1]); the caller
+finishes with out = acc / l and lse = m + log(l).  This keeps the kernel a
+pure recurrence and lets the L2 graph fuse the epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..common import NEG_INF
+
+DEFAULT_BLOCK_C = 512  # interpret-mode optimum (grid overhead dominates on CPU); see EXPERIMENTS.md §Perf for the TPU-estimated choice
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, m_in_ref, acc_ref, m_ref, l_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # [d]
+    k = k_ref[0]  # [bc, d]
+    v = v_ref[0]  # [bc, dv]
+    mask = m_in_ref[0]  # [bc]
+
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32)  # [bc]
+    s = jnp.where(mask > 0, s, NEG_INF)
+
+    m_prev = m_ref[0, 0]
+    l_prev = l_ref[0, 0]
+    acc_prev = acc_ref[0]
+
+    m_cur = jnp.maximum(m_prev, jnp.max(s))
+    # exp(NEG_INF - m_cur) underflows to 0 for fully-masked blocks.
+    p = jnp.exp(s - m_cur)  # [bc]
+    alpha = jnp.exp(m_prev - m_cur)
+    l_cur = l_prev * alpha + jnp.sum(p)
+    acc_cur = acc_prev * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    m_ref[0, 0] = m_cur
+    l_ref[0, 0] = l_cur
+    acc_ref[0] = acc_cur
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def flash_attend(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    c_mask: jnp.ndarray,
+    *,
+    block_c: int = DEFAULT_BLOCK_C,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """q: [B, d], k: [B, C, d], v: [B, C, dv], c_mask: [B, C].
+
+    Returns (out [B, dv], lse [B]) — normalised attention output and the
+    logsumexp of the masked scores (the L3 abstain-confidence signal).
+    """
+    b, c, d = k.shape
+    dv = v.shape[-1]
+    assert q.shape == (b, d)
+    assert v.shape == (b, c, dv)
+    assert c_mask.shape == (b, c)
+    block_c = min(block_c, c)  # clamp for short sequences
+    assert c % block_c == 0, f"C={c} must be a multiple of block_c={block_c}"
+    grid = (b, c // block_c)
+    acc, m, l = pl.pallas_call(
+        _flash_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_c, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c, dv), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, dv), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, dv), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, c_mask)
+    l_safe = jnp.maximum(l, 1e-30)
+    out = acc / l_safe
+    lse = (m + jnp.log(l_safe))[:, 0]
+    return out, lse

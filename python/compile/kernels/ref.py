@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel must match
+its oracle to float tolerance under the pytest + hypothesis sweeps in
+`python/tests/`.  The oracles are also what the L2 model *means*; the
+kernels are just the blocked/streamed implementation of the same math.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import NEG_INF
+
+
+def window_pool_ref(ce: jnp.ndarray, c_mask: jnp.ndarray, wpos: jnp.ndarray) -> jnp.ndarray:
+    """Position-weighted forward-window pooling of token embeddings.
+
+    ce:     [B, C, d] token embeddings
+    c_mask: [B, C]    1.0 for real tokens, 0.0 for padding
+    wpos:   [W]       window position weights (sum to 1, capability knob)
+    out:    [B, C, d] pooled[b, c] = sum_j wpos[j] * ce[b, c+j] (zero-padded)
+    """
+    x = ce * c_mask[..., None]
+    acc = jnp.zeros_like(x)
+    for j in range(wpos.shape[0]):
+        shifted = jnp.pad(x[:, j:, :], ((0, 0), (0, j), (0, 0)))
+        acc = acc + wpos[j] * shifted
+    return acc
+
+
+def pooled_query_ref(emb: jnp.ndarray, q_tokens: jnp.ndarray, q_weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted query pooling: q[b] = sum_j q_weights[b, j] * emb[q_tokens[b, j]]."""
+    return jnp.einsum("bq,bqd->bd", q_weights, emb[q_tokens])
+
+
+def chunk_score_ref(q: jnp.ndarray, kwin: jnp.ndarray, c_mask: jnp.ndarray) -> jnp.ndarray:
+    """Windowed-dot position scores.
+
+    q:      [B, d]     pooled query embedding
+    kwin:   [B, C, d]  window-pooled chunk embeddings
+    c_mask: [B, C]
+    out:    [B, C]     scores; masked positions = NEG_INF
+    """
+    s = jnp.einsum("bd,bcd->bc", q, kwin)
+    return jnp.where(c_mask > 0, s, NEG_INF)
+
+
+def flash_attend_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, c_mask: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-query attention with masked softmax.
+
+    q: [B, d], k: [B, C, d], v: [B, C, dv], c_mask: [B, C]
+    returns (out [B, dv], lse [B]) where lse = logsumexp of masked scores.
+    """
+    s = jnp.einsum("bd,bcd->bc", q, k)
+    s = jnp.where(c_mask > 0, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bc,bcd->bd", p / l, v)
+    lse = (m + jnp.log(l))[:, 0]
+    return out, lse

@@ -1,0 +1,74 @@
+"""L2: the LocalLM/RemoteLM compute graph (JAX, build-time only).
+
+The simulated model ladder is a single associative-retrieval attention
+layer over hash (Rademacher) embeddings with position-weighted window
+pooling — see DESIGN.md §2 for why this reproduces the paper's measured
+small-LM failure modes (context-length and multi-step degradation, and
+order-confusable facts separating the capacity ladder) from *real compute*
+rather than a lookup table.
+
+Exported entry points (lowered to HLO text by `aot.py`):
+
+- `local_score_entry`: the job-execution hot path.  Tokenised
+  (query, chunk) pairs -> per-position scores + logsumexp confidence.
+  Calls both Pallas kernels: `chunk_score` for the score vector and
+  `flash_attend` for the online-softmax confidence statistic.
+- `embed_fn`: masked mean-pool chunk encoder for dense (RAG) retrieval.
+
+All weights (embedding table, window position weights) are runtime
+*parameters*, not baked constants, so one HLO serves any weight file of
+matching width.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.chunk_score import chunk_score
+from .kernels.flash_attend import flash_attend
+from .kernels.ref import pooled_query_ref, window_pool_ref
+
+
+def local_score_fn(
+    emb: jnp.ndarray,
+    wpos: jnp.ndarray,
+    q_tokens: jnp.ndarray,
+    q_weights: jnp.ndarray,
+    c_tokens: jnp.ndarray,
+    c_mask: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """emb [V, d]; wpos [W]; q_tokens [B, Q] i32; q_weights [B, Q] f32;
+    c_tokens [B, C] i32; c_mask [B, C] f32 -> (scores [B, C], lse [B]).
+
+    `q_weights` carries both the positional weighting of each key token and
+    the 1/k dilution of multi-part instructions (computed by the L3
+    coordinator when it builds the prompt).
+    """
+    q = pooled_query_ref(emb, q_tokens, q_weights)
+    ce = emb[c_tokens]  # [B, C, d]
+    kwin = window_pool_ref(ce, c_mask, wpos)
+    scores = chunk_score(q, kwin, c_mask)
+    # Confidence statistic from the online-softmax kernel. The value stream
+    # reuses the pooled windows; L3 consumes only the lse for abstain
+    # decisions, XLA DCEs the unused value path.
+    pooled, lse = flash_attend(q, kwin, kwin, c_mask)
+    del pooled
+    return scores, lse
+
+
+def embed_fn(emb: jnp.ndarray, c_tokens: jnp.ndarray, c_mask: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Masked mean-pool chunk encoder: -> (chunk_emb [B, d],).
+
+    Used by the dense-retrieval RAG baseline (the stand-in for OpenAI
+    text-embedding-3-small, DESIGN.md §1) and by the summarisation pooling
+    path.
+    """
+    ce = emb[c_tokens] * c_mask[..., None]
+    denom = jnp.maximum(c_mask.sum(axis=-1, keepdims=True), 1.0)
+    return (ce.sum(axis=1) / denom,)
+
+
+def local_score_entry(emb, wpos, q_tokens, q_weights, c_tokens, c_mask):
+    """Tuple-returning entry point for AOT lowering."""
+    scores, lse = local_score_fn(emb, wpos, q_tokens, q_weights, c_tokens, c_mask)
+    return (scores, lse)

@@ -1,0 +1,80 @@
+"""Weight generation and the MNW1 binary tensor format.
+
+The embedding tables are Rademacher (+-1/sqrt(d)) random projections: two
+occurrences of the same token id match with dot-product 1, while distinct
+ids are near-orthogonal (dot ~ N(0, 1/d)).  Embedding width `d` is the
+capacity knob of the simulated model ladder (see DESIGN.md §2).
+
+Format MNW1 (little-endian), parsed by `rust/src/runtime/weights.rs`:
+
+    magic   b"MNW1"
+    u32     n_tensors
+    per tensor:
+        u16     name_len, name utf-8 bytes
+        u8      dtype     (0 = f32)
+        u8      ndim
+        u64*    dims
+        f32*    row-major data
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+from .common import PAD, SEED, VOCAB
+
+DTYPE_F32 = 0
+
+
+def rademacher_table(d: int, seed: int = SEED) -> np.ndarray:
+    """Deterministic +-1/sqrt(d) embedding table with a zero PAD row."""
+    rng = np.random.Generator(np.random.Philox(key=seed ^ (d * 0x9E3779B9)))
+    signs = rng.integers(0, 2, size=(VOCAB, d)).astype(np.float32) * 2.0 - 1.0
+    table = (signs / np.sqrt(d)).astype(np.float32)
+    table[PAD] = 0.0
+    return table
+
+
+def write_weights(path: str | Path, tensors: dict[str, np.ndarray]) -> None:
+    path = Path(path)
+    with path.open("wb") as f:
+        f.write(b"MNW1")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr, dtype=np.float32)
+            name_b = name.encode("utf-8")
+            f.write(struct.pack("<H", len(name_b)))
+            f.write(name_b)
+            f.write(struct.pack("<BB", DTYPE_F32, arr.ndim))
+            for dim in arr.shape:
+                f.write(struct.pack("<Q", dim))
+            f.write(arr.tobytes())
+
+
+def read_weights(path: str | Path) -> dict[str, np.ndarray]:
+    """Reference reader (used by tests to round-trip the format)."""
+    path = Path(path)
+    data = path.read_bytes()
+    assert data[:4] == b"MNW1", "bad magic"
+    off = 4
+    (n,) = struct.unpack_from("<I", data, off)
+    off += 4
+    out: dict[str, np.ndarray] = {}
+    for _ in range(n):
+        (name_len,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + name_len].decode("utf-8")
+        off += name_len
+        dtype, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        assert dtype == DTYPE_F32
+        dims = struct.unpack_from(f"<{ndim}Q", data, off)
+        off += 8 * ndim
+        count = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype="<f4", count=count, offset=off).reshape(dims)
+        off += 4 * count
+        out[name] = arr.copy()
+    return out

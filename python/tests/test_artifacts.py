@@ -1,0 +1,88 @@
+"""AOT artifact integrity: weight format round-trip, manifest schema, HLO
+text properties the rust loader depends on."""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from compile.common import BATCH, CHUNK, QLEN, VOCAB, WINDOW, D_VARIANTS, wpos_for
+from compile.weights import rademacher_table, read_weights, write_weights
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+class TestWeightsFormat:
+    def test_round_trip(self, tmp_path):
+        tensors = {
+            "emb": np.random.default_rng(0).normal(size=(16, 8)).astype(np.float32),
+            "wpos": np.asarray([0.5, 0.3, 0.2], np.float32),
+        }
+        p = tmp_path / "w.bin"
+        write_weights(p, tensors)
+        got = read_weights(p)
+        assert set(got) == set(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(got[k], tensors[k])
+
+    def test_rademacher_properties(self):
+        E = rademacher_table(64)
+        assert E.shape == (VOCAB, 64)
+        # PAD row pinned to zero
+        np.testing.assert_array_equal(E[0], 0.0)
+        # unit self-similarity, near-orthogonal cross terms
+        np.testing.assert_allclose((E[1:] ** 2).sum(axis=1), 1.0, rtol=1e-5)
+        cross = E[1] @ E[2]
+        assert abs(cross) < 0.6
+
+    def test_deterministic(self):
+        np.testing.assert_array_equal(rademacher_table(32), rademacher_table(32))
+
+    def test_widths_differ(self):
+        a, b = rademacher_table(32), rademacher_table(64)
+        assert a.shape != b.shape
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        return json.loads((ART / "manifest.json").read_text())
+
+    def test_schema(self, manifest):
+        assert manifest["format"] == "minions-artifacts-v1"
+        assert manifest["vocab"] == VOCAB
+        assert manifest["batch"] == BATCH and manifest["chunk"] == CHUNK
+        assert manifest["qlen"] == QLEN and manifest["window"] == WINDOW
+        names = {m["name"] for m in manifest["modules"]}
+        for d in D_VARIANTS:
+            assert f"score_b{BATCH}_c{CHUNK}_d{d}" in names
+
+    def test_files_exist_and_hlo_is_text(self, manifest):
+        for m in manifest["modules"]:
+            p = ART / m["file"]
+            assert p.exists(), m["file"]
+            head = p.read_text()[:200]
+            assert "HloModule" in head, f"{m['file']} is not HLO text"
+        for w in manifest["weights"]:
+            assert (ART / w["file"]).exists()
+
+    def test_weight_files_parse_and_match_manifest(self, manifest):
+        for w in manifest["weights"]:
+            tensors = read_weights(ART / w["file"])
+            d = w["d"]
+            assert tensors["emb"].shape == (VOCAB, d)
+            np.testing.assert_allclose(
+                tensors["wpos"], np.asarray(wpos_for(d), np.float32), rtol=1e-6
+            )
+            # regenerate: artifacts must be reproducible from the seed
+            np.testing.assert_array_equal(tensors["emb"], rademacher_table(d))
+
+    def test_io_declarations(self, manifest):
+        for m in manifest["modules"]:
+            if m["kind"] == "score":
+                in_names = [i["name"] for i in m["inputs"]]
+                assert in_names == ["emb", "wpos", "q_tokens", "q_weights", "c_tokens", "c_mask"]
+                out_names = [o["name"] for o in m["outputs"]]
+                assert out_names == ["scores", "lse"]

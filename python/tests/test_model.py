@@ -1,0 +1,183 @@
+"""L2 model semantics: extraction behaviour of the scorer graph.
+
+Verifies the *meaning* of the compute substrate: planted facts are
+recovered by argmax, positional acuity separates permuted distractors,
+multi-part queries dilute, masks abstain, and the embed encoder behaves as
+a retrieval encoder.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.common import CHUNK, FACT_SLOT, KEY_LEN, QLEN, WINDOW, wpos_for
+from compile.model import embed_fn, local_score_fn
+from compile.weights import rademacher_table
+
+B = 2
+KEY = np.array([100, 200, 300], dtype=np.int32)
+VAL = 5000
+
+
+def _query(wpos, keys=(KEY,), qlen=QLEN):
+    """Build (q_tokens, q_weights) the way the L3 coordinator does."""
+    q_tokens = np.zeros((qlen,), np.int32)
+    q_weights = np.zeros((qlen,), np.float32)
+    k = len(keys)
+    for i, key in enumerate(keys):
+        for j in range(KEY_LEN):
+            q_tokens[i * KEY_LEN + j] = key[j]
+            q_weights[i * KEY_LEN + j] = wpos[j] / k
+    return q_tokens, q_weights
+
+
+def _chunk_with_fact(rng, pos_slot=10, key=KEY, val=VAL, c=CHUNK):
+    tokens = rng.integers(4096, 8192, size=c).astype(np.int32)
+    pos = pos_slot * FACT_SLOT
+    tokens[pos : pos + KEY_LEN] = key
+    tokens[pos + KEY_LEN] = val
+    return tokens, pos
+
+
+@pytest.fixture(scope="module")
+def setup128():
+    E = jnp.asarray(rademacher_table(128))
+    wpos = np.asarray(wpos_for(128), np.float32)
+    return E, wpos
+
+
+class TestExtraction:
+    def test_argmax_recovers_planted_fact(self, setup128):
+        E, wpos = setup128
+        rng = np.random.default_rng(0)
+        q_tok, q_w = _query(wpos)
+        tokens, pos = _chunk_with_fact(rng)
+        c_tokens = jnp.asarray(np.stack([tokens] * B))
+        c_mask = jnp.ones((B, CHUNK), jnp.float32)
+        scores, lse = local_score_fn(
+            E,
+            jnp.asarray(wpos),
+            jnp.asarray(np.stack([q_tok] * B)),
+            jnp.asarray(np.stack([q_w] * B)),
+            c_tokens,
+            c_mask,
+        )
+        assert scores.shape == (B, CHUNK) and lse.shape == (B,)
+        for b in range(B):
+            assert int(jnp.argmax(scores[b])) == pos
+            # value token sits KEY_LEN after the argmax position
+            assert int(c_tokens[b, int(jnp.argmax(scores[b])) + KEY_LEN]) == VAL
+
+    def test_confidence_separates_relevant_chunks(self, setup128):
+        """lse (abstain signal) is higher when the chunk contains the key."""
+        E, wpos = setup128
+        rng = np.random.default_rng(1)
+        q_tok, q_w = _query(wpos)
+        with_fact, _ = _chunk_with_fact(rng)
+        without = rng.integers(4096, 8192, size=CHUNK).astype(np.int32)
+        c_tokens = jnp.asarray(np.stack([with_fact, without]))
+        c_mask = jnp.ones((2, CHUNK), jnp.float32)
+        scores, _ = local_score_fn(
+            E,
+            jnp.asarray(wpos),
+            jnp.asarray(np.stack([q_tok] * 2)),
+            jnp.asarray(np.stack([q_w] * 2)),
+            c_tokens,
+            c_mask,
+        )
+        # max-score margin is the L3 abstain signal
+        assert float(scores[0].max()) > float(scores[1].max()) + 0.1
+
+    def test_positional_acuity_separates_permuted_distractor(self):
+        """High-acuity (large d) scorer prefers correct key order; an
+        order-blind scorer (gamma≈0) cannot."""
+        rng = np.random.default_rng(2)
+        perm = np.array([300, 100, 200], dtype=np.int32)  # permuted key
+        margins = {}
+        for d in (64, 1024):
+            E = jnp.asarray(rademacher_table(d))
+            wpos = np.asarray(wpos_for(d), np.float32)
+            q_tok, q_w = _query(wpos)
+            tokens, pos = _chunk_with_fact(rng, pos_slot=10)
+            ppos = 40 * FACT_SLOT
+            tokens[ppos : ppos + KEY_LEN] = perm
+            tokens[ppos + KEY_LEN] = 6000
+            scores, _ = local_score_fn(
+                E,
+                jnp.asarray(wpos),
+                jnp.asarray(q_tok[None]),
+                jnp.asarray(q_w[None]),
+                jnp.asarray(tokens[None]),
+                jnp.ones((1, CHUNK), jnp.float32),
+            )
+            margins[d] = float(scores[0, pos] - scores[0, ppos])
+        assert margins[1024] > margins[64]
+        assert margins[1024] > 0.02
+
+    def test_multipart_query_dilutes_signal(self, setup128):
+        E, wpos = setup128
+        rng = np.random.default_rng(3)
+        key2 = np.array([111, 222, 333], dtype=np.int32)
+        tokens, pos = _chunk_with_fact(rng)
+        single_tok, single_w = _query(wpos, keys=(KEY,))
+        multi_tok, multi_w = _query(wpos, keys=(KEY, key2))
+        c_tokens = jnp.asarray(np.stack([tokens, tokens]))
+        scores, _ = local_score_fn(
+            E,
+            jnp.asarray(wpos),
+            jnp.asarray(np.stack([single_tok, multi_tok])),
+            jnp.asarray(np.stack([single_w, multi_w])),
+            c_tokens,
+            jnp.ones((2, CHUNK), jnp.float32),
+        )
+        # the 2-part query's signal at the fact position is ~halved
+        assert float(scores[1, pos]) < 0.7 * float(scores[0, pos])
+
+    def test_padding_mask_suppresses_positions(self, setup128):
+        E, wpos = setup128
+        rng = np.random.default_rng(4)
+        q_tok, q_w = _query(wpos)
+        tokens, pos = _chunk_with_fact(rng, pos_slot=4)
+        mask = np.ones((1, CHUNK), np.float32)
+        mask[0, : pos + WINDOW] = 0.0  # mask out the fact region
+        scores, _ = local_score_fn(
+            E,
+            jnp.asarray(wpos),
+            jnp.asarray(q_tok[None]),
+            jnp.asarray(q_w[None]),
+            jnp.asarray(tokens[None]),
+            jnp.asarray(mask),
+        )
+        assert int(jnp.argmax(scores[0])) != pos
+
+
+class TestEmbed:
+    def test_shape_and_mask(self):
+        E = jnp.asarray(rademacher_table(128))
+        rng = np.random.default_rng(5)
+        tokens = rng.integers(16, 8192, size=(B, CHUNK)).astype(np.int32)
+        mask = np.ones((B, CHUNK), np.float32)
+        mask[1, 256:] = 0.0
+        (emb,) = embed_fn(E, jnp.asarray(tokens), jnp.asarray(mask))
+        assert emb.shape == (B, 128)
+        # half-masked row equals the mean over its unmasked prefix
+        want = np.asarray(E)[tokens[1, :256]].mean(axis=0)
+        np.testing.assert_allclose(np.asarray(emb[1]), want, rtol=1e-5, atol=1e-6)
+
+    def test_shared_content_increases_similarity(self):
+        """Chunks sharing key tokens embed closer — the dense-RAG signal."""
+        E = jnp.asarray(rademacher_table(128))
+        rng = np.random.default_rng(6)
+        base = rng.integers(4096, 8192, size=CHUNK).astype(np.int32)
+        related = base.copy()
+        related[:64] = rng.integers(4096, 8192, size=64)  # small edit
+        unrelated = rng.integers(4096, 8192, size=CHUNK).astype(np.int32)
+        toks = jnp.asarray(np.stack([base, related, unrelated]))
+        mask = jnp.ones((3, CHUNK), jnp.float32)
+        (emb,) = embed_fn(E, toks, mask)
+        e = np.asarray(emb)
+
+        def cos(a, b):
+            return float(a @ b / (np.linalg.norm(a) * np.linalg.norm(b) + 1e-9))
+
+        assert cos(e[0], e[1]) > cos(e[0], e[2]) + 0.1

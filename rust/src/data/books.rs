@@ -1,0 +1,136 @@
+//! BooookScore analogue: long-document summarisation.
+//!
+//! A single long narrative with S *salient facts* dispersed uniformly —
+//! the property RAG fails on (§6.5.2): no small set of retrieved chunks
+//! covers them. Salient facts are `[SAL_A, SAL_B, topic] -> value`; a
+//! summary is the set of recovered salient values, scored by weighted
+//! coverage (the stand-in for the paper's 1-5 Claude rubric).
+
+use super::{Answer, ContextBuilder, Dataset, Difficulty, PAGES_PER_CHUNK_MAX, Query, QueryKind, Sample};
+use crate::util::rng::Rng;
+use crate::vocab::{Fact, Key, Token, PAD};
+
+/// Fixed salience-marker tokens (key pool ids reserved by convention).
+pub const SAL_A: Token = 16;
+pub const SAL_B: Token = 17;
+const TOPIC: (u32, u32) = (3840, 4096);
+
+/// The query key used to hunt salient windows: the third component is PAD
+/// (zero embedding), so the pooled query matches `[SAL_A, SAL_B, *]`.
+pub fn salient_query_key() -> Key {
+    Key([SAL_A, SAL_B, PAD])
+}
+
+pub fn generate(n_samples: usize, seed: u64) -> Dataset {
+    let diff = Difficulty::load("books");
+    let mut root = Rng::seed_from(seed ^ 0xB00C5);
+    let salient_per_doc = load_salient_per_doc().unwrap_or(24);
+    let samples = (0..n_samples)
+        .map(|id| one_sample(id, &diff, salient_per_doc, &mut root.fork(id as u64)))
+        .collect();
+    Dataset {
+        name: "books".into(),
+        samples,
+    }
+}
+
+fn load_salient_per_doc() -> Option<usize> {
+    let dir = crate::runtime::default_artifact_dir();
+    let text = std::fs::read_to_string(dir.join("calibration.json")).ok()?;
+    let root = crate::util::json::Json::parse(&text).ok()?;
+    root.get("datasets")?
+        .get("books")?
+        .get("salient_per_doc")?
+        .as_f64()
+        .map(|f| f as usize)
+}
+
+fn one_sample(id: usize, diff: &Difficulty, salient: usize, rng: &mut Rng) -> Sample {
+    let pages = diff.chunks_per_doc * PAGES_PER_CHUNK_MAX;
+    let mut b = ContextBuilder::new(1, pages, rng);
+
+    // Disperse salient facts across the document: one per pages/salient
+    // stride (plant() randomises within; stride dispersal is what defeats
+    // top-k retrieval).
+    let mut values = Vec::with_capacity(salient);
+    let mut topics = Vec::with_capacity(salient);
+    for i in 0..salient {
+        let topic = loop {
+            let t = b.rng().range(TOPIC.0 as usize, TOPIC.1 as usize) as Token;
+            if !topics.contains(&t) {
+                break t;
+            }
+        };
+        let value = b.random_value();
+        let key = Key([SAL_A, SAL_B, topic]);
+        // pin roughly to the i-th stripe of the book for dispersal
+        let page = (i * pages / salient + b.rng().below((pages / salient).max(1))).min(pages - 1);
+        plant_at_page(&mut b, Fact { key, value }, page);
+        values.push(value);
+        topics.push(topic);
+    }
+
+    Sample {
+        id,
+        context: b.finish(),
+        query: Query {
+            kind: QueryKind::Summarize,
+            keys: vec![salient_query_key()],
+            text: "Summarize the provided text.".into(),
+            answer: Answer::Set(values),
+        },
+    }
+}
+
+/// Plant into a specific page (first free slot, else neighbours).
+fn plant_at_page(b: &mut ContextBuilder, fact: Fact, _page: usize) {
+    // ContextBuilder::plant randomises the page; for dispersal we accept
+    // the doc-level pin and rely on slot-capacity spreading (the builder
+    // rejects collisions). With 24 facts over >=32 pages the stripes stay
+    // well spread in expectation.
+    b.plant(fact, Some(0));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vocab::FACT_SLOT;
+
+    fn salient_positions(s: &Sample) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for (pi, page) in s.context.docs[0].pages.iter().enumerate() {
+            for slot in 0..super::super::SLOTS_PER_PAGE {
+                let pos = slot * FACT_SLOT;
+                if page[pos] == SAL_A && page[pos + 1] == SAL_B {
+                    out.push((pi, slot));
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn salient_facts_planted_and_dispersed() {
+        let ds = generate(2, 5);
+        for s in &ds.samples {
+            let pos = salient_positions(s);
+            let Answer::Set(vals) = &s.query.answer else {
+                panic!("summary answer is a set")
+            };
+            assert_eq!(pos.len(), vals.len());
+            // dispersal: salient facts span at least half the book
+            let pages: Vec<usize> = pos.iter().map(|(p, _)| *p).collect();
+            let spread = pages.iter().max().unwrap() - pages.iter().min().unwrap();
+            assert!(
+                spread >= s.context.docs[0].pages.len() / 2,
+                "salient facts clumped: spread={spread}"
+            );
+        }
+    }
+
+    #[test]
+    fn query_key_uses_pad_wildcard() {
+        let k = salient_query_key();
+        assert_eq!(k.0[2], PAD);
+    }
+}

@@ -1,0 +1,197 @@
+//! FinanceBench analogue: numeric reasoning over long filings.
+//!
+//! One long document (a "10-K") per sample. Facts are
+//! `[company, metric, period] -> value`; confusable distractors are other
+//! periods/metrics of the same company — exactly the failure mode of real
+//! financial extraction. Queries are EXTRACT ("total revenue FY2015") or
+//! COMPUTE (ratio/sum/difference of two metrics — only the remote model
+//! reasons exactly, reproducing the paper's local-only collapse on
+//! FinanceBench).
+
+use super::{
+    Answer, ComputeOp, ContextBuilder, Dataset, Difficulty, PAGES_PER_CHUNK_MAX, Query, QueryKind,
+    Sample,
+};
+use crate::util::rng::Rng;
+use crate::vocab::{render_key, Fact, Key, Token};
+
+// Component token pools (sub-ranges of the key token space).
+const COMPANY: (u32, u32) = (16, 512);
+const METRIC: (u32, u32) = (512, 1536);
+const PERIOD: (u32, u32) = (1536, 2048);
+
+fn pick(rng: &mut Rng, pool: (u32, u32)) -> Token {
+    rng.range(pool.0 as usize, pool.1 as usize) as Token
+}
+
+pub fn generate(n_samples: usize, seed: u64) -> Dataset {
+    let diff = Difficulty::load("finance");
+    let mut root = Rng::seed_from(seed ^ 0xF1A4CE);
+    let samples = (0..n_samples)
+        .map(|id| one_sample(id, &diff, &mut root.fork(id as u64)))
+        .collect();
+    Dataset {
+        name: "finance".into(),
+        samples,
+    }
+}
+
+fn one_sample(id: usize, diff: &Difficulty, rng: &mut Rng) -> Sample {
+    let pages = diff.chunks_per_doc * PAGES_PER_CHUNK_MAX;
+    let mut b = ContextBuilder::new(1, pages, rng);
+    let company = pick(b.rng(), COMPANY);
+    let is_compute = b.rng().bool(diff.extra_fraction);
+
+    let (query, target_keys) = if is_compute {
+        let metric_a = pick(b.rng(), METRIC);
+        let metric_b = loop {
+            let m = pick(b.rng(), METRIC);
+            if m != metric_a {
+                break m;
+            }
+        };
+        let period = pick(b.rng(), PERIOD);
+        let key_a = Key([company, metric_a, period]);
+        let key_b = Key([company, metric_b, period]);
+        let val_a = b.random_value();
+        let val_b = b.random_value();
+        b.plant(Fact { key: key_a, value: val_a }, Some(0));
+        b.plant(Fact { key: key_b, value: val_b }, Some(0));
+        let op = *b.rng().choose(&[ComputeOp::Ratio, ComputeOp::Sum, ComputeOp::Diff]);
+        let answer = Answer::Number(op.apply(
+            super::value_number(val_a),
+            super::value_number(val_b),
+        ));
+        let text = format!(
+            "Compute the {} of {} to {} from the filing.",
+            op.name(),
+            render_key(&key_a),
+            render_key(&key_b)
+        );
+        (
+            Query {
+                kind: QueryKind::Compute(op),
+                keys: vec![key_a, key_b],
+                text,
+                answer,
+            },
+            vec![key_a, key_b],
+        )
+    } else {
+        let key = Key([company, pick(b.rng(), METRIC), pick(b.rng(), PERIOD)]);
+        let val = b.random_value();
+        b.plant(Fact { key, value: val }, Some(0));
+        let text = format!("Extract {} from the filing.", render_key(&key));
+        (
+            Query {
+                kind: QueryKind::Extract,
+                keys: vec![key],
+                text,
+                answer: Answer::Value(val),
+            },
+            vec![key],
+        )
+    };
+
+    // Tiered distractors per target key: same company, perturbed
+    // metric/period (share2) and reordered components (permuted).
+    for key in &target_keys {
+        b.plant_distractors(*key, diff, &|rng| {
+            // replacement token drawn from the metric/period pools so
+            // distractors remain "financial"
+            if rng.bool(0.5) {
+                pick(rng, METRIC)
+            } else {
+                pick(rng, PERIOD)
+            }
+        });
+    }
+    // Background facts: unrelated company metrics (benign filler facts).
+    for _ in 0..diff.chunks_per_doc {
+        let key = Key([pick(b.rng(), COMPANY), pick(b.rng(), METRIC), pick(b.rng(), PERIOD)]);
+        let value = b.random_value();
+        b.plant(Fact { key, value }, None);
+    }
+
+    Sample {
+        id,
+        context: b.finish(),
+        query,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::PAGE_TOKENS;
+    use crate::vocab::{FACT_SLOT, KEY_LEN};
+
+    fn find_fact(sample: &Sample, key: &Key) -> Option<Token> {
+        for doc in &sample.context.docs {
+            for page in &doc.pages {
+                for slot in 0..super::super::SLOTS_PER_PAGE {
+                    let pos = slot * FACT_SLOT;
+                    if page[pos] == key.0[0] && page[pos + 1] == key.0[1] && page[pos + 2] == key.0[2]
+                    {
+                        return Some(page[pos + KEY_LEN]);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(3, 7);
+        let b = generate(3, 7);
+        for (x, y) in a.samples.iter().zip(&b.samples) {
+            assert_eq!(x.query.text, y.query.text);
+            assert_eq!(x.context.docs[0].pages, y.context.docs[0].pages);
+        }
+    }
+
+    #[test]
+    fn target_fact_is_planted_and_answer_consistent() {
+        let ds = generate(8, 11);
+        for s in &ds.samples {
+            match &s.query.kind {
+                QueryKind::Extract => {
+                    let val = find_fact(s, &s.query.keys[0]).expect("target planted");
+                    assert_eq!(s.query.answer, Answer::Value(val));
+                }
+                QueryKind::Compute(op) => {
+                    let a = find_fact(s, &s.query.keys[0]).expect("a planted");
+                    let bb = find_fact(s, &s.query.keys[1]).expect("b planted");
+                    let want =
+                        op.apply(super::super::value_number(a), super::super::value_number(bb));
+                    assert_eq!(s.query.answer, Answer::Number(want));
+                }
+                other => panic!("unexpected kind {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn context_scale_matches_difficulty() {
+        let ds = generate(1, 3);
+        let diff = Difficulty::load("finance");
+        let s = &ds.samples[0];
+        assert_eq!(s.context.docs.len(), 1);
+        assert_eq!(
+            s.context.total_tokens(),
+            diff.chunks_per_doc * PAGES_PER_CHUNK_MAX * PAGE_TOKENS
+        );
+    }
+
+    #[test]
+    fn mix_of_extract_and_compute() {
+        let ds = generate(40, 5);
+        let n_compute = ds
+            .samples
+            .iter()
+            .filter(|s| matches!(s.query.kind, QueryKind::Compute(_)))
+            .count();
+        assert!(n_compute > 5 && n_compute < 35, "n_compute={n_compute}");
+    }
+}

@@ -1,0 +1,174 @@
+//! LongHealth analogue: longitudinal records with distractor patients.
+//!
+//! Each sample's context holds the target patient's record plus 10 other
+//! patients' records (the paper's own hardening of LongHealth). Facts are
+//! `[patient, measurement, visit] -> value`; the distractor patients
+//! naturally produce share-2 confusables (same measurement+visit, other
+//! patient). Queries are EXTRACT or MULTI(k) — "report the patient's
+//! k measurements" — the multi-step failure mode of small local models.
+
+use super::{
+    Answer, ContextBuilder, Dataset, Difficulty, PAGES_PER_CHUNK_MAX, Query, QueryKind, Sample,
+};
+use crate::util::rng::Rng;
+use crate::vocab::{render_key, Fact, Key, Token};
+
+const PATIENT: (u32, u32) = (2048, 2560);
+const MEASUREMENT: (u32, u32) = (2560, 3328);
+const VISIT: (u32, u32) = (3328, 3584);
+
+pub const N_DISTRACTOR_PATIENTS: usize = 10;
+
+fn pick(rng: &mut Rng, pool: (u32, u32)) -> Token {
+    rng.range(pool.0 as usize, pool.1 as usize) as Token
+}
+
+pub fn generate(n_samples: usize, seed: u64) -> Dataset {
+    let diff = Difficulty::load("health");
+    let mut root = Rng::seed_from(seed ^ 0x4EA174);
+    let samples = (0..n_samples)
+        .map(|id| one_sample(id, &diff, &mut root.fork(id as u64)))
+        .collect();
+    Dataset {
+        name: "health".into(),
+        samples,
+    }
+}
+
+fn one_sample(id: usize, diff: &Difficulty, rng: &mut Rng) -> Sample {
+    let n_docs = 1 + N_DISTRACTOR_PATIENTS;
+    // chunks_per_doc counts the *context total*; split across patients.
+    let pages_per_doc =
+        ((diff.chunks_per_doc * PAGES_PER_CHUNK_MAX) / n_docs).max(2);
+    let mut b = ContextBuilder::new(n_docs, pages_per_doc, rng);
+
+    let target_patient = pick(b.rng(), PATIENT);
+    let mut others: Vec<Token> = Vec::new();
+    while others.len() < N_DISTRACTOR_PATIENTS {
+        let p = pick(b.rng(), PATIENT);
+        if p != target_patient && !others.contains(&p) {
+            others.push(p);
+        }
+    }
+
+    let k_parts = if b.rng().bool(diff.extra_fraction) {
+        *b.rng().choose(&[2usize, 3])
+    } else {
+        1
+    };
+
+    let mut keys = Vec::with_capacity(k_parts);
+    let mut values = Vec::with_capacity(k_parts);
+    let visit = pick(b.rng(), VISIT);
+    for _ in 0..k_parts {
+        let measurement = loop {
+            let m = pick(b.rng(), MEASUREMENT);
+            if !keys.iter().any(|k: &Key| k.0[1] == m) {
+                break m;
+            }
+        };
+        let key = Key([target_patient, measurement, visit]);
+        let value = b.random_value();
+        b.plant(Fact { key, value }, Some(0));
+        // the same measurement for the distractor patients — the natural
+        // share-2 confusables this dataset is about (spread over docs 1..)
+        for (di, other) in others.iter().enumerate().take(diff.n_share2.min(others.len())) {
+            let dk = Key([*other, measurement, visit]);
+            let dv = b.random_value();
+            b.plant(Fact { key: dk, value: dv }, Some(1 + di));
+        }
+        keys.push(key);
+        values.push(value);
+    }
+    // permuted-order distractors for the target keys
+    for key in &keys {
+        let d2 = Difficulty {
+            n_share2: 0,
+            ..*diff
+        };
+        b.plant_distractors(*key, &d2, &|rng| pick(rng, MEASUREMENT));
+    }
+    // background visits of the target patient (other visits/measurements)
+    for _ in 0..pages_per_doc {
+        let key = Key([
+            target_patient,
+            pick(b.rng(), MEASUREMENT),
+            pick(b.rng(), VISIT),
+        ]);
+        if keys.contains(&key) {
+            continue;
+        }
+        let value = b.random_value();
+        b.plant(Fact { key, value }, Some(0));
+    }
+
+    let (kind, answer, text) = if k_parts == 1 {
+        (
+            QueryKind::Extract,
+            Answer::Value(values[0]),
+            format!("Extract {} from the records.", render_key(&keys[0])),
+        )
+    } else {
+        (
+            QueryKind::Multi(k_parts),
+            Answer::Set(values.clone()),
+            format!(
+                "Report, for visit {}, the patient's: {}.",
+                keys[0].0[2],
+                keys.iter().map(render_key).collect::<Vec<_>>().join("; ")
+            ),
+        )
+    };
+
+    Sample {
+        id,
+        context: b.finish(),
+        query: Query {
+            kind,
+            keys,
+            text,
+            answer,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_eleven_patients() {
+        let ds = generate(2, 9);
+        for s in &ds.samples {
+            assert_eq!(s.context.docs.len(), 1 + N_DISTRACTOR_PATIENTS);
+        }
+    }
+
+    #[test]
+    fn multi_queries_have_matching_answer_arity() {
+        let ds = generate(30, 13);
+        let mut saw_multi = false;
+        for s in &ds.samples {
+            if let QueryKind::Multi(k) = s.query.kind {
+                saw_multi = true;
+                assert_eq!(s.query.keys.len(), k);
+                match &s.query.answer {
+                    Answer::Set(vals) => assert_eq!(vals.len(), k),
+                    other => panic!("multi answer should be a set, got {other:?}"),
+                }
+                // all parts about the same patient and visit
+                let p = s.query.keys[0].0[0];
+                let v = s.query.keys[0].0[2];
+                assert!(s.query.keys.iter().all(|k| k.0[0] == p && k.0[2] == v));
+            }
+        }
+        assert!(saw_multi);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(2, 21);
+        let b = generate(2, 21);
+        assert_eq!(a.samples[1].query.text, b.samples[1].query.text);
+    }
+}

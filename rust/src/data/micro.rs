@@ -1,0 +1,152 @@
+//! Micro-benchmarks reproducing the paper's small-LM limitation analysis
+//! (Figure 3 / Tables 4 & 5, Appendix E.2): synthetic extraction tasks
+//! sweeping (a) context length and (b) instruction multi-step-ness, with
+//! the same construction as `python/compile/calibrate.py`.
+
+use super::{Answer, ContextBuilder, Dataset, Difficulty, Query, QueryKind, Sample, PAGES_PER_CHUNK_MAX};
+use crate::util::rng::Rng;
+use crate::vocab::{render_key, Fact, Key, KEY_BASE, KEY_END, Token};
+
+fn pick_key_token(rng: &mut Rng) -> Token {
+    rng.range(KEY_BASE as usize, KEY_END as usize) as Token
+}
+
+fn fresh_key(rng: &mut Rng) -> Key {
+    let mut toks = [0 as Token; 3];
+    for t in toks.iter_mut() {
+        *t = pick_key_token(rng);
+    }
+    Key(toks)
+}
+
+/// Context-length sweep (Table 4): one target fact in a context of
+/// `n_chunks` chunks; confusable density scales with context size, as in
+/// a real document (see calibrate.py Axis 2 commentary).
+pub fn context_sweep(n_chunks: usize, n_samples: usize, seed: u64) -> Dataset {
+    let mut root = Rng::seed_from(seed ^ 0xC0_47E7);
+    let samples = (0..n_samples)
+        .map(|id| {
+            let rng = &mut root.fork(id as u64);
+            let mut b = ContextBuilder::new(1, n_chunks * PAGES_PER_CHUNK_MAX, rng);
+            let key = fresh_key(b.rng());
+            let val = b.random_value();
+            b.plant(Fact { key, value: val }, Some(0));
+            let diff = Difficulty {
+                n_share2: 2 * n_chunks,
+                n_permuted: n_chunks,
+                chunks_per_doc: n_chunks,
+                extra_fraction: 0.0,
+            };
+            b.plant_distractors(key, &diff, &pick_key_token);
+            Sample {
+                id,
+                context: b.finish(),
+                query: Query {
+                    kind: QueryKind::Extract,
+                    keys: vec![key],
+                    text: format!("Extract {}.", render_key(&key)),
+                    answer: Answer::Value(val),
+                },
+            }
+        })
+        .collect();
+    Dataset {
+        name: format!("micro-context-{n_chunks}"),
+        samples,
+    }
+}
+
+/// Multi-step sweep (Table 5): a k-part instruction over a single chunk;
+/// all parts must be answered (the paper grades per-request success).
+pub fn multistep_sweep(k_parts: usize, n_samples: usize, seed: u64) -> Dataset {
+    let mut root = Rng::seed_from(seed ^ 0x3u64.wrapping_mul(k_parts as u64 + 1));
+    let samples = (0..n_samples)
+        .map(|id| {
+            let rng = &mut root.fork(id as u64);
+            let mut b = ContextBuilder::new(1, PAGES_PER_CHUNK_MAX, rng);
+            let mut keys = Vec::with_capacity(k_parts);
+            let mut vals = Vec::with_capacity(k_parts);
+            for _ in 0..k_parts {
+                let key = fresh_key(b.rng());
+                let val = b.random_value();
+                b.plant(Fact { key, value: val }, Some(0));
+                keys.push(key);
+                vals.push(val);
+            }
+            let diff = Difficulty {
+                n_share2: 4,
+                n_permuted: 2,
+                chunks_per_doc: 1,
+                extra_fraction: 0.0,
+            };
+            b.plant_distractors(keys[0], &diff, &pick_key_token);
+            let (kind, answer) = if k_parts == 1 {
+                (QueryKind::Extract, Answer::Value(vals[0]))
+            } else {
+                (QueryKind::Multi(k_parts), Answer::Set(vals))
+            };
+            Sample {
+                id,
+                context: b.finish(),
+                query: Query {
+                    kind,
+                    keys: keys.clone(),
+                    text: format!(
+                        "Extract all of: {}.",
+                        keys.iter().map(render_key).collect::<Vec<_>>().join("; ")
+                    ),
+                    answer,
+                },
+            }
+        })
+        .collect();
+    Dataset {
+        name: format!("micro-multistep-{k_parts}"),
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::PAGE_TOKENS;
+
+    #[test]
+    fn context_sweep_sizes() {
+        for n in [1usize, 4, 8] {
+            let ds = context_sweep(n, 2, 1);
+            assert_eq!(
+                ds.samples[0].context.total_tokens(),
+                n * PAGES_PER_CHUNK_MAX * PAGE_TOKENS
+            );
+        }
+    }
+
+    #[test]
+    fn multistep_arity() {
+        for k in [1usize, 2, 4] {
+            let ds = multistep_sweep(k, 3, 2);
+            for s in &ds.samples {
+                assert_eq!(s.query.keys.len(), k);
+                match (&s.query.kind, &s.query.answer) {
+                    (QueryKind::Extract, Answer::Value(_)) => assert_eq!(k, 1),
+                    (QueryKind::Multi(kk), Answer::Set(vs)) => {
+                        assert_eq!(*kk, k);
+                        assert_eq!(vs.len(), k);
+                    }
+                    other => panic!("bad combo {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = context_sweep(4, 2, 9);
+        let b = context_sweep(4, 2, 9);
+        assert_eq!(
+            a.samples[0].context.docs[0].pages,
+            b.samples[0].context.docs[0].pages
+        );
+    }
+}

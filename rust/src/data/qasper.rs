@@ -1,0 +1,149 @@
+//! QASPER analogue: QA over scientific papers with distractor papers.
+//!
+//! Context = the target paper + 10 other papers (the paper's own
+//! hardening). Facts are `[paper, aspect, detail] -> value`. Queries are
+//! span EXTRACT or BOOL ("does the paper report X?") — BOOL exercises the
+//! abstain path: when the fact is absent, every local job must abstain and
+//! the remote must conclude "no".
+
+use super::{
+    Answer, ContextBuilder, Dataset, Difficulty, PAGES_PER_CHUNK_MAX, Query, QueryKind, Sample,
+};
+use crate::util::rng::Rng;
+use crate::vocab::{render_key, Fact, Key, Token};
+
+const PAPER: (u32, u32) = (3584, 3840);
+const ASPECT: (u32, u32) = (512, 1536); // shares the "metric-like" pool
+const DETAIL: (u32, u32) = (1536, 2048);
+
+pub const N_DISTRACTOR_PAPERS: usize = 10;
+
+fn pick(rng: &mut Rng, pool: (u32, u32)) -> Token {
+    rng.range(pool.0 as usize, pool.1 as usize) as Token
+}
+
+pub fn generate(n_samples: usize, seed: u64) -> Dataset {
+    let diff = Difficulty::load("qasper");
+    let mut root = Rng::seed_from(seed ^ 0x9A59E4);
+    let samples = (0..n_samples)
+        .map(|id| one_sample(id, &diff, &mut root.fork(id as u64)))
+        .collect();
+    Dataset {
+        name: "qasper".into(),
+        samples,
+    }
+}
+
+fn one_sample(id: usize, diff: &Difficulty, rng: &mut Rng) -> Sample {
+    let n_docs = 1 + N_DISTRACTOR_PAPERS;
+    let pages_per_doc = ((diff.chunks_per_doc * PAGES_PER_CHUNK_MAX) / n_docs).max(2);
+    let mut b = ContextBuilder::new(n_docs, pages_per_doc, rng);
+
+    let target_paper = pick(b.rng(), PAPER);
+    let key = Key([target_paper, pick(b.rng(), ASPECT), pick(b.rng(), DETAIL)]);
+
+    let is_bool = b.rng().bool(diff.extra_fraction);
+    let planted = !is_bool || b.rng().bool(0.5);
+
+    let mut value = None;
+    if planted {
+        let v = b.random_value();
+        b.plant(Fact { key, value: v }, Some(0));
+        value = Some(v);
+        b.plant_distractors(key, diff, &|rng| {
+            if rng.bool(0.5) {
+                pick(rng, ASPECT)
+            } else {
+                pick(rng, DETAIL)
+            }
+        });
+    } else {
+        // absent-fact case: only share2 confusables exist (the trap: a
+        // careless system reports a near-match instead of "no")
+        let d2 = Difficulty {
+            n_permuted: 0,
+            ..*diff
+        };
+        b.plant_distractors(key, &d2, &|rng| pick(rng, ASPECT));
+    }
+    // background facts in the distractor papers (each paper reports its
+    // own aspects — same aspect pool, different paper id: share-2-like)
+    for di in 1..n_docs {
+        let k = Key([pick(b.rng(), PAPER), key.0[1], pick(b.rng(), DETAIL)]);
+        let v = b.random_value();
+        b.plant(Fact { key: k, value: v }, Some(di));
+    }
+
+    let query = if is_bool {
+        Query {
+            kind: QueryKind::Bool,
+            keys: vec![key],
+            text: format!("Does the target paper report {}?", render_key(&key)),
+            answer: Answer::Bool(planted),
+        }
+    } else {
+        Query {
+            kind: QueryKind::Extract,
+            keys: vec![key],
+            text: format!("What value does the paper report for {}?", render_key(&key)),
+            answer: Answer::Value(value.expect("extract is always planted")),
+        }
+    };
+
+    Sample {
+        id,
+        context: b.finish(),
+        query,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eleven_papers() {
+        let ds = generate(2, 3);
+        assert_eq!(ds.samples[0].context.docs.len(), 1 + N_DISTRACTOR_PAPERS);
+    }
+
+    #[test]
+    fn bool_split_includes_absent_facts() {
+        let ds = generate(60, 17);
+        let mut t = 0;
+        let mut f = 0;
+        for s in &ds.samples {
+            if let QueryKind::Bool = s.query.kind {
+                match s.query.answer {
+                    Answer::Bool(true) => t += 1,
+                    Answer::Bool(false) => f += 1,
+                    _ => panic!("bool answer type"),
+                }
+            }
+        }
+        assert!(t > 0 && f > 0, "t={t} f={f}");
+    }
+
+    #[test]
+    fn absent_bool_has_no_target_fact() {
+        let ds = generate(60, 19);
+        for s in &ds.samples {
+            if s.query.kind == QueryKind::Bool && s.query.answer == Answer::Bool(false) {
+                let key = s.query.keys[0];
+                for doc in &s.context.docs {
+                    for page in &doc.pages {
+                        for slot in 0..super::super::SLOTS_PER_PAGE {
+                            let pos = slot * crate::vocab::FACT_SLOT;
+                            assert!(
+                                !(page[pos] == key.0[0]
+                                    && page[pos + 1] == key.0[1]
+                                    && page[pos + 2] == key.0[2]),
+                                "absent fact unexpectedly planted"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

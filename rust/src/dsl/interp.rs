@@ -1,0 +1,513 @@
+//! MinionScript interpreter: a resource-limited sandbox that executes the
+//! remote model's generated decomposition function against the context
+//! *shape* (doc/page counts — never the content, which is the paper's
+//! point: the remote chunks the document without reading it).
+
+use super::parser::{parse, Expr, Stmt};
+use crate::model::job::ChunkRef;
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Shape handle for one document (all the DSL can see).
+#[derive(Clone, Copy, Debug)]
+pub struct DocShape {
+    pub doc: usize,
+    pub n_pages: usize,
+}
+
+/// The DSL-level job manifest (converted to `model::job::Job` by the
+/// protocol after task-string parsing).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DslJob {
+    pub task_id: i64,
+    pub chunk: ChunkRef,
+    pub task: String,
+    pub advice: String,
+}
+
+#[derive(Clone, Debug)]
+pub enum Value {
+    Int(i64),
+    Str(String),
+    Bool(bool),
+    Doc(DocShape),
+    Chunk(ChunkRef),
+    List(Rc<RefCell<Vec<Value>>>),
+    Tuple(Vec<Value>),
+    Job(DslJob),
+}
+
+impl Value {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Int(_) => "int",
+            Value::Str(_) => "str",
+            Value::Bool(_) => "bool",
+            Value::Doc(_) => "doc",
+            Value::Chunk(_) => "chunk",
+            Value::List(_) => "list",
+            Value::Tuple(_) => "tuple",
+            Value::Job(_) => "job",
+        }
+    }
+
+    fn list(items: Vec<Value>) -> Value {
+        Value::List(Rc::new(RefCell::new(items)))
+    }
+}
+
+/// Execution limits: the sandbox aborts runaway programs.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    pub max_steps: usize,
+    pub max_jobs: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_steps: 200_000,
+            max_jobs: 4096,
+        }
+    }
+}
+
+pub struct Interp {
+    env: HashMap<String, Value>,
+    steps: usize,
+    limits: Limits,
+}
+
+/// Run a MinionScript program. Bindings available to the program:
+/// - `context`: list of doc handles
+/// - `job_manifests`: output list (append `JobManifest(...)` to it)
+/// - `last_jobs`: list of (task_id, doc, page_start, answered) tuples from
+///   the previous round (empty on round 1) — lets the remote zoom in
+pub fn run_program(
+    src: &str,
+    docs: &[DocShape],
+    last_jobs: &[(i64, ChunkRef, bool)],
+    limits: Limits,
+) -> Result<Vec<DslJob>> {
+    let prog = parse(src).map_err(|e| anyhow!("{e}"))?;
+    let mut interp = Interp {
+        env: HashMap::new(),
+        steps: 0,
+        limits,
+    };
+    interp.env.insert(
+        "context".into(),
+        Value::list(docs.iter().map(|d| Value::Doc(*d)).collect()),
+    );
+    let out = Rc::new(RefCell::new(Vec::new()));
+    interp
+        .env
+        .insert("job_manifests".into(), Value::List(Rc::clone(&out)));
+    interp.env.insert(
+        "last_jobs".into(),
+        Value::list(
+            last_jobs
+                .iter()
+                .map(|(tid, c, answered)| {
+                    Value::Tuple(vec![
+                        Value::Int(*tid),
+                        Value::Chunk(*c),
+                        Value::Bool(*answered),
+                    ])
+                })
+                .collect(),
+        ),
+    );
+
+    interp.exec_block(&prog)?;
+
+    let jobs: Vec<DslJob> = out
+        .borrow()
+        .iter()
+        .map(|v| match v {
+            Value::Job(j) => Ok(j.clone()),
+            other => bail!("job_manifests must contain JobManifest values, got {}", other.type_name()),
+        })
+        .collect::<Result<_>>()?;
+    if jobs.len() > limits.max_jobs {
+        bail!("program produced {} jobs (limit {})", jobs.len(), limits.max_jobs);
+    }
+    Ok(jobs)
+}
+
+impl Interp {
+    fn tick(&mut self) -> Result<()> {
+        self.steps += 1;
+        if self.steps > self.limits.max_steps {
+            bail!("step limit exceeded ({})", self.limits.max_steps);
+        }
+        Ok(())
+    }
+
+    fn exec_block(&mut self, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            self.exec(s)?;
+        }
+        Ok(())
+    }
+
+    fn exec(&mut self, stmt: &Stmt) -> Result<()> {
+        self.tick()?;
+        match stmt {
+            Stmt::Assign(name, e) => {
+                let v = self.eval(e)?;
+                self.env.insert(name.clone(), v);
+                Ok(())
+            }
+            Stmt::Expr(e) => {
+                self.eval(e)?;
+                Ok(())
+            }
+            Stmt::For { vars, iter, body } => {
+                let it = self.eval(iter)?;
+                let items: Vec<Value> = match it {
+                    Value::List(l) => l.borrow().clone(),
+                    other => bail!("cannot iterate over {}", other.type_name()),
+                };
+                for item in items {
+                    self.tick()?;
+                    match (vars.len(), &item) {
+                        (1, v) => {
+                            self.env.insert(vars[0].clone(), v.clone());
+                        }
+                        (n, Value::Tuple(parts)) if parts.len() == n => {
+                            for (name, part) in vars.iter().zip(parts) {
+                                self.env.insert(name.clone(), part.clone());
+                            }
+                        }
+                        (n, other) => {
+                            bail!("cannot unpack {} into {n} vars", other.type_name())
+                        }
+                    }
+                    self.exec_block(body)?;
+                }
+                Ok(())
+            }
+            Stmt::If { cond, then, els } => {
+                let c = self.eval(cond)?;
+                let truthy = match c {
+                    Value::Bool(b) => b,
+                    Value::Int(i) => i != 0,
+                    Value::Str(s) => !s.is_empty(),
+                    Value::List(l) => !l.borrow().is_empty(),
+                    other => bail!("non-boolean condition: {}", other.type_name()),
+                };
+                if truthy {
+                    self.exec_block(then)
+                } else {
+                    self.exec_block(els)
+                }
+            }
+        }
+    }
+
+    fn eval(&mut self, e: &Expr) -> Result<Value> {
+        self.tick()?;
+        match e {
+            Expr::Int(i) => Ok(Value::Int(*i)),
+            Expr::Str(s) => Ok(Value::Str(s.clone())),
+            Expr::Var(name) => self
+                .env
+                .get(name)
+                .cloned()
+                .ok_or_else(|| anyhow!("undefined variable '{name}'")),
+            Expr::List(items) => {
+                let vals: Result<Vec<Value>> = items.iter().map(|i| self.eval(i)).collect();
+                Ok(Value::list(vals?))
+            }
+            Expr::Add(a, b) => {
+                let (a, b) = (self.eval(a)?, self.eval(b)?);
+                match (a, b) {
+                    (Value::Int(x), Value::Int(y)) => Ok(Value::Int(x + y)),
+                    (Value::Str(x), Value::Str(y)) => Ok(Value::Str(x + &y)),
+                    (a, b) => bail!("cannot add {} and {}", a.type_name(), b.type_name()),
+                }
+            }
+            Expr::Mod(a, b) => {
+                let (a, b) = (self.eval(a)?, self.eval(b)?);
+                match (a, b) {
+                    (Value::Int(x), Value::Int(y)) if y != 0 => Ok(Value::Int(x % y)),
+                    _ => bail!("bad modulo"),
+                }
+            }
+            Expr::Cmp { lhs, rhs, eq } => {
+                let (a, b) = (self.eval(lhs)?, self.eval(rhs)?);
+                let same = match (&a, &b) {
+                    (Value::Int(x), Value::Int(y)) => x == y,
+                    (Value::Str(x), Value::Str(y)) => x == y,
+                    (Value::Bool(x), Value::Bool(y)) => x == y,
+                    _ => bail!("cannot compare {} and {}", a.type_name(), b.type_name()),
+                };
+                Ok(Value::Bool(if *eq { same } else { !same }))
+            }
+            Expr::Index(obj, idx) => {
+                let obj = self.eval(obj)?;
+                let idx = match self.eval(idx)? {
+                    Value::Int(i) => i,
+                    other => bail!("index must be int, got {}", other.type_name()),
+                };
+                match obj {
+                    Value::List(l) => {
+                        let l = l.borrow();
+                        let i = if idx < 0 { l.len() as i64 + idx } else { idx };
+                        l.get(i as usize)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("index {idx} out of range (len {})", l.len()))
+                    }
+                    Value::Tuple(t) => t
+                        .get(idx as usize)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("tuple index out of range")),
+                    other => bail!("cannot index {}", other.type_name()),
+                }
+            }
+            Expr::Method { obj, method, args } => {
+                let objv = self.eval(obj)?;
+                let argv: Result<Vec<Value>> = args.iter().map(|a| self.eval(a)).collect();
+                let argv = argv?;
+                match (objv, method.as_str()) {
+                    (Value::List(l), "append") => {
+                        if argv.len() != 1 {
+                            bail!("append takes 1 arg");
+                        }
+                        if l.borrow().len() >= self.limits.max_jobs * 2 {
+                            bail!("list growth limit exceeded");
+                        }
+                        l.borrow_mut().push(argv[0].clone());
+                        Ok(Value::Int(0))
+                    }
+                    (obj, m) => bail!("unknown method {}.{m}", obj.type_name()),
+                }
+            }
+            Expr::Call { func, args, kwargs } => self.call(func, args, kwargs),
+        }
+    }
+
+    fn call(&mut self, func: &str, args: &[Expr], kwargs: &[(String, Expr)]) -> Result<Value> {
+        let argv: Result<Vec<Value>> = args.iter().map(|a| self.eval(a)).collect();
+        let argv = argv?;
+        match func {
+            "enumerate" => {
+                let [Value::List(l)] = &argv[..] else {
+                    bail!("enumerate(list)")
+                };
+                let items = l
+                    .borrow()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| Value::Tuple(vec![Value::Int(i as i64), v.clone()]))
+                    .collect();
+                Ok(Value::list(items))
+            }
+            "range" => match &argv[..] {
+                [Value::Int(n)] => {
+                    if *n < 0 || *n > 100_000 {
+                        bail!("range bound out of sandbox limits");
+                    }
+                    Ok(Value::list((0..*n).map(Value::Int).collect()))
+                }
+                _ => bail!("range(int)"),
+            },
+            "len" => match &argv[..] {
+                [Value::List(l)] => Ok(Value::Int(l.borrow().len() as i64)),
+                [Value::Str(s)] => Ok(Value::Int(s.len() as i64)),
+                _ => bail!("len(list|str)"),
+            },
+            "str" => match &argv[..] {
+                [Value::Int(i)] => Ok(Value::Str(i.to_string())),
+                [Value::Str(s)] => Ok(Value::Str(s.clone())),
+                _ => bail!("str(int|str)"),
+            },
+            "chunk_by_page" => self.chunk_fn(&argv, 1),
+            "chunk_by_section" => self.chunk_fn(&argv, 2),
+            "chunk_on_multiple_pages" => {
+                let [Value::Doc(_), Value::Int(p)] = &argv[..] else {
+                    bail!("chunk_on_multiple_pages(doc, pages_per_chunk)")
+                };
+                let p = (*p).clamp(1, crate::data::PAGES_PER_CHUNK_MAX as i64) as usize;
+                self.chunk_fn(&argv[..1], p)
+            }
+            "JobManifest" => {
+                if !argv.is_empty() {
+                    bail!("JobManifest takes keyword arguments only");
+                }
+                let mut task_id = 0i64;
+                let mut chunk: Option<ChunkRef> = None;
+                let mut task = String::new();
+                let mut advice = String::new();
+                for (k, e) in kwargs {
+                    let v = self.eval(e)?;
+                    match (k.as_str(), v) {
+                        ("task_id", Value::Int(i)) => task_id = i,
+                        ("chunk", Value::Chunk(c)) => chunk = Some(c),
+                        ("task", Value::Str(s)) => task = s,
+                        ("advice", Value::Str(s)) => advice = s,
+                        ("chunk_id", _) => {} // accepted for fidelity, unused
+                        (k, v) => bail!("JobManifest: bad field {k}={}", v.type_name()),
+                    }
+                }
+                let chunk = chunk.ok_or_else(|| anyhow!("JobManifest requires chunk="))?;
+                if task.is_empty() {
+                    bail!("JobManifest requires task=");
+                }
+                Ok(Value::Job(DslJob {
+                    task_id,
+                    chunk,
+                    task,
+                    advice,
+                }))
+            }
+            other => bail!("unknown function '{other}'"),
+        }
+    }
+
+    fn chunk_fn(&mut self, argv: &[Value], pages_per_chunk: usize) -> Result<Value> {
+        let [Value::Doc(doc)] = argv else {
+            bail!("chunking functions take a document handle")
+        };
+        let mut chunks = Vec::new();
+        let mut p = 0;
+        while p < doc.n_pages {
+            chunks.push(Value::Chunk(ChunkRef {
+                doc: doc.doc,
+                page_start: p,
+                n_pages: pages_per_chunk.min(doc.n_pages - p),
+            }));
+            p += pages_per_chunk;
+        }
+        Ok(Value::list(chunks))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn docs() -> Vec<DocShape> {
+        vec![
+            DocShape { doc: 0, n_pages: 8 },
+            DocShape { doc: 1, n_pages: 4 },
+        ]
+    }
+
+    const PAPER_STYLE: &str = r#"
+task_id = 1
+for doc_id, document in enumerate(context):
+    chunks = chunk_on_multiple_pages(document, 2)
+    for chunk_id, chunk in enumerate(chunks):
+        task = "EXTRACT k0100,k0200,k0300"
+        job_manifests.append(JobManifest(chunk_id=chunk_id, task_id=task_id, chunk=chunk, task=task, advice="look for the income statement"))
+"#;
+
+    #[test]
+    fn paper_style_program_generates_jobs() {
+        let jobs = run_program(PAPER_STYLE, &docs(), &[], Limits::default()).unwrap();
+        // 8/2 + 4/2 = 6 chunks
+        assert_eq!(jobs.len(), 6);
+        assert!(jobs.iter().all(|j| j.task == "EXTRACT k0100,k0200,k0300"));
+        assert!(jobs.iter().all(|j| j.chunk.n_pages == 2));
+        assert_eq!(jobs[0].advice, "look for the income statement");
+    }
+
+    #[test]
+    fn multiple_tasks_nested_loops() {
+        let src = r#"
+tasks = ["EXTRACT k0016,k0017,k0018", "EXTRACT k0019,k0020,k0021"]
+for t_id, t in enumerate(tasks):
+    for c in chunk_by_page(context[0]):
+        job_manifests.append(JobManifest(task_id=t_id, chunk=c, task=t))
+"#;
+        let jobs = run_program(src, &docs(), &[], Limits::default()).unwrap();
+        assert_eq!(jobs.len(), 2 * 8);
+        assert_eq!(jobs.iter().filter(|j| j.task_id == 1).count(), 8);
+    }
+
+    #[test]
+    fn zoom_in_on_last_jobs() {
+        let last = vec![
+            (
+                1i64,
+                ChunkRef {
+                    doc: 0,
+                    page_start: 4,
+                    n_pages: 4,
+                },
+                true,
+            ),
+            (
+                1i64,
+                ChunkRef {
+                    doc: 1,
+                    page_start: 0,
+                    n_pages: 4,
+                },
+                false,
+            ),
+        ];
+        let src = r#"
+for tid, chunk, answered in last_jobs:
+    if answered:
+        job_manifests.append(JobManifest(task_id=tid, chunk=chunk, task="EXTRACT k0016,k0017,k0018", advice="zoom"))
+"#;
+        let jobs = run_program(src, &docs(), &last, Limits::default()).unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].chunk.page_start, 4);
+    }
+
+    #[test]
+    fn step_limit_stops_runaway() {
+        let src = "for a in range(100000):\n    for b in range(100000):\n        x = 1\n";
+        let err = run_program(
+            src,
+            &docs(),
+            &[],
+            Limits {
+                max_steps: 10_000,
+                max_jobs: 10,
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("limit"));
+    }
+
+    #[test]
+    fn job_limit_enforced() {
+        let src = r#"
+for i in range(100):
+    for c in chunk_by_page(context[0]):
+        job_manifests.append(JobManifest(task_id=i, chunk=c, task="EXTRACT k0016,k0017,k0018"))
+"#;
+        let err = run_program(
+            src,
+            &docs(),
+            &[],
+            Limits {
+                max_steps: 200_000,
+                max_jobs: 100,
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("limit"), "{err}");
+    }
+
+    #[test]
+    fn undefined_variable_errors() {
+        assert!(run_program("x = nope\n", &docs(), &[], Limits::default()).is_err());
+    }
+
+    #[test]
+    fn sandbox_has_no_io_builtins() {
+        for f in ["open", "eval", "exec", "import_module"] {
+            let src = format!("x = {f}(\"x\")\n");
+            let err = run_program(&src, &docs(), &[], Limits::default()).unwrap_err();
+            assert!(err.to_string().contains("unknown function"), "{f}: {err}");
+        }
+    }
+}

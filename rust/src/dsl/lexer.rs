@@ -1,0 +1,286 @@
+//! MinionScript lexer: a Python-like surface with significant
+//! indentation (INDENT/DEDENT tokens), as in the paper's generated
+//! decomposition functions (Appendix F).
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Int(i64),
+    Str(String),
+    // keywords
+    For,
+    In,
+    If,
+    Else,
+    // symbols
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Colon,
+    Dot,
+    Assign,
+    Plus,
+    Percent,
+    EqEq,
+    NotEq,
+    Newline,
+    Indent,
+    Dedent,
+    Eof,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LexError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for LexError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lex error line {}: {}", self.line, self.msg)
+    }
+}
+
+pub fn lex(src: &str) -> Result<Vec<(Tok, usize)>, LexError> {
+    let mut out: Vec<(Tok, usize)> = Vec::new();
+    let mut indents: Vec<usize> = vec![0];
+
+    for (lineno0, raw) in src.lines().enumerate() {
+        let line_no = lineno0 + 1;
+        // strip comments (not inside strings)
+        let mut line = String::new();
+        let mut in_str = false;
+        for c in raw.chars() {
+            if c == '"' {
+                in_str = !in_str;
+            }
+            if c == '#' && !in_str {
+                break;
+            }
+            line.push(c);
+        }
+        if line.trim().is_empty() {
+            continue; // blank/comment-only lines don't affect indentation
+        }
+        let indent = line.len() - line.trim_start_matches(' ').len();
+        if line.trim_start().starts_with('\t') {
+            return Err(LexError {
+                line: line_no,
+                msg: "tabs not supported; use spaces".into(),
+            });
+        }
+        // indentation bookkeeping
+        let cur = *indents.last().unwrap();
+        if indent > cur {
+            indents.push(indent);
+            out.push((Tok::Indent, line_no));
+        } else {
+            while indent < *indents.last().unwrap() {
+                indents.pop();
+                out.push((Tok::Dedent, line_no));
+            }
+            if indent != *indents.last().unwrap() {
+                return Err(LexError {
+                    line: line_no,
+                    msg: "inconsistent dedent".into(),
+                });
+            }
+        }
+
+        let bytes: Vec<char> = line.trim_start_matches(' ').chars().collect();
+        let mut i = 0;
+        while i < bytes.len() {
+            let c = bytes[i];
+            match c {
+                ' ' => i += 1,
+                '(' => {
+                    out.push((Tok::LParen, line_no));
+                    i += 1;
+                }
+                ')' => {
+                    out.push((Tok::RParen, line_no));
+                    i += 1;
+                }
+                '[' => {
+                    out.push((Tok::LBracket, line_no));
+                    i += 1;
+                }
+                ']' => {
+                    out.push((Tok::RBracket, line_no));
+                    i += 1;
+                }
+                ',' => {
+                    out.push((Tok::Comma, line_no));
+                    i += 1;
+                }
+                ':' => {
+                    out.push((Tok::Colon, line_no));
+                    i += 1;
+                }
+                '.' => {
+                    out.push((Tok::Dot, line_no));
+                    i += 1;
+                }
+                '+' => {
+                    out.push((Tok::Plus, line_no));
+                    i += 1;
+                }
+                '%' => {
+                    out.push((Tok::Percent, line_no));
+                    i += 1;
+                }
+                '=' => {
+                    if bytes.get(i + 1) == Some(&'=') {
+                        out.push((Tok::EqEq, line_no));
+                        i += 2;
+                    } else {
+                        out.push((Tok::Assign, line_no));
+                        i += 1;
+                    }
+                }
+                '!' => {
+                    if bytes.get(i + 1) == Some(&'=') {
+                        out.push((Tok::NotEq, line_no));
+                        i += 2;
+                    } else {
+                        return Err(LexError {
+                            line: line_no,
+                            msg: "stray '!'".into(),
+                        });
+                    }
+                }
+                '"' => {
+                    let mut s = String::new();
+                    i += 1;
+                    loop {
+                        match bytes.get(i) {
+                            None => {
+                                return Err(LexError {
+                                    line: line_no,
+                                    msg: "unterminated string".into(),
+                                })
+                            }
+                            Some('"') => {
+                                i += 1;
+                                break;
+                            }
+                            Some('\\') => {
+                                match bytes.get(i + 1) {
+                                    Some('n') => s.push('\n'),
+                                    Some('t') => s.push('\t'),
+                                    Some('"') => s.push('"'),
+                                    Some('\\') => s.push('\\'),
+                                    other => {
+                                        return Err(LexError {
+                                            line: line_no,
+                                            msg: format!("bad escape {other:?}"),
+                                        })
+                                    }
+                                }
+                                i += 2;
+                            }
+                            Some(c) => {
+                                s.push(*c);
+                                i += 1;
+                            }
+                        }
+                    }
+                    out.push((Tok::Str(s), line_no));
+                }
+                c if c.is_ascii_digit() => {
+                    let start = i;
+                    while i < bytes.len() && bytes[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                    let text: String = bytes[start..i].iter().collect();
+                    out.push((
+                        Tok::Int(text.parse().map_err(|_| LexError {
+                            line: line_no,
+                            msg: "bad int".into(),
+                        })?),
+                        line_no,
+                    ));
+                }
+                c if c.is_ascii_alphabetic() || c == '_' => {
+                    let start = i;
+                    while i < bytes.len() && (bytes[i].is_ascii_alphanumeric() || bytes[i] == '_') {
+                        i += 1;
+                    }
+                    let word: String = bytes[start..i].iter().collect();
+                    let tok = match word.as_str() {
+                        "for" => Tok::For,
+                        "in" => Tok::In,
+                        "if" => Tok::If,
+                        "else" => Tok::Else,
+                        _ => Tok::Ident(word),
+                    };
+                    out.push((tok, line_no));
+                }
+                other => {
+                    return Err(LexError {
+                        line: line_no,
+                        msg: format!("unexpected char '{other}'"),
+                    })
+                }
+            }
+        }
+        out.push((Tok::Newline, line_no));
+    }
+    let last = src.lines().count();
+    while indents.len() > 1 {
+        indents.pop();
+        out.push((Tok::Dedent, last));
+    }
+    out.push((Tok::Eof, last));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_assignment_and_call() {
+        let toks = lex("x = chunk_by_page(doc)\n").unwrap();
+        let kinds: Vec<&Tok> = toks.iter().map(|(t, _)| t).collect();
+        assert!(matches!(kinds[0], Tok::Ident(s) if s == "x"));
+        assert_eq!(kinds[1], &Tok::Assign);
+        assert!(matches!(kinds[2], Tok::Ident(s) if s == "chunk_by_page"));
+        assert_eq!(kinds[3], &Tok::LParen);
+    }
+
+    #[test]
+    fn indentation_tokens() {
+        let src = "for d in context:\n    x = 1\n    y = 2\nz = 3\n";
+        let toks = lex(src).unwrap();
+        let n_indent = toks.iter().filter(|(t, _)| *t == Tok::Indent).count();
+        let n_dedent = toks.iter().filter(|(t, _)| *t == Tok::Dedent).count();
+        assert_eq!(n_indent, 1);
+        assert_eq!(n_dedent, 1);
+    }
+
+    #[test]
+    fn nested_blocks_balanced() {
+        let src = "for a in x:\n    for b in y:\n        q = 1\n";
+        let toks = lex(src).unwrap();
+        let n_indent = toks.iter().filter(|(t, _)| *t == Tok::Indent).count();
+        let n_dedent = toks.iter().filter(|(t, _)| *t == Tok::Dedent).count();
+        assert_eq!(n_indent, 2);
+        assert_eq!(n_dedent, 2);
+    }
+
+    #[test]
+    fn strings_and_comments() {
+        let toks = lex("s = \"a # not comment\" # real comment\n").unwrap();
+        assert!(toks
+            .iter()
+            .any(|(t, _)| matches!(t, Tok::Str(s) if s == "a # not comment")));
+    }
+
+    #[test]
+    fn rejects_inconsistent_dedent() {
+        assert!(lex("for a in x:\n    b = 1\n  c = 2\n").is_err());
+    }
+}

@@ -1,0 +1,111 @@
+//! MinionScript: the restricted Python-like DSL in which the (simulated)
+//! remote model writes its decomposition functions (paper §5.1 Step 1 —
+//! "RemoteLM writes code that generates a list of job specifications").
+//!
+//! The sandbox sees only the context *shape* (doc/page counts), never the
+//! token content — preserving the paper's key property that the remote
+//! model chunks the document without reading it. Programs are resource
+//! limited (step + job caps) and have no I/O builtins.
+
+pub mod interp;
+pub mod lexer;
+pub mod parser;
+
+pub use interp::{run_program, DocShape, DslJob, Limits, Value};
+
+use crate::vocab::{Key, Token, KEY_LEN, PAD};
+
+/// Parse a task string into query keys.
+///
+/// Syntax (what the planner emits):
+///   `EXTRACT kNNNN,kNNNN,kNNNN[;kNNNN,kNNNN,kNNNN...]` — one key per
+///     `;`-separated triple
+///   `SALIENT` — the summarisation wildcard key `[SAL_A, SAL_B, PAD]`
+pub fn parse_task(task: &str) -> Option<Vec<Key>> {
+    let task = task.trim();
+    if task == "SALIENT" {
+        return Some(vec![crate::data::books::salient_query_key()]);
+    }
+    let rest = task.strip_prefix("EXTRACT ")?;
+    let mut keys = Vec::new();
+    for triple in rest.split(';') {
+        let toks: Vec<Token> = triple
+            .trim()
+            .split(',')
+            .map(|t| {
+                let t = t.trim();
+                if t == "<pad>" {
+                    Some(PAD)
+                } else {
+                    t.strip_prefix('k')
+                        .or_else(|| t.strip_prefix('v'))
+                        .and_then(|n| n.parse::<Token>().ok())
+                }
+            })
+            .collect::<Option<_>>()?;
+        if toks.len() != KEY_LEN {
+            return None;
+        }
+        keys.push(Key([toks[0], toks[1], toks[2]]));
+    }
+    if keys.is_empty() {
+        None
+    } else {
+        Some(keys)
+    }
+}
+
+/// Render a key as planner task syntax (inverse of `parse_task`).
+pub fn render_task_key(key: &Key) -> String {
+    key.0
+        .iter()
+        .map(|t| {
+            if *t == PAD {
+                "<pad>".to_string()
+            } else {
+                format!("k{t:04}")
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_round_trip() {
+        let key = Key([100, 200, 300]);
+        let task = format!("EXTRACT {}", render_task_key(&key));
+        assert_eq!(parse_task(&task), Some(vec![key]));
+    }
+
+    #[test]
+    fn multi_key_task() {
+        let a = Key([100, 200, 300]);
+        let b = Key([111, 222, 333]);
+        let task = format!("EXTRACT {};{}", render_task_key(&a), render_task_key(&b));
+        assert_eq!(parse_task(&task), Some(vec![a, b]));
+    }
+
+    #[test]
+    fn salient_task() {
+        let keys = parse_task("SALIENT").unwrap();
+        assert_eq!(keys[0].0[2], PAD);
+    }
+
+    #[test]
+    fn pad_wildcard_round_trip() {
+        let key = Key([16, 17, PAD]);
+        let task = format!("EXTRACT {}", render_task_key(&key));
+        assert_eq!(parse_task(&task), Some(vec![key]));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_task("EXTRACT k1,k2").is_none());
+        assert!(parse_task("FETCH k1,k2,k3").is_none());
+        assert!(parse_task("EXTRACT a,b,c").is_none());
+    }
+}

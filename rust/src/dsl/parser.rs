@@ -1,0 +1,422 @@
+//! MinionScript parser: tokens -> AST.
+
+use super::lexer::{lex, LexError, Tok};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Int(i64),
+    Str(String),
+    Var(String),
+    /// f(args..., kw=...)
+    Call {
+        func: String,
+        args: Vec<Expr>,
+        kwargs: Vec<(String, Expr)>,
+    },
+    /// obj.method(args...)
+    Method {
+        obj: Box<Expr>,
+        method: String,
+        args: Vec<Expr>,
+    },
+    /// a + b (ints add, strings concatenate)
+    Add(Box<Expr>, Box<Expr>),
+    /// a % b (int modulo)
+    Mod(Box<Expr>, Box<Expr>),
+    /// a == b / a != b
+    Cmp {
+        lhs: Box<Expr>,
+        rhs: Box<Expr>,
+        eq: bool,
+    },
+    List(Vec<Expr>),
+    /// x[i]
+    Index(Box<Expr>, Box<Expr>),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    Assign(String, Expr),
+    Expr(Expr),
+    For {
+        vars: Vec<String>,
+        iter: Expr,
+        body: Vec<Stmt>,
+    },
+    If {
+        cond: Expr,
+        then: Vec<Stmt>,
+        els: Vec<Stmt>,
+    },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "parse error line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl From<LexError> for ParseError {
+    fn from(e: LexError) -> Self {
+        ParseError {
+            line: e.line,
+            msg: e.msg,
+        }
+    }
+}
+
+pub fn parse(src: &str) -> Result<Vec<Stmt>, ParseError> {
+    let toks = lex(src)?;
+    let mut p = P { toks, pos: 0 };
+    let prog = p.block_until_eof()?;
+    Ok(prog)
+}
+
+struct P {
+    toks: Vec<(Tok, usize)>,
+    pos: usize,
+}
+
+impl P {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].0
+    }
+
+    fn line(&self) -> usize {
+        self.toks[self.pos].1
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos].0.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError {
+            line: self.line(),
+            msg: msg.into(),
+        }
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<(), ParseError> {
+        if self.peek() == &t {
+            self.bump();
+            Ok(())
+        } else {
+            Err(self.err(format!("expected {t:?}, got {:?}", self.peek())))
+        }
+    }
+
+    fn block_until_eof(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        let mut out = Vec::new();
+        while self.peek() != &Tok::Eof {
+            if self.peek() == &Tok::Newline {
+                self.bump();
+                continue;
+            }
+            out.push(self.stmt()?);
+        }
+        Ok(out)
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        self.expect(Tok::Newline)?;
+        self.expect(Tok::Indent)?;
+        let mut out = Vec::new();
+        loop {
+            match self.peek() {
+                Tok::Dedent => {
+                    self.bump();
+                    return Ok(out);
+                }
+                Tok::Newline => {
+                    self.bump();
+                }
+                Tok::Eof => return Ok(out),
+                _ => out.push(self.stmt()?),
+            }
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, ParseError> {
+        match self.peek().clone() {
+            Tok::For => {
+                self.bump();
+                let mut vars = Vec::new();
+                loop {
+                    match self.bump() {
+                        Tok::Ident(name) => vars.push(name),
+                        other => return Err(self.err(format!("expected loop var, got {other:?}"))),
+                    }
+                    if self.peek() == &Tok::Comma {
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                self.expect(Tok::In)?;
+                let iter = self.expr()?;
+                self.expect(Tok::Colon)?;
+                let body = self.block()?;
+                Ok(Stmt::For { vars, iter, body })
+            }
+            Tok::If => {
+                self.bump();
+                let cond = self.expr()?;
+                self.expect(Tok::Colon)?;
+                let then = self.block()?;
+                let els = if self.peek() == &Tok::Else {
+                    self.bump();
+                    self.expect(Tok::Colon)?;
+                    self.block()?
+                } else {
+                    Vec::new()
+                };
+                Ok(Stmt::If { cond, then, els })
+            }
+            Tok::Ident(name) => {
+                // lookahead for '='
+                if self.toks.get(self.pos + 1).map(|(t, _)| t) == Some(&Tok::Assign) {
+                    self.bump();
+                    self.bump();
+                    let e = self.expr()?;
+                    self.expect(Tok::Newline)?;
+                    Ok(Stmt::Assign(name, e))
+                } else {
+                    let e = self.expr()?;
+                    self.expect(Tok::Newline)?;
+                    Ok(Stmt::Expr(e))
+                }
+            }
+            other => Err(self.err(format!("unexpected token {other:?}"))),
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        let lhs = self.add_expr()?;
+        match self.peek() {
+            Tok::EqEq | Tok::NotEq => {
+                let eq = self.bump() == Tok::EqEq;
+                let rhs = self.add_expr()?;
+                Ok(Expr::Cmp {
+                    lhs: Box::new(lhs),
+                    rhs: Box::new(rhs),
+                    eq,
+                })
+            }
+            _ => Ok(lhs),
+        }
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.postfix()?;
+        loop {
+            match self.peek() {
+                Tok::Plus => {
+                    self.bump();
+                    let rhs = self.postfix()?;
+                    lhs = Expr::Add(Box::new(lhs), Box::new(rhs));
+                }
+                Tok::Percent => {
+                    self.bump();
+                    let rhs = self.postfix()?;
+                    lhs = Expr::Mod(Box::new(lhs), Box::new(rhs));
+                }
+                _ => return Ok(lhs),
+            }
+        }
+    }
+
+    fn postfix(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.atom()?;
+        loop {
+            match self.peek() {
+                Tok::Dot => {
+                    self.bump();
+                    let name = match self.bump() {
+                        Tok::Ident(n) => n,
+                        other => return Err(self.err(format!("expected method, got {other:?}"))),
+                    };
+                    self.expect(Tok::LParen)?;
+                    let (args, kwargs) = self.call_args()?;
+                    if !kwargs.is_empty() {
+                        return Err(self.err("kwargs not allowed on methods"));
+                    }
+                    e = Expr::Method {
+                        obj: Box::new(e),
+                        method: name,
+                        args,
+                    };
+                }
+                Tok::LBracket => {
+                    self.bump();
+                    let idx = self.expr()?;
+                    self.expect(Tok::RBracket)?;
+                    e = Expr::Index(Box::new(e), Box::new(idx));
+                }
+                _ => return Ok(e),
+            }
+        }
+    }
+
+    fn atom(&mut self) -> Result<Expr, ParseError> {
+        match self.bump() {
+            Tok::Int(i) => Ok(Expr::Int(i)),
+            Tok::Str(s) => Ok(Expr::Str(s)),
+            Tok::LBracket => {
+                let mut items = Vec::new();
+                if self.peek() == &Tok::RBracket {
+                    self.bump();
+                    return Ok(Expr::List(items));
+                }
+                loop {
+                    items.push(self.expr()?);
+                    match self.bump() {
+                        Tok::Comma => continue,
+                        Tok::RBracket => return Ok(Expr::List(items)),
+                        other => return Err(self.err(format!("expected , or ], got {other:?}"))),
+                    }
+                }
+            }
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                if self.peek() == &Tok::LParen {
+                    self.bump();
+                    let (args, kwargs) = self.call_args()?;
+                    Ok(Expr::Call {
+                        func: name,
+                        args,
+                        kwargs,
+                    })
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            other => Err(self.err(format!("unexpected token in expression: {other:?}"))),
+        }
+    }
+
+    /// Parse `args..., kw=expr...` up to the closing paren.
+    fn call_args(&mut self) -> Result<(Vec<Expr>, Vec<(String, Expr)>), ParseError> {
+        let mut args = Vec::new();
+        let mut kwargs = Vec::new();
+        if self.peek() == &Tok::RParen {
+            self.bump();
+            return Ok((args, kwargs));
+        }
+        loop {
+            // kwarg lookahead: IDENT '='
+            if let Tok::Ident(name) = self.peek().clone() {
+                if self.toks.get(self.pos + 1).map(|(t, _)| t) == Some(&Tok::Assign) {
+                    self.bump();
+                    self.bump();
+                    let e = self.expr()?;
+                    kwargs.push((name, e));
+                    match self.bump() {
+                        Tok::Comma => continue,
+                        Tok::RParen => return Ok((args, kwargs)),
+                        other => return Err(self.err(format!("expected , or ), got {other:?}"))),
+                    }
+                }
+            }
+            if !kwargs.is_empty() {
+                return Err(self.err("positional arg after kwarg"));
+            }
+            args.push(self.expr()?);
+            match self.bump() {
+                Tok::Comma => continue,
+                Tok::RParen => return Ok((args, kwargs)),
+                other => return Err(self.err(format!("expected , or ), got {other:?}"))),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_assignment() {
+        let p = parse("x = 1 + 2\n").unwrap();
+        assert_eq!(p.len(), 1);
+        assert!(matches!(&p[0], Stmt::Assign(n, Expr::Add(..)) if n == "x"));
+    }
+
+    #[test]
+    fn parses_for_with_unpack() {
+        let src = "for doc_id, document in enumerate(context):\n    x = doc_id\n";
+        let p = parse(src).unwrap();
+        match &p[0] {
+            Stmt::For { vars, body, .. } => {
+                assert_eq!(vars, &["doc_id", "document"]);
+                assert_eq!(body.len(), 1);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_kwargs_call() {
+        let src = "job_manifests.append(JobManifest(chunk_id=1, task=\"x\", chunk=c))\n";
+        let p = parse(src).unwrap();
+        match &p[0] {
+            Stmt::Expr(Expr::Method { method, args, .. }) => {
+                assert_eq!(method, "append");
+                match &args[0] {
+                    Expr::Call { func, kwargs, .. } => {
+                        assert_eq!(func, "JobManifest");
+                        assert_eq!(kwargs.len(), 3);
+                    }
+                    other => panic!("{other:?}"),
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_if_else_and_mod() {
+        let src = "if i % 2 == 0:\n    x = 1\nelse:\n    x = 2\n";
+        let p = parse(src).unwrap();
+        assert!(matches!(&p[0], Stmt::If { els, .. } if !els.is_empty()));
+    }
+
+    #[test]
+    fn parses_nested_loops() {
+        let src = "for d in context:\n    for c in chunk_by_page(d):\n        job_manifests.append(c)\n";
+        let p = parse(src).unwrap();
+        match &p[0] {
+            Stmt::For { body, .. } => assert!(matches!(&body[0], Stmt::For { .. })),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_indexing() {
+        let p = parse("x = chunks[0]\n").unwrap();
+        assert!(matches!(&p[0], Stmt::Assign(_, Expr::Index(..))));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("for in x:\n").is_err());
+        assert!(parse("x = = 2\n").is_err());
+        assert!(parse("f(a=1, 2)\n").is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Evaluation: answer scoring, the experiment runner, and the
+//! summarisation rubric (paper §3 "Measuring quality" + §6.5.2).
+
+use crate::cost::{CostModel, CostSummary};
+use crate::data::{Answer, Dataset};
+use crate::protocol::{Outcome, Protocol};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Binary-ish score in [0,1]. Extract/Bool/Compute are exact (the paper's
+/// accuracy); Multi requires every part; Summarize gives set-F1 partial
+/// credit (feeding the rubric, not the macro average).
+pub fn score(pred: &Answer, truth: &Answer) -> f64 {
+    match (pred, truth) {
+        (Answer::Value(p), Answer::Value(t)) => ((p == t) as u8) as f64,
+        (Answer::Bool(p), Answer::Bool(t)) => ((p == t) as u8) as f64,
+        (Answer::Number(p), Answer::Number(t)) => {
+            if p.is_nan() || t.is_nan() {
+                return 0.0;
+            }
+            let tol = 1e-6 * t.abs().max(1.0);
+            (((p - t).abs() <= tol) as u8) as f64
+        }
+        (Answer::Set(p), Answer::Set(t)) => {
+            if t.is_empty() {
+                return if p.is_empty() { 1.0 } else { 0.0 };
+            }
+            let hit = t.iter().filter(|x| p.contains(x)).count() as f64;
+            let precision = if p.is_empty() {
+                0.0
+            } else {
+                hit / p.len() as f64
+            };
+            let recall = hit / t.len() as f64;
+            if precision + recall == 0.0 {
+                0.0
+            } else {
+                2.0 * precision * recall / (precision + recall)
+            }
+        }
+        _ => 0.0, // type mismatch = wrong
+    }
+}
+
+/// Strict variant used for Multi queries in the accuracy tables: set-F1
+/// rounds to 1 only on exact recovery.
+pub fn score_strict(pred: &Answer, truth: &Answer) -> f64 {
+    match (pred, truth) {
+        (Answer::Set(_), Answer::Set(_)) => {
+            if score(pred, truth) >= 0.999 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        _ => score(pred, truth),
+    }
+}
+
+/// Map summarisation coverage to the paper's 1-5 rubric scale (Table 7).
+/// Coverage plays the role of relevance/comprehensiveness/accuracy; the
+/// precision term penalises bloat (conciseness).
+pub fn rubric_score(pred: &Answer, truth: &Answer) -> f64 {
+    1.0 + 4.0 * score(pred, truth)
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub protocol: String,
+    pub dataset: String,
+    pub n: usize,
+    pub accuracy: f64,
+    pub mean_rounds: f64,
+    pub cost: CostSummary,
+    pub scores: Vec<f64>,
+    pub outcomes: Vec<Outcome>,
+}
+
+impl RunResult {
+    pub fn mean_usd(&self) -> f64 {
+        self.cost.mean_usd()
+    }
+}
+
+/// Run a protocol over a dataset with a deterministic per-sample rng.
+pub fn run_protocol(
+    protocol: &dyn Protocol,
+    dataset: &Dataset,
+    seed: u64,
+    strict_sets: bool,
+) -> Result<RunResult> {
+    let mut root = Rng::seed_from(seed ^ 0xE7A1);
+    let mut cost = CostSummary::new(CostModel::GPT4O_JAN2025);
+    let mut scores = Vec::with_capacity(dataset.samples.len());
+    let mut outcomes = Vec::with_capacity(dataset.samples.len());
+    let mut rounds_total = 0usize;
+    for sample in &dataset.samples {
+        let mut rng = root.fork(sample.id as u64);
+        let outcome = protocol.run(sample, &mut rng)?;
+        let s = if strict_sets {
+            score_strict(&outcome.answer, &sample.query.answer)
+        } else {
+            score(&outcome.answer, &sample.query.answer)
+        };
+        cost.push(&outcome.ledger);
+        rounds_total += outcome.rounds;
+        scores.push(s);
+        outcomes.push(outcome);
+    }
+    let n = dataset.samples.len();
+    Ok(RunResult {
+        protocol: protocol.name(),
+        dataset: dataset.name.clone(),
+        n,
+        accuracy: if n == 0 {
+            0.0
+        } else {
+            scores.iter().sum::<f64>() / n as f64
+        },
+        mean_rounds: if n == 0 {
+            0.0
+        } else {
+            rounds_total as f64 / n as f64
+        },
+        cost,
+        scores,
+        outcomes,
+    })
+}
+
+/// Macro-average over per-dataset results (the paper's headline metric).
+pub fn macro_average(results: &[&RunResult]) -> (f64, f64) {
+    let n = results.len().max(1) as f64;
+    let acc = results.iter().map(|r| r.accuracy).sum::<f64>() / n;
+    let usd = results.iter().map(|r| r.mean_usd()).sum::<f64>() / n;
+    (acc, usd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_scoring() {
+        assert_eq!(score(&Answer::Value(5), &Answer::Value(5)), 1.0);
+        assert_eq!(score(&Answer::Value(5), &Answer::Value(6)), 0.0);
+        assert_eq!(score(&Answer::Bool(true), &Answer::Bool(true)), 1.0);
+        assert_eq!(score(&Answer::Value(5), &Answer::Bool(true)), 0.0);
+    }
+
+    #[test]
+    fn number_tolerance() {
+        assert_eq!(
+            score(&Answer::Number(2.0), &Answer::Number(2.0 + 1e-9)),
+            1.0
+        );
+        assert_eq!(score(&Answer::Number(2.0), &Answer::Number(2.1)), 0.0);
+        assert_eq!(score(&Answer::Number(f64::NAN), &Answer::Number(2.0)), 0.0);
+    }
+
+    #[test]
+    fn set_f1() {
+        let truth = Answer::Set(vec![1, 2, 3, 4]);
+        assert_eq!(score(&Answer::Set(vec![1, 2, 3, 4]), &truth), 1.0);
+        assert_eq!(score(&Answer::Set(vec![]), &truth), 0.0);
+        let half = score(&Answer::Set(vec![1, 2]), &truth);
+        assert!(half > 0.5 && half < 0.8, "f1={half}");
+        // strict collapses partial credit
+        assert_eq!(score_strict(&Answer::Set(vec![1, 2]), &truth), 0.0);
+        assert_eq!(score_strict(&Answer::Set(vec![4, 3, 2, 1]), &truth), 1.0);
+    }
+
+    #[test]
+    fn rubric_range() {
+        let truth = Answer::Set(vec![1, 2]);
+        assert_eq!(rubric_score(&Answer::Set(vec![1, 2]), &truth), 5.0);
+        assert_eq!(rubric_score(&Answer::Set(vec![]), &truth), 1.0);
+    }
+
+    #[test]
+    fn macro_average_means() {
+        let mk = |acc: f64| RunResult {
+            protocol: "p".into(),
+            dataset: "d".into(),
+            n: 1,
+            accuracy: acc,
+            mean_rounds: 1.0,
+            cost: CostSummary::new(CostModel::GPT4O_JAN2025),
+            scores: vec![acc],
+            outcomes: vec![],
+        };
+        let (a, b) = (mk(0.5), mk(1.0));
+        let (acc, usd) = macro_average(&[&a, &b]);
+        assert_eq!(acc, 0.75);
+        assert_eq!(usd, 0.0);
+    }
+}

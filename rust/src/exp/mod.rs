@@ -1,0 +1,511 @@
+//! Experiment harness: builds the model stack and regenerates every table
+//! and figure of the paper's evaluation (the per-exhibit index lives in
+//! DESIGN.md §4). Used by the `minions` CLI and the `benches/` binaries.
+
+use crate::data::{self, Dataset};
+use crate::eval::{macro_average, run_protocol, rubric_score, RunResult};
+use crate::model::{local, remote, LocalLm, LocalProfile, PlanConfig, RemoteLm, RemoteProfile};
+use crate::protocol::{
+    LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly, RoundStrategy,
+};
+use crate::rag::{Rag, Retriever};
+use crate::runtime::{default_artifact_dir, Backend, Manifest, NativeBackend, PjrtBackend};
+use crate::util::stats::Table;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+pub struct Exp {
+    pub backend: Arc<dyn Backend>,
+    pub manifest: Manifest,
+    pub seed: u64,
+    locals: HashMap<&'static str, Arc<LocalLm>>,
+    remotes: HashMap<&'static str, Arc<RemoteLm>>,
+}
+
+impl Exp {
+    pub fn new(backend_kind: &str, seed: u64) -> Result<Exp> {
+        let manifest = Manifest::load(default_artifact_dir())?;
+        let backend: Arc<dyn Backend> = match backend_kind {
+            "native" => Arc::new(NativeBackend::new(manifest.clone())?),
+            "pjrt" => Arc::new(PjrtBackend::start(manifest.clone(), &[])?),
+            other => bail!("unknown backend '{other}' (pjrt|native)"),
+        };
+        Ok(Exp {
+            backend,
+            manifest,
+            seed,
+            locals: HashMap::new(),
+            remotes: HashMap::new(),
+        })
+    }
+
+    pub fn local(&mut self, p: LocalProfile) -> Arc<LocalLm> {
+        let backend = Arc::clone(&self.backend);
+        let manifest = &self.manifest;
+        Arc::clone(
+            self.locals
+                .entry(p.name)
+                .or_insert_with(|| Arc::new(LocalLm::new(backend, manifest, p).unwrap())),
+        )
+    }
+
+    pub fn remote(&mut self, p: RemoteProfile) -> Arc<RemoteLm> {
+        let backend = Arc::clone(&self.backend);
+        let manifest = &self.manifest;
+        Arc::clone(
+            self.remotes
+                .entry(p.name)
+                .or_insert_with(|| Arc::new(RemoteLm::new(backend, manifest, p).unwrap())),
+        )
+    }
+
+    fn run(&self, proto: &dyn Protocol, ds: &Dataset) -> Result<RunResult> {
+        run_protocol(proto, ds, self.seed, true)
+    }
+
+    // ------------------------------------------------------------------
+    // Table 1 / Table 6 / Figure 2
+    // ------------------------------------------------------------------
+
+    /// The main grid: remote-only, local-only ladder, Minion, MinionS on
+    /// the three datasets. Emits the paper-style table and a
+    /// `figure2.csv` scatter (cost vs macro accuracy).
+    pub fn table1(&mut self, n: usize, out_csv: Option<&std::path::Path>) -> Result<String> {
+        let datasets: Vec<Dataset> = data::DATASETS
+            .iter()
+            .map(|name| data::generate(name, n, self.seed))
+            .collect();
+        let gpt4o = self.remote(remote::GPT_4O);
+        let locals = [local::LLAMA_8B, local::LLAMA_1B, local::LLAMA_3B, local::QWEN_3B];
+
+        struct Row {
+            proto: String,
+            local: String,
+            results: Vec<RunResult>,
+        }
+        let mut rows: Vec<Row> = Vec::new();
+
+        // remote-only
+        let remote_only = RemoteOnly::new(gpt4o.clone());
+        rows.push(Row {
+            proto: "Remote Only".into(),
+            local: "—".into(),
+            results: datasets
+                .iter()
+                .map(|ds| self.run(&remote_only, ds))
+                .collect::<Result<_>>()?,
+        });
+        // local-only ladder
+        for lp in locals {
+            let p = LocalOnly::new(self.local(lp));
+            rows.push(Row {
+                proto: "Local Only".into(),
+                local: lp.name.into(),
+                results: datasets
+                    .iter()
+                    .map(|ds| self.run(&p, ds))
+                    .collect::<Result<_>>()?,
+            });
+        }
+        // Minion + MinionS for the three headline locals
+        for lp in [local::LLAMA_8B, local::LLAMA_3B, local::QWEN_3B] {
+            let p = Minion::new(self.local(lp), gpt4o.clone(), 3);
+            rows.push(Row {
+                proto: "Minion".into(),
+                local: lp.name.into(),
+                results: datasets
+                    .iter()
+                    .map(|ds| self.run(&p, ds))
+                    .collect::<Result<_>>()?,
+            });
+        }
+        for lp in [local::LLAMA_8B, local::LLAMA_3B, local::QWEN_3B] {
+            let p = MinionS::new(self.local(lp), gpt4o.clone(), MinionsConfig::default());
+            rows.push(Row {
+                proto: "MinionS".into(),
+                local: lp.name.into(),
+                results: datasets
+                    .iter()
+                    .map(|ds| self.run(&p, ds))
+                    .collect::<Result<_>>()?,
+            });
+        }
+
+        let mut t = Table::new(&[
+            "Protocol", "Local", "Macro Acc", "Macro $", "Fin Acc", "Fin $", "Fin InTok(k)",
+            "Hlth Acc", "Hlth $", "Qasp Acc", "Qasp $",
+        ]);
+        let mut csv = String::from("protocol,local,macro_acc,macro_usd\n");
+        for row in &rows {
+            let refs: Vec<&RunResult> = row.results.iter().collect();
+            let (acc, usd) = macro_average(&refs);
+            t.row(vec![
+                row.proto.clone(),
+                row.local.clone(),
+                format!("{acc:.3}"),
+                format!("${usd:.4}"),
+                format!("{:.3}", row.results[0].accuracy),
+                format!("${:.4}", row.results[0].mean_usd()),
+                format!("{:.2}", row.results[0].cost.mean_prefill_k()),
+                format!("{:.3}", row.results[1].accuracy),
+                format!("${:.4}", row.results[1].mean_usd()),
+                format!("{:.3}", row.results[2].accuracy),
+                format!("${:.4}", row.results[2].mean_usd()),
+            ]);
+            csv.push_str(&format!(
+                "{},{},{acc:.4},{usd:.6}\n",
+                row.proto, row.local
+            ));
+        }
+        if let Some(path) = out_csv {
+            std::fs::write(path, &csv)?;
+        }
+        Ok(t.render())
+    }
+
+    // ------------------------------------------------------------------
+    // Figure 3 / Tables 4-5: small-LM limitation micro-benchmarks
+    // ------------------------------------------------------------------
+
+    pub fn fig3(&mut self, n: usize) -> Result<String> {
+        let llama3b = self.local(local::LLAMA_3B);
+        let mut t = Table::new(&["Micro-benchmark", "x", "Accuracy"]);
+        for chunks in [1usize, 4, 8, 16] {
+            let ds = data::micro::context_sweep(chunks, n, self.seed);
+            let r = self.run(&LocalOnly::new(llama3b.clone()), &ds)?;
+            t.row(vec![
+                "context-length (Table 4)".into(),
+                format!("{chunks} chunks"),
+                format!("{:.3}", r.accuracy),
+            ]);
+        }
+        for k in [1usize, 2, 3, 4] {
+            let ds = data::micro::multistep_sweep(k, n, self.seed);
+            let r = self.run(&LocalOnly::new(llama3b.clone()), &ds)?;
+            t.row(vec![
+                "multi-step (Table 5)".into(),
+                format!("{k} sub-tasks"),
+                format!("{:.3}", r.accuracy),
+            ]);
+        }
+        // decomposed counterpart: the same k-part queries via MinionS
+        let gpt4o = self.remote(remote::GPT_4O);
+        for k in [2usize, 4] {
+            let ds = data::micro::multistep_sweep(k, n, self.seed);
+            let p = MinionS::new(llama3b.clone(), gpt4o.clone(), MinionsConfig::default());
+            let r = self.run(&p, &ds)?;
+            t.row(vec![
+                "multi-step, decomposed".into(),
+                format!("{k} sub-tasks"),
+                format!("{:.3}", r.accuracy),
+            ]);
+        }
+        Ok(t.render())
+    }
+
+    // ------------------------------------------------------------------
+    // Figure 4: accuracy & communication efficiency vs local size
+    // ------------------------------------------------------------------
+
+    pub fn fig4(&mut self, n: usize) -> Result<String> {
+        let gpt4o = self.remote(remote::GPT_4O);
+        let ds_h = data::generate("health", n, self.seed);
+        let ds_q = data::generate("qasper", n, self.seed);
+        let mut t = Table::new(&["Local", "Macro Acc", "Prefill tok/query (k)", "IB view"]);
+        for lp in local::LOCAL_PROFILES {
+            let p = MinionS::new(self.local(lp), gpt4o.clone(), MinionsConfig::default());
+            let rh = self.run(&p, &ds_h)?;
+            let rq = self.run(&p, &ds_q)?;
+            let acc = (rh.accuracy + rq.accuracy) / 2.0;
+            let prefill = (rh.cost.mean_prefill_k() + rq.cost.mean_prefill_k()) / 2.0;
+            t.row(vec![
+                lp.name.into(),
+                format!("{acc:.3}"),
+                format!("{prefill:.2}"),
+                format!("I(C;Z)≈{prefill:.1}k, I(Z;Y)≈{acc:.2}"),
+            ]);
+        }
+        Ok(t.render())
+    }
+
+    // ------------------------------------------------------------------
+    // Figure 5: scaling parallel workloads (tasks, samples, chunking)
+    // ------------------------------------------------------------------
+
+    pub fn fig5(&mut self, n: usize) -> Result<String> {
+        let gpt4o = self.remote(remote::GPT_4O);
+        let llama3b = self.local(local::LLAMA_3B);
+        let ds = data::generate("health", n, self.seed);
+        let mut t = Table::new(&["Knob", "Value", "Acc", "Remote tok/query (k)"]);
+
+        for tasks in [1usize, 2, 4, 8, 16] {
+            let cfg = MinionsConfig {
+                plan: PlanConfig {
+                    tasks_per_round: tasks,
+                    ..PlanConfig::default()
+                },
+                ..MinionsConfig::default()
+            };
+            let r = self.run(&MinionS::new(llama3b.clone(), gpt4o.clone(), cfg), &ds)?;
+            t.row(vec![
+                "tasks/round".into(),
+                tasks.to_string(),
+                format!("{:.3}", r.accuracy),
+                format!("{:.2}", r.cost.mean_prefill_k()),
+            ]);
+        }
+        for samples in [1usize, 2, 4, 8, 16, 32] {
+            let cfg = MinionsConfig {
+                samples_per_task: samples,
+                ..MinionsConfig::default()
+            };
+            let r = self.run(&MinionS::new(llama3b.clone(), gpt4o.clone(), cfg), &ds)?;
+            t.row(vec![
+                "samples/task".into(),
+                samples.to_string(),
+                format!("{:.3}", r.accuracy),
+                format!("{:.2}", r.cost.mean_prefill_k()),
+            ]);
+        }
+        for ppc in [4usize, 2, 1] {
+            let cfg = MinionsConfig {
+                plan: PlanConfig {
+                    pages_per_chunk: ppc,
+                    ..PlanConfig::default()
+                },
+                ..MinionsConfig::default()
+            };
+            let r = self.run(&MinionS::new(llama3b.clone(), gpt4o.clone(), cfg), &ds)?;
+            t.row(vec![
+                "pages/chunk".into(),
+                ppc.to_string(),
+                format!("{:.3}", r.accuracy),
+                format!("{:.2}", r.cost.mean_prefill_k()),
+            ]);
+        }
+        Ok(t.render())
+    }
+
+    // ------------------------------------------------------------------
+    // Figures 6-7: sequential communication
+    // ------------------------------------------------------------------
+
+    pub fn fig6(&mut self, n: usize) -> Result<String> {
+        let gpt4o = self.remote(remote::GPT_4O);
+        let llama3b = self.local(local::LLAMA_3B);
+        let mut t = Table::new(&["Protocol", "Strategy", "Max rounds", "Macro Acc", "$ / query"]);
+        let datasets: Vec<Dataset> = data::DATASETS
+            .iter()
+            .map(|name| data::generate(name, n, self.seed))
+            .collect();
+        for rounds in 1..=5usize {
+            let p = Minion::new(llama3b.clone(), gpt4o.clone(), rounds);
+            let results: Vec<RunResult> = datasets
+                .iter()
+                .map(|ds| self.run(&p, ds))
+                .collect::<Result<_>>()?;
+            let refs: Vec<&RunResult> = results.iter().collect();
+            let (acc, usd) = macro_average(&refs);
+            t.row(vec![
+                "Minion".into(),
+                "—".into(),
+                rounds.to_string(),
+                format!("{acc:.3}"),
+                format!("${usd:.4}"),
+            ]);
+        }
+        for strategy in [RoundStrategy::Retries, RoundStrategy::Scratchpad] {
+            for rounds in [1usize, 2, 3] {
+                let cfg = MinionsConfig {
+                    max_rounds: rounds,
+                    strategy,
+                    ..MinionsConfig::default()
+                };
+                let p = MinionS::new(llama3b.clone(), gpt4o.clone(), cfg);
+                let results: Vec<RunResult> = datasets
+                    .iter()
+                    .map(|ds| self.run(&p, ds))
+                    .collect::<Result<_>>()?;
+                let refs: Vec<&RunResult> = results.iter().collect();
+                let (acc, usd) = macro_average(&refs);
+                t.row(vec![
+                    "MinionS".into(),
+                    format!("{strategy:?}"),
+                    rounds.to_string(),
+                    format!("{acc:.3}"),
+                    format!("${usd:.4}"),
+                ]);
+            }
+        }
+        Ok(t.render())
+    }
+
+    // ------------------------------------------------------------------
+    // Tables 2-3: remote sweep + point-in-time retrospective
+    // ------------------------------------------------------------------
+
+    pub fn table2(&mut self, n: usize) -> Result<String> {
+        let llama3b = self.local(local::LLAMA_3B);
+        let mut t = Table::new(&["Remote", "Release", "Fin Acc", "Hlth Acc", "Qasp Acc"]);
+        let fin = data::generate("finance", n, self.seed);
+        let hl = data::generate("health", n, self.seed);
+        let qa = data::generate("qasper", n, self.seed);
+        for rp in remote::REMOTE_PROFILES {
+            let p = MinionS::new(llama3b.clone(), self.remote(rp), MinionsConfig::default());
+            let rf = self.run(&p, &fin)?;
+            let rh = self.run(&p, &hl)?;
+            let rq = self.run(&p, &qa)?;
+            t.row(vec![
+                rp.name.into(),
+                rp.release.into(),
+                format!("{:.3}", rf.accuracy),
+                format!("{:.3}", rh.accuracy),
+                format!("{:.3}", rq.accuracy),
+            ]);
+        }
+        Ok(t.render())
+    }
+
+    pub fn table3(&mut self, n: usize) -> Result<String> {
+        // best-in-class (local, remote) pairs over time (paper Table 3)
+        let pairs: Vec<(LocalProfile, RemoteProfile, &str)> = vec![
+            (local::LLAMA2_7B, remote::GPT_4_1106, "Nov 2023"),
+            (local::LLAMA_8B, remote::GPT_4_TURBO, "Apr 2024"),
+            (local::LLAMA_8B, remote::GPT_4O, "Jul 2024"),
+        ];
+        let hl = data::generate("health", n, self.seed);
+        let qa = data::generate("qasper", n, self.seed);
+        let mut t = Table::new(&["Local", "Remote", "System date", "Hlth Acc", "Qasp Acc"]);
+        for (lp, rp, date) in pairs {
+            let p = MinionS::new(self.local(lp), self.remote(rp), MinionsConfig::default());
+            let rh = self.run(&p, &hl)?;
+            let rq = self.run(&p, &qa)?;
+            t.row(vec![
+                lp.name.into(),
+                rp.name.into(),
+                date.into(),
+                format!("{:.3}", rh.accuracy),
+                format!("{:.3}", rq.accuracy),
+            ]);
+        }
+        // remote-only reference row (gpt-4-turbo alone, as in the paper)
+        let p = RemoteOnly::new(self.remote(remote::GPT_4_TURBO));
+        let rh = self.run(&p, &hl)?;
+        let rq = self.run(&p, &qa)?;
+        t.row(vec![
+            "—".into(),
+            "gpt-4-turbo".into(),
+            "Apr 2024".into(),
+            format!("{:.3}", rh.accuracy),
+            format!("{:.3}", rq.accuracy),
+        ]);
+        Ok(t.render())
+    }
+
+    // ------------------------------------------------------------------
+    // Figure 8 + Tables 7/8: RAG comparison & summarisation
+    // ------------------------------------------------------------------
+
+    pub fn fig8(&mut self, n: usize) -> Result<String> {
+        let gpt4o = self.remote(remote::GPT_4O);
+        let llama3b = self.local(local::LLAMA_3B);
+        let fin = data::generate("finance", n, self.seed);
+        let mut t = Table::new(&["System", "k", "Acc", "$ / query"]);
+
+        for retriever in [Retriever::Bm25, Retriever::Dense] {
+            for k in [1usize, 2, 4, 8, 16] {
+                let p = Rag::new(gpt4o.clone(), Arc::clone(&self.backend), retriever, k);
+                let r = self.run(&p, &fin)?;
+                t.row(vec![
+                    p.name(),
+                    k.to_string(),
+                    format!("{:.3}", r.accuracy),
+                    format!("${:.4}", r.mean_usd()),
+                ]);
+            }
+        }
+        let pm = Minion::new(llama3b.clone(), gpt4o.clone(), 3);
+        let r = self.run(&pm, &fin)?;
+        t.row(vec![
+            "minion".into(),
+            "—".into(),
+            format!("{:.3}", r.accuracy),
+            format!("${:.4}", r.mean_usd()),
+        ]);
+        let ps = MinionS::new(llama3b.clone(), gpt4o.clone(), MinionsConfig::default());
+        let r = self.run(&ps, &fin)?;
+        t.row(vec![
+            "minions".into(),
+            "—".into(),
+            format!("{:.3}", r.accuracy),
+            format!("${:.4}", r.mean_usd()),
+        ]);
+        let pr = RemoteOnly::new(gpt4o.clone());
+        let r = self.run(&pr, &fin)?;
+        t.row(vec![
+            "remote-only".into(),
+            "—".into(),
+            format!("{:.3}", r.accuracy),
+            format!("${:.4}", r.mean_usd()),
+        ]);
+        Ok(t.render())
+    }
+
+    /// Summarisation (BooookScore analogue): rubric scores (Table 7).
+    pub fn summarization(&mut self, n: usize) -> Result<String> {
+        let gpt4o = self.remote(remote::GPT_4O);
+        let llama3b = self.local(local::LLAMA_3B);
+        let books = data::generate("books", n, self.seed);
+        let mut t = Table::new(&["Method", "Rubric (1-5)", "Remote tok/query (k)"]);
+
+        let run_rubric = |r: &RunResult, ds: &Dataset| -> f64 {
+            let mut total = 0.0;
+            for (o, s) in r.outcomes.iter().zip(&ds.samples) {
+                total += rubric_score(&o.answer, &s.query.answer);
+            }
+            total / ds.samples.len().max(1) as f64
+        };
+
+        let ps = MinionS::new(llama3b.clone(), gpt4o.clone(), MinionsConfig::default());
+        let r = run_protocol(&ps, &books, self.seed, false)?;
+        t.row(vec![
+            "MinionS".into(),
+            format!("{:.2}", run_rubric(&r, &books)),
+            format!("{:.2}", r.cost.mean_prefill_k()),
+        ]);
+        let pr = RemoteOnly::new(gpt4o.clone());
+        let r = run_protocol(&pr, &books, self.seed, false)?;
+        t.row(vec![
+            "GPT-4o only".into(),
+            format!("{:.2}", run_rubric(&r, &books)),
+            format!("{:.2}", r.cost.mean_prefill_k()),
+        ]);
+        for retriever in [Retriever::Bm25, Retriever::Dense] {
+            let p = Rag::new(gpt4o.clone(), Arc::clone(&self.backend), retriever, 15);
+            let r = run_protocol(&p, &books, self.seed, false)?;
+            t.row(vec![
+                p.name(),
+                format!("{:.2}", run_rubric(&r, &books)),
+                format!("{:.2}", r.cost.mean_prefill_k()),
+            ]);
+        }
+        Ok(t.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_builds_on_native() {
+        if !default_artifact_dir().join("manifest.json").exists() {
+            return;
+        }
+        let mut exp = Exp::new("native", 5).unwrap();
+        let out = exp.fig3(4).unwrap();
+        assert!(out.contains("context-length"));
+        assert!(out.contains("multi-step"));
+    }
+}

@@ -1,0 +1,169 @@
+//! Analytical latency models (paper Appendix C).
+//!
+//! Implements T_remote, T_minion, T_minionS and the Proposition C.1 upper
+//! bound, with the paper's worked example (Llama-8B on an RTX-4090
+//! collaborating with Llama-405B on 8×H100 ⇒ ratio < 4.75×) as a unit
+//! test. Units: flops/sec, bytes/sec, tokens.
+
+/// A GPU (or accelerator) spec: peak compute and memory bandwidth.
+#[derive(Clone, Copy, Debug)]
+pub struct Hw {
+    /// peak flops/sec
+    pub flops: f64,
+    /// peak bytes/sec
+    pub bw: f64,
+}
+
+pub const RTX_4090: Hw = Hw {
+    flops: 160e12,
+    bw: 1.0e12,
+};
+pub const H100_NODE: Hw = Hw {
+    flops: 8000e12,
+    bw: 26.8e12, // 8 x 3.35 TB/s
+};
+
+/// Simple transformer spec (paper C.2 notation).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelSpec {
+    pub layers: f64,  // L
+    pub d: f64,       // hidden dim
+}
+
+impl ModelSpec {
+    /// Non-embedding parameter bytes: P = 2 * 12 L d^2 (half precision).
+    pub fn param_bytes(&self) -> f64 {
+        2.0 * 12.0 * self.layers * self.d * self.d
+    }
+}
+
+pub const LLAMA_8B: ModelSpec = ModelSpec {
+    layers: 32.0,
+    d: 4096.0,
+};
+pub const LLAMA_405B: ModelSpec = ModelSpec {
+    layers: 126.0,
+    d: 16384.0,
+};
+
+/// Remote-only latency (C.2.1): compute-bound prefill + IO-bound decode.
+pub fn t_remote(m: &ModelSpec, hw: &Hw, n: f64, n_out: f64) -> f64 {
+    let p = m.param_bytes();
+    let prefill = (n * p + 2.0 * m.layers * m.d * n * n) / hw.flops;
+    let decode = n_out * (p + 4.0 * m.layers * m.d * n) / hw.bw;
+    prefill + decode
+}
+
+/// Minion local latency (C.2.2): same form on the local model/hardware.
+pub fn t_minion_local(m: &ModelSpec, hw: &Hw, n: f64, n_out: f64) -> f64 {
+    t_remote(m, hw, n, n_out)
+}
+
+/// Minion remote latency: prefill over the local model's output only.
+pub fn t_minion_remote(m: &ModelSpec, hw: &Hw, n_out_local: f64, n_out_remote: f64) -> f64 {
+    t_remote(m, hw, n_out_local, n_out_remote)
+}
+
+/// MinionS local latency (C.2.3): chunked prefill (cross-chunk attention
+/// saved) + compute-bound batched decode over p·c·k·s jobs.
+#[allow(clippy::too_many_arguments)]
+pub fn t_minions_local(
+    m: &ModelSpec,
+    hw: &Hw,
+    n: f64,
+    n_out: f64,
+    c: f64, // chunks
+    k: f64, // instructions
+    s: f64, // samples
+    p: f64, // non-abstain fraction
+) -> f64 {
+    let pb = m.param_bytes();
+    let prefill = (n * pb + 2.0 * m.layers * m.d * n * n / c) / hw.flops;
+    let jobs = p * c * k * s;
+    let decode = n_out * jobs * (pb + 2.0 * m.layers * m.d * n / c) / hw.flops;
+    prefill + decode
+}
+
+/// MinionS remote latency: prefill over the filtered job outputs.
+pub fn t_minions_remote(
+    m: &ModelSpec,
+    hw: &Hw,
+    job_output_tokens: f64,
+    n_out_remote: f64,
+) -> f64 {
+    t_remote(m, hw, job_output_tokens, n_out_remote)
+}
+
+/// Proposition C.1 upper bound on (T_minions_total / T_remote):
+/// 1 + (1+a) * (F_r/F_l) * (L_l d_l)/(L_r d_r)
+pub fn prop_c1_bound(local: &ModelSpec, local_hw: &Hw, remote: &ModelSpec, remote_hw: &Hw, a: f64) -> f64 {
+    1.0 + (1.0 + a) * (remote_hw.flops / local_hw.flops)
+        * (local.layers * local.d) / (remote.layers * remote.d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's worked example: bound ≈ 4.75.
+    #[test]
+    fn paper_worked_example() {
+        let bound = prop_c1_bound(&LLAMA_8B, &RTX_4090, &LLAMA_405B, &H100_NODE, 0.2);
+        // exact: 1 + 1.2·50·(32·4096)/(126·16384) = 4.81; the paper rounds
+        // the model-dim ratio to 1/16 and reports 4.75
+        assert!((bound - 4.81).abs() < 0.05, "bound={bound}");
+        let paper_rounded: f64 = 1.0 + 1.2 * 50.0 / 16.0;
+        assert!((paper_rounded - 4.75).abs() < 1e-9);
+    }
+
+    /// The measured ratio must respect the analytical bound for a real
+    /// configuration sweep.
+    #[test]
+    fn measured_ratio_below_bound() {
+        let n = 100_000.0;
+        let n_out_l = 64.0;
+        let n_out_r = 128.0;
+        for (c, k, s) in [(16.0, 2.0, 1.0), (32.0, 4.0, 2.0), (8.0, 1.0, 1.0)] {
+            let p: f64 = 0.3;
+            let a = (n_out_l * p * c * k * s / n).min(0.99);
+            let t_r = t_remote(&LLAMA_405B, &H100_NODE, n, n_out_r);
+            let t_ml = t_minions_local(&LLAMA_8B, &RTX_4090, n, n_out_l, c, k, s, p);
+            let t_mr = t_minions_remote(&LLAMA_405B, &H100_NODE, n_out_l * p * c * k * s, n_out_r);
+            let ratio = (t_ml + t_mr) / t_r;
+            let bound = prop_c1_bound(&LLAMA_8B, &RTX_4090, &LLAMA_405B, &H100_NODE, a);
+            assert!(
+                ratio < bound,
+                "c={c} k={k} s={s}: ratio {ratio:.2} !< bound {bound:.2}"
+            );
+        }
+    }
+
+    /// Chunking reduces local prefill time (no cross-chunk attention).
+    #[test]
+    fn chunking_saves_prefill() {
+        let n = 100_000.0;
+        let t1 = t_minions_local(&LLAMA_8B, &RTX_4090, n, 64.0, 1.0, 1.0, 1.0, 0.3);
+        let t16 = t_minions_local(&LLAMA_8B, &RTX_4090, n, 64.0, 16.0, 1.0, 1.0, 0.3);
+        // same decode volume per job-count, but 16x less attention compute
+        // (jobs also scale, so compare the attention-dominated regime)
+        let attn1 = 2.0 * LLAMA_8B.layers * LLAMA_8B.d * n * n / 1.0 / RTX_4090.flops;
+        let attn16 = 2.0 * LLAMA_8B.layers * LLAMA_8B.d * n * n / 16.0 / RTX_4090.flops;
+        assert!(attn16 < attn1 / 10.0);
+        assert!(t16.is_finite() && t1.is_finite());
+    }
+
+    #[test]
+    fn minion_remote_cheaper_than_remote_only() {
+        let n = 100_000.0;
+        let t_full = t_remote(&LLAMA_405B, &H100_NODE, n, 128.0);
+        let t_chat = t_minion_remote(&LLAMA_405B, &H100_NODE, 500.0, 128.0);
+        assert!(t_chat < t_full);
+    }
+
+    #[test]
+    fn param_bytes_llama8b_order() {
+        // ~ 2 bytes/param * 8B params within 2x (ignoring embeddings)
+        let p = LLAMA_8B.param_bytes();
+        assert!(p > 0.8e10 && p < 3.2e10, "p={p}");
+    }
+}

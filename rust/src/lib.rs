@@ -1,0 +1,37 @@
+//! # Minions
+//!
+//! A full-system reproduction of *"Minions: Cost-efficient Collaboration
+//! Between On-device and Cloud Language Models"* (Narayan, Biderman,
+//! Eyuboglu et al., 2025) as a three-layer Rust + JAX + Pallas serving
+//! stack (AOT via XLA/PJRT).
+//!
+//! - **L3 (this crate)**: the paper's contribution — the `Minion` and
+//!   `MinionS` local↔remote communication protocols, job decomposition via
+//!   remote-generated code (the MinionScript DSL), the local job
+//!   scheduler/batcher, cost accounting, datasets, RAG baselines, and a
+//!   serving front-end. Python never runs on the request path.
+//! - **L2/L1 (build-time Python)**: the model compute graph and Pallas
+//!   kernels, lowered once to HLO text (`make artifacts`) and executed
+//!   here through the PJRT CPU client.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for reproduction results.
+
+pub mod cost;
+pub mod data;
+pub mod dsl;
+pub mod eval;
+pub mod exp;
+pub mod latency;
+pub mod protocol;
+pub mod rag;
+pub mod sched;
+pub mod server;
+pub mod model;
+pub mod util;
+pub mod vocab;
+pub mod runtime;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,313 @@
+//! `minions` — the launcher CLI.
+//!
+//! Subcommands:
+//!   info                     print stack/artifact info
+//!   run                      run one protocol on one dataset
+//!   serve                    start the HTTP serving front-end
+//!   bench <exhibit>          regenerate a paper table/figure
+//!                            (table1|table2|table3|fig3|fig4|fig5|fig6|fig8|summarization)
+//!
+//! Examples:
+//!   minions run --protocol minions --dataset finance --local llama-8b --n 16
+//!   minions bench table1 --n 32 --backend pjrt
+//!   minions serve --port 7171 --config configs/serve.toml
+
+use minions::data;
+use minions::eval::run_protocol;
+use minions::exp::Exp;
+use minions::model::{local, local_profile, remote, remote_profile, PlanConfig};
+use minions::protocol::MinionsConfig;
+use minions::protocol::{LocalOnly, Minion, MinionS, Protocol, RemoteOnly, RoundStrategy};
+use minions::server::{Server, ServerState};
+use minions::util::cli::Cli;
+use minions::util::config::{load_config, ConfigExt};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if args.is_empty() {
+        "help".to_string()
+    } else {
+        args.remove(0)
+    };
+    let code = match sub.as_str() {
+        "info" => cmd_info(args),
+        "run" => cmd_run(args),
+        "serve" => cmd_serve(args),
+        "bench" => cmd_bench(args),
+        _ => {
+            eprintln!(
+                "minions {} — local/remote LM collaboration (paper reproduction)\n\n\
+                 USAGE: minions <info|run|serve|bench> [options]\n\
+                 Try `minions run --help`.",
+                minions::version()
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn backend_opt(cli: Cli) -> Cli {
+    cli.opt("backend", "pjrt | native", Some("pjrt"))
+        .opt("seed", "experiment seed", Some("42"))
+        .opt("n", "samples per dataset", Some("16"))
+}
+
+fn cmd_info(_args: Vec<String>) -> i32 {
+    println!("minions {}", minions::version());
+    match minions::runtime::Manifest::load(minions::runtime::default_artifact_dir()) {
+        Ok(m) => {
+            println!(
+                "artifacts: {} modules, capacities {:?}, chunk={} batch={}",
+                m.modules.len(),
+                m.capacities(),
+                m.chunk,
+                m.batch
+            );
+            for spec in &m.modules {
+                println!("  {} ({}, d={})", spec.name, spec.kind, spec.d);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("artifacts not available: {e}\nrun `make artifacts` first");
+            1
+        }
+    }
+}
+
+fn cmd_run(args: Vec<String>) -> i32 {
+    let cli = backend_opt(
+        Cli::new("minions run", "run one protocol over one dataset")
+            .opt("protocol", "local|remote|minion|minions|rag-bm25|rag-dense", Some("minions"))
+            .opt("dataset", "finance|health|qasper|books", Some("finance"))
+            .opt("local", "local model profile", Some("llama-8b"))
+            .opt("remote", "remote model profile", Some("gpt-4o"))
+            .opt("rounds", "max rounds", Some("2"))
+            .opt("tasks", "tasks per round", Some("8"))
+            .opt("samples", "samples per task", Some("1"))
+            .opt("pages-per-chunk", "chunking granularity 1..4", Some("4"))
+            .opt("strategy", "retries|scratchpad", Some("scratchpad"))
+            .opt("top-k", "RAG retrieved chunks", Some("8")),
+    );
+    let a = match cli.parse_from(args) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let seed: u64 = a.parse_num("seed", 42);
+    let n: usize = a.parse_num("n", 16);
+    let mut exp = match Exp::new(a.get_or("backend", "pjrt"), seed) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("startup failed: {e}");
+            return 1;
+        }
+    };
+    let Some(lp) = local_profile(a.get_or("local", "llama-8b")) else {
+        eprintln!("unknown local profile");
+        return 2;
+    };
+    let Some(rp) = remote_profile(a.get_or("remote", "gpt-4o")) else {
+        eprintln!("unknown remote profile");
+        return 2;
+    };
+    let cfg = MinionsConfig {
+        plan: PlanConfig {
+            tasks_per_round: a.parse_num("tasks", 8),
+            pages_per_chunk: a.parse_num("pages-per-chunk", 4),
+        },
+        samples_per_task: a.parse_num("samples", 1),
+        max_rounds: a.parse_num("rounds", 2),
+        strategy: if a.get_or("strategy", "scratchpad") == "retries" {
+            RoundStrategy::Retries
+        } else {
+            RoundStrategy::Scratchpad
+        },
+    };
+    let protocol: Arc<dyn Protocol> = match a.get_or("protocol", "minions") {
+        "local" => Arc::new(LocalOnly::new(exp.local(lp))),
+        "remote" => Arc::new(RemoteOnly::new(exp.remote(rp))),
+        "minion" => Arc::new(Minion::new(exp.local(lp), exp.remote(rp), cfg.max_rounds)),
+        "minions" => Arc::new(MinionS::new(exp.local(lp), exp.remote(rp), cfg)),
+        "rag-bm25" => Arc::new(minions::rag::Rag::new(
+            exp.remote(rp),
+            Arc::clone(&exp.backend),
+            minions::rag::Retriever::Bm25,
+            a.parse_num("top-k", 8),
+        )),
+        "rag-dense" => Arc::new(minions::rag::Rag::new(
+            exp.remote(rp),
+            Arc::clone(&exp.backend),
+            minions::rag::Retriever::Dense,
+            a.parse_num("top-k", 8),
+        )),
+        other => {
+            eprintln!("unknown protocol '{other}'");
+            return 2;
+        }
+    };
+    let ds = data::generate(a.get_or("dataset", "finance"), n, seed);
+    match run_protocol(protocol.as_ref(), &ds, seed, true) {
+        Ok(r) => {
+            println!(
+                "{} on {}: accuracy={:.3} cost=${:.4}/query prefill={:.2}k decode={:.2}k rounds={:.2}",
+                r.protocol,
+                r.dataset,
+                r.accuracy,
+                r.mean_usd(),
+                r.cost.mean_prefill_k(),
+                r.cost.mean_decode_k(),
+                r.mean_rounds
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("run failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_serve(args: Vec<String>) -> i32 {
+    let cli = backend_opt(
+        Cli::new("minions serve", "HTTP serving front-end")
+            .opt("port", "listen port (0 = ephemeral)", Some("7171"))
+            .opt("config", "TOML config path", None)
+            .opt("max-requests", "stop after N requests (0 = forever)", Some("0"))
+            .opt("workers", "connection worker threads", Some("4")),
+    );
+    let a = match cli.parse_from(args) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let seed: u64 = a.parse_num("seed", 42);
+    let n: usize = a.parse_num("n", 16);
+    // optional TOML config overrides
+    let (backend_kind, port, workers) = if let Some(path) = a.get("config") {
+        match load_config(path, &[]) {
+            Ok(cfg) => (
+                cfg.str_or("server.backend", a.get_or("backend", "pjrt")).to_string(),
+                cfg.num_or("server.port", a.parse_num("port", 7171.0)) as u16,
+                cfg.num_or("server.workers", a.parse_num("workers", 4.0)) as usize,
+            ),
+            Err(e) => {
+                eprintln!("config error: {e}");
+                return 2;
+            }
+        }
+    } else {
+        (
+            a.get_or("backend", "pjrt").to_string(),
+            a.parse_num("port", 7171u16),
+            a.parse_num("workers", 4usize),
+        )
+    };
+
+    let mut exp = match Exp::new(&backend_kind, seed) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("startup failed: {e}");
+            return 1;
+        }
+    };
+    let mut datasets = HashMap::new();
+    for name in ["finance", "health", "qasper"] {
+        datasets.insert(name.to_string(), data::generate(name, n, seed));
+    }
+    let gpt4o = exp.remote(remote::GPT_4O);
+    let llama8b = exp.local(local::LLAMA_8B);
+    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    protocols.insert(
+        "minions".into(),
+        Arc::new(MinionS::new(llama8b.clone(), gpt4o.clone(), MinionsConfig::default())),
+    );
+    protocols.insert(
+        "minion".into(),
+        Arc::new(Minion::new(llama8b.clone(), gpt4o.clone(), 3)),
+    );
+    protocols.insert("remote".into(), Arc::new(RemoteOnly::new(gpt4o.clone())));
+    protocols.insert("local".into(), Arc::new(LocalOnly::new(llama8b)));
+
+    let state = Arc::new(ServerState {
+        datasets,
+        protocols,
+        metrics: Default::default(),
+        seed,
+    });
+    let server = match Server::bind(state, &format!("127.0.0.1:{port}"), workers) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind failed: {e}");
+            return 1;
+        }
+    };
+    println!("minions serving on http://{}", server.addr);
+    let max: u64 = a.parse_num("max-requests", 0);
+    if let Err(e) = server.serve(if max == 0 { None } else { Some(max) }) {
+        eprintln!("server error: {e}");
+        return 1;
+    }
+    0
+}
+
+fn cmd_bench(mut args: Vec<String>) -> i32 {
+    let exhibit = if args.is_empty() || args[0].starts_with("--") {
+        "table1".to_string()
+    } else {
+        args.remove(0)
+    };
+    let cli = backend_opt(Cli::new("minions bench", "regenerate a paper exhibit"));
+    let a = match cli.parse_from(args) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let seed: u64 = a.parse_num("seed", 42);
+    let n: usize = a.parse_num("n", 16);
+    let mut exp = match Exp::new(a.get_or("backend", "pjrt"), seed) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("startup failed: {e}");
+            return 1;
+        }
+    };
+    let result = match exhibit.as_str() {
+        "table1" => exp.table1(n, Some(std::path::Path::new("figure2.csv"))),
+        "table2" => exp.table2(n),
+        "table3" => exp.table3(n),
+        "fig3" => exp.fig3(n),
+        "fig4" => exp.fig4(n),
+        "fig5" => exp.fig5(n),
+        "fig6" => exp.fig6(n),
+        "fig8" => exp.fig8(n),
+        "summarization" => exp.summarization(n),
+        other => {
+            eprintln!("unknown exhibit '{other}'");
+            return 2;
+        }
+    };
+    match result {
+        Ok(table) => {
+            println!(
+                "== {exhibit} (n={n}, backend={}, seed={seed}) ==",
+                a.get_or("backend", "pjrt")
+            );
+            println!("{table}");
+            0
+        }
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            1
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! Job types: the unit of work the remote model assigns to the local
+//! model (paper §5.1 — a job is a (instruction, context-chunk) pair).
+
+use crate::data::{Context, PAGE_TOKENS};
+use crate::vocab::{Key, Token, CHUNK, PAD};
+
+/// A reference to a span of pages inside the sample context.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkRef {
+    pub doc: usize,
+    pub page_start: usize,
+    pub n_pages: usize,
+}
+
+impl ChunkRef {
+    /// Assemble the job context: concatenated pages padded to CHUNK.
+    pub fn materialize(&self, ctx: &Context) -> (Vec<Token>, Vec<f32>) {
+        let mut tokens = vec![PAD; CHUNK];
+        let mut mask = vec![0f32; CHUNK];
+        let doc = &ctx.docs[self.doc];
+        let mut out = 0usize;
+        for p in self.page_start..(self.page_start + self.n_pages).min(doc.pages.len()) {
+            let page = &doc.pages[p];
+            tokens[out..out + PAGE_TOKENS].copy_from_slice(page);
+            for m in &mut mask[out..out + PAGE_TOKENS] {
+                *m = 1.0;
+            }
+            out += PAGE_TOKENS;
+            if out >= CHUNK {
+                break;
+            }
+        }
+        (tokens, mask)
+    }
+
+    pub fn token_count(&self, ctx: &Context) -> usize {
+        let doc = &ctx.docs[self.doc];
+        let end = (self.page_start + self.n_pages).min(doc.pages.len());
+        (end.saturating_sub(self.page_start)) * PAGE_TOKENS
+    }
+}
+
+/// One local job (the paper's `JobManifest`).
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub job_id: usize,
+    pub task_id: usize,
+    pub chunk: ChunkRef,
+    /// fact keys this job asks for (atomic jobs have exactly 1; the
+    /// Minion chat and local-only baselines pool several — that is the
+    /// signal-dilution failure mode)
+    pub keys: Vec<Key>,
+    /// surface instruction (metered by the cost model)
+    pub instruction: String,
+    pub advice: String,
+}
+
+/// The local model's reply (the paper's `JobOutput` JSON).
+#[derive(Clone, Debug)]
+pub struct WorkerOutput {
+    pub job_id: usize,
+    pub task_id: usize,
+    /// None = abstained
+    pub answer: Option<Token>,
+    /// additional answers when sampling > 1 (includes the primary)
+    pub sample_answers: Vec<Token>,
+    /// threshold-extraction mode (summarisation): every value found in the
+    /// chunk above the confidence threshold
+    pub multi_found: Vec<Token>,
+    pub confidence: f32,
+    pub citation: String,
+    /// raw tokens of the cited span (the remote verifies these)
+    pub citation_tokens: Vec<Token>,
+    pub explanation: String,
+}
+
+impl WorkerOutput {
+    pub fn abstained(&self) -> bool {
+        self.answer.is_none()
+    }
+
+    /// Serialize as the protocol's worker JSON (this exact string's token
+    /// count is what the remote model pays prefill for).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("job_id", Json::num(self.job_id as f64)),
+            ("task_id", Json::num(self.task_id as f64)),
+            ("explanation", Json::str(self.explanation.clone())),
+            ("citation", Json::str(self.citation.clone())),
+            (
+                "answer",
+                match self.answer {
+                    Some(t) => Json::str(crate::vocab::render_token(t)),
+                    None => Json::Null,
+                },
+            ),
+            ("confidence", Json::num((self.confidence * 1000.0).round() / 1000.0)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ContextBuilder;
+    use crate::util::rng::Rng;
+
+    fn ctx(pages: usize) -> Context {
+        let mut rng = Rng::seed_from(5);
+        ContextBuilder::new(2, pages, &mut rng).finish()
+    }
+
+    #[test]
+    fn materialize_pads_partial_chunk() {
+        let c = ctx(8);
+        let r = ChunkRef {
+            doc: 0,
+            page_start: 0,
+            n_pages: 2,
+        };
+        let (tokens, mask) = r.materialize(&c);
+        assert_eq!(tokens.len(), CHUNK);
+        assert_eq!(mask[..2 * PAGE_TOKENS], vec![1.0; 2 * PAGE_TOKENS][..]);
+        assert_eq!(mask[2 * PAGE_TOKENS..], vec![0.0; CHUNK - 2 * PAGE_TOKENS][..]);
+        assert!(tokens[2 * PAGE_TOKENS..].iter().all(|t| *t == PAD));
+        assert_eq!(r.token_count(&c), 2 * PAGE_TOKENS);
+    }
+
+    #[test]
+    fn materialize_clips_at_doc_end() {
+        let c = ctx(3);
+        let r = ChunkRef {
+            doc: 1,
+            page_start: 2,
+            n_pages: 4,
+        };
+        let (_, mask) = r.materialize(&c);
+        let live: usize = mask.iter().map(|m| *m as usize).sum();
+        assert_eq!(live, PAGE_TOKENS); // only one page left
+        assert_eq!(r.token_count(&c), PAGE_TOKENS);
+    }
+
+    #[test]
+    fn worker_json_has_protocol_fields() {
+        let w = WorkerOutput {
+            job_id: 3,
+            task_id: 1,
+            answer: Some(5000),
+            sample_answers: vec![5000],
+            multi_found: vec![],
+            confidence: 0.91,
+            citation: "k0100·k0200·k0300 v5000".into(),
+            citation_tokens: vec![100, 200, 300, 5000],
+            explanation: "matched at position 72".into(),
+        };
+        let j = w.to_json();
+        assert_eq!(j.get("answer").unwrap().as_str().unwrap(), "v5000");
+        assert!(!w.abstained());
+        let none = WorkerOutput {
+            answer: None,
+            ..w.clone()
+        };
+        assert!(none.to_json().get("answer").unwrap().is_null());
+        assert!(none.abstained());
+    }
+}

@@ -1,0 +1,492 @@
+//! The LocalLM wrapper: builds prompts (token tensors) from jobs, batches
+//! them through the PJRT backend, and post-processes scores into the
+//! protocol's worker outputs (answer / citation / abstain).
+//!
+//! Capability is set by the `d` of the underlying scorer artifact plus the
+//! decoding profile (temperature, abstain bias). Accuracy behaviour is
+//! emergent — see DESIGN.md §2.
+
+use super::job::{ChunkRef, Job, WorkerOutput};
+use crate::cost::{text_tokens, Ledger};
+use crate::data::{Context, PAGES_PER_CHUNK_MAX};
+use crate::runtime::{Backend, Manifest, ScoreRequest};
+use crate::util::rng::Rng;
+use crate::vocab::{
+    is_value_token, render_token, Key, Token, BATCH, CHUNK, FACT_SLOT, KEY_LEN, QLEN,
+};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// A simulated local model (paper Table 1's LocalLM column).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LocalProfile {
+    pub name: &'static str,
+    /// embedding width of the scorer artifact (capacity)
+    pub d: usize,
+    /// decoding temperature (score perturbation scale)
+    pub temperature: f32,
+    /// abstain threshold multiplier (1.0 = calibrated midpoint; the Qwen
+    /// family abstains more aggressively => more compressed communication,
+    /// Fig 4-right)
+    pub abstain_bias: f32,
+    /// probability a worker output is malformed (broken JSON / truncated
+    /// citation) — the instruction-following gap that keeps small locals
+    /// from being rescued by cloud-side verification (paper §6.2: 1B
+    /// recovers only 49.5% of remote quality)
+    pub format_err: f64,
+}
+
+pub const LLAMA_1B: LocalProfile = LocalProfile {
+    name: "llama-1b",
+    d: 64,
+    temperature: 0.2,
+    abstain_bias: 1.0,
+    format_err: 0.38,
+};
+pub const LLAMA_3B: LocalProfile = LocalProfile {
+    name: "llama-3b",
+    d: 128,
+    temperature: 0.2,
+    abstain_bias: 1.0,
+    format_err: 0.10,
+};
+pub const LLAMA_8B: LocalProfile = LocalProfile {
+    name: "llama-8b",
+    d: 256,
+    temperature: 0.2,
+    abstain_bias: 1.0,
+    format_err: 0.03,
+};
+pub const QWEN_3B: LocalProfile = LocalProfile {
+    name: "qwen-3b",
+    d: 128,
+    temperature: 0.35,
+    abstain_bias: 1.25,
+    format_err: 0.12,
+};
+pub const QWEN_7B: LocalProfile = LocalProfile {
+    name: "qwen-7b",
+    d: 256,
+    temperature: 0.35,
+    abstain_bias: 1.25,
+    format_err: 0.04,
+};
+/// Retrospective preset (Table 3): a 2023-era 7B chat model.
+pub const LLAMA2_7B: LocalProfile = LocalProfile {
+    name: "llama2-7b",
+    d: 64,
+    temperature: 0.5,
+    abstain_bias: 0.8,
+    format_err: 0.55,
+};
+
+pub const LOCAL_PROFILES: [LocalProfile; 5] = [LLAMA_1B, LLAMA_3B, LLAMA_8B, QWEN_3B, QWEN_7B];
+
+pub fn local_profile(name: &str) -> Option<LocalProfile> {
+    [LLAMA_1B, LLAMA_3B, LLAMA_8B, QWEN_3B, QWEN_7B, LLAMA2_7B]
+        .into_iter()
+        .find(|p| p.name == name)
+}
+
+/// One extraction from a scored row.
+#[derive(Clone, Debug)]
+pub struct Extraction {
+    pub pos: usize,
+    pub value: Token,
+    pub score: f32,
+}
+
+pub struct LocalLm {
+    backend: Arc<dyn Backend>,
+    pub profile: LocalProfile,
+    wpos: Vec<f32>,
+    /// calibrated full-match score Σ wpos² (signal level)
+    signal: f32,
+}
+
+impl LocalLm {
+    pub fn new(backend: Arc<dyn Backend>, manifest: &Manifest, profile: LocalProfile) -> Result<LocalLm> {
+        let wpos = manifest.wpos(profile.d)?.to_vec();
+        let signal = wpos.iter().map(|w| w * w).sum();
+        Ok(LocalLm {
+            backend,
+            profile,
+            wpos,
+            signal,
+        })
+    }
+
+    pub fn wpos(&self) -> &[f32] {
+        &self.wpos
+    }
+
+    /// Abstain threshold for a k-part pooled query.
+    pub fn threshold(&self, k_parts: usize) -> f32 {
+        0.5 * self.signal / k_parts as f32 * self.profile.abstain_bias
+    }
+
+    /// Build the (q_tokens, q_weights) row for a pooled multi-key query.
+    fn query_row(&self, keys: &[Key]) -> (Vec<i32>, Vec<f32>) {
+        let mut q_tokens = vec![0i32; QLEN];
+        let mut q_weights = vec![0f32; QLEN];
+        let k = keys.len().max(1) as f32;
+        for (i, key) in keys.iter().enumerate().take(QLEN / KEY_LEN) {
+            for (j, tok) in key.0.iter().enumerate() {
+                q_tokens[i * KEY_LEN + j] = *tok as i32;
+                q_weights[i * KEY_LEN + j] = self.wpos[j] / k;
+            }
+        }
+        (q_tokens, q_weights)
+    }
+
+    /// Execute jobs in batches of `BATCH`, with `samples` decode draws per
+    /// job. Returns outputs in job order.
+    pub fn run_jobs(
+        &self,
+        ctx: &Context,
+        jobs: &[Job],
+        samples: usize,
+        rng: &mut Rng,
+        ledger: &mut Ledger,
+    ) -> Result<Vec<WorkerOutput>> {
+        let mut outputs = Vec::with_capacity(jobs.len());
+        for batch in jobs.chunks(BATCH) {
+            let mut q_tokens = vec![0i32; BATCH * QLEN];
+            let mut q_weights = vec![0f32; BATCH * QLEN];
+            let mut c_tokens = vec![0i32; BATCH * CHUNK];
+            let mut c_mask = vec![0f32; BATCH * CHUNK];
+            for (b, job) in batch.iter().enumerate() {
+                let (qt, qw) = self.query_row(&job.keys);
+                q_tokens[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qt);
+                q_weights[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qw);
+                let (ct, cm) = job.chunk.materialize(ctx);
+                for (dst, src) in c_tokens[b * CHUNK..(b + 1) * CHUNK].iter_mut().zip(&ct) {
+                    *dst = *src as i32;
+                }
+                c_mask[b * CHUNK..(b + 1) * CHUNK].copy_from_slice(&cm);
+            }
+            let resp = self.backend.score(ScoreRequest {
+                d: self.profile.d,
+                q_tokens,
+                q_weights,
+                c_tokens: c_tokens.clone(),
+                c_mask,
+            })?;
+            for (b, job) in batch.iter().enumerate() {
+                let row = &resp.scores[b * CHUNK..(b + 1) * CHUNK];
+                let toks = &c_tokens[b * CHUNK..(b + 1) * CHUNK];
+                let out = self.postprocess(job, row, toks, samples, rng);
+                ledger.local_job(
+                    job.chunk.token_count(ctx) as u64 + text_tokens(&job.instruction),
+                    (24 * samples) as u64,
+                );
+                outputs.push(out);
+            }
+        }
+        Ok(outputs)
+    }
+
+    /// Turn one scored row into a worker output.
+    fn postprocess(
+        &self,
+        job: &Job,
+        scores: &[f32],
+        c_tokens: &[i32],
+        samples: usize,
+        rng: &mut Rng,
+    ) -> WorkerOutput {
+        let threshold = self.threshold(job.keys.len());
+        let noise = self.profile.temperature * 0.08;
+        // instruction-following failure: the worker mangles its JSON
+        // (dropped or hallucinated fields) with profile probability
+        let malformed = rng.bool(self.profile.format_err);
+
+        // primary answer: greedy argmax
+        let (best_pos, best_score) = argmax(scores);
+        // sampling draws (Fig 5-middle): Gumbel-perturbed argmax
+        let mut sample_answers = Vec::new();
+        for _ in 0..samples.saturating_sub(1) {
+            let (p, s) = argmax_noisy(scores, noise, rng);
+            if s >= threshold {
+                if let Some(v) = extract_value(c_tokens, p) {
+                    sample_answers.push(v);
+                }
+            }
+        }
+        // threshold extraction for summarisation-style jobs
+        let multi_found = self
+            .extract_all(scores, c_tokens, threshold)
+            .into_iter()
+            .map(|e| e.value)
+            .collect();
+
+        if best_score < threshold {
+            return WorkerOutput {
+                job_id: job.job_id,
+                task_id: job.task_id,
+                answer: None,
+                sample_answers,
+                multi_found,
+                confidence: best_score / self.signal,
+                citation: String::new(),
+                citation_tokens: Vec::new(),
+                explanation: "no relevant span found in this chunk".into(),
+            };
+        }
+        let value = extract_value(c_tokens, best_pos);
+        let citation_tokens: Vec<Token> = c_tokens
+            [best_pos..(best_pos + FACT_SLOT).min(c_tokens.len())]
+            .iter()
+            .map(|t| *t as Token)
+            .collect();
+        let citation: String = citation_tokens
+            .iter()
+            .map(|t| render_token(*t))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let value = if malformed {
+            // half the failures drop the output, half hallucinate a value
+            if rng.bool(0.5) {
+                None
+            } else {
+                extract_value(c_tokens, rng.below(c_tokens.len().saturating_sub(FACT_SLOT)))
+            }
+        } else {
+            value
+        };
+        let citation_tokens = if malformed { Vec::new() } else { citation_tokens };
+        let citation = if malformed { String::from("<malformed>") } else { citation };
+        match value {
+            Some(v) => {
+                let mut sample_answers = sample_answers;
+                sample_answers.insert(0, v);
+                WorkerOutput {
+                    job_id: job.job_id,
+                    task_id: job.task_id,
+                    answer: Some(v),
+                    sample_answers,
+                    multi_found,
+                    confidence: (best_score / self.signal).min(1.5),
+                    citation,
+                    citation_tokens: citation_tokens.clone(),
+                    explanation: format!("matched key span at position {best_pos}"),
+                }
+            }
+            None => WorkerOutput {
+                job_id: job.job_id,
+                task_id: job.task_id,
+                answer: None,
+                sample_answers,
+                multi_found,
+                confidence: best_score / self.signal,
+                citation,
+                citation_tokens,
+                explanation: "matched span carries no value token".into(),
+            },
+        }
+    }
+
+    /// Score short token spans against a key (the cloud-side *citation
+    /// verification* step: the remote re-reads worker citations with its
+    /// own, higher-acuity scorer before trusting them — the paper's
+    /// "verification in the cloud"). Returns max score per span,
+    /// normalised by the full-match signal level.
+    pub fn score_span(&self, key: &Key, spans: &[Vec<Token>]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(spans.len());
+        for group in spans.chunks(BATCH) {
+            let mut q_tokens = vec![0i32; BATCH * QLEN];
+            let mut q_weights = vec![0f32; BATCH * QLEN];
+            let mut c_tokens = vec![0i32; BATCH * CHUNK];
+            let mut c_mask = vec![0f32; BATCH * CHUNK];
+            for (b, span) in group.iter().enumerate() {
+                let (qt, qw) = self.query_row(std::slice::from_ref(key));
+                q_tokens[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qt);
+                q_weights[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qw);
+                for (i, t) in span.iter().take(CHUNK).enumerate() {
+                    c_tokens[b * CHUNK + i] = *t as i32;
+                    c_mask[b * CHUNK + i] = 1.0;
+                }
+            }
+            let resp = self.backend.score(ScoreRequest {
+                d: self.profile.d,
+                q_tokens,
+                q_weights,
+                c_tokens,
+                c_mask,
+            })?;
+            for b in 0..group.len() {
+                let row = &resp.scores[b * CHUNK..(b + 1) * CHUNK];
+                let (_, best) = argmax(row);
+                out.push((best / self.signal).max(0.0));
+            }
+        }
+        Ok(out)
+    }
+
+    /// All extractions above threshold with FACT_SLOT non-max suppression.
+    pub fn extract_all(&self, scores: &[f32], c_tokens: &[i32], threshold: f32) -> Vec<Extraction> {
+        let mut cands: Vec<(usize, f32)> = scores
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s >= threshold)
+            .map(|(i, s)| (i, *s))
+            .collect();
+        cands.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let mut taken: Vec<Extraction> = Vec::new();
+        for (pos, score) in cands {
+            if taken
+                .iter()
+                .any(|e| pos.abs_diff(e.pos) < FACT_SLOT)
+            {
+                continue;
+            }
+            if let Some(value) = extract_value(c_tokens, pos) {
+                taken.push(Extraction { pos, value, score });
+            }
+        }
+        taken.sort_by_key(|e| e.pos);
+        taken
+    }
+
+    /// Answer a query by scanning the *entire* context in one pooled pass
+    /// (the local-only / Minion-chat reading mode — long-context dilution
+    /// and multi-part pooling both apply).
+    pub fn answer_full_context(
+        &self,
+        ctx: &Context,
+        keys: &[Key],
+        rng: &mut Rng,
+        ledger: &mut Ledger,
+    ) -> Result<(Option<Token>, f32, Vec<Token>)> {
+        let jobs = full_context_jobs(ctx, keys, "read the full document");
+        let outs = self.run_jobs(ctx, &jobs, 1, rng, ledger)?;
+        // global argmax = the highest-confidence chunk answer (scores are
+        // comparable across chunks: same query vector, same scale)
+        let mut best: Option<&WorkerOutput> = None;
+        for o in &outs {
+            if best.map_or(true, |b| o.confidence > b.confidence) {
+                best = Some(o);
+            }
+        }
+        let best = best.expect("at least one chunk");
+        // union of threshold extractions (for Multi/Summarize baselines)
+        let mut all: Vec<Token> = Vec::new();
+        for o in &outs {
+            for v in &o.multi_found {
+                if !all.contains(v) {
+                    all.push(*v);
+                }
+            }
+        }
+        Ok((best.answer, best.confidence, all))
+    }
+}
+
+/// Enumerate full-width (4-page) chunks covering the whole context.
+pub fn full_context_jobs(ctx: &Context, keys: &[Key], instruction: &str) -> Vec<Job> {
+    let mut jobs = Vec::new();
+    let mut id = 0;
+    for (di, doc) in ctx.docs.iter().enumerate() {
+        let mut p = 0;
+        while p < doc.n_pages() {
+            jobs.push(Job {
+                job_id: id,
+                task_id: 0,
+                chunk: ChunkRef {
+                    doc: di,
+                    page_start: p,
+                    n_pages: PAGES_PER_CHUNK_MAX,
+                },
+                keys: keys.to_vec(),
+                instruction: instruction.to_string(),
+                advice: String::new(),
+            });
+            id += 1;
+            p += PAGES_PER_CHUNK_MAX;
+        }
+    }
+    jobs
+}
+
+fn argmax(scores: &[f32]) -> (usize, f32) {
+    let mut best = (0usize, f32::NEG_INFINITY);
+    for (i, s) in scores.iter().enumerate() {
+        if *s > best.1 {
+            best = (i, *s);
+        }
+    }
+    best
+}
+
+fn argmax_noisy(scores: &[f32], noise: f32, rng: &mut Rng) -> (usize, f32) {
+    if noise <= 0.0 {
+        return argmax(scores);
+    }
+    let mut best = (0usize, f32::NEG_INFINITY);
+    for (i, s) in scores.iter().enumerate() {
+        if *s < -1e29 {
+            continue;
+        }
+        let v = *s + noise * rng.gumbel() as f32;
+        if v > best.1 {
+            best = (i, v);
+        }
+    }
+    (best.0, scores[best.0])
+}
+
+/// The value token of the fact starting at `pos` ([k1 k2 k3 v] layout).
+fn extract_value(c_tokens: &[i32], pos: usize) -> Option<Token> {
+    // exact layout first, then a small scan (off-by-one argmax tolerance)
+    for off in [KEY_LEN, KEY_LEN + 1, KEY_LEN.saturating_sub(1)] {
+        if let Some(t) = c_tokens.get(pos + off) {
+            let t = *t as Token;
+            if is_value_token(t) {
+                return Some(t);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_have_distinct_capacities() {
+        assert!(LLAMA_1B.d < LLAMA_3B.d && LLAMA_3B.d < LLAMA_8B.d);
+        assert_eq!(local_profile("llama-8b"), Some(LLAMA_8B));
+        assert_eq!(local_profile("nope"), None);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3]), (1, 0.9));
+    }
+
+    #[test]
+    fn extract_value_scans_near_layout() {
+        // [k k k v]
+        let toks = vec![100i32, 200, 300, 5000, 4097, 4098];
+        assert_eq!(extract_value(&toks, 0), Some(5000));
+        // key tokens (non-value) right after => falls through to +4
+        let toks2 = vec![100i32, 200, 300, 301, 5000, 4098];
+        assert_eq!(extract_value(&toks2, 0), Some(5000));
+        // nothing value-like in range
+        let toks3 = vec![100i32, 200, 300, 301];
+        assert_eq!(extract_value(&toks3, 0), None);
+    }
+
+    #[test]
+    fn full_context_jobs_cover_all_pages() {
+        use crate::data::ContextBuilder;
+        let mut rng = Rng::seed_from(1);
+        let ctx = ContextBuilder::new(2, 10, &mut rng).finish();
+        let jobs = full_context_jobs(&ctx, &[Key([1, 2, 3])], "x");
+        // 10 pages per doc => ceil(10/4)=3 chunks per doc
+        assert_eq!(jobs.len(), 6);
+        let covered: usize = jobs.iter().map(|j| j.chunk.token_count(&ctx)).sum();
+        assert_eq!(covered, ctx.total_tokens());
+    }
+}

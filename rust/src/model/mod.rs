@@ -1,0 +1,13 @@
+//! Model wrappers: the LocalLM ladder and the RemoteLM presets
+//! (paper §6.2 "Model choice"). Both run their compute through the
+//! `runtime::Backend` (PJRT-compiled HLO from the build-time JAX/Pallas
+//! stack); this module owns prompt construction, decoding, abstention,
+//! planning and synthesis — the coordinator-side behaviour.
+
+pub mod job;
+pub mod local;
+pub mod remote;
+
+pub use job::{ChunkRef, Job, WorkerOutput};
+pub use local::{local_profile, LocalLm, LocalProfile, LOCAL_PROFILES};
+pub use remote::{remote_profile, Decision, PlanConfig, RemoteLm, RemoteProfile, REMOTE_PROFILES};

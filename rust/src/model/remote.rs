@@ -1,0 +1,608 @@
+//! The RemoteLM wrapper: the simulated frontier model.
+//!
+//! Three capabilities distinguish it from the local ladder (DESIGN.md §1):
+//! high-capacity extraction (d=1024 artifact), reliable multi-step
+//! *planning* (it decomposes queries into atomic tasks and writes the
+//! MinionScript that instantiates jobs — paper §5.1), and exact symbolic
+//! arithmetic over extracted values. Weaker remote presets (Tables 2 & 3)
+//! degrade each axis: smaller d, flakier arithmetic, cruder planners.
+
+use super::job::{ChunkRef, WorkerOutput};
+use super::local::{LocalLm, LocalProfile};
+use crate::cost::{text_tokens, Ledger};
+use crate::data::{books, Answer, Context, Query, QueryKind, PAGES_PER_CHUNK_MAX};
+use crate::dsl::render_task_key;
+use crate::runtime::{Backend, Manifest};
+use crate::util::rng::Rng;
+use crate::vocab::{Key, Token};
+use anyhow::Result;
+use std::sync::Arc;
+
+/// How well the remote plans decompositions (Tables 2/3 axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannerQuality {
+    /// atomic task per query part, context-wide chunking, zoom on retry
+    Good,
+    /// merges all parts into one task (dilutes the local model)
+    Basic,
+    /// one merged task AND only scans the first document
+    Poor,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RemoteProfile {
+    pub name: &'static str,
+    /// extraction capacity (embedding width of its scorer artifact)
+    pub d: usize,
+    /// probability an arithmetic step comes out wrong
+    pub arithmetic_err: f64,
+    pub planner: PlannerQuality,
+    pub release: &'static str,
+}
+
+pub const GPT_4O: RemoteProfile = RemoteProfile {
+    name: "gpt-4o",
+    d: 1024,
+    arithmetic_err: 0.0,
+    planner: PlannerQuality::Good,
+    release: "2024-05",
+};
+pub const GPT_4_TURBO: RemoteProfile = RemoteProfile {
+    name: "gpt-4-turbo",
+    d: 1024,
+    arithmetic_err: 0.03,
+    planner: PlannerQuality::Good,
+    release: "2024-04",
+};
+pub const GPT_4_1106: RemoteProfile = RemoteProfile {
+    name: "gpt-4-1106-preview",
+    d: 1024,
+    arithmetic_err: 0.05,
+    planner: PlannerQuality::Basic,
+    release: "2023-11",
+};
+pub const GPT_35_TURBO: RemoteProfile = RemoteProfile {
+    name: "gpt-3.5-turbo-0125",
+    d: 256,
+    arithmetic_err: 0.25,
+    planner: PlannerQuality::Poor,
+    release: "2024-01",
+};
+pub const GPT_4O_MINI: RemoteProfile = RemoteProfile {
+    name: "gpt-4o-mini",
+    d: 256,
+    arithmetic_err: 0.03,
+    planner: PlannerQuality::Good,
+    release: "2024-07",
+};
+pub const LLAMA3_70B: RemoteProfile = RemoteProfile {
+    name: "llama3-70b",
+    d: 256,
+    arithmetic_err: 0.12,
+    planner: PlannerQuality::Poor,
+    release: "2024-04",
+};
+pub const LLAMA31_70B: RemoteProfile = RemoteProfile {
+    name: "llama3.1-70b",
+    d: 256,
+    arithmetic_err: 0.06,
+    planner: PlannerQuality::Basic,
+    release: "2024-07",
+};
+pub const LLAMA33_70B: RemoteProfile = RemoteProfile {
+    name: "llama3.3-70b",
+    d: 256,
+    arithmetic_err: 0.04,
+    planner: PlannerQuality::Good,
+    release: "2024-12",
+};
+
+pub const REMOTE_PROFILES: [RemoteProfile; 8] = [
+    GPT_4O,
+    GPT_4_TURBO,
+    GPT_4_1106,
+    GPT_35_TURBO,
+    GPT_4O_MINI,
+    LLAMA3_70B,
+    LLAMA31_70B,
+    LLAMA33_70B,
+];
+
+pub fn remote_profile(name: &str) -> Option<RemoteProfile> {
+    REMOTE_PROFILES.into_iter().find(|p| p.name == name)
+}
+
+/// Planner knobs (the paper's parallel-workload hyper-parameters, §5.2).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanConfig {
+    /// max distinct tasks emitted per round (extra parts get merged)
+    pub tasks_per_round: usize,
+    /// chunking granularity in pages (1..=4)
+    pub pages_per_chunk: usize,
+}
+
+impl Default for PlanConfig {
+    fn default() -> Self {
+        PlanConfig {
+            tasks_per_round: 8,
+            pages_per_chunk: PAGES_PER_CHUNK_MAX,
+        }
+    }
+}
+
+/// Synthesis decision (paper §5.1 Step 3).
+#[derive(Clone, Debug)]
+pub enum Decision {
+    Final(Answer),
+    /// request another round; advice is carried to the next plan
+    MoreRounds { advice: String },
+}
+
+pub struct RemoteLm {
+    pub profile: RemoteProfile,
+    /// internal reader used for remote-only full-context answering
+    reader: LocalLm,
+}
+
+impl RemoteLm {
+    pub fn new(backend: Arc<dyn Backend>, manifest: &Manifest, profile: RemoteProfile) -> Result<RemoteLm> {
+        let reader_profile = LocalProfile {
+            name: profile.name,
+            d: profile.d,
+            temperature: 0.0,
+            abstain_bias: 1.0,
+            format_err: 0.0, // frontier models follow the schema
+        };
+        let reader = LocalLm::new(backend, manifest, reader_profile)?;
+        Ok(RemoteLm { profile, reader })
+    }
+
+    // -----------------------------------------------------------------
+    // Planning (decompose step): emit MinionScript source
+    // -----------------------------------------------------------------
+
+    /// Group query parts into at most `tasks_per_round` task strings.
+    fn task_strings(&self, query: &Query, cfg: &PlanConfig) -> Vec<String> {
+        if query.kind == QueryKind::Summarize {
+            return vec!["SALIENT".to_string()];
+        }
+        let keys: Vec<Key> = query.keys.clone();
+        match self.profile.planner {
+            PlannerQuality::Good => {
+                // atomic tasks, merged only if the cap forces it
+                let n_tasks = keys.len().min(cfg.tasks_per_round.max(1));
+                let mut groups: Vec<Vec<Key>> = vec![Vec::new(); n_tasks];
+                for (i, k) in keys.iter().enumerate() {
+                    groups[i % n_tasks].push(*k);
+                }
+                groups
+                    .into_iter()
+                    .filter(|g| !g.is_empty())
+                    .map(|g| {
+                        format!(
+                            "EXTRACT {}",
+                            g.iter().map(render_task_key).collect::<Vec<_>>().join(";")
+                        )
+                    })
+                    .collect()
+            }
+            PlannerQuality::Basic | PlannerQuality::Poor => {
+                // everything pooled into one diluted task
+                vec![format!(
+                    "EXTRACT {}",
+                    keys.iter().map(render_task_key).collect::<Vec<_>>().join(";")
+                )]
+            }
+        }
+    }
+
+    /// Generate the decomposition program for this round. The returned
+    /// source is executed by `dsl::run_program`; its length is the decode
+    /// cost the protocol meters (the remote "wrote" this code).
+    pub fn plan_minions(
+        &self,
+        query: &Query,
+        cfg: &PlanConfig,
+        round: usize,
+        advice: &str,
+        had_answers: bool,
+    ) -> String {
+        let tasks = self.task_strings(query, cfg);
+        let ppc = cfg.pages_per_chunk.clamp(1, PAGES_PER_CHUNK_MAX);
+        let advice_line = if advice.is_empty() {
+            "focus on spans that match the key tokens exactly".to_string()
+        } else {
+            advice.replace('"', "'")
+        };
+        let mut src = format!("# decomposition round {round} ({})\n", self.profile.name);
+        let task_list = tasks
+            .iter()
+            .map(|t| format!("\"{t}\""))
+            .collect::<Vec<_>>()
+            .join(", ");
+        src.push_str(&format!("tasks = [{task_list}]\n"));
+        if round > 1 && had_answers && self.profile.planner == PlannerQuality::Good {
+            // zoom: re-run tasks only on chunks that answered last round
+            src.push_str(&format!(
+                r#"for task_id, task in enumerate(tasks):
+    for tid, chunk, answered in last_jobs:
+        if answered:
+            job_manifests.append(JobManifest(task_id=task_id, chunk=chunk, task=task, advice="{advice_line}"))
+"#
+            ));
+            return src;
+        }
+        let doc_iter = match self.profile.planner {
+            PlannerQuality::Poor => "[context[0]]".to_string(),
+            _ => "context".to_string(),
+        };
+        src.push_str(&format!(
+            r#"for task_id, task in enumerate(tasks):
+    for doc_id, document in enumerate({doc_iter}):
+        chunks = chunk_on_multiple_pages(document, {ppc})
+        for chunk_id, chunk in enumerate(chunks):
+            job_manifests.append(JobManifest(task_id=task_id, chunk=chunk, task=task, advice="{advice_line}"))
+"#
+        ));
+        src
+    }
+
+    // -----------------------------------------------------------------
+    // Synthesis (aggregate step)
+    // -----------------------------------------------------------------
+
+    /// Aggregate filtered worker outputs into a decision.
+    pub fn synthesize(
+        &self,
+        query: &Query,
+        outputs: &[WorkerOutput],
+        round: usize,
+        max_rounds: usize,
+        rng: &mut Rng,
+    ) -> Decision {
+        let n_parts = self.expected_parts(query);
+        let best = |task: usize| -> Option<(Token, f32)> {
+            let key = query.keys.get(task.min(query.keys.len().saturating_sub(1)));
+            self.verified_vote(outputs, task, key)
+        };
+
+        let force_final = round >= max_rounds;
+        match &query.kind {
+            QueryKind::Extract => match best(0) {
+                Some((tok, _)) => Decision::Final(Answer::Value(tok)),
+                None if force_final => Decision::Final(Answer::Value(0)),
+                None => Decision::MoreRounds {
+                    advice: "no chunk produced the requested span; use finer chunks".into(),
+                },
+            },
+            QueryKind::Bool => {
+                // any confident extraction => yes; silence => no
+                let found = (0..n_parts).any(|t| best(t).map_or(false, |(_, w)| w > 0.5));
+                if !found && !force_final && round < max_rounds && outputs.is_empty() {
+                    Decision::MoreRounds {
+                        advice: "verify absence with page-level chunks".into(),
+                    }
+                } else {
+                    Decision::Final(Answer::Bool(found))
+                }
+            }
+            QueryKind::Compute(op) => {
+                let a = self.part_candidate(query, outputs, 0);
+                let b = self.part_candidate(query, outputs, 1);
+                match (a, b) {
+                    (Some(a), Some(b)) => {
+                        let mut x = op.apply(
+                            crate::data::value_number(a),
+                            crate::data::value_number(b),
+                        );
+                        if rng.bool(self.profile.arithmetic_err) {
+                            // a wrong reasoning step: off by a sign/order
+                            x *= if rng.bool(0.5) { -1.0 } else { 10.0 };
+                        }
+                        Decision::Final(Answer::Number(x))
+                    }
+                    _ if force_final => Decision::Final(Answer::Number(f64::NAN)),
+                    _ => Decision::MoreRounds {
+                        advice: "one operand is missing; retry the unanswered task".into(),
+                    },
+                }
+            }
+            QueryKind::Multi(k) => {
+                let mut vals = Vec::new();
+                let mut missing = false;
+                for part in 0..*k {
+                    match self.part_candidate(query, outputs, part) {
+                        Some(v) => vals.push(v),
+                        None => missing = true,
+                    }
+                }
+                if missing && !force_final {
+                    Decision::MoreRounds {
+                        advice: "some sub-questions are unanswered; retry those tasks".into(),
+                    }
+                } else {
+                    Decision::Final(Answer::Set(vals))
+                }
+            }
+            QueryKind::Summarize => {
+                let mut vals: Vec<Token> = Vec::new();
+                for o in outputs {
+                    for v in &o.multi_found {
+                        if !vals.contains(v) {
+                            vals.push(*v);
+                        }
+                    }
+                }
+                Decision::Final(Answer::Set(vals))
+            }
+        }
+    }
+
+    /// Confidence-weighted vote with cloud-side citation verification:
+    /// when several distinct answers compete for a part, the remote
+    /// re-scores each candidate's cited span with its own (high-acuity)
+    /// scorer and reweights — order-confusable distractor citations score
+    /// visibly lower at d=1024 (DESIGN.md §2). This is the paper's
+    /// "test-time sampling on-device + verification in the cloud".
+    fn verified_vote(
+        &self,
+        outputs: &[WorkerOutput],
+        task: usize,
+        part_key: Option<&Key>,
+    ) -> Option<(Token, f32)> {
+        let mut weights: std::collections::HashMap<Token, f32> = std::collections::HashMap::new();
+        let mut best_citation: std::collections::HashMap<Token, (f32, Vec<Token>)> =
+            std::collections::HashMap::new();
+        for o in outputs.iter().filter(|o| o.task_id == task) {
+            let mut credited = false;
+            for (i, ans) in o.sample_answers.iter().enumerate() {
+                let w = o.confidence / (1.0 + i as f32);
+                *weights.entry(*ans).or_insert(0.0) += w;
+                credited = true;
+                let e = best_citation
+                    .entry(*ans)
+                    .or_insert((f32::NEG_INFINITY, Vec::new()));
+                if o.confidence > e.0 && !o.citation_tokens.is_empty() {
+                    *e = (o.confidence, o.citation_tokens.clone());
+                }
+            }
+            if !credited {
+                if let Some(a) = o.answer {
+                    *weights.entry(a).or_insert(0.0) += o.confidence;
+                    let e = best_citation
+                        .entry(a)
+                        .or_insert((f32::NEG_INFINITY, Vec::new()));
+                    if o.confidence > e.0 && !o.citation_tokens.is_empty() {
+                        *e = (o.confidence, o.citation_tokens.clone());
+                    }
+                }
+            }
+        }
+        if weights.is_empty() {
+            return None;
+        }
+        // verification pass: only when answers actually compete
+        if weights.len() > 1 {
+            if let Some(key) = part_key {
+                let cands: Vec<Token> = weights.keys().copied().collect();
+                let spans: Vec<Vec<Token>> = cands
+                    .iter()
+                    .map(|t| best_citation.get(t).map(|(_, s)| s.clone()).unwrap_or_default())
+                    .collect();
+                if spans.iter().all(|s| !s.is_empty()) {
+                    if let Ok(scores) = self.reader.score_span(key, &spans) {
+                        for (t, vs) in cands.iter().zip(&scores) {
+                            // sharpen: squared verified score reweights
+                            let w = weights.get_mut(t).unwrap();
+                            *w *= (vs.clamp(0.05, 1.25)).powi(2);
+                        }
+                    }
+                }
+            }
+        }
+        weights
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    fn expected_parts(&self, query: &Query) -> usize {
+        match &query.kind {
+            QueryKind::Multi(k) => *k,
+            QueryKind::Compute(_) => 2,
+            _ => 1,
+        }
+    }
+
+    /// Best candidate for a query part. With a Good planner, part i maps
+    /// to task i; merged planners put everything in task 0, so candidates
+    /// compete across parts (part of the quality penalty).
+    fn part_candidate(&self, query: &Query, outputs: &[WorkerOutput], part: usize) -> Option<Token> {
+        let n_parts = self.expected_parts(query);
+        let task = match self.profile.planner {
+            PlannerQuality::Good => part.min(n_parts - 1),
+            _ => 0,
+        };
+        let key = query.keys.get(part.min(query.keys.len().saturating_sub(1)));
+        self.verified_vote(outputs, task, key).map(|(t, _)| t)
+    }
+
+    // -----------------------------------------------------------------
+    // Remote-only baseline reading
+    // -----------------------------------------------------------------
+
+    /// Answer with the remote model alone: it ingests the full context
+    /// (paying prefill for every token) and decomposes internally.
+    pub fn answer_full_context(
+        &self,
+        ctx: &Context,
+        query: &Query,
+        rng: &mut Rng,
+        ledger: &mut Ledger,
+    ) -> Result<Answer> {
+        // pay for the context + query once (internal decomposition reuses
+        // the prefill, as with real frontier models)
+        ledger.remote_msg(
+            ctx.total_tokens() as u64 + text_tokens(&query.text),
+            80,
+        );
+        let mut internal = Ledger::default(); // reader cost is internal
+        let answer = match &query.kind {
+            QueryKind::Extract => {
+                let (tok, _, _) =
+                    self.reader
+                        .answer_full_context(ctx, &query.keys[..1], rng, &mut internal)?;
+                Answer::Value(tok.unwrap_or(0))
+            }
+            QueryKind::Bool => {
+                let (tok, conf, _) =
+                    self.reader
+                        .answer_full_context(ctx, &query.keys[..1], rng, &mut internal)?;
+                Answer::Bool(tok.is_some() && conf > 0.5)
+            }
+            QueryKind::Compute(op) => {
+                // internal decomposition: one clean pass per operand
+                let (a, _, _) =
+                    self.reader
+                        .answer_full_context(ctx, &query.keys[..1], rng, &mut internal)?;
+                let (b, _, _) =
+                    self.reader
+                        .answer_full_context(ctx, &query.keys[1..2], rng, &mut internal)?;
+                match (a, b) {
+                    (Some(a), Some(b)) => {
+                        let mut x =
+                            op.apply(crate::data::value_number(a), crate::data::value_number(b));
+                        if rng.bool(self.profile.arithmetic_err) {
+                            x *= if rng.bool(0.5) { -1.0 } else { 10.0 };
+                        }
+                        Answer::Number(x)
+                    }
+                    _ => Answer::Number(f64::NAN),
+                }
+            }
+            QueryKind::Multi(k) => {
+                let mut vals = Vec::new();
+                for part in 0..*k {
+                    let (tok, _, _) = self.reader.answer_full_context(
+                        ctx,
+                        &query.keys[part..part + 1],
+                        rng,
+                        &mut internal,
+                    )?;
+                    if let Some(t) = tok {
+                        vals.push(t);
+                    }
+                }
+                Answer::Set(vals)
+            }
+            QueryKind::Summarize => {
+                let (_, _, all) = self.reader.answer_full_context(
+                    ctx,
+                    &[books::salient_query_key()],
+                    rng,
+                    &mut internal,
+                )?;
+                Answer::Set(all)
+            }
+        };
+        Ok(answer)
+    }
+
+    /// Access the internal reader (used by RAG, which sends retrieved
+    /// chunks to the remote model).
+    pub fn reader(&self) -> &LocalLm {
+        &self.reader
+    }
+}
+
+/// Confidence-weighted vote over non-abstaining outputs of one task.
+#[allow(dead_code)] // retained as the unverified-vote reference (unit-tested)
+fn vote(outputs: &[WorkerOutput], task: usize) -> Option<(Token, f32)> {
+    use std::collections::HashMap;
+    let mut weights: HashMap<Token, f32> = HashMap::new();
+    for o in outputs.iter().filter(|o| o.task_id == task) {
+        for (i, ans) in o.sample_answers.iter().enumerate() {
+            // primary answer gets full weight; extra samples less
+            let w = o.confidence / (1.0 + i as f32);
+            *weights.entry(*ans).or_insert(0.0) += w;
+        }
+        if o.sample_answers.is_empty() {
+            if let Some(a) = o.answer {
+                *weights.entry(a).or_insert(0.0) += o.confidence;
+            }
+        }
+    }
+    weights
+        .into_iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+}
+
+/// Map a chunk answer history to the DSL's `last_jobs` binding.
+pub fn last_jobs_binding(outputs: &[WorkerOutput], jobs: &[super::job::Job]) -> Vec<(i64, ChunkRef, bool)> {
+    outputs
+        .iter()
+        .zip(jobs)
+        .map(|(o, j)| (o.task_id as i64, j.chunk, !o.abstained()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wo(task_id: usize, answer: Option<Token>, conf: f32) -> WorkerOutput {
+        WorkerOutput {
+            job_id: 0,
+            task_id,
+            answer,
+            sample_answers: answer.into_iter().collect(),
+            multi_found: answer.into_iter().collect(),
+            confidence: conf,
+            citation: String::new(),
+            citation_tokens: Vec::new(),
+            explanation: String::new(),
+        }
+    }
+
+    #[test]
+    fn vote_picks_weighted_majority() {
+        let outs = vec![
+            wo(0, Some(5000), 0.9),
+            wo(0, Some(5000), 0.8),
+            wo(0, Some(6000), 1.0),
+            wo(0, None, 0.1),
+            wo(1, Some(7000), 1.0), // other task ignored
+        ];
+        let (tok, w) = vote(&outs, 0).unwrap();
+        assert_eq!(tok, 5000);
+        assert!(w > 1.5);
+    }
+
+    #[test]
+    fn vote_none_when_all_abstain() {
+        let outs = vec![wo(0, None, 0.1), wo(0, None, 0.2)];
+        assert!(vote(&outs, 0).is_none());
+    }
+
+    #[test]
+    fn profiles_resolvable() {
+        assert_eq!(remote_profile("gpt-4o"), Some(GPT_4O));
+        assert!(remote_profile("nope").is_none());
+        assert!(GPT_4O.d > GPT_35_TURBO.d);
+    }
+
+    #[test]
+    fn planner_quality_task_strings() {
+        // Good planner splits parts; Poor pools them. Checked through the
+        // generated source (no backend needed — construct via plan text).
+        let q = Query {
+            kind: QueryKind::Multi(2),
+            keys: vec![Key([100, 200, 300]), Key([111, 222, 333])],
+            text: "t".into(),
+            answer: Answer::Set(vec![]),
+        };
+        // poke the template helpers through a throwaway RemoteLm is
+        // awkward without a backend; test the task grouping logic
+        // indirectly via generated source in protocol tests instead.
+        assert_eq!(q.keys.len(), 2);
+    }
+}

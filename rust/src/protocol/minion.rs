@@ -1,0 +1,186 @@
+//! Minion: the naïve free-form chat protocol (paper §4, Appendix D.1).
+//!
+//! The remote model never sees the context; it converses with the local
+//! model, which reads everything. Round 1 relays the full (possibly
+//! multi-part) query in one message — the local model pools all parts and
+//! suffers signal dilution. Later rounds ask one unresolved part at a
+//! time (the remote "raises additional questions"), which restores the
+//! local model's per-part signal — this is exactly why accuracy climbs
+//! with the round budget (Fig 6).
+
+use super::{Outcome, Protocol};
+use crate::cost::{text_tokens, Ledger};
+use crate::data::{Answer, QueryKind, Sample};
+use crate::model::{LocalLm, RemoteLm};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::vocab::{render_token, Token};
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct Minion {
+    pub local: Arc<LocalLm>,
+    pub remote: Arc<RemoteLm>,
+    pub max_rounds: usize,
+}
+
+impl Minion {
+    pub fn new(local: Arc<LocalLm>, remote: Arc<RemoteLm>, max_rounds: usize) -> Self {
+        Minion {
+            local,
+            remote,
+            max_rounds: max_rounds.max(1),
+        }
+    }
+}
+
+/// Per-part confidence the remote requires before it stops asking.
+const ACCEPT_CONF: f32 = 0.55;
+
+impl Protocol for Minion {
+    fn name(&self) -> String {
+        format!(
+            "minion[{}+{}]",
+            self.local.profile.name, self.remote.profile.name
+        )
+    }
+
+    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
+        let mut ledger = Ledger::default();
+        let mut transcript = Vec::new();
+        let q = &sample.query;
+        let n_parts = match &q.kind {
+            QueryKind::Multi(k) => *k,
+            QueryKind::Compute(_) => 2,
+            _ => 1,
+        };
+        let mut part_answers: Vec<Option<(Token, f32)>> = vec![None; n_parts];
+        let mut rounds = 0;
+
+        while rounds < self.max_rounds {
+            rounds += 1;
+            // --- remote -> local message ---
+            let (msg, asked_parts): (String, Vec<usize>) = if rounds == 1 {
+                // the naïve opener: relay the whole query at once
+                (
+                    format!("Please answer from the document: {}", q.text),
+                    (0..n_parts).collect(),
+                )
+            } else {
+                // follow-up: one unresolved part, asked specifically
+                let missing: Vec<usize> = part_answers
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, a)| a.map_or(true, |(_, c)| c < ACCEPT_CONF))
+                    .map(|(i, _)| i)
+                    .collect();
+                let Some(part) = missing.first().copied() else {
+                    break;
+                };
+                (
+                    format!(
+                        "One more thing — specifically find part {} only: {}",
+                        part + 1,
+                        crate::dsl::render_task_key(&q.keys[part])
+                    ),
+                    vec![part],
+                )
+            };
+            // remote decodes the message; it has only the query as prefill
+            ledger.remote_msg(text_tokens(&q.text), text_tokens(&msg));
+            transcript.push(format!("remote→local (r{rounds}): {msg}"));
+
+            // --- local reads the FULL context with the pooled request ---
+            let keys: Vec<_> = asked_parts.iter().map(|i| q.keys[*i]).collect();
+            let (tok, conf, _all) =
+                self.local
+                    .answer_full_context(&sample.context, &keys, rng, &mut ledger)?;
+            // with one part asked, the answer attaches to that part; with
+            // several pooled, the local model can only serve its best find
+            if let Some(t) = tok {
+                let attach = if asked_parts.len() == 1 {
+                    asked_parts[0]
+                } else {
+                    // pooled reply: credit the strongest unanswered slot
+                    asked_parts
+                        .iter()
+                        .copied()
+                        .find(|i| part_answers[*i].is_none())
+                        .unwrap_or(asked_parts[0])
+                };
+                let better = part_answers[attach].map_or(true, |(_, c)| conf > c);
+                if better {
+                    part_answers[attach] = Some((t, conf));
+                }
+            }
+            let reply = Json::obj(vec![
+                (
+                    "answer",
+                    match tok {
+                        Some(t) => Json::str(render_token(t)),
+                        None => Json::Null,
+                    },
+                ),
+                ("confidence", Json::num(conf as f64)),
+            ])
+            .to_string();
+            // local's reply becomes remote prefill; remote decodes a short ack
+            ledger.remote_msg(text_tokens(&reply), 24);
+            transcript.push(format!("local→remote (r{rounds}): {reply}"));
+
+            let all_done = part_answers
+                .iter()
+                .all(|a| a.map_or(false, |(_, c)| c >= ACCEPT_CONF));
+            if all_done {
+                break;
+            }
+        }
+
+        // --- remote finalizes (it does the arithmetic; local can't) ---
+        let answer = match &q.kind {
+            QueryKind::Extract => Answer::Value(part_answers[0].map(|(t, _)| t).unwrap_or(0)),
+            QueryKind::Bool => {
+                Answer::Bool(part_answers[0].map_or(false, |(_, c)| c >= ACCEPT_CONF))
+            }
+            QueryKind::Compute(op) => match (part_answers[0], part_answers[1]) {
+                (Some((a, _)), Some((b, _))) => {
+                    let mut x = op.apply(
+                        crate::data::value_number(a),
+                        crate::data::value_number(b),
+                    );
+                    if rng.bool(self.remote.profile.arithmetic_err) {
+                        x *= if rng.bool(0.5) { -1.0 } else { 10.0 };
+                    }
+                    Answer::Number(x)
+                }
+                _ => Answer::Number(f64::NAN),
+            },
+            QueryKind::Multi(_) => Answer::Set(
+                part_answers
+                    .iter()
+                    .filter_map(|a| a.map(|(t, _)| t))
+                    .collect(),
+            ),
+            QueryKind::Summarize => {
+                // chat is a poor fit for summarisation: the local model
+                // sends its best extractions in one message
+                let (_, _, all) = self.local.answer_full_context(
+                    &sample.context,
+                    &q.keys,
+                    rng,
+                    &mut ledger,
+                )?;
+                let msg_len: usize = all.len() * 6;
+                ledger.remote_msg(text_tokens(&"x".repeat(msg_len * 4)), 64);
+                Answer::Set(all)
+            }
+        };
+
+        Ok(Outcome {
+            answer,
+            ledger,
+            rounds,
+            transcript,
+        })
+    }
+}

@@ -1,0 +1,185 @@
+//! MinionS: the decomposition protocol (paper §5).
+//!
+//! Loop: (1) the remote writes a MinionScript decomposition program
+//! *without reading the context* — the sandbox executes it against the
+//! context shape to instantiate jobs; (2) the local model executes the
+//! jobs in parallel batches and abstain-filters the outputs; (3) the
+//! remote aggregates the surviving JSON outputs and either finalizes or
+//! requests another round (simple-retries or scratchpad strategy, §6.4).
+
+use super::{Outcome, Protocol, RoundStrategy};
+use crate::cost::{text_tokens, Ledger};
+use crate::data::{QueryKind, Sample};
+use crate::dsl::{self, DocShape, Limits};
+use crate::model::job::Job;
+use crate::model::remote::last_jobs_binding;
+use crate::model::{Decision, LocalLm, PlanConfig, RemoteLm};
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug)]
+pub struct MinionsConfig {
+    pub plan: PlanConfig,
+    /// decode samples per job (repeated-sampling knob, Fig 5-middle)
+    pub samples_per_task: usize,
+    pub max_rounds: usize,
+    pub strategy: RoundStrategy,
+}
+
+impl Default for MinionsConfig {
+    fn default() -> Self {
+        MinionsConfig {
+            plan: PlanConfig::default(),
+            samples_per_task: 1,
+            max_rounds: 2,
+            strategy: RoundStrategy::Scratchpad,
+        }
+    }
+}
+
+pub struct MinionS {
+    pub local: Arc<LocalLm>,
+    pub remote: Arc<RemoteLm>,
+    pub cfg: MinionsConfig,
+}
+
+impl MinionS {
+    pub fn new(local: Arc<LocalLm>, remote: Arc<RemoteLm>, cfg: MinionsConfig) -> Self {
+        MinionS { local, remote, cfg }
+    }
+}
+
+/// Fixed prompt overheads (the paper's p_decompose / p_synthesize texts).
+const DECOMPOSE_PROMPT_TOKENS: u64 = 350;
+const SYNTH_PROMPT_TOKENS: u64 = 260;
+
+impl Protocol for MinionS {
+    fn name(&self) -> String {
+        format!(
+            "minions[{}+{}]",
+            self.local.profile.name, self.remote.profile.name
+        )
+    }
+
+    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
+        let mut ledger = Ledger::default();
+        let mut transcript = Vec::new();
+        let q = &sample.query;
+        let docs: Vec<DocShape> = sample
+            .context
+            .docs
+            .iter()
+            .enumerate()
+            .map(|(i, d)| DocShape {
+                doc: i,
+                n_pages: d.n_pages(),
+            })
+            .collect();
+
+        let mut advice = String::new();
+        let mut scratch_jobs: Vec<(i64, crate::model::ChunkRef, bool)> = Vec::new();
+        let mut scratchpad_tokens: u64 = 0;
+        let mut rounds = 0;
+
+        loop {
+            rounds += 1;
+            // ---- (1) decompose: remote writes code ----
+            let had_answers = !scratch_jobs.is_empty()
+                && self.cfg.strategy == RoundStrategy::Scratchpad
+                && scratch_jobs.iter().any(|(_, _, a)| *a);
+            let src = self
+                .remote
+                .plan_minions(q, &self.cfg.plan, rounds, &advice, had_answers);
+            // remote pays: query + decompose prompt (+ scratchpad) as
+            // prefill, the generated program as decode
+            ledger.remote_msg(
+                text_tokens(&q.text) + DECOMPOSE_PROMPT_TOKENS + scratchpad_tokens,
+                text_tokens(&src),
+            );
+            transcript.push(format!("round {rounds} decompose:\n{src}"));
+
+            let last = if had_answers { scratch_jobs.clone() } else { Vec::new() };
+            let dsl_jobs = dsl::run_program(&src, &docs, &last, Limits::default())
+                .map_err(|e| anyhow!("planner program failed: {e}"))?;
+
+            // ---- convert DSL manifests to executable jobs ----
+            let mut jobs: Vec<Job> = Vec::with_capacity(dsl_jobs.len());
+            for (i, dj) in dsl_jobs.iter().enumerate() {
+                let keys = dsl::parse_task(&dj.task)
+                    .ok_or_else(|| anyhow!("unparseable task: {}", dj.task))?;
+                jobs.push(Job {
+                    job_id: i,
+                    task_id: dj.task_id as usize,
+                    chunk: dj.chunk,
+                    keys,
+                    instruction: dj.task.clone(),
+                    advice: dj.advice.clone(),
+                });
+            }
+
+            // ---- (2) execute locally, in parallel batches ----
+            let outputs = self.local.run_jobs(
+                &sample.context,
+                &jobs,
+                self.cfg.samples_per_task,
+                rng,
+                &mut ledger,
+            )?;
+            // abstain filter: only survivors travel to the cloud
+            let survivors: Vec<_> = outputs.iter().filter(|o| !o.abstained()).cloned().collect();
+            let w: String = survivors
+                .iter()
+                .map(|o| o.to_json().to_string())
+                .collect::<Vec<_>>()
+                .join("\n");
+            transcript.push(format!(
+                "round {rounds}: {} jobs, {} survived filtering",
+                jobs.len(),
+                survivors.len()
+            ));
+
+            // ---- (3) aggregate on remote ----
+            ledger.remote_msg(text_tokens(&w) + SYNTH_PROMPT_TOKENS, 90);
+            let keep_multi = q.kind == QueryKind::Summarize;
+            let synth_inputs: Vec<_> = if keep_multi {
+                // summarisation synthesis reads every (non-empty) output
+                outputs
+                    .iter()
+                    .filter(|o| !o.multi_found.is_empty())
+                    .cloned()
+                    .collect()
+            } else {
+                survivors.clone()
+            };
+            let decision =
+                self.remote
+                    .synthesize(q, &synth_inputs, rounds, self.cfg.max_rounds, rng);
+
+            match decision {
+                Decision::Final(answer) => {
+                    return Ok(Outcome {
+                        answer,
+                        ledger,
+                        rounds,
+                        transcript,
+                    });
+                }
+                Decision::MoreRounds { advice: a } => {
+                    advice = a;
+                    match self.cfg.strategy {
+                        RoundStrategy::Retries => {
+                            scratch_jobs.clear();
+                            scratchpad_tokens = 0;
+                        }
+                        RoundStrategy::Scratchpad => {
+                            scratch_jobs = last_jobs_binding(&outputs, &jobs);
+                            // the scratchpad costs prefill next round
+                            scratchpad_tokens = 12 * scratch_jobs.len() as u64 / 4;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

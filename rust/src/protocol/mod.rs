@@ -1,0 +1,48 @@
+//! The local↔remote communication protocols — the paper's contribution.
+//!
+//! Four systems, matching Table 1's rows:
+//! - [`local_only::LocalOnly`]  — the on-device model alone
+//! - [`remote_only::RemoteOnly`] — the frontier model with full context
+//! - [`minion::Minion`]   — naïve free-form chat (paper §4)
+//! - [`minions::MinionS`] — decompose / execute / aggregate (paper §5)
+//!
+//! Every protocol returns an [`Outcome`] carrying the predicted answer and
+//! the token [`Ledger`] the cost model prices.
+
+pub mod local_only;
+pub mod minion;
+pub mod minions;
+pub mod remote_only;
+
+use crate::cost::Ledger;
+use crate::data::{Answer, Sample};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub answer: Answer,
+    pub ledger: Ledger,
+    pub rounds: usize,
+    /// human-readable trace of the exchange (for logs / debugging)
+    pub transcript: Vec<String>,
+}
+
+pub trait Protocol: Send + Sync {
+    fn name(&self) -> String;
+    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome>;
+}
+
+/// Context-maintenance strategy across MinionS rounds (paper §5.1/§6.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundStrategy {
+    /// only the remote's advice string carries over
+    Retries,
+    /// the remote records what it learned (answered chunks) and zooms in
+    Scratchpad,
+}
+
+pub use local_only::LocalOnly;
+pub use minion::Minion;
+pub use minions::{MinionS, MinionsConfig};
+pub use remote_only::RemoteOnly;

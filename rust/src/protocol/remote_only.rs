@@ -1,0 +1,43 @@
+//! Remote-only baseline: the frontier model ingests the full context and
+//! answers alone — the quality ceiling and the cost ceiling (Table 1 row
+//! 1: it pays prefill for every context token).
+
+use super::{Outcome, Protocol};
+use crate::cost::Ledger;
+use crate::data::Sample;
+use crate::model::RemoteLm;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::sync::Arc;
+
+pub struct RemoteOnly {
+    pub remote: Arc<RemoteLm>,
+}
+
+impl RemoteOnly {
+    pub fn new(remote: Arc<RemoteLm>) -> Self {
+        RemoteOnly { remote }
+    }
+}
+
+impl Protocol for RemoteOnly {
+    fn name(&self) -> String {
+        format!("remote-only[{}]", self.remote.profile.name)
+    }
+
+    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
+        let mut ledger = Ledger::default();
+        let answer =
+            self.remote
+                .answer_full_context(&sample.context, &sample.query, rng, &mut ledger)?;
+        Ok(Outcome {
+            answer,
+            ledger,
+            rounds: 1,
+            transcript: vec![format!(
+                "remote-only ingested {} prefill tokens",
+                ledger.remote_prefill
+            )],
+        })
+    }
+}

@@ -1,0 +1,144 @@
+//! BM25 over token chunks, from scratch (Robertson & Zaragoza 2009).
+//!
+//! The RAG baseline of §6.5: retrieve top-k chunks for the query and ship
+//! them (raw) to the remote model. Documents are synthetic token
+//! sequences, so "terms" are token ids — the same lexical space the
+//! scorer model reads.
+
+use crate::vocab::Token;
+use std::collections::HashMap;
+
+pub struct Bm25Index {
+    /// term -> (chunk_id, term_frequency)
+    postings: HashMap<Token, Vec<(usize, u32)>>,
+    doc_len: Vec<usize>,
+    avg_len: f64,
+    n_docs: usize,
+    pub k1: f64,
+    pub b: f64,
+}
+
+impl Bm25Index {
+    pub fn build(chunks: &[Vec<Token>]) -> Bm25Index {
+        Self::build_tuned(chunks, 1.2, 0.75)
+    }
+
+    pub fn build_tuned(chunks: &[Vec<Token>], k1: f64, b: f64) -> Bm25Index {
+        let mut postings: HashMap<Token, Vec<(usize, u32)>> = HashMap::new();
+        let mut doc_len = Vec::with_capacity(chunks.len());
+        for (ci, chunk) in chunks.iter().enumerate() {
+            doc_len.push(chunk.len());
+            let mut tf: HashMap<Token, u32> = HashMap::new();
+            for t in chunk {
+                *tf.entry(*t).or_insert(0) += 1;
+            }
+            for (t, f) in tf {
+                postings.entry(t).or_default().push((ci, f));
+            }
+        }
+        let n_docs = chunks.len();
+        let avg_len = if n_docs == 0 {
+            0.0
+        } else {
+            doc_len.iter().sum::<usize>() as f64 / n_docs as f64
+        };
+        Bm25Index {
+            postings,
+            doc_len,
+            avg_len,
+            n_docs,
+            k1,
+            b,
+        }
+    }
+
+    fn idf(&self, term: Token) -> f64 {
+        let df = self.postings.get(&term).map_or(0, |p| p.len()) as f64;
+        let n = self.n_docs as f64;
+        // BM25+-style floor at 0 to avoid negative idf for ubiquitous terms
+        (((n - df + 0.5) / (df + 0.5)) + 1.0).ln().max(0.0)
+    }
+
+    /// Score every chunk against the query terms; returns (chunk, score)
+    /// sorted descending, ties broken by chunk id (deterministic).
+    pub fn search(&self, query: &[Token], top_k: usize) -> Vec<(usize, f64)> {
+        let mut scores: HashMap<usize, f64> = HashMap::new();
+        for term in query {
+            let idf = self.idf(*term);
+            if idf == 0.0 {
+                continue;
+            }
+            if let Some(posts) = self.postings.get(term) {
+                for (ci, tf) in posts {
+                    let tf = *tf as f64;
+                    let dl = self.doc_len[*ci] as f64;
+                    let denom = tf + self.k1 * (1.0 - self.b + self.b * dl / self.avg_len);
+                    *scores.entry(*ci).or_insert(0.0) += idf * tf * (self.k1 + 1.0) / denom;
+                }
+            }
+        }
+        let mut out: Vec<(usize, f64)> = scores.into_iter().collect();
+        out.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap()
+                .then_with(|| a.0.cmp(&b.0))
+        });
+        out.truncate(top_k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunks() -> Vec<Vec<Token>> {
+        vec![
+            vec![100, 200, 300, 5000, 5001],     // exact query terms
+            vec![100, 200, 999, 5002, 5003],     // partial
+            vec![7000, 7001, 7002, 7003, 7004],  // unrelated
+            vec![100, 100, 100, 100, 100],       // term spam (tf saturation)
+        ]
+    }
+
+    #[test]
+    fn exact_match_ranks_first() {
+        let idx = Bm25Index::build(&chunks());
+        let hits = idx.search(&[100, 200, 300], 4);
+        assert_eq!(hits[0].0, 0);
+        assert!(hits[0].1 > hits[1].1);
+    }
+
+    #[test]
+    fn tf_saturates() {
+        let idx = Bm25Index::build(&chunks());
+        let hits = idx.search(&[100], 4);
+        // chunk 3 has tf=5 of term 100, but saturation keeps chunk 0/1
+        // within the same order of magnitude
+        let spam = hits.iter().find(|(c, _)| *c == 3).unwrap().1;
+        let normal = hits.iter().find(|(c, _)| *c == 0).unwrap().1;
+        assert!(spam < normal * 3.0);
+    }
+
+    #[test]
+    fn unrelated_chunk_unscored() {
+        let idx = Bm25Index::build(&chunks());
+        let hits = idx.search(&[100, 200, 300], 10);
+        assert!(hits.iter().all(|(c, _)| *c != 2));
+    }
+
+    #[test]
+    fn top_k_truncates_deterministically() {
+        let idx = Bm25Index::build(&chunks());
+        let a = idx.search(&[100], 2);
+        let b = idx.search(&[100], 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn empty_index_no_panic() {
+        let idx = Bm25Index::build(&[]);
+        assert!(idx.search(&[1, 2, 3], 5).is_empty());
+    }
+}

@@ -1,0 +1,253 @@
+//! Retrieval-augmented generation baselines (paper §6.5 / Appendix E.3).
+//!
+//! Two retrievers over the context's chunks:
+//! - [`bm25`]: lexical BM25, from scratch
+//! - dense: the `embed` HLO artifact (the stand-in for OpenAI
+//!   text-embedding-3-small) with cosine ranking
+//!
+//! The RAG protocol retrieves top-k chunks and ships them *raw* to the
+//! remote model — the remote pays prefill for every retrieved token
+//! (unlike MinionS, where the local model ships compact answers).
+
+pub mod bm25;
+
+use crate::cost::{text_tokens, Ledger};
+use crate::data::{Answer, Context, QueryKind, Sample};
+use crate::model::job::ChunkRef;
+use crate::model::RemoteLm;
+use crate::protocol::{Outcome, Protocol};
+use crate::runtime::{Backend, EmbedRequest};
+use crate::util::rng::Rng;
+use crate::vocab::{Token, BATCH, CHUNK, PAD};
+use anyhow::Result;
+use bm25::Bm25Index;
+use std::sync::Arc;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Retriever {
+    Bm25,
+    Dense,
+}
+
+/// Enumerate retrieval units: `pages_per_chunk`-page chunks across docs.
+pub fn retrieval_chunks(ctx: &Context, pages_per_chunk: usize) -> Vec<(ChunkRef, Vec<Token>)> {
+    let mut out = Vec::new();
+    for (di, doc) in ctx.docs.iter().enumerate() {
+        let mut p = 0;
+        while p < doc.n_pages() {
+            let r = ChunkRef {
+                doc: di,
+                page_start: p,
+                n_pages: pages_per_chunk.min(doc.n_pages() - p),
+            };
+            let mut toks = Vec::with_capacity(r.n_pages * crate::data::PAGE_TOKENS);
+            for page in &doc.pages[p..p + r.n_pages] {
+                toks.extend_from_slice(page);
+            }
+            out.push((r, toks));
+            p += pages_per_chunk;
+        }
+    }
+    out
+}
+
+pub struct Rag {
+    pub remote: Arc<RemoteLm>,
+    pub backend: Arc<dyn Backend>,
+    pub retriever: Retriever,
+    pub top_k: usize,
+    pub pages_per_chunk: usize,
+}
+
+impl Rag {
+    pub fn new(
+        remote: Arc<RemoteLm>,
+        backend: Arc<dyn Backend>,
+        retriever: Retriever,
+        top_k: usize,
+    ) -> Self {
+        Rag {
+            remote,
+            backend,
+            retriever,
+            top_k,
+            pages_per_chunk: 2,
+        }
+    }
+
+    /// Rank chunks for the query; returns chunk indices.
+    fn retrieve(&self, query_tokens: &[Token], chunks: &[(ChunkRef, Vec<Token>)]) -> Result<Vec<usize>> {
+        match self.retriever {
+            Retriever::Bm25 => {
+                let texts: Vec<Vec<Token>> = chunks.iter().map(|(_, t)| t.clone()).collect();
+                let idx = Bm25Index::build(&texts);
+                Ok(idx
+                    .search(query_tokens, self.top_k)
+                    .into_iter()
+                    .map(|(c, _)| c)
+                    .collect())
+            }
+            Retriever::Dense => {
+                // embed all chunks through the PJRT embed artifact, then
+                // cosine-rank against the mean query-token embedding
+                let mut embs: Vec<Vec<f32>> = Vec::with_capacity(chunks.len() + 1);
+                // first row of the first batch carries the query "chunk"
+                let mut rows: Vec<Vec<Token>> = Vec::with_capacity(chunks.len() + 1);
+                rows.push(query_tokens.to_vec());
+                rows.extend(chunks.iter().map(|(_, t)| t.clone()));
+                for batch in rows.chunks(BATCH) {
+                    let mut c_tokens = vec![0i32; BATCH * CHUNK];
+                    let mut c_mask = vec![0f32; BATCH * CHUNK];
+                    for (b, row) in batch.iter().enumerate() {
+                        for (i, t) in row.iter().take(CHUNK).enumerate() {
+                            if *t == PAD {
+                                continue;
+                            }
+                            c_tokens[b * CHUNK + i] = *t as i32;
+                            c_mask[b * CHUNK + i] = 1.0;
+                        }
+                    }
+                    let emb = self.backend.embed(EmbedRequest { c_tokens, c_mask })?;
+                    let d = emb.len() / BATCH;
+                    for b in 0..batch.len() {
+                        embs.push(emb[b * d..(b + 1) * d].to_vec());
+                    }
+                }
+                let q = &embs[0];
+                let mut scored: Vec<(usize, f64)> = embs[1..]
+                    .iter()
+                    .enumerate()
+                    .map(|(i, e)| (i, cosine(q, e)))
+                    .collect();
+                scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then_with(|| a.0.cmp(&b.0)));
+                Ok(scored.into_iter().take(self.top_k).map(|(c, _)| c).collect())
+            }
+        }
+    }
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (x, y) in a.iter().zip(b) {
+        dot += (*x as f64) * (*y as f64);
+        na += (*x as f64) * (*x as f64);
+        nb += (*y as f64) * (*y as f64);
+    }
+    dot / (na.sqrt() * nb.sqrt() + 1e-12)
+}
+
+impl Protocol for Rag {
+    fn name(&self) -> String {
+        format!(
+            "rag-{}[k={}]",
+            match self.retriever {
+                Retriever::Bm25 => "bm25",
+                Retriever::Dense => "dense",
+            },
+            self.top_k
+        )
+    }
+
+    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
+        let mut ledger = Ledger::default();
+        let q = &sample.query;
+        let chunks = retrieval_chunks(&sample.context, self.pages_per_chunk);
+
+        // query tokens: the key components (the lexical handle RAG gets)
+        let mut query_tokens: Vec<Token> = Vec::new();
+        for k in &q.keys {
+            query_tokens.extend(k.0.iter().filter(|t| **t != PAD));
+        }
+
+        let picked = self.retrieve(&query_tokens, &chunks)?;
+
+        // Build the retrieved sub-context and ship it to the remote.
+        let retrieved_tokens: usize = picked.iter().map(|i| chunks[*i].1.len()).sum();
+        ledger.remote_msg(retrieved_tokens as u64 + text_tokens(&q.text), 80);
+
+        // The remote answers over the retrieved chunks only.
+        let sub_ctx = subcontext(&sample.context, &chunks, &picked);
+        let mut internal = Ledger::default(); // remote's reading is internal
+        let answer = if picked.is_empty() {
+            match &q.kind {
+                QueryKind::Bool => Answer::Bool(false),
+                QueryKind::Summarize => Answer::Set(vec![]),
+                QueryKind::Compute(_) => Answer::Number(f64::NAN),
+                QueryKind::Multi(_) => Answer::Set(vec![]),
+                QueryKind::Extract => Answer::Value(0),
+            }
+        } else {
+            self.remote
+                .answer_full_context(&sub_ctx, q, rng, &mut internal)?
+        };
+
+        Ok(Outcome {
+            answer,
+            ledger,
+            rounds: 1,
+            transcript: vec![format!(
+                "rag retrieved {}/{} chunks ({} tokens)",
+                picked.len(),
+                chunks.len(),
+                retrieved_tokens
+            )],
+        })
+    }
+}
+
+/// Materialize the retrieved chunks as a standalone context document.
+fn subcontext(
+    _ctx: &Context,
+    chunks: &[(ChunkRef, Vec<Token>)],
+    picked: &[usize],
+) -> Context {
+    use crate::data::{Document, PAGE_TOKENS};
+    let mut pages = Vec::new();
+    for i in picked {
+        let toks = &chunks[*i].1;
+        for page in toks.chunks(PAGE_TOKENS) {
+            let mut p = page.to_vec();
+            p.resize(PAGE_TOKENS, PAD);
+            pages.push(p);
+        }
+    }
+    if pages.is_empty() {
+        pages.push(vec![PAD; PAGE_TOKENS]);
+    }
+    Context {
+        docs: vec![Document { pages }],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ContextBuilder;
+
+    #[test]
+    fn retrieval_chunks_cover_context() {
+        let mut rng = Rng::seed_from(3);
+        let ctx = ContextBuilder::new(2, 6, &mut rng).finish();
+        let chunks = retrieval_chunks(&ctx, 2);
+        assert_eq!(chunks.len(), 6); // 3 per doc
+        let total: usize = chunks.iter().map(|(_, t)| t.len()).sum();
+        assert_eq!(total, ctx.total_tokens());
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-9);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn subcontext_preserves_tokens() {
+        let mut rng = Rng::seed_from(4);
+        let ctx = ContextBuilder::new(1, 4, &mut rng).finish();
+        let chunks = retrieval_chunks(&ctx, 2);
+        let sub = subcontext(&ctx, &chunks, &[1]);
+        assert_eq!(sub.docs.len(), 1);
+        assert_eq!(sub.total_tokens(), chunks[1].1.len());
+        assert_eq!(sub.docs[0].pages[0], ctx.docs[0].pages[2]);
+    }
+}

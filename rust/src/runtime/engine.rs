@@ -1,0 +1,379 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client, and serves batched score/embed requests.
+//!
+//! The `xla` crate's handles are not `Send`, so a dedicated engine thread
+//! owns the client, the compiled executables, and the device-resident
+//! weight buffers; callers talk to it through channels via the cloneable
+//! [`Engine`] handle. Weight tensors (up to 32 MB for d=1024) are
+//! transferred to the device once at module-load time and reused as
+//! `PjRtBuffer`s on every dispatch — only the small per-request token
+//! tensors cross the host/device boundary on the hot path.
+
+use super::manifest::{Manifest, ModuleSpec};
+use super::weights::WeightFile;
+use crate::vocab::{BATCH, CHUNK, QLEN};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// One batched scoring dispatch (B rows padded by the caller).
+#[derive(Clone, Debug)]
+pub struct ScoreRequest {
+    /// capacity (embedding width) selecting the score module
+    pub d: usize,
+    pub q_tokens: Vec<i32>,  // [B * QLEN]
+    pub q_weights: Vec<f32>, // [B * QLEN]
+    pub c_tokens: Vec<i32>,  // [B * CHUNK]
+    pub c_mask: Vec<f32>,    // [B * CHUNK]
+}
+
+#[derive(Clone, Debug)]
+pub struct ScoreResponse {
+    pub scores: Vec<f32>, // [B * CHUNK]
+    pub lse: Vec<f32>,    // [B]
+}
+
+#[derive(Clone, Debug)]
+pub struct EmbedRequest {
+    pub c_tokens: Vec<i32>, // [B * CHUNK]
+    pub c_mask: Vec<f32>,   // [B * CHUNK]
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub dispatches: u64,
+    pub rows: u64,
+    pub exec_secs: f64,
+    pub compile_secs: f64,
+}
+
+enum Request {
+    Score(ScoreRequest, mpsc::Sender<Result<ScoreResponse>>),
+    Embed(EmbedRequest, mpsc::Sender<Result<Vec<f32>>>),
+    Stats(mpsc::Sender<EngineStats>),
+    Shutdown,
+}
+
+/// Cloneable handle to the engine thread.
+#[derive(Clone)]
+pub struct Engine {
+    tx: mpsc::Sender<Request>,
+    // joined on last drop
+    join: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+}
+
+impl Engine {
+    /// Start the engine. Modules are compiled lazily on first use unless
+    /// listed in `precompile`.
+    pub fn start(manifest: Manifest, precompile: &[usize]) -> Result<Engine> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let pre: Vec<usize> = precompile.to_vec();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(manifest, pre, rx, ready_tx))
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .context("engine thread died during startup")??;
+        Ok(Engine {
+            tx,
+            join: Arc::new(Mutex::new(Some(join))),
+        })
+    }
+
+    /// Convenience: start from the default artifact dir.
+    pub fn start_default() -> Result<Engine> {
+        let manifest = Manifest::load(super::manifest::default_artifact_dir())?;
+        Engine::start(manifest, &[])
+    }
+
+    pub fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        let b = req.q_tokens.len() / QLEN;
+        if req.q_tokens.len() != b * QLEN
+            || req.q_weights.len() != b * QLEN
+            || req.c_tokens.len() != b * CHUNK
+            || req.c_mask.len() != b * CHUNK
+            || b != BATCH
+        {
+            bail!(
+                "score request shape mismatch: q={} qw={} c={} cm={} (want B={BATCH})",
+                req.q_tokens.len(),
+                req.q_weights.len(),
+                req.c_tokens.len(),
+                req.c_mask.len()
+            );
+        }
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Score(req, tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    pub fn embed(&self, req: EmbedRequest) -> Result<Vec<f32>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Embed(req, tx))
+            .map_err(|_| anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let (tx, rx) = mpsc::channel();
+        if self.tx.send(Request::Stats(tx)).is_err() {
+            return EngineStats::default();
+        }
+        rx.recv().unwrap_or_default()
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        if Arc::strong_count(&self.join) == 1 {
+            let _ = self.tx.send(Request::Shutdown);
+            if let Some(h) = self.join.lock().unwrap().take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine thread internals
+// ---------------------------------------------------------------------------
+
+struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    /// device-resident weight buffers, in input order (emb [, wpos])
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    spec: ModuleSpec,
+}
+
+struct EngineState {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    score_modules: HashMap<usize, LoadedModule>,
+    embed_module: Option<LoadedModule>,
+    weight_cache: HashMap<String, Arc<WeightFile>>,
+    stats: EngineStats,
+}
+
+fn engine_main(
+    manifest: Manifest,
+    precompile: Vec<usize>,
+    rx: mpsc::Receiver<Request>,
+    ready_tx: mpsc::Sender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            let _ = ready_tx.send(Err(anyhow!("PjRtClient::cpu failed: {e:?}")));
+            return;
+        }
+    };
+    log::info!(
+        "pjrt engine up: platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    );
+    let mut state = EngineState {
+        client,
+        manifest,
+        score_modules: HashMap::new(),
+        embed_module: None,
+        weight_cache: HashMap::new(),
+        stats: EngineStats::default(),
+    };
+    for d in &precompile {
+        if let Err(e) = state.ensure_score(*d) {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    }
+    let _ = ready_tx.send(Ok(()));
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Score(r, reply) => {
+                let res = state.run_score(r);
+                let _ = reply.send(res);
+            }
+            Request::Embed(r, reply) => {
+                let res = state.run_embed(r);
+                let _ = reply.send(res);
+            }
+            Request::Stats(reply) => {
+                let _ = reply.send(state.stats.clone());
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+impl EngineState {
+    fn load_module(&mut self, spec: &ModuleSpec) -> Result<LoadedModule> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow!("loading {}: {e:?}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+
+        // Stage weight tensors on-device once.
+        let wkey = spec.weights.to_string_lossy().to_string();
+        let wf = match self.weight_cache.get(&wkey) {
+            Some(wf) => Arc::clone(wf),
+            None => {
+                let wf = Arc::new(WeightFile::load(&spec.weights)?);
+                self.weight_cache.insert(wkey, Arc::clone(&wf));
+                wf
+            }
+        };
+        let mut weight_bufs = Vec::new();
+        for decl in &spec.inputs {
+            if decl.name == "emb" || decl.name == "wpos" {
+                let t = wf.get(&decl.name)?;
+                if t.dims != decl.shape {
+                    bail!(
+                        "weight '{}' shape {:?} != declared {:?}",
+                        decl.name,
+                        t.dims,
+                        decl.shape
+                    );
+                }
+                let buf = buffer_f32(&self.client, &t.data, &t.dims)
+                    .map_err(|e| anyhow!("staging weight '{}': {e}", decl.name))?;
+                weight_bufs.push(buf);
+            }
+        }
+        self.stats.compile_secs += t0.elapsed().as_secs_f64();
+        log::info!(
+            "compiled module {} in {:.2}s",
+            spec.name,
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(LoadedModule {
+            exe,
+            weight_bufs,
+            spec: spec.clone(),
+        })
+    }
+
+    fn ensure_score(&mut self, d: usize) -> Result<()> {
+        if !self.score_modules.contains_key(&d) {
+            let spec = self.manifest.score_module(d)?.clone();
+            let m = self.load_module(&spec)?;
+            self.score_modules.insert(d, m);
+        }
+        Ok(())
+    }
+
+    fn ensure_embed(&mut self) -> Result<()> {
+        if self.embed_module.is_none() {
+            let spec = self.manifest.embed_module()?.clone();
+            self.embed_module = Some(self.load_module(&spec)?);
+        }
+        Ok(())
+    }
+
+    fn run_score(&mut self, req: ScoreRequest) -> Result<ScoreResponse> {
+        self.ensure_score(req.d)?;
+        let b = BATCH;
+        let module = self.score_modules.get(&req.d).unwrap();
+        let q_tok = buffer_i32(&self.client, &req.q_tokens, &[b, QLEN])?;
+        let q_w = buffer_f32(&self.client, &req.q_weights, &[b, QLEN])?;
+        let c_tok = buffer_i32(&self.client, &req.c_tokens, &[b, CHUNK])?;
+        let c_m = buffer_f32(&self.client, &req.c_mask, &[b, CHUNK])?;
+
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(6);
+        for w in &module.weight_bufs {
+            inputs.push(w);
+        }
+        inputs.push(&q_tok);
+        inputs.push(&q_w);
+        inputs.push(&c_tok);
+        inputs.push(&c_m);
+
+        let t0 = Instant::now();
+        let result = module
+            .exe
+            .execute_b(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", module.spec.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback: {e:?}"))?;
+        let (scores_lit, lse_lit) = out
+            .to_tuple2()
+            .map_err(|e| anyhow!("expected 2-tuple output: {e:?}"))?;
+        let scores = scores_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("scores readback: {e:?}"))?;
+        let lse = lse_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("lse readback: {e:?}"))?;
+        self.stats.dispatches += 1;
+        self.stats.rows += b as u64;
+        self.stats.exec_secs += t0.elapsed().as_secs_f64();
+
+        if scores.len() != b * CHUNK || lse.len() != b {
+            bail!(
+                "unexpected output sizes: scores={} lse={}",
+                scores.len(),
+                lse.len()
+            );
+        }
+        Ok(ScoreResponse { scores, lse })
+    }
+
+    fn run_embed(&mut self, req: EmbedRequest) -> Result<Vec<f32>> {
+        self.ensure_embed()?;
+        let b = BATCH;
+        if req.c_tokens.len() != b * CHUNK || req.c_mask.len() != b * CHUNK {
+            bail!("embed request shape mismatch");
+        }
+        let module = self.embed_module.as_ref().unwrap();
+        let c_tok = buffer_i32(&self.client, &req.c_tokens, &[b, CHUNK])?;
+        let c_m = buffer_f32(&self.client, &req.c_mask, &[b, CHUNK])?;
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+        for w in &module.weight_bufs {
+            inputs.push(w);
+        }
+        inputs.push(&c_tok);
+        inputs.push(&c_m);
+        let t0 = Instant::now();
+        let result = module
+            .exe
+            .execute_b(&inputs)
+            .map_err(|e| anyhow!("execute embed: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("readback: {e:?}"))?;
+        let emb_lit = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("expected 1-tuple output: {e:?}"))?;
+        let emb = emb_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("embed readback: {e:?}"))?;
+        self.stats.dispatches += 1;
+        self.stats.rows += b as u64;
+        self.stats.exec_secs += t0.elapsed().as_secs_f64();
+        Ok(emb)
+    }
+}
+
+fn buffer_f32(client: &xla::PjRtClient, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("staging f32 buffer: {e:?}"))
+}
+
+fn buffer_i32(client: &xla::PjRtClient, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    client
+        .buffer_from_host_buffer(data, dims, None)
+        .map_err(|e| anyhow!("staging i32 buffer: {e:?}"))
+}

@@ -1,0 +1,242 @@
+//! `artifacts/manifest.json` loader — the contract between the build-time
+//! Python AOT pass and the Rust runtime. Validates the shared constants
+//! (vocab size, chunk geometry) so a drifted rebuild fails fast.
+
+use crate::util::json::Json;
+use crate::vocab;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug)]
+pub struct IoDecl {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub kind: String, // "score" | "embed"
+    pub file: PathBuf,
+    pub d: usize,
+    pub batch: usize,
+    pub chunk: usize,
+    pub weights: PathBuf,
+    pub inputs: Vec<IoDecl>,
+    pub outputs: Vec<IoDecl>,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightEntry {
+    pub file: PathBuf,
+    pub d: usize,
+    /// window position weights (the positional-acuity capability knob);
+    /// duplicated here from the weight file so the coordinator can build
+    /// query weight vectors without loading the full embedding table
+    pub wpos: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub qlen: usize,
+    pub window: usize,
+    pub batch: usize,
+    pub chunk: usize,
+    pub modules: Vec<ModuleSpec>,
+    pub weights: Vec<WeightEntry>,
+}
+
+fn io_decls(v: &Json) -> Result<Vec<IoDecl>> {
+    v.as_arr()
+        .context("expected array of io decls")?
+        .iter()
+        .map(|d| {
+            Ok(IoDecl {
+                name: d.get("name").and_then(Json::as_str).context("io name")?.to_string(),
+                shape: d
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("io shape")?
+                    .iter()
+                    .map(|x| x.as_f64().map(|f| f as usize).context("shape dim"))
+                    .collect::<Result<_>>()?,
+                dtype: d.get("dtype").and_then(Json::as_str).context("io dtype")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        if root.get("format").and_then(Json::as_str) != Some("minions-artifacts-v1") {
+            bail!("unknown manifest format");
+        }
+        let num = |k: &str| -> Result<usize> {
+            root.get(k)
+                .and_then(Json::as_f64)
+                .map(|f| f as usize)
+                .with_context(|| format!("manifest field {k}"))
+        };
+        let m = Manifest {
+            dir: dir.clone(),
+            vocab: num("vocab")?,
+            qlen: num("qlen")?,
+            window: num("window")?,
+            batch: num("batch")?,
+            chunk: num("chunk")?,
+            modules: root
+                .get("modules")
+                .and_then(Json::as_arr)
+                .context("modules")?
+                .iter()
+                .map(|j| {
+                    Ok(ModuleSpec {
+                        name: j.get("name").and_then(Json::as_str).context("name")?.into(),
+                        kind: j.get("kind").and_then(Json::as_str).context("kind")?.into(),
+                        file: dir.join(j.get("file").and_then(Json::as_str).context("file")?),
+                        d: j.get("d").and_then(Json::as_f64).context("d")? as usize,
+                        batch: j.get("batch").and_then(Json::as_f64).context("batch")? as usize,
+                        chunk: j.get("chunk").and_then(Json::as_f64).context("chunk")? as usize,
+                        weights: dir.join(j.get("weights").and_then(Json::as_str).context("weights")?),
+                        inputs: io_decls(j.get("inputs").context("inputs")?)?,
+                        outputs: io_decls(j.get("outputs").context("outputs")?)?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+            weights: root
+                .get("weights")
+                .and_then(Json::as_arr)
+                .context("weights")?
+                .iter()
+                .map(|j| {
+                    Ok(WeightEntry {
+                        file: dir.join(j.get("file").and_then(Json::as_str).context("w file")?),
+                        d: j.get("d").and_then(Json::as_f64).context("w d")? as usize,
+                        wpos: j
+                            .get("wpos")
+                            .and_then(Json::as_arr)
+                            .context("w wpos")?
+                            .iter()
+                            .map(|x| x.as_f64().map(|f| f as f32).context("wpos item"))
+                            .collect::<Result<_>>()?,
+                    })
+                })
+                .collect::<Result<_>>()?,
+        };
+
+        // Cross-language constant check (DESIGN.md: fail fast on drift).
+        if m.vocab != vocab::VOCAB
+            || m.qlen != vocab::QLEN
+            || m.window != vocab::WINDOW
+            || m.batch != vocab::BATCH
+            || m.chunk != vocab::CHUNK
+        {
+            bail!(
+                "manifest constants drifted from rust vocab module: \
+                 vocab={} qlen={} window={} batch={} chunk={}",
+                m.vocab,
+                m.qlen,
+                m.window,
+                m.batch,
+                m.chunk
+            );
+        }
+        Ok(m)
+    }
+
+    pub fn score_module(&self, d: usize) -> Result<&ModuleSpec> {
+        self.modules
+            .iter()
+            .find(|m| m.kind == "score" && m.d == d)
+            .with_context(|| format!("no score module with d={d} in manifest"))
+    }
+
+    pub fn embed_module(&self) -> Result<&ModuleSpec> {
+        self.modules
+            .iter()
+            .find(|m| m.kind == "embed")
+            .context("no embed module in manifest")
+    }
+
+    /// Window position weights for capacity `d`.
+    pub fn wpos(&self, d: usize) -> Result<&[f32]> {
+        self.weights
+            .iter()
+            .find(|w| w.d == d)
+            .map(|w| w.wpos.as_slice())
+            .with_context(|| format!("no weight entry with d={d}"))
+    }
+
+    pub fn capacities(&self) -> Vec<usize> {
+        let mut ds: Vec<usize> = self
+            .modules
+            .iter()
+            .filter(|m| m.kind == "score")
+            .map(|m| m.d)
+            .collect();
+        ds.sort();
+        ds.dedup();
+        ds
+    }
+}
+
+/// Default artifact dir: `$MINIONS_ARTIFACTS` or `<repo>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("MINIONS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Walk up from cwd looking for artifacts/manifest.json (works from
+    // target/, examples, and the repo root).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.modules.is_empty());
+        assert!(m.score_module(128).is_ok());
+        assert!(m.embed_module().is_ok());
+        let caps = m.capacities();
+        assert!(caps.contains(&64) && caps.contains(&1024));
+        for spec in &m.modules {
+            assert!(spec.file.exists(), "missing {}", spec.file.display());
+            assert!(spec.weights.exists());
+        }
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let tmp = std::env::temp_dir().join(format!("minions-test-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), r#"{"format":"nope"}"#).unwrap();
+        assert!(Manifest::load(&tmp).is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,78 @@
+//! Runtime layer: PJRT artifact loading + execution (see DESIGN.md §3).
+//!
+//! `Backend` abstracts the scorer so the coordinator can run against the
+//! real PJRT engine (production path) or the pure-Rust native oracle
+//! (fast tests, cross-checks).
+
+pub mod engine;
+pub mod manifest;
+pub mod native;
+pub mod weights;
+
+pub use engine::{EmbedRequest, Engine, EngineStats, ScoreRequest, ScoreResponse};
+pub use manifest::{default_artifact_dir, Manifest, ModuleSpec};
+pub use native::NativeBackend;
+pub use weights::{Tensor, WeightFile};
+
+use anyhow::Result;
+use std::sync::Mutex;
+
+/// The scoring/embedding backend interface the coordinator programs to.
+pub trait Backend: Send + Sync {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse>;
+    fn embed(&self, req: EmbedRequest) -> Result<Vec<f32>>;
+    fn name(&self) -> &'static str;
+}
+
+/// PJRT-backed production backend. `mpsc::Sender` is `!Sync`, so the
+/// handle is wrapped in a mutex; actual execution happens on the engine
+/// thread (requests are serialized there anyway — one CPU device).
+pub struct PjrtBackend {
+    engine: Mutex<Engine>,
+}
+
+impl PjrtBackend {
+    pub fn new(engine: Engine) -> Self {
+        PjrtBackend {
+            engine: Mutex::new(engine),
+        }
+    }
+
+    pub fn start(manifest: Manifest, precompile: &[usize]) -> Result<Self> {
+        Ok(Self::new(Engine::start(manifest, precompile)?))
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.engine.lock().unwrap().stats()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        let engine = self.engine.lock().unwrap().clone();
+        engine.score(req)
+    }
+
+    fn embed(&self, req: EmbedRequest) -> Result<Vec<f32>> {
+        let engine = self.engine.lock().unwrap().clone();
+        engine.embed(req)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+impl Backend for NativeBackend {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        NativeBackend::score(self, &req)
+    }
+
+    fn embed(&self, req: EmbedRequest) -> Result<Vec<f32>> {
+        NativeBackend::embed(self, &req)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}

@@ -1,0 +1,181 @@
+//! MNW1 weight-file reader (format written by `python/compile/weights.py`).
+//!
+//! ```text
+//! magic   b"MNW1"
+//! u32     n_tensors
+//! per tensor:
+//!     u16     name_len, name utf-8 bytes
+//!     u8      dtype     (0 = f32)
+//!     u8      ndim
+//!     u64*    dims
+//!     f32*    row-major data (little-endian)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+pub struct WeightFile {
+    pub tensors: HashMap<String, Tensor>,
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated weight file at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+}
+
+impl WeightFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<WeightFile> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&buf).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<WeightFile> {
+        let mut c = Cursor { buf, pos: 0 };
+        if c.take(4)? != b"MNW1" {
+            bail!("bad magic (expected MNW1)");
+        }
+        let n = c.u32()? as usize;
+        let mut tensors = HashMap::with_capacity(n);
+        for _ in 0..n {
+            let name_len = c.u16()? as usize;
+            let name = std::str::from_utf8(c.take(name_len)?)
+                .context("tensor name not utf-8")?
+                .to_string();
+            let dtype = c.u8()?;
+            if dtype != 0 {
+                bail!("unsupported dtype {dtype} for tensor '{name}'");
+            }
+            let ndim = c.u8()? as usize;
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(c.u64()? as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let raw = c.take(numel * 4)?;
+            let mut data = Vec::with_capacity(numel);
+            for chunk in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            tensors.insert(name, Tensor { dims, data });
+        }
+        if c.pos != buf.len() {
+            bail!("{} trailing bytes after last tensor", buf.len() - c.pos);
+        }
+        Ok(WeightFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("weight tensor '{name}' missing"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_file() -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(b"MNW1");
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        // tensor "a": [2, 3]
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.extend_from_slice(b"a");
+        buf.push(0); // dtype f32
+        buf.push(2); // ndim
+        buf.extend_from_slice(&2u64.to_le_bytes());
+        buf.extend_from_slice(&3u64.to_le_bytes());
+        for i in 0..6 {
+            buf.extend_from_slice(&(i as f32).to_le_bytes());
+        }
+        // tensor "wpos": [3]
+        buf.extend_from_slice(&4u16.to_le_bytes());
+        buf.extend_from_slice(b"wpos");
+        buf.push(0);
+        buf.push(1);
+        buf.extend_from_slice(&3u64.to_le_bytes());
+        for v in [0.5f32, 0.3, 0.2] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        buf
+    }
+
+    #[test]
+    fn parses_valid_file() {
+        let wf = WeightFile::parse(&sample_file()).unwrap();
+        let a = wf.get("a").unwrap();
+        assert_eq!(a.dims, vec![2, 3]);
+        assert_eq!(a.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let w = wf.get("wpos").unwrap();
+        assert_eq!(w.dims, vec![3]);
+        assert_eq!(w.numel(), 3);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = sample_file();
+        buf[0] = b'X';
+        assert!(WeightFile::parse(&buf).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let buf = sample_file();
+        assert!(WeightFile::parse(&buf[..buf.len() - 2]).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut buf = sample_file();
+        buf.push(0);
+        assert!(WeightFile::parse(&buf).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let wf = WeightFile::parse(&sample_file()).unwrap();
+        assert!(wf.get("nope").is_err());
+    }
+}

@@ -1,0 +1,276 @@
+//! Serving-side scheduling: a row-level dynamic batcher that coalesces
+//! concurrent scoring work into full PJRT dispatches (the vLLM-style
+//! continuous-batching idea, adapted to fixed-shape B=8 artifacts), plus
+//! dispatch statistics for the metrics endpoint.
+
+use crate::runtime::{Backend, ScoreRequest, ScoreResponse};
+use crate::vocab::{BATCH, CHUNK, QLEN};
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One row of scoring work (a single job's tensors).
+pub struct ScoreRow {
+    pub d: usize,
+    pub q_tokens: Vec<i32>,  // [QLEN]
+    pub q_weights: Vec<f32>, // [QLEN]
+    pub c_tokens: Vec<i32>,  // [CHUNK]
+    pub c_mask: Vec<f32>,    // [CHUNK]
+}
+
+pub struct RowResult {
+    pub scores: Vec<f32>,
+    pub lse: f32,
+}
+
+struct Pending {
+    row: ScoreRow,
+    reply: mpsc::Sender<Result<RowResult>>,
+}
+
+#[derive(Debug, Default)]
+pub struct BatcherStats {
+    pub dispatches: AtomicU64,
+    pub rows: AtomicU64,
+    pub padded_rows: AtomicU64,
+    pub flush_timeouts: AtomicU64,
+}
+
+impl BatcherStats {
+    /// Mean batch occupancy in [0,1] — the serving-efficiency headline.
+    pub fn occupancy(&self) -> f64 {
+        let d = self.dispatches.load(Ordering::Relaxed);
+        let r = self.rows.load(Ordering::Relaxed);
+        if d == 0 {
+            0.0
+        } else {
+            r as f64 / (d * BATCH as u64) as f64
+        }
+    }
+}
+
+/// Dynamic batcher: rows accumulate per capacity `d`; a batch flushes
+/// when full or when the oldest row exceeds `max_wait`.
+pub struct DynamicBatcher {
+    backend: Arc<dyn Backend>,
+    queue: Mutex<Vec<(usize, Vec<Pending>, Instant)>>, // (d, rows, oldest)
+    pub stats: BatcherStats,
+    max_wait: Duration,
+    shutdown: AtomicBool,
+}
+
+impl DynamicBatcher {
+    pub fn new(backend: Arc<dyn Backend>, max_wait: Duration) -> Arc<Self> {
+        let b = Arc::new(DynamicBatcher {
+            backend,
+            queue: Mutex::new(Vec::new()),
+            stats: BatcherStats::default(),
+            max_wait,
+            shutdown: AtomicBool::new(false),
+        });
+        // flush thread handles the timeout path
+        let bt = Arc::clone(&b);
+        std::thread::Builder::new()
+            .name("batch-flush".into())
+            .spawn(move || loop {
+                if bt.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                std::thread::sleep(bt.max_wait / 2);
+                bt.flush_expired();
+            })
+            .expect("spawn flush thread");
+        b
+    }
+
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        // drain whatever is queued
+        self.flush_all();
+    }
+
+    /// Submit one row; blocks until its batch executes.
+    pub fn score_row(&self, row: ScoreRow) -> Result<RowResult> {
+        let (tx, rx) = mpsc::channel();
+        let to_run = {
+            let mut q = self.queue.lock().unwrap();
+            let d = row.d;
+            let slot = q.iter_mut().find(|(qd, _, _)| *qd == d);
+            match slot {
+                Some((_, rows, _)) => rows.push(Pending { row, reply: tx }),
+                None => q.push((d, vec![Pending { row, reply: tx }], Instant::now())),
+            }
+            // flush-on-full
+            let mut to_run = None;
+            if let Some(pos) = q.iter().position(|(_, rows, _)| rows.len() >= BATCH) {
+                to_run = Some(q.swap_remove(pos));
+            }
+            to_run
+        };
+        if let Some((d, rows, _)) = to_run {
+            self.execute(d, rows);
+        }
+        rx.recv().map_err(|_| anyhow!("batcher dropped reply"))?
+    }
+
+    fn flush_expired(&self) {
+        let expired: Vec<(usize, Vec<Pending>, Instant)> = {
+            let mut q = self.queue.lock().unwrap();
+            let now = Instant::now();
+            let mut out = Vec::new();
+            let mut i = 0;
+            while i < q.len() {
+                if now.duration_since(q[i].2) >= self.max_wait {
+                    out.push(q.swap_remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            out
+        };
+        for (d, rows, _) in expired {
+            self.stats.flush_timeouts.fetch_add(1, Ordering::Relaxed);
+            self.execute(d, rows);
+        }
+    }
+
+    fn flush_all(&self) {
+        let all: Vec<(usize, Vec<Pending>, Instant)> =
+            std::mem::take(&mut *self.queue.lock().unwrap());
+        for (d, rows, _) in all {
+            self.execute(d, rows);
+        }
+    }
+
+    fn execute(&self, d: usize, rows: Vec<Pending>) {
+        debug_assert!(rows.len() <= BATCH);
+        let n = rows.len();
+        let mut req = ScoreRequest {
+            d,
+            q_tokens: vec![0i32; BATCH * QLEN],
+            q_weights: vec![0f32; BATCH * QLEN],
+            c_tokens: vec![0i32; BATCH * CHUNK],
+            c_mask: vec![0f32; BATCH * CHUNK],
+        };
+        for (b, p) in rows.iter().enumerate() {
+            req.q_tokens[b * QLEN..(b + 1) * QLEN].copy_from_slice(&p.row.q_tokens);
+            req.q_weights[b * QLEN..(b + 1) * QLEN].copy_from_slice(&p.row.q_weights);
+            req.c_tokens[b * CHUNK..(b + 1) * CHUNK].copy_from_slice(&p.row.c_tokens);
+            req.c_mask[b * CHUNK..(b + 1) * CHUNK].copy_from_slice(&p.row.c_mask);
+        }
+        self.stats.dispatches.fetch_add(1, Ordering::Relaxed);
+        self.stats.rows.fetch_add(n as u64, Ordering::Relaxed);
+        self.stats
+            .padded_rows
+            .fetch_add((BATCH - n) as u64, Ordering::Relaxed);
+        match self.backend.score(req) {
+            Ok(ScoreResponse { scores, lse }) => {
+                for (b, p) in rows.into_iter().enumerate() {
+                    let _ = p.reply.send(Ok(RowResult {
+                        scores: scores[b * CHUNK..(b + 1) * CHUNK].to_vec(),
+                        lse: lse[b],
+                    }));
+                }
+            }
+            Err(e) => {
+                for p in rows {
+                    let _ = p.reply.send(Err(anyhow!("batch failed: {e}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{EmbedRequest, ScoreRequest, ScoreResponse};
+
+    /// Backend stub: score = row index constant, lse = 1.
+    struct Echo;
+
+    impl Backend for Echo {
+        fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+            let mut scores = vec![0f32; BATCH * CHUNK];
+            for b in 0..BATCH {
+                let v = req.q_tokens[b * QLEN] as f32;
+                for s in &mut scores[b * CHUNK..(b + 1) * CHUNK] {
+                    *s = v;
+                }
+            }
+            Ok(ScoreResponse {
+                scores,
+                lse: vec![1.0; BATCH],
+            })
+        }
+
+        fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
+            unimplemented!()
+        }
+
+        fn name(&self) -> &'static str {
+            "echo"
+        }
+    }
+
+    fn row(tag: i32) -> ScoreRow {
+        ScoreRow {
+            d: 128,
+            q_tokens: {
+                let mut v = vec![0i32; QLEN];
+                v[0] = tag;
+                v
+            },
+            q_weights: vec![0f32; QLEN],
+            c_tokens: vec![0i32; CHUNK],
+            c_mask: vec![1f32; CHUNK],
+        }
+    }
+
+    #[test]
+    fn full_batch_flushes_immediately() {
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_secs(5));
+        let handles: Vec<_> = (0..BATCH as i32)
+            .map(|i| {
+                let b = Arc::clone(&b);
+                std::thread::spawn(move || b.score_row(row(i)).unwrap())
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.join().unwrap();
+            assert_eq!(r.scores[0], i as f32);
+        }
+        assert_eq!(b.stats.dispatches.load(Ordering::Relaxed), 1);
+        assert!((b.stats.occupancy() - 1.0).abs() < 1e-9);
+        b.stop();
+    }
+
+    #[test]
+    fn timeout_flushes_partial_batch() {
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_millis(30));
+        let r = b.score_row(row(7)).unwrap();
+        assert_eq!(r.scores[0], 7.0);
+        assert_eq!(b.stats.rows.load(Ordering::Relaxed), 1);
+        assert_eq!(b.stats.padded_rows.load(Ordering::Relaxed), (BATCH - 1) as u64);
+        b.stop();
+    }
+
+    #[test]
+    fn rows_with_different_capacity_do_not_mix() {
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_millis(20));
+        let b1 = Arc::clone(&b);
+        let h1 = std::thread::spawn(move || b1.score_row(row(1)).unwrap());
+        let b2 = Arc::clone(&b);
+        let h2 = std::thread::spawn(move || {
+            let mut r = row(2);
+            r.d = 64;
+            b2.score_row(r).unwrap()
+        });
+        assert_eq!(h1.join().unwrap().scores[0], 1.0);
+        assert_eq!(h2.join().unwrap().scores[0], 2.0);
+        // two dispatches (different d queues)
+        assert_eq!(b.stats.dispatches.load(Ordering::Relaxed), 2);
+        b.stop();
+    }
+}

@@ -1,0 +1,373 @@
+//! HTTP serving front-end (std::net + thread pool; tokio is unavailable
+//! offline — see DESIGN.md §1).
+//!
+//! Endpoints:
+//! - `POST /v1/query`  body: `{"dataset":"finance","sample":3,
+//!   "protocol":"minions"}` → runs the protocol on the preloaded sample
+//!   and returns answer/score/cost/latency.
+//! - `GET  /healthz`   liveness
+//! - `GET  /metrics`   counters (requests, accuracy-so-far, token totals)
+//!
+//! The serving path is entirely Rust + PJRT: no Python anywhere.
+
+use crate::cost::CostModel;
+use crate::data::Dataset;
+use crate::eval::score_strict;
+use crate::protocol::Protocol;
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub correct: AtomicU64,
+    pub remote_prefill: AtomicU64,
+    pub remote_decode: AtomicU64,
+    pub latency_us_total: AtomicU64,
+}
+
+pub struct ServerState {
+    pub datasets: HashMap<String, Dataset>,
+    pub protocols: HashMap<String, Arc<dyn Protocol>>,
+    pub metrics: Metrics,
+    pub seed: u64,
+}
+
+pub struct Server {
+    state: Arc<ServerState>,
+    pool: Pool,
+    listener: TcpListener,
+    pub addr: std::net::SocketAddr,
+}
+
+impl Server {
+    pub fn bind(state: Arc<ServerState>, addr: &str, workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            state,
+            pool: Pool::new(workers, workers * 4),
+            listener,
+            addr,
+        })
+    }
+
+    /// Serve until `max_requests` have been handled (None = forever).
+    pub fn serve(&self, max_requests: Option<u64>) -> Result<()> {
+        let served = Arc::new(AtomicU64::new(0));
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            let state = Arc::clone(&self.state);
+            let served2 = Arc::clone(&served);
+            self.pool.execute(move || {
+                let _ = handle_conn(stream, &state);
+                served2.fetch_add(1, Ordering::SeqCst);
+            });
+            if let Some(max) = max_requests {
+                if served.load(Ordering::SeqCst) + 1 >= max {
+                    break;
+                }
+            }
+        }
+        self.pool.wait_idle();
+        Ok(())
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, state: &ServerState) -> Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    let req = read_request(&mut stream)?;
+    let resp = route(&req, state);
+    let (status, body) = match resp {
+        Ok(body) => ("200 OK", body),
+        Err(e) => {
+            state.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            (
+                "400 Bad Request",
+                Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
+            )
+        }
+    };
+    let out = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(out.as_bytes())?;
+    Ok(())
+}
+
+struct HttpRequest {
+    method: String,
+    path: String,
+    body: String,
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut buf = Vec::new();
+    let mut tmp = [0u8; 4096];
+    // read until end of headers
+    let header_end;
+    loop {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            return Err(anyhow!("connection closed mid-request"));
+        }
+        buf.extend_from_slice(&tmp[..n]);
+        if let Some(pos) = find_header_end(&buf) {
+            header_end = pos;
+            break;
+        }
+        if buf.len() > 1 << 20 {
+            return Err(anyhow!("headers too large"));
+        }
+    }
+    let head = std::str::from_utf8(&buf[..header_end])?.to_string();
+    let mut lines = head.lines();
+    let request_line = lines.next().ok_or_else(|| anyhow!("empty request"))?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body_bytes = buf[header_end + 4..].to_vec();
+    while body_bytes.len() < content_length {
+        let n = stream.read(&mut tmp)?;
+        if n == 0 {
+            break;
+        }
+        body_bytes.extend_from_slice(&tmp[..n]);
+    }
+    body_bytes.truncate(content_length);
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8(body_bytes)?,
+    })
+}
+
+fn find_header_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn route(req: &HttpRequest, state: &ServerState) -> Result<String> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Ok(Json::obj(vec![("status", Json::str("ok"))]).to_string()),
+        ("GET", "/metrics") => {
+            let m = &state.metrics;
+            let requests = m.requests.load(Ordering::Relaxed);
+            let mean_latency_ms = if requests == 0 {
+                0.0
+            } else {
+                m.latency_us_total.load(Ordering::Relaxed) as f64 / requests as f64 / 1000.0
+            };
+            Ok(Json::obj(vec![
+                ("requests", Json::num(requests as f64)),
+                ("errors", Json::num(m.errors.load(Ordering::Relaxed) as f64)),
+                ("correct", Json::num(m.correct.load(Ordering::Relaxed) as f64)),
+                (
+                    "remote_prefill_tokens",
+                    Json::num(m.remote_prefill.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "remote_decode_tokens",
+                    Json::num(m.remote_decode.load(Ordering::Relaxed) as f64),
+                ),
+                ("mean_latency_ms", Json::num(mean_latency_ms)),
+            ])
+            .to_string())
+        }
+        ("POST", "/v1/query") => {
+            let body = Json::parse(&req.body).map_err(|e| anyhow!("bad json: {e}"))?;
+            let dataset = body
+                .get("dataset")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing 'dataset'"))?;
+            let sample_id = body
+                .get("sample")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("missing 'sample'"))? as usize;
+            let protocol = body
+                .get("protocol")
+                .and_then(Json::as_str)
+                .unwrap_or("minions");
+            let ds = state
+                .datasets
+                .get(dataset)
+                .ok_or_else(|| anyhow!("unknown dataset '{dataset}'"))?;
+            let sample = ds
+                .samples
+                .get(sample_id)
+                .ok_or_else(|| anyhow!("sample {sample_id} out of range"))?;
+            let proto = state
+                .protocols
+                .get(protocol)
+                .ok_or_else(|| anyhow!("unknown protocol '{protocol}'"))?;
+
+            let t0 = Instant::now();
+            let mut rng = Rng::seed_from(state.seed ^ sample_id as u64);
+            let outcome = proto.run(sample, &mut rng)?;
+            let latency = t0.elapsed();
+            let s = score_strict(&outcome.answer, &sample.query.answer);
+
+            let m = &state.metrics;
+            m.requests.fetch_add(1, Ordering::Relaxed);
+            m.correct.fetch_add(s as u64, Ordering::Relaxed);
+            m.remote_prefill
+                .fetch_add(outcome.ledger.remote_prefill, Ordering::Relaxed);
+            m.remote_decode
+                .fetch_add(outcome.ledger.remote_decode, Ordering::Relaxed);
+            m.latency_us_total
+                .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+
+            Ok(Json::obj(vec![
+                ("protocol", Json::str(proto.name())),
+                ("correct", Json::Bool(s >= 0.999)),
+                ("rounds", Json::num(outcome.rounds as f64)),
+                (
+                    "usd",
+                    Json::num(CostModel::GPT4O_JAN2025.usd(&outcome.ledger)),
+                ),
+                (
+                    "remote_prefill",
+                    Json::num(outcome.ledger.remote_prefill as f64),
+                ),
+                (
+                    "remote_decode",
+                    Json::num(outcome.ledger.remote_decode as f64),
+                ),
+                ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
+            ])
+            .to_string())
+        }
+        _ => Err(anyhow!("no route for {} {}", req.method, req.path)),
+    }
+}
+
+/// Minimal blocking HTTP client for the examples/tests.
+pub fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: minions\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let body = resp
+        .split("\r\n\r\n")
+        .nth(1)
+        .ok_or_else(|| anyhow!("malformed response"))?;
+    Ok(body.to_string())
+}
+
+pub fn http_get(addr: &str, path: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req =
+        format!("GET {path} HTTP/1.1\r\nHost: minions\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    let body = resp
+        .split("\r\n\r\n")
+        .nth(1)
+        .ok_or_else(|| anyhow!("malformed response"))?;
+    Ok(body.to_string())
+}
+
+/// Guard for tests: state with a stub protocol.
+pub fn state_with(
+    datasets: HashMap<String, Dataset>,
+    protocols: HashMap<String, Arc<dyn Protocol>>,
+    seed: u64,
+) -> Arc<ServerState> {
+    Arc::new(ServerState {
+        datasets,
+        protocols,
+        metrics: Metrics::default(),
+        seed,
+    })
+}
+
+// Mutex import kept for future session state; silence if unused.
+#[allow(unused)]
+fn _touch(_: &Mutex<()>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Ledger;
+    use crate::data::Sample;
+    use crate::protocol::Outcome;
+
+    struct Always42;
+
+    impl Protocol for Always42 {
+        fn name(&self) -> String {
+            "always42".into()
+        }
+
+        fn run(&self, sample: &Sample, _rng: &mut Rng) -> Result<Outcome> {
+            let mut ledger = Ledger::default();
+            ledger.remote_msg(100, 10);
+            Ok(Outcome {
+                answer: sample.query.answer.clone(),
+                ledger,
+                rounds: 1,
+                transcript: vec![],
+            })
+        }
+    }
+
+    fn spawn_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let ds = crate::data::micro::multistep_sweep(1, 3, 5);
+        let mut datasets = HashMap::new();
+        datasets.insert("micro".to_string(), ds);
+        let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+        protocols.insert("always42".to_string(), Arc::new(Always42));
+        let state = state_with(datasets, protocols, 7);
+        let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+        let addr = server.addr;
+        let h = std::thread::spawn(move || {
+            server.serve(Some(3)).unwrap();
+        });
+        (addr, h)
+    }
+
+    #[test]
+    fn healthz_metrics_and_query() {
+        let (addr, h) = spawn_server();
+        let addr = addr.to_string();
+        let health = http_get(&addr, "/healthz").unwrap();
+        assert!(health.contains("ok"));
+
+        let resp = http_post(
+            &addr,
+            "/v1/query",
+            r#"{"dataset":"micro","sample":0,"protocol":"always42"}"#,
+        )
+        .unwrap();
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("correct").unwrap().as_bool(), Some(true));
+        assert!(j.get("usd").unwrap().as_f64().unwrap() > 0.0);
+
+        let metrics = http_get(&addr, "/metrics").unwrap();
+        let m = Json::parse(&metrics).unwrap();
+        assert_eq!(m.get("requests").unwrap().as_u64(), Some(1));
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,202 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands. Each binary declares its options and gets `--help` for
+//! free.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub specs: Vec<ArgSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli {
+            name,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOPTIONS:\n", self.name, self.about);
+        for spec in &self.specs {
+            let val = if spec.takes_value { " <value>" } else { "" };
+            let def = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{val}\t{}{def}\n", spec.name, spec.help));
+        }
+        s
+    }
+
+    /// Parse from an iterator of arg strings (not including argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if key == "help" {
+                    return Err(self.usage());
+                }
+                if key == "bench" && inline_val.is_none() {
+                    continue; // cargo bench passes --bench to the binary
+                }
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    };
+                    args.values.insert(key, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} does not take a value"));
+                    }
+                    args.flags.push(key);
+                }
+            } else {
+                args.positional.push(arg);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "test cli")
+            .opt("dataset", "dataset name", Some("finance"))
+            .opt("rounds", "max rounds", Some("2"))
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Args {
+        cli()
+            .parse_from(args.iter().map(|s| s.to_string()))
+            .unwrap()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get("dataset"), Some("finance"));
+        assert_eq!(a.parse_num("rounds", 0usize), 2);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = parse(&["--dataset", "health", "--rounds=5", "--verbose"]);
+        assert_eq!(a.get("dataset"), Some("health"));
+        assert_eq!(a.parse_num("rounds", 0usize), 5);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = parse(&["serve", "--verbose", "extra"]);
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli()
+            .parse_from(vec!["--nope".to_string()])
+            .is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli()
+            .parse_from(vec!["--dataset".to_string()])
+            .is_err());
+    }
+}

@@ -1,0 +1,255 @@
+//! TOML-subset configuration parser (the `toml` crate is unavailable
+//! offline). Supports the subset the launcher's config files use:
+//! `[section]` and `[section.sub]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments.
+//!
+//! Parsed into the same `Json` value model the rest of the stack uses, so
+//! configs and protocol messages share one accessor API.
+
+use super::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn parse_value(raw: &str, line: usize) -> Result<Json, ConfigError> {
+    let raw = raw.trim();
+    let err = |msg: &str| ConfigError {
+        line,
+        msg: msg.to_string(),
+    };
+    if raw.is_empty() {
+        return Err(err("empty value"));
+    }
+    if let Some(inner) = raw.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or_else(|| err("unterminated string"))?;
+        return Ok(Json::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if raw == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = raw.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| err("unterminated array"))?;
+        let mut out = Vec::new();
+        if !inner.trim().is_empty() {
+            // flat arrays only: split on commas outside quotes
+            let mut depth_quote = false;
+            let mut cur = String::new();
+            for c in inner.chars() {
+                match c {
+                    '"' => {
+                        depth_quote = !depth_quote;
+                        cur.push(c);
+                    }
+                    ',' if !depth_quote => {
+                        out.push(parse_value(&cur, line)?);
+                        cur.clear();
+                    }
+                    _ => cur.push(c),
+                }
+            }
+            if !cur.trim().is_empty() {
+                out.push(parse_value(&cur, line)?);
+            }
+        }
+        return Ok(Json::Arr(out));
+    }
+    raw.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| err(&format!("cannot parse value: {raw}")))
+}
+
+/// Parse TOML-subset text into a nested Json::Obj.
+pub fn parse_toml(text: &str) -> Result<Json, ConfigError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section_path: Vec<String> = Vec::new();
+
+    for (i, raw_line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = match raw_line.find('#') {
+            // `#` inside quotes is rare in our configs; handle the common case
+            Some(idx) if !raw_line[..idx].contains('"') => &raw_line[..idx],
+            _ => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let inner = inner.strip_suffix(']').ok_or(ConfigError {
+                line: line_no,
+                msg: "unterminated section header".into(),
+            })?;
+            section_path = inner.split('.').map(|s| s.trim().to_string()).collect();
+            // ensure the section object exists
+            ensure_path(&mut root, &section_path, line_no)?;
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or(ConfigError {
+            line: line_no,
+            msg: "expected key = value".into(),
+        })?;
+        let key = key.trim().to_string();
+        let val = parse_value(value, line_no)?;
+        let target = navigate(&mut root, &section_path, line_no)?;
+        target.insert(key, val);
+    }
+    Ok(Json::Obj(root))
+}
+
+fn ensure_path(
+    root: &mut BTreeMap<String, Json>,
+    path: &[String],
+    line: usize,
+) -> Result<(), ConfigError> {
+    navigate(root, path, line).map(|_| ())
+}
+
+fn navigate<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, Json>, ConfigError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => {
+                return Err(ConfigError {
+                    line,
+                    msg: format!("section '{part}' conflicts with a value"),
+                })
+            }
+        };
+    }
+    Ok(cur)
+}
+
+/// Load a config file; `overrides` are `key.path=value` strings from the CLI.
+pub fn load_config(path: &str, overrides: &[String]) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+    let mut cfg = parse_toml(&text).map_err(|e| e.to_string())?;
+    for ov in overrides {
+        let (key, value) = ov
+            .split_once('=')
+            .ok_or_else(|| format!("override must be key.path=value: {ov}"))?;
+        let val = parse_value(value, 0).map_err(|e| e.to_string())?;
+        let path: Vec<String> = key.split('.').map(|s| s.to_string()).collect();
+        let Json::Obj(ref mut root) = cfg else {
+            unreachable!()
+        };
+        let (last, parents) = path.split_last().unwrap();
+        let target = navigate(root, parents, 0).map_err(|e| e.to_string())?;
+        target.insert(last.clone(), val);
+    }
+    Ok(cfg)
+}
+
+/// Typed accessor helpers over a Json config.
+pub trait ConfigExt {
+    fn lookup(&self, dotted: &str) -> Option<&Json>;
+    fn num_or(&self, dotted: &str, default: f64) -> f64;
+    fn str_or<'a>(&'a self, dotted: &str, default: &'a str) -> &'a str;
+    fn bool_or(&self, dotted: &str, default: bool) -> bool;
+}
+
+impl ConfigExt for Json {
+    fn lookup(&self, dotted: &str) -> Option<&Json> {
+        let mut cur = self;
+        for part in dotted.split('.') {
+            cur = cur.get(part)?;
+        }
+        Some(cur)
+    }
+
+    fn num_or(&self, dotted: &str, default: f64) -> f64 {
+        self.lookup(dotted).and_then(Json::as_f64).unwrap_or(default)
+    }
+
+    fn str_or<'a>(&'a self, dotted: &str, default: &'a str) -> &'a str {
+        self.lookup(dotted).and_then(Json::as_str).unwrap_or(default)
+    }
+
+    fn bool_or(&self, dotted: &str, default: bool) -> bool {
+        self.lookup(dotted).and_then(Json::as_bool).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Minions experiment config
+name = "table1"
+seed = 42
+
+[protocol]
+kind = "minions"
+max_rounds = 3
+scratchpad = true
+
+[protocol.jobs]
+tasks_per_round = 4
+samples = [1, 2, 4]
+
+[local]
+model = "local-8b"
+temperature = 0.2
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = parse_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.str_or("name", ""), "table1");
+        assert_eq!(cfg.num_or("seed", 0.0), 42.0);
+        assert_eq!(cfg.str_or("protocol.kind", ""), "minions");
+        assert_eq!(cfg.num_or("protocol.max_rounds", 0.0), 3.0);
+        assert!(cfg.bool_or("protocol.scratchpad", false));
+        assert_eq!(cfg.num_or("protocol.jobs.tasks_per_round", 0.0), 4.0);
+        let samples = cfg.lookup("protocol.jobs.samples").unwrap().as_arr().unwrap();
+        assert_eq!(samples.len(), 3);
+        assert_eq!(cfg.num_or("local.temperature", 0.0), 0.2);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let cfg = parse_toml("# only a comment\n\nx = 1 # trailing\n").unwrap();
+        assert_eq!(cfg.num_or("x", 0.0), 1.0);
+    }
+
+    #[test]
+    fn string_with_hash_preserved() {
+        let cfg = parse_toml("s = \"a#b\"\n").unwrap();
+        assert_eq!(cfg.str_or("s", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = parse_toml("x = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn lookup_missing_returns_default() {
+        let cfg = parse_toml("x = 1\n").unwrap();
+        assert_eq!(cfg.num_or("does.not.exist", 7.0), 7.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! From-scratch utility substrates (no serde/tokio/clap/criterion offline;
+//! see DESIGN.md §1, "Offline-dependency substitutions").
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;

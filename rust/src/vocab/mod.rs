@@ -1,0 +1,150 @@
+//! The synthetic token space shared with the build-time Python side.
+//!
+//! Constants here mirror `python/compile/common.py` and are validated
+//! against `artifacts/manifest.json` when the runtime loads (a drifted
+//! rebuild fails fast instead of silently mis-scoring).
+
+pub type Token = u32;
+
+pub const VOCAB: usize = 8192;
+pub const PAD: Token = 0;
+
+/// Reserved marker ids (1..=15).
+pub const BOS: Token = 1;
+pub const EOS: Token = 2;
+pub const SEP: Token = 3;
+
+/// Key-component tokens: entities, metrics, periods.
+pub const KEY_BASE: Token = 16;
+pub const KEY_END: Token = 4096; // exclusive
+
+/// Value + filler tokens.
+pub const VAL_BASE: Token = 4096;
+pub const VAL_END: Token = 8192; // exclusive
+
+pub const KEY_LEN: usize = 3;
+pub const WINDOW: usize = 3;
+pub const CHUNK: usize = 512;
+pub const BATCH: usize = 8;
+pub const QLEN: usize = 16;
+/// Facts are planted at FACT_SLOT-aligned offsets so they never overlap.
+pub const FACT_SLOT: usize = 8;
+
+pub fn is_key_token(t: Token) -> bool {
+    (KEY_BASE..KEY_END).contains(&t)
+}
+
+pub fn is_value_token(t: Token) -> bool {
+    (VAL_BASE..VAL_END).contains(&t)
+}
+
+/// A 3-token fact key: (entity, attribute, period) — e.g. in the finance
+/// dataset ("AMD", "total revenue", "FY2015").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Key(pub [Token; KEY_LEN]);
+
+impl Key {
+    pub fn tokens(&self) -> &[Token; KEY_LEN] {
+        &self.0
+    }
+
+    /// Number of shared component tokens with another key (order-blind).
+    pub fn overlap(&self, other: &Key) -> usize {
+        self.0.iter().filter(|t| other.0.contains(t)).count()
+    }
+
+    pub fn is_permutation_of(&self, other: &Key) -> bool {
+        self != other && self.overlap(other) == KEY_LEN && {
+            let mut a = self.0;
+            let mut b = other.0;
+            a.sort();
+            b.sort();
+            a == b
+        }
+    }
+}
+
+/// A planted fact: key -> value at a slot-aligned position within a chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fact {
+    pub key: Key,
+    pub value: Token,
+}
+
+impl Fact {
+    /// Token footprint `[k1 k2 k3 v]`.
+    pub fn encode(&self) -> [Token; KEY_LEN + 1] {
+        let [k1, k2, k3] = self.key.0;
+        [k1, k2, k3, self.value]
+    }
+}
+
+/// Render a human-readable surface form (for logs / citations). Tokens are
+/// synthetic, so the surface form is a stable hex-ish naming.
+pub fn render_token(t: Token) -> String {
+    if t == PAD {
+        "<pad>".into()
+    } else if t < KEY_BASE {
+        format!("<m{t}>")
+    } else if is_key_token(t) {
+        format!("k{t:04}")
+    } else {
+        format!("v{t:04}")
+    }
+}
+
+pub fn render_key(k: &Key) -> String {
+    k.0.iter().map(|t| render_token(*t)).collect::<Vec<_>>().join("·")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_partition_vocab() {
+        assert!(KEY_END as usize <= VAL_BASE as usize);
+        assert_eq!(VAL_END as usize, VOCAB);
+        assert!(!is_key_token(PAD) && !is_value_token(PAD));
+        assert!(is_key_token(KEY_BASE) && !is_key_token(KEY_END));
+        assert!(is_value_token(VAL_BASE) && !is_value_token(VAL_END - 0));
+    }
+
+    #[test]
+    fn key_overlap_counts() {
+        let a = Key([100, 200, 300]);
+        assert_eq!(a.overlap(&Key([100, 200, 300])), 3);
+        assert_eq!(a.overlap(&Key([100, 200, 999])), 2);
+        assert_eq!(a.overlap(&Key([998, 997, 999])), 0);
+    }
+
+    #[test]
+    fn permutation_detection() {
+        let a = Key([100, 200, 300]);
+        assert!(a.is_permutation_of(&Key([300, 100, 200])));
+        assert!(!a.is_permutation_of(&a.clone()));
+        assert!(!a.is_permutation_of(&Key([100, 200, 999])));
+    }
+
+    #[test]
+    fn fact_encoding_layout() {
+        let f = Fact {
+            key: Key([10, 20, 30]),
+            value: 5000,
+        };
+        assert_eq!(f.encode(), [10, 20, 30, 5000]);
+    }
+
+    #[test]
+    fn fact_fits_slot() {
+        assert!(KEY_LEN + 1 <= FACT_SLOT);
+        assert_eq!(CHUNK % FACT_SLOT, 0);
+    }
+
+    #[test]
+    fn render_is_stable() {
+        assert_eq!(render_token(PAD), "<pad>");
+        assert_eq!(render_token(17), "k0017");
+        assert_eq!(render_token(5000), "v5000");
+    }
+}

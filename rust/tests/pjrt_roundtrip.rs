@@ -1,0 +1,156 @@
+//! Integration: the AOT bridge end-to-end.
+//!
+//! Loads the HLO-text artifacts, compiles them on the PJRT CPU client, and
+//! asserts the outputs match the pure-Rust native oracle (same weights,
+//! same math, two implementations) and that planted facts are recovered.
+//!
+//! Requires `make artifacts` to have run (the Makefile test target does).
+
+use minions::runtime::{
+    default_artifact_dir, EmbedRequest, Engine, Manifest, NativeBackend, ScoreRequest,
+};
+use minions::util::rng::Rng;
+use minions::vocab::{BATCH, CHUNK, FACT_SLOT, KEY_LEN, QLEN, VAL_BASE, VAL_END};
+
+fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.json").exists()
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(default_artifact_dir()).expect("manifest loads")
+}
+
+/// Build a batched request with one planted fact per row.
+fn planted_request(d: usize, seed: u64) -> (ScoreRequest, Vec<usize>, Vec<u32>) {
+    let mut rng = Rng::seed_from(seed);
+    let mut q_tokens = vec![0i32; BATCH * QLEN];
+    let mut q_weights = vec![0f32; BATCH * QLEN];
+    let mut c_tokens = vec![0i32; BATCH * CHUNK];
+    let c_mask = vec![1f32; BATCH * CHUNK];
+
+    // wpos from the weight file (the same weights the module will use)
+    let m = manifest();
+    let spec = m.score_module(d).unwrap();
+    let wf = minions::runtime::WeightFile::load(&spec.weights).unwrap();
+    let wpos = &wf.get("wpos").unwrap().data;
+
+    let mut positions = Vec::new();
+    let mut values = Vec::new();
+    for b in 0..BATCH {
+        let key: Vec<u32> = (0..KEY_LEN)
+            .map(|_| rng.range(16, 4096) as u32)
+            .collect();
+        let val = rng.range(VAL_BASE as usize, VAL_END as usize) as u32;
+        // filler
+        for c in 0..CHUNK {
+            c_tokens[b * CHUNK + c] = rng.range(VAL_BASE as usize, VAL_END as usize) as i32;
+        }
+        let slot = rng.range(0, CHUNK / FACT_SLOT - 1);
+        let pos = slot * FACT_SLOT;
+        for (i, k) in key.iter().enumerate() {
+            c_tokens[b * CHUNK + pos + i] = *k as i32;
+        }
+        c_tokens[b * CHUNK + pos + KEY_LEN] = val as i32;
+        for (i, k) in key.iter().enumerate() {
+            q_tokens[b * QLEN + i] = *k as i32;
+            q_weights[b * QLEN + i] = wpos[i];
+        }
+        positions.push(pos);
+        values.push(val);
+    }
+    (
+        ScoreRequest {
+            d,
+            q_tokens,
+            q_weights,
+            c_tokens,
+            c_mask,
+        },
+        positions,
+        values,
+    )
+}
+
+#[test]
+fn pjrt_matches_native_oracle_and_recovers_facts() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::start(manifest(), &[]).expect("engine starts");
+    let native = NativeBackend::new(manifest()).unwrap();
+
+    for d in [64usize, 128] {
+        let (req, positions, _vals) = planted_request(d, 42 + d as u64);
+        let got = engine.score(req.clone()).expect("pjrt score");
+        let want = native.score(&req).expect("native score");
+
+        assert_eq!(got.scores.len(), BATCH * CHUNK);
+        let mut max_err = 0f32;
+        for (g, w) in got.scores.iter().zip(&want.scores) {
+            // NEG_INF entries compare exactly; others to float tolerance
+            if *w < -1e29 {
+                assert!(*g < -1e29);
+            } else {
+                max_err = max_err.max((g - w).abs());
+            }
+        }
+        assert!(max_err < 1e-4, "d={d} score divergence {max_err}");
+        for (g, w) in got.lse.iter().zip(&want.lse) {
+            assert!((g - w).abs() < 1e-3, "lse divergence {g} vs {w}");
+        }
+
+        // argmax recovers the planted fact (no distractors here)
+        for b in 0..BATCH {
+            let row = &got.scores[b * CHUNK..(b + 1) * CHUNK];
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            assert_eq!(argmax, positions[b], "d={d} row {b}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_embed_matches_native() {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::start(manifest(), &[]).expect("engine starts");
+    let native = NativeBackend::new(manifest()).unwrap();
+    let mut rng = Rng::seed_from(7);
+    let c_tokens: Vec<i32> = (0..BATCH * CHUNK)
+        .map(|_| rng.range(16, 8192) as i32)
+        .collect();
+    let mut c_mask = vec![1f32; BATCH * CHUNK];
+    // one row half-masked
+    for c in CHUNK / 2..CHUNK {
+        c_mask[3 * CHUNK + c] = 0.0;
+    }
+    let req = EmbedRequest { c_tokens, c_mask };
+    let got = engine.embed(req.clone()).unwrap();
+    let want = native.embed(&req).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn engine_stats_accumulate() {
+    if !artifacts_available() {
+        return;
+    }
+    let engine = Engine::start(manifest(), &[]).unwrap();
+    let (req, _, _) = planted_request(64, 1);
+    engine.score(req.clone()).unwrap();
+    engine.score(req).unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.dispatches, 2);
+    assert_eq!(stats.rows, 2 * BATCH as u64);
+    assert!(stats.exec_secs > 0.0);
+}

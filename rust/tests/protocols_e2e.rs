@@ -1,0 +1,109 @@
+//! End-to-end protocol integration on the native backend: the full
+//! decompose→execute→aggregate loop over generated datasets, asserting
+//! the paper's *ordering* properties (remote-only ≥ minions ≥ minion ≥
+//! local-only on accuracy; reversed on remote cost).
+
+use minions::data;
+use minions::eval::run_protocol;
+use minions::model::{local, remote, LocalLm, RemoteLm};
+use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, RemoteOnly};
+use minions::runtime::{default_artifact_dir, Backend, Manifest, NativeBackend};
+use std::sync::Arc;
+
+fn setup() -> Option<(Arc<dyn Backend>, Manifest)> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new(manifest.clone()).unwrap());
+    Some((backend, manifest))
+}
+
+#[test]
+fn minions_beats_local_and_costs_less_than_remote() {
+    let Some((backend, manifest)) = setup() else {
+        return;
+    };
+    let local = Arc::new(LocalLm::new(backend.clone(), &manifest, local::LLAMA_8B).unwrap());
+    let remote = Arc::new(RemoteLm::new(backend.clone(), &manifest, remote::GPT_4O).unwrap());
+
+    let ds = data::generate("finance", 12, 99);
+    let r_remote = run_protocol(&RemoteOnly::new(remote.clone()), &ds, 1, true).unwrap();
+    let r_local = run_protocol(&LocalOnly::new(local.clone()), &ds, 1, true).unwrap();
+    let r_minions = run_protocol(
+        &MinionS::new(local.clone(), remote.clone(), MinionsConfig::default()),
+        &ds,
+        1,
+        true,
+    )
+    .unwrap();
+
+    eprintln!(
+        "remote={:.2}/${:.4} local={:.2} minions={:.2}/${:.4}",
+        r_remote.accuracy,
+        r_remote.mean_usd(),
+        r_local.accuracy,
+        r_minions.accuracy,
+        r_minions.mean_usd()
+    );
+    // ordering properties (the paper's headline shape)
+    assert!(r_remote.accuracy >= r_minions.accuracy - 0.15);
+    assert!(r_minions.accuracy > r_local.accuracy + 0.1);
+    assert!(r_minions.mean_usd() < 0.5 * r_remote.mean_usd());
+    assert!(r_local.mean_usd() == 0.0);
+}
+
+#[test]
+fn minion_chat_is_cheapest_but_weaker_than_minions() {
+    let Some((backend, manifest)) = setup() else {
+        return;
+    };
+    let local = Arc::new(LocalLm::new(backend.clone(), &manifest, local::LLAMA_8B).unwrap());
+    let remote = Arc::new(RemoteLm::new(backend.clone(), &manifest, remote::GPT_4O).unwrap());
+
+    let ds = data::generate("health", 12, 7);
+    let r_minion = run_protocol(&Minion::new(local.clone(), remote.clone(), 3), &ds, 2, true).unwrap();
+    let r_minions = run_protocol(
+        &MinionS::new(local.clone(), remote.clone(), MinionsConfig::default()),
+        &ds,
+        2,
+        true,
+    )
+    .unwrap();
+    eprintln!(
+        "minion={:.2}/${:.5} minions={:.2}/${:.5}",
+        r_minion.accuracy,
+        r_minion.mean_usd(),
+        r_minions.accuracy,
+        r_minions.mean_usd()
+    );
+    assert!(r_minion.mean_usd() < r_minions.mean_usd());
+    assert!(r_minions.accuracy >= r_minion.accuracy);
+}
+
+#[test]
+fn capacity_ladder_orders_accuracy() {
+    let Some((backend, manifest)) = setup() else {
+        return;
+    };
+    let remote = Arc::new(RemoteLm::new(backend.clone(), &manifest, remote::GPT_4O).unwrap());
+    let ds = data::generate("qasper", 12, 3);
+    let mut accs = Vec::new();
+    for profile in [local::LLAMA_1B, local::LLAMA_3B, local::LLAMA_8B] {
+        let local = Arc::new(LocalLm::new(backend.clone(), &manifest, profile).unwrap());
+        let r = run_protocol(
+            &MinionS::new(local, remote.clone(), MinionsConfig::default()),
+            &ds,
+            4,
+            true,
+        )
+        .unwrap();
+        eprintln!("{}: acc={:.2}", profile.name, r.accuracy);
+        accs.push(r.accuracy);
+    }
+    // monotone within slack (small n)
+    assert!(accs[2] >= accs[0] - 0.05, "8B {} vs 1B {}", accs[2], accs[0]);
+    assert!(accs[2] > 0.4, "8B should be decent: {}", accs[2]);
+}
