@@ -1,6 +1,10 @@
 //! Reproduces Figure 5 (parallel-workload knobs: tasks/round, samples,
 //! chunk granularity) and Figure 4 (capacity vs accuracy + communication
 //! efficiency / information-bottleneck view).
+//!
+//! `--parallel N` evaluates samples over N pool workers; tables are
+//! bit-identical to the serial run while concurrent samples coalesce in
+//! the shared batcher (the occupancy line below shows the effect).
 use minions::exp::Exp;
 use minions::util::cli::Cli;
 
@@ -8,12 +12,16 @@ fn main() {
     let cli = Cli::new("fig5_parallel", "Figures 4-5 reproduction")
         .opt("backend", "pjrt | native (equivalence asserted by tests)", Some("native"))
         .opt("n", "samples per point", Some("16"))
-        .opt("seed", "seed", Some("42"));
+        .opt("seed", "seed", Some("42"))
+        .parallel_opt();
     let a = cli.parse();
     let n = a.parse_num("n", 16);
     let mut exp = Exp::new(a.get_or("backend", "pjrt"), a.parse_num("seed", 42)).expect("startup");
+    exp.parallel = a.parse_num("parallel", 1usize).max(1);
     println!("== Figure 4: model-size series ==");
     println!("{}", exp.fig4(n).unwrap());
     println!("== Figure 5: parallel-workload knobs ==");
     println!("{}", exp.fig5(n).unwrap());
+    let b = exp.batcher_snapshot();
+    println!("hot path: {b} ({} threads)", exp.parallel);
 }

@@ -2,15 +2,17 @@
 //! model table.
 //!
 //! Measures: PJRT dispatch latency per capacity, end-to-end MinionS
-//! queries/sec, dynamic-batcher occupancy, and prints the analytical
+//! queries/sec, dynamic-batcher occupancy under raw concurrent rows,
+//! cross-sample batch coalescing (serial vs parallel eval through the
+//! shared batcher — occupancy before/after), and prints the analytical
 //! latency ratios with the Prop C.1 bound.
 
 use minions::data;
-use minions::eval::run_protocol;
+use minions::eval::{run_protocol, run_protocol_parallel};
 use minions::exp::Exp;
 use minions::latency::*;
-use minions::model::{local, remote};
-use minions::protocol::{MinionS, MinionsConfig};
+use minions::model::{local, remote, PlanConfig};
+use minions::protocol::{MinionS, MinionsConfig, Protocol};
 use minions::runtime::ScoreRequest;
 use minions::sched::{DynamicBatcher, ScoreRow};
 use minions::util::cli::Cli;
@@ -109,6 +111,60 @@ fn main() {
             .load(std::sync::atomic::Ordering::Relaxed)
     );
     batcher.stop();
+
+    // --- cross-sample coalescing: serial vs parallel eval ---
+    // Small contexts + 1 task/round mean each sample alone dispatches a
+    // 2-row partial batch; parallel samples share the batcher, so their
+    // rows coalesce and occupancy rises with thread count while
+    // wall-clock drops. This is the ISSUE's before/after exhibit.
+    let ds_small = data::micro::context_sweep(2, 16, 11);
+    let cfg = MinionsConfig {
+        plan: PlanConfig {
+            tasks_per_round: 1,
+            ..PlanConfig::default()
+        },
+        ..MinionsConfig::default()
+    };
+    let llama3b = exp.local(local::LLAMA_3B);
+    let coalesce_proto: Arc<dyn Protocol> =
+        Arc::new(MinionS::new(llama3b, exp.remote(remote::GPT_4O), cfg));
+    println!("== cross-sample coalescing (16 samples, 1 task/round, 2 chunks) ==");
+    let mut t = Table::new(&["eval threads", "wall", "queries/s", "occupancy", "dispatches"]);
+    let mut serial_wall = None;
+    for threads in [1usize, 4, 8] {
+        let before = exp.batcher_snapshot();
+        let t0 = std::time::Instant::now();
+        let r = run_protocol_parallel(Arc::clone(&coalesce_proto), &ds_small, 5, true, threads)
+            .expect("coalescing run");
+        let wall = t0.elapsed().as_secs_f64();
+        let after = exp.batcher_snapshot();
+        if threads == 1 {
+            serial_wall = Some((wall, after.occupancy_since(&before), r.accuracy));
+        }
+        t.row(vec![
+            threads.to_string(),
+            fmt_duration(wall),
+            format!("{:.1}", ds_small.samples.len() as f64 / wall),
+            format!("{:.2}", after.occupancy_since(&before)),
+            (after.dispatches - before.dispatches).to_string(),
+        ]);
+        if let Some((sw, so, sacc)) = serial_wall {
+            if threads > 1 {
+                assert_eq!(r.accuracy, sacc, "parallel eval must be bit-identical");
+                if threads == 8 {
+                    println!(
+                        "coalescing gain: occupancy {:.2} -> {:.2}, wall {} -> {} ({:.1}x)",
+                        so,
+                        after.occupancy_since(&before),
+                        fmt_duration(sw),
+                        fmt_duration(wall),
+                        sw / wall
+                    );
+                }
+            }
+        }
+    }
+    println!("{}", t.render());
 
     // --- Appendix C latency model ---
     println!("== Appendix C analytical latency (Llama-8B@4090 + Llama-405B@8xH100) ==");

@@ -42,6 +42,7 @@ fn main() -> anyhow::Result<()> {
         protocols,
         metrics: Default::default(),
         seed: 42,
+        batcher: Some(exp.batcher()),
     });
     let server = Server::bind(state, "127.0.0.1:0", 4)?;
     let addr = server.addr.to_string();

@@ -13,7 +13,7 @@
 //!   minions serve --port 7171 --config configs/serve.toml
 
 use minions::data;
-use minions::eval::run_protocol;
+use minions::eval::run_protocol_parallel;
 use minions::exp::Exp;
 use minions::model::{local, local_profile, remote, remote_profile, PlanConfig};
 use minions::protocol::MinionsConfig;
@@ -49,6 +49,8 @@ fn main() {
     std::process::exit(code);
 }
 
+// `--parallel` is added per-command (run/bench), not here: serve handles
+// one sample per request and has no dataset eval to parallelize.
 fn backend_opt(cli: Cli) -> Cli {
     cli.opt("backend", "pjrt | native", Some("pjrt"))
         .opt("seed", "experiment seed", Some("42"))
@@ -90,7 +92,8 @@ fn cmd_run(args: Vec<String>) -> i32 {
             .opt("samples", "samples per task", Some("1"))
             .opt("pages-per-chunk", "chunking granularity 1..4", Some("4"))
             .opt("strategy", "retries|scratchpad", Some("scratchpad"))
-            .opt("top-k", "RAG retrieved chunks", Some("8")),
+            .opt("top-k", "RAG retrieved chunks", Some("8"))
+            .parallel_opt(),
     );
     let a = match cli.parse_from(args) {
         Ok(a) => a,
@@ -101,6 +104,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
     };
     let seed: u64 = a.parse_num("seed", 42);
     let n: usize = a.parse_num("n", 16);
+    let parallel: usize = a.parse_num("parallel", 1usize).max(1);
     let mut exp = match Exp::new(a.get_or("backend", "pjrt"), seed) {
         Ok(e) => e,
         Err(e) => {
@@ -152,8 +156,9 @@ fn cmd_run(args: Vec<String>) -> i32 {
         }
     };
     let ds = data::generate(a.get_or("dataset", "finance"), n, seed);
-    match run_protocol(protocol.as_ref(), &ds, seed, true) {
+    match run_protocol_parallel(Arc::clone(&protocol), &ds, seed, true, parallel) {
         Ok(r) => {
+            let b = exp.batcher_snapshot();
             println!(
                 "{} on {}: accuracy={:.3} cost=${:.4}/query prefill={:.2}k decode={:.2}k rounds={:.2}",
                 r.protocol,
@@ -164,6 +169,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
                 r.cost.mean_decode_k(),
                 r.mean_rounds
             );
+            println!("hot path: {b} ({parallel} threads)");
             0
         }
         Err(e) => {
@@ -241,6 +247,7 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         protocols,
         metrics: Default::default(),
         seed,
+        batcher: Some(exp.batcher()),
     });
     let server = match Server::bind(state, &format!("127.0.0.1:{port}"), workers) {
         Ok(s) => s,
@@ -264,7 +271,7 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
     } else {
         args.remove(0)
     };
-    let cli = backend_opt(Cli::new("minions bench", "regenerate a paper exhibit"));
+    let cli = backend_opt(Cli::new("minions bench", "regenerate a paper exhibit").parallel_opt());
     let a = match cli.parse_from(args) {
         Ok(a) => a,
         Err(msg) => {
@@ -281,6 +288,7 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
             return 1;
         }
     };
+    exp.parallel = a.parse_num("parallel", 1usize).max(1);
     let result = match exhibit.as_str() {
         "table1" => exp.table1(n, Some(std::path::Path::new("figure2.csv"))),
         "table2" => exp.table2(n),
@@ -303,6 +311,8 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
                 a.get_or("backend", "pjrt")
             );
             println!("{table}");
+            let b = exp.batcher_snapshot();
+            println!("hot path: {b} ({} threads)", exp.parallel);
             0
         }
         Err(e) => {

@@ -1,6 +1,9 @@
-//! The LocalLM wrapper: builds prompts (token tensors) from jobs, batches
-//! them through the PJRT backend, and post-processes scores into the
-//! protocol's worker outputs (answer / citation / abstain).
+//! The LocalLM wrapper: builds per-job score rows, submits them through
+//! the shared [`DynamicBatcher`] (the system's single scoring path), and
+//! post-processes scores into the protocol's worker outputs (answer /
+//! citation / abstain). Rows from concurrent samples and protocols
+//! coalesce into full fixed-shape dispatches inside the batcher — this
+//! module never assembles or pads batches itself.
 //!
 //! Capability is set by the `d` of the underlying scorer artifact plus the
 //! decoding profile (temperature, abstain bias). Accuracy behaviour is
@@ -9,10 +12,11 @@
 use super::job::{ChunkRef, Job, WorkerOutput};
 use crate::cost::{text_tokens, Ledger};
 use crate::data::{Context, PAGES_PER_CHUNK_MAX};
-use crate::runtime::{Backend, Manifest, ScoreRequest};
+use crate::runtime::Manifest;
+use crate::sched::{DynamicBatcher, ScoreRow};
 use crate::util::rng::Rng;
 use crate::vocab::{
-    is_value_token, render_token, Key, Token, BATCH, CHUNK, FACT_SLOT, KEY_LEN, QLEN,
+    is_value_token, render_token, Key, Token, CHUNK, FACT_SLOT, KEY_LEN, QLEN,
 };
 use anyhow::Result;
 use std::sync::Arc;
@@ -97,7 +101,8 @@ pub struct Extraction {
 }
 
 pub struct LocalLm {
-    backend: Arc<dyn Backend>,
+    /// shared scoring path; rows coalesce with every other caller's
+    scorer: Arc<DynamicBatcher>,
     pub profile: LocalProfile,
     wpos: Vec<f32>,
     /// calibrated full-match score Σ wpos² (signal level)
@@ -105,11 +110,15 @@ pub struct LocalLm {
 }
 
 impl LocalLm {
-    pub fn new(backend: Arc<dyn Backend>, manifest: &Manifest, profile: LocalProfile) -> Result<LocalLm> {
+    pub fn new(
+        scorer: Arc<DynamicBatcher>,
+        manifest: &Manifest,
+        profile: LocalProfile,
+    ) -> Result<LocalLm> {
         let wpos = manifest.wpos(profile.d)?.to_vec();
         let signal = wpos.iter().map(|w| w * w).sum();
         Ok(LocalLm {
-            backend,
+            scorer,
             profile,
             wpos,
             signal,
@@ -139,8 +148,12 @@ impl LocalLm {
         (q_tokens, q_weights)
     }
 
-    /// Execute jobs in batches of `BATCH`, with `samples` decode draws per
-    /// job. Returns outputs in job order.
+    /// Execute jobs through the shared batcher, with `samples` decode
+    /// draws per job. Each job becomes one [`ScoreRow`]; full batches
+    /// dispatch inline and trailing partials coalesce with whatever other
+    /// samples/protocols are scoring concurrently. Returns outputs in job
+    /// order (post-processing stays sequential, so the per-sample rng
+    /// stream is identical to the old self-batched path).
     pub fn run_jobs(
         &self,
         ctx: &Context,
@@ -149,39 +162,30 @@ impl LocalLm {
         rng: &mut Rng,
         ledger: &mut Ledger,
     ) -> Result<Vec<WorkerOutput>> {
-        let mut outputs = Vec::with_capacity(jobs.len());
-        for batch in jobs.chunks(BATCH) {
-            let mut q_tokens = vec![0i32; BATCH * QLEN];
-            let mut q_weights = vec![0f32; BATCH * QLEN];
-            let mut c_tokens = vec![0i32; BATCH * CHUNK];
-            let mut c_mask = vec![0f32; BATCH * CHUNK];
-            for (b, job) in batch.iter().enumerate() {
-                let (qt, qw) = self.query_row(&job.keys);
-                q_tokens[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qt);
-                q_weights[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qw);
-                let (ct, cm) = job.chunk.materialize(ctx);
-                for (dst, src) in c_tokens[b * CHUNK..(b + 1) * CHUNK].iter_mut().zip(&ct) {
-                    *dst = *src as i32;
-                }
-                c_mask[b * CHUNK..(b + 1) * CHUNK].copy_from_slice(&cm);
-            }
-            let resp = self.backend.score(ScoreRequest {
+        let mut rows = Vec::with_capacity(jobs.len());
+        let mut row_tokens: Vec<Vec<i32>> = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            let (q_tokens, q_weights) = self.query_row(&job.keys);
+            let (ct, c_mask) = job.chunk.materialize(ctx);
+            let c_tokens: Vec<i32> = ct.iter().map(|t| *t as i32).collect();
+            rows.push(ScoreRow {
                 d: self.profile.d,
                 q_tokens,
                 q_weights,
                 c_tokens: c_tokens.clone(),
                 c_mask,
-            })?;
-            for (b, job) in batch.iter().enumerate() {
-                let row = &resp.scores[b * CHUNK..(b + 1) * CHUNK];
-                let toks = &c_tokens[b * CHUNK..(b + 1) * CHUNK];
-                let out = self.postprocess(job, row, toks, samples, rng);
-                ledger.local_job(
-                    job.chunk.token_count(ctx) as u64 + text_tokens(&job.instruction),
-                    (24 * samples) as u64,
-                );
-                outputs.push(out);
-            }
+            });
+            row_tokens.push(c_tokens);
+        }
+        let results = self.scorer.score_rows(rows)?;
+        let mut outputs = Vec::with_capacity(jobs.len());
+        for ((job, res), toks) in jobs.iter().zip(&results).zip(&row_tokens) {
+            let out = self.postprocess(job, &res.scores, toks, samples, rng);
+            ledger.local_job(
+                job.chunk.token_count(ctx) as u64 + text_tokens(&job.instruction),
+                (24 * samples) as u64,
+            );
+            outputs.push(out);
         }
         Ok(outputs)
     }
@@ -292,35 +296,33 @@ impl LocalLm {
     /// "verification in the cloud"). Returns max score per span,
     /// normalised by the full-match signal level.
     pub fn score_span(&self, key: &Key, spans: &[Vec<Token>]) -> Result<Vec<f32>> {
-        let mut out = Vec::with_capacity(spans.len());
-        for group in spans.chunks(BATCH) {
-            let mut q_tokens = vec![0i32; BATCH * QLEN];
-            let mut q_weights = vec![0f32; BATCH * QLEN];
-            let mut c_tokens = vec![0i32; BATCH * CHUNK];
-            let mut c_mask = vec![0f32; BATCH * CHUNK];
-            for (b, span) in group.iter().enumerate() {
-                let (qt, qw) = self.query_row(std::slice::from_ref(key));
-                q_tokens[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qt);
-                q_weights[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qw);
+        let rows: Vec<ScoreRow> = spans
+            .iter()
+            .map(|span| {
+                let (q_tokens, q_weights) = self.query_row(std::slice::from_ref(key));
+                let mut c_tokens = vec![0i32; CHUNK];
+                let mut c_mask = vec![0f32; CHUNK];
                 for (i, t) in span.iter().take(CHUNK).enumerate() {
-                    c_tokens[b * CHUNK + i] = *t as i32;
-                    c_mask[b * CHUNK + i] = 1.0;
+                    c_tokens[i] = *t as i32;
+                    c_mask[i] = 1.0;
                 }
-            }
-            let resp = self.backend.score(ScoreRequest {
-                d: self.profile.d,
-                q_tokens,
-                q_weights,
-                c_tokens,
-                c_mask,
-            })?;
-            for b in 0..group.len() {
-                let row = &resp.scores[b * CHUNK..(b + 1) * CHUNK];
-                let (_, best) = argmax(row);
-                out.push((best / self.signal).max(0.0));
-            }
-        }
-        Ok(out)
+                ScoreRow {
+                    d: self.profile.d,
+                    q_tokens,
+                    q_weights,
+                    c_tokens,
+                    c_mask,
+                }
+            })
+            .collect();
+        let results = self.scorer.score_rows(rows)?;
+        Ok(results
+            .iter()
+            .map(|r| {
+                let (_, best) = argmax(&r.scores);
+                (best / self.signal).max(0.0)
+            })
+            .collect())
     }
 
     /// All extractions above threshold with FACT_SLOT non-max suppression.

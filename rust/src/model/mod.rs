@@ -10,4 +10,6 @@ pub mod remote;
 
 pub use job::{ChunkRef, Job, WorkerOutput};
 pub use local::{local_profile, LocalLm, LocalProfile, LOCAL_PROFILES};
-pub use remote::{remote_profile, Decision, PlanConfig, RemoteLm, RemoteProfile, REMOTE_PROFILES};
+pub use remote::{
+    remote_profile, Decision, MinionsRemote, PlanConfig, RemoteLm, RemoteProfile, REMOTE_PROFILES,
+};

@@ -12,7 +12,8 @@ use super::local::{LocalLm, LocalProfile};
 use crate::cost::{text_tokens, Ledger};
 use crate::data::{books, Answer, Context, Query, QueryKind, PAGES_PER_CHUNK_MAX};
 use crate::dsl::render_task_key;
-use crate::runtime::{Backend, Manifest};
+use crate::runtime::Manifest;
+use crate::sched::DynamicBatcher;
 use crate::util::rng::Rng;
 use crate::vocab::{Key, Token};
 use anyhow::Result;
@@ -138,6 +139,35 @@ pub enum Decision {
     MoreRounds { advice: String },
 }
 
+/// The remote-side interface the MinionS protocol drives: write the
+/// decomposition program, then either finalize or ask for another round.
+/// Implemented by [`RemoteLm`]; protocol tests substitute misbehaving
+/// stubs (e.g. a remote that never finalizes) through this trait.
+pub trait MinionsRemote: Send + Sync {
+    /// Display name for protocol labels (the profile name).
+    fn label(&self) -> String;
+
+    /// Generate the MinionScript decomposition source for this round.
+    fn plan_minions(
+        &self,
+        query: &Query,
+        cfg: &PlanConfig,
+        round: usize,
+        advice: &str,
+        had_answers: bool,
+    ) -> String;
+
+    /// Aggregate filtered worker outputs into a decision.
+    fn synthesize(
+        &self,
+        query: &Query,
+        outputs: &[WorkerOutput],
+        round: usize,
+        max_rounds: usize,
+        rng: &mut Rng,
+    ) -> Decision;
+}
+
 pub struct RemoteLm {
     pub profile: RemoteProfile,
     /// internal reader used for remote-only full-context answering
@@ -145,7 +175,11 @@ pub struct RemoteLm {
 }
 
 impl RemoteLm {
-    pub fn new(backend: Arc<dyn Backend>, manifest: &Manifest, profile: RemoteProfile) -> Result<RemoteLm> {
+    pub fn new(
+        scorer: Arc<DynamicBatcher>,
+        manifest: &Manifest,
+        profile: RemoteProfile,
+    ) -> Result<RemoteLm> {
         let reader_profile = LocalProfile {
             name: profile.name,
             d: profile.d,
@@ -153,7 +187,7 @@ impl RemoteLm {
             abstain_bias: 1.0,
             format_err: 0.0, // frontier models follow the schema
         };
-        let reader = LocalLm::new(backend, manifest, reader_profile)?;
+        let reader = LocalLm::new(scorer, manifest, reader_profile)?;
         Ok(RemoteLm { profile, reader })
     }
 
@@ -400,9 +434,12 @@ impl RemoteLm {
                 }
             }
         }
+        // break exact-weight ties by token id: HashMap iteration order is
+        // per-instance random, and a hash-order-dependent winner would make
+        // runs non-reproducible (and serial vs parallel eval divergent)
         weights
             .into_iter()
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)))
     }
 
     fn expected_parts(&self, query: &Query) -> usize {
@@ -514,6 +551,35 @@ impl RemoteLm {
     }
 }
 
+impl MinionsRemote for RemoteLm {
+    fn label(&self) -> String {
+        self.profile.name.to_string()
+    }
+
+    fn plan_minions(
+        &self,
+        query: &Query,
+        cfg: &PlanConfig,
+        round: usize,
+        advice: &str,
+        had_answers: bool,
+    ) -> String {
+        // inherent method wins resolution, so this delegates, not recurses
+        RemoteLm::plan_minions(self, query, cfg, round, advice, had_answers)
+    }
+
+    fn synthesize(
+        &self,
+        query: &Query,
+        outputs: &[WorkerOutput],
+        round: usize,
+        max_rounds: usize,
+        rng: &mut Rng,
+    ) -> Decision {
+        RemoteLm::synthesize(self, query, outputs, round, max_rounds, rng)
+    }
+}
+
 /// Confidence-weighted vote over non-abstaining outputs of one task.
 #[allow(dead_code)] // retained as the unverified-vote reference (unit-tested)
 fn vote(outputs: &[WorkerOutput], task: usize) -> Option<(Token, f32)> {
@@ -533,7 +599,7 @@ fn vote(outputs: &[WorkerOutput], task: usize) -> Option<(Token, f32)> {
     }
     weights
         .into_iter()
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)))
 }
 
 /// Map a chunk answer history to the DSL's `last_jobs` binding.

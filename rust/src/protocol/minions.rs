@@ -3,17 +3,23 @@
 //! Loop: (1) the remote writes a MinionScript decomposition program
 //! *without reading the context* — the sandbox executes it against the
 //! context shape to instantiate jobs; (2) the local model executes the
-//! jobs in parallel batches and abstain-filters the outputs; (3) the
-//! remote aggregates the surviving JSON outputs and either finalizes or
-//! requests another round (simple-retries or scratchpad strategy, §6.4).
+//! jobs through the shared dynamic batcher and abstain-filters the
+//! outputs; (3) the remote aggregates the surviving JSON outputs and
+//! either finalizes or requests another round (simple-retries or
+//! scratchpad strategy, §6.4).
+//!
+//! The round budget is a *hard* stop: if the remote still answers
+//! `MoreRounds` at `max_rounds` (a misbehaving or adversarial remote),
+//! the protocol force-finalizes from the worker outputs it has instead of
+//! spinning forever.
 
 use super::{Outcome, Protocol, RoundStrategy};
 use crate::cost::{text_tokens, Ledger};
-use crate::data::{QueryKind, Sample};
+use crate::data::{Answer, Query, QueryKind, Sample};
 use crate::dsl::{self, DocShape, Limits};
-use crate::model::job::Job;
+use crate::model::job::{Job, WorkerOutput};
 use crate::model::remote::last_jobs_binding;
-use crate::model::{Decision, LocalLm, PlanConfig, RemoteLm};
+use crate::model::{Decision, LocalLm, MinionsRemote, PlanConfig};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -40,12 +46,12 @@ impl Default for MinionsConfig {
 
 pub struct MinionS {
     pub local: Arc<LocalLm>,
-    pub remote: Arc<RemoteLm>,
+    pub remote: Arc<dyn MinionsRemote>,
     pub cfg: MinionsConfig,
 }
 
 impl MinionS {
-    pub fn new(local: Arc<LocalLm>, remote: Arc<RemoteLm>, cfg: MinionsConfig) -> Self {
+    pub fn new(local: Arc<LocalLm>, remote: Arc<dyn MinionsRemote>, cfg: MinionsConfig) -> Self {
         MinionS { local, remote, cfg }
     }
 }
@@ -54,18 +60,58 @@ impl MinionS {
 const DECOMPOSE_PROMPT_TOKENS: u64 = 350;
 const SYNTH_PROMPT_TOKENS: u64 = 260;
 
+/// Conservative final answer derived from worker outputs alone, used when
+/// the remote exhausts the round budget without finalizing. Deterministic
+/// (no rng): highest-confidence candidates per part, no arithmetic noise.
+fn forced_final(q: &Query, outputs: &[WorkerOutput]) -> Answer {
+    let best = |task: usize| -> Option<crate::vocab::Token> {
+        outputs
+            .iter()
+            .filter(|o| o.task_id == task && o.answer.is_some())
+            .max_by(|a, b| a.confidence.partial_cmp(&b.confidence).unwrap())
+            .and_then(|o| o.answer)
+    };
+    match &q.kind {
+        QueryKind::Extract => Answer::Value(best(0).unwrap_or(0)),
+        QueryKind::Bool => Answer::Bool(
+            outputs
+                .iter()
+                .any(|o| o.answer.is_some() && o.confidence > 0.5),
+        ),
+        QueryKind::Compute(op) => match (best(0), best(1)) {
+            (Some(a), Some(b)) => Answer::Number(op.apply(
+                crate::data::value_number(a),
+                crate::data::value_number(b),
+            )),
+            _ => Answer::Number(f64::NAN),
+        },
+        QueryKind::Multi(k) => {
+            Answer::Set((0..*k).filter_map(best).collect())
+        }
+        QueryKind::Summarize => {
+            let mut vals: Vec<crate::vocab::Token> = Vec::new();
+            for o in outputs {
+                for v in &o.multi_found {
+                    if !vals.contains(v) {
+                        vals.push(*v);
+                    }
+                }
+            }
+            Answer::Set(vals)
+        }
+    }
+}
+
 impl Protocol for MinionS {
     fn name(&self) -> String {
-        format!(
-            "minions[{}+{}]",
-            self.local.profile.name, self.remote.profile.name
-        )
+        format!("minions[{}+{}]", self.local.profile.name, self.remote.label())
     }
 
     fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
         let mut ledger = Ledger::default();
         let mut transcript = Vec::new();
         let q = &sample.query;
+        let max_rounds = self.cfg.max_rounds.max(1);
         let docs: Vec<DocShape> = sample
             .context
             .docs
@@ -118,7 +164,7 @@ impl Protocol for MinionS {
                 });
             }
 
-            // ---- (2) execute locally, in parallel batches ----
+            // ---- (2) execute locally through the shared batcher ----
             let outputs = self.local.run_jobs(
                 &sample.context,
                 &jobs,
@@ -154,7 +200,7 @@ impl Protocol for MinionS {
             };
             let decision =
                 self.remote
-                    .synthesize(q, &synth_inputs, rounds, self.cfg.max_rounds, rng);
+                    .synthesize(q, &synth_inputs, rounds, max_rounds, rng);
 
             match decision {
                 Decision::Final(answer) => {
@@ -166,6 +212,21 @@ impl Protocol for MinionS {
                     });
                 }
                 Decision::MoreRounds { advice: a } => {
+                    if rounds >= max_rounds {
+                        // hard stop: the remote refused to finalize within
+                        // the round budget — synthesize a conservative
+                        // answer from what the workers produced
+                        let answer = forced_final(q, &synth_inputs);
+                        transcript.push(format!(
+                            "round {rounds}: round budget exhausted, forced finalize"
+                        ));
+                        return Ok(Outcome {
+                            answer,
+                            ledger,
+                            rounds,
+                            transcript,
+                        });
+                    }
                     advice = a;
                     match self.cfg.strategy {
                         RoundStrategy::Retries => {
@@ -181,5 +242,142 @@ impl Protocol for MinionS {
                 }
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
+    use crate::sched::DynamicBatcher;
+    use crate::vocab::{BATCH, CHUNK};
+    use std::time::Duration;
+
+    /// Backend whose scores are all zero: every job abstains.
+    struct Silent;
+
+    impl Backend for Silent {
+        fn score(&self, _req: ScoreRequest) -> Result<ScoreResponse> {
+            Ok(ScoreResponse {
+                scores: vec![0.0; BATCH * CHUNK],
+                lse: vec![0.0; BATCH],
+            })
+        }
+
+        fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
+            unimplemented!()
+        }
+
+        fn name(&self) -> &'static str {
+            "silent"
+        }
+    }
+
+    /// A remote that writes a valid plan but never, ever finalizes —
+    /// the adversarial case the hard round stop exists for.
+    struct NeverFinalize;
+
+    impl MinionsRemote for NeverFinalize {
+        fn label(&self) -> String {
+            "never-finalize".into()
+        }
+
+        fn plan_minions(
+            &self,
+            query: &Query,
+            cfg: &PlanConfig,
+            _round: usize,
+            _advice: &str,
+            _had_answers: bool,
+        ) -> String {
+            let task = format!("EXTRACT {}", dsl::render_task_key(&query.keys[0]));
+            format!(
+                "tasks = [\"{task}\"]\n\
+                 for task_id, task in enumerate(tasks):\n    \
+                 for doc_id, document in enumerate(context):\n        \
+                 chunks = chunk_on_multiple_pages(document, {})\n        \
+                 for chunk_id, chunk in enumerate(chunks):\n            \
+                 job_manifests.append(JobManifest(task_id=task_id, chunk=chunk, task=task, advice=\"\"))\n",
+                cfg.pages_per_chunk
+            )
+        }
+
+        fn synthesize(
+            &self,
+            _query: &Query,
+            _outputs: &[WorkerOutput],
+            _round: usize,
+            _max_rounds: usize,
+            _rng: &mut Rng,
+        ) -> Decision {
+            Decision::MoreRounds {
+                advice: "just one more round, I promise".into(),
+            }
+        }
+    }
+
+    #[test]
+    fn round_budget_is_a_hard_stop_with_a_never_finalizing_remote() {
+        let profile = crate::model::local::LLAMA_3B;
+        let batcher = DynamicBatcher::new(Arc::new(Silent), Duration::from_millis(1));
+        let manifest = Manifest::stub_for_tests(&[profile.d], vec![1.0, 0.5, 0.25]);
+        let local = Arc::new(LocalLm::new(Arc::clone(&batcher), &manifest, profile).unwrap());
+        for max_rounds in [1usize, 2, 3] {
+            let cfg = MinionsConfig {
+                max_rounds,
+                strategy: RoundStrategy::Retries,
+                ..MinionsConfig::default()
+            };
+            let proto = MinionS::new(Arc::clone(&local), Arc::new(NeverFinalize), cfg);
+            let ds = data::micro::multistep_sweep(1, 1, 5);
+            let mut rng = Rng::seed_from(9);
+            // pre-fix this spun forever; now it must return at the budget
+            let outcome = proto.run(&ds.samples[0], &mut rng).unwrap();
+            assert_eq!(outcome.rounds, max_rounds);
+            // all-zero scores => every worker abstained => fallback answer
+            assert_eq!(outcome.answer, Answer::Value(0));
+            assert!(outcome
+                .transcript
+                .iter()
+                .any(|t| t.contains("forced finalize")));
+        }
+        batcher.stop();
+    }
+
+    #[test]
+    fn forced_final_covers_query_kinds() {
+        use crate::vocab::Key;
+        let out = |task_id: usize, answer: Option<u32>, confidence: f32| WorkerOutput {
+            job_id: 0,
+            task_id,
+            answer,
+            sample_answers: answer.into_iter().collect(),
+            multi_found: answer.into_iter().collect(),
+            confidence,
+            citation: String::new(),
+            citation_tokens: Vec::new(),
+            explanation: String::new(),
+        };
+        let q = |kind: QueryKind| Query {
+            kind,
+            keys: vec![Key([100, 200, 300])],
+            text: "q".into(),
+            answer: Answer::Bool(false),
+        };
+        let outs = vec![out(0, Some(5000), 0.9), out(0, Some(6000), 0.4), out(1, None, 0.1)];
+        assert_eq!(forced_final(&q(QueryKind::Extract), &outs), Answer::Value(5000));
+        assert_eq!(forced_final(&q(QueryKind::Bool), &outs), Answer::Bool(true));
+        assert_eq!(forced_final(&q(QueryKind::Extract), &[]), Answer::Value(0));
+        assert_eq!(forced_final(&q(QueryKind::Bool), &[]), Answer::Bool(false));
+        // missing second operand => NaN, not a spin or a panic
+        match forced_final(&q(QueryKind::Compute(data::ComputeOp::Sum)), &outs) {
+            Answer::Number(x) => assert!(x.is_nan()),
+            other => panic!("expected Number, got {other:?}"),
+        }
+        assert_eq!(
+            forced_final(&q(QueryKind::Multi(2)), &outs),
+            Answer::Set(vec![5000])
+        );
     }
 }

@@ -1,22 +1,26 @@
-//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
-//! CPU PJRT client, and serves batched score/embed requests.
+//! Execution engine: loads scorer artifacts and serves batched
+//! score/embed requests from a dedicated engine thread.
 //!
-//! The `xla` crate's handles are not `Send`, so a dedicated engine thread
-//! owns the client, the compiled executables, and the device-resident
-//! weight buffers; callers talk to it through channels via the cloneable
-//! [`Engine`] handle. Weight tensors (up to 32 MB for d=1024) are
-//! transferred to the device once at module-load time and reused as
-//! `PjRtBuffer`s on every dispatch — only the small per-request token
-//! tensors cross the host/device boundary on the hot path.
+//! A single engine thread owns the loaded modules and device state;
+//! callers talk to it through channels via the cloneable [`Engine`]
+//! handle. Two execution paths share this scaffolding:
+//!
+//! - **`xla-pjrt` feature** (production): HLO-text artifacts are compiled
+//!   on the PJRT CPU client and weight tensors are staged on-device once
+//!   at module-load time, exactly as before. Requires the external `xla`
+//!   bindings crate, which is not vendored in this offline build —
+//!   enabling the feature without it is a compile error by design.
+//! - **default** (offline): the engine thread executes the *same math*
+//!   as the pure-Rust native oracle (`runtime::native`) directly over the
+//!   artifact weight files. Module "compilation" is the one-time weight
+//!   load, so [`EngineStats`] keeps its meaning and the PJRT↔native
+//!   equivalence tests hold trivially.
 
-use super::manifest::{Manifest, ModuleSpec};
-use super::weights::WeightFile;
+use super::manifest::Manifest;
 use crate::vocab::{BATCH, CHUNK, QLEN};
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 /// One batched scoring dispatch (B rows padded by the caller).
 #[derive(Clone, Debug)]
@@ -72,7 +76,7 @@ impl Engine {
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let pre: Vec<usize> = precompile.to_vec();
         let join = std::thread::Builder::new()
-            .name("pjrt-engine".into())
+            .name("engine".into())
             .spawn(move || engine_main(manifest, pre, rx, ready_tx))
             .context("spawning engine thread")?;
         ready_rx
@@ -142,24 +146,8 @@ impl Drop for Engine {
 }
 
 // ---------------------------------------------------------------------------
-// Engine thread internals
+// Engine thread main loop (shared by both execution paths)
 // ---------------------------------------------------------------------------
-
-struct LoadedModule {
-    exe: xla::PjRtLoadedExecutable,
-    /// device-resident weight buffers, in input order (emb [, wpos])
-    weight_bufs: Vec<xla::PjRtBuffer>,
-    spec: ModuleSpec,
-}
-
-struct EngineState {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    score_modules: HashMap<usize, LoadedModule>,
-    embed_module: Option<LoadedModule>,
-    weight_cache: HashMap<String, Arc<WeightFile>>,
-    stats: EngineStats,
-}
 
 fn engine_main(
     manifest: Manifest,
@@ -167,25 +155,12 @@ fn engine_main(
     rx: mpsc::Receiver<Request>,
     ready_tx: mpsc::Sender<Result<()>>,
 ) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
+    let mut state = match exec::ExecState::new(manifest) {
+        Ok(s) => s,
         Err(e) => {
-            let _ = ready_tx.send(Err(anyhow!("PjRtClient::cpu failed: {e:?}")));
+            let _ = ready_tx.send(Err(e));
             return;
         }
-    };
-    log::info!(
-        "pjrt engine up: platform={} devices={}",
-        client.platform_name(),
-        client.device_count()
-    );
-    let mut state = EngineState {
-        client,
-        manifest,
-        score_modules: HashMap::new(),
-        embed_module: None,
-        weight_cache: HashMap::new(),
-        stats: EngineStats::default(),
     };
     for d in &precompile {
         if let Err(e) = state.ensure_score(*d) {
@@ -206,174 +181,340 @@ fn engine_main(
                 let _ = reply.send(res);
             }
             Request::Stats(reply) => {
-                let _ = reply.send(state.stats.clone());
+                let _ = reply.send(state.stats());
             }
             Request::Shutdown => break,
         }
     }
 }
 
-impl EngineState {
-    fn load_module(&mut self, spec: &ModuleSpec) -> Result<LoadedModule> {
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&spec.file)
-            .map_err(|e| anyhow!("loading {}: {e:?}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+// ---------------------------------------------------------------------------
+// Offline execution path: the native-oracle math over artifact weights
+// ---------------------------------------------------------------------------
 
-        // Stage weight tensors on-device once.
-        let wkey = spec.weights.to_string_lossy().to_string();
-        let wf = match self.weight_cache.get(&wkey) {
-            Some(wf) => Arc::clone(wf),
-            None => {
-                let wf = Arc::new(WeightFile::load(&spec.weights)?);
-                self.weight_cache.insert(wkey, Arc::clone(&wf));
-                wf
+#[cfg(not(feature = "xla-pjrt"))]
+mod exec {
+    use super::super::native::{embed_kernel, score_kernel};
+    use super::super::weights::WeightFile;
+    use super::{EmbedRequest, EngineStats, Manifest, Result, ScoreRequest, ScoreResponse};
+    use anyhow::bail;
+    use std::collections::HashMap;
+    use std::time::Instant;
+
+    struct LoadedWeights {
+        d: usize,
+        emb: Vec<f32>,  // [V, d]
+        wpos: Vec<f32>, // [W]
+    }
+
+    pub(super) struct ExecState {
+        manifest: Manifest,
+        score_weights: HashMap<usize, LoadedWeights>,
+        embed_weights: Option<LoadedWeights>,
+        stats: EngineStats,
+    }
+
+    impl ExecState {
+        pub(super) fn new(manifest: Manifest) -> Result<ExecState> {
+            Ok(ExecState {
+                manifest,
+                score_weights: HashMap::new(),
+                embed_weights: None,
+                stats: EngineStats::default(),
+            })
+        }
+
+        fn load(&mut self, weights_path: &std::path::Path, d: usize) -> Result<LoadedWeights> {
+            let t0 = Instant::now();
+            let wf = WeightFile::load(weights_path)?;
+            let emb = wf.get("emb")?;
+            let wpos = wf.get("wpos")?;
+            if emb.dims.len() != 2 || emb.dims[1] != d {
+                bail!("emb dims {:?} inconsistent with d={d}", emb.dims);
             }
-        };
-        let mut weight_bufs = Vec::new();
-        for decl in &spec.inputs {
-            if decl.name == "emb" || decl.name == "wpos" {
-                let t = wf.get(&decl.name)?;
-                if t.dims != decl.shape {
-                    bail!(
-                        "weight '{}' shape {:?} != declared {:?}",
-                        decl.name,
-                        t.dims,
-                        decl.shape
-                    );
+            self.stats.compile_secs += t0.elapsed().as_secs_f64();
+            Ok(LoadedWeights {
+                d,
+                emb: emb.data.clone(),
+                wpos: wpos.data.clone(),
+            })
+        }
+
+        pub(super) fn ensure_score(&mut self, d: usize) -> Result<()> {
+            if !self.score_weights.contains_key(&d) {
+                let path = self.manifest.score_module(d)?.weights.clone();
+                let w = self.load(&path, d)?;
+                self.score_weights.insert(d, w);
+            }
+            Ok(())
+        }
+
+        fn ensure_embed(&mut self) -> Result<()> {
+            if self.embed_weights.is_none() {
+                let spec = self.manifest.embed_module()?;
+                let (path, d) = (spec.weights.clone(), spec.d);
+                self.embed_weights = Some(self.load(&path, d)?);
+            }
+            Ok(())
+        }
+
+        pub(super) fn run_score(&mut self, req: ScoreRequest) -> Result<ScoreResponse> {
+            if req.q_tokens.len() != super::BATCH * super::QLEN
+                || req.q_weights.len() != super::BATCH * super::QLEN
+                || req.c_tokens.len() != super::BATCH * super::CHUNK
+                || req.c_mask.len() != super::BATCH * super::CHUNK
+            {
+                // bail per-request instead of letting the kernel index out
+                // of bounds and kill the engine thread
+                bail!("score request shape mismatch");
+            }
+            self.ensure_score(req.d)?;
+            let w = self.score_weights.get(&req.d).unwrap();
+            let t0 = Instant::now();
+            let resp = score_kernel(&w.emb, &w.wpos, w.d, &req);
+            self.stats.dispatches += 1;
+            self.stats.rows += super::BATCH as u64;
+            self.stats.exec_secs += t0.elapsed().as_secs_f64();
+            Ok(resp)
+        }
+
+        pub(super) fn run_embed(&mut self, req: EmbedRequest) -> Result<Vec<f32>> {
+            if req.c_tokens.len() != super::BATCH * super::CHUNK
+                || req.c_mask.len() != super::BATCH * super::CHUNK
+            {
+                bail!("embed request shape mismatch");
+            }
+            self.ensure_embed()?;
+            let w = self.embed_weights.as_ref().unwrap();
+            let t0 = Instant::now();
+            let out = embed_kernel(&w.emb, w.d, &req);
+            self.stats.dispatches += 1;
+            self.stats.rows += super::BATCH as u64;
+            self.stats.exec_secs += t0.elapsed().as_secs_f64();
+            Ok(out)
+        }
+
+        pub(super) fn stats(&self) -> EngineStats {
+            self.stats.clone()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT execution path (requires the external `xla` bindings crate)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "xla-pjrt")]
+mod exec {
+    use super::super::manifest::ModuleSpec;
+    use super::super::weights::WeightFile;
+    use super::{
+        EmbedRequest, EngineStats, Manifest, Result, ScoreRequest, ScoreResponse, BATCH, CHUNK,
+        QLEN,
+    };
+    use anyhow::{anyhow, bail};
+    use std::collections::HashMap;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    struct LoadedModule {
+        exe: xla::PjRtLoadedExecutable,
+        /// device-resident weight buffers, in input order (emb [, wpos])
+        weight_bufs: Vec<xla::PjRtBuffer>,
+        spec: ModuleSpec,
+    }
+
+    pub(super) struct ExecState {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        score_modules: HashMap<usize, LoadedModule>,
+        embed_module: Option<LoadedModule>,
+        weight_cache: HashMap<String, Arc<WeightFile>>,
+        stats: EngineStats,
+    }
+
+    impl ExecState {
+        pub(super) fn new(manifest: Manifest) -> Result<ExecState> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+            Ok(ExecState {
+                client,
+                manifest,
+                score_modules: HashMap::new(),
+                embed_module: None,
+                weight_cache: HashMap::new(),
+                stats: EngineStats::default(),
+            })
+        }
+
+        fn load_module(&mut self, spec: &ModuleSpec) -> Result<LoadedModule> {
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| anyhow!("loading {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+
+            // Stage weight tensors on-device once.
+            let wkey = spec.weights.to_string_lossy().to_string();
+            let wf = match self.weight_cache.get(&wkey) {
+                Some(wf) => Arc::clone(wf),
+                None => {
+                    let wf = Arc::new(WeightFile::load(&spec.weights)?);
+                    self.weight_cache.insert(wkey, Arc::clone(&wf));
+                    wf
                 }
-                let buf = buffer_f32(&self.client, &t.data, &t.dims)
-                    .map_err(|e| anyhow!("staging weight '{}': {e}", decl.name))?;
-                weight_bufs.push(buf);
+            };
+            let mut weight_bufs = Vec::new();
+            for decl in &spec.inputs {
+                if decl.name == "emb" || decl.name == "wpos" {
+                    let t = wf.get(&decl.name)?;
+                    if t.dims != decl.shape {
+                        bail!(
+                            "weight '{}' shape {:?} != declared {:?}",
+                            decl.name,
+                            t.dims,
+                            decl.shape
+                        );
+                    }
+                    let buf = buffer_f32(&self.client, &t.data, &t.dims)
+                        .map_err(|e| anyhow!("staging weight '{}': {e}", decl.name))?;
+                    weight_bufs.push(buf);
+                }
             }
+            self.stats.compile_secs += t0.elapsed().as_secs_f64();
+            Ok(LoadedModule {
+                exe,
+                weight_bufs,
+                spec: spec.clone(),
+            })
         }
-        self.stats.compile_secs += t0.elapsed().as_secs_f64();
-        log::info!(
-            "compiled module {} in {:.2}s",
-            spec.name,
-            t0.elapsed().as_secs_f64()
-        );
-        Ok(LoadedModule {
-            exe,
-            weight_bufs,
-            spec: spec.clone(),
-        })
+
+        pub(super) fn ensure_score(&mut self, d: usize) -> Result<()> {
+            if !self.score_modules.contains_key(&d) {
+                let spec = self.manifest.score_module(d)?.clone();
+                let m = self.load_module(&spec)?;
+                self.score_modules.insert(d, m);
+            }
+            Ok(())
+        }
+
+        fn ensure_embed(&mut self) -> Result<()> {
+            if self.embed_module.is_none() {
+                let spec = self.manifest.embed_module()?.clone();
+                self.embed_module = Some(self.load_module(&spec)?);
+            }
+            Ok(())
+        }
+
+        pub(super) fn run_score(&mut self, req: ScoreRequest) -> Result<ScoreResponse> {
+            self.ensure_score(req.d)?;
+            let b = BATCH;
+            let module = self.score_modules.get(&req.d).unwrap();
+            let q_tok = buffer_i32(&self.client, &req.q_tokens, &[b, QLEN])?;
+            let q_w = buffer_f32(&self.client, &req.q_weights, &[b, QLEN])?;
+            let c_tok = buffer_i32(&self.client, &req.c_tokens, &[b, CHUNK])?;
+            let c_m = buffer_f32(&self.client, &req.c_mask, &[b, CHUNK])?;
+
+            let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(6);
+            for w in &module.weight_bufs {
+                inputs.push(w);
+            }
+            inputs.push(&q_tok);
+            inputs.push(&q_w);
+            inputs.push(&c_tok);
+            inputs.push(&c_m);
+
+            let t0 = Instant::now();
+            let result = module
+                .exe
+                .execute_b(&inputs)
+                .map_err(|e| anyhow!("execute {}: {e:?}", module.spec.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("readback: {e:?}"))?;
+            let (scores_lit, lse_lit) = out
+                .to_tuple2()
+                .map_err(|e| anyhow!("expected 2-tuple output: {e:?}"))?;
+            let scores = scores_lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("scores readback: {e:?}"))?;
+            let lse = lse_lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("lse readback: {e:?}"))?;
+            self.stats.dispatches += 1;
+            self.stats.rows += b as u64;
+            self.stats.exec_secs += t0.elapsed().as_secs_f64();
+
+            if scores.len() != b * CHUNK || lse.len() != b {
+                bail!(
+                    "unexpected output sizes: scores={} lse={}",
+                    scores.len(),
+                    lse.len()
+                );
+            }
+            Ok(ScoreResponse { scores, lse })
+        }
+
+        pub(super) fn run_embed(&mut self, req: EmbedRequest) -> Result<Vec<f32>> {
+            self.ensure_embed()?;
+            let b = BATCH;
+            if req.c_tokens.len() != b * CHUNK || req.c_mask.len() != b * CHUNK {
+                bail!("embed request shape mismatch");
+            }
+            let module = self.embed_module.as_ref().unwrap();
+            let c_tok = buffer_i32(&self.client, &req.c_tokens, &[b, CHUNK])?;
+            let c_m = buffer_f32(&self.client, &req.c_mask, &[b, CHUNK])?;
+            let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
+            for w in &module.weight_bufs {
+                inputs.push(w);
+            }
+            inputs.push(&c_tok);
+            inputs.push(&c_m);
+            let t0 = Instant::now();
+            let result = module
+                .exe
+                .execute_b(&inputs)
+                .map_err(|e| anyhow!("execute embed: {e:?}"))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("readback: {e:?}"))?;
+            let emb_lit = out
+                .to_tuple1()
+                .map_err(|e| anyhow!("expected 1-tuple output: {e:?}"))?;
+            let emb = emb_lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("embed readback: {e:?}"))?;
+            self.stats.dispatches += 1;
+            self.stats.rows += b as u64;
+            self.stats.exec_secs += t0.elapsed().as_secs_f64();
+            Ok(emb)
+        }
+
+        pub(super) fn stats(&self) -> EngineStats {
+            self.stats.clone()
+        }
     }
 
-    fn ensure_score(&mut self, d: usize) -> Result<()> {
-        if !self.score_modules.contains_key(&d) {
-            let spec = self.manifest.score_module(d)?.clone();
-            let m = self.load_module(&spec)?;
-            self.score_modules.insert(d, m);
-        }
-        Ok(())
+    fn buffer_f32(
+        client: &xla::PjRtClient,
+        data: &[f32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("staging f32 buffer: {e:?}"))
     }
 
-    fn ensure_embed(&mut self) -> Result<()> {
-        if self.embed_module.is_none() {
-            let spec = self.manifest.embed_module()?.clone();
-            self.embed_module = Some(self.load_module(&spec)?);
-        }
-        Ok(())
+    fn buffer_i32(
+        client: &xla::PjRtClient,
+        data: &[i32],
+        dims: &[usize],
+    ) -> Result<xla::PjRtBuffer> {
+        client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("staging i32 buffer: {e:?}"))
     }
-
-    fn run_score(&mut self, req: ScoreRequest) -> Result<ScoreResponse> {
-        self.ensure_score(req.d)?;
-        let b = BATCH;
-        let module = self.score_modules.get(&req.d).unwrap();
-        let q_tok = buffer_i32(&self.client, &req.q_tokens, &[b, QLEN])?;
-        let q_w = buffer_f32(&self.client, &req.q_weights, &[b, QLEN])?;
-        let c_tok = buffer_i32(&self.client, &req.c_tokens, &[b, CHUNK])?;
-        let c_m = buffer_f32(&self.client, &req.c_mask, &[b, CHUNK])?;
-
-        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(6);
-        for w in &module.weight_bufs {
-            inputs.push(w);
-        }
-        inputs.push(&q_tok);
-        inputs.push(&q_w);
-        inputs.push(&c_tok);
-        inputs.push(&c_m);
-
-        let t0 = Instant::now();
-        let result = module
-            .exe
-            .execute_b(&inputs)
-            .map_err(|e| anyhow!("execute {}: {e:?}", module.spec.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("readback: {e:?}"))?;
-        let (scores_lit, lse_lit) = out
-            .to_tuple2()
-            .map_err(|e| anyhow!("expected 2-tuple output: {e:?}"))?;
-        let scores = scores_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("scores readback: {e:?}"))?;
-        let lse = lse_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("lse readback: {e:?}"))?;
-        self.stats.dispatches += 1;
-        self.stats.rows += b as u64;
-        self.stats.exec_secs += t0.elapsed().as_secs_f64();
-
-        if scores.len() != b * CHUNK || lse.len() != b {
-            bail!(
-                "unexpected output sizes: scores={} lse={}",
-                scores.len(),
-                lse.len()
-            );
-        }
-        Ok(ScoreResponse { scores, lse })
-    }
-
-    fn run_embed(&mut self, req: EmbedRequest) -> Result<Vec<f32>> {
-        self.ensure_embed()?;
-        let b = BATCH;
-        if req.c_tokens.len() != b * CHUNK || req.c_mask.len() != b * CHUNK {
-            bail!("embed request shape mismatch");
-        }
-        let module = self.embed_module.as_ref().unwrap();
-        let c_tok = buffer_i32(&self.client, &req.c_tokens, &[b, CHUNK])?;
-        let c_m = buffer_f32(&self.client, &req.c_mask, &[b, CHUNK])?;
-        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
-        for w in &module.weight_bufs {
-            inputs.push(w);
-        }
-        inputs.push(&c_tok);
-        inputs.push(&c_m);
-        let t0 = Instant::now();
-        let result = module
-            .exe
-            .execute_b(&inputs)
-            .map_err(|e| anyhow!("execute embed: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("readback: {e:?}"))?;
-        let emb_lit = out
-            .to_tuple1()
-            .map_err(|e| anyhow!("expected 1-tuple output: {e:?}"))?;
-        let emb = emb_lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("embed readback: {e:?}"))?;
-        self.stats.dispatches += 1;
-        self.stats.rows += b as u64;
-        self.stats.exec_secs += t0.elapsed().as_secs_f64();
-        Ok(emb)
-    }
-}
-
-fn buffer_f32(client: &xla::PjRtClient, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-    client
-        .buffer_from_host_buffer(data, dims, None)
-        .map_err(|e| anyhow!("staging f32 buffer: {e:?}"))
-}
-
-fn buffer_i32(client: &xla::PjRtClient, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-    client
-        .buffer_from_host_buffer(data, dims, None)
-        .map_err(|e| anyhow!("staging i32 buffer: {e:?}"))
 }

@@ -189,6 +189,33 @@ impl Manifest {
     }
 }
 
+impl Manifest {
+    /// Test-support constructor: a manifest carrying only `wpos` weight
+    /// entries (no modules, no files on disk), so model wrappers can be
+    /// built against stub backends without compiled artifacts. Every
+    /// listed capacity shares the same `wpos` vector.
+    #[doc(hidden)]
+    pub fn stub_for_tests(capacities: &[usize], wpos: Vec<f32>) -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            vocab: vocab::VOCAB,
+            qlen: vocab::QLEN,
+            window: vocab::WINDOW,
+            batch: vocab::BATCH,
+            chunk: vocab::CHUNK,
+            modules: Vec::new(),
+            weights: capacities
+                .iter()
+                .map(|d| WeightEntry {
+                    file: PathBuf::new(),
+                    d: *d,
+                    wpos: wpos.clone(),
+                })
+                .collect(),
+        }
+    }
+}
+
 /// Default artifact dir: `$MINIONS_ARTIFACTS` or `<repo>/artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
     if let Ok(p) = std::env::var("MINIONS_ARTIFACTS") {

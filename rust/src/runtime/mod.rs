@@ -10,7 +10,7 @@ pub mod native;
 pub mod weights;
 
 pub use engine::{EmbedRequest, Engine, EngineStats, ScoreRequest, ScoreResponse};
-pub use manifest::{default_artifact_dir, Manifest, ModuleSpec};
+pub use manifest::{default_artifact_dir, Manifest, ModuleSpec, WeightEntry};
 pub use native::NativeBackend;
 pub use weights::{Tensor, WeightFile};
 
@@ -22,6 +22,17 @@ pub trait Backend: Send + Sync {
     fn score(&self, req: ScoreRequest) -> Result<ScoreResponse>;
     fn embed(&self, req: EmbedRequest) -> Result<Vec<f32>>;
     fn name(&self) -> &'static str;
+}
+
+/// Combined hot-path statistics: engine-level dispatch counters plus the
+/// dynamic batcher's row/occupancy view (the serving-efficiency headline).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    /// engine counters; `None` when the backend has no engine thread
+    /// (e.g. the native oracle)
+    pub engine: Option<EngineStats>,
+    /// shared-batcher counters; `None` when scoring bypasses the batcher
+    pub batcher: Option<crate::sched::BatcherSnapshot>,
 }
 
 /// PJRT-backed production backend. `mpsc::Sender` is `!Sync`, so the

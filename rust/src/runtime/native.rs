@@ -2,13 +2,16 @@
 //!
 //! Implements exactly the math of the lowered HLO modules (gather ->
 //! weighted window pooling -> masked dot scores -> logsumexp) directly on
-//! the weight tensors. Two roles:
+//! the weight tensors. Three roles:
 //!
 //! 1. **Cross-language oracle**: integration tests assert PJRT outputs
 //!    match this implementation on the same weights (the HLO path and the
 //!    native path must agree to float tolerance).
 //! 2. **Fast test backend**: protocol/unit tests run against this backend
 //!    so they don't need artifact compilation.
+//! 3. **Offline engine kernel**: without the `xla-pjrt` feature the
+//!    engine thread executes [`score_kernel`] / [`embed_kernel`] directly
+//!    (see `runtime::engine`), so the serving stack runs everywhere.
 
 use super::engine::{EmbedRequest, ScoreRequest, ScoreResponse};
 use super::manifest::Manifest;
@@ -24,6 +27,113 @@ struct ModelWeights {
     d: usize,
     emb: Vec<f32>,  // [V, d]
     wpos: Vec<f32>, // [W]
+}
+
+/// Score one full batch: mirrors `python/compile/model.py::local_score_fn`.
+/// `emb` is the `[V, d]` embedding table, `wpos` the window weights.
+/// Shapes are the caller's responsibility (`[BATCH*QLEN]` / `[BATCH*CHUNK]`).
+pub(crate) fn score_kernel(emb: &[f32], wpos: &[f32], d: usize, req: &ScoreRequest) -> ScoreResponse {
+    let b = BATCH;
+    let window = wpos.len();
+    let mut scores = vec![NEG_INF; b * CHUNK];
+    let mut lse = vec![0f32; b];
+    let mut q = vec![0f32; d];
+    // reusable masked-embedding buffer for one row
+    let mut ce = vec![0f32; CHUNK * d];
+    for bi in 0..b {
+        // pooled query
+        q.iter_mut().for_each(|x| *x = 0.0);
+        for j in 0..QLEN {
+            let wgt = req.q_weights[bi * QLEN + j];
+            if wgt == 0.0 {
+                continue;
+            }
+            let tok = req.q_tokens[bi * QLEN + j] as usize;
+            let row = &emb[tok * d..(tok + 1) * d];
+            for (qk, ek) in q.iter_mut().zip(row) {
+                *qk += wgt * ek;
+            }
+        }
+        // masked token embeddings
+        for c in 0..CHUNK {
+            let m = req.c_mask[bi * CHUNK + c];
+            let dst = &mut ce[c * d..(c + 1) * d];
+            if m == 0.0 {
+                dst.iter_mut().for_each(|x| *x = 0.0);
+            } else {
+                let tok = req.c_tokens[bi * CHUNK + c] as usize;
+                let row = &emb[tok * d..(tok + 1) * d];
+                for (o, e) in dst.iter_mut().zip(row) {
+                    *o = m * e;
+                }
+            }
+        }
+        // windowed score: s[c] = q . sum_j wpos[j]*ce[c+j]
+        let mut max_s = NEG_INF;
+        for c in 0..CHUNK {
+            let m = req.c_mask[bi * CHUNK + c];
+            if m == 0.0 {
+                continue; // stays NEG_INF
+            }
+            let mut s = 0f32;
+            for (j, &wj) in wpos.iter().enumerate().take(window) {
+                if c + j >= CHUNK {
+                    break;
+                }
+                let row = &ce[(c + j) * d..(c + j + 1) * d];
+                let mut dot = 0f32;
+                for (qk, ek) in q.iter().zip(row) {
+                    dot += qk * ek;
+                }
+                s += wj * dot;
+            }
+            scores[bi * CHUNK + c] = s;
+            if s > max_s {
+                max_s = s;
+            }
+        }
+        // logsumexp over the row
+        let mut sum = 0f64;
+        for c in 0..CHUNK {
+            let s = scores[bi * CHUNK + c];
+            if s > NEG_INF / 2.0 {
+                sum += ((s - max_s) as f64).exp();
+            }
+        }
+        lse[bi] = if sum > 0.0 {
+            max_s + (sum as f32).ln()
+        } else {
+            NEG_INF
+        };
+    }
+    ScoreResponse { scores, lse }
+}
+
+/// Mean-pool chunk embedding: mirrors `embed_fn`.
+pub(crate) fn embed_kernel(emb: &[f32], d: usize, req: &EmbedRequest) -> Vec<f32> {
+    let b = BATCH;
+    let mut out = vec![0f32; b * d];
+    for bi in 0..b {
+        let mut count = 0f32;
+        for c in 0..CHUNK {
+            let m = req.c_mask[bi * CHUNK + c];
+            if m == 0.0 {
+                continue;
+            }
+            count += m;
+            let tok = req.c_tokens[bi * CHUNK + c] as usize;
+            let row = &emb[tok * d..(tok + 1) * d];
+            let dst = &mut out[bi * d..(bi + 1) * d];
+            for (o, e) in dst.iter_mut().zip(row) {
+                *o += m * e;
+            }
+        }
+        let denom = count.max(1.0);
+        for o in &mut out[bi * d..(bi + 1) * d] {
+            *o /= denom;
+        }
+    }
+    out
 }
 
 pub struct NativeBackend {
@@ -73,118 +183,21 @@ impl NativeBackend {
         Ok(w)
     }
 
-    /// Score one batch: mirrors `python/compile/model.py::local_score_fn`.
+    /// Score one batch through the shared kernel.
     pub fn score(&self, req: &ScoreRequest) -> Result<ScoreResponse> {
         let w = self.weights(req.d)?;
-        let d = w.d;
-        let b = BATCH;
-        if req.q_tokens.len() != b * QLEN || req.c_tokens.len() != b * CHUNK {
+        if req.q_tokens.len() != BATCH * QLEN || req.c_tokens.len() != BATCH * CHUNK {
             bail!("native score shape mismatch");
         }
-        let window = w.wpos.len();
-        let mut scores = vec![NEG_INF; b * CHUNK];
-        let mut lse = vec![0f32; b];
-        let mut q = vec![0f32; d];
-        // reusable masked-embedding buffer for one row
-        let mut ce = vec![0f32; CHUNK * d];
-        for bi in 0..b {
-            // pooled query
-            q.iter_mut().for_each(|x| *x = 0.0);
-            for j in 0..QLEN {
-                let wgt = req.q_weights[bi * QLEN + j];
-                if wgt == 0.0 {
-                    continue;
-                }
-                let tok = req.q_tokens[bi * QLEN + j] as usize;
-                let row = &w.emb[tok * d..(tok + 1) * d];
-                for (qk, ek) in q.iter_mut().zip(row) {
-                    *qk += wgt * ek;
-                }
-            }
-            // masked token embeddings
-            for c in 0..CHUNK {
-                let m = req.c_mask[bi * CHUNK + c];
-                let dst = &mut ce[c * d..(c + 1) * d];
-                if m == 0.0 {
-                    dst.iter_mut().for_each(|x| *x = 0.0);
-                } else {
-                    let tok = req.c_tokens[bi * CHUNK + c] as usize;
-                    let row = &w.emb[tok * d..(tok + 1) * d];
-                    for (o, e) in dst.iter_mut().zip(row) {
-                        *o = m * e;
-                    }
-                }
-            }
-            // windowed score: s[c] = q . sum_j wpos[j]*ce[c+j]
-            let mut max_s = NEG_INF;
-            for c in 0..CHUNK {
-                let m = req.c_mask[bi * CHUNK + c];
-                if m == 0.0 {
-                    continue; // stays NEG_INF
-                }
-                let mut s = 0f32;
-                for (j, &wj) in w.wpos.iter().enumerate().take(window) {
-                    if c + j >= CHUNK {
-                        break;
-                    }
-                    let row = &ce[(c + j) * d..(c + j + 1) * d];
-                    let mut dot = 0f32;
-                    for (qk, ek) in q.iter().zip(row) {
-                        dot += qk * ek;
-                    }
-                    s += wj * dot;
-                }
-                scores[bi * CHUNK + c] = s;
-                if s > max_s {
-                    max_s = s;
-                }
-            }
-            // logsumexp over the row
-            let mut sum = 0f64;
-            for c in 0..CHUNK {
-                let s = scores[bi * CHUNK + c];
-                if s > NEG_INF / 2.0 {
-                    sum += ((s - max_s) as f64).exp();
-                }
-            }
-            lse[bi] = if sum > 0.0 {
-                max_s + (sum as f32).ln()
-            } else {
-                NEG_INF
-            };
-        }
-        Ok(ScoreResponse { scores, lse })
+        Ok(score_kernel(&w.emb, &w.wpos, w.d, req))
     }
 
-    /// Mean-pool chunk embedding: mirrors `embed_fn`.
+    /// Mean-pool chunk embedding through the shared kernel.
     pub fn embed(&self, req: &EmbedRequest) -> Result<Vec<f32>> {
         let w = self.weights(self.embed_d)?;
-        let d = w.d;
-        let b = BATCH;
-        if req.c_tokens.len() != b * CHUNK {
+        if req.c_tokens.len() != BATCH * CHUNK {
             bail!("native embed shape mismatch");
         }
-        let mut out = vec![0f32; b * d];
-        for bi in 0..b {
-            let mut count = 0f32;
-            for c in 0..CHUNK {
-                let m = req.c_mask[bi * CHUNK + c];
-                if m == 0.0 {
-                    continue;
-                }
-                count += m;
-                let tok = req.c_tokens[bi * CHUNK + c] as usize;
-                let row = &w.emb[tok * d..(tok + 1) * d];
-                let dst = &mut out[bi * d..(bi + 1) * d];
-                for (o, e) in dst.iter_mut().zip(row) {
-                    *o += m * e;
-                }
-            }
-            let denom = count.max(1.0);
-            for o in &mut out[bi * d..(bi + 1) * d] {
-                *o /= denom;
-            }
-        }
-        Ok(out)
+        Ok(embed_kernel(&w.emb, w.d, req))
     }
 }

@@ -1,7 +1,27 @@
-//! Serving-side scheduling: a row-level dynamic batcher that coalesces
-//! concurrent scoring work into full PJRT dispatches (the vLLM-style
-//! continuous-batching idea, adapted to fixed-shape B=8 artifacts), plus
-//! dispatch statistics for the metrics endpoint.
+//! Serving-side scheduling: the row-level dynamic batcher that is the
+//! **single scoring path** of the system.
+//!
+//! Every scoring call — protocol job execution, citation verification,
+//! full-context baselines, concurrent HTTP requests — submits individual
+//! [`ScoreRow`]s here. Rows accumulate per capacity `d` and flush as one
+//! fixed-shape `B = BATCH` dispatch when a slot fills, when the oldest
+//! row exceeds `max_wait` (the vLLM-style continuous-batching idea,
+//! adapted to fixed-shape PJRT artifacts), or immediately when the only
+//! in-flight group caller finishes enqueueing — so serial callers never
+//! pay the coalescing window. Because rows are keyed only by `d`, work
+//! from *different* samples, protocols, and server connections coalesces
+//! into full batches — batch occupancy, not per-caller batch assembly,
+//! becomes the serving-efficiency headline ([`BatcherStats`] feeds the
+//! `/metrics` endpoint and `RuntimeStats`).
+//!
+//! Determinism: the backend math is row-independent, so a row's result
+//! does not depend on which other rows shared its dispatch. Parallel
+//! evaluation over the shared batcher is therefore bit-identical to the
+//! serial path (asserted by `tests/parallel_eval.rs`).
+//!
+//! Shutdown: [`DynamicBatcher::stop`] is idempotent; it drains everything
+//! queued and then *rejects* later submissions with an error instead of
+//! letting them block on a queue no flush thread will ever drain.
 
 use crate::runtime::{Backend, ScoreRequest, ScoreResponse};
 use crate::vocab::{BATCH, CHUNK, QLEN};
@@ -9,6 +29,10 @@ use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// Default flush window: long enough for concurrent callers to coalesce,
+/// short enough that a lone partial row costs ~2ms of latency.
+pub const DEFAULT_MAX_WAIT: Duration = Duration::from_millis(2);
 
 /// One row of scoring work (a single job's tensors).
 pub struct ScoreRow {
@@ -22,6 +46,18 @@ pub struct ScoreRow {
 pub struct RowResult {
     pub scores: Vec<f32>,
     pub lse: f32,
+}
+
+/// Claim on a submitted row's result; wait with [`Ticket::wait`].
+pub struct Ticket {
+    rx: mpsc::Receiver<Result<RowResult>>,
+}
+
+impl Ticket {
+    /// Block until the row's batch has executed.
+    pub fn wait(self) -> Result<RowResult> {
+        self.rx.recv().map_err(|_| anyhow!("batcher dropped reply"))?
+    }
 }
 
 struct Pending {
@@ -50,31 +86,75 @@ impl BatcherStats {
     }
 }
 
+/// Point-in-time copy of [`BatcherStats`] for metrics endpoints.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BatcherSnapshot {
+    pub dispatches: u64,
+    pub rows: u64,
+    pub padded_rows: u64,
+    pub flush_timeouts: u64,
+    pub occupancy: f64,
+}
+
+impl BatcherSnapshot {
+    /// Occupancy of the dispatches issued between `earlier` and `self`.
+    pub fn occupancy_since(&self, earlier: &BatcherSnapshot) -> f64 {
+        let d = self.dispatches.saturating_sub(earlier.dispatches);
+        let r = self.rows.saturating_sub(earlier.rows);
+        if d == 0 {
+            0.0
+        } else {
+            r as f64 / (d * BATCH as u64) as f64
+        }
+    }
+}
+
+impl std::fmt::Display for BatcherSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} dispatches, {} rows, occupancy={:.2}",
+            self.dispatches, self.rows, self.occupancy
+        )
+    }
+}
+
 /// Dynamic batcher: rows accumulate per capacity `d`; a batch flushes
-/// when full or when the oldest row exceeds `max_wait`.
+/// when full, when the oldest row exceeds `max_wait`, or — for a group
+/// caller that is momentarily alone — immediately (see [`Self::score_rows`]).
 pub struct DynamicBatcher {
     backend: Arc<dyn Backend>,
     queue: Mutex<Vec<(usize, Vec<Pending>, Instant)>>, // (d, rows, oldest)
     pub stats: BatcherStats,
     max_wait: Duration,
+    /// written under the queue lock (so submit/stop order is well defined),
+    /// read lock-free by the flush thread
     shutdown: AtomicBool,
+    /// number of `score_rows` group callers currently in flight; a lone
+    /// group caller flushes its trailing partial immediately instead of
+    /// paying the `max_wait` stall for coalescing partners that cannot
+    /// exist
+    group_callers: AtomicU64,
 }
 
 impl DynamicBatcher {
     pub fn new(backend: Arc<dyn Backend>, max_wait: Duration) -> Arc<Self> {
+        let max_wait = max_wait.max(Duration::from_micros(200));
         let b = Arc::new(DynamicBatcher {
             backend,
             queue: Mutex::new(Vec::new()),
             stats: BatcherStats::default(),
             max_wait,
             shutdown: AtomicBool::new(false),
+            group_callers: AtomicU64::new(0),
         });
-        // flush thread handles the timeout path
+        // flush thread handles the timeout path; it exits within
+        // max_wait/2 of stop() and holds the only long-lived Arc clone
         let bt = Arc::clone(&b);
         std::thread::Builder::new()
             .name("batch-flush".into())
             .spawn(move || loop {
-                if bt.shutdown.load(Ordering::Relaxed) {
+                if bt.shutdown.load(Ordering::Acquire) {
                     return;
                 }
                 std::thread::sleep(bt.max_wait / 2);
@@ -84,24 +164,41 @@ impl DynamicBatcher {
         b
     }
 
+    /// Drain everything queued and reject all later submissions.
+    /// Idempotent: repeated calls are no-ops.
     pub fn stop(&self) {
-        self.shutdown.store(true, Ordering::Relaxed);
-        // drain whatever is queued
-        self.flush_all();
+        let drained: Vec<(usize, Vec<Pending>, Instant)> = {
+            let mut q = self.queue.lock().unwrap();
+            if self.shutdown.swap(true, Ordering::AcqRel) {
+                return; // already stopped and drained
+            }
+            std::mem::take(&mut *q)
+        };
+        for (d, rows, _) in drained {
+            self.execute(d, rows);
+        }
     }
 
-    /// Submit one row; blocks until its batch executes.
-    pub fn score_row(&self, row: ScoreRow) -> Result<RowResult> {
+    pub fn is_stopped(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// Enqueue one row without waiting. Returns the [`Ticket`] to wait on,
+    /// or an error if the batcher has been stopped.
+    pub fn submit(&self, row: ScoreRow) -> Result<Ticket> {
         let (tx, rx) = mpsc::channel();
         let to_run = {
             let mut q = self.queue.lock().unwrap();
+            if self.shutdown.load(Ordering::Acquire) {
+                return Err(anyhow!("batcher is stopped; row rejected"));
+            }
             let d = row.d;
             let slot = q.iter_mut().find(|(qd, _, _)| *qd == d);
             match slot {
                 Some((_, rows, _)) => rows.push(Pending { row, reply: tx }),
                 None => q.push((d, vec![Pending { row, reply: tx }], Instant::now())),
             }
-            // flush-on-full
+            // flush-on-full, inline on the submitting thread
             let mut to_run = None;
             if let Some(pos) = q.iter().position(|(_, rows, _)| rows.len() >= BATCH) {
                 to_run = Some(q.swap_remove(pos));
@@ -111,7 +208,68 @@ impl DynamicBatcher {
         if let Some((d, rows, _)) = to_run {
             self.execute(d, rows);
         }
-        rx.recv().map_err(|_| anyhow!("batcher dropped reply"))?
+        Ok(Ticket { rx })
+    }
+
+    /// Submit one row; blocks until its batch executes.
+    pub fn score_row(&self, row: ScoreRow) -> Result<RowResult> {
+        self.submit(row)?.wait()
+    }
+
+    /// Submit a group of rows and wait for all results, in input order.
+    /// Full batches dispatch inline as the rows are enqueued. The trailing
+    /// partial batch coalesces with other in-flight group callers' rows
+    /// (or raw `submit` traffic) and otherwise flushes on the `max_wait`
+    /// timeout — except when this is the *only* group caller, in which
+    /// case no coalescing partner can arrive and the partial dispatches
+    /// immediately, so serial evaluation pays no timeout stall.
+    pub fn score_rows(&self, rows: Vec<ScoreRow>) -> Result<Vec<RowResult>> {
+        if rows.is_empty() {
+            return Ok(Vec::new());
+        }
+        let d = rows[0].d;
+        self.group_callers.fetch_add(1, Ordering::AcqRel);
+        let submitted: Result<Vec<Ticket>> =
+            rows.into_iter().map(|r| self.submit(r)).collect();
+        let tickets = match submitted {
+            Ok(t) => t,
+            Err(e) => {
+                self.group_callers.fetch_sub(1, Ordering::AcqRel);
+                return Err(e);
+            }
+        };
+        if self.group_callers.load(Ordering::Acquire) == 1 {
+            // alone: dispatch whatever partial is pending for our capacity
+            self.flush_capacity(d);
+        }
+        let out = tickets.into_iter().map(Ticket::wait).collect();
+        self.group_callers.fetch_sub(1, Ordering::AcqRel);
+        out
+    }
+
+    /// Flush the pending slot for capacity `d`, if any (it may contain
+    /// other callers' rows — they simply get their results early).
+    fn flush_capacity(&self, d: usize) {
+        let slot = {
+            let mut q = self.queue.lock().unwrap();
+            q.iter()
+                .position(|(qd, _, _)| *qd == d)
+                .map(|pos| q.swap_remove(pos))
+        };
+        if let Some((d, rows, _)) = slot {
+            self.execute(d, rows);
+        }
+    }
+
+    /// Read the counters as one consistent-enough snapshot.
+    pub fn snapshot(&self) -> BatcherSnapshot {
+        BatcherSnapshot {
+            dispatches: self.stats.dispatches.load(Ordering::Relaxed),
+            rows: self.stats.rows.load(Ordering::Relaxed),
+            padded_rows: self.stats.padded_rows.load(Ordering::Relaxed),
+            flush_timeouts: self.stats.flush_timeouts.load(Ordering::Relaxed),
+            occupancy: self.stats.occupancy(),
+        }
     }
 
     fn flush_expired(&self) {
@@ -131,14 +289,6 @@ impl DynamicBatcher {
         };
         for (d, rows, _) in expired {
             self.stats.flush_timeouts.fetch_add(1, Ordering::Relaxed);
-            self.execute(d, rows);
-        }
-    }
-
-    fn flush_all(&self) {
-        let all: Vec<(usize, Vec<Pending>, Instant)> =
-            std::mem::take(&mut *self.queue.lock().unwrap());
-        for (d, rows, _) in all {
             self.execute(d, rows);
         }
     }
@@ -271,6 +421,95 @@ mod tests {
         assert_eq!(h2.join().unwrap().scores[0], 2.0);
         // two dispatches (different d queues)
         assert_eq!(b.stats.dispatches.load(Ordering::Relaxed), 2);
+        b.stop();
+    }
+
+    #[test]
+    fn score_rows_preserves_order_and_fills_batches() {
+        // max_wait is far away: full batches dispatch inline and the lone
+        // group caller self-flushes its remainder — no timeout involved.
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_secs(30));
+        let rows: Vec<ScoreRow> = (0..(2 * BATCH as i32 + 3)).map(row).collect();
+        let results = b.score_rows(rows).unwrap();
+        assert_eq!(results.len(), 2 * BATCH + 3);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.scores[0], i as f32, "row {i} out of order");
+        }
+        // two full inline dispatches + the self-flushed remainder
+        assert_eq!(b.stats.dispatches.load(Ordering::Relaxed), 3);
+        assert_eq!(b.stats.flush_timeouts.load(Ordering::Relaxed), 0);
+        assert_eq!(
+            b.stats.padded_rows.load(Ordering::Relaxed),
+            (BATCH - 3) as u64
+        );
+        b.stop();
+    }
+
+    #[test]
+    fn partial_groups_coalesce_with_pending_submissions() {
+        // Half a batch parked via raw submit(), then a group caller with
+        // the other half: its last row completes the batch, so everything
+        // lands in ONE full dispatch (timeout is far away, so coalescing
+        // is the only way the parked tickets resolve promptly).
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_secs(30));
+        let half = BATCH as i32 / 2;
+        let parked: Vec<Ticket> = (0..half).map(|i| b.submit(row(i)).unwrap()).collect();
+        assert_eq!(b.stats.dispatches.load(Ordering::Relaxed), 0);
+        let r2 = b
+            .score_rows((half..2 * half).map(row).collect())
+            .unwrap();
+        for (i, r) in r2.iter().enumerate() {
+            assert_eq!(r.scores[0], (half as usize + i) as f32);
+        }
+        for (i, t) in parked.into_iter().enumerate() {
+            assert_eq!(t.wait().unwrap().scores[0], i as f32);
+        }
+        assert_eq!(b.stats.dispatches.load(Ordering::Relaxed), 1);
+        assert!((b.stats.occupancy() - 1.0).abs() < 1e-9);
+        b.stop();
+    }
+
+    #[test]
+    fn lone_group_caller_does_not_wait_for_the_timeout() {
+        // With a 30s max_wait, a partial group can only return promptly
+        // via the lone-caller self-flush; a regression here hangs the test.
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_secs(30));
+        let r = b.score_rows((0..3).map(row).collect()).unwrap();
+        assert_eq!(r.len(), 3);
+        assert_eq!(b.stats.dispatches.load(Ordering::Relaxed), 1);
+        assert_eq!(b.stats.flush_timeouts.load(Ordering::Relaxed), 0);
+        b.stop();
+    }
+
+    #[test]
+    fn stop_rejects_late_rows_and_is_idempotent() {
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_millis(10));
+        let r = b.score_row(row(3)).unwrap();
+        assert_eq!(r.scores[0], 3.0);
+        b.stop();
+        b.stop(); // idempotent: second call is a no-op
+        assert!(b.is_stopped());
+        // a row submitted after stop() must error out instead of blocking
+        // forever on a queue no flush thread will ever drain
+        let err = b.score_row(row(4)).unwrap_err();
+        assert!(err.to_string().contains("stopped"), "got: {err}");
+        assert!(b.submit(row(5)).is_err());
+    }
+
+    #[test]
+    fn snapshot_and_interval_occupancy() {
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_millis(10));
+        let before = b.snapshot();
+        assert_eq!(before.dispatches, 0);
+        assert_eq!(before.occupancy, 0.0);
+        b.score_rows((0..BATCH as i32).map(row).collect()).unwrap();
+        let mid = b.snapshot();
+        assert_eq!(mid.dispatches, 1);
+        assert!((mid.occupancy - 1.0).abs() < 1e-9);
+        b.score_row(row(0)).unwrap(); // padded partial
+        let after = b.snapshot();
+        assert_eq!(after.dispatches, 2);
+        assert!((after.occupancy_since(&mid) - 1.0 / BATCH as f64).abs() < 1e-9);
         b.stop();
     }
 }

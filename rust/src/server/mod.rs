@@ -6,14 +6,19 @@
 //!   "protocol":"minions"}` → runs the protocol on the preloaded sample
 //!   and returns answer/score/cost/latency.
 //! - `GET  /healthz`   liveness
-//! - `GET  /metrics`   counters (requests, accuracy-so-far, token totals)
+//! - `GET  /metrics`   counters (requests, accuracy-so-far, token totals,
+//!   dynamic-batcher dispatch/occupancy gauges when a batcher is attached)
 //!
 //! The serving path is entirely Rust + PJRT: no Python anywhere.
+//! Concurrent requests score through the shared `DynamicBatcher`, so load
+//! from different connections coalesces into full dispatches — `/metrics`
+//! exposes the resulting `batch_occupancy`.
 
 use crate::cost::CostModel;
 use crate::data::Dataset;
 use crate::eval::score_strict;
 use crate::protocol::Protocol;
+use crate::sched::DynamicBatcher;
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
@@ -22,7 +27,7 @@ use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 #[derive(Default)]
@@ -40,6 +45,9 @@ pub struct ServerState {
     pub protocols: HashMap<String, Arc<dyn Protocol>>,
     pub metrics: Metrics,
     pub seed: u64,
+    /// the shared scoring batcher, when the protocols route through one —
+    /// surfaces dispatch/occupancy gauges on `/metrics`
+    pub batcher: Option<Arc<DynamicBatcher>>,
 }
 
 pub struct Server {
@@ -175,7 +183,7 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<String> {
             } else {
                 m.latency_us_total.load(Ordering::Relaxed) as f64 / requests as f64 / 1000.0
             };
-            Ok(Json::obj(vec![
+            let mut fields = vec![
                 ("requests", Json::num(requests as f64)),
                 ("errors", Json::num(m.errors.load(Ordering::Relaxed) as f64)),
                 ("correct", Json::num(m.correct.load(Ordering::Relaxed) as f64)),
@@ -188,8 +196,16 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<String> {
                     Json::num(m.remote_decode.load(Ordering::Relaxed) as f64),
                 ),
                 ("mean_latency_ms", Json::num(mean_latency_ms)),
-            ])
-            .to_string())
+            ];
+            if let Some(batcher) = &state.batcher {
+                let b = batcher.snapshot();
+                fields.push(("batch_dispatches", Json::num(b.dispatches as f64)));
+                fields.push(("batch_rows", Json::num(b.rows as f64)));
+                fields.push(("batch_padded_rows", Json::num(b.padded_rows as f64)));
+                fields.push(("batch_flush_timeouts", Json::num(b.flush_timeouts as f64)));
+                fields.push(("batch_occupancy", Json::num(b.occupancy)));
+            }
+            Ok(Json::obj(fields).to_string())
         }
         ("POST", "/v1/query") => {
             let body = Json::parse(&req.body).map_err(|e| anyhow!("bad json: {e}"))?;
@@ -289,7 +305,7 @@ pub fn http_get(addr: &str, path: &str) -> Result<String> {
     Ok(body.to_string())
 }
 
-/// Guard for tests: state with a stub protocol.
+/// Guard for tests: state with a stub protocol (no batcher attached).
 pub fn state_with(
     datasets: HashMap<String, Dataset>,
     protocols: HashMap<String, Arc<dyn Protocol>>,
@@ -300,12 +316,9 @@ pub fn state_with(
         protocols,
         metrics: Metrics::default(),
         seed,
+        batcher: None,
     })
 }
-
-// Mutex import kept for future session state; silence if unused.
-#[allow(unused)]
-fn _touch(_: &Mutex<()>) {}
 
 #[cfg(test)]
 mod tests {
@@ -368,6 +381,71 @@ mod tests {
         let metrics = http_get(&addr, "/metrics").unwrap();
         let m = Json::parse(&metrics).unwrap();
         assert_eq!(m.get("requests").unwrap().as_u64(), Some(1));
+        // no batcher attached => no occupancy gauges
+        assert!(m.get("batch_occupancy").is_none());
         h.join().unwrap();
+    }
+
+    /// Backend stub for the metrics test: constant scores.
+    struct Flat;
+
+    impl crate::runtime::Backend for Flat {
+        fn score(
+            &self,
+            _req: crate::runtime::ScoreRequest,
+        ) -> Result<crate::runtime::ScoreResponse> {
+            use crate::vocab::{BATCH, CHUNK};
+            Ok(crate::runtime::ScoreResponse {
+                scores: vec![0.5; BATCH * CHUNK],
+                lse: vec![1.0; BATCH],
+            })
+        }
+
+        fn embed(&self, _req: crate::runtime::EmbedRequest) -> Result<Vec<f32>> {
+            unimplemented!()
+        }
+
+        fn name(&self) -> &'static str {
+            "flat"
+        }
+    }
+
+    #[test]
+    fn metrics_expose_batcher_occupancy_when_attached() {
+        use crate::sched::ScoreRow;
+        use crate::vocab::{CHUNK, QLEN};
+
+        let batcher = DynamicBatcher::new(
+            Arc::new(Flat),
+            std::time::Duration::from_millis(5),
+        );
+        batcher
+            .score_row(ScoreRow {
+                d: 128,
+                q_tokens: vec![0; QLEN],
+                q_weights: vec![0.0; QLEN],
+                c_tokens: vec![0; CHUNK],
+                c_mask: vec![1.0; CHUNK],
+            })
+            .unwrap();
+
+        let state = Arc::new(ServerState {
+            datasets: HashMap::new(),
+            protocols: HashMap::new(),
+            metrics: Metrics::default(),
+            seed: 1,
+            batcher: Some(Arc::clone(&batcher)),
+        });
+        let server = Server::bind(state, "127.0.0.1:0", 1).unwrap();
+        let addr = server.addr.to_string();
+        let h = std::thread::spawn(move || server.serve(Some(1)).unwrap());
+        let metrics = http_get(&addr, "/metrics").unwrap();
+        h.join().unwrap();
+        let m = Json::parse(&metrics).unwrap();
+        assert_eq!(m.get("batch_dispatches").unwrap().as_u64(), Some(1));
+        assert_eq!(m.get("batch_rows").unwrap().as_u64(), Some(1));
+        let occ = m.get("batch_occupancy").unwrap().as_f64().unwrap();
+        assert!((occ - 1.0 / crate::vocab::BATCH as f64).abs() < 1e-9);
+        batcher.stop();
     }
 }

@@ -76,6 +76,18 @@ impl Cli {
         self
     }
 
+    /// The standard `--parallel N` eval knob shared by the binaries:
+    /// worker threads for dataset evaluation (1 = serial). Results are
+    /// bit-identical at any value; higher values raise batch occupancy
+    /// by coalescing rows across samples.
+    pub fn parallel_opt(self) -> Self {
+        self.opt(
+            "parallel",
+            "eval worker threads (1 = serial; bit-identical results)",
+            Some("1"),
+        )
+    }
+
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\nOPTIONS:\n", self.name, self.about);
         for spec in &self.specs {
@@ -170,6 +182,17 @@ mod tests {
         assert_eq!(a.get("dataset"), Some("finance"));
         assert_eq!(a.parse_num("rounds", 0usize), 2);
         assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn parallel_opt_defaults_serial_and_parses() {
+        let c = Cli::new("t", "t").parallel_opt();
+        let a = c.parse_from(Vec::<String>::new()).unwrap();
+        assert_eq!(a.parse_num("parallel", 0usize), 1);
+        let a = c
+            .parse_from(vec!["--parallel".to_string(), "8".to_string()])
+            .unwrap();
+        assert_eq!(a.parse_num("parallel", 0usize), 8);
     }
 
     #[test]

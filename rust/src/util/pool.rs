@@ -94,8 +94,14 @@ impl Pool {
             let f = Arc::clone(&f);
             let done = Arc::clone(&done);
             self.execute(move || {
-                let r = f(item);
-                results.lock().unwrap()[i] = Some(r);
+                // Catch job panics so the completion counter still bumps:
+                // an uncaught panic would kill the worker before the bump
+                // and leave the collector waiting forever. The panic is
+                // re-surfaced as a missing slot when results are taken.
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(item)));
+                if let Ok(v) = r {
+                    results.lock().unwrap()[i] = Some(v);
+                }
                 let (lock, cv) = &*done;
                 *lock.lock().unwrap() += 1;
                 cv.notify_all();
@@ -112,7 +118,7 @@ impl Pool {
         let mut guard = results.lock().unwrap();
         std::mem::take(&mut *guard)
             .into_iter()
-            .map(|o| o.expect("job completed"))
+            .map(|o| o.unwrap_or_else(|| panic!("scope_map job panicked")))
             .collect()
     }
 }
@@ -159,7 +165,6 @@ impl Drop for Pool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::time::Duration;
 
     #[test]
     fn runs_all_jobs() {
@@ -190,17 +195,95 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "scope_map job panicked")]
+    fn scope_map_surfaces_job_panics_instead_of_hanging() {
+        let pool = Pool::new(2, 4);
+        let _ = pool.scope_map(vec![0usize, 1, 2], |x| {
+            assert!(x != 1, "boom");
+            x
+        });
+    }
+
+    #[test]
     fn backpressure_bounds_queue() {
-        // queue of 1 with a slow worker: executes must block, not grow
+        // One worker pinned on a gate + a queue of capacity 1: a second
+        // enqueue must block inside `execute` until the gate opens. The
+        // assertion is an invariant, not a timing: while the gate is
+        // closed a correct pool *cannot* let `submitted` pass 1, so the
+        // check never flakes regardless of scheduling.
         let pool = Pool::new(1, 1);
-        let started = std::time::Instant::now();
-        for _ in 0..4 {
-            pool.execute(|| std::thread::sleep(Duration::from_millis(20)));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        // (attempts, submitted): bumped before / after each execute call
+        let progress = Arc::new((Mutex::new((0usize, 0usize)), Condvar::new()));
+        let ran = Arc::new(AtomicUsize::new(0));
+
+        // j0 occupies the single worker until the gate opens
+        {
+            let gate = Arc::clone(&gate);
+            let ran = Arc::clone(&ran);
+            pool.execute(move || {
+                let (lock, cv) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cv.wait(open).unwrap();
+                }
+                drop(open);
+                ran.fetch_add(1, Ordering::SeqCst);
+            });
         }
-        // 4 jobs x 20ms on 1 thread with queue 1: enqueueing blocked for
-        // at least ~2 job durations
-        assert!(started.elapsed() >= Duration::from_millis(30));
+
+        std::thread::scope(|s| {
+            let submitter = {
+                let progress = Arc::clone(&progress);
+                let ran = Arc::clone(&ran);
+                let pool = &pool;
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        {
+                            let (m, cv) = &*progress;
+                            m.lock().unwrap().0 += 1;
+                            cv.notify_all();
+                        }
+                        let ran = Arc::clone(&ran);
+                        pool.execute(move || {
+                            ran.fetch_add(1, Ordering::SeqCst);
+                        });
+                        {
+                            let (m, cv) = &*progress;
+                            m.lock().unwrap().1 += 1;
+                            cv.notify_all();
+                        }
+                    }
+                })
+            };
+
+            // Wait until the submitter has one job queued (submitted == 1)
+            // and is inside its second `execute` (attempts == 2). Both are
+            // guaranteed to happen; the wait is pure synchronization.
+            {
+                let (m, cv) = &*progress;
+                let mut st = m.lock().unwrap();
+                while !(st.0 >= 2 && st.1 >= 1) {
+                    st = cv.wait(st).unwrap();
+                }
+                // The worker is gated on j0 and the queue (capacity 1)
+                // holds j1, so the second execute cannot have returned.
+                assert_eq!(st.1, 1, "execute returned while the queue was full");
+            }
+
+            // open the gate; worker drains j0, frees the queue, and the
+            // submitter's remaining enqueues go through
+            {
+                let (lock, cv) = &*gate;
+                *lock.lock().unwrap() = true;
+                cv.notify_all();
+            }
+            submitter.join().unwrap();
+        });
+
         pool.wait_idle();
+        assert_eq!(ran.load(Ordering::SeqCst), 4);
+        assert_eq!(progress.0.lock().unwrap().1, 3);
     }
 
     #[test]

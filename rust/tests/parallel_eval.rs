@@ -1,0 +1,185 @@
+//! Parallel-eval integration tests that need no compiled artifacts: a
+//! deterministic pseudo-scoring backend plus a handmade manifest stand in
+//! for the real weights, so these run in every environment (the tier-1
+//! gate included).
+//!
+//! What they pin down:
+//! - serial [`run_protocol`] and parallel [`run_protocol_on`] produce
+//!   **bit-identical** accuracy, scores, and ledger totals at 1, 4, and 8
+//!   threads (the batcher may compose batches differently — results must
+//!   not care);
+//! - two MinionS runs executing concurrently through the shared batcher
+//!   keep batch occupancy above 0.5;
+//! - a stopped batcher fails protocol runs with an error instead of
+//!   hanging them.
+
+use minions::data;
+use minions::eval::{run_protocol, run_protocol_on, run_protocol_parallel, RunResult};
+use minions::model::{local, remote, LocalLm, RemoteLm};
+use minions::protocol::{LocalOnly, MinionS, MinionsConfig, Protocol};
+use minions::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
+use minions::sched::DynamicBatcher;
+use minions::util::pool::Pool;
+use minions::vocab::{BATCH, CHUNK, QLEN};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// SplitMix64-style mixer for the pseudo scorer.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic, content-sensitive, **row-independent** scorer: each
+/// row's scores depend only on that row's tensors, never on which other
+/// rows shared the dispatch — the property that makes dynamic batching
+/// transparent to results. Scores use the full f32 mantissa so exact
+/// ties (which would fall to tie-break order) are vanishingly rare.
+struct PseudoBackend;
+
+impl Backend for PseudoBackend {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        let mut scores = vec![-1.0e30f32; BATCH * CHUNK];
+        let mut lse = vec![0f32; BATCH];
+        for b in 0..BATCH {
+            let q0 = req.q_tokens[b * QLEN] as u64;
+            let q1 = req.q_tokens[b * QLEN + 1] as u64;
+            for c in 0..CHUNK {
+                if req.c_mask[b * CHUNK + c] == 0.0 {
+                    continue;
+                }
+                let t = req.c_tokens[b * CHUNK + c] as u64;
+                let h = mix(q0 ^ (q1 << 16) ^ (t << 32) ^ ((c as u64) << 48) ^ ((req.d as u64) << 60));
+                scores[b * CHUNK + c] = ((h >> 11) as f64 / (1u64 << 53) as f64 * 1.5) as f32;
+            }
+            lse[b] = 1.0;
+        }
+        Ok(ScoreResponse { scores, lse })
+    }
+
+    fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
+        unimplemented!("not used by these protocols")
+    }
+
+    fn name(&self) -> &'static str {
+        "pseudo"
+    }
+}
+
+fn stack(max_wait: Duration) -> (Arc<DynamicBatcher>, Arc<LocalLm>, Arc<RemoteLm>) {
+    let batcher = DynamicBatcher::new(Arc::new(PseudoBackend), max_wait);
+    // one wpos entry per capacity the profiles use (local 128, reader 1024)
+    let manifest = Manifest::stub_for_tests(&[64, 128, 256, 1024], vec![1.0, 0.5, 0.25]);
+    let local =
+        Arc::new(LocalLm::new(Arc::clone(&batcher), &manifest, local::LLAMA_3B).unwrap());
+    let remote =
+        Arc::new(RemoteLm::new(Arc::clone(&batcher), &manifest, remote::GPT_4O).unwrap());
+    (batcher, local, remote)
+}
+
+fn assert_identical(serial: &RunResult, par: &RunResult, label: &str) {
+    assert_eq!(serial.scores, par.scores, "{label}: scores diverged");
+    assert_eq!(
+        serial.accuracy.to_bits(),
+        par.accuracy.to_bits(),
+        "{label}: accuracy diverged"
+    );
+    assert_eq!(serial.cost.total, par.cost.total, "{label}: ledger diverged");
+    assert_eq!(serial.cost.n, par.cost.n, "{label}: sample count diverged");
+    assert_eq!(serial.mean_rounds, par.mean_rounds, "{label}: rounds diverged");
+    for (i, (a, b)) in serial.outcomes.iter().zip(&par.outcomes).enumerate() {
+        assert_eq!(a.answer, b.answer, "{label}: answer {i} diverged");
+        assert_eq!(a.ledger, b.ledger, "{label}: ledger {i} diverged");
+        assert_eq!(a.rounds, b.rounds, "{label}: rounds {i} diverged");
+    }
+}
+
+#[test]
+fn parallel_minions_eval_is_bit_identical_at_1_4_8_threads() {
+    let (batcher, local, remote) = stack(Duration::from_millis(2));
+    let proto: Arc<dyn Protocol> = Arc::new(MinionS::new(
+        Arc::clone(&local),
+        remote,
+        MinionsConfig::default(),
+    ));
+    // Multi-part queries force retry rounds; the context sweep exercises
+    // multi-chunk decomposition — together they cover the protocol loop.
+    for ds in [
+        data::micro::multistep_sweep(2, 6, 3),
+        data::micro::context_sweep(2, 6, 4),
+    ] {
+        let serial = run_protocol(proto.as_ref(), &ds, 11, true).unwrap();
+        for threads in [1usize, 4, 8] {
+            let pool = Pool::new(threads, threads * 2);
+            let par =
+                run_protocol_on(Arc::clone(&proto), &ds, 11, true, &pool).unwrap();
+            assert_identical(&serial, &par, &format!("{} x{threads}", ds.name));
+        }
+    }
+    batcher.stop();
+}
+
+#[test]
+fn parallel_local_only_eval_is_bit_identical() {
+    let (batcher, local, _remote) = stack(Duration::from_millis(2));
+    let proto: Arc<dyn Protocol> = Arc::new(LocalOnly::new(local));
+    let ds = data::micro::context_sweep(4, 8, 9);
+    let serial = run_protocol(proto.as_ref(), &ds, 5, true).unwrap();
+    for threads in [4usize, 8] {
+        let par = run_protocol_parallel(Arc::clone(&proto), &ds, 5, true, threads).unwrap();
+        assert_identical(&serial, &par, &format!("local-only x{threads}"));
+    }
+    batcher.stop();
+}
+
+#[test]
+fn concurrent_minions_runs_keep_occupancy_above_half() {
+    // 8 chunks x 1 task = a full batch per sample-round, so local rows
+    // dominate the dispatch mix and occupancy stays high even before the
+    // cross-run coalescing the shared batcher adds on top.
+    let (batcher, local, remote) = stack(Duration::from_millis(20));
+    let proto: Arc<dyn Protocol> = Arc::new(MinionS::new(
+        Arc::clone(&local),
+        remote,
+        MinionsConfig::default(),
+    ));
+    let ds = data::micro::context_sweep(8, 3, 7);
+    std::thread::scope(|s| {
+        let a = {
+            let proto = Arc::clone(&proto);
+            let ds = &ds;
+            s.spawn(move || run_protocol(proto.as_ref(), ds, 21, true).unwrap())
+        };
+        let b = {
+            let proto = Arc::clone(&proto);
+            let ds = &ds;
+            s.spawn(move || run_protocol(proto.as_ref(), ds, 22, true).unwrap())
+        };
+        a.join().unwrap();
+        b.join().unwrap();
+    });
+    let snap = batcher.snapshot();
+    assert!(snap.dispatches > 0);
+    assert!(
+        snap.occupancy > 0.5,
+        "two concurrent MinionS runs should batch efficiently, got {:.3} ({snap:?})",
+        snap.occupancy
+    );
+    batcher.stop();
+}
+
+#[test]
+fn stopped_batcher_fails_protocol_runs_instead_of_hanging() {
+    let (batcher, local, _remote) = stack(Duration::from_millis(2));
+    batcher.stop();
+    let proto = LocalOnly::new(local);
+    let ds = data::micro::multistep_sweep(1, 1, 2);
+    let err = run_protocol(&proto, &ds, 3, true).unwrap_err();
+    assert!(
+        err.to_string().contains("stopped"),
+        "expected a stopped-batcher error, got: {err}"
+    );
+}

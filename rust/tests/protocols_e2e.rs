@@ -1,16 +1,18 @@
 //! End-to-end protocol integration on the native backend: the full
 //! decompose→execute→aggregate loop over generated datasets, asserting
 //! the paper's *ordering* properties (remote-only ≥ minions ≥ minion ≥
-//! local-only on accuracy; reversed on remote cost).
+//! local-only on accuracy; reversed on remote cost). All scoring flows
+//! through a shared `DynamicBatcher`, exactly as in the real stack.
 
 use minions::data;
-use minions::eval::run_protocol;
+use minions::eval::{run_protocol, run_protocol_parallel};
 use minions::model::{local, remote, LocalLm, RemoteLm};
-use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, RemoteOnly};
+use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
 use minions::runtime::{default_artifact_dir, Backend, Manifest, NativeBackend};
+use minions::sched::{DynamicBatcher, DEFAULT_MAX_WAIT};
 use std::sync::Arc;
 
-fn setup() -> Option<(Arc<dyn Backend>, Manifest)> {
+fn setup() -> Option<(Arc<DynamicBatcher>, Manifest)> {
     let dir = default_artifact_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
@@ -18,16 +20,16 @@ fn setup() -> Option<(Arc<dyn Backend>, Manifest)> {
     }
     let manifest = Manifest::load(&dir).unwrap();
     let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new(manifest.clone()).unwrap());
-    Some((backend, manifest))
+    Some((DynamicBatcher::new(backend, DEFAULT_MAX_WAIT), manifest))
 }
 
 #[test]
 fn minions_beats_local_and_costs_less_than_remote() {
-    let Some((backend, manifest)) = setup() else {
+    let Some((batcher, manifest)) = setup() else {
         return;
     };
-    let local = Arc::new(LocalLm::new(backend.clone(), &manifest, local::LLAMA_8B).unwrap());
-    let remote = Arc::new(RemoteLm::new(backend.clone(), &manifest, remote::GPT_4O).unwrap());
+    let local = Arc::new(LocalLm::new(batcher.clone(), &manifest, local::LLAMA_8B).unwrap());
+    let remote = Arc::new(RemoteLm::new(batcher.clone(), &manifest, remote::GPT_4O).unwrap());
 
     let ds = data::generate("finance", 12, 99);
     let r_remote = run_protocol(&RemoteOnly::new(remote.clone()), &ds, 1, true).unwrap();
@@ -57,11 +59,11 @@ fn minions_beats_local_and_costs_less_than_remote() {
 
 #[test]
 fn minion_chat_is_cheapest_but_weaker_than_minions() {
-    let Some((backend, manifest)) = setup() else {
+    let Some((batcher, manifest)) = setup() else {
         return;
     };
-    let local = Arc::new(LocalLm::new(backend.clone(), &manifest, local::LLAMA_8B).unwrap());
-    let remote = Arc::new(RemoteLm::new(backend.clone(), &manifest, remote::GPT_4O).unwrap());
+    let local = Arc::new(LocalLm::new(batcher.clone(), &manifest, local::LLAMA_8B).unwrap());
+    let remote = Arc::new(RemoteLm::new(batcher.clone(), &manifest, remote::GPT_4O).unwrap());
 
     let ds = data::generate("health", 12, 7);
     let r_minion = run_protocol(&Minion::new(local.clone(), remote.clone(), 3), &ds, 2, true).unwrap();
@@ -85,14 +87,14 @@ fn minion_chat_is_cheapest_but_weaker_than_minions() {
 
 #[test]
 fn capacity_ladder_orders_accuracy() {
-    let Some((backend, manifest)) = setup() else {
+    let Some((batcher, manifest)) = setup() else {
         return;
     };
-    let remote = Arc::new(RemoteLm::new(backend.clone(), &manifest, remote::GPT_4O).unwrap());
+    let remote = Arc::new(RemoteLm::new(batcher.clone(), &manifest, remote::GPT_4O).unwrap());
     let ds = data::generate("qasper", 12, 3);
     let mut accs = Vec::new();
     for profile in [local::LLAMA_1B, local::LLAMA_3B, local::LLAMA_8B] {
-        let local = Arc::new(LocalLm::new(backend.clone(), &manifest, profile).unwrap());
+        let local = Arc::new(LocalLm::new(batcher.clone(), &manifest, profile).unwrap());
         let r = run_protocol(
             &MinionS::new(local, remote.clone(), MinionsConfig::default()),
             &ds,
@@ -106,4 +108,29 @@ fn capacity_ladder_orders_accuracy() {
     // monotone within slack (small n)
     assert!(accs[2] >= accs[0] - 0.05, "8B {} vs 1B {}", accs[2], accs[0]);
     assert!(accs[2] > 0.4, "8B should be decent: {}", accs[2]);
+}
+
+#[test]
+fn parallel_eval_is_bit_identical_on_real_weights() {
+    let Some((batcher, manifest)) = setup() else {
+        return;
+    };
+    let local = Arc::new(LocalLm::new(batcher.clone(), &manifest, local::LLAMA_8B).unwrap());
+    let remote = Arc::new(RemoteLm::new(batcher.clone(), &manifest, remote::GPT_4O).unwrap());
+    let proto: Arc<dyn Protocol> =
+        Arc::new(MinionS::new(local, remote, MinionsConfig::default()));
+    let ds = data::generate("finance", 10, 17);
+
+    let serial = run_protocol(proto.as_ref(), &ds, 17, true).unwrap();
+    for threads in [2usize, 4, 8] {
+        let par = run_protocol_parallel(Arc::clone(&proto), &ds, 17, true, threads).unwrap();
+        assert_eq!(serial.scores, par.scores, "{threads} threads");
+        assert_eq!(serial.accuracy.to_bits(), par.accuracy.to_bits());
+        assert_eq!(serial.cost.total, par.cost.total);
+        assert_eq!(serial.mean_rounds, par.mean_rounds);
+        for (a, b) in serial.outcomes.iter().zip(&par.outcomes) {
+            assert_eq!(a.answer, b.answer);
+            assert_eq!(a.rounds, b.rounds);
+        }
+    }
 }

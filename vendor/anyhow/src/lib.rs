@@ -1,0 +1,239 @@
+//! Offline-compatible subset of the `anyhow` error-handling API.
+//!
+//! The coordinator builds in an environment with no crates.io access, so
+//! this shim provides exactly the slice the codebase uses: the [`Error`]
+//! type, the [`Result`] alias, the [`anyhow!`] / [`bail!`] macros, and the
+//! [`Context`] extension for `Result` and `Option`. Error chains are
+//! flattened into a single rendered message ("context: cause"), which is
+//! all the callers ever display.
+
+use std::fmt;
+
+/// A rendered, type-erased error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`: that is
+// what makes the blanket `From` below coherent (exactly as in upstream
+// anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(render_chain(&e))
+    }
+}
+
+/// Render `error: source: source...` so no information is lost when the
+/// chain is flattened.
+fn render_chain(e: &(dyn std::error::Error + 'static)) -> String {
+    let mut out = e.to_string();
+    let mut cur = e.source();
+    while let Some(s) = cur {
+        out.push_str(": ");
+        out.push_str(&s.to_string());
+        cur = s.source();
+    }
+    out
+}
+
+/// Shim so `anyhow::Error` converts into `Box<dyn std::error::Error>`
+/// (used by binaries whose `main` returns the boxed form).
+#[derive(Debug)]
+struct BoxedMessage(String);
+
+impl fmt::Display for BoxedMessage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for BoxedMessage {}
+
+impl From<Error> for Box<dyn std::error::Error + Send + Sync + 'static> {
+    fn from(e: Error) -> Self {
+        Box::new(BoxedMessage(e.msg))
+    }
+}
+
+impl From<Error> for Box<dyn std::error::Error + 'static> {
+    fn from(e: Error) -> Self {
+        Box::new(BoxedMessage(e.msg))
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    /// Anything that can become an [`Error`](crate::Error) — both real
+    /// `std::error::Error` types and `Error` itself (so `.context()`
+    /// works on already-anyhow results).
+    pub trait ToError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> ToError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl ToError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// `.context(..)` / `.with_context(..)` for `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: private::ToError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::msg(format!("{context}: {}", e.into_error())))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::msg(format!("{}: {}", context(), e.into_error())))
+    }
+}
+
+impl<T> Context<T, core::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, context: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(context()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("got {n} items");
+        assert_eq!(e.to_string(), "got 3 items");
+        let e = anyhow!("{} and {}", 1, 2);
+        assert_eq!(e.to_string(), "1 and 2");
+    }
+
+    #[test]
+    fn bail_returns_err() {
+        fn f(x: bool) -> Result<u32> {
+            if x {
+                bail!("nope: {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope: 7");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("disk on fire"));
+    }
+
+    #[test]
+    fn context_on_result_option_and_error() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: disk on fire");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+
+        let r: Result<(), Error> = Err(anyhow!("inner"));
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}
