@@ -34,7 +34,13 @@ fn main() -> anyhow::Result<()> {
         Arc::new(Rag::new(gpt4o.clone(), Arc::clone(&exp.backend), Retriever::Dense, 8)),
     ];
 
-    let mut t = Table::new(&["System", "Acc", "$/query", "Remote prefill (k)", "Savings vs remote"]);
+    let mut t = Table::new(&[
+        "System",
+        "Acc",
+        "$/query",
+        "Remote prefill (k)",
+        "Savings vs remote",
+    ]);
     let mut remote_cost = None;
     for sys in &systems {
         let r = run_protocol(sys.as_ref(), &ds, 9, true)?;

@@ -12,6 +12,7 @@ use minions::data;
 use minions::exp::Exp;
 use minions::model::{local, remote};
 use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
+use minions::server::session::SessionRunner;
 use minions::server::{http_get, http_post, Server, ServerState};
 use minions::util::json::Json;
 use minions::util::stats::Summary;
@@ -43,16 +44,32 @@ fn main() -> anyhow::Result<()> {
         metrics: Default::default(),
         seed: 42,
         batcher: Some(exp.batcher()),
+        cache: exp.cache(),
+        sessions: SessionRunner::new(4),
     });
     let server = Server::bind(state, "127.0.0.1:0", 4)?;
     let addr = server.addr.to_string();
     println!("serving on http://{addr}");
 
-    let total_requests = (3 * n_samples) as u64;
+    let total_requests = (3 * n_samples) as u64 + 2;
     let server_thread = std::thread::spawn(move || server.serve(Some(total_requests + 2)));
 
     // health check
     assert!(http_get(&addr, "/healthz")?.contains("ok"));
+
+    // one streamed session first: watch a MinionS run round by round
+    let resp = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"finance","sample":0,"protocol":"minions"}"#,
+    )?;
+    let sid = Json::parse(&resp)?
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .expect("session id");
+    let events = http_get(&addr, &format!("/v1/sessions/{sid}/events"))?;
+    println!("session {sid} events:\n{events}");
+    assert!(events.contains("finalized"));
 
     // drive concurrent clients: every sample of every dataset via minions
     let t0 = std::time::Instant::now();

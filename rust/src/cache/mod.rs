@@ -1,0 +1,371 @@
+//! Cross-request chunk-result caching.
+//!
+//! The MinionS cost win comes from executing many small chunk×task jobs
+//! locally; at serving scale the same (chunk, instruction) pairs recur
+//! constantly — across rounds (the scratchpad strategy re-runs answered
+//! chunks), across repeated samples of one job, and across concurrent
+//! server requests over the same documents. [`ChunkCache`] sits between
+//! job execution (`model::LocalLm::run_jobs`) and the
+//! `sched::DynamicBatcher`: a hit returns the row's scores without
+//! touching the batcher at all, so repeated chunks skip scoring entirely.
+//!
+//! **Keying.** A [`CacheKey`] is the triple
+//! `(model fingerprint, instruction hash, chunk hash)`:
+//! - the *model fingerprint* hashes the scorer capacity `d` and the
+//!   `wpos` weight vector — the two inputs that determine the backend's
+//!   math. Profiles that share an artifact (e.g. `llama-3b` and `qwen-3b`
+//!   both score at d=128 with identical weights) intentionally share
+//!   entries: backend scores are a pure function of the row tensors, and
+//!   profile-specific behaviour (temperature, abstain bias, format
+//!   errors) is applied *after* scoring, per call, with the caller's rng.
+//! - the *instruction hash* covers the query-side tensors
+//!   (`q_tokens`/`q_weights`), i.e. the rendered task keys;
+//! - the *chunk hash* covers the context-side tensors
+//!   (`c_tokens`/`c_mask`).
+//!
+//! **Why caching cannot change results.** The backends are stateless and
+//! row-independent (the property the dynamic batcher already relies on),
+//! so a cached score vector is bit-identical to a recomputed one. All
+//! stochastic post-processing happens downstream of the cache with the
+//! per-sample rng, which is consumed in job order whether a row hit or
+//! missed. `tests/cache_parity.rs` pins this down across every
+//! dataset×protocol pair, including eviction under a tiny capacity.
+//!
+//! **Bounding.** The cache is sharded (16-way) to keep lock contention off
+//! the hot path, and each shard is LRU-bounded; `--cache-capacity` /
+//! `--no-cache` control it from the CLI. Hit/miss/eviction counters feed
+//! `/metrics` and `RuntimeStats`.
+
+use crate::sched::ScoreRow;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default LRU bound (entries across all shards). A cached row holds a
+/// `CHUNK`-length score vector (~2 KiB), so the default costs ~16 MiB.
+pub const DEFAULT_CACHE_CAPACITY: usize = 8192;
+
+const SHARDS: usize = 16;
+
+/// FNV-1a over a stream of `u64` words (deterministic across runs and
+/// platforms — no SipHash random keys).
+fn fnv1a(seed: u64, words: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Fingerprint of a local scorer: capacity + position weights. Two model
+/// wrappers with equal fingerprints produce identical backend scores for
+/// identical rows (see module docs).
+pub fn model_fingerprint(d: usize, wpos: &[f32]) -> u64 {
+    fnv1a(
+        d as u64,
+        wpos.iter().map(|w| w.to_bits() as u64),
+    )
+}
+
+/// Composite key for one scored row (see module docs for the grouping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub model: u64,
+    pub instruction: u64,
+    pub chunk: u64,
+}
+
+impl CacheKey {
+    pub fn for_row(model: u64, row: &ScoreRow) -> CacheKey {
+        let instruction = fnv1a(
+            0x1157,
+            row.q_tokens
+                .iter()
+                .map(|t| *t as u64)
+                .chain(row.q_weights.iter().map(|w| w.to_bits() as u64)),
+        );
+        let chunk = fnv1a(
+            row.d as u64,
+            row.c_tokens
+                .iter()
+                .map(|t| *t as u64)
+                .chain(row.c_mask.iter().map(|m| m.to_bits() as u64)),
+        );
+        CacheKey {
+            model,
+            instruction,
+            chunk,
+        }
+    }
+}
+
+struct Entry {
+    scores: Arc<Vec<f32>>,
+    /// monotone recency stamp; the shard evicts the minimum
+    stamp: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<CacheKey, Entry>,
+}
+
+/// Monotone hit/miss/eviction counters (lock-free reads for `/metrics`).
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    pub hits: AtomicU64,
+    pub misses: AtomicU64,
+    pub insertions: AtomicU64,
+    pub evictions: AtomicU64,
+}
+
+/// Point-in-time copy of [`CacheStats`] for metrics endpoints.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheSnapshot {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+impl CacheSnapshot {
+    /// Fraction of lookups served from cache, in [0,1].
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Hit rate of the lookups issued between `earlier` and `self`.
+    pub fn hit_rate_since(&self, earlier: &CacheSnapshot) -> f64 {
+        let h = self.hits.saturating_sub(earlier.hits);
+        let m = self.misses.saturating_sub(earlier.misses);
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+}
+
+impl std::fmt::Display for CacheSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} hits / {} misses (rate {:.2}), {}/{} entries, {} evictions",
+            self.hits,
+            self.misses,
+            self.hit_rate(),
+            self.entries,
+            self.capacity,
+            self.evictions
+        )
+    }
+}
+
+/// Sharded, LRU-bounded score cache. See the module docs for keying and
+/// the determinism argument.
+pub struct ChunkCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_capacity: usize,
+    capacity: usize,
+    /// global recency clock (Relaxed is fine: only relative order within
+    /// a shard matters, and that is fixed under the shard lock)
+    tick: AtomicU64,
+    pub stats: CacheStats,
+}
+
+impl ChunkCache {
+    /// `capacity` bounds the total entry count; 0 disables storage (every
+    /// lookup misses), which is useful for A/B parity checks.
+    pub fn new(capacity: usize) -> Arc<ChunkCache> {
+        // tiny capacities get fewer shards so per-shard bounds stay ≥ 1
+        let n_shards = SHARDS.min(capacity.max(1));
+        let shard_capacity = (capacity + n_shards - 1) / n_shards;
+        Arc::new(ChunkCache {
+            shards: (0..n_shards).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_capacity,
+            capacity,
+            tick: AtomicU64::new(0),
+            stats: CacheStats::default(),
+        })
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().map.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn shard_of(&self, key: &CacheKey) -> usize {
+        ((key.model ^ key.instruction.rotate_left(17) ^ key.chunk.rotate_left(41)) as usize)
+            % self.shards.len()
+    }
+
+    /// Look a row's scores up; a hit refreshes the entry's recency.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<Vec<f32>>> {
+        let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
+        match shard.map.get_mut(key) {
+            Some(e) => {
+                e.stamp = self.tick.fetch_add(1, Ordering::Relaxed);
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                Some(Arc::clone(&e.scores))
+            }
+            None => {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly-scored row, evicting the shard's least-recently
+    /// used entry if the shard is at its bound.
+    pub fn insert(&self, key: CacheKey, scores: Arc<Vec<f32>>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut shard = self.shards[self.shard_of(&key)].lock().unwrap();
+        let stamp = self.tick.fetch_add(1, Ordering::Relaxed);
+        if shard.map.len() >= self.shard_capacity && !shard.map.contains_key(&key) {
+            let victim = shard
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k);
+            if let Some(victim) = victim {
+                shard.map.remove(&victim);
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        shard.map.insert(key, Entry { scores, stamp });
+        self.stats.insertions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Read the counters as one consistent-enough snapshot.
+    pub fn snapshot(&self) -> CacheSnapshot {
+        CacheSnapshot {
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            insertions: self.stats.insertions.load(Ordering::Relaxed),
+            evictions: self.stats.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vocab::{CHUNK, QLEN};
+
+    fn row(q0: i32, c0: i32) -> ScoreRow {
+        let mut q_tokens = vec![0i32; QLEN];
+        q_tokens[0] = q0;
+        let mut c_tokens = vec![0i32; CHUNK];
+        c_tokens[0] = c0;
+        ScoreRow {
+            d: 128,
+            q_tokens,
+            q_weights: vec![0.5; QLEN],
+            c_tokens,
+            c_mask: vec![1.0; CHUNK],
+        }
+    }
+
+    #[test]
+    fn keys_separate_model_instruction_and_chunk() {
+        let a = CacheKey::for_row(1, &row(10, 20));
+        assert_eq!(a, CacheKey::for_row(1, &row(10, 20)));
+        // different model fingerprint
+        assert_ne!(a, CacheKey::for_row(2, &row(10, 20)));
+        // different instruction (query side)
+        let b = CacheKey::for_row(1, &row(11, 20));
+        assert_eq!(a.chunk, b.chunk);
+        assert_ne!(a.instruction, b.instruction);
+        // different chunk (context side)
+        let c = CacheKey::for_row(1, &row(10, 21));
+        assert_eq!(a.instruction, c.instruction);
+        assert_ne!(a.chunk, c.chunk);
+        // capacity d feeds the chunk hash
+        let mut r = row(10, 20);
+        r.d = 64;
+        assert_ne!(a.chunk, CacheKey::for_row(1, &r).chunk);
+    }
+
+    #[test]
+    fn fingerprint_tracks_weights() {
+        let fp = model_fingerprint(128, &[1.0, 0.5]);
+        assert_eq!(fp, model_fingerprint(128, &[1.0, 0.5]));
+        assert_ne!(fp, model_fingerprint(64, &[1.0, 0.5]));
+        assert_ne!(fp, model_fingerprint(128, &[1.0, 0.25]));
+    }
+
+    #[test]
+    fn hit_miss_and_stats() {
+        let cache = ChunkCache::new(64);
+        let key = CacheKey::for_row(1, &row(1, 1));
+        assert!(cache.get(&key).is_none());
+        cache.insert(key, Arc::new(vec![1.0, 2.0]));
+        let hit = cache.get(&key).expect("inserted");
+        assert_eq!(*hit, vec![1.0, 2.0]);
+        let snap = cache.snapshot();
+        assert_eq!(snap.hits, 1);
+        assert_eq!(snap.misses, 1);
+        assert_eq!(snap.insertions, 1);
+        assert_eq!(snap.entries, 1);
+        assert!((snap.hit_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        // capacity 2 → 2 shards of 1; pick keys landing in ONE shard so
+        // the recency order is what decides the victim
+        let cache = ChunkCache::new(2);
+        let mut keys = Vec::new();
+        let mut c0 = 0;
+        while keys.len() < 3 {
+            let k = CacheKey::for_row(7, &row(1, c0));
+            if cache.shard_of(&k) == 0 {
+                keys.push(k);
+            }
+            c0 += 1;
+        }
+        cache.insert(keys[0], Arc::new(vec![0.0]));
+        cache.insert(keys[1], Arc::new(vec![1.0]));
+        // shard 0 holds only keys[1] (bound 1): keys[0] was evicted
+        assert!(cache.get(&keys[0]).is_none());
+        assert!(cache.get(&keys[1]).is_some());
+        cache.insert(keys[2], Arc::new(vec![2.0]));
+        assert!(cache.get(&keys[1]).is_none());
+        assert!(cache.get(&keys[2]).is_some());
+        assert!(cache.snapshot().evictions >= 2);
+        assert!(cache.len() <= 2);
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let cache = ChunkCache::new(0);
+        let key = CacheKey::for_row(1, &row(1, 1));
+        cache.insert(key, Arc::new(vec![1.0]));
+        assert!(cache.get(&key).is_none());
+        assert_eq!(cache.len(), 0);
+    }
+}

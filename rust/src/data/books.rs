@@ -6,7 +6,9 @@
 //! summary is the set of recovered salient values, scored by weighted
 //! coverage (the stand-in for the paper's 1-5 Claude rubric).
 
-use super::{Answer, ContextBuilder, Dataset, Difficulty, PAGES_PER_CHUNK_MAX, Query, QueryKind, Sample};
+use super::{
+    Answer, ContextBuilder, Dataset, Difficulty, PAGES_PER_CHUNK_MAX, Query, QueryKind, Sample,
+};
 use crate::util::rng::Rng;
 use crate::vocab::{Fact, Key, Token, PAD};
 

@@ -131,7 +131,9 @@ mod tests {
             for page in &doc.pages {
                 for slot in 0..super::super::SLOTS_PER_PAGE {
                     let pos = slot * FACT_SLOT;
-                    if page[pos] == key.0[0] && page[pos + 1] == key.0[1] && page[pos + 2] == key.0[2]
+                    if page[pos] == key.0[0]
+                        && page[pos + 1] == key.0[1]
+                        && page[pos + 2] == key.0[2]
                     {
                         return Some(page[pos + KEY_LEN]);
                     }

@@ -3,7 +3,9 @@
 //! sweeping (a) context length and (b) instruction multi-step-ness, with
 //! the same construction as `python/compile/calibrate.py`.
 
-use super::{Answer, ContextBuilder, Dataset, Difficulty, Query, QueryKind, Sample, PAGES_PER_CHUNK_MAX};
+use super::{
+    Answer, ContextBuilder, Dataset, Difficulty, Query, QueryKind, Sample, PAGES_PER_CHUNK_MAX,
+};
 use crate::util::rng::Rng;
 use crate::vocab::{render_key, Fact, Key, KEY_BASE, KEY_END, Token};
 

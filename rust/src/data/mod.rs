@@ -297,7 +297,12 @@ impl ContextBuilder {
     }
 
     /// Plant the standard distractor tiers for a target key.
-    pub fn plant_distractors(&mut self, target: Key, diff: &Difficulty, key_pool: &dyn Fn(&mut Rng) -> Token) {
+    pub fn plant_distractors(
+        &mut self,
+        target: Key,
+        diff: &Difficulty,
+        key_pool: &dyn Fn(&mut Rng) -> Token,
+    ) {
         for _ in 0..diff.n_share2 {
             let mut k = target.0;
             let idx = self.rng.below(KEY_LEN);

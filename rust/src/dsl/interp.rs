@@ -128,7 +128,10 @@ pub fn run_program(
         .iter()
         .map(|v| match v {
             Value::Job(j) => Ok(j.clone()),
-            other => bail!("job_manifests must contain JobManifest values, got {}", other.type_name()),
+            other => bail!(
+                "job_manifests must contain JobManifest values, got {}",
+                other.type_name()
+            ),
         })
         .collect::<Result<_>>()?;
     if jobs.len() > limits.max_jobs {

@@ -2,20 +2,23 @@
 //! parallel — and the summarisation rubric (paper §3 "Measuring quality"
 //! + §6.5.2).
 //!
-//! The parallel driver ([`run_protocol_parallel`]) maps samples over a
-//! `util::pool::Pool` while every protocol scores through the shared
-//! `sched::DynamicBatcher`, so concurrent samples coalesce into full
-//! fixed-shape dispatches (the wall-clock + occupancy win the paper's
-//! "execute locally in parallel" step promises). Results are
-//! **bit-identical** to the serial path at any thread count because
-//! (a) per-sample rngs are forked from the root serially in dataset
-//! order before any work is dispatched, (b) the backend math is
-//! row-independent, so batch composition cannot change a row's scores,
-//! and (c) outcomes are folded back in dataset order.
+//! Both drivers execute samples through the resumable session machinery
+//! (`protocol::drive` over `Protocol::session`) — the same loop the
+//! server's session workers interleave — so there is exactly one
+//! execution path to reason about. The parallel driver
+//! ([`run_protocol_parallel`]) maps samples over a `util::pool::Pool`
+//! while every protocol scores through the shared `sched::DynamicBatcher`,
+//! so concurrent samples coalesce into full fixed-shape dispatches (the
+//! wall-clock + occupancy win the paper's "execute locally in parallel"
+//! step promises). Results are **bit-identical** to the serial path at
+//! any thread count because (a) per-sample rngs are forked from the root
+//! serially in dataset order before any work is dispatched, (b) the
+//! backend math is row-independent, so batch composition cannot change a
+//! row's scores, and (c) outcomes are folded back in dataset order.
 
 use crate::cost::{CostModel, CostSummary};
 use crate::data::{Answer, Dataset, Sample};
-use crate::protocol::{Outcome, Protocol};
+use crate::protocol::{drive, Outcome, Protocol};
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -151,6 +154,9 @@ fn fold_outcomes(
 }
 
 /// Run a protocol over a dataset with a deterministic per-sample rng.
+/// Each sample runs through the session loop ([`drive`]) — identical to
+/// `protocol.run`, made explicit so eval exercises the same state
+/// machine the streaming server schedules.
 pub fn run_protocol(
     protocol: &dyn Protocol,
     dataset: &Dataset,
@@ -160,7 +166,7 @@ pub fn run_protocol(
     let rngs = sample_rngs(dataset, seed);
     let mut outcomes = Vec::with_capacity(dataset.samples.len());
     for (sample, mut rng) in dataset.samples.iter().zip(rngs) {
-        outcomes.push(protocol.run(sample, &mut rng)?);
+        outcomes.push(drive(protocol.session(sample), &mut rng)?);
     }
     Ok(fold_outcomes(protocol.name(), dataset, outcomes, strict_sets))
 }
@@ -202,7 +208,7 @@ pub fn run_protocol_on(
         let samples = Arc::clone(&samples);
         let protocol = Arc::clone(&protocol);
         pool.scope_map(items, move |(i, mut rng)| {
-            protocol.run(&samples[i], &mut rng)
+            drive(protocol.session(&samples[i]), &mut rng)
         })
     };
     let outcomes: Vec<Outcome> = results.into_iter().collect::<Result<_>>()?;

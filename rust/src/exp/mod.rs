@@ -8,6 +8,7 @@
 //! evaluate datasets over a worker pool — results are bit-identical to
 //! the serial path, tables included.
 
+use crate::cache::{ChunkCache, DEFAULT_CACHE_CAPACITY};
 use crate::data::{self, Dataset};
 use crate::eval::{macro_average, rubric_score, run_protocol, run_protocol_on, RunResult};
 use crate::model::{local, remote, LocalLm, LocalProfile, PlanConfig, RemoteLm, RemoteProfile};
@@ -32,6 +33,10 @@ pub struct Exp {
     /// eval worker threads (1 = serial); results are bit-identical
     pub parallel: usize,
     batcher: Arc<DynamicBatcher>,
+    /// cross-request chunk cache shared by every model wrapper this
+    /// harness builds (None = disabled); results are bit-identical either
+    /// way — the cache only skips recomputation (`tests/cache_parity.rs`)
+    cache: Option<Arc<ChunkCache>>,
     /// lazily-built eval pool, reused across runs (rebuilt on size change)
     pool: Mutex<Option<(usize, Pool)>>,
     /// concrete handle kept alongside `backend` for engine stats
@@ -60,11 +65,27 @@ impl Exp {
             seed,
             parallel: 1,
             batcher,
+            cache: Some(ChunkCache::new(DEFAULT_CACHE_CAPACITY)),
             pool: Mutex::new(None),
             pjrt,
             locals: HashMap::new(),
             remotes: HashMap::new(),
         })
+    }
+
+    /// Replace the chunk cache (`None` disables caching). Clears the
+    /// built model wrappers so later `local()`/`remote()` calls pick the
+    /// new cache up — call this before building protocols.
+    pub fn set_cache(&mut self, cache: Option<Arc<ChunkCache>>) {
+        self.cache = cache;
+        self.locals.clear();
+        self.remotes.clear();
+    }
+
+    /// The shared chunk cache, when enabled (handed to the server for
+    /// `/metrics`).
+    pub fn cache(&self) -> Option<Arc<ChunkCache>> {
+        self.cache.clone()
     }
 
     /// The shared scoring batcher (handed to the server for /metrics).
@@ -77,32 +98,31 @@ impl Exp {
         self.batcher.snapshot()
     }
 
-    /// Combined engine + batcher statistics for the hot path.
+    /// Combined engine + batcher + cache statistics for the hot path.
     pub fn runtime_stats(&self) -> RuntimeStats {
         RuntimeStats {
             engine: self.pjrt.as_ref().map(|p| p.stats()),
             batcher: Some(self.batcher.snapshot()),
+            cache: self.cache.as_ref().map(|c| c.snapshot()),
         }
     }
 
     pub fn local(&mut self, p: LocalProfile) -> Arc<LocalLm> {
         let scorer = Arc::clone(&self.batcher);
+        let cache = self.cache.clone();
         let manifest = &self.manifest;
-        Arc::clone(
-            self.locals
-                .entry(p.name)
-                .or_insert_with(|| Arc::new(LocalLm::new(scorer, manifest, p).unwrap())),
-        )
+        Arc::clone(self.locals.entry(p.name).or_insert_with(|| {
+            Arc::new(LocalLm::with_cache(scorer, manifest, p, cache).unwrap())
+        }))
     }
 
     pub fn remote(&mut self, p: RemoteProfile) -> Arc<RemoteLm> {
         let scorer = Arc::clone(&self.batcher);
+        let cache = self.cache.clone();
         let manifest = &self.manifest;
-        Arc::clone(
-            self.remotes
-                .entry(p.name)
-                .or_insert_with(|| Arc::new(RemoteLm::new(scorer, manifest, p).unwrap())),
-        )
+        Arc::clone(self.remotes.entry(p.name).or_insert_with(|| {
+            Arc::new(RemoteLm::with_cache(scorer, manifest, p, cache).unwrap())
+        }))
     }
 
     fn run_with(&self, proto: Arc<dyn Protocol>, ds: &Dataset, strict: bool) -> Result<RunResult> {
@@ -153,7 +173,11 @@ impl Exp {
         }
         let mut rows: Vec<Row> = Vec::new();
 
-        let grid_row = |exp: &Exp, proto: Arc<dyn Protocol>, label: &str, local: &str| -> Result<Row> {
+        let grid_row = |exp: &Exp,
+                        proto: Arc<dyn Protocol>,
+                        label: &str,
+                        local: &str|
+         -> Result<Row> {
             Ok(Row {
                 proto: label.into(),
                 local: local.into(),
@@ -351,7 +375,8 @@ impl Exp {
             .map(|name| data::generate(name, n, self.seed))
             .collect();
         for rounds in 1..=5usize {
-            let p: Arc<dyn Protocol> = Arc::new(Minion::new(llama3b.clone(), gpt4o.clone(), rounds));
+            let p: Arc<dyn Protocol> =
+                Arc::new(Minion::new(llama3b.clone(), gpt4o.clone(), rounds));
             let results: Vec<RunResult> = datasets
                 .iter()
                 .map(|ds| self.run(Arc::clone(&p), ds))

@@ -96,9 +96,15 @@ pub fn t_minions_remote(
 
 /// Proposition C.1 upper bound on (T_minions_total / T_remote):
 /// 1 + (1+a) * (F_r/F_l) * (L_l d_l)/(L_r d_r)
-pub fn prop_c1_bound(local: &ModelSpec, local_hw: &Hw, remote: &ModelSpec, remote_hw: &Hw, a: f64) -> f64 {
-    1.0 + (1.0 + a) * (remote_hw.flops / local_hw.flops)
-        * (local.layers * local.d) / (remote.layers * remote.d)
+pub fn prop_c1_bound(
+    local: &ModelSpec,
+    local_hw: &Hw,
+    remote: &ModelSpec,
+    remote_hw: &Hw,
+    a: f64,
+) -> f64 {
+    1.0 + (1.0 + a) * (remote_hw.flops / local_hw.flops) * (local.layers * local.d)
+        / (remote.layers * remote.d)
 }
 
 #[cfg(test)]

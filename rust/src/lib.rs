@@ -17,6 +17,7 @@
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for reproduction results.
 
+pub mod cache;
 pub mod cost;
 pub mod data;
 pub mod dsl;

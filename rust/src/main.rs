@@ -12,14 +12,16 @@
 //!   minions bench table1 --n 32 --backend pjrt
 //!   minions serve --port 7171 --config configs/serve.toml
 
+use minions::cache::{ChunkCache, DEFAULT_CACHE_CAPACITY};
 use minions::data;
 use minions::eval::run_protocol_parallel;
 use minions::exp::Exp;
 use minions::model::{local, local_profile, remote, remote_profile, PlanConfig};
 use minions::protocol::MinionsConfig;
 use minions::protocol::{LocalOnly, Minion, MinionS, Protocol, RemoteOnly, RoundStrategy};
+use minions::server::session::SessionRunner;
 use minions::server::{Server, ServerState};
-use minions::util::cli::Cli;
+use minions::util::cli::{Args, Cli};
 use minions::util::config::{load_config, ConfigExt};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -50,11 +52,23 @@ fn main() {
 }
 
 // `--parallel` is added per-command (run/bench), not here: serve handles
-// one sample per request and has no dataset eval to parallelize.
+// one sample per request and has no dataset eval to parallelize. The
+// chunk-cache knobs apply everywhere.
 fn backend_opt(cli: Cli) -> Cli {
     cli.opt("backend", "pjrt | native", Some("pjrt"))
         .opt("seed", "experiment seed", Some("42"))
         .opt("n", "samples per dataset", Some("16"))
+        .cache_opts()
+}
+
+/// Apply `--cache-capacity` / `--no-cache` to a freshly-built harness.
+fn apply_cache_flags(exp: &mut Exp, a: &Args) {
+    let capacity: usize = a.parse_num("cache-capacity", DEFAULT_CACHE_CAPACITY);
+    if a.flag("no-cache") || capacity == 0 {
+        exp.set_cache(None);
+    } else if capacity != DEFAULT_CACHE_CAPACITY {
+        exp.set_cache(Some(ChunkCache::new(capacity)));
+    }
 }
 
 fn cmd_info(_args: Vec<String>) -> i32 {
@@ -112,6 +126,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
             return 1;
         }
     };
+    apply_cache_flags(&mut exp, &a);
     let Some(lp) = local_profile(a.get_or("local", "llama-8b")) else {
         eprintln!("unknown local profile");
         return 2;
@@ -170,6 +185,9 @@ fn cmd_run(args: Vec<String>) -> i32 {
                 r.mean_rounds
             );
             println!("hot path: {b} ({parallel} threads)");
+            if let Some(c) = exp.cache() {
+                println!("chunk cache: {}", c.snapshot());
+            }
             0
         }
         Err(e) => {
@@ -185,7 +203,12 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             .opt("port", "listen port (0 = ephemeral)", Some("7171"))
             .opt("config", "TOML config path", None)
             .opt("max-requests", "stop after N requests (0 = forever)", Some("0"))
-            .opt("workers", "connection worker threads", Some("4")),
+            .opt("workers", "connection worker threads", Some("4"))
+            .opt(
+                "session-workers",
+                "session step worker threads (interleave all in-flight sessions)",
+                Some("4"),
+            ),
     );
     let a = match cli.parse_from(args) {
         Ok(a) => a,
@@ -224,6 +247,7 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             return 1;
         }
     };
+    apply_cache_flags(&mut exp, &a);
     let mut datasets = HashMap::new();
     for name in ["finance", "health", "qasper"] {
         datasets.insert(name.to_string(), data::generate(name, n, seed));
@@ -242,12 +266,15 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     protocols.insert("remote".into(), Arc::new(RemoteOnly::new(gpt4o.clone())));
     protocols.insert("local".into(), Arc::new(LocalOnly::new(llama8b)));
 
+    let session_workers: usize = a.parse_num("session-workers", 4usize).max(1);
     let state = Arc::new(ServerState {
         datasets,
         protocols,
         metrics: Default::default(),
         seed,
         batcher: Some(exp.batcher()),
+        cache: exp.cache(),
+        sessions: SessionRunner::new(session_workers),
     });
     let server = match Server::bind(state, &format!("127.0.0.1:{port}"), workers) {
         Ok(s) => s,
@@ -256,7 +283,10 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             return 1;
         }
     };
-    println!("minions serving on http://{}", server.addr);
+    println!(
+        "minions serving on http://{} ({workers} conn workers, {session_workers} session workers)",
+        server.addr
+    );
     let max: u64 = a.parse_num("max-requests", 0);
     if let Err(e) = server.serve(if max == 0 { None } else { Some(max) }) {
         eprintln!("server error: {e}");
@@ -288,6 +318,7 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
             return 1;
         }
     };
+    apply_cache_flags(&mut exp, &a);
     exp.parallel = a.parse_num("parallel", 1usize).max(1);
     let result = match exhibit.as_str() {
         "table1" => exp.table1(n, Some(std::path::Path::new("figure2.csv"))),
@@ -313,6 +344,9 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
             println!("{table}");
             let b = exp.batcher_snapshot();
             println!("hot path: {b} ({} threads)", exp.parallel);
+            if let Some(c) = exp.cache() {
+                println!("chunk cache: {}", c.snapshot());
+            }
             0
         }
         Err(e) => {

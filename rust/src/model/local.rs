@@ -1,15 +1,20 @@
-//! The LocalLM wrapper: builds per-job score rows, submits them through
-//! the shared [`DynamicBatcher`] (the system's single scoring path), and
+//! The LocalLM wrapper: builds per-job score rows, consults the optional
+//! cross-request [`ChunkCache`], submits the misses through the shared
+//! [`DynamicBatcher`] (the system's single scoring path), and
 //! post-processes scores into the protocol's worker outputs (answer /
 //! citation / abstain). Rows from concurrent samples and protocols
 //! coalesce into full fixed-shape dispatches inside the batcher — this
-//! module never assembles or pads batches itself.
+//! module never assembles or pads batches itself. Cache hits skip the
+//! batcher entirely; post-processing always runs per call, in job order,
+//! so the rng stream (and therefore every result) is bit-identical with
+//! or without the cache (see `cache` module docs).
 //!
 //! Capability is set by the `d` of the underlying scorer artifact plus the
 //! decoding profile (temperature, abstain bias). Accuracy behaviour is
 //! emergent — see DESIGN.md §2.
 
 use super::job::{ChunkRef, Job, WorkerOutput};
+use crate::cache::{model_fingerprint, CacheKey, ChunkCache};
 use crate::cost::{text_tokens, Ledger};
 use crate::data::{Context, PAGES_PER_CHUNK_MAX};
 use crate::runtime::Manifest;
@@ -103,6 +108,10 @@ pub struct Extraction {
 pub struct LocalLm {
     /// shared scoring path; rows coalesce with every other caller's
     scorer: Arc<DynamicBatcher>,
+    /// optional cross-request score cache (hits skip the batcher)
+    cache: Option<Arc<ChunkCache>>,
+    /// hash of (d, wpos): the cache's model component
+    fingerprint: u64,
     pub profile: LocalProfile,
     wpos: Vec<f32>,
     /// calibrated full-match score Σ wpos² (signal level)
@@ -115,10 +124,22 @@ impl LocalLm {
         manifest: &Manifest,
         profile: LocalProfile,
     ) -> Result<LocalLm> {
+        Self::with_cache(scorer, manifest, profile, None)
+    }
+
+    pub fn with_cache(
+        scorer: Arc<DynamicBatcher>,
+        manifest: &Manifest,
+        profile: LocalProfile,
+        cache: Option<Arc<ChunkCache>>,
+    ) -> Result<LocalLm> {
         let wpos = manifest.wpos(profile.d)?.to_vec();
         let signal = wpos.iter().map(|w| w * w).sum();
+        let fingerprint = model_fingerprint(profile.d, &wpos);
         Ok(LocalLm {
             scorer,
+            cache,
+            fingerprint,
             profile,
             wpos,
             signal,
@@ -148,12 +169,57 @@ impl LocalLm {
         (q_tokens, q_weights)
     }
 
-    /// Execute jobs through the shared batcher, with `samples` decode
-    /// draws per job. Each job becomes one [`ScoreRow`]; full batches
-    /// dispatch inline and trailing partials coalesce with whatever other
-    /// samples/protocols are scoring concurrently. Returns outputs in job
-    /// order (post-processing stays sequential, so the per-sample rng
-    /// stream is identical to the old self-batched path).
+    /// Score rows through the cache + shared batcher, preserving input
+    /// order. Cached rows skip the batcher entirely (recorded via
+    /// `BatcherStats::note_cached` so scheduler stats keep reflecting
+    /// total demand); misses dispatch through it and fill the cache on
+    /// the way out. This is the *only* scoring path of the wrapper —
+    /// job execution and citation verification both land here.
+    fn score_cached(&self, rows: Vec<ScoreRow>) -> Result<Vec<Arc<Vec<f32>>>> {
+        let Some(cache) = &self.cache else {
+            // no cache configured: straight through the batcher
+            let results = self.scorer.score_rows(rows)?;
+            return Ok(results.into_iter().map(|r| Arc::new(r.scores)).collect());
+        };
+        let mut scores: Vec<Option<Arc<Vec<f32>>>> = Vec::with_capacity(rows.len());
+        let mut misses: Vec<ScoreRow> = Vec::new();
+        let mut miss_slots: Vec<usize> = Vec::new();
+        let mut miss_keys: Vec<CacheKey> = Vec::new();
+        for (i, row) in rows.into_iter().enumerate() {
+            let key = CacheKey::for_row(self.fingerprint, &row);
+            match cache.get(&key) {
+                Some(hit) => {
+                    self.scorer.stats.note_cached(1);
+                    scores.push(Some(hit));
+                }
+                None => {
+                    scores.push(None);
+                    miss_slots.push(i);
+                    miss_keys.push(key);
+                    misses.push(row);
+                }
+            }
+        }
+        let results = self.scorer.score_rows(misses)?;
+        for ((slot, key), res) in miss_slots.into_iter().zip(miss_keys).zip(results) {
+            let row_scores = Arc::new(res.scores);
+            cache.insert(key, Arc::clone(&row_scores));
+            scores[slot] = Some(row_scores);
+        }
+        Ok(scores
+            .into_iter()
+            .map(|s| s.expect("every row scored or cached"))
+            .collect())
+    }
+
+    /// Execute jobs through the cache + shared batcher, with `samples`
+    /// decode draws per job. Each job becomes one [`ScoreRow`]; rows whose
+    /// scores are already cached skip the batcher entirely, the rest
+    /// dispatch through it (full batches inline, trailing partials
+    /// coalescing with whatever other samples/protocols are scoring
+    /// concurrently). Post-processing runs per call, sequentially in job
+    /// order, so the per-sample rng stream — and therefore every output —
+    /// is identical whether a row hit or missed.
     pub fn run_jobs(
         &self,
         ctx: &Context,
@@ -177,10 +243,10 @@ impl LocalLm {
             });
             row_tokens.push(c_tokens);
         }
-        let results = self.scorer.score_rows(rows)?;
+        let scores = self.score_cached(rows)?;
         let mut outputs = Vec::with_capacity(jobs.len());
-        for ((job, res), toks) in jobs.iter().zip(&results).zip(&row_tokens) {
-            let out = self.postprocess(job, &res.scores, toks, samples, rng);
+        for ((job, res), toks) in jobs.iter().zip(&scores).zip(&row_tokens) {
+            let out = self.postprocess(job, res, toks, samples, rng);
             ledger.local_job(
                 job.chunk.token_count(ctx) as u64 + text_tokens(&job.instruction),
                 (24 * samples) as u64,
@@ -294,7 +360,9 @@ impl LocalLm {
     /// verification* step: the remote re-reads worker citations with its
     /// own, higher-acuity scorer before trusting them — the paper's
     /// "verification in the cloud"). Returns max score per span,
-    /// normalised by the full-match signal level.
+    /// normalised by the full-match signal level. Routed through the
+    /// cache like every other scoring call, so re-verifying a recurring
+    /// citation is free.
     pub fn score_span(&self, key: &Key, spans: &[Vec<Token>]) -> Result<Vec<f32>> {
         let rows: Vec<ScoreRow> = spans
             .iter()
@@ -315,11 +383,11 @@ impl LocalLm {
                 }
             })
             .collect();
-        let results = self.scorer.score_rows(rows)?;
+        let results = self.score_cached(rows)?;
         Ok(results
             .iter()
             .map(|r| {
-                let (_, best) = argmax(&r.scores);
+                let (_, best) = argmax(r);
                 (best / self.signal).max(0.0)
             })
             .collect())

@@ -180,6 +180,18 @@ impl RemoteLm {
         manifest: &Manifest,
         profile: RemoteProfile,
     ) -> Result<RemoteLm> {
+        Self::with_cache(scorer, manifest, profile, None)
+    }
+
+    /// Like [`RemoteLm::new`], but the internal reader shares the chunk
+    /// cache — remote-only / RAG reads over repeated documents then skip
+    /// scoring just like local jobs do.
+    pub fn with_cache(
+        scorer: Arc<DynamicBatcher>,
+        manifest: &Manifest,
+        profile: RemoteProfile,
+        cache: Option<Arc<crate::cache::ChunkCache>>,
+    ) -> Result<RemoteLm> {
         let reader_profile = LocalProfile {
             name: profile.name,
             d: profile.d,
@@ -187,7 +199,7 @@ impl RemoteLm {
             abstain_bias: 1.0,
             format_err: 0.0, // frontier models follow the schema
         };
-        let reader = LocalLm::new(scorer, manifest, reader_profile)?;
+        let reader = LocalLm::with_cache(scorer, manifest, reader_profile, cache)?;
         Ok(RemoteLm { profile, reader })
     }
 
@@ -453,7 +465,12 @@ impl RemoteLm {
     /// Best candidate for a query part. With a Good planner, part i maps
     /// to task i; merged planners put everything in task 0, so candidates
     /// compete across parts (part of the quality penalty).
-    fn part_candidate(&self, query: &Query, outputs: &[WorkerOutput], part: usize) -> Option<Token> {
+    fn part_candidate(
+        &self,
+        query: &Query,
+        outputs: &[WorkerOutput],
+        part: usize,
+    ) -> Option<Token> {
         let n_parts = self.expected_parts(query);
         let task = match self.profile.planner {
             PlannerQuality::Good => part.min(n_parts - 1),
@@ -603,7 +620,10 @@ fn vote(outputs: &[WorkerOutput], task: usize) -> Option<(Token, f32)> {
 }
 
 /// Map a chunk answer history to the DSL's `last_jobs` binding.
-pub fn last_jobs_binding(outputs: &[WorkerOutput], jobs: &[super::job::Job]) -> Vec<(i64, ChunkRef, bool)> {
+pub fn last_jobs_binding(
+    outputs: &[WorkerOutput],
+    jobs: &[super::job::Job],
+) -> Vec<(i64, ChunkRef, bool)> {
     outputs
         .iter()
         .zip(jobs)

@@ -4,7 +4,7 @@
 //! COMPUTE arithmetic (it reports a raw operand), reproducing the paper's
 //! local-only collapse (Table 1: Llama-8B FinanceBench 0.326).
 
-use super::{Outcome, Protocol};
+use super::{OneShotSession, Outcome, Protocol, ProtocolSession};
 use crate::cost::Ledger;
 use crate::data::{Answer, QueryKind, Sample};
 use crate::model::LocalLm;
@@ -27,35 +27,38 @@ impl Protocol for LocalOnly {
         format!("local-only[{}]", self.local.profile.name)
     }
 
-    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
-        let mut ledger = Ledger::default();
-        let q = &sample.query;
-        // the local model reads everything in one pooled pass — no
-        // decomposition ability (that is the remote's planning skill)
-        let (best, conf, all_found) =
-            self.local
-                .answer_full_context(&sample.context, &q.keys, rng, &mut ledger)?;
-
-        let answer = match &q.kind {
-            QueryKind::Extract => Answer::Value(best.unwrap_or(0)),
-            // no symbolic reasoning on-device: it parrots an operand
-            QueryKind::Compute(_) => {
-                Answer::Number(best.map(crate::data::value_number).unwrap_or(f64::NAN))
-            }
-            QueryKind::Bool => Answer::Bool(best.is_some() && conf > 0.5),
-            QueryKind::Multi(k) => {
-                Answer::Set(all_found.into_iter().take(*k).collect())
-            }
-            QueryKind::Summarize => Answer::Set(all_found),
-        };
-        Ok(Outcome {
-            answer,
-            ledger,
-            rounds: 1,
-            transcript: vec![format!(
-                "local-only scanned {} tokens, confidence {conf:.3}",
-                sample.context.total_tokens()
-            )],
-        })
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        let local = Arc::clone(&self.local);
+        let sample = sample.clone();
+        OneShotSession::boxed(move |rng| answer_local_only(&local, &sample, rng))
     }
+}
+
+fn answer_local_only(local: &LocalLm, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
+    let mut ledger = Ledger::default();
+    let q = &sample.query;
+    // the local model reads everything in one pooled pass — no
+    // decomposition ability (that is the remote's planning skill)
+    let (best, conf, all_found) =
+        local.answer_full_context(&sample.context, &q.keys, rng, &mut ledger)?;
+
+    let answer = match &q.kind {
+        QueryKind::Extract => Answer::Value(best.unwrap_or(0)),
+        // no symbolic reasoning on-device: it parrots an operand
+        QueryKind::Compute(_) => {
+            Answer::Number(best.map(crate::data::value_number).unwrap_or(f64::NAN))
+        }
+        QueryKind::Bool => Answer::Bool(best.is_some() && conf > 0.5),
+        QueryKind::Multi(k) => Answer::Set(all_found.into_iter().take(*k).collect()),
+        QueryKind::Summarize => Answer::Set(all_found),
+    };
+    Ok(Outcome {
+        answer,
+        ledger,
+        rounds: 1,
+        transcript: vec![format!(
+            "local-only scanned {} tokens, confidence {conf:.3}",
+            sample.context.total_tokens()
+        )],
+    })
 }

@@ -7,15 +7,21 @@
 //! time (the remote "raises additional questions"), which restores the
 //! local model's per-part signal — this is exactly why accuracy climbs
 //! with the round budget (Fig 6).
+//!
+//! Executes as a [`ProtocolSession`]: each `step` performs one chat round
+//! (emitting [`SessionEvent::RoundExecuted`]) until the budget runs out or
+//! every part clears the confidence bar, then a final step lets the remote
+//! do the arithmetic and finalize. The rng is consumed in the same order
+//! as the old monolithic loop, so blocking runs are bit-identical.
 
-use super::{Outcome, Protocol};
+use super::{Outcome, Protocol, ProtocolSession, SessionEvent};
 use crate::cost::{text_tokens, Ledger};
 use crate::data::{Answer, QueryKind, Sample};
 use crate::model::{LocalLm, RemoteLm};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::vocab::{render_token, Token};
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 use std::sync::Arc;
 
 pub struct Minion {
@@ -45,104 +51,154 @@ impl Protocol for Minion {
         )
     }
 
-    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
-        let mut ledger = Ledger::default();
-        let mut transcript = Vec::new();
-        let q = &sample.query;
-        let n_parts = match &q.kind {
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        let n_parts = match &sample.query.kind {
             QueryKind::Multi(k) => *k,
             QueryKind::Compute(_) => 2,
             _ => 1,
         };
-        let mut part_answers: Vec<Option<(Token, f32)>> = vec![None; n_parts];
-        let mut rounds = 0;
+        Box::new(MinionSession {
+            local: Arc::clone(&self.local),
+            remote: Arc::clone(&self.remote),
+            max_rounds: self.max_rounds,
+            sample: sample.clone(),
+            n_parts,
+            part_answers: vec![None; n_parts],
+            rounds: 0,
+            ledger: Ledger::default(),
+            transcript: Vec::new(),
+            phase: MinionPhase::Chat,
+        })
+    }
+}
 
-        while rounds < self.max_rounds {
-            rounds += 1;
-            // --- remote -> local message ---
-            let (msg, asked_parts): (String, Vec<usize>) = if rounds == 1 {
-                // the naïve opener: relay the whole query at once
-                (
-                    format!("Please answer from the document: {}", q.text),
-                    (0..n_parts).collect(),
-                )
-            } else {
-                // follow-up: one unresolved part, asked specifically
-                let missing: Vec<usize> = part_answers
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, a)| a.map_or(true, |(_, c)| c < ACCEPT_CONF))
-                    .map(|(i, _)| i)
-                    .collect();
-                let Some(part) = missing.first().copied() else {
-                    break;
-                };
-                (
-                    format!(
-                        "One more thing — specifically find part {} only: {}",
-                        part + 1,
-                        crate::dsl::render_task_key(&q.keys[part])
-                    ),
-                    vec![part],
-                )
-            };
-            // remote decodes the message; it has only the query as prefill
-            ledger.remote_msg(text_tokens(&q.text), text_tokens(&msg));
-            transcript.push(format!("remote→local (r{rounds}): {msg}"));
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum MinionPhase {
+    /// chat rounds in progress
+    Chat,
+    /// the remote finalizes (it does the arithmetic; local can't)
+    Finalize,
+    /// finalized (stepping again is a contract violation)
+    Done,
+}
 
-            // --- local reads the FULL context with the pooled request ---
-            let keys: Vec<_> = asked_parts.iter().map(|i| q.keys[*i]).collect();
-            let (tok, conf, _all) =
-                self.local
-                    .answer_full_context(&sample.context, &keys, rng, &mut ledger)?;
-            // with one part asked, the answer attaches to that part; with
-            // several pooled, the local model can only serve its best find
-            if let Some(t) = tok {
-                let attach = if asked_parts.len() == 1 {
-                    asked_parts[0]
-                } else {
-                    // pooled reply: credit the strongest unanswered slot
-                    asked_parts
-                        .iter()
-                        .copied()
-                        .find(|i| part_answers[*i].is_none())
-                        .unwrap_or(asked_parts[0])
-                };
-                let better = part_answers[attach].map_or(true, |(_, c)| conf > c);
-                if better {
-                    part_answers[attach] = Some((t, conf));
-                }
-            }
-            let reply = Json::obj(vec![
-                (
-                    "answer",
-                    match tok {
-                        Some(t) => Json::str(render_token(t)),
-                        None => Json::Null,
-                    },
-                ),
-                ("confidence", Json::num(conf as f64)),
-            ])
-            .to_string();
-            // local's reply becomes remote prefill; remote decodes a short ack
-            ledger.remote_msg(text_tokens(&reply), 24);
-            transcript.push(format!("local→remote (r{rounds}): {reply}"));
+/// The chat loop as an explicit state machine: one `step` per round, then
+/// one finalization step.
+struct MinionSession {
+    local: Arc<LocalLm>,
+    remote: Arc<RemoteLm>,
+    max_rounds: usize,
+    sample: Sample,
+    n_parts: usize,
+    part_answers: Vec<Option<(Token, f32)>>,
+    rounds: usize,
+    ledger: Ledger,
+    transcript: Vec<String>,
+    phase: MinionPhase,
+}
 
-            let all_done = part_answers
+impl MinionSession {
+    /// One remote→local→remote exchange. Returns `None` when the round
+    /// found nothing left to ask (every part already resolved) — the
+    /// caller falls through to finalization without emitting an event.
+    fn chat_round(&mut self, rng: &mut Rng) -> Result<Option<SessionEvent>> {
+        self.rounds += 1;
+        let rounds = self.rounds;
+        let q = &self.sample.query;
+        // --- remote -> local message ---
+        let (msg, asked_parts): (String, Vec<usize>) = if rounds == 1 {
+            // the naïve opener: relay the whole query at once
+            (
+                format!("Please answer from the document: {}", q.text),
+                (0..self.n_parts).collect(),
+            )
+        } else {
+            // follow-up: one unresolved part, asked specifically
+            let missing: Vec<usize> = self
+                .part_answers
                 .iter()
-                .all(|a| a.map_or(false, |(_, c)| c >= ACCEPT_CONF));
-            if all_done {
-                break;
+                .enumerate()
+                .filter(|(_, a)| a.map_or(true, |(_, c)| c < ACCEPT_CONF))
+                .map(|(i, _)| i)
+                .collect();
+            let Some(part) = missing.first().copied() else {
+                return Ok(None);
+            };
+            (
+                format!(
+                    "One more thing — specifically find part {} only: {}",
+                    part + 1,
+                    crate::dsl::render_task_key(&q.keys[part])
+                ),
+                vec![part],
+            )
+        };
+        // remote decodes the message; it has only the query as prefill
+        self.ledger.remote_msg(text_tokens(&q.text), text_tokens(&msg));
+        self.transcript.push(format!("remote→local (r{rounds}): {msg}"));
+
+        // --- local reads the FULL context with the pooled request ---
+        let keys: Vec<_> = asked_parts.iter().map(|i| q.keys[*i]).collect();
+        let (tok, conf, _all) =
+            self.local
+                .answer_full_context(&self.sample.context, &keys, rng, &mut self.ledger)?;
+        // with one part asked, the answer attaches to that part; with
+        // several pooled, the local model can only serve its best find
+        if let Some(t) = tok {
+            let attach = if asked_parts.len() == 1 {
+                asked_parts[0]
+            } else {
+                // pooled reply: credit the strongest unanswered slot
+                asked_parts
+                    .iter()
+                    .copied()
+                    .find(|i| self.part_answers[*i].is_none())
+                    .unwrap_or(asked_parts[0])
+            };
+            let better = self.part_answers[attach].map_or(true, |(_, c)| conf > c);
+            if better {
+                self.part_answers[attach] = Some((t, conf));
             }
         }
+        let reply = Json::obj(vec![
+            (
+                "answer",
+                match tok {
+                    Some(t) => Json::str(render_token(t)),
+                    None => Json::Null,
+                },
+            ),
+            ("confidence", Json::num(conf as f64)),
+        ])
+        .to_string();
+        // local's reply becomes remote prefill; remote decodes a short ack
+        self.ledger.remote_msg(text_tokens(&reply), 24);
+        self.transcript.push(format!("local→remote (r{rounds}): {reply}"));
 
-        // --- remote finalizes (it does the arithmetic; local can't) ---
+        let resolved = self
+            .part_answers
+            .iter()
+            .filter(|a| a.map_or(false, |(_, c)| c >= ACCEPT_CONF))
+            .count();
+        if resolved == self.n_parts {
+            self.phase = MinionPhase::Finalize;
+        }
+        Ok(Some(SessionEvent::RoundExecuted {
+            round: rounds,
+            jobs: asked_parts.len(),
+            survivors: resolved,
+        }))
+    }
+
+    /// The remote finalizes (it does the arithmetic; local can't).
+    fn finalize(&mut self, rng: &mut Rng) -> Result<Outcome> {
+        let q = &self.sample.query;
         let answer = match &q.kind {
-            QueryKind::Extract => Answer::Value(part_answers[0].map(|(t, _)| t).unwrap_or(0)),
+            QueryKind::Extract => Answer::Value(self.part_answers[0].map(|(t, _)| t).unwrap_or(0)),
             QueryKind::Bool => {
-                Answer::Bool(part_answers[0].map_or(false, |(_, c)| c >= ACCEPT_CONF))
+                Answer::Bool(self.part_answers[0].map_or(false, |(_, c)| c >= ACCEPT_CONF))
             }
-            QueryKind::Compute(op) => match (part_answers[0], part_answers[1]) {
+            QueryKind::Compute(op) => match (self.part_answers[0], self.part_answers[1]) {
                 (Some((a, _)), Some((b, _))) => {
                     let mut x = op.apply(
                         crate::data::value_number(a),
@@ -156,7 +212,7 @@ impl Protocol for Minion {
                 _ => Answer::Number(f64::NAN),
             },
             QueryKind::Multi(_) => Answer::Set(
-                part_answers
+                self.part_answers
                     .iter()
                     .filter_map(|a| a.map(|(t, _)| t))
                     .collect(),
@@ -165,22 +221,57 @@ impl Protocol for Minion {
                 // chat is a poor fit for summarisation: the local model
                 // sends its best extractions in one message
                 let (_, _, all) = self.local.answer_full_context(
-                    &sample.context,
+                    &self.sample.context,
                     &q.keys,
                     rng,
-                    &mut ledger,
+                    &mut self.ledger,
                 )?;
                 let msg_len: usize = all.len() * 6;
-                ledger.remote_msg(text_tokens(&"x".repeat(msg_len * 4)), 64);
+                self.ledger.remote_msg(text_tokens(&"x".repeat(msg_len * 4)), 64);
                 Answer::Set(all)
             }
         };
 
         Ok(Outcome {
             answer,
-            ledger,
-            rounds,
-            transcript,
+            ledger: self.ledger,
+            rounds: self.rounds,
+            transcript: std::mem::take(&mut self.transcript),
         })
+    }
+}
+
+impl ProtocolSession for MinionSession {
+    fn step(&mut self, rng: &mut Rng) -> Result<SessionEvent> {
+        loop {
+            match self.phase {
+                MinionPhase::Chat => {
+                    if self.rounds >= self.max_rounds {
+                        self.phase = MinionPhase::Finalize;
+                        continue;
+                    }
+                    match self.chat_round(rng) {
+                        Ok(Some(event)) => return Ok(event),
+                        // nothing left to ask: fall through to finalize
+                        // within this same step (matches the old loop's
+                        // mid-round break)
+                        Ok(None) => {
+                            self.phase = MinionPhase::Finalize;
+                            continue;
+                        }
+                        Err(e) => {
+                            self.phase = MinionPhase::Done;
+                            return Err(e);
+                        }
+                    }
+                }
+                MinionPhase::Finalize => {
+                    let result = self.finalize(rng);
+                    self.phase = MinionPhase::Done;
+                    return result.map(SessionEvent::Finalized);
+                }
+                MinionPhase::Done => return Err(anyhow!("minion session already finalized")),
+            }
+        }
     }
 }

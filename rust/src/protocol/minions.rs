@@ -13,13 +13,13 @@
 //! the protocol force-finalizes from the worker outputs it has instead of
 //! spinning forever.
 
-use super::{Outcome, Protocol, RoundStrategy};
+use super::{Outcome, Protocol, ProtocolSession, RoundStrategy, SessionEvent};
 use crate::cost::{text_tokens, Ledger};
 use crate::data::{Answer, Query, QueryKind, Sample};
 use crate::dsl::{self, DocShape, Limits};
 use crate::model::job::{Job, WorkerOutput};
 use crate::model::remote::last_jobs_binding;
-use crate::model::{Decision, LocalLm, MinionsRemote, PlanConfig};
+use crate::model::{ChunkRef, Decision, LocalLm, MinionsRemote, PlanConfig};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -107,11 +107,7 @@ impl Protocol for MinionS {
         format!("minions[{}+{}]", self.local.profile.name, self.remote.label())
     }
 
-    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
-        let mut ledger = Ledger::default();
-        let mut transcript = Vec::new();
-        let q = &sample.query;
-        let max_rounds = self.cfg.max_rounds.max(1);
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
         let docs: Vec<DocShape> = sample
             .context
             .docs
@@ -122,125 +118,199 @@ impl Protocol for MinionS {
                 n_pages: d.n_pages(),
             })
             .collect();
+        Box::new(MinionsSession {
+            local: Arc::clone(&self.local),
+            remote: Arc::clone(&self.remote),
+            cfg: self.cfg,
+            max_rounds: self.cfg.max_rounds.max(1),
+            sample: sample.clone(),
+            docs,
+            ledger: Ledger::default(),
+            transcript: Vec::new(),
+            advice: String::new(),
+            scratch_jobs: Vec::new(),
+            scratchpad_tokens: 0,
+            rounds: 0,
+            phase: Phase::Plan,
+        })
+    }
+}
 
-        let mut advice = String::new();
-        let mut scratch_jobs: Vec<(i64, crate::model::ChunkRef, bool)> = Vec::new();
-        let mut scratchpad_tokens: u64 = 0;
-        let mut rounds = 0;
+/// Which unit of work the next [`MinionsSession::step`] performs.
+enum Phase {
+    /// decompose: the remote writes the round's MinionScript plan
+    Plan,
+    /// execute + aggregate: run the planned jobs locally, synthesize
+    Execute { jobs: Vec<Job> },
+    /// finalized (stepping again is a contract violation)
+    Done,
+}
 
-        loop {
-            rounds += 1;
-            // ---- (1) decompose: remote writes code ----
-            let had_answers = !scratch_jobs.is_empty()
-                && self.cfg.strategy == RoundStrategy::Scratchpad
-                && scratch_jobs.iter().any(|(_, _, a)| *a);
-            let src = self
-                .remote
-                .plan_minions(q, &self.cfg.plan, rounds, &advice, had_answers);
-            // remote pays: query + decompose prompt (+ scratchpad) as
-            // prefill, the generated program as decode
-            ledger.remote_msg(
-                text_tokens(&q.text) + DECOMPOSE_PROMPT_TOKENS + scratchpad_tokens,
-                text_tokens(&src),
-            );
-            transcript.push(format!("round {rounds} decompose:\n{src}"));
+/// The MinionS loop as an explicit round state machine. Round `r` takes
+/// two steps — `Plan` (emits [`SessionEvent::Planned`]) then `Execute`
+/// (emits `RoundExecuted` or `Finalized`) — and the rng is consumed in
+/// exactly the order of the old monolithic `run` (local execution, then
+/// synthesis), so driving the session serially is bit-identical to it.
+struct MinionsSession {
+    local: Arc<LocalLm>,
+    remote: Arc<dyn MinionsRemote>,
+    cfg: MinionsConfig,
+    max_rounds: usize,
+    sample: Sample,
+    docs: Vec<DocShape>,
+    ledger: Ledger,
+    transcript: Vec<String>,
+    advice: String,
+    scratch_jobs: Vec<(i64, ChunkRef, bool)>,
+    scratchpad_tokens: u64,
+    rounds: usize,
+    phase: Phase,
+}
 
-            let last = if had_answers { scratch_jobs.clone() } else { Vec::new() };
-            let dsl_jobs = dsl::run_program(&src, &docs, &last, Limits::default())
-                .map_err(|e| anyhow!("planner program failed: {e}"))?;
+impl MinionsSession {
+    fn finish(&mut self, answer: Answer) -> Outcome {
+        Outcome {
+            answer,
+            ledger: self.ledger,
+            rounds: self.rounds,
+            transcript: std::mem::take(&mut self.transcript),
+        }
+    }
 
-            // ---- convert DSL manifests to executable jobs ----
-            let mut jobs: Vec<Job> = Vec::with_capacity(dsl_jobs.len());
-            for (i, dj) in dsl_jobs.iter().enumerate() {
-                let keys = dsl::parse_task(&dj.task)
-                    .ok_or_else(|| anyhow!("unparseable task: {}", dj.task))?;
-                jobs.push(Job {
-                    job_id: i,
-                    task_id: dj.task_id as usize,
-                    chunk: dj.chunk,
-                    keys,
-                    instruction: dj.task.clone(),
-                    advice: dj.advice.clone(),
-                });
-            }
+    /// (1) decompose: remote writes code; jobs are instantiated by the
+    /// sandboxed DSL run against the context shape.
+    fn step_plan(&mut self) -> Result<SessionEvent> {
+        self.rounds += 1;
+        let rounds = self.rounds;
+        let q = &self.sample.query;
+        let had_answers = !self.scratch_jobs.is_empty()
+            && self.cfg.strategy == RoundStrategy::Scratchpad
+            && self.scratch_jobs.iter().any(|(_, _, a)| *a);
+        let src = self
+            .remote
+            .plan_minions(q, &self.cfg.plan, rounds, &self.advice, had_answers);
+        // remote pays: query + decompose prompt (+ scratchpad) as
+        // prefill, the generated program as decode
+        self.ledger.remote_msg(
+            text_tokens(&q.text) + DECOMPOSE_PROMPT_TOKENS + self.scratchpad_tokens,
+            text_tokens(&src),
+        );
+        self.transcript.push(format!("round {rounds} decompose:\n{src}"));
 
-            // ---- (2) execute locally through the shared batcher ----
-            let outputs = self.local.run_jobs(
-                &sample.context,
-                &jobs,
-                self.cfg.samples_per_task,
-                rng,
-                &mut ledger,
-            )?;
-            // abstain filter: only survivors travel to the cloud
-            let survivors: Vec<_> = outputs.iter().filter(|o| !o.abstained()).cloned().collect();
-            let w: String = survivors
+        let last = if had_answers {
+            self.scratch_jobs.clone()
+        } else {
+            Vec::new()
+        };
+        let dsl_jobs = dsl::run_program(&src, &self.docs, &last, Limits::default())
+            .map_err(|e| anyhow!("planner program failed: {e}"))?;
+
+        // ---- convert DSL manifests to executable jobs ----
+        let mut jobs: Vec<Job> = Vec::with_capacity(dsl_jobs.len());
+        for (i, dj) in dsl_jobs.iter().enumerate() {
+            let keys = dsl::parse_task(&dj.task)
+                .ok_or_else(|| anyhow!("unparseable task: {}", dj.task))?;
+            jobs.push(Job {
+                job_id: i,
+                task_id: dj.task_id as usize,
+                chunk: dj.chunk,
+                keys,
+                instruction: dj.task.clone(),
+                advice: dj.advice.clone(),
+            });
+        }
+        let n_jobs = jobs.len();
+        self.phase = Phase::Execute { jobs };
+        Ok(SessionEvent::Planned {
+            round: rounds,
+            jobs: n_jobs,
+        })
+    }
+
+    /// (2) execute locally through the shared batcher, then (3) aggregate
+    /// on the remote.
+    fn step_execute(&mut self, jobs: Vec<Job>, rng: &mut Rng) -> Result<SessionEvent> {
+        let rounds = self.rounds;
+        let outputs = self.local.run_jobs(
+            &self.sample.context,
+            &jobs,
+            self.cfg.samples_per_task,
+            rng,
+            &mut self.ledger,
+        )?;
+        // abstain filter: only survivors travel to the cloud
+        let survivors: Vec<_> = outputs.iter().filter(|o| !o.abstained()).cloned().collect();
+        let w: String = survivors
+            .iter()
+            .map(|o| o.to_json().to_string())
+            .collect::<Vec<_>>()
+            .join("\n");
+        self.transcript.push(format!(
+            "round {rounds}: {} jobs, {} survived filtering",
+            jobs.len(),
+            survivors.len()
+        ));
+
+        let q = &self.sample.query;
+        self.ledger.remote_msg(text_tokens(&w) + SYNTH_PROMPT_TOKENS, 90);
+        let keep_multi = q.kind == QueryKind::Summarize;
+        let synth_inputs: Vec<_> = if keep_multi {
+            // summarisation synthesis reads every (non-empty) output
+            outputs
                 .iter()
-                .map(|o| o.to_json().to_string())
-                .collect::<Vec<_>>()
-                .join("\n");
-            transcript.push(format!(
-                "round {rounds}: {} jobs, {} survived filtering",
-                jobs.len(),
-                survivors.len()
-            ));
+                .filter(|o| !o.multi_found.is_empty())
+                .cloned()
+                .collect()
+        } else {
+            survivors.clone()
+        };
+        let decision = self
+            .remote
+            .synthesize(q, &synth_inputs, rounds, self.max_rounds, rng);
 
-            // ---- (3) aggregate on remote ----
-            ledger.remote_msg(text_tokens(&w) + SYNTH_PROMPT_TOKENS, 90);
-            let keep_multi = q.kind == QueryKind::Summarize;
-            let synth_inputs: Vec<_> = if keep_multi {
-                // summarisation synthesis reads every (non-empty) output
-                outputs
-                    .iter()
-                    .filter(|o| !o.multi_found.is_empty())
-                    .cloned()
-                    .collect()
-            } else {
-                survivors.clone()
-            };
-            let decision =
-                self.remote
-                    .synthesize(q, &synth_inputs, rounds, max_rounds, rng);
-
-            match decision {
-                Decision::Final(answer) => {
-                    return Ok(Outcome {
-                        answer,
-                        ledger,
-                        rounds,
-                        transcript,
-                    });
+        match decision {
+            Decision::Final(answer) => Ok(SessionEvent::Finalized(self.finish(answer))),
+            Decision::MoreRounds { advice: a } => {
+                if rounds >= self.max_rounds {
+                    // hard stop: the remote refused to finalize within
+                    // the round budget — synthesize a conservative
+                    // answer from what the workers produced
+                    let answer = forced_final(&self.sample.query, &synth_inputs);
+                    self.transcript.push(format!(
+                        "round {rounds}: round budget exhausted, forced finalize"
+                    ));
+                    return Ok(SessionEvent::Finalized(self.finish(answer)));
                 }
-                Decision::MoreRounds { advice: a } => {
-                    if rounds >= max_rounds {
-                        // hard stop: the remote refused to finalize within
-                        // the round budget — synthesize a conservative
-                        // answer from what the workers produced
-                        let answer = forced_final(q, &synth_inputs);
-                        transcript.push(format!(
-                            "round {rounds}: round budget exhausted, forced finalize"
-                        ));
-                        return Ok(Outcome {
-                            answer,
-                            ledger,
-                            rounds,
-                            transcript,
-                        });
+                self.advice = a;
+                match self.cfg.strategy {
+                    RoundStrategy::Retries => {
+                        self.scratch_jobs.clear();
+                        self.scratchpad_tokens = 0;
                     }
-                    advice = a;
-                    match self.cfg.strategy {
-                        RoundStrategy::Retries => {
-                            scratch_jobs.clear();
-                            scratchpad_tokens = 0;
-                        }
-                        RoundStrategy::Scratchpad => {
-                            scratch_jobs = last_jobs_binding(&outputs, &jobs);
-                            // the scratchpad costs prefill next round
-                            scratchpad_tokens = 12 * scratch_jobs.len() as u64 / 4;
-                        }
+                    RoundStrategy::Scratchpad => {
+                        self.scratch_jobs = last_jobs_binding(&outputs, &jobs);
+                        // the scratchpad costs prefill next round
+                        self.scratchpad_tokens = 12 * self.scratch_jobs.len() as u64 / 4;
                     }
                 }
+                self.phase = Phase::Plan;
+                Ok(SessionEvent::RoundExecuted {
+                    round: rounds,
+                    jobs: jobs.len(),
+                    survivors: survivors.len(),
+                })
             }
+        }
+    }
+}
+
+impl ProtocolSession for MinionsSession {
+    fn step(&mut self, rng: &mut Rng) -> Result<SessionEvent> {
+        // a step that errors (or finalizes) leaves the session Done
+        match std::mem::replace(&mut self.phase, Phase::Done) {
+            Phase::Plan => self.step_plan(),
+            Phase::Execute { jobs } => self.step_execute(jobs, rng),
+            Phase::Done => Err(anyhow!("minions session already finalized")),
         }
     }
 }

@@ -6,6 +6,15 @@
 //! - [`minion::Minion`]   — naïve free-form chat (paper §4)
 //! - [`minions::MinionS`] — decompose / execute / aggregate (paper §5)
 //!
+//! Every protocol executes as a resumable **session**: [`Protocol::session`]
+//! returns a [`ProtocolSession`] state machine whose [`ProtocolSession::step`]
+//! advances one unit of protocol work and yields a [`SessionEvent`]
+//! (`Planned` / `RoundExecuted` / `Finalized`). [`Protocol::run`] is a thin
+//! blocking driver over that state machine ([`drive`]), so the eval and
+//! bench paths keep their exact pre-session semantics — same rng stream,
+//! same ledgers, same answers — while the server interleaves `step()`
+//! calls of many sessions on a small worker pool (see `server::session`).
+//!
 //! Every protocol returns an [`Outcome`] carrying the predicted answer and
 //! the token [`Ledger`] the cost model prices.
 
@@ -17,7 +26,7 @@ pub mod remote_only;
 use crate::cost::Ledger;
 use crate::data::{Answer, Sample};
 use crate::util::rng::Rng;
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 #[derive(Clone, Debug)]
 pub struct Outcome {
@@ -28,9 +37,98 @@ pub struct Outcome {
     pub transcript: Vec<String>,
 }
 
+/// One observable step of a resumable protocol session.
+///
+/// The variants mirror the decompose → execute → aggregate shape of the
+/// MinionS loop; simpler protocols emit the subset that applies (one-shot
+/// baselines go straight to `Finalized`).
+#[derive(Clone, Debug)]
+pub enum SessionEvent {
+    /// The remote produced a decomposition plan for `round` instantiating
+    /// `jobs` local jobs.
+    Planned { round: usize, jobs: usize },
+    /// A full round executed (local jobs + remote aggregation) without
+    /// finalizing; `survivors` is the number of non-abstaining outputs
+    /// (resolved query parts, for the chat protocol).
+    RoundExecuted {
+        round: usize,
+        jobs: usize,
+        survivors: usize,
+    },
+    /// The protocol finished; the outcome is the session's final result.
+    Finalized(Outcome),
+}
+
+impl SessionEvent {
+    pub fn is_final(&self) -> bool {
+        matches!(self, SessionEvent::Finalized(_))
+    }
+}
+
+/// A resumable protocol run over one sample.
+///
+/// Sessions own everything they need (a sample clone plus `Arc` model
+/// handles), so they are `'static` and can be parked in a registry between
+/// steps. Contract: `step` must be called until it returns
+/// [`SessionEvent::Finalized`]; calling it again afterwards is an error.
+/// The caller supplies the rng so the stream is identical to the old
+/// monolithic `run` regardless of how steps are scheduled.
+pub trait ProtocolSession: Send {
+    /// Advance the session by one unit of protocol work.
+    fn step(&mut self, rng: &mut Rng) -> Result<SessionEvent>;
+}
+
+/// Drive a session to completion — the blocking semantics of
+/// [`Protocol::run`], shared by the eval/bench paths.
+pub fn drive(mut session: Box<dyn ProtocolSession>, rng: &mut Rng) -> Result<Outcome> {
+    loop {
+        if let SessionEvent::Finalized(outcome) = session.step(rng)? {
+            return Ok(outcome);
+        }
+    }
+}
+
 pub trait Protocol: Send + Sync {
     fn name(&self) -> String;
-    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome>;
+
+    /// Begin a resumable session over `sample`. The session owns its
+    /// state; `self` only lends out `Arc` handles.
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession>;
+
+    /// Blocking driver over [`Protocol::session`]; semantically identical
+    /// to the pre-session monolithic run.
+    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
+        drive(self.session(sample), rng)
+    }
+}
+
+/// Session adapter for one-shot protocols (the baselines): the first
+/// `step` performs the whole computation and finalizes.
+pub struct OneShotSession<F> {
+    compute: Option<F>,
+}
+
+impl<F> OneShotSession<F>
+where
+    F: FnOnce(&mut Rng) -> Result<Outcome> + Send + 'static,
+{
+    pub fn boxed(compute: F) -> Box<dyn ProtocolSession> {
+        Box::new(OneShotSession {
+            compute: Some(compute),
+        })
+    }
+}
+
+impl<F> ProtocolSession for OneShotSession<F>
+where
+    F: FnOnce(&mut Rng) -> Result<Outcome> + Send + 'static,
+{
+    fn step(&mut self, rng: &mut Rng) -> Result<SessionEvent> {
+        match self.compute.take() {
+            Some(f) => Ok(SessionEvent::Finalized(f(rng)?)),
+            None => Err(anyhow!("session already finalized")),
+        }
+    }
 }
 
 /// Context-maintenance strategy across MinionS rounds (paper §5.1/§6.4).

@@ -2,7 +2,7 @@
 //! answers alone — the quality ceiling and the cost ceiling (Table 1 row
 //! 1: it pays prefill for every context token).
 
-use super::{Outcome, Protocol};
+use super::{OneShotSession, Outcome, Protocol, ProtocolSession};
 use crate::cost::Ledger;
 use crate::data::Sample;
 use crate::model::RemoteLm;
@@ -25,19 +25,23 @@ impl Protocol for RemoteOnly {
         format!("remote-only[{}]", self.remote.profile.name)
     }
 
-    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
-        let mut ledger = Ledger::default();
-        let answer =
-            self.remote
-                .answer_full_context(&sample.context, &sample.query, rng, &mut ledger)?;
-        Ok(Outcome {
-            answer,
-            ledger,
-            rounds: 1,
-            transcript: vec![format!(
-                "remote-only ingested {} prefill tokens",
-                ledger.remote_prefill
-            )],
-        })
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        let remote = Arc::clone(&self.remote);
+        let sample = sample.clone();
+        OneShotSession::boxed(move |rng| answer_remote_only(&remote, &sample, rng))
     }
+}
+
+fn answer_remote_only(remote: &RemoteLm, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
+    let mut ledger = Ledger::default();
+    let answer = remote.answer_full_context(&sample.context, &sample.query, rng, &mut ledger)?;
+    Ok(Outcome {
+        answer,
+        ledger,
+        rounds: 1,
+        transcript: vec![format!(
+            "remote-only ingested {} prefill tokens",
+            ledger.remote_prefill
+        )],
+    })
 }

@@ -15,7 +15,7 @@ use crate::cost::{text_tokens, Ledger};
 use crate::data::{Answer, Context, QueryKind, Sample};
 use crate::model::job::ChunkRef;
 use crate::model::RemoteLm;
-use crate::protocol::{Outcome, Protocol};
+use crate::protocol::{OneShotSession, Outcome, Protocol, ProtocolSession};
 use crate::runtime::{Backend, EmbedRequest};
 use crate::util::rng::Rng;
 use crate::vocab::{Token, BATCH, CHUNK, PAD};
@@ -59,6 +59,18 @@ pub struct Rag {
     pub pages_per_chunk: usize,
 }
 
+impl Clone for Rag {
+    fn clone(&self) -> Self {
+        Rag {
+            remote: Arc::clone(&self.remote),
+            backend: Arc::clone(&self.backend),
+            retriever: self.retriever,
+            top_k: self.top_k,
+            pages_per_chunk: self.pages_per_chunk,
+        }
+    }
+}
+
 impl Rag {
     pub fn new(
         remote: Arc<RemoteLm>,
@@ -76,7 +88,11 @@ impl Rag {
     }
 
     /// Rank chunks for the query; returns chunk indices.
-    fn retrieve(&self, query_tokens: &[Token], chunks: &[(ChunkRef, Vec<Token>)]) -> Result<Vec<usize>> {
+    fn retrieve(
+        &self,
+        query_tokens: &[Token],
+        chunks: &[(ChunkRef, Vec<Token>)],
+    ) -> Result<Vec<usize>> {
         match self.retriever {
             Retriever::Bm25 => {
                 let texts: Vec<Vec<Token>> = chunks.iter().map(|(_, t)| t.clone()).collect();
@@ -148,7 +164,16 @@ impl Protocol for Rag {
         )
     }
 
-    fn run(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        let rag = self.clone();
+        let sample = sample.clone();
+        OneShotSession::boxed(move |rng| rag.answer(&sample, rng))
+    }
+}
+
+impl Rag {
+    /// Retrieve-then-read, in one blocking pass (the session's only step).
+    fn answer(&self, sample: &Sample, rng: &mut Rng) -> Result<Outcome> {
         let mut ledger = Ledger::default();
         let q = &sample.query;
         let chunks = retrieval_chunks(&sample.context, self.pages_per_chunk);

@@ -106,7 +106,8 @@ impl Manifest {
                         d: j.get("d").and_then(Json::as_f64).context("d")? as usize,
                         batch: j.get("batch").and_then(Json::as_f64).context("batch")? as usize,
                         chunk: j.get("chunk").and_then(Json::as_f64).context("chunk")? as usize,
-                        weights: dir.join(j.get("weights").and_then(Json::as_str).context("weights")?),
+                        weights: dir
+                            .join(j.get("weights").and_then(Json::as_str).context("weights")?),
                         inputs: io_decls(j.get("inputs").context("inputs")?)?,
                         outputs: io_decls(j.get("outputs").context("outputs")?)?,
                     })

@@ -33,6 +33,8 @@ pub struct RuntimeStats {
     pub engine: Option<EngineStats>,
     /// shared-batcher counters; `None` when scoring bypasses the batcher
     pub batcher: Option<crate::sched::BatcherSnapshot>,
+    /// chunk-cache counters; `None` when caching is disabled
+    pub cache: Option<crate::cache::CacheSnapshot>,
 }
 
 /// PJRT-backed production backend. `mpsc::Sender` is `!Sync`, so the

@@ -32,7 +32,12 @@ struct ModelWeights {
 /// Score one full batch: mirrors `python/compile/model.py::local_score_fn`.
 /// `emb` is the `[V, d]` embedding table, `wpos` the window weights.
 /// Shapes are the caller's responsibility (`[BATCH*QLEN]` / `[BATCH*CHUNK]`).
-pub(crate) fn score_kernel(emb: &[f32], wpos: &[f32], d: usize, req: &ScoreRequest) -> ScoreResponse {
+pub(crate) fn score_kernel(
+    emb: &[f32],
+    wpos: &[f32],
+    d: usize,
+    req: &ScoreRequest,
+) -> ScoreResponse {
     let b = BATCH;
     let window = wpos.len();
     let mut scores = vec![NEG_INF; b * CHUNK];

@@ -71,6 +71,10 @@ pub struct BatcherStats {
     pub rows: AtomicU64,
     pub padded_rows: AtomicU64,
     pub flush_timeouts: AtomicU64,
+    /// rows that never reached the batcher because the chunk cache served
+    /// them — kept here so the scheduler's stats stay an honest account of
+    /// scoring *demand*, not just of dispatched work
+    pub cached_rows: AtomicU64,
 }
 
 impl BatcherStats {
@@ -84,6 +88,11 @@ impl BatcherStats {
             r as f64 / (d * BATCH as u64) as f64
         }
     }
+
+    /// Record `n` rows of demand that the chunk cache absorbed upstream.
+    pub fn note_cached(&self, n: u64) {
+        self.cached_rows.fetch_add(n, Ordering::Relaxed);
+    }
 }
 
 /// Point-in-time copy of [`BatcherStats`] for metrics endpoints.
@@ -93,6 +102,7 @@ pub struct BatcherSnapshot {
     pub rows: u64,
     pub padded_rows: u64,
     pub flush_timeouts: u64,
+    pub cached_rows: u64,
     pub occupancy: f64,
 }
 
@@ -113,8 +123,8 @@ impl std::fmt::Display for BatcherSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} dispatches, {} rows, occupancy={:.2}",
-            self.dispatches, self.rows, self.occupancy
+            "{} dispatches, {} rows ({} cache-skipped), occupancy={:.2}",
+            self.dispatches, self.rows, self.cached_rows, self.occupancy
         )
     }
 }
@@ -268,6 +278,7 @@ impl DynamicBatcher {
             rows: self.stats.rows.load(Ordering::Relaxed),
             padded_rows: self.stats.padded_rows.load(Ordering::Relaxed),
             flush_timeouts: self.stats.flush_timeouts.load(Ordering::Relaxed),
+            cached_rows: self.stats.cached_rows.load(Ordering::Relaxed),
             occupancy: self.stats.occupancy(),
         }
     }

@@ -3,17 +3,41 @@
 //!
 //! Endpoints:
 //! - `POST /v1/query`  body: `{"dataset":"finance","sample":3,
-//!   "protocol":"minions"}` → runs the protocol on the preloaded sample
-//!   and returns answer/score/cost/latency.
+//!   "protocol":"minions"}` → runs the protocol to completion on the
+//!   preloaded sample and returns answer/score/cost/latency (the original
+//!   blocking path, kept for compatibility and batch clients).
+//! - `POST /v1/sessions`  same body → registers a **resumable session**
+//!   and returns `{"session_id":N,...}` immediately. The run advances on
+//!   the session worker pool, which interleaves `step()` calls across all
+//!   in-flight sessions (`server::session::SessionRunner`) instead of
+//!   pinning one thread per request.
+//! - `GET  /v1/sessions/:id`  poll status: running/done/failed, rounds,
+//!   event count, and the final result once finalized.
+//! - `GET  /v1/sessions/:id/events`  stream the session's
+//!   `SessionEvent`s as JSON lines over chunked transfer; lines are
+//!   written as rounds complete, so clients observe planned /
+//!   round_executed / finalized progress live (see DESIGN.md §5 for the
+//!   line format).
 //! - `GET  /healthz`   liveness
-//! - `GET  /metrics`   counters (requests, accuracy-so-far, token totals,
-//!   dynamic-batcher dispatch/occupancy gauges when a batcher is attached)
+//! - `GET  /metrics`   counters (requests, errors, accuracy-so-far, token
+//!   totals, session gauges, dynamic-batcher dispatch/occupancy gauges
+//!   and chunk-cache hit/miss/eviction gauges when attached)
+//!
+//! Error handling: every route failure maps to a proper status — 400 for
+//! malformed bodies, 404 for unknown routes/resources, 500 for protocol
+//! failures — and is counted in `Metrics::errors`, as are transport-level
+//! failures (`Server::serve` no longer drops them).
 //!
 //! The serving path is entirely Rust + PJRT: no Python anywhere.
 //! Concurrent requests score through the shared `DynamicBatcher`, so load
 //! from different connections coalesces into full dispatches — `/metrics`
-//! exposes the resulting `batch_occupancy`.
+//! exposes the resulting `batch_occupancy` — and repeated chunk×task jobs
+//! across requests are served from the `cache::ChunkCache` without
+//! touching the batcher at all.
 
+pub mod session;
+
+use crate::cache::ChunkCache;
 use crate::cost::CostModel;
 use crate::data::Dataset;
 use crate::eval::score_strict;
@@ -23,6 +47,7 @@ use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
+use session::{SessionEntry, SessionRunner};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -43,11 +68,16 @@ pub struct Metrics {
 pub struct ServerState {
     pub datasets: HashMap<String, Dataset>,
     pub protocols: HashMap<String, Arc<dyn Protocol>>,
-    pub metrics: Metrics,
+    pub metrics: Arc<Metrics>,
     pub seed: u64,
     /// the shared scoring batcher, when the protocols route through one —
     /// surfaces dispatch/occupancy gauges on `/metrics`
     pub batcher: Option<Arc<DynamicBatcher>>,
+    /// the shared chunk cache, when enabled — surfaces hit/miss/eviction
+    /// gauges on `/metrics`
+    pub cache: Option<Arc<ChunkCache>>,
+    /// registry + step scheduler behind the `/v1/sessions` endpoints
+    pub sessions: Arc<SessionRunner>,
 }
 
 pub struct Server {
@@ -70,6 +100,9 @@ impl Server {
     }
 
     /// Serve until `max_requests` have been handled (None = forever).
+    /// Transport-level handler failures (bad request framing, broken
+    /// pipes) are counted in `Metrics::errors`; route-level failures are
+    /// counted where the error response is built.
     pub fn serve(&self, max_requests: Option<u64>) -> Result<()> {
         let served = Arc::new(AtomicU64::new(0));
         for stream in self.listener.incoming() {
@@ -77,7 +110,9 @@ impl Server {
             let state = Arc::clone(&self.state);
             let served2 = Arc::clone(&served);
             self.pool.execute(move || {
-                let _ = handle_conn(stream, &state);
+                if handle_conn(stream, &state).is_err() {
+                    state.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
                 served2.fetch_add(1, Ordering::SeqCst);
             });
             if let Some(max) = max_requests {
@@ -91,26 +126,89 @@ impl Server {
     }
 }
 
+/// A route error carrying the HTTP status line it maps to.
+struct ApiError {
+    status: &'static str,
+    msg: String,
+}
+
+fn bad_request(msg: impl Into<String>) -> ApiError {
+    ApiError {
+        status: "400 Bad Request",
+        msg: msg.into(),
+    }
+}
+
+fn not_found(msg: impl Into<String>) -> ApiError {
+    ApiError {
+        status: "404 Not Found",
+        msg: msg.into(),
+    }
+}
+
+fn internal(msg: impl Into<String>) -> ApiError {
+    ApiError {
+        status: "500 Internal Server Error",
+        msg: msg.into(),
+    }
+}
+
+/// What a successful route produces: a JSON body, or a handle to stream
+/// events from.
+enum Reply {
+    Json(String),
+    EventStream(Arc<SessionEntry>),
+}
+
 fn handle_conn(mut stream: TcpStream, state: &ServerState) -> Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
     let req = read_request(&mut stream)?;
-    let resp = route(&req, state);
-    let (status, body) = match resp {
-        Ok(body) => ("200 OK", body),
+    match route(&req, state) {
+        Ok(Reply::Json(body)) => write_json(&mut stream, "200 OK", &body),
+        Ok(Reply::EventStream(entry)) => stream_events(&mut stream, &entry),
         Err(e) => {
             state.metrics.errors.fetch_add(1, Ordering::Relaxed);
-            (
-                "400 Bad Request",
-                Json::obj(vec![("error", Json::str(e.to_string()))]).to_string(),
-            )
+            let body = Json::obj(vec![("error", Json::str(e.msg))]).to_string();
+            // the request is already counted as one error; a client that
+            // hung up before reading the error body must not count twice
+            let _ = write_json(&mut stream, e.status, &body);
+            Ok(())
         }
-    };
+    }
+}
+
+fn write_json(stream: &mut TcpStream, status: &str, body: &str) -> Result<()> {
     let out = format!(
         "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
     stream.write_all(out.as_bytes())?;
     Ok(())
+}
+
+/// Stream a session's event lines over chunked transfer encoding: one
+/// chunk per newline-terminated JSON event, written as the session
+/// produces them, terminated when the session finalizes or fails.
+fn stream_events(stream: &mut TcpStream, entry: &Arc<SessionEntry>) -> Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+    )?;
+    let mut cursor = 0usize;
+    loop {
+        let (lines, done) = entry.wait_events(cursor);
+        cursor += lines.len();
+        for line in &lines {
+            // chunk = "<hex len>\r\n<line>\n\r\n"
+            let payload = format!("{line}\n");
+            stream.write_all(format!("{:x}\r\n", payload.len()).as_bytes())?;
+            stream.write_all(payload.as_bytes())?;
+            stream.write_all(b"\r\n")?;
+        }
+        if done {
+            stream.write_all(b"0\r\n\r\n")?;
+            return Ok(());
+        }
+    }
 }
 
 struct HttpRequest {
@@ -172,9 +270,62 @@ fn find_header_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-fn route(req: &HttpRequest, state: &ServerState) -> Result<String> {
+/// Parsed `{"dataset":..,"sample":..,"protocol":..}` run request, resolved
+/// against the preloaded state.
+struct RunRequest<'a> {
+    sample_id: usize,
+    sample: &'a crate::data::Sample,
+    protocol: &'a Arc<dyn Protocol>,
+}
+
+fn parse_run_request<'a>(body: &str, state: &'a ServerState) -> Result<RunRequest<'a>, ApiError> {
+    let body = Json::parse(body).map_err(|e| bad_request(format!("bad json: {e}")))?;
+    let dataset = body
+        .get("dataset")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad_request("missing 'dataset'"))?;
+    let sample_id = body
+        .get("sample")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| bad_request("missing 'sample'"))? as usize;
+    let protocol = body
+        .get("protocol")
+        .and_then(Json::as_str)
+        .unwrap_or("minions");
+    let ds = state
+        .datasets
+        .get(dataset)
+        .ok_or_else(|| not_found(format!("unknown dataset '{dataset}'")))?;
+    let sample = ds
+        .samples
+        .get(sample_id)
+        .ok_or_else(|| not_found(format!("sample {sample_id} out of range")))?;
+    let protocol = state
+        .protocols
+        .get(protocol)
+        .ok_or_else(|| not_found(format!("unknown protocol '{protocol}'")))?;
+    Ok(RunRequest {
+        sample_id,
+        sample,
+        protocol,
+    })
+}
+
+/// `/v1/sessions/:id[/events]` → (id, wants_events).
+fn parse_session_path(path: &str) -> Option<(u64, bool)> {
+    let rest = path.strip_prefix("/v1/sessions/")?;
+    match rest.split_once('/') {
+        None => rest.parse().ok().map(|id| (id, false)),
+        Some((id, "events")) => id.parse().ok().map(|id| (id, true)),
+        Some(_) => None,
+    }
+}
+
+fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
     match (req.method.as_str(), req.path.as_str()) {
-        ("GET", "/healthz") => Ok(Json::obj(vec![("status", Json::str("ok"))]).to_string()),
+        ("GET", "/healthz") => Ok(Reply::Json(
+            Json::obj(vec![("status", Json::str("ok"))]).to_string(),
+        )),
         ("GET", "/metrics") => {
             let m = &state.metrics;
             let requests = m.requests.load(Ordering::Relaxed);
@@ -196,6 +347,14 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<String> {
                     Json::num(m.remote_decode.load(Ordering::Relaxed) as f64),
                 ),
                 ("mean_latency_ms", Json::num(mean_latency_ms)),
+                (
+                    "sessions_active",
+                    Json::num(state.sessions.active() as f64),
+                ),
+                (
+                    "sessions_started",
+                    Json::num(state.sessions.started_total() as f64),
+                ),
             ];
             if let Some(batcher) = &state.batcher {
                 let b = batcher.snapshot();
@@ -203,42 +362,29 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<String> {
                 fields.push(("batch_rows", Json::num(b.rows as f64)));
                 fields.push(("batch_padded_rows", Json::num(b.padded_rows as f64)));
                 fields.push(("batch_flush_timeouts", Json::num(b.flush_timeouts as f64)));
+                fields.push(("batch_cached_rows", Json::num(b.cached_rows as f64)));
                 fields.push(("batch_occupancy", Json::num(b.occupancy)));
             }
-            Ok(Json::obj(fields).to_string())
+            if let Some(cache) = &state.cache {
+                let c = cache.snapshot();
+                fields.push(("cache_hits", Json::num(c.hits as f64)));
+                fields.push(("cache_misses", Json::num(c.misses as f64)));
+                fields.push(("cache_evictions", Json::num(c.evictions as f64)));
+                fields.push(("cache_entries", Json::num(c.entries as f64)));
+                fields.push(("cache_hit_rate", Json::num(c.hit_rate())));
+            }
+            Ok(Reply::Json(Json::obj(fields).to_string()))
         }
         ("POST", "/v1/query") => {
-            let body = Json::parse(&req.body).map_err(|e| anyhow!("bad json: {e}"))?;
-            let dataset = body
-                .get("dataset")
-                .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("missing 'dataset'"))?;
-            let sample_id = body
-                .get("sample")
-                .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("missing 'sample'"))? as usize;
-            let protocol = body
-                .get("protocol")
-                .and_then(Json::as_str)
-                .unwrap_or("minions");
-            let ds = state
-                .datasets
-                .get(dataset)
-                .ok_or_else(|| anyhow!("unknown dataset '{dataset}'"))?;
-            let sample = ds
-                .samples
-                .get(sample_id)
-                .ok_or_else(|| anyhow!("sample {sample_id} out of range"))?;
-            let proto = state
-                .protocols
-                .get(protocol)
-                .ok_or_else(|| anyhow!("unknown protocol '{protocol}'"))?;
-
+            let run = parse_run_request(&req.body, state)?;
             let t0 = Instant::now();
-            let mut rng = Rng::seed_from(state.seed ^ sample_id as u64);
-            let outcome = proto.run(sample, &mut rng)?;
+            let mut rng = Rng::seed_from(state.seed ^ run.sample_id as u64);
+            let outcome = run
+                .protocol
+                .run(run.sample, &mut rng)
+                .map_err(|e| internal(e.to_string()))?;
             let latency = t0.elapsed();
-            let s = score_strict(&outcome.answer, &sample.query.answer);
+            let s = score_strict(&outcome.answer, &run.sample.query.answer);
 
             let m = &state.metrics;
             m.requests.fetch_add(1, Ordering::Relaxed);
@@ -250,27 +396,68 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<String> {
             m.latency_us_total
                 .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
 
-            Ok(Json::obj(vec![
-                ("protocol", Json::str(proto.name())),
-                ("correct", Json::Bool(s >= 0.999)),
-                ("rounds", Json::num(outcome.rounds as f64)),
-                (
-                    "usd",
-                    Json::num(CostModel::GPT4O_JAN2025.usd(&outcome.ledger)),
-                ),
-                (
-                    "remote_prefill",
-                    Json::num(outcome.ledger.remote_prefill as f64),
-                ),
-                (
-                    "remote_decode",
-                    Json::num(outcome.ledger.remote_decode as f64),
-                ),
-                ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
-            ])
-            .to_string())
+            Ok(Reply::Json(
+                Json::obj(vec![
+                    ("protocol", Json::str(run.protocol.name())),
+                    ("correct", Json::Bool(s >= 0.999)),
+                    ("rounds", Json::num(outcome.rounds as f64)),
+                    (
+                        "usd",
+                        Json::num(CostModel::GPT4O_JAN2025.usd(&outcome.ledger)),
+                    ),
+                    (
+                        "remote_prefill",
+                        Json::num(outcome.ledger.remote_prefill as f64),
+                    ),
+                    (
+                        "remote_decode",
+                        Json::num(outcome.ledger.remote_decode as f64),
+                    ),
+                    ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
+                ])
+                .to_string(),
+            ))
         }
-        _ => Err(anyhow!("no route for {} {}", req.method, req.path)),
+        ("POST", "/v1/sessions") => {
+            let run = parse_run_request(&req.body, state)?;
+            // same stream as the blocking path: results agree bit-for-bit
+            let rng = Rng::seed_from(state.seed ^ run.sample_id as u64);
+            let entry = state.sessions.spawn(
+                run.protocol,
+                run.sample,
+                rng,
+                Some(Arc::clone(&state.metrics)),
+            );
+            Ok(Reply::Json(
+                Json::obj(vec![
+                    ("session_id", Json::num(entry.id as f64)),
+                    ("protocol", Json::str(entry.protocol.clone())),
+                    ("status", Json::str("running")),
+                    (
+                        "events",
+                        Json::str(format!("/v1/sessions/{}/events", entry.id)),
+                    ),
+                ])
+                .to_string(),
+            ))
+        }
+        ("GET", path) if path.starts_with("/v1/sessions/") => {
+            let (id, wants_events) = parse_session_path(path)
+                .ok_or_else(|| not_found(format!("no route for GET {path}")))?;
+            let entry = state
+                .sessions
+                .get(id)
+                .ok_or_else(|| not_found(format!("unknown session {id}")))?;
+            if wants_events {
+                Ok(Reply::EventStream(entry))
+            } else {
+                Ok(Reply::Json(entry.status_json()))
+            }
+        }
+        _ => Err(not_found(format!(
+            "no route for {} {}",
+            req.method, req.path
+        ))),
     }
 }
 
@@ -305,7 +492,8 @@ pub fn http_get(addr: &str, path: &str) -> Result<String> {
     Ok(body.to_string())
 }
 
-/// Guard for tests: state with a stub protocol (no batcher attached).
+/// Guard for tests: state with stub protocols (no batcher or cache
+/// attached) and a 2-worker session runner.
 pub fn state_with(
     datasets: HashMap<String, Dataset>,
     protocols: HashMap<String, Arc<dyn Protocol>>,
@@ -314,9 +502,11 @@ pub fn state_with(
     Arc::new(ServerState {
         datasets,
         protocols,
-        metrics: Metrics::default(),
+        metrics: Arc::new(Metrics::default()),
         seed,
         batcher: None,
+        cache: None,
+        sessions: SessionRunner::new(2),
     })
 }
 
@@ -325,7 +515,7 @@ mod tests {
     use super::*;
     use crate::cost::Ledger;
     use crate::data::Sample;
-    use crate::protocol::Outcome;
+    use crate::protocol::{OneShotSession, Outcome, ProtocolSession};
 
     struct Always42;
 
@@ -334,19 +524,22 @@ mod tests {
             "always42".into()
         }
 
-        fn run(&self, sample: &Sample, _rng: &mut Rng) -> Result<Outcome> {
-            let mut ledger = Ledger::default();
-            ledger.remote_msg(100, 10);
-            Ok(Outcome {
-                answer: sample.query.answer.clone(),
-                ledger,
-                rounds: 1,
-                transcript: vec![],
+        fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+            let sample = sample.clone();
+            OneShotSession::boxed(move |_rng| {
+                let mut ledger = Ledger::default();
+                ledger.remote_msg(100, 10);
+                Ok(Outcome {
+                    answer: sample.query.answer.clone(),
+                    ledger,
+                    rounds: 1,
+                    transcript: vec![],
+                })
             })
         }
     }
 
-    fn spawn_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+    fn spawn_server(max_requests: u64) -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
         let ds = crate::data::micro::multistep_sweep(1, 3, 5);
         let mut datasets = HashMap::new();
         datasets.insert("micro".to_string(), ds);
@@ -356,14 +549,14 @@ mod tests {
         let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
         let addr = server.addr;
         let h = std::thread::spawn(move || {
-            server.serve(Some(3)).unwrap();
+            server.serve(Some(max_requests)).unwrap();
         });
         (addr, h)
     }
 
     #[test]
     fn healthz_metrics_and_query() {
-        let (addr, h) = spawn_server();
+        let (addr, h) = spawn_server(3);
         let addr = addr.to_string();
         let health = http_get(&addr, "/healthz").unwrap();
         assert!(health.contains("ok"));
@@ -381,8 +574,57 @@ mod tests {
         let metrics = http_get(&addr, "/metrics").unwrap();
         let m = Json::parse(&metrics).unwrap();
         assert_eq!(m.get("requests").unwrap().as_u64(), Some(1));
-        // no batcher attached => no occupancy gauges
+        assert_eq!(m.get("sessions_active").unwrap().as_u64(), Some(0));
+        // no batcher/cache attached => no occupancy or hit gauges
         assert!(m.get("batch_occupancy").is_none());
+        assert!(m.get("cache_hits").is_none());
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn errors_get_proper_statuses_and_are_counted() {
+        let (addr, h) = spawn_server(4);
+        let addr = addr.to_string();
+        // unknown route → 404 with an error body
+        let body = http_get(&addr, "/nope").unwrap();
+        assert!(body.contains("no route"));
+        // malformed json → 400
+        let body = http_post(&addr, "/v1/query", "{oops").unwrap();
+        assert!(body.contains("bad json"));
+        // unknown dataset → 404
+        let body = http_post(&addr, "/v1/query", r#"{"dataset":"zzz","sample":0}"#).unwrap();
+        assert!(body.contains("unknown dataset"));
+        let metrics = http_get(&addr, "/metrics").unwrap();
+        let m = Json::parse(&metrics).unwrap();
+        assert_eq!(m.get("errors").unwrap().as_u64(), Some(3));
+        assert_eq!(m.get("requests").unwrap().as_u64(), Some(0));
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn session_endpoints_round_trip() {
+        let (addr, h) = spawn_server(4);
+        let addr = addr.to_string();
+        let resp = http_post(
+            &addr,
+            "/v1/sessions",
+            r#"{"dataset":"micro","sample":1,"protocol":"always42"}"#,
+        )
+        .unwrap();
+        let j = Json::parse(&resp).unwrap();
+        let id = j.get("session_id").unwrap().as_u64().unwrap();
+        // the events stream ends exactly when the session finalizes, so
+        // reading it to EOF is a deterministic completion barrier
+        let events = http_get(&addr, &format!("/v1/sessions/{id}/events")).unwrap();
+        assert!(events.contains("\"finalized\""), "got: {events}");
+        let status = http_get(&addr, &format!("/v1/sessions/{id}")).unwrap();
+        let s = Json::parse(&status).unwrap();
+        assert_eq!(s.get("status").unwrap().as_str(), Some("done"));
+        let result = s.get("result").expect("final result");
+        assert_eq!(result.get("correct").unwrap().as_bool(), Some(true));
+        // unknown id → 404 body
+        let body = http_get(&addr, "/v1/sessions/99999").unwrap();
+        assert!(body.contains("unknown session"));
         h.join().unwrap();
     }
 
@@ -432,9 +674,11 @@ mod tests {
         let state = Arc::new(ServerState {
             datasets: HashMap::new(),
             protocols: HashMap::new(),
-            metrics: Metrics::default(),
+            metrics: Arc::new(Metrics::default()),
             seed: 1,
             batcher: Some(Arc::clone(&batcher)),
+            cache: None,
+            sessions: SessionRunner::new(1),
         });
         let server = Server::bind(state, "127.0.0.1:0", 1).unwrap();
         let addr = server.addr.to_string();
@@ -444,6 +688,7 @@ mod tests {
         let m = Json::parse(&metrics).unwrap();
         assert_eq!(m.get("batch_dispatches").unwrap().as_u64(), Some(1));
         assert_eq!(m.get("batch_rows").unwrap().as_u64(), Some(1));
+        assert_eq!(m.get("batch_cached_rows").unwrap().as_u64(), Some(0));
         let occ = m.get("batch_occupancy").unwrap().as_f64().unwrap();
         assert!((occ - 1.0 / crate::vocab::BATCH as f64).abs() < 1e-9);
         batcher.stop();

@@ -1,0 +1,402 @@
+//! The session registry + step scheduler behind the server's
+//! `/v1/sessions` endpoints.
+//!
+//! A [`SessionRunner`] owns a small pool of worker threads and a FIFO
+//! run-queue of session ids. Workers pop a session, advance it by exactly
+//! one [`ProtocolSession::step`], record the resulting [`SessionEvent`]
+//! as a JSON line, and push the session back — so N workers **interleave**
+//! steps across every in-flight session instead of pinning one thread per
+//! protocol run (with a single worker the schedule is plain round-robin;
+//! `tests/session_server.rs` asserts this). Event streams and status
+//! polls read the recorded lines under the entry lock and never block a
+//! step worker.
+//!
+//! Determinism: each session owns the same `Rng::seed_from(seed ^
+//! sample_id)` stream the blocking `/v1/query` path uses, and the rng
+//! travels with the session between workers — a run produces identical
+//! results however its steps were scheduled.
+
+use crate::cost::CostModel;
+use crate::data::{Answer, Sample};
+use crate::eval::score_strict;
+use crate::protocol::{Protocol, ProtocolSession, SessionEvent};
+use crate::server::Metrics;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Cap on the diagnostic step trace (ids of the last sessions stepped).
+const STEP_TRACE_CAP: usize = 4096;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionStatus {
+    Running,
+    Done,
+    Failed,
+}
+
+impl SessionStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SessionStatus::Running => "running",
+            SessionStatus::Done => "done",
+            SessionStatus::Failed => "failed",
+        }
+    }
+}
+
+/// One registered protocol run. The step state (session + rng) lives
+/// behind the entry lock but is *taken out* for the duration of a step,
+/// so status polls and event streams stay responsive while the protocol
+/// computes.
+pub struct SessionEntry {
+    pub id: u64,
+    pub protocol: String,
+    inner: Mutex<EntryInner>,
+    events_cv: Condvar,
+}
+
+struct EntryInner {
+    /// `None` while a worker is mid-step (or after finalization)
+    session: Option<Box<dyn ProtocolSession>>,
+    rng: Rng,
+    status: SessionStatus,
+    /// serialized `SessionEvent` JSON lines, in emission order
+    events: Vec<String>,
+    rounds: usize,
+    steps: u64,
+    /// final-event JSON (Done) or error message (Failed)
+    result: Option<String>,
+    truth: Answer,
+    metrics: Option<Arc<Metrics>>,
+    started: Instant,
+}
+
+impl SessionEntry {
+    /// Block until events beyond `from` exist or the session has ended.
+    /// Returns the new lines and whether the stream is complete.
+    pub fn wait_events(&self, from: usize) -> (Vec<String>, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.events.len() > from || inner.status != SessionStatus::Running {
+                let start = from.min(inner.events.len());
+                let fresh = inner.events[start..].to_vec();
+                return (fresh, inner.status != SessionStatus::Running);
+            }
+            inner = self.events_cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Block until the session leaves `Running` (test/e2e convenience).
+    pub fn wait_done(&self) -> SessionStatus {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.status == SessionStatus::Running {
+            inner = self.events_cv.wait(inner).unwrap();
+        }
+        inner.status
+    }
+
+    pub fn status(&self) -> SessionStatus {
+        self.inner.lock().unwrap().status
+    }
+
+    /// The `GET /v1/sessions/:id` body.
+    pub fn status_json(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("protocol", Json::str(self.protocol.clone())),
+            ("status", Json::str(inner.status.as_str())),
+            ("rounds", Json::num(inner.rounds as f64)),
+            ("steps", Json::num(inner.steps as f64)),
+            ("events", Json::num(inner.events.len() as f64)),
+        ];
+        if let Some(result) = &inner.result {
+            match inner.status {
+                SessionStatus::Failed => fields.push(("error", Json::str(result.clone()))),
+                _ => {
+                    let parsed = Json::parse(result).unwrap_or(Json::Null);
+                    fields.push(("result", parsed));
+                }
+            }
+        }
+        Json::obj(fields).to_string()
+    }
+}
+
+struct RunnerShared {
+    /// session ids ready for their next step (FIFO → round-robin)
+    queue: Mutex<VecDeque<u64>>,
+    queue_cv: Condvar,
+    registry: Mutex<HashMap<u64, Arc<SessionEntry>>>,
+    next_id: AtomicU64,
+    active: AtomicU64,
+    started_total: AtomicU64,
+    shutdown: AtomicBool,
+    /// ring of recently-stepped session ids (diagnostics + tests)
+    step_trace: Mutex<VecDeque<u64>>,
+}
+
+/// Worker-pool scheduler for protocol sessions (see module docs).
+pub struct SessionRunner {
+    shared: Arc<RunnerShared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl SessionRunner {
+    pub fn new(workers: usize) -> Arc<SessionRunner> {
+        let shared = Arc::new(RunnerShared {
+            queue: Mutex::new(VecDeque::new()),
+            queue_cv: Condvar::new(),
+            registry: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(0),
+            active: AtomicU64::new(0),
+            started_total: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            step_trace: Mutex::new(VecDeque::new()),
+        });
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("session-worker-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn session worker")
+            })
+            .collect();
+        Arc::new(SessionRunner {
+            shared,
+            workers: Mutex::new(handles),
+        })
+    }
+
+    /// Register a new session and queue its first step. `rng` must be the
+    /// stream the blocking path would use for this sample so both paths
+    /// agree bit-for-bit. `metrics`, when given, receives the same
+    /// per-request accounting `/v1/query` records.
+    pub fn spawn(
+        &self,
+        protocol: &Arc<dyn Protocol>,
+        sample: &Sample,
+        rng: Rng,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Arc<SessionEntry> {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        let entry = Arc::new(SessionEntry {
+            id,
+            protocol: protocol.name(),
+            inner: Mutex::new(EntryInner {
+                session: Some(protocol.session(sample)),
+                rng,
+                status: SessionStatus::Running,
+                events: Vec::new(),
+                rounds: 0,
+                steps: 0,
+                result: None,
+                truth: sample.query.answer.clone(),
+                metrics,
+                started: Instant::now(),
+            }),
+            events_cv: Condvar::new(),
+        });
+        self.shared
+            .registry
+            .lock()
+            .unwrap()
+            .insert(id, Arc::clone(&entry));
+        self.shared.active.fetch_add(1, Ordering::Relaxed);
+        self.shared.started_total.fetch_add(1, Ordering::Relaxed);
+        self.shared.queue.lock().unwrap().push_back(id);
+        self.shared.queue_cv.notify_one();
+        entry
+    }
+
+    pub fn get(&self, id: u64) -> Option<Arc<SessionEntry>> {
+        self.shared.registry.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Sessions currently `Running` (the `/metrics` gauge).
+    pub fn active(&self) -> u64 {
+        self.shared.active.load(Ordering::Relaxed)
+    }
+
+    pub fn started_total(&self) -> u64 {
+        self.shared.started_total.load(Ordering::Relaxed)
+    }
+
+    /// Ids of the most recently stepped sessions, in execution order
+    /// (bounded ring — oldest entries are evicted; used by the
+    /// interleaving tests and for diagnostics).
+    pub fn step_trace(&self) -> Vec<u64> {
+        self.shared.step_trace.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Stop the workers. In-flight steps finish; queued steps are dropped.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.queue_cv.notify_all();
+        let mut workers = self.workers.lock().unwrap();
+        for handle in workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for SessionRunner {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: Arc<RunnerShared>) {
+    loop {
+        let id = {
+            let mut queue = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                if let Some(id) = queue.pop_front() {
+                    break id;
+                }
+                queue = shared.queue_cv.wait(queue).unwrap();
+            }
+        };
+        let entry = shared.registry.lock().unwrap().get(&id).cloned();
+        let Some(entry) = entry else { continue };
+        {
+            let mut trace = shared.step_trace.lock().unwrap();
+            if trace.len() >= STEP_TRACE_CAP {
+                trace.pop_front();
+            }
+            trace.push_back(id);
+        }
+        if step_once(&shared, &entry) {
+            // still running: back of the queue — this is what interleaves
+            // many sessions over few workers
+            shared.queue.lock().unwrap().push_back(id);
+            shared.queue_cv.notify_one();
+        }
+    }
+}
+
+/// Advance `entry` by one protocol step. Returns whether the session is
+/// still running (i.e. should be re-queued).
+fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> bool {
+    // take the step state out so the (possibly long) protocol step runs
+    // without holding the entry lock
+    let (mut session, mut rng) = {
+        let mut inner = entry.inner.lock().unwrap();
+        if inner.status != SessionStatus::Running {
+            return false;
+        }
+        let Some(session) = inner.session.take() else {
+            return false;
+        };
+        let rng = std::mem::replace(&mut inner.rng, Rng::seed_from(0));
+        (session, rng)
+    };
+    let stepped = session.step(&mut rng);
+
+    let mut inner = entry.inner.lock().unwrap();
+    inner.rng = rng;
+    inner.steps += 1;
+    let running = match stepped {
+        Ok(SessionEvent::Planned { round, jobs }) => {
+            inner.rounds = round;
+            inner.events.push(
+                Json::obj(vec![
+                    ("event", Json::str("planned")),
+                    ("round", Json::num(round as f64)),
+                    ("jobs", Json::num(jobs as f64)),
+                ])
+                .to_string(),
+            );
+            inner.session = Some(session);
+            true
+        }
+        Ok(SessionEvent::RoundExecuted {
+            round,
+            jobs,
+            survivors,
+        }) => {
+            inner.rounds = round;
+            inner.events.push(
+                Json::obj(vec![
+                    ("event", Json::str("round_executed")),
+                    ("round", Json::num(round as f64)),
+                    ("jobs", Json::num(jobs as f64)),
+                    ("survivors", Json::num(survivors as f64)),
+                ])
+                .to_string(),
+            );
+            inner.session = Some(session);
+            true
+        }
+        Ok(SessionEvent::Finalized(outcome)) => {
+            inner.rounds = outcome.rounds;
+            let latency = inner.started.elapsed();
+            let score = score_strict(&outcome.answer, &inner.truth);
+            if let Some(metrics) = &inner.metrics {
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                metrics.correct.fetch_add(score as u64, Ordering::Relaxed);
+                metrics
+                    .remote_prefill
+                    .fetch_add(outcome.ledger.remote_prefill, Ordering::Relaxed);
+                metrics
+                    .remote_decode
+                    .fetch_add(outcome.ledger.remote_decode, Ordering::Relaxed);
+                metrics
+                    .latency_us_total
+                    .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
+            }
+            let line = Json::obj(vec![
+                ("event", Json::str("finalized")),
+                ("rounds", Json::num(outcome.rounds as f64)),
+                ("correct", Json::Bool(score >= 0.999)),
+                (
+                    "usd",
+                    Json::num(CostModel::GPT4O_JAN2025.usd(&outcome.ledger)),
+                ),
+                (
+                    "remote_prefill",
+                    Json::num(outcome.ledger.remote_prefill as f64),
+                ),
+                (
+                    "remote_decode",
+                    Json::num(outcome.ledger.remote_decode as f64),
+                ),
+                ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
+            ])
+            .to_string();
+            inner.events.push(line.clone());
+            inner.result = Some(line);
+            inner.status = SessionStatus::Done;
+            shared.active.fetch_sub(1, Ordering::Relaxed);
+            false
+        }
+        Err(e) => {
+            let msg = e.to_string();
+            inner.events.push(
+                Json::obj(vec![
+                    ("event", Json::str("failed")),
+                    ("error", Json::str(msg.clone())),
+                ])
+                .to_string(),
+            );
+            if let Some(metrics) = &inner.metrics {
+                metrics.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            inner.result = Some(msg);
+            inner.status = SessionStatus::Failed;
+            shared.active.fetch_sub(1, Ordering::Relaxed);
+            false
+        }
+    };
+    entry.events_cv.notify_all();
+    running
+}

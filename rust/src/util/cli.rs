@@ -56,7 +56,12 @@ impl Cli {
         }
     }
 
-    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        default: Option<&'static str>,
+    ) -> Self {
         self.specs.push(ArgSpec {
             name,
             help,
@@ -86,6 +91,18 @@ impl Cli {
             "eval worker threads (1 = serial; bit-identical results)",
             Some("1"),
         )
+    }
+
+    /// The standard chunk-cache knobs shared by the binaries: repeated
+    /// chunk×task jobs skip scoring via `cache::ChunkCache`. Results are
+    /// bit-identical with or without the cache (tests/cache_parity.rs).
+    pub fn cache_opts(self) -> Self {
+        self.opt(
+            "cache-capacity",
+            "chunk-cache entries, LRU-bounded (0 disables)",
+            Some("8192"),
+        )
+        .flag("no-cache", "disable the cross-request chunk cache")
     }
 
     pub fn usage(&self) -> String {

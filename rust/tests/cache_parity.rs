@@ -1,0 +1,233 @@
+//! Chunk-cache parity tests (artifact-free: deterministic pseudo backend
+//! + stub manifest, so these run in every environment).
+//!
+//! The cache's whole contract is that it is *invisible* to results: a
+//! cached score vector is bit-identical to a recomputed one, and all
+//! stochastic post-processing happens downstream with the per-sample rng.
+//! These tests pin that down:
+//! - with-cache vs no-cache runs are **bit-identical** (scores, accuracy
+//!   bits, ledgers, per-sample outcomes) on every dataset×protocol pair;
+//! - eviction churn under a tiny `--cache-capacity`-style bound (2
+//!   entries) never changes outcomes either;
+//! - a warmed cache actually short-circuits scoring: re-running a
+//!   dataset adds zero batcher dispatches while producing identical
+//!   results.
+
+use anyhow::Result;
+use minions::cache::ChunkCache;
+use minions::data::{self, Dataset};
+use minions::eval::{run_protocol, RunResult};
+use minions::model::{local, remote, LocalLm, RemoteLm};
+use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
+use minions::rag::{Rag, Retriever};
+use minions::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
+use minions::sched::DynamicBatcher;
+use minions::vocab::{BATCH, CHUNK, QLEN};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// SplitMix64-style mixer for the pseudo scorer.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic, content-sensitive, row-independent scorer (same
+/// construction as `tests/parallel_eval.rs`).
+struct PseudoBackend;
+
+impl Backend for PseudoBackend {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        let mut scores = vec![-1.0e30f32; BATCH * CHUNK];
+        let mut lse = vec![0f32; BATCH];
+        for b in 0..BATCH {
+            let q0 = req.q_tokens[b * QLEN] as u64;
+            let q1 = req.q_tokens[b * QLEN + 1] as u64;
+            for c in 0..CHUNK {
+                if req.c_mask[b * CHUNK + c] == 0.0 {
+                    continue;
+                }
+                let t = req.c_tokens[b * CHUNK + c] as u64;
+                let h = mix(
+                    q0 ^ (q1 << 16) ^ (t << 32) ^ ((c as u64) << 48) ^ ((req.d as u64) << 60),
+                );
+                scores[b * CHUNK + c] = ((h >> 11) as f64 / (1u64 << 53) as f64 * 1.5) as f32;
+            }
+            lse[b] = 1.0;
+        }
+        Ok(ScoreResponse { scores, lse })
+    }
+
+    fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
+        unimplemented!("parity pairs avoid the dense retriever")
+    }
+
+    fn name(&self) -> &'static str {
+        "pseudo"
+    }
+}
+
+struct Stack {
+    batcher: Arc<DynamicBatcher>,
+    local: Arc<LocalLm>,
+    remote: Arc<RemoteLm>,
+}
+
+fn stack(cache: Option<Arc<ChunkCache>>) -> Stack {
+    let batcher = DynamicBatcher::new(Arc::new(PseudoBackend), Duration::from_millis(2));
+    let manifest = Manifest::stub_for_tests(&[64, 128, 256, 1024], vec![1.0, 0.5, 0.25]);
+    let local = Arc::new(
+        LocalLm::with_cache(
+            Arc::clone(&batcher),
+            &manifest,
+            local::LLAMA_3B,
+            cache.clone(),
+        )
+        .unwrap(),
+    );
+    let remote = Arc::new(
+        RemoteLm::with_cache(Arc::clone(&batcher), &manifest, remote::GPT_4O, cache).unwrap(),
+    );
+    Stack {
+        batcher,
+        local,
+        remote,
+    }
+}
+
+/// Every protocol the scoring path serves (the dense retriever needs the
+/// embed artifact, so RAG runs lexical here).
+fn protocols(s: &Stack) -> Vec<Arc<dyn Protocol>> {
+    vec![
+        Arc::new(LocalOnly::new(Arc::clone(&s.local))),
+        Arc::new(RemoteOnly::new(Arc::clone(&s.remote))),
+        Arc::new(Minion::new(Arc::clone(&s.local), Arc::clone(&s.remote), 3)),
+        Arc::new(MinionS::new(
+            Arc::clone(&s.local),
+            Arc::clone(&s.remote),
+            MinionsConfig::default(),
+        )),
+        Arc::new(Rag::new(
+            Arc::clone(&s.remote),
+            Arc::new(PseudoBackend),
+            Retriever::Bm25,
+            4,
+        )),
+    ]
+}
+
+fn datasets() -> Vec<Dataset> {
+    vec![
+        data::generate("finance", 4, 13),
+        data::generate("health", 4, 13),
+        data::generate("qasper", 4, 13),
+        data::generate("books", 2, 13),
+        data::micro::multistep_sweep(2, 4, 13),
+        data::micro::context_sweep(3, 4, 13),
+    ]
+}
+
+fn assert_identical(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(a.scores, b.scores, "{label}: scores diverged");
+    assert_eq!(
+        a.accuracy.to_bits(),
+        b.accuracy.to_bits(),
+        "{label}: accuracy diverged"
+    );
+    assert_eq!(a.cost.total, b.cost.total, "{label}: ledger diverged");
+    assert_eq!(a.mean_rounds, b.mean_rounds, "{label}: rounds diverged");
+    for (i, (x, y)) in a.outcomes.iter().zip(&b.outcomes).enumerate() {
+        assert_eq!(x.answer, y.answer, "{label}: answer {i} diverged");
+        assert_eq!(x.ledger, y.ledger, "{label}: ledger {i} diverged");
+        assert_eq!(x.rounds, y.rounds, "{label}: rounds {i} diverged");
+    }
+}
+
+#[test]
+fn cached_runs_are_bit_identical_on_every_dataset_protocol_pair() {
+    let baseline = stack(None);
+    let cached = stack(Some(ChunkCache::new(4096)));
+    // tiny bound: constant eviction churn must be invisible too
+    let tiny = stack(Some(ChunkCache::new(2)));
+    for ds in datasets() {
+        for ((p0, p1), p2) in protocols(&baseline)
+            .into_iter()
+            .zip(protocols(&cached))
+            .zip(protocols(&tiny))
+        {
+            let label = format!("{} on {}", p0.name(), ds.name);
+            let r0 = run_protocol(p0.as_ref(), &ds, 29, true).unwrap();
+            let r1 = run_protocol(p1.as_ref(), &ds, 29, true).unwrap();
+            let r2 = run_protocol(p2.as_ref(), &ds, 29, true).unwrap();
+            assert_identical(&r0, &r1, &format!("{label} [cache 4096]"));
+            assert_identical(&r0, &r2, &format!("{label} [cache 2]"));
+        }
+    }
+    baseline.batcher.stop();
+    cached.batcher.stop();
+    tiny.batcher.stop();
+}
+
+#[test]
+fn warm_cache_skips_scoring_entirely_and_stays_identical() {
+    let cache = ChunkCache::new(8192);
+    let s = stack(Some(Arc::clone(&cache)));
+    let proto = MinionS::new(
+        Arc::clone(&s.local),
+        Arc::clone(&s.remote),
+        MinionsConfig::default(),
+    );
+    let ds = data::generate("finance", 6, 41);
+
+    let cold = run_protocol(&proto, &ds, 7, true).unwrap();
+    let after_cold = s.batcher.snapshot();
+    assert!(after_cold.dispatches > 0, "cold run must score");
+
+    let warm = run_protocol(&proto, &ds, 7, true).unwrap();
+    let after_warm = s.batcher.snapshot();
+    assert_identical(&cold, &warm, "warm re-run");
+    assert_eq!(
+        after_warm.dispatches, after_cold.dispatches,
+        "warm run must add zero batcher dispatches"
+    );
+    assert!(
+        after_warm.cached_rows > after_cold.cached_rows,
+        "warm rows must be recorded as cache-skipped"
+    );
+    let snap = cache.snapshot();
+    assert!(snap.hits > 0, "expected hits, got {snap}");
+    s.batcher.stop();
+}
+
+#[test]
+fn eviction_under_tiny_capacity_recomputes_but_never_diverges() {
+    // capacity 2 on a workload with dozens of distinct rows: essentially
+    // every lookup misses and half the inserts evict — a worst case for
+    // any accidental key collision or stale-entry bug
+    let cache = ChunkCache::new(2);
+    let s = stack(Some(Arc::clone(&cache)));
+    let baseline = stack(None);
+    let ds = data::micro::context_sweep(4, 6, 17);
+    let p_tiny = MinionS::new(
+        Arc::clone(&s.local),
+        Arc::clone(&s.remote),
+        MinionsConfig::default(),
+    );
+    let p_base = MinionS::new(
+        Arc::clone(&baseline.local),
+        Arc::clone(&baseline.remote),
+        MinionsConfig::default(),
+    );
+    for seed in [3u64, 5, 7] {
+        let a = run_protocol(&p_base, &ds, seed, true).unwrap();
+        let b = run_protocol(&p_tiny, &ds, seed, true).unwrap();
+        assert_identical(&a, &b, &format!("tiny-capacity seed {seed}"));
+    }
+    let snap = cache.snapshot();
+    assert!(snap.evictions > 0, "tiny cache must churn, got {snap}");
+    assert!(cache.len() <= 2, "bound violated: {}", cache.len());
+    s.batcher.stop();
+    baseline.batcher.stop();
+}

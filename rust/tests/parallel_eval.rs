@@ -52,7 +52,9 @@ impl Backend for PseudoBackend {
                     continue;
                 }
                 let t = req.c_tokens[b * CHUNK + c] as u64;
-                let h = mix(q0 ^ (q1 << 16) ^ (t << 32) ^ ((c as u64) << 48) ^ ((req.d as u64) << 60));
+                let h = mix(
+                    q0 ^ (q1 << 16) ^ (t << 32) ^ ((c as u64) << 48) ^ ((req.d as u64) << 60),
+                );
                 scores[b * CHUNK + c] = ((h >> 11) as f64 / (1u64 << 53) as f64 * 1.5) as f32;
             }
             lse[b] = 1.0;

@@ -66,7 +66,8 @@ fn minion_chat_is_cheapest_but_weaker_than_minions() {
     let remote = Arc::new(RemoteLm::new(batcher.clone(), &manifest, remote::GPT_4O).unwrap());
 
     let ds = data::generate("health", 12, 7);
-    let r_minion = run_protocol(&Minion::new(local.clone(), remote.clone(), 3), &ds, 2, true).unwrap();
+    let r_minion =
+        run_protocol(&Minion::new(local.clone(), remote.clone(), 3), &ds, 2, true).unwrap();
     let r_minions = run_protocol(
         &MinionS::new(local.clone(), remote.clone(), MinionsConfig::default()),
         &ds,

@@ -1,0 +1,398 @@
+//! Session-scheduler + streaming-server integration tests (artifact-free:
+//! stub protocols and the deterministic pseudo backend stand in for
+//! compiled weights, so these run in every environment).
+//!
+//! What they pin down:
+//! - a single-worker `SessionRunner` **interleaves** `step()` calls of
+//!   two concurrent sessions round-robin instead of running one to
+//!   completion first;
+//! - `GET /v1/sessions/:id/events` streams `SessionEvent` JSON lines
+//!   *before* the session completes (two lines are read while the
+//!   session is provably still running behind a gate);
+//! - the session path and the blocking `/v1/query` path agree
+//!   bit-for-bit on the same sample;
+//! - a repeated-chunk workload drives nonzero `cache_hits` on
+//!   `/metrics`, with identical responses for the cached re-run.
+
+use anyhow::Result;
+use minions::cache::ChunkCache;
+use minions::cost::Ledger;
+use minions::data::{self, Sample};
+use minions::model::{local, remote, LocalLm, RemoteLm};
+use minions::protocol::{MinionS, MinionsConfig, Outcome, Protocol, ProtocolSession, SessionEvent};
+use minions::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
+use minions::sched::DynamicBatcher;
+use minions::server::session::SessionRunner;
+use minions::server::{http_get, http_post, Metrics, Server, ServerState};
+use minions::util::json::Json;
+use minions::util::rng::Rng;
+use minions::vocab::{BATCH, CHUNK, QLEN};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Stub stepped protocol: N chat-style rounds, then finalize. An optional
+// gate blocks a chosen step until the test releases it.
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Default)]
+struct Gate {
+    state: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Gate {
+    fn open(&self) {
+        let (lock, cv) = &*self.state;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let (lock, cv) = &*self.state;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+    }
+}
+
+struct Stepped {
+    rounds: usize,
+    /// (step number, gate): that step blocks until the gate opens
+    gate: Option<(usize, Gate)>,
+}
+
+impl Protocol for Stepped {
+    fn name(&self) -> String {
+        format!("stepped[{}]", self.rounds)
+    }
+
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        Box::new(SteppedSession {
+            truth: sample.query.answer.clone(),
+            rounds: self.rounds,
+            gate: self.gate.clone(),
+            step: 0,
+        })
+    }
+}
+
+struct SteppedSession {
+    truth: data::Answer,
+    rounds: usize,
+    gate: Option<(usize, Gate)>,
+    step: usize,
+}
+
+impl ProtocolSession for SteppedSession {
+    fn step(&mut self, _rng: &mut Rng) -> Result<SessionEvent> {
+        self.step += 1;
+        if let Some((gated_step, gate)) = &self.gate {
+            if self.step == *gated_step {
+                gate.wait();
+            }
+        }
+        if self.step <= self.rounds {
+            Ok(SessionEvent::RoundExecuted {
+                round: self.step,
+                jobs: 1,
+                survivors: 0,
+            })
+        } else {
+            let mut ledger = Ledger::default();
+            ledger.remote_msg(10, 1);
+            Ok(SessionEvent::Finalized(Outcome {
+                answer: self.truth.clone(),
+                ledger,
+                rounds: self.rounds,
+                transcript: vec![],
+            }))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Interleaving: one worker, two sessions → strict round-robin steps.
+// ---------------------------------------------------------------------
+
+#[test]
+fn one_worker_interleaves_two_concurrent_sessions() {
+    let runner = SessionRunner::new(1);
+    let gate = Gate::default();
+    let proto: Arc<dyn Protocol> = Arc::new(Stepped {
+        rounds: 3,
+        gate: Some((1, gate.clone())),
+    });
+    let ds = data::micro::multistep_sweep(1, 2, 5);
+    // both sessions are queued before the gate lets the first step finish,
+    // so the schedule below is deterministic
+    let a = runner.spawn(&proto, &ds.samples[0], Rng::seed_from(1), None);
+    let b = runner.spawn(&proto, &ds.samples[1], Rng::seed_from(2), None);
+    gate.open();
+    a.wait_done();
+    b.wait_done();
+    // 4 steps each (3 rounds + finalize), strictly alternating
+    let trace = runner.step_trace();
+    assert_eq!(trace.len(), 8, "trace: {trace:?}");
+    let expected: Vec<u64> = (0..8).map(|i| if i % 2 == 0 { a.id } else { b.id }).collect();
+    assert_eq!(trace, expected, "steps must interleave round-robin");
+    assert_eq!(runner.active(), 0);
+    assert_eq!(runner.started_total(), 2);
+}
+
+// ---------------------------------------------------------------------
+// Streaming: ≥2 event lines arrive while the session is still running.
+// ---------------------------------------------------------------------
+
+/// Incremental chunked-transfer reader (http_get would block to EOF).
+struct ChunkedLines {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl ChunkedLines {
+    fn open(addr: &str, path: &str) -> ChunkedLines {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let req = format!("GET {path} HTTP/1.1\r\nHost: minions\r\nConnection: close\r\n\r\n");
+        stream.write_all(req.as_bytes()).unwrap();
+        let mut r = ChunkedLines {
+            stream,
+            buf: Vec::new(),
+        };
+        // consume the response headers
+        while !r.buf.windows(4).any(|w| w == b"\r\n\r\n") {
+            assert!(r.fill(), "headers never completed");
+        }
+        let pos = r.buf.windows(4).position(|w| w == b"\r\n\r\n").unwrap();
+        r.buf.drain(..pos + 4);
+        r
+    }
+
+    fn fill(&mut self) -> bool {
+        let mut tmp = [0u8; 1024];
+        match self.stream.read(&mut tmp) {
+            Ok(0) | Err(_) => false,
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                true
+            }
+        }
+    }
+
+    /// Next chunk payload (one event line), or None at end-of-stream.
+    fn next_line(&mut self) -> Option<String> {
+        loop {
+            // "<hex>\r\n<payload>\r\n"
+            if let Some(hdr_end) = self.buf.windows(2).position(|w| w == b"\r\n") {
+                let size_hex = std::str::from_utf8(&self.buf[..hdr_end]).ok()?;
+                let size = usize::from_str_radix(size_hex.trim(), 16).ok()?;
+                if size == 0 {
+                    return None;
+                }
+                let total = hdr_end + 2 + size + 2;
+                if self.buf.len() >= total {
+                    let payload =
+                        String::from_utf8_lossy(&self.buf[hdr_end + 2..hdr_end + 2 + size])
+                            .trim_end()
+                            .to_string();
+                    self.buf.drain(..total);
+                    return Some(payload);
+                }
+            }
+            if !self.fill() {
+                return None;
+            }
+        }
+    }
+}
+
+#[test]
+fn events_endpoint_streams_lines_before_completion() {
+    let gate = Gate::default();
+    // steps 1 and 2 emit rounds; step 3 (the last round) blocks on the
+    // gate, so exactly two lines can exist while the session runs
+    let proto: Arc<dyn Protocol> = Arc::new(Stepped {
+        rounds: 3,
+        gate: Some((3, gate.clone())),
+    });
+    let ds = data::micro::multistep_sweep(1, 1, 5);
+    let mut datasets = HashMap::new();
+    datasets.insert("micro".to_string(), ds);
+    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    protocols.insert("stepped".to_string(), proto);
+    let state = minions::server::state_with(datasets, protocols, 7);
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    // serve forever on a detached thread: a streaming connection stays
+    // open across other requests, so a max-requests budget would race
+    std::thread::spawn(move || server.serve(None));
+
+    let resp = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"protocol":"stepped"}"#,
+    )
+    .unwrap();
+    let sid = Json::parse(&resp)
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .unwrap();
+
+    let mut lines = ChunkedLines::open(&addr, &format!("/v1/sessions/{sid}/events"));
+    let first = lines.next_line().expect("first event line");
+    let second = lines.next_line().expect("second event line");
+    assert!(first.contains("\"round_executed\"") && first.contains("\"round\":1"), "{first}");
+    assert!(second.contains("\"round\":2"), "{second}");
+    // both lines arrived while the session is provably still running
+    // (its next step is parked on the gate)
+    let status = http_get(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+    assert!(status.contains("\"running\""), "got: {status}");
+
+    gate.open();
+    let mut saw_final = false;
+    while let Some(line) = lines.next_line() {
+        saw_final = line.contains("\"finalized\"");
+    }
+    assert!(saw_final, "stream must end with the finalized event");
+}
+
+// ---------------------------------------------------------------------
+// Real-protocol stack on the pseudo backend: session path == query path,
+// and repeated-chunk workloads hit the cache.
+// ---------------------------------------------------------------------
+
+/// SplitMix64-style mixer for the pseudo scorer.
+fn mix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic, content-sensitive, row-independent scorer (the same
+/// construction `tests/parallel_eval.rs` uses).
+struct PseudoBackend;
+
+impl Backend for PseudoBackend {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        let mut scores = vec![-1.0e30f32; BATCH * CHUNK];
+        let mut lse = vec![0f32; BATCH];
+        for b in 0..BATCH {
+            let q0 = req.q_tokens[b * QLEN] as u64;
+            let q1 = req.q_tokens[b * QLEN + 1] as u64;
+            for c in 0..CHUNK {
+                if req.c_mask[b * CHUNK + c] == 0.0 {
+                    continue;
+                }
+                let t = req.c_tokens[b * CHUNK + c] as u64;
+                let h = mix(
+                    q0 ^ (q1 << 16) ^ (t << 32) ^ ((c as u64) << 48) ^ ((req.d as u64) << 60),
+                );
+                scores[b * CHUNK + c] = ((h >> 11) as f64 / (1u64 << 53) as f64 * 1.5) as f32;
+            }
+            lse[b] = 1.0;
+        }
+        Ok(ScoreResponse { scores, lse })
+    }
+
+    fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
+        unimplemented!("not used by these protocols")
+    }
+
+    fn name(&self) -> &'static str {
+        "pseudo"
+    }
+}
+
+fn cached_minions_state() -> (Arc<ServerState>, Arc<DynamicBatcher>) {
+    let batcher = DynamicBatcher::new(Arc::new(PseudoBackend), Duration::from_millis(2));
+    let cache = ChunkCache::new(4096);
+    let manifest = Manifest::stub_for_tests(&[64, 128, 256, 1024], vec![1.0, 0.5, 0.25]);
+    let local = Arc::new(
+        LocalLm::with_cache(
+            Arc::clone(&batcher),
+            &manifest,
+            local::LLAMA_3B,
+            Some(Arc::clone(&cache)),
+        )
+        .unwrap(),
+    );
+    let remote = Arc::new(
+        RemoteLm::with_cache(
+            Arc::clone(&batcher),
+            &manifest,
+            remote::GPT_4O,
+            Some(Arc::clone(&cache)),
+        )
+        .unwrap(),
+    );
+    let mut datasets = HashMap::new();
+    datasets.insert("micro".to_string(), data::micro::multistep_sweep(2, 3, 3));
+    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    protocols.insert(
+        "minions".to_string(),
+        Arc::new(MinionS::new(local, remote, MinionsConfig::default())),
+    );
+    let state = Arc::new(ServerState {
+        datasets,
+        protocols,
+        metrics: Arc::new(Metrics::default()),
+        seed: 11,
+        batcher: Some(Arc::clone(&batcher)),
+        cache: Some(cache),
+        sessions: SessionRunner::new(2),
+    });
+    (state, batcher)
+}
+
+#[test]
+fn repeated_chunk_workload_hits_cache_and_matches_query_path() {
+    let (state, batcher) = cached_minions_state();
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let body = r#"{"dataset":"micro","sample":1,"protocol":"minions"}"#;
+    // blocking run (cold), blocking re-run (warm: same chunks, same keys)
+    let cold = http_post(&addr, "/v1/query", body).unwrap();
+    let warm = http_post(&addr, "/v1/query", body).unwrap();
+    let cj = Json::parse(&cold).unwrap();
+    let wj = Json::parse(&warm).unwrap();
+    for field in ["correct", "rounds", "usd", "remote_prefill", "remote_decode"] {
+        assert_eq!(
+            cj.get(field).map(|v| v.to_string()),
+            wj.get(field).map(|v| v.to_string()),
+            "cached re-run must be identical ({field})"
+        );
+    }
+
+    // session path over the same sample: identical result again
+    let resp = http_post(&addr, "/v1/sessions", body).unwrap();
+    let sid = Json::parse(&resp)
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .unwrap();
+    let events = http_get(&addr, &format!("/v1/sessions/{sid}/events")).unwrap();
+    assert!(events.contains("\"finalized\""), "got: {events}");
+    for field in ["\"correct\"", "\"remote_prefill\""] {
+        let frag = cj
+            .get(field.trim_matches('"'))
+            .map(|v| format!("{field}:{v}"))
+            .unwrap();
+        assert!(events.contains(&frag), "session diverged: {frag} not in {events}");
+    }
+
+    // the acceptance gauge: nonzero cache_hits on a repeated-chunk load
+    let metrics = http_get(&addr, "/metrics").unwrap();
+    let m = Json::parse(&metrics).unwrap();
+    let hits = m.get("cache_hits").unwrap().as_u64().unwrap();
+    assert!(hits > 0, "expected cache hits, got metrics {metrics}");
+    assert!(m.get("batch_cached_rows").unwrap().as_u64().unwrap() > 0);
+    assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(1));
+    batcher.stop();
+}
