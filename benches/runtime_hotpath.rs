@@ -6,8 +6,9 @@
 //! cross-sample batch coalescing (serial vs parallel eval through the
 //! shared batcher — occupancy before/after), repeated-chunk cache
 //! hit-rate and wall-clock (cold vs warm re-query of the same
-//! documents), and prints the analytical latency ratios with the
-//! Prop C.1 bound.
+//! documents), contended lane fairness (interactive p50/p95 wait under a
+//! saturating batch sweep, FIFO vs weighted lanes), and prints the
+//! analytical latency ratios with the Prop C.1 bound.
 //!
 //! Exits cleanly when the compiled artifacts are absent so the CI bench
 //! smoke step can run in artifact-less environments.
@@ -19,12 +20,24 @@ use minions::latency::*;
 use minions::model::{local, remote, PlanConfig};
 use minions::protocol::{MinionS, MinionsConfig, Protocol};
 use minions::runtime::{default_artifact_dir, ScoreRequest};
-use minions::sched::{DynamicBatcher, ScoreRow};
+use minions::sched::{lane_scope, DynamicBatcher, Lane, ScoreRow, Ticket};
 use minions::util::cli::Cli;
 use minions::util::rng::Rng;
-use minions::util::stats::{bench, fmt_duration, Table};
+use minions::util::stats::{bench, fmt_duration, Summary, Table};
 use minions::vocab::{BATCH, CHUNK, QLEN};
+use std::collections::VecDeque;
+use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
+
+fn flat_row(d: usize) -> ScoreRow {
+    ScoreRow {
+        d,
+        q_tokens: vec![0i32; QLEN],
+        q_weights: vec![0.2; QLEN],
+        c_tokens: vec![0i32; CHUNK],
+        c_mask: vec![1.0; CHUNK],
+    }
+}
 
 fn rand_request(d: usize, rng: &mut Rng) -> ScoreRequest {
     ScoreRequest {
@@ -228,6 +241,84 @@ fn main() {
         } else {
             cold_result = Some((r.accuracy, wall));
         }
+    }
+    println!("{}", t.render());
+
+    // --- contended lane fairness: interactive wait under a batch sweep ---
+    // Two batch-lane flooders keep the scheduler saturated while a
+    // client submits interactive rows one at a time. "fifo" collapses
+    // every submitter onto one lane and session (the pre-QoS behavior:
+    // interactive rows queue behind the sweep's backlog); "wfq 4:1" tags
+    // lanes properly, so the fair assembly pulls each interactive row
+    // into the next flush. This is the ISSUE-3 fairness exhibit.
+    println!("== lane fairness: interactive wait under a saturating batch sweep ==");
+    let mut t = Table::new(&["scenario", "p50 wait", "p95 wait", "max", "batch rows"]);
+    for (label, lanes_on) in [("fifo (no lanes)", false), ("wfq lanes 4:1", true)] {
+        let fb = DynamicBatcher::new(
+            Arc::clone(&exp.backend),
+            std::time::Duration::from_millis(2),
+        );
+        let (iw, bw) = if lanes_on { (4, 1) } else { (1, 1) };
+        fb.set_lane_weights(iw, bw);
+        let stop = Arc::new(AtomicBool::new(false));
+        let flood: Vec<_> = (0..2u64)
+            .map(|f| {
+                let fb = Arc::clone(&fb);
+                let stop = Arc::clone(&stop);
+                std::thread::spawn(move || {
+                    // in the no-lanes scenario everyone shares one
+                    // (lane, session), i.e. one FIFO queue
+                    let (lane, session) = if lanes_on {
+                        (Lane::Batch, f)
+                    } else {
+                        (Lane::Batch, 0)
+                    };
+                    let _lane = lane_scope(lane, session);
+                    let mut parked: VecDeque<Ticket> = VecDeque::new();
+                    while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                        while parked.len() < 32 {
+                            match fb.submit(flat_row(128)) {
+                                Ok(ticket) => parked.push_back(ticket),
+                                Err(_) => break,
+                            }
+                        }
+                        if let Some(ticket) = parked.pop_front() {
+                            let _ = ticket.wait();
+                        }
+                    }
+                    for ticket in parked {
+                        let _ = ticket.wait();
+                    }
+                })
+            })
+            .collect();
+        // let the sweep build up before measuring
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let _lane = if lanes_on {
+            lane_scope(Lane::Interactive, 99)
+        } else {
+            lane_scope(Lane::Batch, 0)
+        };
+        let mut waits_ms = Vec::with_capacity(30);
+        for _ in 0..30 {
+            let t0 = std::time::Instant::now();
+            fb.score_row(flat_row(128)).expect("interactive row");
+            waits_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        for h in flood {
+            h.join().unwrap();
+        }
+        let batch_rows = fb.snapshot().lane_rows[Lane::Batch.index()];
+        fb.stop();
+        let s = Summary::of(&waits_ms);
+        t.row(vec![
+            label.into(),
+            format!("{:.2}ms", s.p50),
+            format!("{:.2}ms", s.p95),
+            format!("{:.2}ms", s.max),
+            batch_rows.to_string(),
+        ]);
     }
     println!("{}", t.render());
 

@@ -7,13 +7,19 @@
 //! requests against it (mixed protocols over the three datasets), and
 //! reports accuracy, per-query cost, and latency percentiles. Proves all
 //! three layers compose with Python nowhere on the request path.
+//!
+//! The server runs with a deliberately tiny `--max-sessions` (2), so the
+//! final act demonstrates end-to-end backpressure: a burst of session
+//! creations gets shed with **429 + Retry-After**, the client honors the
+//! header and retries, and every session eventually completes — with the
+//! shed count visible on `/metrics`.
 
 use minions::data;
 use minions::exp::Exp;
 use minions::model::{local, remote};
 use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
 use minions::server::session::SessionRunner;
-use minions::server::{http_get, http_post, Server, ServerState};
+use minions::server::{http_get, http_post, http_post_raw, Server, ServerState};
 use minions::util::json::Json;
 use minions::util::stats::Summary;
 use std::collections::HashMap;
@@ -46,13 +52,14 @@ fn main() -> anyhow::Result<()> {
         batcher: Some(exp.batcher()),
         cache: exp.cache(),
         sessions: SessionRunner::new(4),
+        // tiny on purpose: the burst below must trip the 429 shed path
+        max_sessions: 2,
     });
     let server = Server::bind(state, "127.0.0.1:0", 4)?;
     let addr = server.addr.to_string();
-    println!("serving on http://{addr}");
+    println!("serving on http://{addr} (--max-sessions 2)");
 
-    let total_requests = (3 * n_samples) as u64 + 2;
-    let server_thread = std::thread::spawn(move || server.serve(Some(total_requests + 2)));
+    let server_thread = std::thread::spawn(move || server.serve(None));
 
     // health check
     assert!(http_get(&addr, "/healthz")?.contains("ok"));
@@ -117,8 +124,62 @@ fn main() -> anyhow::Result<()> {
         s.p50, s.p95, s.max
     );
 
+    // --- backpressure demo: burst past --max-sessions, honor Retry-After ---
+    // Fire a burst of session creations without waiting. With only 2
+    // session slots and multi-step MinionS runs behind each, the tail of
+    // the burst is shed with 429 + Retry-After; the client backs off and
+    // retries until every session is admitted and finishes.
+    println!("\n== backpressure: 6-session burst against --max-sessions 2 ==");
+    let burst = 6usize;
+    let mut admitted: Vec<u64> = Vec::new();
+    let mut shed_responses = 0usize;
+    let mut pending: Vec<usize> = (0..burst).collect();
+    while !pending.is_empty() {
+        let mut still_pending = Vec::new();
+        for i in pending {
+            let body = format!(r#"{{"dataset":"health","sample":{i},"protocol":"minions"}}"#);
+            let raw = http_post_raw(&addr, "/v1/sessions", &body)?;
+            if raw.starts_with("HTTP/1.1 429") {
+                assert!(raw.contains("Retry-After:"), "429 without Retry-After: {raw}");
+                shed_responses += 1;
+                still_pending.push(i);
+            } else {
+                let resp = raw.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+                let sid = Json::parse(&resp)?
+                    .get("session_id")
+                    .and_then(Json::as_u64)
+                    .expect("admitted session id");
+                admitted.push(sid);
+            }
+        }
+        pending = still_pending;
+        if !pending.is_empty() {
+            // honor the server's Retry-After hint (1s is the shed default;
+            // poll a little faster since sessions finish in tens of ms)
+            std::thread::sleep(std::time::Duration::from_millis(100));
+        }
+    }
+    // every admitted session runs to completion (events stream EOF =
+    // finalized) — the workers survived the shed storm
+    for sid in &admitted {
+        let events = http_get(&addr, &format!("/v1/sessions/{sid}/events"))?;
+        assert!(events.contains("\"finalized\""), "session {sid} never finalized");
+    }
     let metrics = http_get(&addr, "/metrics")?;
-    println!("server metrics: {metrics}");
-    let _ = server_thread; // server exits after max_requests
+    let m = Json::parse(&metrics)?;
+    let shed_metric = m.get("sessions_shed").and_then(Json::as_u64).unwrap_or(0);
+    println!(
+        "burst of {burst}: {} admitted, {shed_responses} shed responses observed \
+         (server counted {shed_metric}), all completed after retry",
+        admitted.len()
+    );
+    assert_eq!(admitted.len(), burst);
+    assert!(
+        shed_responses > 0,
+        "a 6-session burst against 2 slots should shed at least once"
+    );
+
+    println!("\nserver metrics: {metrics}");
+    let _ = server_thread; // serving thread is detached; exit tears it down
     std::process::exit(0);
 }

@@ -35,11 +35,35 @@
 //! the hot path, and each shard is LRU-bounded; `--cache-capacity` /
 //! `--no-cache` control it from the CLI. Hit/miss/eviction counters feed
 //! `/metrics` and `RuntimeStats`.
+//!
+//! **Admission.** Not every scored row is worth caching: one-shot
+//! full-context sweeps (the local-only / remote-only baselines and chat
+//! full-context reads) enumerate every chunk once per run and would churn
+//! the LRU against the chunk-job rows that genuinely recur. Job execution
+//! passes a [`CacheAdmit`] hint; `Bypass` rows skip the cache and are
+//! counted in `rejected_admission` (surfaced as
+//! `cache_rejected_admission` on `/metrics`).
 
 use crate::sched::ScoreRow;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Admission hint for job execution: may freshly-scored rows be inserted
+/// into the cache? One-shot full-context sweeps (local-only / remote-only
+/// baselines, chat full-context reads) enumerate every chunk of a context
+/// exactly once per run with a run-specific pooled query — caching them
+/// evicts the chunk-job rows that *do* recur (across MinionS rounds,
+/// samples, and concurrent requests) without ever paying back. `Bypass`
+/// rows go straight to the batcher and are counted in
+/// [`CacheStats::rejected_admission`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheAdmit {
+    /// Chunk-job rows that can recur: look up, and insert on miss.
+    Admit,
+    /// One-shot sweep rows: skip the cache entirely.
+    Bypass,
+}
 
 /// Default LRU bound (entries across all shards). A cached row holds a
 /// `CHUNK`-length score vector (~2 KiB), so the default costs ~16 MiB.
@@ -120,6 +144,15 @@ pub struct CacheStats {
     pub misses: AtomicU64,
     pub insertions: AtomicU64,
     pub evictions: AtomicU64,
+    /// rows the admission policy kept out of the cache ([`CacheAdmit::Bypass`])
+    pub rejected_admission: AtomicU64,
+}
+
+impl CacheStats {
+    /// Record `n` rows refused by the admission policy.
+    pub fn note_rejected(&self, n: u64) {
+        self.rejected_admission.fetch_add(n, Ordering::Relaxed);
+    }
 }
 
 /// Point-in-time copy of [`CacheStats`] for metrics endpoints.
@@ -129,6 +162,8 @@ pub struct CacheSnapshot {
     pub misses: u64,
     pub insertions: u64,
     pub evictions: u64,
+    /// rows the admission policy refused to cache
+    pub rejected_admission: u64,
     pub entries: usize,
     pub capacity: usize,
 }
@@ -160,13 +195,15 @@ impl std::fmt::Display for CacheSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} hits / {} misses (rate {:.2}), {}/{} entries, {} evictions",
+            "{} hits / {} misses (rate {:.2}), {}/{} entries, {} evictions, \
+             {} admission-rejected",
             self.hits,
             self.misses,
             self.hit_rate(),
             self.entries,
             self.capacity,
-            self.evictions
+            self.evictions,
+            self.rejected_admission
         )
     }
 }
@@ -219,20 +256,32 @@ impl ChunkCache {
             % self.shards.len()
     }
 
-    /// Look a row's scores up; a hit refreshes the entry's recency.
+    /// Look a row's scores up; a hit refreshes the entry's recency and
+    /// counts hit/miss stats *at lookup time*. The scoring path does NOT
+    /// use this: it uses [`Self::probe`] and attributes stats only after
+    /// its dispatch succeeds, so backed-off retries never double-count —
+    /// prefer that pattern anywhere a lookup may be retried.
     pub fn get(&self, key: &CacheKey) -> Option<Arc<Vec<f32>>> {
+        let found = self.probe(key);
+        match &found {
+            Some(_) => self.stats.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.stats.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// [`Self::get`] without touching the hit/miss counters (recency is
+    /// still refreshed). The scoring path uses this and attributes stats
+    /// only after its batch dispatch succeeds — a lookup that belongs to
+    /// a `SchedError::Saturated` attempt gets re-done (and re-counted
+    /// once) by the backed-off retry, so the gauges stay an honest
+    /// account of served demand under overload.
+    pub fn probe(&self, key: &CacheKey) -> Option<Arc<Vec<f32>>> {
         let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
-        match shard.map.get_mut(key) {
-            Some(e) => {
-                e.stamp = self.tick.fetch_add(1, Ordering::Relaxed);
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-                Some(Arc::clone(&e.scores))
-            }
-            None => {
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                None
-            }
-        }
+        shard.map.get_mut(key).map(|e| {
+            e.stamp = self.tick.fetch_add(1, Ordering::Relaxed);
+            Arc::clone(&e.scores)
+        })
     }
 
     /// Insert a freshly-scored row, evicting the shard's least-recently
@@ -265,6 +314,7 @@ impl ChunkCache {
             misses: self.stats.misses.load(Ordering::Relaxed),
             insertions: self.stats.insertions.load(Ordering::Relaxed),
             evictions: self.stats.evictions.load(Ordering::Relaxed),
+            rejected_admission: self.stats.rejected_admission.load(Ordering::Relaxed),
             entries: self.len(),
             capacity: self.capacity,
         }

@@ -93,6 +93,17 @@ impl Exp {
         Arc::clone(&self.batcher)
     }
 
+    /// Configure the shared scheduler core: the bounded admission queue
+    /// (`--sched-queue-depth`) and, when given, the interactive:batch
+    /// WFQ ratio (`--lane-weights`). Safe at any time — the settings are
+    /// read per dispatch and never change results, only scheduling.
+    pub fn configure_sched(&self, queue_depth: usize, lane_weights: Option<(u64, u64)>) {
+        self.batcher.set_queue_depth(queue_depth);
+        if let Some((interactive, batch)) = lane_weights {
+            self.batcher.set_lane_weights(interactive, batch);
+        }
+    }
+
     /// Occupancy snapshot of the shared batcher.
     pub fn batcher_snapshot(&self) -> BatcherSnapshot {
         self.batcher.snapshot()

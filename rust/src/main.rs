@@ -53,12 +53,13 @@ fn main() {
 
 // `--parallel` is added per-command (run/bench), not here: serve handles
 // one sample per request and has no dataset eval to parallelize. The
-// chunk-cache knobs apply everywhere.
+// chunk-cache and scheduler knobs apply everywhere.
 fn backend_opt(cli: Cli) -> Cli {
     cli.opt("backend", "pjrt | native", Some("pjrt"))
         .opt("seed", "experiment seed", Some("42"))
         .opt("n", "samples per dataset", Some("16"))
         .cache_opts()
+        .sched_opts()
 }
 
 /// Apply `--cache-capacity` / `--no-cache` to a freshly-built harness.
@@ -69,6 +70,22 @@ fn apply_cache_flags(exp: &mut Exp, a: &Args) {
     } else if capacity != DEFAULT_CACHE_CAPACITY {
         exp.set_cache(Some(ChunkCache::new(capacity)));
     }
+}
+
+/// Apply `--sched-queue-depth` / `--lane-weights` to the shared scheduler.
+fn apply_sched_flags(exp: &Exp, a: &Args) {
+    let depth: usize = a.parse_num("sched-queue-depth", minions::sched::DEFAULT_QUEUE_DEPTH);
+    let weights = a.get("lane-weights").and_then(|s| {
+        let parsed = minions::sched::parse_lane_weights(s);
+        if parsed.is_none() {
+            eprintln!(
+                "warning: ignoring malformed --lane-weights '{s}' \
+                 (expected INTERACTIVE:BATCH, e.g. 4:1)"
+            );
+        }
+        parsed
+    });
+    exp.configure_sched(depth, weights);
 }
 
 fn cmd_info(_args: Vec<String>) -> i32 {
@@ -127,6 +144,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
         }
     };
     apply_cache_flags(&mut exp, &a);
+    apply_sched_flags(&exp, &a);
     let Some(lp) = local_profile(a.get_or("local", "llama-8b")) else {
         eprintln!("unknown local profile");
         return 2;
@@ -208,6 +226,16 @@ fn cmd_serve(args: Vec<String>) -> i32 {
                 "session-workers",
                 "session step worker threads (interleave all in-flight sessions)",
                 Some("4"),
+            )
+            .opt(
+                "max-sessions",
+                "shed POST /v1/sessions with 429 past this many in flight (0 = unlimited)",
+                Some("256"),
+            )
+            .opt(
+                "session-ttl",
+                "seconds before terminal sessions are evicted from the registry",
+                Some("600"),
             ),
     );
     let a = match cli.parse_from(args) {
@@ -248,6 +276,7 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         }
     };
     apply_cache_flags(&mut exp, &a);
+    apply_sched_flags(&exp, &a);
     let mut datasets = HashMap::new();
     for name in ["finance", "health", "qasper"] {
         datasets.insert(name.to_string(), data::generate(name, n, seed));
@@ -267,6 +296,8 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     protocols.insert("local".into(), Arc::new(LocalOnly::new(llama8b)));
 
     let session_workers: usize = a.parse_num("session-workers", 4usize).max(1);
+    let max_sessions: usize = a.parse_num("max-sessions", 256usize);
+    let session_ttl = std::time::Duration::from_secs(a.parse_num("session-ttl", 600u64).max(1));
     let state = Arc::new(ServerState {
         datasets,
         protocols,
@@ -274,7 +305,8 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         seed,
         batcher: Some(exp.batcher()),
         cache: exp.cache(),
-        sessions: SessionRunner::new(session_workers),
+        sessions: SessionRunner::with_config(session_workers, session_ttl),
+        max_sessions,
     });
     let server = match Server::bind(state, &format!("127.0.0.1:{port}"), workers) {
         Ok(s) => s,
@@ -319,6 +351,7 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
         }
     };
     apply_cache_flags(&mut exp, &a);
+    apply_sched_flags(&exp, &a);
     exp.parallel = a.parse_num("parallel", 1usize).max(1);
     let result = match exhibit.as_str() {
         "table1" => exp.table1(n, Some(std::path::Path::new("figure2.csv"))),

@@ -14,7 +14,7 @@
 //! emergent — see DESIGN.md §2.
 
 use super::job::{ChunkRef, Job, WorkerOutput};
-use crate::cache::{model_fingerprint, CacheKey, ChunkCache};
+use crate::cache::{model_fingerprint, CacheAdmit, CacheKey, ChunkCache};
 use crate::cost::{text_tokens, Ledger};
 use crate::data::{Context, PAGES_PER_CHUNK_MAX};
 use crate::runtime::Manifest;
@@ -172,24 +172,42 @@ impl LocalLm {
     /// Score rows through the cache + shared batcher, preserving input
     /// order. Cached rows skip the batcher entirely (recorded via
     /// `BatcherStats::note_cached` so scheduler stats keep reflecting
-    /// total demand); misses dispatch through it and fill the cache on
-    /// the way out. This is the *only* scoring path of the wrapper —
-    /// job execution and citation verification both land here.
-    fn score_cached(&self, rows: Vec<ScoreRow>) -> Result<Vec<Arc<Vec<f32>>>> {
+    /// total demand); misses dispatch through it and, when the admission
+    /// hint allows, fill the cache on the way out — [`CacheAdmit::Bypass`]
+    /// rows (one-shot full-context sweeps) go straight to the batcher and
+    /// are counted as `rejected_admission`. This is the *only* scoring
+    /// path of the wrapper — job execution and citation verification both
+    /// land here. A saturated scheduler propagates its typed error
+    /// untouched so protocol sessions can back off and retry.
+    fn score_cached(&self, rows: Vec<ScoreRow>, admit: CacheAdmit) -> Result<Vec<Arc<Vec<f32>>>> {
         let Some(cache) = &self.cache else {
             // no cache configured: straight through the batcher
             let results = self.scorer.score_rows(rows)?;
             return Ok(results.into_iter().map(|r| Arc::new(r.scores)).collect());
         };
+        if admit == CacheAdmit::Bypass {
+            // admission policy: these rows cannot recur — don't let them
+            // churn the LRU (and don't skew the hit/miss gauges). Count
+            // the rejection only once scoring succeeds: a Saturated
+            // attempt is retried in full and must not double-count.
+            let n = rows.len() as u64;
+            let results = self.scorer.score_rows(rows)?;
+            cache.stats.note_rejected(n);
+            return Ok(results.into_iter().map(|r| Arc::new(r.scores)).collect());
+        }
         let mut scores: Vec<Option<Arc<Vec<f32>>>> = Vec::with_capacity(rows.len());
         let mut misses: Vec<ScoreRow> = Vec::new();
         let mut miss_slots: Vec<usize> = Vec::new();
         let mut miss_keys: Vec<CacheKey> = Vec::new();
+        let mut hit_count = 0u64;
         for (i, row) in rows.into_iter().enumerate() {
             let key = CacheKey::for_row(self.fingerprint, &row);
-            match cache.get(&key) {
+            // probe, not get: hit/miss/demand stats are attributed below,
+            // only after the miss dispatch succeeds (a Saturated attempt
+            // is retried in full and must not double-count)
+            match cache.probe(&key) {
                 Some(hit) => {
-                    self.scorer.stats.note_cached(1);
+                    hit_count += 1;
                     scores.push(Some(hit));
                 }
                 None => {
@@ -201,6 +219,12 @@ impl LocalLm {
             }
         }
         let results = self.scorer.score_rows(misses)?;
+        cache.stats.hits.fetch_add(hit_count, std::sync::atomic::Ordering::Relaxed);
+        cache
+            .stats
+            .misses
+            .fetch_add(miss_keys.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        self.scorer.stats.note_cached(hit_count);
         for ((slot, key), res) in miss_slots.into_iter().zip(miss_keys).zip(results) {
             let row_scores = Arc::new(res.scores);
             cache.insert(key, Arc::clone(&row_scores));
@@ -217,9 +241,14 @@ impl LocalLm {
     /// scores are already cached skip the batcher entirely, the rest
     /// dispatch through it (full batches inline, trailing partials
     /// coalescing with whatever other samples/protocols are scoring
-    /// concurrently). Post-processing runs per call, sequentially in job
-    /// order, so the per-sample rng stream — and therefore every output —
-    /// is identical whether a row hit or missed.
+    /// concurrently). `admit` is the cache-admission hint: decomposed
+    /// chunk jobs recur and should `Admit`; one-shot full-context sweeps
+    /// should `Bypass` (see `cache` module docs). Post-processing runs per
+    /// call, sequentially in job order, so the per-sample rng stream — and
+    /// therefore every output — is identical whether a row hit or missed.
+    /// No rng is consumed and no ledger entry is charged until scoring
+    /// succeeds, so a run interrupted by `SchedError::Saturated` retries
+    /// bit-identically.
     pub fn run_jobs(
         &self,
         ctx: &Context,
@@ -227,6 +256,7 @@ impl LocalLm {
         samples: usize,
         rng: &mut Rng,
         ledger: &mut Ledger,
+        admit: CacheAdmit,
     ) -> Result<Vec<WorkerOutput>> {
         let mut rows = Vec::with_capacity(jobs.len());
         let mut row_tokens: Vec<Vec<i32>> = Vec::with_capacity(jobs.len());
@@ -243,7 +273,7 @@ impl LocalLm {
             });
             row_tokens.push(c_tokens);
         }
-        let scores = self.score_cached(rows)?;
+        let scores = self.score_cached(rows, admit)?;
         let mut outputs = Vec::with_capacity(jobs.len());
         for ((job, res), toks) in jobs.iter().zip(&scores).zip(&row_tokens) {
             let out = self.postprocess(job, res, toks, samples, rng);
@@ -383,7 +413,7 @@ impl LocalLm {
                 }
             })
             .collect();
-        let results = self.score_cached(rows)?;
+        let results = self.score_cached(rows, CacheAdmit::Admit)?;
         Ok(results
             .iter()
             .map(|r| {
@@ -420,7 +450,8 @@ impl LocalLm {
 
     /// Answer a query by scanning the *entire* context in one pooled pass
     /// (the local-only / Minion-chat reading mode — long-context dilution
-    /// and multi-part pooling both apply).
+    /// and multi-part pooling both apply). One-shot sweep rows bypass the
+    /// chunk cache (admission policy — see `cache` module docs).
     pub fn answer_full_context(
         &self,
         ctx: &Context,
@@ -429,7 +460,7 @@ impl LocalLm {
         ledger: &mut Ledger,
     ) -> Result<(Option<Token>, f32, Vec<Token>)> {
         let jobs = full_context_jobs(ctx, keys, "read the full document");
-        let outs = self.run_jobs(ctx, &jobs, 1, rng, ledger)?;
+        let outs = self.run_jobs(ctx, &jobs, 1, rng, ledger, CacheAdmit::Bypass)?;
         // global argmax = the highest-confidence chunk answer (scores are
         // comparable across chunks: same query vector, same scale)
         let mut best: Option<&WorkerOutput> = None;

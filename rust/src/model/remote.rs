@@ -157,7 +157,11 @@ pub trait MinionsRemote: Send + Sync {
         had_answers: bool,
     ) -> String;
 
-    /// Aggregate filtered worker outputs into a decision.
+    /// Aggregate filtered worker outputs into a decision. Fallible: the
+    /// cloud-side citation-verification pass scores spans through the
+    /// shared scheduler, and a saturated admission queue must propagate
+    /// (typed, retryable) rather than silently skipping verification —
+    /// otherwise results would depend on load.
     fn synthesize(
         &self,
         query: &Query,
@@ -165,7 +169,7 @@ pub trait MinionsRemote: Send + Sync {
         round: usize,
         max_rounds: usize,
         rng: &mut Rng,
-    ) -> Decision;
+    ) -> Result<Decision>;
 }
 
 pub struct RemoteLm {
@@ -297,7 +301,21 @@ impl RemoteLm {
     // Synthesis (aggregate step)
     // -----------------------------------------------------------------
 
-    /// Aggregate filtered worker outputs into a decision.
+    /// Best verified candidate for `task`, keyed on the matching part key.
+    fn best_for_task(
+        &self,
+        query: &Query,
+        outputs: &[WorkerOutput],
+        task: usize,
+    ) -> Result<Option<(Token, f32)>> {
+        let key = query.keys.get(task.min(query.keys.len().saturating_sub(1)));
+        self.verified_vote(outputs, task, key)
+    }
+
+    /// Aggregate filtered worker outputs into a decision. Errors from the
+    /// verification scoring path (notably `SchedError::Saturated`)
+    /// propagate *before* any rng is consumed, so a backed-off synthesis
+    /// retries bit-identically.
     pub fn synthesize(
         &self,
         query: &Query,
@@ -305,16 +323,11 @@ impl RemoteLm {
         round: usize,
         max_rounds: usize,
         rng: &mut Rng,
-    ) -> Decision {
+    ) -> Result<Decision> {
         let n_parts = self.expected_parts(query);
-        let best = |task: usize| -> Option<(Token, f32)> {
-            let key = query.keys.get(task.min(query.keys.len().saturating_sub(1)));
-            self.verified_vote(outputs, task, key)
-        };
-
         let force_final = round >= max_rounds;
-        match &query.kind {
-            QueryKind::Extract => match best(0) {
+        let decision = match &query.kind {
+            QueryKind::Extract => match self.best_for_task(query, outputs, 0)? {
                 Some((tok, _)) => Decision::Final(Answer::Value(tok)),
                 None if force_final => Decision::Final(Answer::Value(0)),
                 None => Decision::MoreRounds {
@@ -323,7 +336,18 @@ impl RemoteLm {
             },
             QueryKind::Bool => {
                 // any confident extraction => yes; silence => no
-                let found = (0..n_parts).any(|t| best(t).map_or(false, |(_, w)| w > 0.5));
+                // (short-circuits on the first confident part, exactly as
+                // the old `any` did, so scoring order is unchanged)
+                let mut found = false;
+                for t in 0..n_parts {
+                    if self
+                        .best_for_task(query, outputs, t)?
+                        .map_or(false, |(_, w)| w > 0.5)
+                    {
+                        found = true;
+                        break;
+                    }
+                }
                 if !found && !force_final && round < max_rounds && outputs.is_empty() {
                     Decision::MoreRounds {
                         advice: "verify absence with page-level chunks".into(),
@@ -333,8 +357,8 @@ impl RemoteLm {
                 }
             }
             QueryKind::Compute(op) => {
-                let a = self.part_candidate(query, outputs, 0);
-                let b = self.part_candidate(query, outputs, 1);
+                let a = self.part_candidate(query, outputs, 0)?;
+                let b = self.part_candidate(query, outputs, 1)?;
                 match (a, b) {
                     (Some(a), Some(b)) => {
                         let mut x = op.apply(
@@ -357,7 +381,7 @@ impl RemoteLm {
                 let mut vals = Vec::new();
                 let mut missing = false;
                 for part in 0..*k {
-                    match self.part_candidate(query, outputs, part) {
+                    match self.part_candidate(query, outputs, part)? {
                         Some(v) => vals.push(v),
                         None => missing = true,
                     }
@@ -381,7 +405,8 @@ impl RemoteLm {
                 }
                 Decision::Final(Answer::Set(vals))
             }
-        }
+        };
+        Ok(decision)
     }
 
     /// Confidence-weighted vote with cloud-side citation verification:
@@ -395,7 +420,7 @@ impl RemoteLm {
         outputs: &[WorkerOutput],
         task: usize,
         part_key: Option<&Key>,
-    ) -> Option<(Token, f32)> {
+    ) -> Result<Option<(Token, f32)>> {
         let mut weights: std::collections::HashMap<Token, f32> = std::collections::HashMap::new();
         let mut best_citation: std::collections::HashMap<Token, (f32, Vec<Token>)> =
             std::collections::HashMap::new();
@@ -425,9 +450,12 @@ impl RemoteLm {
             }
         }
         if weights.is_empty() {
-            return None;
+            return Ok(None);
         }
-        // verification pass: only when answers actually compete
+        // verification pass: only when answers actually compete. Scoring
+        // failures propagate — a saturated scheduler must surface as
+        // retryable backpressure, not silently skip verification (which
+        // would make the winner depend on load).
         if weights.len() > 1 {
             if let Some(key) = part_key {
                 let cands: Vec<Token> = weights.keys().copied().collect();
@@ -436,12 +464,11 @@ impl RemoteLm {
                     .map(|t| best_citation.get(t).map(|(_, s)| s.clone()).unwrap_or_default())
                     .collect();
                 if spans.iter().all(|s| !s.is_empty()) {
-                    if let Ok(scores) = self.reader.score_span(key, &spans) {
-                        for (t, vs) in cands.iter().zip(&scores) {
-                            // sharpen: squared verified score reweights
-                            let w = weights.get_mut(t).unwrap();
-                            *w *= (vs.clamp(0.05, 1.25)).powi(2);
-                        }
+                    let scores = self.reader.score_span(key, &spans)?;
+                    for (t, vs) in cands.iter().zip(&scores) {
+                        // sharpen: squared verified score reweights
+                        let w = weights.get_mut(t).unwrap();
+                        *w *= (vs.clamp(0.05, 1.25)).powi(2);
                     }
                 }
             }
@@ -449,9 +476,9 @@ impl RemoteLm {
         // break exact-weight ties by token id: HashMap iteration order is
         // per-instance random, and a hash-order-dependent winner would make
         // runs non-reproducible (and serial vs parallel eval divergent)
-        weights
+        Ok(weights
             .into_iter()
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then_with(|| a.0.cmp(&b.0))))
     }
 
     fn expected_parts(&self, query: &Query) -> usize {
@@ -470,14 +497,14 @@ impl RemoteLm {
         query: &Query,
         outputs: &[WorkerOutput],
         part: usize,
-    ) -> Option<Token> {
+    ) -> Result<Option<Token>> {
         let n_parts = self.expected_parts(query);
         let task = match self.profile.planner {
             PlannerQuality::Good => part.min(n_parts - 1),
             _ => 0,
         };
         let key = query.keys.get(part.min(query.keys.len().saturating_sub(1)));
-        self.verified_vote(outputs, task, key).map(|(t, _)| t)
+        Ok(self.verified_vote(outputs, task, key)?.map(|(t, _)| t))
     }
 
     // -----------------------------------------------------------------
@@ -592,7 +619,7 @@ impl MinionsRemote for RemoteLm {
         round: usize,
         max_rounds: usize,
         rng: &mut Rng,
-    ) -> Decision {
+    ) -> Result<Decision> {
         RemoteLm::synthesize(self, query, outputs, round, max_rounds, rng)
     }
 }

@@ -101,9 +101,12 @@ impl MinionSession {
     /// One remote→local→remote exchange. Returns `None` when the round
     /// found nothing left to ask (every part already resolved) — the
     /// caller falls through to finalization without emitting an event.
+    /// A saturated scheduler yields `Some(Backoff)` with *no* state
+    /// mutated (round counter, ledger, transcript, and rng are all
+    /// untouched until the local read succeeds), so the retried round is
+    /// bit-identical to an unsaturated one.
     fn chat_round(&mut self, rng: &mut Rng) -> Result<Option<SessionEvent>> {
-        self.rounds += 1;
-        let rounds = self.rounds;
+        let rounds = self.rounds + 1;
         let q = &self.sample.query;
         // --- remote -> local message ---
         let (msg, asked_parts): (String, Vec<usize>) = if rounds == 1 {
@@ -122,6 +125,10 @@ impl MinionSession {
                 .map(|(i, _)| i)
                 .collect();
             let Some(part) = missing.first().copied() else {
+                // nothing left to ask: the pre-refactor loop still
+                // counted this round's attempt before falling through to
+                // finalization, so commit it for bit-identical outcomes
+                self.rounds = rounds;
                 return Ok(None);
             };
             (
@@ -133,15 +140,28 @@ impl MinionSession {
                 vec![part],
             )
         };
+        // --- local reads the FULL context with the pooled request ---
+        let keys: Vec<_> = asked_parts.iter().map(|i| q.keys[*i]).collect();
+        let checkpoint = rng.clone();
+        let (tok, conf, _all) = match self.local.answer_full_context(
+            &self.sample.context,
+            &keys,
+            rng,
+            &mut self.ledger,
+        ) {
+            Ok(v) => v,
+            Err(e) if crate::sched::is_saturated(&e) => {
+                *rng = checkpoint;
+                return Ok(Some(SessionEvent::Backoff));
+            }
+            Err(e) => return Err(e),
+        };
+        // commit the round only once the scoring work actually happened
+        // (ledger entries commute, so totals match the pre-refactor order)
+        self.rounds = rounds;
         // remote decodes the message; it has only the query as prefill
         self.ledger.remote_msg(text_tokens(&q.text), text_tokens(&msg));
         self.transcript.push(format!("remote→local (r{rounds}): {msg}"));
-
-        // --- local reads the FULL context with the pooled request ---
-        let keys: Vec<_> = asked_parts.iter().map(|i| q.keys[*i]).collect();
-        let (tok, conf, _all) =
-            self.local
-                .answer_full_context(&self.sample.context, &keys, rng, &mut self.ledger)?;
         // with one part asked, the answer attaches to that part; with
         // several pooled, the local model can only serve its best find
         if let Some(t) = tok {
@@ -266,9 +286,24 @@ impl ProtocolSession for MinionSession {
                     }
                 }
                 MinionPhase::Finalize => {
-                    let result = self.finalize(rng);
-                    self.phase = MinionPhase::Done;
-                    return result.map(SessionEvent::Finalized);
+                    // the summarisation finalizer scores through the
+                    // scheduler: saturation backs off (phase stays
+                    // Finalize, rng rewound) instead of failing the run
+                    let checkpoint = rng.clone();
+                    return match self.finalize(rng) {
+                        Ok(outcome) => {
+                            self.phase = MinionPhase::Done;
+                            Ok(SessionEvent::Finalized(outcome))
+                        }
+                        Err(e) if crate::sched::is_saturated(&e) => {
+                            *rng = checkpoint;
+                            Ok(SessionEvent::Backoff)
+                        }
+                        Err(e) => {
+                            self.phase = MinionPhase::Done;
+                            Err(e)
+                        }
+                    };
                 }
                 MinionPhase::Done => return Err(anyhow!("minion session already finalized")),
             }

@@ -14,12 +14,14 @@
 //! spinning forever.
 
 use super::{Outcome, Protocol, ProtocolSession, RoundStrategy, SessionEvent};
+use crate::cache::CacheAdmit;
 use crate::cost::{text_tokens, Ledger};
 use crate::data::{Answer, Query, QueryKind, Sample};
 use crate::dsl::{self, DocShape, Limits};
 use crate::model::job::{Job, WorkerOutput};
 use crate::model::remote::last_jobs_binding;
 use crate::model::{ChunkRef, Decision, LocalLm, MinionsRemote, PlanConfig};
+use crate::sched::is_saturated;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -142,6 +144,13 @@ enum Phase {
     Plan,
     /// execute + aggregate: run the planned jobs locally, synthesize
     Execute { jobs: Vec<Job> },
+    /// aggregate only: local execution already ran but synthesis was
+    /// backed off by a saturated scheduler — retry it without re-running
+    /// (or re-billing, or re-drawing rng for) the local jobs
+    Synthesize {
+        jobs: Vec<Job>,
+        outputs: Vec<WorkerOutput>,
+    },
     /// finalized (stepping again is a contract violation)
     Done,
 }
@@ -228,18 +237,72 @@ impl MinionsSession {
     }
 
     /// (2) execute locally through the shared batcher, then (3) aggregate
-    /// on the remote.
+    /// on the remote. A saturated scheduler yields a retryable
+    /// [`SessionEvent::Backoff`]: no rng was consumed and no ledger entry
+    /// charged, so the retried step is bit-identical to an unsaturated one.
     fn step_execute(&mut self, jobs: Vec<Job>, rng: &mut Rng) -> Result<SessionEvent> {
-        let rounds = self.rounds;
-        let outputs = self.local.run_jobs(
+        let checkpoint = rng.clone();
+        let outputs = match self.local.run_jobs(
             &self.sample.context,
             &jobs,
             self.cfg.samples_per_task,
             rng,
             &mut self.ledger,
-        )?;
+            CacheAdmit::Admit,
+        ) {
+            Ok(o) => o,
+            Err(e) if is_saturated(&e) => {
+                *rng = checkpoint;
+                self.phase = Phase::Execute { jobs };
+                return Ok(SessionEvent::Backoff);
+            }
+            Err(e) => return Err(e),
+        };
+        self.step_synthesize(jobs, outputs, rng)
+    }
+
+    /// (3) aggregate on the remote. Transcript and ledger accounting are
+    /// deferred until synthesis succeeds so a backed-off retry never
+    /// double-bills; the resulting totals and line order are identical to
+    /// the unsaturated path (ledger entries commute, and synthesis itself
+    /// writes no transcript).
+    fn step_synthesize(
+        &mut self,
+        jobs: Vec<Job>,
+        outputs: Vec<WorkerOutput>,
+        rng: &mut Rng,
+    ) -> Result<SessionEvent> {
+        let rounds = self.rounds;
         // abstain filter: only survivors travel to the cloud
-        let survivors: Vec<_> = outputs.iter().filter(|o| !o.abstained()).cloned().collect();
+        let survivors: Vec<WorkerOutput> =
+            outputs.iter().filter(|o| !o.abstained()).cloned().collect();
+        let keep_multi = self.sample.query.kind == QueryKind::Summarize;
+        let synth_inputs: Vec<WorkerOutput> = if keep_multi {
+            // summarisation synthesis reads every (non-empty) output
+            outputs
+                .iter()
+                .filter(|o| !o.multi_found.is_empty())
+                .cloned()
+                .collect()
+        } else {
+            survivors.clone()
+        };
+        let checkpoint = rng.clone();
+        let decision = match self.remote.synthesize(
+            &self.sample.query,
+            &synth_inputs,
+            rounds,
+            self.max_rounds,
+            rng,
+        ) {
+            Ok(d) => d,
+            Err(e) if is_saturated(&e) => {
+                *rng = checkpoint;
+                self.phase = Phase::Synthesize { jobs, outputs };
+                return Ok(SessionEvent::Backoff);
+            }
+            Err(e) => return Err(e),
+        };
         let w: String = survivors
             .iter()
             .map(|o| o.to_json().to_string())
@@ -250,23 +313,7 @@ impl MinionsSession {
             jobs.len(),
             survivors.len()
         ));
-
-        let q = &self.sample.query;
         self.ledger.remote_msg(text_tokens(&w) + SYNTH_PROMPT_TOKENS, 90);
-        let keep_multi = q.kind == QueryKind::Summarize;
-        let synth_inputs: Vec<_> = if keep_multi {
-            // summarisation synthesis reads every (non-empty) output
-            outputs
-                .iter()
-                .filter(|o| !o.multi_found.is_empty())
-                .cloned()
-                .collect()
-        } else {
-            survivors.clone()
-        };
-        let decision = self
-            .remote
-            .synthesize(q, &synth_inputs, rounds, self.max_rounds, rng);
 
         match decision {
             Decision::Final(answer) => Ok(SessionEvent::Finalized(self.finish(answer))),
@@ -310,6 +357,7 @@ impl ProtocolSession for MinionsSession {
         match std::mem::replace(&mut self.phase, Phase::Done) {
             Phase::Plan => self.step_plan(),
             Phase::Execute { jobs } => self.step_execute(jobs, rng),
+            Phase::Synthesize { jobs, outputs } => self.step_synthesize(jobs, outputs, rng),
             Phase::Done => Err(anyhow!("minions session already finalized")),
         }
     }
@@ -380,10 +428,10 @@ mod tests {
             _round: usize,
             _max_rounds: usize,
             _rng: &mut Rng,
-        ) -> Decision {
-            Decision::MoreRounds {
+        ) -> Result<Decision> {
+            Ok(Decision::MoreRounds {
                 advice: "just one more round, I promise".into(),
-            }
+            })
         }
     }
 

@@ -27,6 +27,7 @@ use crate::cost::Ledger;
 use crate::data::{Answer, Sample};
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
+use std::time::Duration;
 
 #[derive(Clone, Debug)]
 pub struct Outcome {
@@ -57,6 +58,13 @@ pub enum SessionEvent {
     },
     /// The protocol finished; the outcome is the session's final result.
     Finalized(Outcome),
+    /// The scheduler's admission queue was saturated mid-step
+    /// (`sched::SchedError::Saturated`). The step consumed no rng, no
+    /// ledger, and no protocol state — calling `step` again later retries
+    /// the same unit of work bit-identically. Callers should back off
+    /// before retrying (`server::session` requeues with jittered delay;
+    /// the blocking [`drive`] sleeps briefly).
+    Backoff,
 }
 
 impl SessionEvent {
@@ -79,11 +87,21 @@ pub trait ProtocolSession: Send {
 }
 
 /// Drive a session to completion — the blocking semantics of
-/// [`Protocol::run`], shared by the eval/bench paths.
+/// [`Protocol::run`], shared by the eval/bench paths. A `Backoff` event
+/// (saturated scheduler) waits out the queue with a small capped
+/// exponential delay and retries; the queue always drains (the flush
+/// thread dispatches regardless of admission), so progress is guaranteed
+/// unless the batcher is stopped — which surfaces as a hard error.
 pub fn drive(mut session: Box<dyn ProtocolSession>, rng: &mut Rng) -> Result<Outcome> {
+    let mut backoff_ms = 1u64;
     loop {
-        if let SessionEvent::Finalized(outcome) = session.step(rng)? {
-            return Ok(outcome);
+        match session.step(rng)? {
+            SessionEvent::Finalized(outcome) => return Ok(outcome),
+            SessionEvent::Backoff => {
+                std::thread::sleep(Duration::from_millis(backoff_ms));
+                backoff_ms = (backoff_ms * 2).min(50);
+            }
+            _ => backoff_ms = 1,
         }
     }
 }
@@ -103,14 +121,18 @@ pub trait Protocol: Send + Sync {
 }
 
 /// Session adapter for one-shot protocols (the baselines): the first
-/// `step` performs the whole computation and finalizes.
+/// successful `step` performs the whole computation and finalizes. A
+/// saturated scheduler mid-computation yields [`SessionEvent::Backoff`]
+/// instead of failing: the rng is rewound to its pre-attempt state (the
+/// closures build their ledgers locally and mutate nothing else), so the
+/// retry is bit-identical to an unsaturated run.
 pub struct OneShotSession<F> {
     compute: Option<F>,
 }
 
 impl<F> OneShotSession<F>
 where
-    F: FnOnce(&mut Rng) -> Result<Outcome> + Send + 'static,
+    F: FnMut(&mut Rng) -> Result<Outcome> + Send + 'static,
 {
     pub fn boxed(compute: F) -> Box<dyn ProtocolSession> {
         Box::new(OneShotSession {
@@ -121,12 +143,26 @@ where
 
 impl<F> ProtocolSession for OneShotSession<F>
 where
-    F: FnOnce(&mut Rng) -> Result<Outcome> + Send + 'static,
+    F: FnMut(&mut Rng) -> Result<Outcome> + Send + 'static,
 {
     fn step(&mut self, rng: &mut Rng) -> Result<SessionEvent> {
-        match self.compute.take() {
-            Some(f) => Ok(SessionEvent::Finalized(f(rng)?)),
-            None => Err(anyhow!("session already finalized")),
+        let Some(compute) = self.compute.as_mut() else {
+            return Err(anyhow!("session already finalized"));
+        };
+        let checkpoint = rng.clone();
+        match compute(rng) {
+            Ok(outcome) => {
+                self.compute = None;
+                Ok(SessionEvent::Finalized(outcome))
+            }
+            Err(e) if crate::sched::is_saturated(&e) => {
+                *rng = checkpoint;
+                Ok(SessionEvent::Backoff)
+            }
+            Err(e) => {
+                self.compute = None;
+                Err(e)
+            }
         }
     }
 }

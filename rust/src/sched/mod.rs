@@ -1,38 +1,179 @@
-//! Serving-side scheduling: the row-level dynamic batcher that is the
-//! **single scoring path** of the system.
+//! Serving-side scheduling: the QoS scheduler core behind the row-level
+//! dynamic batcher that is the **single scoring path** of the system.
 //!
 //! Every scoring call — protocol job execution, citation verification,
 //! full-context baselines, concurrent HTTP requests — submits individual
-//! [`ScoreRow`]s here. Rows accumulate per capacity `d` and flush as one
-//! fixed-shape `B = BATCH` dispatch when a slot fills, when the oldest
-//! row exceeds `max_wait` (the vLLM-style continuous-batching idea,
-//! adapted to fixed-shape PJRT artifacts), or immediately when the only
-//! in-flight group caller finishes enqueueing — so serial callers never
-//! pay the coalescing window. Because rows are keyed only by `d`, work
-//! from *different* samples, protocols, and server connections coalesces
-//! into full batches — batch occupancy, not per-caller batch assembly,
-//! becomes the serving-efficiency headline ([`BatcherStats`] feeds the
-//! `/metrics` endpoint and `RuntimeStats`).
+//! [`ScoreRow`]s here. Internally the batcher is a fair multi-queue
+//! scheduler:
+//!
+//! - **Per-capacity queues.** Rows accumulate per capacity `d` and flush
+//!   as one fixed-shape `B = BATCH` dispatch (the vLLM-style
+//!   continuous-batching idea, adapted to fixed-shape PJRT artifacts).
+//! - **Deadline-ordered flushing.** Among dispatchable slots the one with
+//!   the *oldest* pending row goes first, and a starving partial slot —
+//!   one whose oldest row has waited past `max_wait` — preempts a younger
+//!   full one, so no capacity's partial batch can be starved by a busy
+//!   neighbour.
+//! - **Lanes.** Every row is tagged at admission with an origin lane
+//!   ([`Lane::Interactive`] for server sessions, [`Lane::Batch`] for
+//!   eval/bench sweeps — the ambient [`lane_scope`] context) plus an
+//!   origin session id. Batch assembly is weighted-fair across lanes
+//!   (deficit-credit WFQ, `set_lane_weights`) and round-robin across
+//!   sessions within a lane, so one saturating sweep cannot monopolize
+//!   the dispatch slots interactive sessions need.
+//! - **Bounded admission.** The queue holds at most `queue_depth` rows;
+//!   past that, [`DynamicBatcher::submit`] fails fast with the typed
+//!   [`SchedError::Saturated`] instead of blocking forever. Admission is
+//!   lane-aware: the batch lane may fill only 7/8 of the bound, so a
+//!   saturating sweep cannot deny interactive rows *admission* (WFQ only
+//!   arbitrates rows already in the queue). A `score_rows` group that
+//!   saturates mid-way retracts its already-queued rows, so its
+//!   backed-off retry never competes with its own orphans. The error
+//!   propagates through `model::{local,remote}` to
+//!   `protocol::ProtocolSession::step`, which surfaces it as the
+//!   retryable `SessionEvent::Backoff` (see DESIGN.md §7).
 //!
 //! Determinism: the backend math is row-independent, so a row's result
-//! does not depend on which other rows shared its dispatch. Parallel
-//! evaluation over the shared batcher is therefore bit-identical to the
-//! serial path (asserted by `tests/parallel_eval.rs`).
+//! does not depend on which other rows shared its dispatch — the
+//! scheduler reorders *dispatch*, never *results*. Parallel evaluation
+//! over the shared batcher is therefore bit-identical to the serial path
+//! (asserted by `tests/parallel_eval.rs` and `tests/sched_fairness.rs`).
 //!
 //! Shutdown: [`DynamicBatcher::stop`] is idempotent; it drains everything
-//! queued and then *rejects* later submissions with an error instead of
-//! letting them block on a queue no flush thread will ever drain.
+//! queued and then *rejects* later submissions with
+//! [`SchedError::Stopped`] instead of letting them block on a queue no
+//! flush thread will ever drain.
 
 use crate::runtime::{Backend, ScoreRequest, ScoreResponse};
 use crate::vocab::{BATCH, CHUNK, QLEN};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Default flush window: long enough for concurrent callers to coalesce,
 /// short enough that a lone partial row costs ~2ms of latency.
 pub const DEFAULT_MAX_WAIT: Duration = Duration::from_millis(2);
+
+/// Default admission bound (rows queued across all capacities and lanes).
+/// Beyond it, `submit` fails fast with [`SchedError::Saturated`].
+pub const DEFAULT_QUEUE_DEPTH: usize = 4096;
+
+/// Default weighted-fair-queuing ratio, interactive : batch. Interactive
+/// rows get 4 dispatch-slot credits for every batch-lane credit when both
+/// lanes are contending for the same capacity slot.
+pub const DEFAULT_LANE_WEIGHTS: (u64, u64) = (4, 1);
+
+// ---------------------------------------------------------------------
+// Lanes: the QoS class a row belongs to, tagged at admission.
+// ---------------------------------------------------------------------
+
+/// Origin lane of a scoring row. Serving traffic (`/v1/sessions`,
+/// `/v1/query`) runs interactive; eval and bench sweeps run batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Lane {
+    Interactive = 0,
+    Batch = 1,
+}
+
+impl Lane {
+    pub const COUNT: usize = 2;
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Interactive => "interactive",
+            Lane::Batch => "batch",
+        }
+    }
+}
+
+thread_local! {
+    /// Ambient (lane, session) tag applied to rows submitted from this
+    /// thread. Defaults to the batch lane: eval/bench paths need no
+    /// opt-in, and only the serving layer promotes itself.
+    static LANE_CTX: Cell<(Lane, u64)> = Cell::new((Lane::Batch, 0));
+}
+
+/// RAII guard restoring the previous ambient lane tag on drop.
+pub struct LaneScope {
+    prev: (Lane, u64),
+}
+
+/// Tag every row submitted from this thread (until the guard drops) with
+/// `(lane, session)`. Sessions within a lane are scheduled round-robin,
+/// so distinct server sessions should pass distinct ids.
+pub fn lane_scope(lane: Lane, session: u64) -> LaneScope {
+    let prev = LANE_CTX.with(|c| c.replace((lane, session)));
+    LaneScope { prev }
+}
+
+impl Drop for LaneScope {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        LANE_CTX.with(|c| c.set(prev));
+    }
+}
+
+/// The ambient (lane, session) tag for the current thread.
+pub fn current_lane() -> (Lane, u64) {
+    LANE_CTX.with(|c| c.get())
+}
+
+/// Parse a `--lane-weights` CLI value like `"4:1"` (interactive:batch).
+pub fn parse_lane_weights(s: &str) -> Option<(u64, u64)> {
+    let (i, b) = s.split_once(':')?;
+    let i: u64 = i.trim().parse().ok()?;
+    let b: u64 = b.trim().parse().ok()?;
+    Some((i.max(1), b.max(1)))
+}
+
+// ---------------------------------------------------------------------
+// Typed scheduler errors: the backpressure signal the upper layers key on.
+// ---------------------------------------------------------------------
+
+/// Why the scheduler refused a row. Rendered through `anyhow`'s flattened
+/// error chain, so upper layers detect the variant via [`is_saturated`]
+/// rather than downcasting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedError {
+    /// The bounded admission queue is full. Retryable: back off and
+    /// resubmit once the queue drains.
+    Saturated { depth: usize, bound: usize },
+    /// The batcher has been stopped; nothing will ever drain the queue.
+    Stopped,
+}
+
+impl std::fmt::Display for SchedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedError::Saturated { depth, bound } => write!(
+                f,
+                "scheduler saturated: admission queue full ({depth}/{bound} rows); retry later"
+            ),
+            SchedError::Stopped => write!(f, "batcher is stopped; row rejected"),
+        }
+    }
+}
+
+impl std::error::Error for SchedError {}
+
+/// Whether `err` is (or wraps) [`SchedError::Saturated`]. The vendored
+/// `anyhow` shim flattens chains into the rendered message, so this is a
+/// marker-substring test — every layer that re-wraps scheduler errors
+/// uses `context`-style prefixing, which preserves the marker.
+pub fn is_saturated(err: &anyhow::Error) -> bool {
+    err.to_string().contains("scheduler saturated")
+}
+
+// ---------------------------------------------------------------------
+// Rows, tickets, pending state.
+// ---------------------------------------------------------------------
 
 /// One row of scoring work (a single job's tensors).
 pub struct ScoreRow {
@@ -63,7 +204,143 @@ impl Ticket {
 struct Pending {
     row: ScoreRow,
     reply: mpsc::Sender<Result<RowResult>>,
+    lane: Lane,
+    /// nonzero for rows submitted by a `score_rows` group caller — lets a
+    /// group whose admission fails mid-way retract its own queued rows
+    /// instead of leaving orphans to be scored and discarded
+    group: u64,
+    enqueued: Instant,
 }
+
+// ---------------------------------------------------------------------
+// Scheduler state: per-capacity slots of per-lane, per-session queues.
+// ---------------------------------------------------------------------
+
+/// FIFO of one session's pending rows within a lane.
+struct SessionQueue {
+    session: u64,
+    rows: VecDeque<Pending>,
+}
+
+/// One lane's admitted rows for a capacity, organized per session for
+/// round-robin service, with a deficit credit for the cross-lane WFQ.
+#[derive(Default)]
+struct LaneState {
+    /// non-empty session queues in round-robin order
+    sessions: VecDeque<SessionQueue>,
+    /// WFQ deficit credit; only meaningful while both lanes contend
+    credit: i64,
+    len: usize,
+}
+
+/// All pending rows for one capacity `d`.
+struct CapacitySlot {
+    d: usize,
+    lanes: [LaneState; Lane::COUNT],
+}
+
+impl CapacitySlot {
+    fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.len).sum()
+    }
+
+    /// Enqueue time of the oldest pending row (the slot's deadline).
+    fn oldest(&self) -> Option<Instant> {
+        let mut best: Option<Instant> = None;
+        for lane in &self.lanes {
+            for sq in &lane.sessions {
+                if let Some(p) = sq.rows.front() {
+                    if best.map_or(true, |b| p.enqueued < b) {
+                        best = Some(p.enqueued);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Pop up to `n` rows: weighted-fair across lanes (deficit credits
+    /// replenished from `weights` only while both lanes contend),
+    /// round-robin across sessions within a lane.
+    fn assemble(&mut self, n: usize, weights: (u64, u64)) -> Vec<Pending> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let contended = self.lanes[0].len > 0 && self.lanes[1].len > 0;
+            let lane_idx = if contended {
+                if self.lanes[0].credit <= 0 && self.lanes[1].credit <= 0 {
+                    self.lanes[0].credit += weights.0 as i64;
+                    self.lanes[1].credit += weights.1 as i64;
+                }
+                // serve the lane holding more credit; interactive wins ties
+                if self.lanes[0].credit >= self.lanes[1].credit {
+                    0
+                } else {
+                    1
+                }
+            } else if self.lanes[0].len > 0 {
+                0
+            } else if self.lanes[1].len > 0 {
+                1
+            } else {
+                break;
+            };
+            let lane = &mut self.lanes[lane_idx];
+            let Some(mut sq) = lane.sessions.pop_front() else {
+                break;
+            };
+            let row = sq.rows.pop_front().expect("session queues are never empty");
+            lane.len -= 1;
+            if contended {
+                lane.credit -= 1;
+            }
+            if !sq.rows.is_empty() {
+                lane.sessions.push_back(sq); // round-robin rotation
+            }
+            out.push(row);
+        }
+        out
+    }
+}
+
+struct SchedState {
+    slots: Vec<CapacitySlot>,
+    /// total rows queued (the admission-bound gauge)
+    depth: usize,
+}
+
+impl SchedState {
+    /// Enqueue a row; returns the row's slot size afterwards (so the
+    /// submitter knows whether *its own* slot just filled).
+    fn enqueue(&mut self, p: Pending, session: u64) -> usize {
+        let d = p.row.d;
+        let idx = match self.slots.iter().position(|s| s.d == d) {
+            Some(i) => i,
+            None => {
+                self.slots.push(CapacitySlot {
+                    d,
+                    lanes: [LaneState::default(), LaneState::default()],
+                });
+                self.slots.len() - 1
+            }
+        };
+        let lane = &mut self.slots[idx].lanes[p.lane.index()];
+        match lane.sessions.iter().position(|sq| sq.session == session) {
+            Some(i) => lane.sessions[i].rows.push_back(p),
+            None => {
+                let mut rows = VecDeque::new();
+                rows.push_back(p);
+                lane.sessions.push_back(SessionQueue { session, rows });
+            }
+        }
+        lane.len += 1;
+        self.depth += 1;
+        self.slots[idx].len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Stats.
+// ---------------------------------------------------------------------
 
 #[derive(Debug, Default)]
 pub struct BatcherStats {
@@ -75,6 +352,14 @@ pub struct BatcherStats {
     /// them — kept here so the scheduler's stats stay an honest account of
     /// scoring *demand*, not just of dispatched work
     pub cached_rows: AtomicU64,
+    /// admission rejections ([`SchedError::Saturated`]) — the shed gauge
+    pub saturated: AtomicU64,
+    /// picks where a starving partial slot preempted a younger full one
+    pub preemptions: AtomicU64,
+    /// dispatched rows per lane ([interactive, batch])
+    pub lane_rows: [AtomicU64; Lane::COUNT],
+    /// cumulative queue wait per lane, microseconds
+    pub lane_wait_us: [AtomicU64; Lane::COUNT],
 }
 
 impl BatcherStats {
@@ -95,7 +380,8 @@ impl BatcherStats {
     }
 }
 
-/// Point-in-time copy of [`BatcherStats`] for metrics endpoints.
+/// Point-in-time copy of [`BatcherStats`] (plus queue gauges) for metrics
+/// endpoints.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct BatcherSnapshot {
     pub dispatches: u64,
@@ -104,6 +390,15 @@ pub struct BatcherSnapshot {
     pub flush_timeouts: u64,
     pub cached_rows: u64,
     pub occupancy: f64,
+    pub saturated: u64,
+    pub preemptions: u64,
+    /// dispatched rows per lane ([interactive, batch])
+    pub lane_rows: [u64; Lane::COUNT],
+    /// cumulative queue wait per lane, microseconds
+    pub lane_wait_us: [u64; Lane::COUNT],
+    /// rows currently queued (total and per lane)
+    pub queue_depth: usize,
+    pub lane_depth: [usize; Lane::COUNT],
 }
 
 impl BatcherSnapshot {
@@ -117,29 +412,62 @@ impl BatcherSnapshot {
             r as f64 / (d * BATCH as u64) as f64
         }
     }
+
+    /// Mean queue wait for `lane`, in microseconds, over all dispatched
+    /// rows so far.
+    pub fn lane_mean_wait_us(&self, lane: Lane) -> f64 {
+        let i = lane.index();
+        if self.lane_rows[i] == 0 {
+            0.0
+        } else {
+            self.lane_wait_us[i] as f64 / self.lane_rows[i] as f64
+        }
+    }
 }
 
 impl std::fmt::Display for BatcherSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} dispatches, {} rows ({} cache-skipped), occupancy={:.2}",
-            self.dispatches, self.rows, self.cached_rows, self.occupancy
+            "{} dispatches, {} rows ({} cache-skipped), occupancy={:.2}, \
+             {} queued, {} shed",
+            self.dispatches,
+            self.rows,
+            self.cached_rows,
+            self.occupancy,
+            self.queue_depth,
+            self.saturated
         )
     }
 }
 
-/// Dynamic batcher: rows accumulate per capacity `d`; a batch flushes
-/// when full, when the oldest row exceeds `max_wait`, or — for a group
-/// caller that is momentarily alone — immediately (see [`Self::score_rows`]).
+// ---------------------------------------------------------------------
+// The batcher.
+// ---------------------------------------------------------------------
+
+/// Dynamic batcher over the fair multi-queue scheduler core (see module
+/// docs): rows accumulate per capacity `d`, flush when a slot fills, when
+/// the oldest row exceeds `max_wait` (deadline order, starving partials
+/// preempt younger full slots), or — for a group caller that is
+/// momentarily alone — immediately (see [`Self::score_rows`]).
 pub struct DynamicBatcher {
     backend: Arc<dyn Backend>,
-    queue: Mutex<Vec<(usize, Vec<Pending>, Instant)>>, // (d, rows, oldest)
+    state: Mutex<SchedState>,
     pub stats: BatcherStats,
     max_wait: Duration,
-    /// written under the queue lock (so submit/stop order is well defined),
-    /// read lock-free by the flush thread
+    /// admission bound; adjustable at runtime (`--sched-queue-depth`)
+    queue_depth: AtomicUsize,
+    /// mirror of `SchedState::depth`, stored under the state lock, read
+    /// lock-free by the server's high-water shed check so request
+    /// handlers never contend on the scoring hot path's mutex
+    depth_gauge: AtomicUsize,
+    /// WFQ weights, interactive then batch (`--lane-weights`)
+    lane_weights: [AtomicU64; Lane::COUNT],
+    /// written under the state lock (so submit/stop order is well
+    /// defined), read lock-free by the flush thread
     shutdown: AtomicBool,
+    /// group-id source for `score_rows` (0 = ungrouped single submit)
+    next_group: AtomicU64,
     /// number of `score_rows` group callers currently in flight; a lone
     /// group caller flushes its trailing partial immediately instead of
     /// paying the `max_wait` stall for coalescing partners that cannot
@@ -152,13 +480,23 @@ impl DynamicBatcher {
         let max_wait = max_wait.max(Duration::from_micros(200));
         let b = Arc::new(DynamicBatcher {
             backend,
-            queue: Mutex::new(Vec::new()),
+            state: Mutex::new(SchedState {
+                slots: Vec::new(),
+                depth: 0,
+            }),
             stats: BatcherStats::default(),
             max_wait,
+            queue_depth: AtomicUsize::new(DEFAULT_QUEUE_DEPTH),
+            depth_gauge: AtomicUsize::new(0),
+            lane_weights: [
+                AtomicU64::new(DEFAULT_LANE_WEIGHTS.0),
+                AtomicU64::new(DEFAULT_LANE_WEIGHTS.1),
+            ],
             shutdown: AtomicBool::new(false),
+            next_group: AtomicU64::new(0),
             group_callers: AtomicU64::new(0),
         });
-        // flush thread handles the timeout path; it exits within
+        // flush thread handles the deadline path; it exits within
         // max_wait/2 of stop() and holds the only long-lived Arc clone
         let bt = Arc::clone(&b);
         std::thread::Builder::new()
@@ -168,23 +506,61 @@ impl DynamicBatcher {
                     return;
                 }
                 std::thread::sleep(bt.max_wait / 2);
-                bt.flush_expired();
+                bt.drain_ready(usize::MAX);
             })
             .expect("spawn flush thread");
         b
     }
 
+    /// Bound the admission queue (clamped to at least one full batch).
+    pub fn set_queue_depth(&self, depth: usize) {
+        self.queue_depth.store(depth.max(BATCH), Ordering::Relaxed);
+    }
+
+    /// Set the WFQ ratio (interactive : batch); zeros are clamped to 1.
+    pub fn set_lane_weights(&self, interactive: u64, batch: u64) {
+        self.lane_weights[0].store(interactive.max(1), Ordering::Relaxed);
+        self.lane_weights[1].store(batch.max(1), Ordering::Relaxed);
+    }
+
+    fn weights(&self) -> (u64, u64) {
+        (
+            self.lane_weights[0].load(Ordering::Relaxed).max(1),
+            self.lane_weights[1].load(Ordering::Relaxed).max(1),
+        )
+    }
+
+    /// Whether the admission queue is past its high-water mark (7/8 of
+    /// the bound) — the server's load-shedding trigger for new sessions.
+    /// Lock-free: reads the mirrored depth gauge, so a burst of session
+    /// POSTs never serializes behind the scoring path's state mutex.
+    pub fn admission_high_water(&self) -> bool {
+        let bound = self.queue_depth.load(Ordering::Relaxed).max(BATCH);
+        let depth = self.depth_gauge.load(Ordering::Relaxed);
+        depth * 8 >= bound * 7
+    }
+
     /// Drain everything queued and reject all later submissions.
     /// Idempotent: repeated calls are no-ops.
     pub fn stop(&self) {
-        let drained: Vec<(usize, Vec<Pending>, Instant)> = {
-            let mut q = self.queue.lock().unwrap();
+        let drained: Vec<(usize, Vec<Pending>)> = {
+            let mut st = self.state.lock().unwrap();
             if self.shutdown.swap(true, Ordering::AcqRel) {
                 return; // already stopped and drained
             }
-            std::mem::take(&mut *q)
+            let weights = self.weights();
+            let mut out = Vec::new();
+            while let Some(mut slot) = st.slots.pop() {
+                while slot.len() > 0 {
+                    let batch = slot.assemble(BATCH, weights);
+                    st.depth -= batch.len();
+                    out.push((slot.d, batch));
+                }
+            }
+            self.depth_gauge.store(st.depth, Ordering::Relaxed);
+            out
         };
-        for (d, rows, _) in drained {
+        for (d, rows) in drained {
             self.execute(d, rows);
         }
     }
@@ -193,32 +569,111 @@ impl DynamicBatcher {
         self.shutdown.load(Ordering::Acquire)
     }
 
-    /// Enqueue one row without waiting. Returns the [`Ticket`] to wait on,
-    /// or an error if the batcher has been stopped.
+    /// Enqueue one row without waiting, tagged with the thread's ambient
+    /// [`lane_scope`]. Returns the [`Ticket`] to wait on, or a typed
+    /// [`SchedError`] if the batcher is stopped or the admission queue is
+    /// full.
     pub fn submit(&self, row: ScoreRow) -> Result<Ticket> {
+        let (lane, session) = current_lane();
+        self.submit_tagged(row, lane, session)
+    }
+
+    /// [`Self::submit`] with an explicit (lane, session) tag.
+    pub fn submit_tagged(&self, row: ScoreRow, lane: Lane, session: u64) -> Result<Ticket> {
+        self.submit_inner(row, lane, session, 0)
+    }
+
+    fn submit_inner(&self, row: ScoreRow, lane: Lane, session: u64, group: u64) -> Result<Ticket> {
         let (tx, rx) = mpsc::channel();
-        let to_run = {
-            let mut q = self.queue.lock().unwrap();
+        let slot_full = {
+            let mut st = self.state.lock().unwrap();
             if self.shutdown.load(Ordering::Acquire) {
-                return Err(anyhow!("batcher is stopped; row rejected"));
+                return Err(SchedError::Stopped.into());
             }
-            let d = row.d;
-            let slot = q.iter_mut().find(|(qd, _, _)| *qd == d);
-            match slot {
-                Some((_, rows, _)) => rows.push(Pending { row, reply: tx }),
-                None => q.push((d, vec![Pending { row, reply: tx }], Instant::now())),
+            let bound = self.queue_depth.load(Ordering::Relaxed).max(BATCH);
+            // lane-aware admission: the batch lane may only fill 7/8 of
+            // the queue — the last eighth is reserved so interactive rows
+            // can still be *admitted* under a saturating sweep (WFQ alone
+            // only arbitrates rows that made it into the queue)
+            let lane_bound = match lane {
+                Lane::Interactive => bound,
+                Lane::Batch => bound - bound / 8,
+            };
+            if st.depth >= lane_bound {
+                self.stats.saturated.fetch_add(1, Ordering::Relaxed);
+                return Err(SchedError::Saturated {
+                    depth: st.depth,
+                    bound: lane_bound,
+                }
+                .into());
             }
-            // flush-on-full, inline on the submitting thread
-            let mut to_run = None;
-            if let Some(pos) = q.iter().position(|(_, rows, _)| rows.len() >= BATCH) {
-                to_run = Some(q.swap_remove(pos));
-            }
-            to_run
+            let slot_len = st.enqueue(
+                Pending {
+                    row,
+                    reply: tx,
+                    lane,
+                    group,
+                    enqueued: Instant::now(),
+                },
+                session,
+            );
+            self.depth_gauge.store(st.depth, Ordering::Relaxed);
+            slot_len >= BATCH
         };
-        if let Some((d, rows, _)) = to_run {
-            self.execute(d, rows);
+        // flush-on-full, inline on this thread — but only when *this*
+        // submit filled its own slot (the caller was going to pay for a
+        // dispatch anyway; the scheduler may still hand it an older
+        // starving slot first — the documented preemption). Deadline
+        // flushes are otherwise the flush thread's job: conscripting
+        // every submitter into draining other lanes' expired backlogs
+        // would invert the QoS priority on the interactive path. At most
+        // one batch, so submitters never get stuck draining a backlog
+        // other callers keep replenishing.
+        if slot_full {
+            self.drain_ready(1);
         }
         Ok(Ticket { rx })
+    }
+
+    /// Remove a group's not-yet-dispatched rows from capacity `d` (used
+    /// when a `score_rows` group hits `Saturated` mid-way: without this,
+    /// the already-queued rows would be scored with nobody waiting,
+    /// wasting backend work and queue depth exactly when both are
+    /// scarce — and the group's backed-off retry would amplify the
+    /// overload it is retrying against). Full batches the group already
+    /// dispatched inline before saturating are sunk cost: they executed,
+    /// their results are discarded with the tickets, and the retry
+    /// re-scores them — bounded by the group's own size and only
+    /// reachable when the sweep refills the slots a dispatch just freed
+    /// within the same submit loop.
+    fn retract_group(&self, d: usize, group: u64) {
+        let mut st = self.state.lock().unwrap();
+        let Some(i) = st.slots.iter().position(|s| s.d == d) else {
+            return;
+        };
+        let mut removed_total = 0usize;
+        {
+            let slot = &mut st.slots[i];
+            for lane in slot.lanes.iter_mut() {
+                let mut kept: VecDeque<SessionQueue> = VecDeque::new();
+                while let Some(mut sq) = lane.sessions.pop_front() {
+                    let before = sq.rows.len();
+                    sq.rows.retain(|p| p.group != group);
+                    let removed = before - sq.rows.len();
+                    lane.len -= removed;
+                    removed_total += removed;
+                    if !sq.rows.is_empty() {
+                        kept.push_back(sq);
+                    }
+                }
+                lane.sessions = kept;
+            }
+        }
+        st.depth -= removed_total;
+        self.depth_gauge.store(st.depth, Ordering::Relaxed);
+        if st.slots[i].len() == 0 {
+            st.slots.swap_remove(i);
+        }
     }
 
     /// Submit one row; blocks until its batch executes.
@@ -230,7 +685,7 @@ impl DynamicBatcher {
     /// Full batches dispatch inline as the rows are enqueued. The trailing
     /// partial batch coalesces with other in-flight group callers' rows
     /// (or raw `submit` traffic) and otherwise flushes on the `max_wait`
-    /// timeout — except when this is the *only* group caller, in which
+    /// deadline — except when this is the *only* group caller, in which
     /// case no coalescing partner can arrive and the partial dispatches
     /// immediately, so serial evaluation pays no timeout stall.
     pub fn score_rows(&self, rows: Vec<ScoreRow>) -> Result<Vec<RowResult>> {
@@ -238,41 +693,82 @@ impl DynamicBatcher {
             return Ok(Vec::new());
         }
         let d = rows[0].d;
+        // the group invariant retract_group and flush_capacity rely on:
+        // one score_rows call covers exactly one capacity
+        debug_assert!(
+            rows.iter().all(|r| r.d == d),
+            "score_rows groups must share one capacity d"
+        );
+        let (lane, session) = current_lane();
+        let group = self.next_group.fetch_add(1, Ordering::Relaxed) + 1;
         self.group_callers.fetch_add(1, Ordering::AcqRel);
-        let submitted: Result<Vec<Ticket>> =
-            rows.into_iter().map(|r| self.submit(r)).collect();
+        let submitted: Result<Vec<Ticket>> = rows
+            .into_iter()
+            .map(|r| self.submit_inner(r, lane, session, group))
+            .collect();
         let tickets = match submitted {
             Ok(t) => t,
             Err(e) => {
                 self.group_callers.fetch_sub(1, Ordering::AcqRel);
+                // saturation mid-group: retract our already-queued rows
+                // so the retry doesn't compete with its own orphans
+                self.retract_group(d, group);
                 return Err(e);
             }
         };
         if self.group_callers.load(Ordering::Acquire) == 1 {
-            // alone: dispatch whatever partial is pending for our capacity
-            self.flush_capacity(d);
+            // alone: dispatch whatever partial is pending for our capacity.
+            // BATCH batches is enough to cover this caller's own trailing
+            // rows even under worst-case round-robin dilution (≤ BATCH-1
+            // own rows, ≥ 1 per assembled batch); the bound keeps a lone
+            // caller from being captured draining a backlog that raw
+            // submit() producers keep refilling — any leftover rides the
+            // deadline flush.
+            self.flush_capacity(d, BATCH);
         }
         let out = tickets.into_iter().map(Ticket::wait).collect();
         self.group_callers.fetch_sub(1, Ordering::AcqRel);
         out
     }
 
-    /// Flush the pending slot for capacity `d`, if any (it may contain
-    /// other callers' rows — they simply get their results early).
-    fn flush_capacity(&self, d: usize) {
-        let slot = {
-            let mut q = self.queue.lock().unwrap();
-            q.iter()
-                .position(|(qd, _, _)| *qd == d)
-                .map(|pos| q.swap_remove(pos))
-        };
-        if let Some((d, rows, _)) = slot {
-            self.execute(d, rows);
+    /// Flush up to `max_batches` batches pending for capacity `d` (they
+    /// may contain other callers' rows — those simply get their results
+    /// early).
+    fn flush_capacity(&self, d: usize, max_batches: usize) {
+        for _ in 0..max_batches {
+            let batch = {
+                let mut st = self.state.lock().unwrap();
+                let Some(i) = st.slots.iter().position(|s| s.d == d) else {
+                    return;
+                };
+                let weights = self.weights();
+                let b = st.slots[i].assemble(BATCH, weights);
+                st.depth -= b.len();
+                self.depth_gauge.store(st.depth, Ordering::Relaxed);
+                if st.slots[i].len() == 0 {
+                    st.slots.swap_remove(i);
+                }
+                b
+            };
+            if batch.is_empty() {
+                return;
+            }
+            self.execute(d, batch);
         }
     }
 
     /// Read the counters as one consistent-enough snapshot.
     pub fn snapshot(&self) -> BatcherSnapshot {
+        let (queue_depth, lane_depth) = {
+            let st = self.state.lock().unwrap();
+            let mut lanes = [0usize; Lane::COUNT];
+            for slot in &st.slots {
+                for (i, l) in slot.lanes.iter().enumerate() {
+                    lanes[i] += l.len;
+                }
+            }
+            (st.depth, lanes)
+        };
         BatcherSnapshot {
             dispatches: self.stats.dispatches.load(Ordering::Relaxed),
             rows: self.stats.rows.load(Ordering::Relaxed),
@@ -280,33 +776,98 @@ impl DynamicBatcher {
             flush_timeouts: self.stats.flush_timeouts.load(Ordering::Relaxed),
             cached_rows: self.stats.cached_rows.load(Ordering::Relaxed),
             occupancy: self.stats.occupancy(),
+            saturated: self.stats.saturated.load(Ordering::Relaxed),
+            preemptions: self.stats.preemptions.load(Ordering::Relaxed),
+            lane_rows: [
+                self.stats.lane_rows[0].load(Ordering::Relaxed),
+                self.stats.lane_rows[1].load(Ordering::Relaxed),
+            ],
+            lane_wait_us: [
+                self.stats.lane_wait_us[0].load(Ordering::Relaxed),
+                self.stats.lane_wait_us[1].load(Ordering::Relaxed),
+            ],
+            queue_depth,
+            lane_depth,
         }
     }
 
-    fn flush_expired(&self) {
-        let expired: Vec<(usize, Vec<Pending>, Instant)> = {
-            let mut q = self.queue.lock().unwrap();
-            let now = Instant::now();
-            let mut out = Vec::new();
-            let mut i = 0;
-            while i < q.len() {
-                if now.duration_since(q[i].2) >= self.max_wait {
-                    out.push(q.swap_remove(i));
-                } else {
-                    i += 1;
-                }
+    /// Pick the next dispatchable batch under the state lock: starving
+    /// slots (oldest row past `max_wait`) first in deadline order —
+    /// preempting younger full slots — then full slots in deadline order.
+    /// Returns `(d, rows, deadline_triggered)`.
+    fn pick_locked(&self, st: &mut SchedState) -> Option<(usize, Vec<Pending>, bool)> {
+        let now = Instant::now();
+        let mut starving: Option<(usize, Instant, usize)> = None; // (idx, oldest, len)
+        let mut full: Option<(usize, Instant)> = None;
+        for (i, slot) in st.slots.iter().enumerate() {
+            let Some(oldest) = slot.oldest() else { continue };
+            if now.duration_since(oldest) >= self.max_wait
+                && starving.map_or(true, |(_, o, _)| oldest < o)
+            {
+                starving = Some((i, oldest, slot.len()));
             }
-            out
+            if slot.len() >= BATCH && full.map_or(true, |(_, o)| oldest < o) {
+                full = Some((i, oldest));
+            }
+        }
+        let (idx, expired) = match (starving, full) {
+            (Some((si, _, slen)), Some((fi, _))) => {
+                if si != fi && slen < BATCH {
+                    // a starving partial outranks a younger full slot
+                    self.stats.preemptions.fetch_add(1, Ordering::Relaxed);
+                }
+                (si, true)
+            }
+            (Some((si, _, _)), None) => (si, true),
+            (None, Some((fi, _))) => (fi, false),
+            (None, None) => return None,
         };
-        for (d, rows, _) in expired {
-            self.stats.flush_timeouts.fetch_add(1, Ordering::Relaxed);
-            self.execute(d, rows);
+        let weights = self.weights();
+        let batch = st.slots[idx].assemble(BATCH, weights);
+        st.depth -= batch.len();
+        self.depth_gauge.store(st.depth, Ordering::Relaxed);
+        let d = st.slots[idx].d;
+        if st.slots[idx].len() == 0 {
+            st.slots.swap_remove(idx);
+        }
+        Some((d, batch, expired))
+    }
+
+    /// Dispatch up to `limit` ready batches (full slots and deadline
+    /// expirations), in scheduler priority order.
+    fn drain_ready(&self, limit: usize) {
+        for _ in 0..limit {
+            let picked = {
+                let mut st = self.state.lock().unwrap();
+                self.pick_locked(&mut st)
+            };
+            match picked {
+                Some((d, rows, expired)) => {
+                    if expired {
+                        self.stats.flush_timeouts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    self.execute(d, rows);
+                }
+                None => return,
+            }
         }
     }
 
     fn execute(&self, d: usize, rows: Vec<Pending>) {
         debug_assert!(rows.len() <= BATCH);
+        if rows.is_empty() {
+            return;
+        }
         let n = rows.len();
+        let now = Instant::now();
+        for p in &rows {
+            let li = p.lane.index();
+            self.stats.lane_rows[li].fetch_add(1, Ordering::Relaxed);
+            self.stats.lane_wait_us[li].fetch_add(
+                now.duration_since(p.enqueued).as_micros() as u64,
+                Ordering::Relaxed,
+            );
+        }
         let mut req = ScoreRequest {
             d,
             q_tokens: vec![0i32; BATCH * QLEN],
@@ -522,5 +1083,141 @@ mod tests {
         assert_eq!(after.dispatches, 2);
         assert!((after.occupancy_since(&mid) - 1.0 / BATCH as f64).abs() < 1e-9);
         b.stop();
+    }
+
+    #[test]
+    fn saturated_admission_rejects_with_typed_error() {
+        // Bound = one batch, so the batch lane's share is BATCH - 1 = 7.
+        // Park rows split across TWO capacities so neither slot fills (no
+        // inline dispatch) and the queue stays full until the far-away
+        // deadline.
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_secs(30));
+        b.set_queue_depth(BATCH);
+        let batch_share = BATCH - BATCH / 8;
+        let mut parked = Vec::new();
+        for i in 0..batch_share as i32 {
+            let mut r = row(i);
+            r.d = if i % 2 == 0 { 128 } else { 64 };
+            parked.push(b.submit(r).unwrap());
+        }
+        let err = b.submit(row(99)).unwrap_err();
+        assert!(is_saturated(&err), "expected saturation, got: {err}");
+        assert_eq!(b.stats.saturated.load(Ordering::Relaxed), 1);
+        assert_eq!(b.snapshot().queue_depth, batch_share);
+        // the reserved eighth still admits interactive rows: the batch
+        // sweep cannot deny serving traffic admission
+        let interactive = b
+            .submit_tagged(row(100), Lane::Interactive, 5)
+            .expect("interactive admission must survive batch saturation");
+        // draining the queue re-opens admission
+        b.stop();
+        for t in parked {
+            t.wait().unwrap();
+        }
+        interactive.wait().unwrap();
+        // post-stop submits fail as Stopped, not Saturated
+        let err = b.submit(row(1)).unwrap_err();
+        assert!(!is_saturated(&err));
+    }
+
+    #[test]
+    fn saturated_group_retracts_its_queued_rows() {
+        // Park 4 batch rows on another capacity, then a 4-row group on
+        // d=128 against a bound of BATCH (batch share 7): the group's 4th
+        // submit saturates, and the 3 rows it already queued must be
+        // retracted — queue depth returns to the pre-group level instead
+        // of leaving orphans to be scored and discarded.
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_secs(30));
+        b.set_queue_depth(BATCH);
+        let parked: Vec<Ticket> = (0..4)
+            .map(|i| {
+                let mut r = row(i);
+                r.d = 64;
+                b.submit(r).unwrap()
+            })
+            .collect();
+        assert_eq!(b.snapshot().queue_depth, 4);
+        let err = b.score_rows((10..14).map(row).collect()).unwrap_err();
+        assert!(is_saturated(&err), "expected saturation, got: {err}");
+        assert_eq!(
+            b.snapshot().queue_depth,
+            4,
+            "the saturated group must retract its own queued rows"
+        );
+        b.stop();
+        for t in parked {
+            t.wait().unwrap();
+        }
+        // nothing from the retracted group was dispatched
+        assert_eq!(b.stats.rows.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn wfq_prefers_interactive_rows_under_contention() {
+        // Park 7 batch-lane rows and 1 interactive row (far deadline, no
+        // inline flush until the batch fills); the assembled dispatch
+        // serves the interactive row first thanks to its 4:1 credit.
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_secs(30));
+        let mut tickets = Vec::new();
+        for i in 0..(BATCH as i32 - 1) {
+            tickets.push(b.submit_tagged(row(i), Lane::Batch, 0).unwrap());
+        }
+        tickets.push(b.submit_tagged(row(100), Lane::Interactive, 7).unwrap());
+        // the queue filled a batch => it dispatched inline
+        assert_eq!(b.stats.dispatches.load(Ordering::Relaxed), 1);
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        let snap = b.snapshot();
+        assert_eq!(snap.lane_rows[Lane::Interactive.index()], 1);
+        assert_eq!(snap.lane_rows[Lane::Batch.index()], (BATCH - 1) as u64);
+        b.stop();
+    }
+
+    #[test]
+    fn lane_scope_tags_and_restores() {
+        assert_eq!(current_lane(), (Lane::Batch, 0));
+        {
+            let _outer = lane_scope(Lane::Interactive, 42);
+            assert_eq!(current_lane(), (Lane::Interactive, 42));
+            {
+                let _inner = lane_scope(Lane::Batch, 7);
+                assert_eq!(current_lane(), (Lane::Batch, 7));
+            }
+            assert_eq!(current_lane(), (Lane::Interactive, 42));
+        }
+        assert_eq!(current_lane(), (Lane::Batch, 0));
+    }
+
+    #[test]
+    fn round_robin_across_sessions_within_a_lane() {
+        // Two sessions park 4 rows each (one capacity, far deadline);
+        // the full-batch dispatch must alternate between them.
+        let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_secs(30));
+        let mut tickets = Vec::new();
+        for i in 0..(BATCH as i32 / 2) {
+            tickets.push(b.submit_tagged(row(i), Lane::Batch, 1).unwrap());
+        }
+        for i in 0..(BATCH as i32 / 2) {
+            tickets.push(b.submit_tagged(row(100 + i), Lane::Batch, 2).unwrap());
+        }
+        assert_eq!(b.stats.dispatches.load(Ordering::Relaxed), 1);
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        // both sessions' rows dispatched in the single fair batch
+        let snap = b.snapshot();
+        assert_eq!(snap.lane_rows[Lane::Batch.index()], BATCH as u64);
+        assert_eq!(snap.queue_depth, 0);
+        b.stop();
+    }
+
+    #[test]
+    fn parse_lane_weights_accepts_ratio() {
+        assert_eq!(parse_lane_weights("4:1"), Some((4, 1)));
+        assert_eq!(parse_lane_weights(" 8 : 2 "), Some((8, 2)));
+        assert_eq!(parse_lane_weights("0:0"), Some((1, 1))); // clamped
+        assert_eq!(parse_lane_weights("nope"), None);
+        assert_eq!(parse_lane_weights("3"), None);
     }
 }

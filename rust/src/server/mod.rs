@@ -20,13 +20,24 @@
 //!   line format).
 //! - `GET  /healthz`   liveness
 //! - `GET  /metrics`   counters (requests, errors, accuracy-so-far, token
-//!   totals, session gauges, dynamic-batcher dispatch/occupancy gauges
-//!   and chunk-cache hit/miss/eviction gauges when attached)
+//!   totals, session gauges incl. shed/backoff/eviction counts,
+//!   dynamic-batcher dispatch/occupancy plus per-lane queue-depth and
+//!   mean-wait gauges, and chunk-cache hit/miss/eviction/admission gauges
+//!   when attached)
+//!
+//! Backpressure: `POST /v1/sessions` sheds load with **429 Too Many
+//! Requests + `Retry-After`** once the session registry is at
+//! `--max-sessions` or the scheduler's admission queue is past its
+//! high-water mark; shed requests are counted in `sessions_shed`. Session
+//! steps that hit a saturated scheduler are requeued with jittered delay
+//! (see `server::session`), and `/v1/query` runs on the interactive lane
+//! of the shared scheduler so batch sweeps cannot starve it.
 //!
 //! Error handling: every route failure maps to a proper status — 400 for
-//! malformed bodies, 404 for unknown routes/resources, 500 for protocol
-//! failures — and is counted in `Metrics::errors`, as are transport-level
-//! failures (`Server::serve` no longer drops them).
+//! malformed bodies, 404 for unknown routes/resources (including
+//! TTL-evicted sessions), 429 for shed load, 500 for protocol failures —
+//! and is counted in `Metrics::errors`, as are transport-level failures
+//! (`Server::serve` no longer drops them).
 //!
 //! The serving path is entirely Rust + PJRT: no Python anywhere.
 //! Concurrent requests score through the shared `DynamicBatcher`, so load
@@ -42,7 +53,7 @@ use crate::cost::CostModel;
 use crate::data::Dataset;
 use crate::eval::score_strict;
 use crate::protocol::Protocol;
-use crate::sched::DynamicBatcher;
+use crate::sched::{lane_scope, DynamicBatcher, Lane};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
@@ -63,7 +74,15 @@ pub struct Metrics {
     pub remote_prefill: AtomicU64,
     pub remote_decode: AtomicU64,
     pub latency_us_total: AtomicU64,
+    /// session requests shed with 429 (registry full or scheduler past
+    /// high water)
+    pub shed: AtomicU64,
 }
+
+/// Distinct interactive-lane ids for blocking `/v1/query` runs (counted
+/// down from the top of the u64 range so they never collide with
+/// session-runner ids).
+static NEXT_QUERY_LANE_ID: AtomicU64 = AtomicU64::new(0);
 
 pub struct ServerState {
     pub datasets: HashMap<String, Dataset>,
@@ -78,6 +97,9 @@ pub struct ServerState {
     pub cache: Option<Arc<ChunkCache>>,
     /// registry + step scheduler behind the `/v1/sessions` endpoints
     pub sessions: Arc<SessionRunner>,
+    /// admission control: shed `POST /v1/sessions` with 429 once this
+    /// many sessions are in flight (0 = unlimited)
+    pub max_sessions: usize,
 }
 
 pub struct Server {
@@ -126,16 +148,19 @@ impl Server {
     }
 }
 
-/// A route error carrying the HTTP status line it maps to.
+/// A route error carrying the HTTP status line it maps to, plus an
+/// optional `Retry-After` (seconds) for retryable overload responses.
 struct ApiError {
     status: &'static str,
     msg: String,
+    retry_after: Option<u64>,
 }
 
 fn bad_request(msg: impl Into<String>) -> ApiError {
     ApiError {
         status: "400 Bad Request",
         msg: msg.into(),
+        retry_after: None,
     }
 }
 
@@ -143,6 +168,7 @@ fn not_found(msg: impl Into<String>) -> ApiError {
     ApiError {
         status: "404 Not Found",
         msg: msg.into(),
+        retry_after: None,
     }
 }
 
@@ -150,6 +176,16 @@ fn internal(msg: impl Into<String>) -> ApiError {
     ApiError {
         status: "500 Internal Server Error",
         msg: msg.into(),
+        retry_after: None,
+    }
+}
+
+/// 429 with a `Retry-After` hint — the load-shedding response.
+fn overloaded(msg: impl Into<String>) -> ApiError {
+    ApiError {
+        status: "429 Too Many Requests",
+        msg: msg.into(),
+        retry_after: Some(1),
     }
 }
 
@@ -171,15 +207,27 @@ fn handle_conn(mut stream: TcpStream, state: &ServerState) -> Result<()> {
             let body = Json::obj(vec![("error", Json::str(e.msg))]).to_string();
             // the request is already counted as one error; a client that
             // hung up before reading the error body must not count twice
-            let _ = write_json(&mut stream, e.status, &body);
+            let _ = write_response(&mut stream, e.status, e.retry_after, &body);
             Ok(())
         }
     }
 }
 
 fn write_json(stream: &mut TcpStream, status: &str, body: &str) -> Result<()> {
+    write_response(stream, status, None, body)
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    retry_after: Option<u64>,
+    body: &str,
+) -> Result<()> {
+    let extra = retry_after
+        .map(|s| format!("Retry-After: {s}\r\n"))
+        .unwrap_or_default();
     let out = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\n{extra}Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
     stream.write_all(out.as_bytes())?;
@@ -355,6 +403,18 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                     "sessions_started",
                     Json::num(state.sessions.started_total() as f64),
                 ),
+                (
+                    "sessions_shed",
+                    Json::num(m.shed.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "sessions_backoffs",
+                    Json::num(state.sessions.backoffs_total() as f64),
+                ),
+                (
+                    "sessions_evicted",
+                    Json::num(state.sessions.evicted_total() as f64),
+                ),
             ];
             if let Some(batcher) = &state.batcher {
                 let b = batcher.snapshot();
@@ -364,12 +424,43 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                 fields.push(("batch_flush_timeouts", Json::num(b.flush_timeouts as f64)));
                 fields.push(("batch_cached_rows", Json::num(b.cached_rows as f64)));
                 fields.push(("batch_occupancy", Json::num(b.occupancy)));
+                fields.push(("sched_queue_depth", Json::num(b.queue_depth as f64)));
+                fields.push((
+                    "sched_queue_depth_interactive",
+                    Json::num(b.lane_depth[Lane::Interactive.index()] as f64),
+                ));
+                fields.push((
+                    "sched_queue_depth_batch",
+                    Json::num(b.lane_depth[Lane::Batch.index()] as f64),
+                ));
+                fields.push(("sched_saturated_rejections", Json::num(b.saturated as f64)));
+                fields.push(("sched_preemptions", Json::num(b.preemptions as f64)));
+                fields.push((
+                    "lane_interactive_rows",
+                    Json::num(b.lane_rows[Lane::Interactive.index()] as f64),
+                ));
+                fields.push((
+                    "lane_batch_rows",
+                    Json::num(b.lane_rows[Lane::Batch.index()] as f64),
+                ));
+                fields.push((
+                    "lane_interactive_mean_wait_us",
+                    Json::num(b.lane_mean_wait_us(Lane::Interactive)),
+                ));
+                fields.push((
+                    "lane_batch_mean_wait_us",
+                    Json::num(b.lane_mean_wait_us(Lane::Batch)),
+                ));
             }
             if let Some(cache) = &state.cache {
                 let c = cache.snapshot();
                 fields.push(("cache_hits", Json::num(c.hits as f64)));
                 fields.push(("cache_misses", Json::num(c.misses as f64)));
                 fields.push(("cache_evictions", Json::num(c.evictions as f64)));
+                fields.push((
+                    "cache_rejected_admission",
+                    Json::num(c.rejected_admission as f64),
+                ));
                 fields.push(("cache_entries", Json::num(c.entries as f64)));
                 fields.push(("cache_hit_rate", Json::num(c.hit_rate())));
             }
@@ -379,10 +470,15 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
             let run = parse_run_request(&req.body, state)?;
             let t0 = Instant::now();
             let mut rng = Rng::seed_from(state.seed ^ run.sample_id as u64);
-            let outcome = run
-                .protocol
-                .run(run.sample, &mut rng)
-                .map_err(|e| internal(e.to_string()))?;
+            // blocking queries ride the interactive lane too; ids from the
+            // top of the u64 range keep them round-robin-distinct from
+            // session-runner ids without a shared counter
+            let lane_id = u64::MAX - NEXT_QUERY_LANE_ID.fetch_add(1, Ordering::Relaxed);
+            let outcome = {
+                let _lane = lane_scope(Lane::Interactive, lane_id);
+                run.protocol.run(run.sample, &mut rng)
+            }
+            .map_err(|e| internal(e.to_string()))?;
             let latency = t0.elapsed();
             let s = score_strict(&outcome.answer, &run.sample.query.answer);
 
@@ -419,15 +515,36 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
             ))
         }
         ("POST", "/v1/sessions") => {
+            // admission control, two gates (429 + Retry-After, counted in
+            // /metrics): the scheduler's high-water mark sheds before any
+            // work; the --max-sessions registry cap is enforced
+            // *atomically* inside spawn_capped, so concurrent POSTs can
+            // never overshoot it
+            if state
+                .batcher
+                .as_ref()
+                .map_or(false, |b| b.admission_high_water())
+            {
+                state.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(overloaded("scheduler admission queue past high water"));
+            }
             let run = parse_run_request(&req.body, state)?;
             // same stream as the blocking path: results agree bit-for-bit
             let rng = Rng::seed_from(state.seed ^ run.sample_id as u64);
-            let entry = state.sessions.spawn(
+            let Some(entry) = state.sessions.spawn_capped(
                 run.protocol,
                 run.sample,
                 rng,
                 Some(Arc::clone(&state.metrics)),
-            );
+                state.max_sessions,
+            ) else {
+                state.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(overloaded(format!(
+                    "session registry full ({} in flight, --max-sessions {})",
+                    state.sessions.active(),
+                    state.max_sessions
+                )));
+            };
             Ok(Reply::Json(
                 Json::obj(vec![
                     ("session_id", Json::num(entry.id as f64)),
@@ -463,6 +580,17 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
 
 /// Minimal blocking HTTP client for the examples/tests.
 pub fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
+    let resp = http_post_raw(addr, path, body)?;
+    let body = resp
+        .split("\r\n\r\n")
+        .nth(1)
+        .ok_or_else(|| anyhow!("malformed response"))?;
+    Ok(body.to_string())
+}
+
+/// Like [`http_post`], but returns the full response (status line +
+/// headers + body) — needed to observe 429 statuses and `Retry-After`.
+pub fn http_post_raw(addr: &str, path: &str, body: &str) -> Result<String> {
     let mut stream = TcpStream::connect(addr)?;
     let req = format!(
         "POST {path} HTTP/1.1\r\nHost: minions\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -471,11 +599,7 @@ pub fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
     stream.write_all(req.as_bytes())?;
     let mut resp = String::new();
     stream.read_to_string(&mut resp)?;
-    let body = resp
-        .split("\r\n\r\n")
-        .nth(1)
-        .ok_or_else(|| anyhow!("malformed response"))?;
-    Ok(body.to_string())
+    Ok(resp)
 }
 
 pub fn http_get(addr: &str, path: &str) -> Result<String> {
@@ -507,6 +631,7 @@ pub fn state_with(
         batcher: None,
         cache: None,
         sessions: SessionRunner::new(2),
+        max_sessions: 0,
     })
 }
 
@@ -679,6 +804,7 @@ mod tests {
             batcher: Some(Arc::clone(&batcher)),
             cache: None,
             sessions: SessionRunner::new(1),
+            max_sessions: 0,
         });
         let server = Server::bind(state, "127.0.0.1:0", 1).unwrap();
         let addr = server.addr.to_string();

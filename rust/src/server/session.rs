@@ -11,26 +11,45 @@
 //! polls read the recorded lines under the entry lock and never block a
 //! step worker.
 //!
+//! QoS: every step runs under `sched::lane_scope(Lane::Interactive, id)`,
+//! so server sessions' scoring rows ride the interactive lane of the
+//! shared scheduler (weighted-fair against eval/bench sweeps, round-robin
+//! across sessions). A step that yields [`SessionEvent::Backoff`]
+//! (saturated scheduler) is requeued with a jittered exponential delay
+//! instead of hot-spinning; backoffs are counted per session and in
+//! aggregate for `/metrics`.
+//!
+//! Bounding: terminal (`Done`/`Failed`) entries are evicted from the
+//! registry after a TTL (`--session-ttl`, default 10 min) so a long-lived
+//! server does not grow its session map without bound — polling an
+//! evicted id yields 404, which is documented behavior. `shutdown` marks
+//! queued-but-unfinished sessions `Failed` so no waiter blocks forever.
+//!
 //! Determinism: each session owns the same `Rng::seed_from(seed ^
 //! sample_id)` stream the blocking `/v1/query` path uses, and the rng
 //! travels with the session between workers — a run produces identical
-//! results however its steps were scheduled.
+//! results however its steps were scheduled (backoff retries included:
+//! a backed-off step consumed no rng and no ledger).
 
 use crate::cost::CostModel;
 use crate::data::{Answer, Sample};
 use crate::eval::score_strict;
 use crate::protocol::{Protocol, ProtocolSession, SessionEvent};
+use crate::sched::{lane_scope, Lane};
 use crate::server::Metrics;
 use crate::util::json::Json;
-use crate::util::rng::Rng;
+use crate::util::rng::{mix64, Rng};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Cap on the diagnostic step trace (ids of the last sessions stepped).
 const STEP_TRACE_CAP: usize = 4096;
+
+/// Default TTL for terminal session entries (`--session-ttl`).
+pub const DEFAULT_SESSION_TTL: Duration = Duration::from_secs(600);
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SessionStatus {
@@ -69,11 +88,18 @@ struct EntryInner {
     events: Vec<String>,
     rounds: usize,
     steps: u64,
+    /// total backed-off steps (saturated scheduler), for observability
+    backoffs: u64,
+    /// consecutive backoffs since the last productive step — drives the
+    /// exponential requeue delay
+    backoff_streak: u32,
     /// final-event JSON (Done) or error message (Failed)
     result: Option<String>,
     truth: Answer,
     metrics: Option<Arc<Metrics>>,
     started: Instant,
+    /// set when the session left `Running` — the TTL eviction clock
+    finished: Option<Instant>,
 }
 
 impl SessionEntry {
@@ -104,6 +130,11 @@ impl SessionEntry {
         self.inner.lock().unwrap().status
     }
 
+    /// Backed-off steps so far (saturated-scheduler retries).
+    pub fn backoffs(&self) -> u64 {
+        self.inner.lock().unwrap().backoffs
+    }
+
     /// The `GET /v1/sessions/:id` body.
     pub fn status_json(&self) -> String {
         let inner = self.inner.lock().unwrap();
@@ -113,6 +144,7 @@ impl SessionEntry {
             ("status", Json::str(inner.status.as_str())),
             ("rounds", Json::num(inner.rounds as f64)),
             ("steps", Json::num(inner.steps as f64)),
+            ("backoffs", Json::num(inner.backoffs as f64)),
             ("events", Json::num(inner.events.len() as f64)),
         ];
         if let Some(result) = &inner.result {
@@ -128,14 +160,27 @@ impl SessionEntry {
     }
 }
 
+/// The two-tier run queue: `ready` sessions are poppable now; `parked`
+/// sessions become ready at their due time (backoff delays).
+#[derive(Default)]
+struct RunQueue {
+    ready: VecDeque<u64>,
+    parked: Vec<(Instant, u64)>,
+}
+
 struct RunnerShared {
-    /// session ids ready for their next step (FIFO → round-robin)
-    queue: Mutex<VecDeque<u64>>,
+    /// session ids ready for their next step (FIFO → round-robin), plus
+    /// the backoff-parked tier
+    queue: Mutex<RunQueue>,
     queue_cv: Condvar,
     registry: Mutex<HashMap<u64, Arc<SessionEntry>>>,
+    /// throttle for the registry reaper (the sweep is O(registry))
+    last_reap: Mutex<Instant>,
     next_id: AtomicU64,
     active: AtomicU64,
     started_total: AtomicU64,
+    backoffs_total: AtomicU64,
+    evicted_total: AtomicU64,
     shutdown: AtomicBool,
     /// ring of recently-stepped session ids (diagnostics + tests)
     step_trace: Mutex<VecDeque<u64>>,
@@ -145,17 +190,37 @@ struct RunnerShared {
 pub struct SessionRunner {
     shared: Arc<RunnerShared>,
     workers: Mutex<Vec<JoinHandle<()>>>,
+    ttl: Duration,
+}
+
+/// What a completed step asks the worker loop to do with the session.
+enum StepOutcome {
+    /// still running: requeue immediately (the round-robin path)
+    Continue,
+    /// saturated scheduler: requeue after this delay
+    Backoff(Duration),
+    /// finalized or failed: drop from the run queue
+    Terminal,
 }
 
 impl SessionRunner {
     pub fn new(workers: usize) -> Arc<SessionRunner> {
+        Self::with_config(workers, DEFAULT_SESSION_TTL)
+    }
+
+    /// `ttl` bounds how long terminal entries stay pollable before the
+    /// registry evicts them (404 afterwards — documented behavior).
+    pub fn with_config(workers: usize, ttl: Duration) -> Arc<SessionRunner> {
         let shared = Arc::new(RunnerShared {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(RunQueue::default()),
             queue_cv: Condvar::new(),
             registry: Mutex::new(HashMap::new()),
+            last_reap: Mutex::new(Instant::now()),
             next_id: AtomicU64::new(0),
             active: AtomicU64::new(0),
             started_total: AtomicU64::new(0),
+            backoffs_total: AtomicU64::new(0),
+            evicted_total: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             step_trace: Mutex::new(VecDeque::new()),
         });
@@ -171,6 +236,7 @@ impl SessionRunner {
         Arc::new(SessionRunner {
             shared,
             workers: Mutex::new(handles),
+            ttl,
         })
     }
 
@@ -185,6 +251,44 @@ impl SessionRunner {
         rng: Rng,
         metrics: Option<Arc<Metrics>>,
     ) -> Arc<SessionEntry> {
+        self.spawn_capped(protocol, sample, rng, metrics, 0)
+            .expect("uncapped spawn cannot be refused")
+    }
+
+    /// [`Self::spawn`] with an atomically-enforced cap on in-flight
+    /// sessions (0 = unlimited): the `active` slot is reserved with a
+    /// compare-and-swap *before* any work, so concurrent spawns can
+    /// never overshoot `max_active` (no check-then-act race). Returns
+    /// `None` when the cap refused admission — the server's 429 path.
+    pub fn spawn_capped(
+        &self,
+        protocol: &Arc<dyn Protocol>,
+        sample: &Sample,
+        rng: Rng,
+        metrics: Option<Arc<Metrics>>,
+        max_active: usize,
+    ) -> Option<Arc<SessionEntry>> {
+        // opportunistic registry bounding: every spawn reaps expired
+        // terminal entries, so the map never outgrows the live set plus
+        // one TTL window of finished runs
+        self.reap_expired();
+        if max_active > 0 {
+            let reserved =
+                self.shared
+                    .active
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |a| {
+                        if (a as usize) < max_active {
+                            Some(a + 1)
+                        } else {
+                            None
+                        }
+                    });
+            if reserved.is_err() {
+                return None;
+            }
+        } else {
+            self.shared.active.fetch_add(1, Ordering::Relaxed);
+        }
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         let entry = Arc::new(SessionEntry {
             id,
@@ -196,10 +300,13 @@ impl SessionRunner {
                 events: Vec::new(),
                 rounds: 0,
                 steps: 0,
+                backoffs: 0,
+                backoff_streak: 0,
                 result: None,
                 truth: sample.query.answer.clone(),
                 metrics,
                 started: Instant::now(),
+                finished: None,
             }),
             events_cv: Condvar::new(),
         });
@@ -208,11 +315,35 @@ impl SessionRunner {
             .lock()
             .unwrap()
             .insert(id, Arc::clone(&entry));
-        self.shared.active.fetch_add(1, Ordering::Relaxed);
         self.shared.started_total.fetch_add(1, Ordering::Relaxed);
-        self.shared.queue.lock().unwrap().push_back(id);
+        self.shared.queue.lock().unwrap().ready.push_back(id);
         self.shared.queue_cv.notify_one();
-        entry
+        // close the spawn-vs-shutdown race: if the runner shut down while
+        // we were registering, its fail-Running sweep may have missed this
+        // entry (or already run) — fail it ourselves so no waiter blocks
+        // on a step no worker will ever execute. Both sides guard on
+        // `Running` under the entry lock, so active is decremented once.
+        if self.shared.shutdown.load(Ordering::Acquire) {
+            let mut inner = entry.inner.lock().unwrap();
+            if inner.status == SessionStatus::Running {
+                let msg = "session runner shut down before completion".to_string();
+                inner.events.push(
+                    Json::obj(vec![
+                        ("event", Json::str("failed")),
+                        ("error", Json::str(msg.clone())),
+                    ])
+                    .to_string(),
+                );
+                inner.result = Some(msg);
+                inner.status = SessionStatus::Failed;
+                inner.finished = Some(Instant::now());
+                inner.session = None;
+                self.shared.active.fetch_sub(1, Ordering::Relaxed);
+            }
+            drop(inner);
+            entry.events_cv.notify_all();
+        }
+        Some(entry)
     }
 
     pub fn get(&self, id: u64) -> Option<Arc<SessionEntry>> {
@@ -228,6 +359,51 @@ impl SessionRunner {
         self.shared.started_total.load(Ordering::Relaxed)
     }
 
+    /// Total backed-off steps across all sessions (the `/metrics` gauge).
+    pub fn backoffs_total(&self) -> u64 {
+        self.shared.backoffs_total.load(Ordering::Relaxed)
+    }
+
+    /// Terminal entries evicted by the TTL reaper so far.
+    pub fn evicted_total(&self) -> u64 {
+        self.shared.evicted_total.load(Ordering::Relaxed)
+    }
+
+    /// Evict terminal entries older than the TTL. Returns how many were
+    /// removed. Runs opportunistically on every `spawn`, throttled to at
+    /// most once per `min(ttl/4, 1s)` — the sweep is O(registry), and a
+    /// busy server must not pay it per admission. Exposed for tests and
+    /// manual housekeeping.
+    pub fn reap_expired(&self) -> usize {
+        let now = Instant::now();
+        {
+            let interval = (self.ttl / 4).min(Duration::from_secs(1));
+            let mut last = self.shared.last_reap.lock().unwrap();
+            if now.duration_since(*last) < interval {
+                return 0;
+            }
+            *last = now;
+        }
+        let mut registry = self.shared.registry.lock().unwrap();
+        let expired: Vec<u64> = registry
+            .iter()
+            .filter_map(|(id, entry)| {
+                let inner = entry.inner.lock().unwrap();
+                match inner.finished {
+                    Some(t) if now.duration_since(t) >= self.ttl => Some(*id),
+                    _ => None,
+                }
+            })
+            .collect();
+        for id in &expired {
+            registry.remove(id);
+        }
+        self.shared
+            .evicted_total
+            .fetch_add(expired.len() as u64, Ordering::Relaxed);
+        expired.len()
+    }
+
     /// Ids of the most recently stepped sessions, in execution order
     /// (bounded ring — oldest entries are evicted; used by the
     /// interleaving tests and for diagnostics).
@@ -235,13 +411,46 @@ impl SessionRunner {
         self.shared.step_trace.lock().unwrap().iter().copied().collect()
     }
 
-    /// Stop the workers. In-flight steps finish; queued steps are dropped.
+    /// Stop the workers. In-flight steps finish; queued-but-unfinished
+    /// sessions are marked `Failed` (with an explanatory error) so
+    /// waiters on `wait_done`/`wait_events` wake instead of leaking.
     pub fn shutdown(&self) {
         self.shared.shutdown.store(true, Ordering::Release);
         self.shared.queue_cv.notify_all();
-        let mut workers = self.workers.lock().unwrap();
-        for handle in workers.drain(..) {
-            let _ = handle.join();
+        {
+            let mut workers = self.workers.lock().unwrap();
+            for handle in workers.drain(..) {
+                let _ = handle.join();
+            }
+        }
+        // no worker is mid-step anymore: fail whatever never finished
+        let entries: Vec<Arc<SessionEntry>> = self
+            .shared
+            .registry
+            .lock()
+            .unwrap()
+            .values()
+            .cloned()
+            .collect();
+        for entry in entries {
+            let mut inner = entry.inner.lock().unwrap();
+            if inner.status != SessionStatus::Running {
+                continue;
+            }
+            let msg = "session runner shut down before completion".to_string();
+            inner.events.push(
+                Json::obj(vec![
+                    ("event", Json::str("failed")),
+                    ("error", Json::str(msg.clone())),
+                ])
+                .to_string(),
+            );
+            inner.result = Some(msg);
+            inner.status = SessionStatus::Failed;
+            inner.finished = Some(Instant::now());
+            inner.session = None;
+            self.shared.active.fetch_sub(1, Ordering::Relaxed);
+            entry.events_cv.notify_all();
         }
     }
 }
@@ -252,18 +461,43 @@ impl Drop for SessionRunner {
     }
 }
 
+/// Jittered exponential backoff: 2·2^streak ms (capped at 64 ms) plus up
+/// to half that again of per-(session, attempt) deterministic jitter, so
+/// a herd of backed-off sessions doesn't retry in lockstep.
+fn backoff_delay(id: u64, streak: u32) -> Duration {
+    let base_ms = 2u64 * (1u64 << streak.min(5));
+    let jitter = mix64(id ^ ((streak as u64) << 32)) % (base_ms / 2 + 1);
+    Duration::from_millis(base_ms + jitter)
+}
+
 fn worker_loop(shared: Arc<RunnerShared>) {
     loop {
         let id = {
-            let mut queue = shared.queue.lock().unwrap();
+            let mut q = shared.queue.lock().unwrap();
             loop {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
-                if let Some(id) = queue.pop_front() {
+                let now = Instant::now();
+                if !q.parked.is_empty() {
+                    q.parked.sort_by_key(|(due, _)| *due);
+                    while q.parked.first().map_or(false, |(due, _)| *due <= now) {
+                        let (_, pid) = q.parked.remove(0);
+                        q.ready.push_back(pid);
+                    }
+                }
+                if let Some(id) = q.ready.pop_front() {
                     break id;
                 }
-                queue = shared.queue_cv.wait(queue).unwrap();
+                let next_due = q.parked.first().map(|(due, _)| *due);
+                match next_due {
+                    Some(due) => {
+                        let wait = due.saturating_duration_since(now);
+                        let (guard, _) = shared.queue_cv.wait_timeout(q, wait).unwrap();
+                        q = guard;
+                    }
+                    None => q = shared.queue_cv.wait(q).unwrap(),
+                }
             }
         };
         let entry = shared.registry.lock().unwrap().get(&id).cloned();
@@ -275,39 +509,58 @@ fn worker_loop(shared: Arc<RunnerShared>) {
             }
             trace.push_back(id);
         }
-        if step_once(&shared, &entry) {
-            // still running: back of the queue — this is what interleaves
-            // many sessions over few workers
-            shared.queue.lock().unwrap().push_back(id);
-            shared.queue_cv.notify_one();
+        match step_once(&shared, &entry) {
+            StepOutcome::Continue => {
+                // back of the queue — this is what interleaves many
+                // sessions over few workers
+                shared.queue.lock().unwrap().ready.push_back(id);
+                shared.queue_cv.notify_one();
+            }
+            StepOutcome::Backoff(delay) => {
+                shared
+                    .queue
+                    .lock()
+                    .unwrap()
+                    .parked
+                    .push((Instant::now() + delay, id));
+                // notify_all: a sleeping worker may need to shorten its
+                // wait to this session's due time
+                shared.queue_cv.notify_all();
+            }
+            StepOutcome::Terminal => {}
         }
     }
 }
 
-/// Advance `entry` by one protocol step. Returns whether the session is
-/// still running (i.e. should be re-queued).
-fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> bool {
+/// Advance `entry` by one protocol step.
+fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> StepOutcome {
     // take the step state out so the (possibly long) protocol step runs
     // without holding the entry lock
     let (mut session, mut rng) = {
         let mut inner = entry.inner.lock().unwrap();
         if inner.status != SessionStatus::Running {
-            return false;
+            return StepOutcome::Terminal;
         }
         let Some(session) = inner.session.take() else {
-            return false;
+            return StepOutcome::Terminal;
         };
         let rng = std::mem::replace(&mut inner.rng, Rng::seed_from(0));
         (session, rng)
     };
-    let stepped = session.step(&mut rng);
+    // QoS: server sessions score on the interactive lane, keyed by their
+    // session id for round-robin fairness within the lane
+    let stepped = {
+        let _lane = lane_scope(Lane::Interactive, entry.id);
+        session.step(&mut rng)
+    };
 
     let mut inner = entry.inner.lock().unwrap();
     inner.rng = rng;
     inner.steps += 1;
-    let running = match stepped {
+    let outcome = match stepped {
         Ok(SessionEvent::Planned { round, jobs }) => {
             inner.rounds = round;
+            inner.backoff_streak = 0;
             inner.events.push(
                 Json::obj(vec![
                     ("event", Json::str("planned")),
@@ -317,7 +570,7 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> bool {
                 .to_string(),
             );
             inner.session = Some(session);
-            true
+            StepOutcome::Continue
         }
         Ok(SessionEvent::RoundExecuted {
             round,
@@ -325,6 +578,7 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> bool {
             survivors,
         }) => {
             inner.rounds = round;
+            inner.backoff_streak = 0;
             inner.events.push(
                 Json::obj(vec![
                     ("event", Json::str("round_executed")),
@@ -335,7 +589,17 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> bool {
                 .to_string(),
             );
             inner.session = Some(session);
-            true
+            StepOutcome::Continue
+        }
+        Ok(SessionEvent::Backoff) => {
+            // saturated scheduler: park the session and retry later. No
+            // event line — a long saturation would flood the stream; the
+            // count is visible in the status body and /metrics instead.
+            inner.backoffs += 1;
+            inner.backoff_streak = inner.backoff_streak.saturating_add(1);
+            shared.backoffs_total.fetch_add(1, Ordering::Relaxed);
+            inner.session = Some(session);
+            StepOutcome::Backoff(backoff_delay(entry.id, inner.backoff_streak - 1))
         }
         Ok(SessionEvent::Finalized(outcome)) => {
             inner.rounds = outcome.rounds;
@@ -376,8 +640,9 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> bool {
             inner.events.push(line.clone());
             inner.result = Some(line);
             inner.status = SessionStatus::Done;
+            inner.finished = Some(Instant::now());
             shared.active.fetch_sub(1, Ordering::Relaxed);
-            false
+            StepOutcome::Terminal
         }
         Err(e) => {
             let msg = e.to_string();
@@ -393,10 +658,11 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> bool {
             }
             inner.result = Some(msg);
             inner.status = SessionStatus::Failed;
+            inner.finished = Some(Instant::now());
             shared.active.fetch_sub(1, Ordering::Relaxed);
-            false
+            StepOutcome::Terminal
         }
     };
     entry.events_cv.notify_all();
-    running
+    outcome
 }

@@ -93,6 +93,24 @@ impl Cli {
         )
     }
 
+    /// The standard scheduler knobs shared by the binaries: the bounded
+    /// admission queue (full => typed `SchedError::Saturated`
+    /// backpressure instead of blocking) and the interactive:batch
+    /// weighted-fair-queuing ratio. Results are bit-identical at any
+    /// setting — the scheduler reorders dispatch, never results.
+    pub fn sched_opts(self) -> Self {
+        self.opt(
+            "sched-queue-depth",
+            "scheduler admission-queue bound in rows (full => backpressure)",
+            Some("4096"),
+        )
+        .opt(
+            "lane-weights",
+            "interactive:batch WFQ ratio, e.g. 4:1",
+            Some("4:1"),
+        )
+    }
+
     /// The standard chunk-cache knobs shared by the binaries: repeated
     /// chunk×task jobs skip scoring via `cache::ChunkCache`. Results are
     /// bit-identical with or without the cache (tests/cache_parity.rs).

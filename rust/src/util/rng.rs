@@ -15,6 +15,15 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Stateless SplitMix64 step: hash one `u64` into a well-distributed
+/// `u64`. The single home for these magic constants outside the seeding
+/// path — used for deterministic, clock-free jitter (`server::session`).
+#[inline]
+pub fn mix64(x: u64) -> u64 {
+    let mut s = x;
+    splitmix64(&mut s)
+}
+
 /// Xoshiro256** — fast, high-quality, 256-bit state.
 #[derive(Clone, Debug)]
 pub struct Rng {

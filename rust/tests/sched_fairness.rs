@@ -1,0 +1,713 @@
+//! QoS-scheduler fairness, admission-control, and shutdown-race tests
+//! (artifact-free: stub backends and protocols stand in for compiled
+//! weights, so these run in every environment — the tier-1 gate included).
+//!
+//! What they pin down:
+//! - **No starvation**: under a saturating batch-lane sweep, an
+//!   interactive session's rows are dispatched within a bounded number of
+//!   flushes (deterministically via WFQ assembly, and under real threaded
+//!   contention with a generous bound);
+//! - **Occupancy floor**: two concurrent MinionS runs through the shared
+//!   batcher keep occupancy above 0.5 (the PR-1 regression floor);
+//! - **Saturated admission**: a full session registry yields HTTP 429
+//!   with `Retry-After`, the shed request is counted in `/metrics`, no
+//!   worker panics, and a later retry succeeds;
+//! - **Backpressure determinism**: a run that hits `SchedError::Saturated`
+//!   mid-flight backs off and retries **bit-identically** to an unloaded
+//!   run;
+//! - **Shutdown races**: concurrent submitters during
+//!   `DynamicBatcher::stop` all get clean errors (no hang, no panic), and
+//!   `SessionRunner::shutdown` with queued-but-unstarted sessions marks
+//!   them failed instead of leaking waiters;
+//! - **Registry bounding**: terminal sessions are evicted after the TTL
+//!   (404 afterwards is documented behavior).
+
+use anyhow::Result;
+use minions::cost::Ledger;
+use minions::data::{self, Answer, Sample};
+use minions::eval::{run_protocol, RunResult};
+use minions::model::{local, remote, LocalLm, RemoteLm};
+use minions::protocol::{
+    MinionS, MinionsConfig, Outcome, Protocol, ProtocolSession, SessionEvent,
+};
+use minions::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
+use minions::sched::{is_saturated, lane_scope, DynamicBatcher, Lane, ScoreRow, Ticket};
+use minions::server::session::{SessionRunner, SessionStatus};
+use minions::server::{http_get, http_post, http_post_raw, Metrics, Server, ServerState};
+use minions::util::json::Json;
+use minions::util::rng::{mix64, Rng};
+use minions::vocab::{BATCH, CHUNK, QLEN};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// Backends.
+// ---------------------------------------------------------------------
+
+/// Echo backend: score = row's first query token, lse = 1.
+struct Echo;
+
+impl Backend for Echo {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        let mut scores = vec![0f32; BATCH * CHUNK];
+        for b in 0..BATCH {
+            let v = req.q_tokens[b * QLEN] as f32;
+            for s in &mut scores[b * CHUNK..(b + 1) * CHUNK] {
+                *s = v;
+            }
+        }
+        Ok(ScoreResponse {
+            scores,
+            lse: vec![1.0; BATCH],
+        })
+    }
+
+    fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
+        unimplemented!()
+    }
+
+    fn name(&self) -> &'static str {
+        "echo"
+    }
+}
+
+/// Echo plus a fixed per-dispatch delay — creates real contention.
+struct SlowEcho {
+    delay: Duration,
+}
+
+impl Backend for SlowEcho {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        std::thread::sleep(self.delay);
+        Echo.score(req)
+    }
+
+    fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
+        unimplemented!()
+    }
+
+    fn name(&self) -> &'static str {
+        "slow-echo"
+    }
+}
+
+/// Deterministic, content-sensitive, row-independent scorer (the same
+/// construction `tests/parallel_eval.rs` uses, via the shared
+/// `util::rng::mix64` SplitMix64 step).
+struct PseudoBackend;
+
+impl Backend for PseudoBackend {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        let mut scores = vec![-1.0e30f32; BATCH * CHUNK];
+        let mut lse = vec![0f32; BATCH];
+        for b in 0..BATCH {
+            let q0 = req.q_tokens[b * QLEN] as u64;
+            let q1 = req.q_tokens[b * QLEN + 1] as u64;
+            for c in 0..CHUNK {
+                if req.c_mask[b * CHUNK + c] == 0.0 {
+                    continue;
+                }
+                let t = req.c_tokens[b * CHUNK + c] as u64;
+                let h = mix64(
+                    q0 ^ (q1 << 16) ^ (t << 32) ^ ((c as u64) << 48) ^ ((req.d as u64) << 60),
+                );
+                scores[b * CHUNK + c] = ((h >> 11) as f64 / (1u64 << 53) as f64 * 1.5) as f32;
+            }
+            lse[b] = 1.0;
+        }
+        Ok(ScoreResponse { scores, lse })
+    }
+
+    fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
+        unimplemented!("not used by these protocols")
+    }
+
+    fn name(&self) -> &'static str {
+        "pseudo"
+    }
+}
+
+fn row(tag: i32) -> ScoreRow {
+    ScoreRow {
+        d: 128,
+        q_tokens: {
+            let mut v = vec![0i32; QLEN];
+            v[0] = tag;
+            v
+        },
+        q_weights: vec![0f32; QLEN],
+        c_tokens: vec![0i32; CHUNK],
+        c_mask: vec![1f32; CHUNK],
+    }
+}
+
+fn stack(max_wait: Duration) -> (Arc<DynamicBatcher>, Arc<LocalLm>, Arc<RemoteLm>) {
+    let batcher = DynamicBatcher::new(Arc::new(PseudoBackend), max_wait);
+    let manifest = Manifest::stub_for_tests(&[64, 128, 256, 1024], vec![1.0, 0.5, 0.25]);
+    let local =
+        Arc::new(LocalLm::new(Arc::clone(&batcher), &manifest, local::LLAMA_3B).unwrap());
+    let remote =
+        Arc::new(RemoteLm::new(Arc::clone(&batcher), &manifest, remote::GPT_4O).unwrap());
+    (batcher, local, remote)
+}
+
+fn assert_identical(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(a.scores, b.scores, "{label}: scores diverged");
+    assert_eq!(
+        a.accuracy.to_bits(),
+        b.accuracy.to_bits(),
+        "{label}: accuracy diverged"
+    );
+    assert_eq!(a.cost.total, b.cost.total, "{label}: ledger diverged");
+    for (i, (x, y)) in a.outcomes.iter().zip(&b.outcomes).enumerate() {
+        assert_eq!(x.answer, y.answer, "{label}: answer {i} diverged");
+        assert_eq!(x.ledger, y.ledger, "{label}: ledger {i} diverged");
+        assert_eq!(x.rounds, y.rounds, "{label}: rounds {i} diverged");
+    }
+}
+
+// ---------------------------------------------------------------------
+// (a) No starvation: WFQ pulls interactive rows into the next flush.
+// ---------------------------------------------------------------------
+
+#[test]
+fn interactive_row_rides_the_next_flush_despite_a_parked_batch_backlog() {
+    // Deterministic variant: a far deadline means nothing flushes until a
+    // slot fills, so the dispatch composition is exactly the WFQ/RR
+    // assembly order — no timing involved.
+    let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_secs(30));
+    for round in 0..3u64 {
+        // 7 batch-lane rows parked across two sweep "sessions"
+        let mut parked: Vec<Ticket> = Vec::new();
+        for i in 0..(BATCH as i32 - 1) {
+            let session = 1 + (i as u64 % 2);
+            parked.push(b.submit_tagged(row(i), Lane::Batch, session).unwrap());
+        }
+        let before = b.snapshot().dispatches;
+        // the interactive row completes the batch and must ride it: ONE
+        // flush, not "after the sweep drains"
+        let interactive = b.submit_tagged(row(777), Lane::Interactive, 9).unwrap();
+        interactive.wait().unwrap();
+        let after = b.snapshot().dispatches;
+        assert_eq!(
+            after - before,
+            1,
+            "round {round}: interactive row must be dispatched in the very next flush"
+        );
+        for t in parked {
+            t.wait().unwrap();
+        }
+    }
+    let snap = b.snapshot();
+    assert_eq!(snap.lane_rows[Lane::Interactive.index()], 3);
+    assert_eq!(snap.lane_rows[Lane::Batch.index()], 3 * (BATCH as u64 - 1));
+    b.stop();
+}
+
+#[test]
+fn interactive_rows_bounded_under_threaded_batch_saturation() {
+    // Threaded variant: two batch-lane flooders keep the scheduler busy
+    // against a slow backend; every interactive row must still complete
+    // within a small, bounded number of global dispatches.
+    let b = DynamicBatcher::new(
+        Arc::new(SlowEcho {
+            delay: Duration::from_millis(2),
+        }),
+        Duration::from_millis(5),
+    );
+    b.set_queue_depth(512);
+    let stop = Arc::new(AtomicBool::new(false));
+    let flood: Vec<_> = (0..2u64)
+        .map(|f| {
+            let b = Arc::clone(&b);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let _lane = lane_scope(Lane::Batch, f);
+                let mut parked: VecDeque<Ticket> = VecDeque::new();
+                while !stop.load(Ordering::Relaxed) {
+                    while parked.len() < 32 {
+                        match b.submit(row(1)) {
+                            Ok(t) => parked.push_back(t),
+                            Err(_) => break,
+                        }
+                    }
+                    if let Some(t) = parked.pop_front() {
+                        let _ = t.wait();
+                    }
+                }
+                for t in parked {
+                    let _ = t.wait();
+                }
+            })
+        })
+        .collect();
+    // wait until the sweep is demonstrably saturating the dispatcher
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while b.snapshot().dispatches < 5 {
+        assert!(Instant::now() < deadline, "sweep never started dispatching");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let _lane = lane_scope(Lane::Interactive, 42);
+    for i in 0..5 {
+        let before = b.snapshot().dispatches;
+        b.score_row(row(1000 + i)).unwrap();
+        let waited = b.snapshot().dispatches - before;
+        assert!(
+            waited <= 16,
+            "interactive row {i} starved: {waited} dispatches before completion"
+        );
+    }
+    stop.store(true, Ordering::Relaxed);
+    for h in flood {
+        h.join().unwrap();
+    }
+    b.stop();
+    let snap = b.snapshot();
+    assert_eq!(snap.lane_rows[Lane::Interactive.index()], 5);
+    assert!(snap.lane_rows[Lane::Batch.index()] > 5);
+    // wait accounting flowed per lane
+    assert!(snap.lane_wait_us[Lane::Batch.index()] > 0);
+}
+
+// ---------------------------------------------------------------------
+// (b) Occupancy floor: the PR-1 regression gate still holds.
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_minions_runs_keep_occupancy_above_half() {
+    let (batcher, local, remote) = stack(Duration::from_millis(20));
+    let proto: Arc<dyn Protocol> = Arc::new(MinionS::new(
+        Arc::clone(&local),
+        remote,
+        MinionsConfig::default(),
+    ));
+    let ds = data::micro::context_sweep(8, 3, 7);
+    std::thread::scope(|s| {
+        let a = {
+            let proto = Arc::clone(&proto);
+            let ds = &ds;
+            s.spawn(move || run_protocol(proto.as_ref(), ds, 21, true).unwrap())
+        };
+        let b = {
+            let proto = Arc::clone(&proto);
+            let ds = &ds;
+            s.spawn(move || run_protocol(proto.as_ref(), ds, 22, true).unwrap())
+        };
+        a.join().unwrap();
+        b.join().unwrap();
+    });
+    let snap = batcher.snapshot();
+    assert!(snap.dispatches > 0);
+    assert!(
+        snap.occupancy > 0.5,
+        "two concurrent MinionS runs should batch efficiently, got {:.3} ({snap:?})",
+        snap.occupancy
+    );
+    batcher.stop();
+}
+
+// ---------------------------------------------------------------------
+// Backpressure determinism: saturated runs retry bit-identically.
+// ---------------------------------------------------------------------
+
+#[test]
+fn runs_interrupted_by_saturation_retry_bit_identically() {
+    let ds = data::micro::multistep_sweep(2, 3, 3);
+
+    // baseline: unloaded stack
+    let (b0, local0, remote0) = stack(Duration::from_millis(2));
+    let proto0 = MinionS::new(local0, remote0, MinionsConfig::default());
+    let baseline = run_protocol(&proto0, &ds, 11, true).unwrap();
+    b0.stop();
+
+    // loaded: admission bound of one batch (batch-lane share 7), filled
+    // by parked rows on capacities the protocol never uses (they flush on
+    // the 10ms deadline, re-opening admission). The protocol's first
+    // submissions hit Saturated, surface as SessionEvent::Backoff, and
+    // retry — the final results must not care.
+    let (b1, local1, remote1) = stack(Duration::from_millis(10));
+    b1.set_queue_depth(BATCH);
+    let batch_share = (BATCH - BATCH / 8) as i32;
+    let mut parked = Vec::new();
+    for i in 0..batch_share {
+        let mut r = row(i);
+        r.d = if i % 2 == 0 { 64 } else { 256 };
+        parked.push(b1.submit_tagged(r, Lane::Batch, 0).unwrap());
+    }
+    let proto1 = MinionS::new(local1, remote1, MinionsConfig::default());
+    let loaded = run_protocol(&proto1, &ds, 11, true).unwrap();
+    for t in parked {
+        t.wait().unwrap();
+    }
+    assert_identical(&baseline, &loaded, "saturated-then-retried run");
+    b1.stop();
+}
+
+#[test]
+fn saturated_submit_is_a_typed_retryable_error() {
+    // a wide-ish deadline keeps the queue provably full while the first
+    // assertion runs, even on a heavily loaded machine
+    let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_millis(100));
+    b.set_queue_depth(BATCH);
+    // fill the batch lane's admission share (7/8 of the bound)
+    let mut parked = Vec::new();
+    for i in 0..(BATCH - BATCH / 8) as i32 {
+        let mut r = row(i);
+        r.d = if i % 2 == 0 { 64 } else { 256 };
+        parked.push(b.submit(r).unwrap());
+    }
+    let err = b.submit(row(50)).unwrap_err();
+    assert!(is_saturated(&err), "expected Saturated, got: {err}");
+    // the deadline flush drains the queue; admission then re-opens
+    for t in parked {
+        t.wait().unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        match b.submit(row(51)) {
+            Ok(t) => {
+                drop(t);
+                break;
+            }
+            Err(e) => {
+                assert!(is_saturated(&e), "unexpected error: {e}");
+                assert!(Instant::now() < deadline, "admission never re-opened");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+    assert!(b.snapshot().saturated >= 1);
+    b.stop();
+}
+
+// ---------------------------------------------------------------------
+// Shutdown-vs-submit races.
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_submitters_during_stop_get_clean_errors() {
+    let b = DynamicBatcher::new(Arc::new(Echo), Duration::from_millis(1));
+    let stop_seen = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..8i32)
+        .map(|i| {
+            let b = Arc::clone(&b);
+            let stop_seen = Arc::clone(&stop_seen);
+            std::thread::spawn(move || {
+                let mut oks = 0usize;
+                let mut errs = 0usize;
+                for k in 0..300i32 {
+                    match b.score_row(row(i * 1000 + k)) {
+                        Ok(_) => oks += 1,
+                        Err(e) => {
+                            let msg = e.to_string();
+                            assert!(
+                                msg.contains("stopped") || msg.contains("dropped"),
+                                "unexpected error under stop: {msg}"
+                            );
+                            errs += 1;
+                        }
+                    }
+                    if stop_seen.load(Ordering::Relaxed) && errs > 0 {
+                        break;
+                    }
+                }
+                (oks, errs)
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(5));
+    stop_seen.store(true, Ordering::Relaxed);
+    b.stop();
+    let mut total_ok = 0usize;
+    let mut total_err = 0usize;
+    // joins returning at all proves no submitter hung or panicked
+    for h in handles {
+        let (o, e) = h.join().unwrap();
+        total_ok += o;
+        total_err += e;
+    }
+    assert!(total_ok > 0, "some rows should score before the stop");
+    let _ = total_err; // may be 0 on a fast machine; cleanliness is asserted per-error
+    assert!(b.submit(row(1)).is_err(), "post-stop submits must fail");
+}
+
+// ---------------------------------------------------------------------
+// Stub stepped protocol + gate (shared by the server-side tests).
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Default)]
+struct Gate {
+    state: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl Gate {
+    fn open(&self) {
+        let (lock, cv) = &*self.state;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let (lock, cv) = &*self.state;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+    }
+}
+
+struct Stepped {
+    rounds: usize,
+    /// (step number, gate): that step blocks until the gate opens
+    gate: Option<(usize, Gate)>,
+}
+
+impl Protocol for Stepped {
+    fn name(&self) -> String {
+        format!("stepped[{}]", self.rounds)
+    }
+
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        Box::new(SteppedSession {
+            truth: sample.query.answer.clone(),
+            rounds: self.rounds,
+            gate: self.gate.clone(),
+            step: 0,
+        })
+    }
+}
+
+struct SteppedSession {
+    truth: Answer,
+    rounds: usize,
+    gate: Option<(usize, Gate)>,
+    step: usize,
+}
+
+impl ProtocolSession for SteppedSession {
+    fn step(&mut self, _rng: &mut Rng) -> Result<SessionEvent> {
+        self.step += 1;
+        if let Some((gated_step, gate)) = &self.gate {
+            if self.step == *gated_step {
+                gate.wait();
+            }
+        }
+        if self.step <= self.rounds {
+            Ok(SessionEvent::RoundExecuted {
+                round: self.step,
+                jobs: 1,
+                survivors: 0,
+            })
+        } else {
+            let mut ledger = Ledger::default();
+            ledger.remote_msg(10, 1);
+            Ok(SessionEvent::Finalized(Outcome {
+                answer: self.truth.clone(),
+                ledger,
+                rounds: self.rounds,
+                transcript: vec![],
+            }))
+        }
+    }
+}
+
+/// A session that yields `Backoff` N times before finalizing — pins the
+/// runner's delayed-requeue path end to end.
+struct BackoffTimes {
+    n: usize,
+}
+
+impl Protocol for BackoffTimes {
+    fn name(&self) -> String {
+        format!("backoff[{}]", self.n)
+    }
+
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        Box::new(BackoffSession {
+            remaining: self.n,
+            truth: sample.query.answer.clone(),
+        })
+    }
+}
+
+struct BackoffSession {
+    remaining: usize,
+    truth: Answer,
+}
+
+impl ProtocolSession for BackoffSession {
+    fn step(&mut self, _rng: &mut Rng) -> Result<SessionEvent> {
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            return Ok(SessionEvent::Backoff);
+        }
+        Ok(SessionEvent::Finalized(Outcome {
+            answer: self.truth.clone(),
+            ledger: Ledger::default(),
+            rounds: 1,
+            transcript: vec![],
+        }))
+    }
+}
+
+#[test]
+fn shutdown_with_queued_sessions_fails_them_instead_of_leaking() {
+    let runner = SessionRunner::new(1);
+    let gate = Gate::default();
+    let proto: Arc<dyn Protocol> = Arc::new(Stepped {
+        rounds: 3,
+        gate: Some((1, gate.clone())),
+    });
+    let ds = data::micro::multistep_sweep(1, 3, 5);
+    // the lone worker blocks inside session A's first step; B and C are
+    // queued but never started
+    let a = runner.spawn(&proto, &ds.samples[0], Rng::seed_from(1), None);
+    let b = runner.spawn(&proto, &ds.samples[1], Rng::seed_from(2), None);
+    let c = runner.spawn(&proto, &ds.samples[2], Rng::seed_from(3), None);
+    let r2 = Arc::clone(&runner);
+    let shutdown = std::thread::spawn(move || r2.shutdown());
+    std::thread::sleep(Duration::from_millis(20));
+    gate.open(); // let the in-flight step finish so the worker can exit
+    shutdown.join().unwrap();
+    // every waiter wakes with Failed — nothing leaks, nothing hangs
+    for (label, entry) in [("a", &a), ("b", &b), ("c", &c)] {
+        assert_eq!(
+            entry.wait_done(),
+            SessionStatus::Failed,
+            "session {label} must be failed by shutdown"
+        );
+        assert!(
+            entry.status_json().contains("shut down"),
+            "session {label} must carry the shutdown error"
+        );
+    }
+    assert_eq!(runner.active(), 0);
+}
+
+#[test]
+fn backed_off_sessions_requeue_with_delay_and_complete() {
+    let runner = SessionRunner::new(1);
+    let proto: Arc<dyn Protocol> = Arc::new(BackoffTimes { n: 3 });
+    let ds = data::micro::multistep_sweep(1, 1, 5);
+    let entry = runner.spawn(&proto, &ds.samples[0], Rng::seed_from(1), None);
+    assert_eq!(entry.wait_done(), SessionStatus::Done);
+    assert_eq!(entry.backoffs(), 3);
+    assert_eq!(runner.backoffs_total(), 3);
+    assert!(
+        entry.status_json().contains("\"backoffs\":3"),
+        "status must expose the backoff count: {}",
+        entry.status_json()
+    );
+    runner.shutdown();
+}
+
+#[test]
+fn terminal_sessions_are_evicted_after_ttl() {
+    let runner = SessionRunner::with_config(1, Duration::from_millis(50));
+    let proto: Arc<dyn Protocol> = Arc::new(Stepped {
+        rounds: 1,
+        gate: None,
+    });
+    let ds = data::micro::multistep_sweep(1, 2, 5);
+    let a = runner.spawn(&proto, &ds.samples[0], Rng::seed_from(1), None);
+    assert_eq!(a.wait_done(), SessionStatus::Done);
+    assert!(runner.get(a.id).is_some(), "pollable before the TTL");
+    std::thread::sleep(Duration::from_millis(80));
+    // spawning reaps expired terminal entries opportunistically
+    let b = runner.spawn(&proto, &ds.samples[1], Rng::seed_from(2), None);
+    assert!(
+        runner.get(a.id).is_none(),
+        "terminal session must be evicted after the TTL (404 afterwards)"
+    );
+    assert!(runner.evicted_total() >= 1);
+    assert_eq!(b.wait_done(), SessionStatus::Done);
+    runner.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// (c) End-to-end admission control: 429 + Retry-After, then success.
+// ---------------------------------------------------------------------
+
+#[test]
+fn saturated_admission_sheds_with_429_and_a_later_retry_succeeds() {
+    let gate = Gate::default();
+    let proto: Arc<dyn Protocol> = Arc::new(Stepped {
+        rounds: 1,
+        gate: Some((1, gate.clone())),
+    });
+    let ds = data::micro::multistep_sweep(1, 2, 5);
+    let mut datasets = HashMap::new();
+    datasets.insert("micro".to_string(), ds);
+    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    protocols.insert("stepped".to_string(), proto);
+    let state = Arc::new(ServerState {
+        datasets,
+        protocols,
+        metrics: Arc::new(Metrics::default()),
+        seed: 7,
+        batcher: None,
+        cache: None,
+        sessions: SessionRunner::new(2),
+        max_sessions: 1, // tiny on purpose: the second POST must shed
+    });
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let body = r#"{"dataset":"micro","sample":0,"protocol":"stepped"}"#;
+    // first session occupies the only slot (its first step parks on the gate)
+    let resp = http_post(&addr, "/v1/sessions", body).unwrap();
+    let sid = Json::parse(&resp)
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .expect("first session admitted");
+
+    // second POST: shed with 429 + Retry-After, never panicking a worker
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":1,"protocol":"stepped"}"#,
+    )
+    .unwrap();
+    assert!(
+        raw.starts_with("HTTP/1.1 429"),
+        "expected 429 Too Many Requests, got: {raw}"
+    );
+    assert!(raw.contains("Retry-After: 1"), "missing Retry-After: {raw}");
+    assert!(raw.contains("registry full"), "unhelpful shed body: {raw}");
+
+    // the shed request is counted
+    let metrics = http_get(&addr, "/metrics").unwrap();
+    let m = Json::parse(&metrics).unwrap();
+    assert!(m.get("sessions_shed").unwrap().as_u64().unwrap() >= 1);
+
+    // let the first session finish, then the retry must be admitted
+    gate.open();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let status = http_get(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+        if status.contains("\"done\"") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "first session never finished");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let retry = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":1,"protocol":"stepped"}"#,
+    )
+    .unwrap();
+    let rid = Json::parse(&retry)
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .expect("retry admitted after the registry drained");
+    // the retried session runs to completion: the worker pool survived
+    // the shed unscathed
+    let events = http_get(&addr, &format!("/v1/sessions/{rid}/events")).unwrap();
+    assert!(events.contains("\"finalized\""), "got: {events}");
+}

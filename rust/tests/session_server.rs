@@ -345,6 +345,7 @@ fn cached_minions_state() -> (Arc<ServerState>, Arc<DynamicBatcher>) {
         batcher: Some(Arc::clone(&batcher)),
         cache: Some(cache),
         sessions: SessionRunner::new(2),
+        max_sessions: 0,
     });
     (state, batcher)
 }
