@@ -9,17 +9,23 @@
 //! three layers compose with Python nowhere on the request path.
 //!
 //! The server runs with a deliberately tiny `--max-sessions` (2), so the
-//! final act demonstrates end-to-end backpressure: a burst of session
-//! creations gets shed with **429 + Retry-After**, the client honors the
-//! header and retries, and every session eventually completes — with the
-//! shed count visible on `/metrics`.
+//! backpressure act demonstrates end-to-end load shedding: a burst of
+//! session creations gets shed with **429 + Retry-After**, the client
+//! honors the header and retries, and every session eventually
+//! completes — with the shed count visible on `/metrics`.
+//!
+//! The runner is durable (`--state-dir` style WAL in a temp dir), and
+//! the final act exercises the cancellation lifecycle: `DELETE` on a
+//! running session (200, terminal `cancelled`, slot freed), `DELETE` on
+//! a finished one (documented 409 no-op), with `sessions_cancelled` and
+//! `wal_bytes` visible on `/metrics`.
 
 use minions::data;
 use minions::exp::Exp;
 use minions::model::{local, remote};
 use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
 use minions::server::session::SessionRunner;
-use minions::server::{http_get, http_post, http_post_raw, Server, ServerState};
+use minions::server::{http_delete_raw, http_get, http_post, http_post_raw, Server, ServerState};
 use minions::util::json::Json;
 use minions::util::stats::Summary;
 use std::collections::HashMap;
@@ -44,6 +50,16 @@ fn main() -> anyhow::Result<()> {
     protocols.insert("remote".into(), Arc::new(RemoteOnly::new(gpt4o.clone())));
     protocols.insert("local".into(), Arc::new(LocalOnly::new(llama8b)));
 
+    // durable sessions: WAL per session under a scratch state dir (the
+    // `--state-dir` flag on `minions serve` does the same, plus recovery
+    // of incomplete sessions on the next boot)
+    let state_dir =
+        std::env::temp_dir().join(format!("minions-serve-e2e-{}", std::process::id()));
+    let sessions = SessionRunner::with_wal(
+        4,
+        minions::server::session::DEFAULT_SESSION_TTL,
+        &state_dir,
+    )?;
     let state = Arc::new(ServerState {
         datasets,
         protocols,
@@ -51,13 +67,16 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         batcher: Some(exp.batcher()),
         cache: exp.cache(),
-        sessions: SessionRunner::new(4),
+        sessions,
         // tiny on purpose: the burst below must trip the 429 shed path
         max_sessions: 2,
     });
     let server = Server::bind(state, "127.0.0.1:0", 4)?;
     let addr = server.addr.to_string();
-    println!("serving on http://{addr} (--max-sessions 2)");
+    println!(
+        "serving on http://{addr} (--max-sessions 2, state-dir {})",
+        state_dir.display()
+    );
 
     let server_thread = std::thread::spawn(move || server.serve(None));
 
@@ -179,7 +198,68 @@ fn main() -> anyhow::Result<()> {
         "a 6-session burst against 2 slots should shed at least once"
     );
 
+    // --- cancellation: DELETE a running session, then a finished one ---
+    println!("\n== cancellation: DELETE /v1/sessions/:id ==");
+    let resp = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"qasper","sample":0,"protocol":"minions"}"#,
+    )?;
+    let cancel_sid = Json::parse(&resp)?
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .expect("session id");
+    let raw = http_delete_raw(&addr, &format!("/v1/sessions/{cancel_sid}"))?;
+    let accepted = raw.starts_with("HTTP/1.1 200");
+    println!(
+        "DELETE session {cancel_sid} (running): {}",
+        raw.lines().next().unwrap_or("")
+    );
+    assert!(
+        accepted || raw.starts_with("HTTP/1.1 409"),
+        "cancel must be 200 (accepted) or 409 (already finished): {raw}"
+    );
+    // cancellation is cooperative and asynchronous: wait for the
+    // terminal state before reading the metrics. If the in-flight step
+    // finalized first, completion legitimately wins (status "done").
+    let final_status = loop {
+        let s = http_get(&addr, &format!("/v1/sessions/{cancel_sid}"))?;
+        if !s.contains("\"running\"") {
+            break s;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    };
+    let was_cancelled = final_status.contains("\"cancelled\"");
+    println!(
+        "session {cancel_sid} settled as {}",
+        if was_cancelled { "cancelled" } else { "done (completion won the race)" }
+    );
+    // a finished session: the documented 409 no-op
+    let done_sid = admitted[0];
+    let raw = http_delete_raw(&addr, &format!("/v1/sessions/{done_sid}"))?;
+    println!(
+        "DELETE session {done_sid} (done): {}",
+        raw.lines().next().unwrap_or("")
+    );
+    assert!(raw.starts_with("HTTP/1.1 409"), "expected the 409 no-op: {raw}");
+    // unknown id: 404
+    let raw = http_delete_raw(&addr, "/v1/sessions/999999")?;
+    assert!(raw.starts_with("HTTP/1.1 404"), "expected 404: {raw}");
+
+    let metrics = http_get(&addr, "/metrics")?;
+    let m = Json::parse(&metrics)?;
+    println!(
+        "sessions_cancelled={} wal_bytes={} (every step of every session was written ahead)",
+        m.get("sessions_cancelled").and_then(Json::as_u64).unwrap_or(0),
+        m.get("wal_bytes").and_then(Json::as_u64).unwrap_or(0)
+    );
+    if was_cancelled {
+        assert!(m.get("sessions_cancelled").and_then(Json::as_u64).unwrap_or(0) >= 1);
+    }
+    assert!(m.get("wal_bytes").and_then(Json::as_u64).unwrap_or(0) > 0);
+
     println!("\nserver metrics: {metrics}");
+    let _ = std::fs::remove_dir_all(&state_dir);
     let _ = server_thread; // serving thread is detached; exit tears it down
     std::process::exit(0);
 }

@@ -236,7 +236,8 @@ fn cmd_serve(args: Vec<String>) -> i32 {
                 "session-ttl",
                 "seconds before terminal sessions are evicted from the registry",
                 Some("600"),
-            ),
+            )
+            .state_dir_opt(),
     );
     let a = match cli.parse_from(args) {
         Ok(a) => a,
@@ -298,14 +299,36 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     let session_workers: usize = a.parse_num("session-workers", 4usize).max(1);
     let max_sessions: usize = a.parse_num("max-sessions", 256usize);
     let session_ttl = std::time::Duration::from_secs(a.parse_num("session-ttl", 600u64).max(1));
+    // durability: with --state-dir, sessions write-ahead their events and
+    // incomplete runs found on disk are resumed before serving traffic
+    let state_dir = a.get_or("state-dir", "").to_string();
+    let sessions = if state_dir.is_empty() {
+        SessionRunner::with_config(session_workers, session_ttl)
+    } else {
+        match SessionRunner::with_wal(session_workers, session_ttl, &state_dir) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("startup failed: {e}");
+                return 1;
+            }
+        }
+    };
+    let metrics: Arc<minions::server::Metrics> = Default::default();
+    if !state_dir.is_empty() {
+        let report = sessions.recover(&datasets, &protocols, Some(Arc::clone(&metrics)));
+        println!(
+            "state-dir {state_dir}: resumed {} session(s), skipped {} terminal, {} unusable",
+            report.resumed, report.skipped_terminal, report.skipped_unusable
+        );
+    }
     let state = Arc::new(ServerState {
         datasets,
         protocols,
-        metrics: Default::default(),
+        metrics,
         seed,
         batcher: Some(exp.batcher()),
         cache: exp.cache(),
-        sessions: SessionRunner::with_config(session_workers, session_ttl),
+        sessions,
         max_sessions,
     });
     let server = match Server::bind(state, &format!("127.0.0.1:{port}"), workers) {

@@ -14,7 +14,10 @@
 //! do the arithmetic and finalize. The rng is consumed in the same order
 //! as the old monolithic loop, so blocking runs are bit-identical.
 
-use super::{Outcome, Protocol, ProtocolSession, SessionEvent};
+use super::{
+    f32_from_json, f32_to_json, jfield, ledger_from_json, ledger_to_json, transcript_from_json,
+    transcript_to_json, Outcome, Protocol, ProtocolSession, SessionEvent, FRESH_SNAPSHOT,
+};
 use crate::cost::{text_tokens, Ledger};
 use crate::data::{Answer, QueryKind, Sample};
 use crate::model::{LocalLm, RemoteLm};
@@ -43,21 +46,15 @@ impl Minion {
 /// Per-part confidence the remote requires before it stops asking.
 const ACCEPT_CONF: f32 = 0.55;
 
-impl Protocol for Minion {
-    fn name(&self) -> String {
-        format!(
-            "minion[{}+{}]",
-            self.local.profile.name, self.remote.profile.name
-        )
-    }
-
-    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+impl Minion {
+    /// A session at its initial state (shared by `session` and `restore`).
+    fn fresh(&self, sample: &Sample) -> MinionSession {
         let n_parts = match &sample.query.kind {
             QueryKind::Multi(k) => *k,
             QueryKind::Compute(_) => 2,
             _ => 1,
         };
-        Box::new(MinionSession {
+        MinionSession {
             local: Arc::clone(&self.local),
             remote: Arc::clone(&self.remote),
             max_rounds: self.max_rounds,
@@ -68,7 +65,75 @@ impl Protocol for Minion {
             ledger: Ledger::default(),
             transcript: Vec::new(),
             phase: MinionPhase::Chat,
-        })
+        }
+    }
+}
+
+impl Protocol for Minion {
+    fn name(&self) -> String {
+        format!(
+            "minion[{}+{}]",
+            self.local.profile.name, self.remote.profile.name
+        )
+    }
+
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        Box::new(self.fresh(sample))
+    }
+
+    /// Rebuild a mid-chat session from a WAL snapshot: resolved parts
+    /// (with bit-exact confidences), round counter, ledger, and
+    /// transcript are restored verbatim — recovery never re-reads the
+    /// context for a round that already committed.
+    fn restore(&self, sample: &Sample, snapshot: &Json) -> Result<Box<dyn ProtocolSession>> {
+        if snapshot.as_str() == Some(FRESH_SNAPSHOT) {
+            return Ok(self.session(sample));
+        }
+        if snapshot.get("kind").and_then(Json::as_str) != Some("minion") {
+            return Err(anyhow!("not a minion snapshot: {snapshot}"));
+        }
+        let mut s = self.fresh(sample);
+        s.rounds = jfield(snapshot, "rounds")?
+            .as_u64()
+            .ok_or_else(|| anyhow!("bad rounds"))? as usize;
+        let parts = jfield(snapshot, "parts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("parts not an array"))?;
+        if parts.len() != s.n_parts {
+            return Err(anyhow!(
+                "snapshot has {} parts, sample wants {}",
+                parts.len(),
+                s.n_parts
+            ));
+        }
+        s.part_answers = parts
+            .iter()
+            .map(|p| match p {
+                Json::Null => Ok(None),
+                pair => {
+                    let a = pair
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("part answer not an array"))?;
+                    if a.len() != 2 {
+                        return Err(anyhow!("part answer wants [token, conf]"));
+                    }
+                    let tok = a[0]
+                        .as_u64()
+                        .ok_or_else(|| anyhow!("bad part token"))?
+                        as Token;
+                    Ok(Some((tok, f32_from_json(&a[1])?)))
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        s.ledger = ledger_from_json(jfield(snapshot, "ledger")?)?;
+        s.transcript = transcript_from_json(jfield(snapshot, "transcript")?)?;
+        s.phase = match jfield(snapshot, "phase")?.as_str() {
+            Some("chat") => MinionPhase::Chat,
+            Some("finalize") => MinionPhase::Finalize,
+            Some("done") => return Err(anyhow!("cannot restore a finalized minion session")),
+            other => return Err(anyhow!("unknown minion phase {other:?}")),
+        };
+        Ok(Box::new(s))
     }
 }
 
@@ -308,5 +373,37 @@ impl ProtocolSession for MinionSession {
                 MinionPhase::Done => return Err(anyhow!("minion session already finalized")),
             }
         }
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("minion")),
+            ("rounds", Json::num(self.rounds as f64)),
+            (
+                "parts",
+                Json::Arr(
+                    self.part_answers
+                        .iter()
+                        .map(|p| match p {
+                            None => Json::Null,
+                            Some((tok, conf)) => Json::Arr(vec![
+                                Json::num(*tok as f64),
+                                f32_to_json(*conf),
+                            ]),
+                        })
+                        .collect(),
+                ),
+            ),
+            ("ledger", ledger_to_json(&self.ledger)),
+            ("transcript", transcript_to_json(&self.transcript)),
+            (
+                "phase",
+                Json::str(match self.phase {
+                    MinionPhase::Chat => "chat",
+                    MinionPhase::Finalize => "finalize",
+                    MinionPhase::Done => "done",
+                }),
+            ),
+        ])
     }
 }

@@ -13,7 +13,12 @@
 //! the protocol force-finalizes from the worker outputs it has instead of
 //! spinning forever.
 
-use super::{Outcome, Protocol, ProtocolSession, RoundStrategy, SessionEvent};
+use super::{
+    f32_from_json, f32_to_json, jfield, keys_from_json, keys_to_json, ledger_from_json,
+    ledger_to_json, tokens_from_json, tokens_to_json, transcript_from_json, transcript_to_json,
+    u64_from_json, u64_to_json, Outcome, Protocol, ProtocolSession, RoundStrategy, SessionEvent,
+    FRESH_SNAPSHOT,
+};
 use crate::cache::CacheAdmit;
 use crate::cost::{text_tokens, Ledger};
 use crate::data::{Answer, Query, QueryKind, Sample};
@@ -22,6 +27,7 @@ use crate::model::job::{Job, WorkerOutput};
 use crate::model::remote::last_jobs_binding;
 use crate::model::{ChunkRef, Decision, LocalLm, MinionsRemote, PlanConfig};
 use crate::sched::is_saturated;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::sync::Arc;
@@ -104,12 +110,9 @@ fn forced_final(q: &Query, outputs: &[WorkerOutput]) -> Answer {
     }
 }
 
-impl Protocol for MinionS {
-    fn name(&self) -> String {
-        format!("minions[{}+{}]", self.local.profile.name, self.remote.label())
-    }
-
-    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+impl MinionS {
+    /// A session at its initial state (shared by `session` and `restore`).
+    fn fresh(&self, sample: &Sample) -> MinionsSession {
         let docs: Vec<DocShape> = sample
             .context
             .docs
@@ -120,7 +123,7 @@ impl Protocol for MinionS {
                 n_pages: d.n_pages(),
             })
             .collect();
-        Box::new(MinionsSession {
+        MinionsSession {
             local: Arc::clone(&self.local),
             remote: Arc::clone(&self.remote),
             cfg: self.cfg,
@@ -134,7 +137,242 @@ impl Protocol for MinionS {
             scratchpad_tokens: 0,
             rounds: 0,
             phase: Phase::Plan,
+        }
+    }
+}
+
+impl Protocol for MinionS {
+    fn name(&self) -> String {
+        format!("minions[{}+{}]", self.local.profile.name, self.remote.label())
+    }
+
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        Box::new(self.fresh(sample))
+    }
+
+    /// Rebuild a mid-run session from a WAL snapshot: ledger, transcript,
+    /// scratchpad, and the phase machine (planned-but-unexecuted jobs
+    /// included) are restored verbatim, so recovery re-scores nothing
+    /// that already committed.
+    fn restore(&self, sample: &Sample, snapshot: &Json) -> Result<Box<dyn ProtocolSession>> {
+        if snapshot.as_str() == Some(FRESH_SNAPSHOT) {
+            return Ok(self.session(sample));
+        }
+        if snapshot.get("kind").and_then(Json::as_str) != Some("minions") {
+            return Err(anyhow!("not a minions snapshot: {snapshot}"));
+        }
+        let mut s = self.fresh(sample);
+        s.rounds = jfield(snapshot, "rounds")?
+            .as_u64()
+            .ok_or_else(|| anyhow!("bad rounds"))? as usize;
+        s.advice = jfield(snapshot, "advice")?
+            .as_str()
+            .ok_or_else(|| anyhow!("bad advice"))?
+            .to_string();
+        s.scratchpad_tokens = u64_from_json(jfield(snapshot, "scratchpad_tokens")?)?;
+        s.scratch_jobs = scratch_jobs_from_json(jfield(snapshot, "scratch_jobs")?)?;
+        s.ledger = ledger_from_json(jfield(snapshot, "ledger")?)?;
+        s.transcript = transcript_from_json(jfield(snapshot, "transcript")?)?;
+        s.phase = phase_from_json(jfield(snapshot, "phase")?)?;
+        Ok(Box::new(s))
+    }
+}
+
+// ---- snapshot serde (see DESIGN.md §8) ------------------------------
+
+fn chunk_to_json(c: &ChunkRef) -> Json {
+    Json::Arr(vec![
+        Json::num(c.doc as f64),
+        Json::num(c.page_start as f64),
+        Json::num(c.n_pages as f64),
+    ])
+}
+
+fn chunk_from_json(j: &Json) -> Result<ChunkRef> {
+    let a = j.as_arr().ok_or_else(|| anyhow!("chunk ref not an array"))?;
+    if a.len() != 3 {
+        return Err(anyhow!("chunk ref wants 3 fields, got {}", a.len()));
+    }
+    let f = |i: usize| -> Result<usize> {
+        a[i].as_u64()
+            .map(|v| v as usize)
+            .ok_or_else(|| anyhow!("bad chunk ref field {i}"))
+    };
+    Ok(ChunkRef {
+        doc: f(0)?,
+        page_start: f(1)?,
+        n_pages: f(2)?,
+    })
+}
+
+fn jobs_to_json(jobs: &[Job]) -> Json {
+    Json::Arr(
+        jobs.iter()
+            .map(|j| {
+                Json::obj(vec![
+                    ("job_id", Json::num(j.job_id as f64)),
+                    ("task_id", Json::num(j.task_id as f64)),
+                    ("chunk", chunk_to_json(&j.chunk)),
+                    ("keys", keys_to_json(&j.keys)),
+                    ("instruction", Json::str(j.instruction.clone())),
+                    ("advice", Json::str(j.advice.clone())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn jobs_from_json(j: &Json) -> Result<Vec<Job>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("job list not an array"))?
+        .iter()
+        .map(|j| {
+            Ok(Job {
+                job_id: jfield(j, "job_id")?
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("bad job_id"))? as usize,
+                task_id: jfield(j, "task_id")?
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("bad task_id"))? as usize,
+                chunk: chunk_from_json(jfield(j, "chunk")?)?,
+                keys: keys_from_json(jfield(j, "keys")?)?,
+                instruction: jfield(j, "instruction")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("bad instruction"))?
+                    .to_string(),
+                advice: jfield(j, "advice")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("bad advice"))?
+                    .to_string(),
+            })
         })
+        .collect()
+}
+
+fn outputs_to_json(outs: &[WorkerOutput]) -> Json {
+    Json::Arr(
+        outs.iter()
+            .map(|o| {
+                Json::obj(vec![
+                    ("job_id", Json::num(o.job_id as f64)),
+                    ("task_id", Json::num(o.task_id as f64)),
+                    (
+                        "answer",
+                        match o.answer {
+                            Some(t) => Json::num(t as f64),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("sample_answers", tokens_to_json(&o.sample_answers)),
+                    ("multi_found", tokens_to_json(&o.multi_found)),
+                    ("confidence", f32_to_json(o.confidence)),
+                    ("citation", Json::str(o.citation.clone())),
+                    ("citation_tokens", tokens_to_json(&o.citation_tokens)),
+                    ("explanation", Json::str(o.explanation.clone())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn outputs_from_json(j: &Json) -> Result<Vec<WorkerOutput>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("output list not an array"))?
+        .iter()
+        .map(|o| {
+            let answer = match jfield(o, "answer")? {
+                Json::Null => None,
+                v => Some(
+                    v.as_u64()
+                        .ok_or_else(|| anyhow!("bad output answer {v}"))?
+                        as crate::vocab::Token,
+                ),
+            };
+            Ok(WorkerOutput {
+                job_id: jfield(o, "job_id")?
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("bad job_id"))? as usize,
+                task_id: jfield(o, "task_id")?
+                    .as_u64()
+                    .ok_or_else(|| anyhow!("bad task_id"))? as usize,
+                answer,
+                sample_answers: tokens_from_json(jfield(o, "sample_answers")?)?,
+                multi_found: tokens_from_json(jfield(o, "multi_found")?)?,
+                confidence: f32_from_json(jfield(o, "confidence")?)?,
+                citation: jfield(o, "citation")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("bad citation"))?
+                    .to_string(),
+                citation_tokens: tokens_from_json(jfield(o, "citation_tokens")?)?,
+                explanation: jfield(o, "explanation")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("bad explanation"))?
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+fn scratch_jobs_to_json(sj: &[(i64, ChunkRef, bool)]) -> Json {
+    Json::Arr(
+        sj.iter()
+            .map(|(v, c, answered)| {
+                Json::Arr(vec![
+                    u64_to_json(*v as u64),
+                    chunk_to_json(c),
+                    Json::Bool(*answered),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn scratch_jobs_from_json(j: &Json) -> Result<Vec<(i64, ChunkRef, bool)>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("scratch jobs not an array"))?
+        .iter()
+        .map(|e| {
+            let a = e.as_arr().ok_or_else(|| anyhow!("scratch job not an array"))?;
+            if a.len() != 3 {
+                return Err(anyhow!("scratch job wants 3 fields"));
+            }
+            Ok((
+                u64_from_json(&a[0])? as i64,
+                chunk_from_json(&a[1])?,
+                a[2].as_bool().ok_or_else(|| anyhow!("bad answered flag"))?,
+            ))
+        })
+        .collect()
+}
+
+fn phase_to_json(phase: &Phase) -> Json {
+    match phase {
+        Phase::Plan => Json::obj(vec![("state", Json::str("plan"))]),
+        Phase::Execute { jobs } => Json::obj(vec![
+            ("state", Json::str("execute")),
+            ("jobs", jobs_to_json(jobs)),
+        ]),
+        Phase::Synthesize { jobs, outputs } => Json::obj(vec![
+            ("state", Json::str("synthesize")),
+            ("jobs", jobs_to_json(jobs)),
+            ("outputs", outputs_to_json(outputs)),
+        ]),
+        Phase::Done => Json::obj(vec![("state", Json::str("done"))]),
+    }
+}
+
+fn phase_from_json(j: &Json) -> Result<Phase> {
+    match jfield(j, "state")?.as_str() {
+        Some("plan") => Ok(Phase::Plan),
+        Some("execute") => Ok(Phase::Execute {
+            jobs: jobs_from_json(jfield(j, "jobs")?)?,
+        }),
+        Some("synthesize") => Ok(Phase::Synthesize {
+            jobs: jobs_from_json(jfield(j, "jobs")?)?,
+            outputs: outputs_from_json(jfield(j, "outputs")?)?,
+        }),
+        Some("done") => Err(anyhow!("cannot restore a finalized minions session")),
+        _ => Err(anyhow!("unknown minions phase {j}")),
     }
 }
 
@@ -360,6 +598,19 @@ impl ProtocolSession for MinionsSession {
             Phase::Synthesize { jobs, outputs } => self.step_synthesize(jobs, outputs, rng),
             Phase::Done => Err(anyhow!("minions session already finalized")),
         }
+    }
+
+    fn snapshot(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("minions")),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("advice", Json::str(self.advice.clone())),
+            ("scratchpad_tokens", u64_to_json(self.scratchpad_tokens)),
+            ("scratch_jobs", scratch_jobs_to_json(&self.scratch_jobs)),
+            ("ledger", ledger_to_json(&self.ledger)),
+            ("transcript", transcript_to_json(&self.transcript)),
+            ("phase", phase_to_json(&self.phase)),
+        ])
     }
 }
 

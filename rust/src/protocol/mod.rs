@@ -25,6 +25,7 @@ pub mod remote_only;
 
 use crate::cost::Ledger;
 use crate::data::{Answer, Sample};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use std::time::Duration;
@@ -84,7 +85,25 @@ impl SessionEvent {
 pub trait ProtocolSession: Send {
     /// Advance the session by one unit of protocol work.
     fn step(&mut self, rng: &mut Rng) -> Result<SessionEvent>;
+
+    /// Serialize the state a future [`Protocol::restore`] needs to resume
+    /// this session from exactly here — called by the durability layer
+    /// (`server::wal`) after every step, alongside the rng checkpoint.
+    ///
+    /// The default returns the `"fresh"` marker: restoring replays the
+    /// session from its initial state. That is exact for one-shot
+    /// sessions (their only step is terminal, so a non-terminal WAL
+    /// always describes the initial state) and acceptable for test
+    /// stubs; multi-round protocols override it so recovery never
+    /// re-scores a committed round.
+    fn snapshot(&self) -> Json {
+        Json::str(FRESH_SNAPSHOT)
+    }
 }
+
+/// Snapshot marker for sessions that carry no resumable state beyond
+/// "not started" (the default [`ProtocolSession::snapshot`]).
+pub const FRESH_SNAPSHOT: &str = "fresh";
 
 /// Drive a session to completion — the blocking semantics of
 /// [`Protocol::run`], shared by the eval/bench paths. A `Backoff` event
@@ -112,6 +131,24 @@ pub trait Protocol: Send + Sync {
     /// Begin a resumable session over `sample`. The session owns its
     /// state; `self` only lends out `Arc` handles.
     fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession>;
+
+    /// Rebuild a session from a [`ProtocolSession::snapshot`] captured
+    /// after some step, positioned to perform the *next* step. The
+    /// caller (WAL recovery) supplies the matching rng checkpoint
+    /// separately, so the resumed stream is bit-identical to an
+    /// uninterrupted run and committed rounds are never re-scored.
+    ///
+    /// The default accepts only the `"fresh"` marker (a new session);
+    /// protocols with mid-run state override it.
+    fn restore(&self, sample: &Sample, snapshot: &Json) -> Result<Box<dyn ProtocolSession>> {
+        match snapshot.as_str() {
+            Some(FRESH_SNAPSHOT) => Ok(self.session(sample)),
+            _ => Err(anyhow!(
+                "protocol '{}' cannot restore snapshot {snapshot}",
+                self.name()
+            )),
+        }
+    }
 
     /// Blocking driver over [`Protocol::session`]; semantically identical
     /// to the pre-session monolithic run.
@@ -176,7 +213,333 @@ pub enum RoundStrategy {
     Scratchpad,
 }
 
+// ---------------------------------------------------------------------
+// Durability serde: lossless JSON encodings of events, outcomes, rng
+// checkpoints, and the small value types protocol snapshots are built
+// from. Shared by the per-protocol `snapshot`/`restore` impls and the
+// WAL framing layer (`server::wal`). Encodings are bit-exact: u64 and
+// f64 travel as hex bit patterns (JSON numbers are f64 and would round
+// 64-bit integers; NaN isn't JSON at all), f32 as its u32 bit pattern.
+// ---------------------------------------------------------------------
+
+/// Required-field accessor with a path-bearing error.
+pub fn jfield<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow!("snapshot missing field '{key}' in {j}"))
+}
+
+fn jstr<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    jfield(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("field '{key}' is not a string"))
+}
+
+fn jnum(j: &Json, key: &str) -> Result<f64> {
+    jfield(j, key)?
+        .as_f64()
+        .ok_or_else(|| anyhow!("field '{key}' is not a number"))
+}
+
+pub fn u64_to_json(x: u64) -> Json {
+    Json::str(format!("{x:016x}"))
+}
+
+pub fn u64_from_json(j: &Json) -> Result<u64> {
+    let s = j
+        .as_str()
+        .ok_or_else(|| anyhow!("expected hex-u64 string, got {j}"))?;
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("bad hex-u64 '{s}': {e}"))
+}
+
+pub fn f64_to_json(x: f64) -> Json {
+    u64_to_json(x.to_bits())
+}
+
+pub fn f64_from_json(j: &Json) -> Result<f64> {
+    Ok(f64::from_bits(u64_from_json(j)?))
+}
+
+pub fn f32_to_json(x: f32) -> Json {
+    Json::num(x.to_bits() as f64)
+}
+
+pub fn f32_from_json(j: &Json) -> Result<f32> {
+    let bits = j
+        .as_u64()
+        .ok_or_else(|| anyhow!("expected f32 bit pattern, got {j}"))?;
+    Ok(f32::from_bits(bits as u32))
+}
+
+/// The rng checkpoint persisted with every WAL record: 4 hex words of
+/// Xoshiro256** state.
+pub fn rng_to_json(rng: &Rng) -> Json {
+    Json::Arr(rng.state().iter().map(|w| u64_to_json(*w)).collect())
+}
+
+pub fn rng_from_json(j: &Json) -> Result<Rng> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| anyhow!("rng checkpoint is not an array"))?;
+    if arr.len() != 4 {
+        return Err(anyhow!("rng checkpoint has {} words, want 4", arr.len()));
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        s[i] = u64_from_json(w)?;
+    }
+    Ok(Rng::from_state(s))
+}
+
+pub fn tokens_to_json(toks: &[crate::vocab::Token]) -> Json {
+    Json::Arr(toks.iter().map(|t| Json::num(*t as f64)).collect())
+}
+
+pub fn tokens_from_json(j: &Json) -> Result<Vec<crate::vocab::Token>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("token list is not an array"))?
+        .iter()
+        .map(|t| {
+            t.as_u64()
+                .map(|v| v as crate::vocab::Token)
+                .ok_or_else(|| anyhow!("bad token {t}"))
+        })
+        .collect()
+}
+
+pub fn keys_to_json(keys: &[crate::vocab::Key]) -> Json {
+    Json::Arr(keys.iter().map(|k| tokens_to_json(&k.0)).collect())
+}
+
+pub fn keys_from_json(j: &Json) -> Result<Vec<crate::vocab::Key>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("key list is not an array"))?
+        .iter()
+        .map(|k| {
+            let toks = tokens_from_json(k)?;
+            let arr: [crate::vocab::Token; crate::vocab::KEY_LEN] = toks
+                .try_into()
+                .map_err(|_| anyhow!("key is not {} tokens", crate::vocab::KEY_LEN))?;
+            Ok(crate::vocab::Key(arr))
+        })
+        .collect()
+}
+
+pub fn ledger_to_json(l: &Ledger) -> Json {
+    Json::obj(vec![
+        ("remote_prefill", u64_to_json(l.remote_prefill)),
+        ("remote_decode", u64_to_json(l.remote_decode)),
+        ("local_prefill", u64_to_json(l.local_prefill)),
+        ("local_decode", u64_to_json(l.local_decode)),
+        ("remote_calls", Json::num(l.remote_calls as f64)),
+        ("local_jobs", Json::num(l.local_jobs as f64)),
+    ])
+}
+
+pub fn ledger_from_json(j: &Json) -> Result<Ledger> {
+    Ok(Ledger {
+        remote_prefill: u64_from_json(jfield(j, "remote_prefill")?)?,
+        remote_decode: u64_from_json(jfield(j, "remote_decode")?)?,
+        local_prefill: u64_from_json(jfield(j, "local_prefill")?)?,
+        local_decode: u64_from_json(jfield(j, "local_decode")?)?,
+        remote_calls: jnum(j, "remote_calls")? as u32,
+        local_jobs: jnum(j, "local_jobs")? as u32,
+    })
+}
+
+pub fn answer_to_json(a: &Answer) -> Json {
+    match a {
+        Answer::Value(t) => Json::obj(vec![("value", Json::num(*t as f64))]),
+        Answer::Number(x) => Json::obj(vec![("number", f64_to_json(*x))]),
+        Answer::Bool(b) => Json::obj(vec![("bool", Json::Bool(*b))]),
+        Answer::Set(v) => Json::obj(vec![("set", tokens_to_json(v))]),
+    }
+}
+
+pub fn answer_from_json(j: &Json) -> Result<Answer> {
+    if let Some(v) = j.get("value") {
+        let t = v.as_u64().ok_or_else(|| anyhow!("bad answer value {v}"))?;
+        return Ok(Answer::Value(t as crate::vocab::Token));
+    }
+    if let Some(v) = j.get("number") {
+        return Ok(Answer::Number(f64_from_json(v)?));
+    }
+    if let Some(v) = j.get("bool") {
+        let b = v.as_bool().ok_or_else(|| anyhow!("bad answer bool {v}"))?;
+        return Ok(Answer::Bool(b));
+    }
+    if let Some(v) = j.get("set") {
+        return Ok(Answer::Set(tokens_from_json(v)?));
+    }
+    Err(anyhow!("unrecognized answer encoding {j}"))
+}
+
+pub fn transcript_to_json(lines: &[String]) -> Json {
+    Json::Arr(lines.iter().map(|l| Json::str(l.clone())).collect())
+}
+
+pub fn transcript_from_json(j: &Json) -> Result<Vec<String>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("transcript is not an array"))?
+        .iter()
+        .map(|l| {
+            l.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("transcript line is not a string"))
+        })
+        .collect()
+}
+
+pub fn outcome_to_json(o: &Outcome) -> Json {
+    Json::obj(vec![
+        ("answer", answer_to_json(&o.answer)),
+        ("ledger", ledger_to_json(&o.ledger)),
+        ("rounds", Json::num(o.rounds as f64)),
+        ("transcript", transcript_to_json(&o.transcript)),
+    ])
+}
+
+pub fn outcome_from_json(j: &Json) -> Result<Outcome> {
+    Ok(Outcome {
+        answer: answer_from_json(jfield(j, "answer")?)?,
+        ledger: ledger_from_json(jfield(j, "ledger")?)?,
+        rounds: jnum(j, "rounds")? as usize,
+        transcript: transcript_from_json(jfield(j, "transcript")?)?,
+    })
+}
+
+/// Serialize a [`SessionEvent`] for the WAL. `Finalized` carries the
+/// full outcome (answer + ledger + transcript), so recovery reconstructs
+/// terminal sessions without recomputation.
+pub fn event_to_json(ev: &SessionEvent) -> Json {
+    match ev {
+        SessionEvent::Planned { round, jobs } => Json::obj(vec![
+            ("kind", Json::str("planned")),
+            ("round", Json::num(*round as f64)),
+            ("jobs", Json::num(*jobs as f64)),
+        ]),
+        SessionEvent::RoundExecuted {
+            round,
+            jobs,
+            survivors,
+        } => Json::obj(vec![
+            ("kind", Json::str("round_executed")),
+            ("round", Json::num(*round as f64)),
+            ("jobs", Json::num(*jobs as f64)),
+            ("survivors", Json::num(*survivors as f64)),
+        ]),
+        SessionEvent::Backoff => Json::obj(vec![("kind", Json::str("backoff"))]),
+        SessionEvent::Finalized(outcome) => Json::obj(vec![
+            ("kind", Json::str("finalized")),
+            ("outcome", outcome_to_json(outcome)),
+        ]),
+    }
+}
+
+pub fn event_from_json(j: &Json) -> Result<SessionEvent> {
+    match jstr(j, "kind")? {
+        "planned" => Ok(SessionEvent::Planned {
+            round: jnum(j, "round")? as usize,
+            jobs: jnum(j, "jobs")? as usize,
+        }),
+        "round_executed" => Ok(SessionEvent::RoundExecuted {
+            round: jnum(j, "round")? as usize,
+            jobs: jnum(j, "jobs")? as usize,
+            survivors: jnum(j, "survivors")? as usize,
+        }),
+        "backoff" => Ok(SessionEvent::Backoff),
+        "finalized" => Ok(SessionEvent::Finalized(outcome_from_json(jfield(
+            j, "outcome",
+        )?)?)),
+        other => Err(anyhow!("unknown event kind '{other}'")),
+    }
+}
+
 pub use local_only::LocalOnly;
 pub use minion::Minion;
 pub use minions::{MinionS, MinionsConfig};
 pub use remote_only::RemoteOnly;
+
+#[cfg(test)]
+mod serde_tests {
+    use super::*;
+
+    #[test]
+    fn bitexact_scalar_round_trips() {
+        for x in [0u64, 1, u64::MAX, 1 << 63, 0x9E37_79B9_7F4A_7C15] {
+            assert_eq!(u64_from_json(&u64_to_json(x)).unwrap(), x);
+        }
+        for x in [0.0f64, -0.0, 1.5, f64::NAN, f64::INFINITY, 1e-300] {
+            let back = f64_from_json(&f64_to_json(x)).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "f64 {x} must be bit-exact");
+        }
+        for x in [0.0f32, 0.5772, -1.25e-30] {
+            let back = f32_from_json(&f32_to_json(x)).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn rng_checkpoint_round_trips_through_parse() {
+        let mut rng = Rng::seed_from(99);
+        for _ in 0..7 {
+            rng.next_u64();
+        }
+        let j = Json::parse(&rng_to_json(&rng).to_string()).unwrap();
+        let mut back = rng_from_json(&j).unwrap();
+        let mut orig = rng.clone();
+        for _ in 0..32 {
+            assert_eq!(orig.next_u64(), back.next_u64());
+        }
+    }
+
+    #[test]
+    fn answer_and_outcome_round_trip() {
+        let mut ledger = Ledger::default();
+        ledger.remote_msg(1234, 56);
+        ledger.local_job(789, 10);
+        let answers = [
+            Answer::Value(5000),
+            Answer::Number(f64::NAN),
+            Answer::Number(-17.25),
+            Answer::Bool(true),
+            Answer::Set(vec![4097, 5000, 6000]),
+        ];
+        for a in answers {
+            let o = Outcome {
+                answer: a.clone(),
+                ledger,
+                rounds: 2,
+                transcript: vec!["round 1 decompose:\nplan".into(), "line \"two\"".into()],
+            };
+            let j = Json::parse(&outcome_to_json(&o).to_string()).unwrap();
+            let back = outcome_from_json(&j).unwrap();
+            match (&back.answer, &a) {
+                (Answer::Number(x), Answer::Number(y)) => {
+                    assert_eq!(x.to_bits(), y.to_bits())
+                }
+                (x, y) => assert_eq!(x, y),
+            }
+            assert_eq!(back.ledger, o.ledger);
+            assert_eq!(back.rounds, o.rounds);
+            assert_eq!(back.transcript, o.transcript);
+        }
+    }
+
+    #[test]
+    fn event_round_trips() {
+        let evs = [
+            SessionEvent::Planned { round: 1, jobs: 8 },
+            SessionEvent::RoundExecuted {
+                round: 2,
+                jobs: 8,
+                survivors: 3,
+            },
+            SessionEvent::Backoff,
+        ];
+        for ev in evs {
+            let j = Json::parse(&event_to_json(&ev).to_string()).unwrap();
+            let back = event_from_json(&j).unwrap();
+            assert_eq!(format!("{ev:?}"), format!("{back:?}"));
+        }
+    }
+}

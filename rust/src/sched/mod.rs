@@ -126,11 +126,17 @@ pub fn current_lane() -> (Lane, u64) {
 }
 
 /// Parse a `--lane-weights` CLI value like `"4:1"` (interactive:batch).
+/// A zero weight is **rejected** (`None`), not clamped: a zero-weight
+/// lane would accrue no deficit credit and silently starve — an operator
+/// typo must fail loudly at parse time instead.
 pub fn parse_lane_weights(s: &str) -> Option<(u64, u64)> {
     let (i, b) = s.split_once(':')?;
     let i: u64 = i.trim().parse().ok()?;
     let b: u64 = b.trim().parse().ok()?;
-    Some((i.max(1), b.max(1)))
+    if i == 0 || b == 0 {
+        return None;
+    }
+    Some((i, b))
 }
 
 // ---------------------------------------------------------------------
@@ -1216,7 +1222,10 @@ mod tests {
     fn parse_lane_weights_accepts_ratio() {
         assert_eq!(parse_lane_weights("4:1"), Some((4, 1)));
         assert_eq!(parse_lane_weights(" 8 : 2 "), Some((8, 2)));
-        assert_eq!(parse_lane_weights("0:0"), Some((1, 1))); // clamped
+        // zero-weight lanes are rejected, not clamped: they would starve
+        assert_eq!(parse_lane_weights("0:0"), None);
+        assert_eq!(parse_lane_weights("0:1"), None);
+        assert_eq!(parse_lane_weights("4:0"), None);
         assert_eq!(parse_lane_weights("nope"), None);
         assert_eq!(parse_lane_weights("3"), None);
     }

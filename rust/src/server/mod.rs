@@ -17,7 +17,15 @@
 //!   `SessionEvent`s as JSON lines over chunked transfer; lines are
 //!   written as rounds complete, so clients observe planned /
 //!   round_executed / finalized progress live (see DESIGN.md §5 for the
-//!   line format).
+//!   line format). A client that abandons the stream mid-run (broken
+//!   pipe) cooperatively cancels the session — an abandoned run must
+//!   not keep consuming scheduler slots.
+//! - `DELETE /v1/sessions/:id`  cooperative cancel: 200 when accepted
+//!   (body `"cancelled"` = terminal now; `"cancelling"` = a step is in
+//!   flight and the worker converts between steps — unless that step
+//!   finalizes, in which case completion wins and the session settles
+//!   `done`), **409 Conflict** when the session is already terminal
+//!   (documented no-op), 404 for unknown/evicted ids.
 //! - `GET  /healthz`   liveness
 //! - `GET  /metrics`   counters (requests, errors, accuracy-so-far, token
 //!   totals, session gauges incl. shed/backoff/eviction counts,
@@ -47,6 +55,7 @@
 //! touching the batcher at all.
 
 pub mod session;
+pub mod wal;
 
 use crate::cache::ChunkCache;
 use crate::cost::CostModel;
@@ -189,6 +198,15 @@ fn overloaded(msg: impl Into<String>) -> ApiError {
     }
 }
 
+/// 409 — the documented no-op for cancelling an already-terminal session.
+fn conflict(msg: impl Into<String>) -> ApiError {
+    ApiError {
+        status: "409 Conflict",
+        msg: msg.into(),
+        retry_after: None,
+    }
+}
+
 /// What a successful route produces: a JSON body, or a handle to stream
 /// events from.
 enum Reply {
@@ -201,7 +219,17 @@ fn handle_conn(mut stream: TcpStream, state: &ServerState) -> Result<()> {
     let req = read_request(&mut stream)?;
     match route(&req, state) {
         Ok(Reply::Json(body)) => write_json(&mut stream, "200 OK", &body),
-        Ok(Reply::EventStream(entry)) => stream_events(&mut stream, &entry),
+        Ok(Reply::EventStream(entry)) => {
+            let res = stream_events(&mut stream, &entry);
+            if res.is_err() {
+                // client-abandoned-stream heuristic: a watcher that hung
+                // up mid-run has abandoned the session — cancel it so it
+                // stops consuming scheduler slots (no-op if it already
+                // finished or another cancel won)
+                let _ = state.sessions.cancel(entry.id);
+            }
+            res
+        }
         Err(e) => {
             state.metrics.errors.fetch_add(1, Ordering::Relaxed);
             let body = Json::obj(vec![("error", Json::str(e.msg))]).to_string();
@@ -237,13 +265,20 @@ fn write_response(
 /// Stream a session's event lines over chunked transfer encoding: one
 /// chunk per newline-terminated JSON event, written as the session
 /// produces them, terminated when the session finalizes or fails.
+///
+/// Disconnect detection is two-pronged: a failed chunk write surfaces
+/// immediately, and while the stream is *idle* (a session parked in a
+/// long backoff emits no lines) the writer wakes every 500 ms and
+/// probes the socket — a clean zero-byte read means the client sent
+/// FIN and abandoned the stream. Either path returns an error, which
+/// `handle_conn` turns into a cooperative cancel of the session.
 fn stream_events(stream: &mut TcpStream, entry: &Arc<SessionEntry>) -> Result<()> {
     stream.write_all(
         b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
     )?;
     let mut cursor = 0usize;
     loop {
-        let (lines, done) = entry.wait_events(cursor);
+        let (lines, done) = entry.wait_events_for(cursor, std::time::Duration::from_millis(500));
         cursor += lines.len();
         for line in &lines {
             // chunk = "<hex len>\r\n<line>\n\r\n"
@@ -256,7 +291,31 @@ fn stream_events(stream: &mut TcpStream, entry: &Arc<SessionEntry>) -> Result<()
             stream.write_all(b"0\r\n\r\n")?;
             return Ok(());
         }
+        if lines.is_empty() && client_hung_up(stream) {
+            return Err(anyhow!("client abandoned the event stream"));
+        }
     }
+}
+
+/// Probe an idle event-stream socket for a client FIN: a well-behaved
+/// client sends nothing after its request, so a successful zero-byte
+/// read means the peer closed. A timeout (or stray pipelined bytes)
+/// means it is still there.
+///
+/// Known limitation, by design: a client that half-closes its write
+/// side (`shutdown(SHUT_WR)`) while still reading is indistinguishable
+/// from one that disconnected, and is treated as having abandoned the
+/// stream. Event-stream clients must keep their write side open for the
+/// duration of the watch — documented in DESIGN.md §8.
+fn client_hung_up(stream: &mut TcpStream) -> bool {
+    if stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(1)))
+        .is_err()
+    {
+        return true;
+    }
+    let mut probe = [0u8; 1];
+    matches!(stream.read(&mut probe), Ok(0))
 }
 
 struct HttpRequest {
@@ -319,8 +378,11 @@ fn find_header_end(buf: &[u8]) -> Option<usize> {
 }
 
 /// Parsed `{"dataset":..,"sample":..,"protocol":..}` run request, resolved
-/// against the preloaded state.
+/// against the preloaded state. The registry keys (`dataset`,
+/// `proto_key`) double as the session's WAL identity for crash recovery.
 struct RunRequest<'a> {
+    dataset: String,
+    proto_key: String,
     sample_id: usize,
     sample: &'a crate::data::Sample,
     protocol: &'a Arc<dyn Protocol>,
@@ -348,14 +410,16 @@ fn parse_run_request<'a>(body: &str, state: &'a ServerState) -> Result<RunReques
         .samples
         .get(sample_id)
         .ok_or_else(|| not_found(format!("sample {sample_id} out of range")))?;
-    let protocol = state
+    let proto = state
         .protocols
         .get(protocol)
         .ok_or_else(|| not_found(format!("unknown protocol '{protocol}'")))?;
     Ok(RunRequest {
+        dataset: dataset.to_string(),
+        proto_key: protocol.to_string(),
         sample_id,
         sample,
-        protocol,
+        protocol: proto,
     })
 }
 
@@ -414,6 +478,22 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                 (
                     "sessions_evicted",
                     Json::num(state.sessions.evicted_total() as f64),
+                ),
+                (
+                    "sessions_cancelled",
+                    Json::num(state.sessions.cancelled_total() as f64),
+                ),
+                (
+                    "sessions_recovered",
+                    Json::num(state.sessions.recovered_total() as f64),
+                ),
+                (
+                    "wal_replay_skipped_terminal",
+                    Json::num(state.sessions.replay_skipped_terminal() as f64),
+                ),
+                (
+                    "wal_bytes",
+                    Json::num(state.sessions.wal_bytes() as f64),
                 ),
             ];
             if let Some(batcher) = &state.batcher {
@@ -531,12 +611,18 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
             let run = parse_run_request(&req.body, state)?;
             // same stream as the blocking path: results agree bit-for-bit
             let rng = Rng::seed_from(state.seed ^ run.sample_id as u64);
+            let meta = wal::WalMeta {
+                proto_key: run.proto_key.clone(),
+                dataset: run.dataset.clone(),
+                sample: run.sample_id,
+            };
             let Some(entry) = state.sessions.spawn_capped(
                 run.protocol,
                 run.sample,
                 rng,
                 Some(Arc::clone(&state.metrics)),
                 state.max_sessions,
+                Some(meta),
             ) else {
                 state.metrics.shed.fetch_add(1, Ordering::Relaxed);
                 return Err(overloaded(format!(
@@ -571,6 +657,43 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                 Ok(Reply::Json(entry.status_json()))
             }
         }
+        ("DELETE", path) if path.starts_with("/v1/sessions/") => {
+            let (id, wants_events) = parse_session_path(path)
+                .ok_or_else(|| not_found(format!("no route for DELETE {path}")))?;
+            if wants_events {
+                return Err(not_found(format!("no route for DELETE {path}")));
+            }
+            match state.sessions.cancel(id) {
+                None => Err(not_found(format!("unknown session {id}"))),
+                // cancelling a terminal session is a documented 409 no-op
+                Some(session::CancelOutcome::AlreadyTerminal) => {
+                    let status = state
+                        .sessions
+                        .get(id)
+                        .map(|e| e.status().as_str())
+                        .unwrap_or("terminal");
+                    Err(conflict(format!(
+                        "session {id} already terminal (status '{status}')"
+                    )))
+                }
+                // "cancelling" is honest about the race: the flag is set,
+                // but an in-flight step that finalizes wins — poll the
+                // status endpoint for the terminal state
+                Some(outcome) => Ok(Reply::Json(
+                    Json::obj(vec![
+                        ("session_id", Json::num(id as f64)),
+                        (
+                            "status",
+                            Json::str(match outcome {
+                                session::CancelOutcome::Cancelled => "cancelled",
+                                _ => "cancelling",
+                            }),
+                        ),
+                    ])
+                    .to_string(),
+                )),
+            }
+        }
         _ => Err(not_found(format!(
             "no route for {} {}",
             req.method, req.path
@@ -603,17 +726,33 @@ pub fn http_post_raw(addr: &str, path: &str, body: &str) -> Result<String> {
 }
 
 pub fn http_get(addr: &str, path: &str) -> Result<String> {
-    let mut stream = TcpStream::connect(addr)?;
-    let req =
-        format!("GET {path} HTTP/1.1\r\nHost: minions\r\nConnection: close\r\n\r\n");
-    stream.write_all(req.as_bytes())?;
-    let mut resp = String::new();
-    stream.read_to_string(&mut resp)?;
+    let resp = http_bodyless_raw("GET", addr, path)?;
     let body = resp
         .split("\r\n\r\n")
         .nth(1)
         .ok_or_else(|| anyhow!("malformed response"))?;
     Ok(body.to_string())
+}
+
+/// Like [`http_get`], but returns the full response (status line +
+/// headers + body) — needed to observe 404/409 statuses.
+pub fn http_get_raw(addr: &str, path: &str) -> Result<String> {
+    http_bodyless_raw("GET", addr, path)
+}
+
+/// `DELETE` returning the full response — the session-cancel client.
+pub fn http_delete_raw(addr: &str, path: &str) -> Result<String> {
+    http_bodyless_raw("DELETE", addr, path)
+}
+
+fn http_bodyless_raw(method: &str, addr: &str, path: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    let req =
+        format!("{method} {path} HTTP/1.1\r\nHost: minions\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    Ok(resp)
 }
 
 /// Guard for tests: state with stub protocols (no batcher or cache

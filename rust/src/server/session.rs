@@ -30,16 +30,35 @@
 //! travels with the session between workers — a run produces identical
 //! results however its steps were scheduled (backoff retries included:
 //! a backed-off step consumed no rng and no ledger).
+//!
+//! Durability: a runner built with [`SessionRunner::with_wal`] appends
+//! every step (event + rng checkpoint + state snapshot) to a per-session
+//! write-ahead log under `--state-dir` *before* the step's effects are
+//! observable, and [`SessionRunner::recover`] replays those logs on boot:
+//! incomplete sessions resume from their last checkpoint (no committed
+//! round is re-scored — `kill -9` costs at most the in-flight step),
+//! while logs whose final record is terminal are skipped, never
+//! resurrected (`wal_replay_skipped_terminal`). See `server::wal` and
+//! DESIGN.md §8.
+//!
+//! Cancellation: `DELETE /v1/sessions/:id` (or a client abandoning its
+//! event stream) sets a cooperative cancel flag; the runner checks it
+//! between `step()` calls, emits a terminal `cancelled` event (persisted
+//! to the WAL), and frees the session's scheduler slot. Cancelling an
+//! already-terminal session is a documented no-op (HTTP 409).
 
 use crate::cost::CostModel;
-use crate::data::{Answer, Sample};
+use crate::data::{Answer, Dataset, Sample};
 use crate::eval::score_strict;
-use crate::protocol::{Protocol, ProtocolSession, SessionEvent};
+use crate::protocol::{event_from_json, rng_from_json, Protocol, ProtocolSession, SessionEvent};
 use crate::sched::{lane_scope, Lane};
+use crate::server::wal::{self, ScannedLog, SessionWal, WalMeta};
 use crate::server::Metrics;
 use crate::util::json::Json;
 use crate::util::rng::{mix64, Rng};
+use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -56,6 +75,9 @@ pub enum SessionStatus {
     Running,
     Done,
     Failed,
+    /// cooperatively cancelled (client `DELETE` or abandoned stream) —
+    /// terminal: the slot is freed and recovery never resumes it
+    Cancelled,
 }
 
 impl SessionStatus {
@@ -64,6 +86,7 @@ impl SessionStatus {
             SessionStatus::Running => "running",
             SessionStatus::Done => "done",
             SessionStatus::Failed => "failed",
+            SessionStatus::Cancelled => "cancelled",
         }
     }
 }
@@ -100,6 +123,12 @@ struct EntryInner {
     started: Instant,
     /// set when the session left `Running` — the TTL eviction clock
     finished: Option<Instant>,
+    /// cooperative cancel: set by [`SessionRunner::cancel`] while a step
+    /// is in flight; the worker converts the session to `Cancelled`
+    /// between `step()` calls
+    cancel_requested: bool,
+    /// the session's write-ahead log, when the runner is durable
+    wal: Option<SessionWal>,
 }
 
 impl SessionEntry {
@@ -114,6 +143,29 @@ impl SessionEntry {
                 return (fresh, inner.status != SessionStatus::Running);
             }
             inner = self.events_cv.wait(inner).unwrap();
+        }
+    }
+
+    /// [`Self::wait_events`] with a bounded wait: returns after `dur`
+    /// even if nothing new arrived (both vec and flag possibly empty /
+    /// false). Lets the event-stream writer wake periodically to probe
+    /// its client for disconnection — a session parked in a long backoff
+    /// emits no lines, and an abandoned stream must still be noticed.
+    pub fn wait_events_for(&self, from: usize, dur: Duration) -> (Vec<String>, bool) {
+        let deadline = Instant::now() + dur;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.events.len() > from || inner.status != SessionStatus::Running {
+                let start = from.min(inner.events.len());
+                let fresh = inner.events[start..].to_vec();
+                return (fresh, inner.status != SessionStatus::Running);
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return (Vec::new(), false);
+            }
+            let (guard, _) = self.events_cv.wait_timeout(inner, left).unwrap();
+            inner = guard;
         }
     }
 
@@ -133,6 +185,13 @@ impl SessionEntry {
     /// Backed-off steps so far (saturated-scheduler retries).
     pub fn backoffs(&self) -> u64 {
         self.inner.lock().unwrap().backoffs
+    }
+
+    /// The session rng's raw state — the bit-identity probe the
+    /// durability tests compare between uninterrupted and recovered
+    /// runs (a recovered stream must land on the same state).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.inner.lock().unwrap().rng.state()
     }
 
     /// The `GET /v1/sessions/:id` body.
@@ -181,6 +240,12 @@ struct RunnerShared {
     started_total: AtomicU64,
     backoffs_total: AtomicU64,
     evicted_total: AtomicU64,
+    cancelled_total: AtomicU64,
+    recovered_total: AtomicU64,
+    replay_skipped_terminal: AtomicU64,
+    wal_bytes: AtomicU64,
+    /// `--state-dir`: present iff this runner persists session WALs
+    wal_dir: Option<PathBuf>,
     shutdown: AtomicBool,
     /// ring of recently-stepped session ids (diagnostics + tests)
     step_trace: Mutex<VecDeque<u64>>,
@@ -191,6 +256,33 @@ pub struct SessionRunner {
     shared: Arc<RunnerShared>,
     workers: Mutex<Vec<JoinHandle<()>>>,
     ttl: Duration,
+}
+
+/// What [`SessionRunner::cancel`] did. Cancellation is cooperative and
+/// asynchronous: `Cancelling` means the flag is set but the in-flight
+/// step decides the final state — if that step finalizes, the session
+/// ends `Done` (completion wins; a cancel is never retroactive).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// the session was queued: it is terminal `Cancelled` right now
+    Cancelled,
+    /// a step is in flight: the worker converts the session between
+    /// steps (or completion wins if that step finalizes)
+    Cancelling,
+    /// the session was already terminal — the documented 409/no-op
+    AlreadyTerminal,
+}
+
+/// What [`SessionRunner::recover`] found in the state dir.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RecoveryReport {
+    /// incomplete sessions restored and re-enqueued
+    pub resumed: usize,
+    /// logs whose last record was terminal: counted, deleted, never
+    /// re-enqueued
+    pub skipped_terminal: usize,
+    /// logs that could not be recovered (left on disk, warned)
+    pub skipped_unusable: usize,
 }
 
 /// What a completed step asks the worker loop to do with the session.
@@ -211,6 +303,24 @@ impl SessionRunner {
     /// `ttl` bounds how long terminal entries stay pollable before the
     /// registry evicts them (404 afterwards — documented behavior).
     pub fn with_config(workers: usize, ttl: Duration) -> Arc<SessionRunner> {
+        Self::build(workers, ttl, None)
+    }
+
+    /// A durable runner: every session appends its steps to a WAL under
+    /// `state_dir` (created if absent), and [`SessionRunner::recover`]
+    /// resumes incomplete sessions found there on boot.
+    pub fn with_wal(
+        workers: usize,
+        ttl: Duration,
+        state_dir: impl Into<PathBuf>,
+    ) -> Result<Arc<SessionRunner>> {
+        let dir = state_dir.into();
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| anyhow!("cannot create --state-dir {}: {e}", dir.display()))?;
+        Ok(Self::build(workers, ttl, Some(dir)))
+    }
+
+    fn build(workers: usize, ttl: Duration, wal_dir: Option<PathBuf>) -> Arc<SessionRunner> {
         let shared = Arc::new(RunnerShared {
             queue: Mutex::new(RunQueue::default()),
             queue_cv: Condvar::new(),
@@ -221,6 +331,11 @@ impl SessionRunner {
             started_total: AtomicU64::new(0),
             backoffs_total: AtomicU64::new(0),
             evicted_total: AtomicU64::new(0),
+            cancelled_total: AtomicU64::new(0),
+            recovered_total: AtomicU64::new(0),
+            replay_skipped_terminal: AtomicU64::new(0),
+            wal_bytes: AtomicU64::new(0),
+            wal_dir,
             shutdown: AtomicBool::new(false),
             step_trace: Mutex::new(VecDeque::new()),
         });
@@ -251,7 +366,21 @@ impl SessionRunner {
         rng: Rng,
         metrics: Option<Arc<Metrics>>,
     ) -> Arc<SessionEntry> {
-        self.spawn_capped(protocol, sample, rng, metrics, 0)
+        self.spawn_capped(protocol, sample, rng, metrics, 0, None)
+            .expect("uncapped spawn cannot be refused")
+    }
+
+    /// [`Self::spawn`] with a WAL identity: on a durable runner the
+    /// session's steps are persisted and it survives a crash/restart.
+    pub fn spawn_durable(
+        &self,
+        protocol: &Arc<dyn Protocol>,
+        sample: &Sample,
+        rng: Rng,
+        metrics: Option<Arc<Metrics>>,
+        meta: WalMeta,
+    ) -> Arc<SessionEntry> {
+        self.spawn_capped(protocol, sample, rng, metrics, 0, Some(meta))
             .expect("uncapped spawn cannot be refused")
     }
 
@@ -260,6 +389,8 @@ impl SessionRunner {
     /// compare-and-swap *before* any work, so concurrent spawns can
     /// never overshoot `max_active` (no check-then-act race). Returns
     /// `None` when the cap refused admission — the server's 429 path.
+    /// `meta`, when given on a durable runner, names the session's WAL
+    /// identity (dataset/sample/protocol key) for crash recovery.
     pub fn spawn_capped(
         &self,
         protocol: &Arc<dyn Protocol>,
@@ -267,6 +398,7 @@ impl SessionRunner {
         rng: Rng,
         metrics: Option<Arc<Metrics>>,
         max_active: usize,
+        meta: Option<WalMeta>,
     ) -> Option<Arc<SessionEntry>> {
         // opportunistic registry bounding: every spawn reaps expired
         // terminal entries, so the map never outgrows the live set plus
@@ -290,6 +422,31 @@ impl SessionRunner {
             self.shared.active.fetch_add(1, Ordering::Relaxed);
         }
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
+        // durable sessions get their WAL (with the meta record) *before*
+        // the first step can run: an empty or meta-only log is a valid
+        // recovery point, a step record without a meta is not
+        let wal = match (&self.shared.wal_dir, &meta) {
+            (Some(dir), Some(meta)) => match SessionWal::create(dir, id) {
+                Ok(mut w) => match w.append(&wal::meta_body(meta, &protocol.name(), &rng)) {
+                    Ok(bytes) => {
+                        self.shared.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+                        Some(w)
+                    }
+                    Err(e) => {
+                        eprintln!("wal: session {id}: meta append failed ({e}); not durable");
+                        // remove the partial file: a meta-less log is
+                        // unusable and would clutter every future boot
+                        let _ = std::fs::remove_file(w.path());
+                        None
+                    }
+                },
+                Err(e) => {
+                    eprintln!("wal: session {id}: create failed ({e}); not durable");
+                    None
+                }
+            },
+            _ => None,
+        };
         let entry = Arc::new(SessionEntry {
             id,
             protocol: protocol.name(),
@@ -307,6 +464,8 @@ impl SessionRunner {
                 metrics,
                 started: Instant::now(),
                 finished: None,
+                cancel_requested: false,
+                wal,
             }),
             events_cv: Condvar::new(),
         });
@@ -369,6 +528,53 @@ impl SessionRunner {
         self.shared.evicted_total.load(Ordering::Relaxed)
     }
 
+    /// Sessions cooperatively cancelled so far (the `/metrics` gauge).
+    pub fn cancelled_total(&self) -> u64 {
+        self.shared.cancelled_total.load(Ordering::Relaxed)
+    }
+
+    /// Sessions resumed from the WAL by [`Self::recover`].
+    pub fn recovered_total(&self) -> u64 {
+        self.shared.recovered_total.load(Ordering::Relaxed)
+    }
+
+    /// WAL logs whose last record was terminal at recovery time — found,
+    /// counted, and *not* re-enqueued (the silent-resurrection guard).
+    pub fn replay_skipped_terminal(&self) -> u64 {
+        self.shared.replay_skipped_terminal.load(Ordering::Relaxed)
+    }
+
+    /// Total bytes appended to session WALs by this runner.
+    pub fn wal_bytes(&self) -> u64 {
+        self.shared.wal_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cooperatively cancel session `id`. Returns `None` for an unknown
+    /// (or TTL-evicted) id; otherwise see [`CancelOutcome`]. A queued
+    /// session is finalized `Cancelled` immediately (freeing its
+    /// scheduler slot and waking waiters); a mid-step session is flagged
+    /// and converted by its worker right after the in-flight step
+    /// returns — unless that step *finalizes*, in which case completion
+    /// wins (cancellation is cooperative, never retroactive: a finished
+    /// run stays `Done` and billed).
+    pub fn cancel(&self, id: u64) -> Option<CancelOutcome> {
+        let entry = self.get(id)?;
+        let mut guard = entry.inner.lock().unwrap();
+        let inner = &mut *guard;
+        if inner.status != SessionStatus::Running {
+            return Some(CancelOutcome::AlreadyTerminal);
+        }
+        if inner.session.is_some() {
+            finalize_cancelled(&self.shared, inner, id);
+            drop(guard);
+            entry.events_cv.notify_all();
+            Some(CancelOutcome::Cancelled)
+        } else {
+            inner.cancel_requested = true;
+            Some(CancelOutcome::Cancelling)
+        }
+    }
+
     /// Evict terminal entries older than the TTL. Returns how many were
     /// removed. Runs opportunistically on every `spawn`, throttled to at
     /// most once per `min(ttl/4, 1s)` — the sweep is O(registry), and a
@@ -396,7 +602,14 @@ impl SessionRunner {
             })
             .collect();
         for id in &expired {
-            registry.remove(id);
+            if let Some(entry) = registry.remove(id) {
+                // a terminal session's WAL has served its post-mortem
+                // window: delete it so the state dir stays bounded and a
+                // future recovery has nothing to skip
+                if let Some(w) = entry.inner.lock().unwrap().wal.take() {
+                    let _ = std::fs::remove_file(w.path());
+                }
+            }
         }
         self.shared
             .evicted_total
@@ -409,6 +622,192 @@ impl SessionRunner {
     /// interleaving tests and for diagnostics).
     pub fn step_trace(&self) -> Vec<u64> {
         self.shared.step_trace.lock().unwrap().iter().copied().collect()
+    }
+
+    /// Replay the `--state-dir` WALs on boot: sessions whose log ends in
+    /// a non-terminal record are restored from their last snapshot + rng
+    /// checkpoint and re-enqueued (same session id, events replayed, no
+    /// committed round re-scored); logs ending in a terminal record are
+    /// counted in `wal_replay_skipped_terminal` and deleted, never
+    /// resurrected. Logs that cannot be used (missing meta, unknown
+    /// dataset/protocol, restore failure) are left on disk for
+    /// post-mortem and skipped with a warning.
+    ///
+    /// Call once, after construction and before serving traffic.
+    pub fn recover(
+        &self,
+        datasets: &HashMap<String, Dataset>,
+        protocols: &HashMap<String, Arc<dyn Protocol>>,
+        metrics: Option<Arc<Metrics>>,
+    ) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        let Some(dir) = self.shared.wal_dir.clone() else {
+            return report;
+        };
+        let logs = match wal::scan_dir(&dir) {
+            Ok(logs) => logs,
+            Err(e) => {
+                eprintln!("wal: cannot scan {}: {e}", dir.display());
+                return report;
+            }
+        };
+        for log in logs {
+            // claim every scanned id — including terminal and unusable
+            // logs — so a later spawn can never reuse it and truncate a
+            // file recovery promised to preserve for post-mortem
+            self.shared.next_id.fetch_max(log.id, Ordering::Relaxed);
+            match self.recover_one(&log, datasets, protocols, &metrics) {
+                Ok(true) => report.resumed += 1,
+                Ok(false) => {
+                    report.skipped_terminal += 1;
+                    self.shared
+                        .replay_skipped_terminal
+                        .fetch_add(1, Ordering::Relaxed);
+                    let _ = std::fs::remove_file(&log.path);
+                }
+                Err(e) => {
+                    report.skipped_unusable += 1;
+                    eprintln!(
+                        "wal: session-{}.wal not recoverable ({e}); left for post-mortem",
+                        log.id
+                    );
+                }
+            }
+        }
+        report
+    }
+
+    /// Recover one scanned log. `Ok(true)` = resumed, `Ok(false)` =
+    /// terminal (skip + delete), `Err` = unusable (skip + keep).
+    fn recover_one(
+        &self,
+        log: &ScannedLog,
+        datasets: &HashMap<String, Dataset>,
+        protocols: &HashMap<String, Arc<dyn Protocol>>,
+        metrics: &Option<Arc<Metrics>>,
+    ) -> Result<bool> {
+        let Some(last) = log.records.last() else {
+            return Err(anyhow!("no intact records"));
+        };
+        if wal::is_terminal(last) {
+            return Ok(false);
+        }
+        let meta = &log.records[0];
+        if wal::body_type(meta) != Some("meta") {
+            return Err(anyhow!("first record is not a meta record"));
+        }
+        let version = meta.get("version").and_then(Json::as_u64).unwrap_or(0);
+        if version != wal::WAL_VERSION {
+            return Err(anyhow!("wal version {version}, want {}", wal::WAL_VERSION));
+        }
+        let proto_key = meta
+            .get("proto_key")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("meta missing proto_key"))?;
+        let dataset_name = meta
+            .get("dataset")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("meta missing dataset"))?;
+        let sample_idx = meta
+            .get("sample")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("meta missing sample"))? as usize;
+        let protocol = protocols
+            .get(proto_key)
+            .ok_or_else(|| anyhow!("unknown protocol '{proto_key}'"))?;
+        let sample = datasets
+            .get(dataset_name)
+            .and_then(|ds| ds.samples.get(sample_idx))
+            .ok_or_else(|| anyhow!("unknown sample {dataset_name}/{sample_idx}"))?;
+
+        // resume point: the last step record's snapshot + rng, or the
+        // meta record's initial rng when no step ever committed
+        let steps: Vec<&Json> = log.records[1..]
+            .iter()
+            .filter(|r| wal::body_type(r) == Some("step"))
+            .collect();
+        let (session, rng) = match steps.last() {
+            Some(step) => {
+                let snapshot = step
+                    .get("snapshot")
+                    .ok_or_else(|| anyhow!("step record missing snapshot"))?;
+                let rng = rng_from_json(
+                    step.get("rng")
+                        .ok_or_else(|| anyhow!("step record missing rng"))?,
+                )?;
+                (protocol.restore(sample, snapshot)?, rng)
+            }
+            None => {
+                let rng = rng_from_json(
+                    meta.get("rng").ok_or_else(|| anyhow!("meta missing rng"))?,
+                )?;
+                (protocol.session(sample), rng)
+            }
+        };
+
+        // replay the event log into the entry so status polls and
+        // `/events` streams pick up exactly where the old process left off
+        let mut events = Vec::new();
+        let mut rounds = 0usize;
+        let mut backoffs = 0u64;
+        for step in &steps {
+            let ev = event_from_json(
+                step.get("event")
+                    .ok_or_else(|| anyhow!("step record missing event"))?,
+            )?;
+            match &ev {
+                SessionEvent::Planned { round, .. }
+                | SessionEvent::RoundExecuted { round, .. } => rounds = *round,
+                SessionEvent::Backoff => backoffs += 1,
+                SessionEvent::Finalized(_) => {
+                    return Err(anyhow!("finalized event in a non-terminal log"))
+                }
+            }
+            if let Some(line) = progress_line(&ev) {
+                events.push(line);
+            }
+        }
+
+        // re-open the WAL at its valid prefix (truncating any torn tail)
+        let wal = SessionWal::reopen(&log.path, log.valid_len, log.records.len() as u64)
+            .map_err(|e| anyhow!("cannot reopen wal: {e}"))?;
+
+        // (the id was already claimed against next_id by the recover()
+        // loop, which does it for every scanned log, not just resumable
+        // ones)
+        let id = log.id;
+        let entry = Arc::new(SessionEntry {
+            id,
+            protocol: protocol.name(),
+            inner: Mutex::new(EntryInner {
+                session: Some(session),
+                rng,
+                status: SessionStatus::Running,
+                events,
+                rounds,
+                steps: steps.len() as u64,
+                backoffs,
+                backoff_streak: 0,
+                result: None,
+                truth: sample.query.answer.clone(),
+                metrics: metrics.clone(),
+                started: Instant::now(),
+                finished: None,
+                cancel_requested: false,
+                wal: Some(wal),
+            }),
+            events_cv: Condvar::new(),
+        });
+        self.shared
+            .registry
+            .lock()
+            .unwrap()
+            .insert(id, Arc::clone(&entry));
+        self.shared.active.fetch_add(1, Ordering::Relaxed);
+        self.shared.recovered_total.fetch_add(1, Ordering::Relaxed);
+        self.shared.queue.lock().unwrap().ready.push_back(id);
+        self.shared.queue_cv.notify_one();
+        Ok(true)
     }
 
     /// Stop the workers. In-flight steps finish; queued-but-unfinished
@@ -459,6 +858,88 @@ impl Drop for SessionRunner {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// The status/stream JSON line for a non-terminal progress event
+/// (`Backoff` intentionally yields none — a long saturation would flood
+/// the stream). Shared by the live step path and WAL replay, so a
+/// recovered session's event stream is byte-identical to the original.
+fn progress_line(ev: &SessionEvent) -> Option<String> {
+    match ev {
+        SessionEvent::Planned { round, jobs } => Some(
+            Json::obj(vec![
+                ("event", Json::str("planned")),
+                ("round", Json::num(*round as f64)),
+                ("jobs", Json::num(*jobs as f64)),
+            ])
+            .to_string(),
+        ),
+        SessionEvent::RoundExecuted {
+            round,
+            jobs,
+            survivors,
+        } => Some(
+            Json::obj(vec![
+                ("event", Json::str("round_executed")),
+                ("round", Json::num(*round as f64)),
+                ("jobs", Json::num(*jobs as f64)),
+                ("survivors", Json::num(*survivors as f64)),
+            ])
+            .to_string(),
+        ),
+        SessionEvent::Backoff | SessionEvent::Finalized(_) => None,
+    }
+}
+
+/// Append `body` to the entry's WAL (if durable), tracking `wal_bytes`.
+/// An append failure is loud but non-fatal: the session keeps running,
+/// it just stops being durable from here on.
+///
+/// Deliberate tradeoff: the append (flush + fsync) runs under the entry
+/// lock, so a status poll or cancel issued mid-append waits out one
+/// fsync. That serializes the two WAL writers (the stepping worker and
+/// the queued-path cancel) through a single seq counter and keeps
+/// durability-before-observability trivially correct; with per-step
+/// fsyncs bounded by protocol-step granularity the contention window is
+/// small. Revisit only if poll latency under durable load ever shows up
+/// in the lane-wait gauges.
+fn wal_append(shared: &RunnerShared, inner: &mut EntryInner, id: u64, body: &Json) {
+    if let Some(w) = inner.wal.as_mut() {
+        match w.append(body) {
+            Ok(bytes) => {
+                shared.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+            }
+            Err(e) => {
+                eprintln!("wal: session {id}: append failed ({e}); dropping the log");
+                // delete, don't just abandon: a stale non-terminal log
+                // would make the next boot resurrect and re-run a
+                // session that may well complete in *this* process —
+                // losing durability for this session is strictly better
+                // than duplicating its work after a restart
+                if let Some(w) = inner.wal.take() {
+                    let _ = std::fs::remove_file(w.path());
+                }
+            }
+        }
+    }
+}
+
+/// Terminal-cancel transition. Caller holds the entry lock (and must
+/// notify `events_cv` after dropping it). Frees the scheduler slot,
+/// persists the `cancelled` record so recovery never resurrects the
+/// session, and emits the terminal event line.
+fn finalize_cancelled(shared: &RunnerShared, inner: &mut EntryInner, id: u64) {
+    debug_assert_eq!(inner.status, SessionStatus::Running);
+    wal_append(shared, inner, id, &wal::cancelled_body());
+    inner
+        .events
+        .push(Json::obj(vec![("event", Json::str("cancelled"))]).to_string());
+    inner.status = SessionStatus::Cancelled;
+    inner.finished = Some(Instant::now());
+    inner.session = None;
+    inner.cancel_requested = false;
+    shared.active.fetch_sub(1, Ordering::Relaxed);
+    shared.cancelled_total.fetch_add(1, Ordering::Relaxed);
 }
 
 /// Jittered exponential backoff: 2·2^streak ms (capped at 64 ms) plus up
@@ -554,55 +1035,57 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> StepOutco
         session.step(&mut rng)
     };
 
-    let mut inner = entry.inner.lock().unwrap();
+    let mut guard = entry.inner.lock().unwrap();
+    let inner = &mut *guard;
     inner.rng = rng;
     inner.steps += 1;
-    let outcome = match stepped {
-        Ok(SessionEvent::Planned { round, jobs }) => {
-            inner.rounds = round;
-            inner.backoff_streak = 0;
-            inner.events.push(
-                Json::obj(vec![
-                    ("event", Json::str("planned")),
-                    ("round", Json::num(round as f64)),
-                    ("jobs", Json::num(jobs as f64)),
-                ])
-                .to_string(),
-            );
-            inner.session = Some(session);
-            StepOutcome::Continue
-        }
-        Ok(SessionEvent::RoundExecuted {
-            round,
-            jobs,
-            survivors,
-        }) => {
-            inner.rounds = round;
-            inner.backoff_streak = 0;
-            inner.events.push(
-                Json::obj(vec![
-                    ("event", Json::str("round_executed")),
-                    ("round", Json::num(round as f64)),
-                    ("jobs", Json::num(jobs as f64)),
-                    ("survivors", Json::num(survivors as f64)),
-                ])
-                .to_string(),
-            );
-            inner.session = Some(session);
-            StepOutcome::Continue
-        }
+    let mut outcome = match stepped {
         Ok(SessionEvent::Backoff) => {
             // saturated scheduler: park the session and retry later. No
             // event line — a long saturation would flood the stream; the
             // count is visible in the status body and /metrics instead.
+            // The WAL still records the checkpoint (rng was rewound, so
+            // it equals the pre-step one; the snapshot may carry state —
+            // e.g. MinionS keeps completed local outputs across a
+            // backed-off synthesis, so a crash mid-saturation doesn't
+            // re-buy them).
             inner.backoffs += 1;
             inner.backoff_streak = inner.backoff_streak.saturating_add(1);
             shared.backoffs_total.fetch_add(1, Ordering::Relaxed);
+            // coalesce the streak: retries 2..n are byte-identical to
+            // retry 1 (no rng consumed, no state mutated), so only the
+            // first backoff after a productive step hits the disk — a
+            // minute of saturation must not fsync hundreds of identical
+            // snapshots
+            if inner.backoff_streak == 1 {
+                let body =
+                    wal::step_body(&SessionEvent::Backoff, &inner.rng, session.snapshot());
+                wal_append(shared, inner, entry.id, &body);
+            }
             inner.session = Some(session);
             StepOutcome::Backoff(backoff_delay(entry.id, inner.backoff_streak - 1))
         }
+        Ok(ev @ (SessionEvent::Planned { .. } | SessionEvent::RoundExecuted { .. })) => {
+            if let SessionEvent::Planned { round, .. }
+            | SessionEvent::RoundExecuted { round, .. } = &ev
+            {
+                inner.rounds = *round;
+            }
+            inner.backoff_streak = 0;
+            // durability before observability: the record lands (fsync'd)
+            // before the event line becomes visible to streams/polls
+            let body = wal::step_body(&ev, &inner.rng, session.snapshot());
+            wal_append(shared, inner, entry.id, &body);
+            if let Some(line) = progress_line(&ev) {
+                inner.events.push(line);
+            }
+            inner.session = Some(session);
+            StepOutcome::Continue
+        }
         Ok(SessionEvent::Finalized(outcome)) => {
             inner.rounds = outcome.rounds;
+            let body = wal::finalized_body(&outcome, &inner.rng);
+            wal_append(shared, inner, entry.id, &body);
             let latency = inner.started.elapsed();
             let score = score_strict(&outcome.answer, &inner.truth);
             if let Some(metrics) = &inner.metrics {
@@ -646,6 +1129,8 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> StepOutco
         }
         Err(e) => {
             let msg = e.to_string();
+            let body = wal::failed_body(&msg);
+            wal_append(shared, inner, entry.id, &body);
             inner.events.push(
                 Json::obj(vec![
                     ("event", Json::str("failed")),
@@ -663,6 +1148,16 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> StepOutco
             StepOutcome::Terminal
         }
     };
+    // cooperative cancellation checkpoint: a cancel that arrived while
+    // the step was in flight converts the session now, between steps —
+    // the completed step's work is already persisted above, so the
+    // terminal `cancelled` record lands after it and recovery sees a
+    // cleanly-ended log
+    if inner.cancel_requested && inner.status == SessionStatus::Running {
+        finalize_cancelled(shared, inner, entry.id);
+        outcome = StepOutcome::Terminal;
+    }
+    drop(guard);
     entry.events_cv.notify_all();
     outcome
 }

@@ -1,0 +1,444 @@
+//! Per-session write-ahead event log: the durability substrate behind
+//! `--state-dir` (DESIGN.md §8).
+//!
+//! Every [`ProtocolSession::step`] a `SessionRunner` executes appends one
+//! NDJSON record to `<state-dir>/session-<id>.wal` *before* the step's
+//! effects become observable to clients. A record is
+//!
+//! ```text
+//! {"crc":"<crc32 hex>","seq":<n>,"body":{...}}\n
+//! ```
+//!
+//! where `crc` is the IEEE CRC-32 of the canonically serialized `body`
+//! and `seq` is a 0-based monotonic sequence number. Body types:
+//!
+//! | type        | carries                                              |
+//! |-------------|------------------------------------------------------|
+//! | `meta`      | protocol registry key + name, dataset, sample, seed rng |
+//! | `step`      | a non-terminal event, post-step rng checkpoint, and the session's state snapshot |
+//! | `finalized` | the full `Outcome` (answer, ledger, transcript) + rng |
+//! | `failed`    | the error message (terminal)                         |
+//! | `cancelled` | nothing — the cooperative-cancel terminal marker     |
+//!
+//! Recovery (`SessionRunner::recover`) scans the directory, validates
+//! each log's longest intact prefix — a torn or corrupt tail (partial
+//! final line, CRC mismatch, sequence gap) is truncated, never trusted —
+//! and resumes sessions whose last record is non-terminal from the
+//! recorded snapshot + rng checkpoint. Logs ending in a terminal record
+//! are *not* re-enqueued (`wal_replay_skipped_terminal`): a finalized,
+//! failed, or cancelled session must never resurrect after a restart.
+//!
+//! The serde here relies on the canonical writer in `util::json`
+//! (BTreeMap key order, shortest-round-trip floats): `parse ∘ to_string`
+//! is the identity on anything this module wrote, so CRCs recompute
+//! stably and a recovered run re-appends byte-identical records — the
+//! property `tests/durability.rs` pins by diffing whole WAL files.
+
+use crate::protocol::{event_to_json, rng_to_json, Outcome, SessionEvent};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Bumped when the record schema changes incompatibly; recovery refuses
+/// logs from a different version instead of misreading them.
+pub const WAL_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------
+// CRC-32 (IEEE 802.3), table-driven, built at compile time.
+// ---------------------------------------------------------------------
+
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------
+// Record framing.
+// ---------------------------------------------------------------------
+
+/// Frame one record line (trailing newline included).
+pub fn encode_record(seq: u64, body: &Json) -> String {
+    let body_s = body.to_string();
+    let crc = crc32(body_s.as_bytes());
+    format!("{{\"crc\":\"{crc:08x}\",\"seq\":{seq},\"body\":{body_s}}}\n")
+}
+
+/// Parse and validate one record line (no trailing newline). Any
+/// failure — bad JSON, missing fields, CRC mismatch, wrong sequence
+/// number — renders the line (and everything after it) untrusted.
+pub fn decode_record(line: &str, want_seq: u64) -> Result<Json, String> {
+    let v = Json::parse(line).map_err(|e| format!("unparseable record: {e}"))?;
+    let crc_hex = v
+        .get("crc")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing crc".to_string())?;
+    let seq = v
+        .get("seq")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "missing seq".to_string())?;
+    if seq != want_seq {
+        return Err(format!("sequence gap: record {seq}, want {want_seq}"));
+    }
+    let body = v.get("body").ok_or_else(|| "missing body".to_string())?;
+    let want = u32::from_str_radix(crc_hex, 16).map_err(|_| format!("bad crc '{crc_hex}'"))?;
+    let got = crc32(body.to_string().as_bytes());
+    if got != want {
+        return Err(format!("crc mismatch: {got:08x} != {want:08x}"));
+    }
+    Ok(body.clone())
+}
+
+// ---------------------------------------------------------------------
+// Body payloads.
+// ---------------------------------------------------------------------
+
+/// The identity a session needs to be rebuilt against a server's
+/// preloaded state: which dataset/sample it runs over and which registry
+/// entry (`proto_key`) owns it.
+#[derive(Clone, Debug)]
+pub struct WalMeta {
+    pub proto_key: String,
+    pub dataset: String,
+    pub sample: usize,
+}
+
+pub fn meta_body(meta: &WalMeta, proto_name: &str, rng: &Rng) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("meta")),
+        ("version", Json::num(WAL_VERSION as f64)),
+        ("proto_key", Json::str(meta.proto_key.clone())),
+        ("proto_name", Json::str(proto_name.to_string())),
+        ("dataset", Json::str(meta.dataset.clone())),
+        ("sample", Json::num(meta.sample as f64)),
+        ("rng", rng_to_json(rng)),
+    ])
+}
+
+/// A non-terminal step: the event, the post-step rng checkpoint, and the
+/// session's serialized state (what [`Protocol::restore`] consumes).
+pub fn step_body(event: &SessionEvent, rng: &Rng, snapshot: Json) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("step")),
+        ("event", event_to_json(event)),
+        ("rng", rng_to_json(rng)),
+        ("snapshot", snapshot),
+    ])
+}
+
+pub fn finalized_body(outcome: &Outcome, rng: &Rng) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("finalized")),
+        (
+            "event",
+            event_to_json(&SessionEvent::Finalized(outcome.clone())),
+        ),
+        ("rng", rng_to_json(rng)),
+    ])
+}
+
+pub fn failed_body(error: &str) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("failed")),
+        ("error", Json::str(error.to_string())),
+    ])
+}
+
+pub fn cancelled_body() -> Json {
+    Json::obj(vec![("type", Json::str("cancelled"))])
+}
+
+pub fn body_type(body: &Json) -> Option<&str> {
+    body.get("type").and_then(Json::as_str)
+}
+
+/// Whether this record ends the session's lifecycle. Recovery must not
+/// re-enqueue a log whose last record is terminal.
+pub fn is_terminal(body: &Json) -> bool {
+    matches!(body_type(body), Some("finalized" | "failed" | "cancelled"))
+}
+
+// ---------------------------------------------------------------------
+// The append handle.
+// ---------------------------------------------------------------------
+
+pub fn wal_path(dir: &Path, id: u64) -> PathBuf {
+    dir.join(format!("session-{id}.wal"))
+}
+
+/// Parse a session id back out of a `session-<id>.wal` file name.
+pub fn parse_wal_name(name: &str) -> Option<u64> {
+    name.strip_prefix("session-")?.strip_suffix(".wal")?.parse().ok()
+}
+
+/// Append handle for one session's log. Every append is flushed and
+/// fsync'd before returning — a record the runner acted on is durable.
+pub struct SessionWal {
+    path: PathBuf,
+    file: File,
+    next_seq: u64,
+}
+
+impl SessionWal {
+    /// Create (truncating) a fresh log for session `id`.
+    pub fn create(dir: &Path, id: u64) -> io::Result<SessionWal> {
+        let path = wal_path(dir, id);
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(SessionWal {
+            path,
+            file,
+            next_seq: 0,
+        })
+    }
+
+    /// Reopen an existing log for appending after recovery validated its
+    /// intact prefix: the file is truncated to `valid_len` (discarding
+    /// any torn tail) and appends continue at `next_seq`.
+    pub fn reopen(path: &Path, valid_len: u64, next_seq: u64) -> io::Result<SessionWal> {
+        let file = OpenOptions::new().write(true).open(path)?;
+        file.set_len(valid_len)?;
+        let mut wal = SessionWal {
+            path: path.to_path_buf(),
+            file,
+            next_seq,
+        };
+        wal.file.seek(SeekFrom::Start(valid_len))?;
+        Ok(wal)
+    }
+
+    /// Append one record; returns the bytes written (for `wal_bytes`).
+    pub fn append(&mut self, body: &Json) -> io::Result<u64> {
+        let line = encode_record(self.next_seq, body);
+        self.file.write_all(line.as_bytes())?;
+        self.file.flush()?;
+        self.file.sync_data()?;
+        self.next_seq += 1;
+        Ok(line.len() as u64)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+// ---------------------------------------------------------------------
+// Directory scan (recovery input).
+// ---------------------------------------------------------------------
+
+/// One scanned log: the decoded bodies of its longest intact prefix.
+pub struct ScannedLog {
+    pub id: u64,
+    pub path: PathBuf,
+    pub records: Vec<Json>,
+    /// byte length of the valid prefix (reopen truncates to this)
+    pub valid_len: u64,
+    /// true when a torn/corrupt tail was discarded
+    pub torn: bool,
+}
+
+/// Scan every `session-<id>.wal` under `dir`, sorted by id. A file that
+/// cannot even be read (I/O error) is returned as a record-less
+/// `ScannedLog` rather than dropped: recovery must still *claim its id*
+/// — otherwise a later spawn could reuse it and `SessionWal::create`
+/// (O_TRUNC) would destroy the very file being preserved for
+/// post-mortem. It then flows through the normal "unusable, keep on
+/// disk" path.
+pub fn scan_dir(dir: &Path) -> io::Result<Vec<ScannedLog>> {
+    let mut logs = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some(id) = parse_wal_name(name) else {
+            continue;
+        };
+        match scan_file(id, &entry.path()) {
+            Ok(log) => logs.push(log),
+            Err(e) => {
+                eprintln!("wal: cannot read {name}: {e}");
+                logs.push(ScannedLog {
+                    id,
+                    path: entry.path(),
+                    records: Vec::new(),
+                    valid_len: 0,
+                    torn: true,
+                });
+            }
+        }
+    }
+    logs.sort_by_key(|l| l.id);
+    Ok(logs)
+}
+
+/// Validate one log file: decode records until the first torn or corrupt
+/// line, which (with everything after it) is discarded.
+pub fn scan_file(id: u64, path: &Path) -> io::Result<ScannedLog> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    let mut records = Vec::new();
+    let mut valid_len = 0usize;
+    let mut torn = bytes.is_empty();
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let Some(nl) = bytes[pos..].iter().position(|b| *b == b'\n') else {
+            // final line has no newline: a torn append
+            torn = true;
+            break;
+        };
+        let line_end = pos + nl;
+        let ok = match std::str::from_utf8(&bytes[pos..line_end]) {
+            Ok(line) => match decode_record(line, records.len() as u64) {
+                Ok(body) => {
+                    records.push(body);
+                    true
+                }
+                Err(e) => {
+                    eprintln!(
+                        "wal: session-{id}.wal record {}: {e}; truncating tail",
+                        records.len()
+                    );
+                    false
+                }
+            },
+            Err(_) => false,
+        };
+        if !ok {
+            torn = true;
+            break;
+        }
+        pos = line_end + 1;
+        valid_len = pos;
+    }
+    if pos < bytes.len() {
+        torn = true;
+    }
+    Ok(ScannedLog {
+        id,
+        path: path.to_path_buf(),
+        records,
+        valid_len: valid_len as u64,
+        torn,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_reference_vector() {
+        // the canonical IEEE CRC-32 check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn record_round_trips() {
+        let body = Json::obj(vec![
+            ("type", Json::str("step")),
+            ("note", Json::str("quote \" and\nnewline")),
+        ]);
+        let line = encode_record(3, &body);
+        assert!(line.ends_with('\n'));
+        let back = decode_record(line.trim_end(), 3).unwrap();
+        assert_eq!(back, body);
+        // wrong expected seq = sequence gap = untrusted
+        assert!(decode_record(line.trim_end(), 4).is_err());
+    }
+
+    #[test]
+    fn corrupted_byte_fails_crc() {
+        let body = Json::obj(vec![("type", Json::str("cancelled"))]);
+        let line = encode_record(0, &body);
+        // flip a byte inside the body payload
+        let bad = line.replace("cancelled", "cancelleD");
+        assert!(decode_record(bad.trim_end(), 0).is_err());
+    }
+
+    #[test]
+    fn scan_truncates_torn_tail_and_reports_prefix() {
+        let dir = std::env::temp_dir().join(format!("wal-scan-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut wal = SessionWal::create(&dir, 7).unwrap();
+        let b0 = meta_body(
+            &WalMeta {
+                proto_key: "p".into(),
+                dataset: "d".into(),
+                sample: 0,
+            },
+            "proto",
+            &Rng::seed_from(1),
+        );
+        let b1 = cancelled_body();
+        wal.append(&b0).unwrap();
+        let full = wal.append(&b1).unwrap();
+        let path = wal.path().to_path_buf();
+        drop(wal);
+
+        // intact: both records, not torn
+        let log = scan_file(7, &path).unwrap();
+        assert_eq!(log.records.len(), 2);
+        assert!(!log.torn);
+        assert!(is_terminal(&log.records[1]));
+        assert!(!is_terminal(&log.records[0]));
+
+        // torn: cut the second record in half
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = bytes.len() - (full as usize) / 2;
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let log = scan_file(7, &path).unwrap();
+        assert_eq!(log.records.len(), 1, "torn tail must be discarded");
+        assert!(log.torn);
+        assert_eq!(log.valid_len as usize, bytes.len() - full as usize);
+
+        // reopen at the valid prefix and re-append: byte-identical file
+        let mut wal = SessionWal::reopen(&path, log.valid_len, 1).unwrap();
+        wal.append(&b1).unwrap();
+        drop(wal);
+        assert_eq!(std::fs::read(&path).unwrap(), bytes);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wal_names_round_trip() {
+        assert_eq!(parse_wal_name("session-42.wal"), Some(42));
+        assert_eq!(parse_wal_name("session-.wal"), None);
+        assert_eq!(parse_wal_name("other.txt"), None);
+        let p = wal_path(Path::new("/tmp/x"), 9);
+        assert_eq!(parse_wal_name(p.file_name().unwrap().to_str().unwrap()), Some(9));
+    }
+}

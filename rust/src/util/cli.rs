@@ -106,8 +106,21 @@ impl Cli {
         )
         .opt(
             "lane-weights",
-            "interactive:batch WFQ ratio, e.g. 4:1",
+            "interactive:batch WFQ ratio, e.g. 4:1 (both weights must be >= 1)",
             Some("4:1"),
+        )
+    }
+
+    /// The durability knob for the serving stack: when set, every
+    /// session's events are written-ahead to `<dir>/session-<id>.wal`
+    /// and incomplete sessions are recovered (resumed from their last
+    /// checkpoint) on the next boot. Empty disables durability.
+    pub fn state_dir_opt(self) -> Self {
+        self.opt(
+            "state-dir",
+            "directory for per-session write-ahead logs; crash recovery \
+             resumes incomplete sessions from here on boot (empty = off)",
+            Some(""),
         )
     }
 
@@ -228,6 +241,17 @@ mod tests {
             .parse_from(vec!["--parallel".to_string(), "8".to_string()])
             .unwrap();
         assert_eq!(a.parse_num("parallel", 0usize), 8);
+    }
+
+    #[test]
+    fn state_dir_defaults_off_and_parses() {
+        let c = Cli::new("t", "t").state_dir_opt();
+        let a = c.parse_from(Vec::<String>::new()).unwrap();
+        assert_eq!(a.get("state-dir"), Some(""));
+        let a = c
+            .parse_from(vec!["--state-dir".to_string(), "/tmp/wal".to_string()])
+            .unwrap();
+        assert_eq!(a.get("state-dir"), Some("/tmp/wal"));
     }
 
     #[test]

@@ -47,6 +47,18 @@ impl Rng {
         Rng::seed_from(self.next_u64() ^ tag.wrapping_mul(0xA24B_AED4_963E_E407))
     }
 
+    /// The raw 256-bit state — the durability checkpoint the session WAL
+    /// persists after every step (`server::wal`). Restoring via
+    /// [`Rng::from_state`] resumes the stream exactly where it left off.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild an rng at a previously captured [`Rng::state`] checkpoint.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
@@ -150,6 +162,18 @@ mod tests {
     fn deterministic_across_instances() {
         let mut a = Rng::seed_from(42);
         let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_round_trips_mid_stream() {
+        let mut a = Rng::seed_from(37);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }

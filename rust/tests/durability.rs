@@ -1,0 +1,495 @@
+//! Deterministic fault-injection suite for the session WAL (DESIGN.md
+//! §8). The discipline is the same bit-identity `cache_parity.rs` and
+//! `sched_fairness.rs` pin elsewhere: a crash is simulated by truncating
+//! (or corrupting) the log at a record boundary, a "restarted server" is
+//! a fresh scoring stack + runner recovering the directory, and the
+//! assertion is that the recovered run's **entire WAL** — every event,
+//! rng checkpoint, snapshot, ledger total, and the final answer — is
+//! byte-identical to the uninterrupted run's, for every protocol and
+//! every kill point.
+//!
+//! Run with `--test-threads=1` (the CI `durability` job does): the
+//! pseudo-backend stacks are cheap but each case spins its own batcher
+//! worker, and serial execution keeps the WAL corpus readable when a
+//! failure uploads it.
+
+mod testutil;
+
+use minions::data::Sample;
+use minions::protocol::{Protocol, ProtocolSession, SessionEvent};
+use minions::server::session::{CancelOutcome, SessionRunner, SessionStatus};
+use minions::server::wal::{self, WalMeta};
+use minions::util::json::Json;
+use minions::util::rng::Rng;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+use testutil::{case_dir, datasets, protocols, read_wal_lines, stack, write_wal, Gate};
+
+const SEED: u64 = 11;
+const TTL: Duration = Duration::from_secs(600);
+
+/// All five protocol families, plus the forced-two-round MinionS that
+/// guarantees a multi-round WAL (the acceptance case).
+const SWEEP: [&str; 6] = ["minions-2r", "minions", "minion", "local", "remote", "rag"];
+
+struct Baseline {
+    id: u64,
+    lines: Vec<String>,
+    rng_final: [u64; 4],
+    outcome: String,
+}
+
+fn wal_meta(proto_key: &str, sample: usize) -> WalMeta {
+    WalMeta {
+        proto_key: proto_key.to_string(),
+        dataset: "micro".to_string(),
+        sample,
+    }
+}
+
+/// The `body.event.outcome` payload of a WAL's finalized record.
+fn finalized_outcome(lines: &[String]) -> String {
+    let last = Json::parse(lines.last().expect("nonempty wal")).expect("parse record");
+    let body = last.get("body").expect("body");
+    assert_eq!(
+        body.get("type").and_then(Json::as_str),
+        Some("finalized"),
+        "last record must be the finalized one: {body}"
+    );
+    body.get("event")
+        .and_then(|e| e.get("outcome"))
+        .expect("finalized outcome")
+        .to_string()
+}
+
+/// Run `proto_key` over sample `sample` to completion on a durable
+/// runner; return the full WAL and the terminal rng state.
+fn run_baseline(case: &str, proto_key: &str, sample: usize) -> Baseline {
+    let dir = case_dir(case);
+    let s = stack();
+    let protos = protocols(&s);
+    let ds = datasets();
+    let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+    let proto = protos.get(proto_key).unwrap();
+    let sample_ref = &ds.get("micro").unwrap().samples[sample];
+    let entry = runner.spawn_durable(
+        proto,
+        sample_ref,
+        Rng::seed_from(SEED ^ sample as u64),
+        None,
+        wal_meta(proto_key, sample),
+    );
+    assert_eq!(
+        entry.wait_done(),
+        SessionStatus::Done,
+        "{proto_key} baseline must finish: {}",
+        entry.status_json()
+    );
+    let rng_final = entry.rng_state();
+    let id = entry.id;
+    runner.shutdown();
+    s.batcher.stop();
+    let lines = read_wal_lines(&wal::wal_path(&dir, id));
+    let outcome = finalized_outcome(&lines);
+    Baseline {
+        id,
+        lines,
+        rng_final,
+        outcome,
+    }
+}
+
+/// "Restart the server" over `dir`: fresh stack, recover, drive the
+/// resumed session (if any) to completion. Returns the recovery report
+/// and, when a session resumed, its final WAL lines + rng state.
+fn recover_dir(
+    dir: &Path,
+    id: u64,
+) -> (
+    minions::server::session::RecoveryReport,
+    Option<(Vec<String>, [u64; 4])>,
+) {
+    let s = stack();
+    let protos = protocols(&s);
+    let ds = datasets();
+    let runner = SessionRunner::with_wal(1, TTL, dir).unwrap();
+    let report = runner.recover(&ds, &protos, None);
+    let result = if report.resumed > 0 {
+        let entry = runner.get(id).expect("recovered session is registered");
+        assert_eq!(
+            entry.wait_done(),
+            SessionStatus::Done,
+            "recovered session must finish: {}",
+            entry.status_json()
+        );
+        let rng = entry.rng_state();
+        Some((read_wal_lines(&wal::wal_path(dir, id)), rng))
+    } else {
+        None
+    };
+    runner.shutdown();
+    s.batcher.stop();
+    (report, result)
+}
+
+/// The property sweep: for each protocol, kill after every record
+/// boundary and assert the recovered run is bit-identical to the
+/// uninterrupted one — same WAL bytes (events, rng checkpoints,
+/// snapshots, ledger, answer), same terminal rng state.
+#[test]
+fn kill_and_recover_at_every_record_boundary_is_bit_identical() {
+    for proto_key in SWEEP {
+        let base = run_baseline(&format!("base-{proto_key}"), proto_key, 0);
+        let n = base.lines.len();
+        assert!(n >= 2, "{proto_key}: wal has meta + finalized at least");
+        for cut in 1..n {
+            let dir = case_dir(&format!("cut-{proto_key}-{cut}"));
+            write_wal(&wal::wal_path(&dir, base.id), &base.lines[..cut], None);
+            let (report, result) = recover_dir(&dir, base.id);
+            assert_eq!(
+                report.resumed, 1,
+                "{proto_key} cut {cut}: incomplete log must resume"
+            );
+            let (lines, rng) = result.unwrap();
+            assert_eq!(
+                lines, base.lines,
+                "{proto_key} cut {cut}: recovered WAL must be byte-identical"
+            );
+            assert_eq!(
+                rng, base.rng_final,
+                "{proto_key} cut {cut}: rng stream must land on the same state"
+            );
+            assert_eq!(
+                finalized_outcome(&lines),
+                base.outcome,
+                "{proto_key} cut {cut}: answer/ledger must match"
+            );
+        }
+    }
+}
+
+/// The forced-two-round acceptance case really is multi-round: two
+/// planned events, at least one executed round, five+ records.
+#[test]
+fn forced_two_round_baseline_has_the_full_record_sequence() {
+    let base = run_baseline("shape-minions-2r", "minions-2r", 0);
+    let kinds: Vec<String> = base
+        .lines
+        .iter()
+        .map(|l| {
+            let v = Json::parse(l).unwrap();
+            let body = v.get("body").unwrap();
+            match body.get("type").and_then(Json::as_str).unwrap() {
+                "step" => body
+                    .get("event")
+                    .and_then(|e| e.get("kind"))
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .to_string(),
+                t => t.to_string(),
+            }
+        })
+        .collect();
+    assert_eq!(
+        kinds,
+        vec![
+            "meta",
+            "planned",
+            "round_executed",
+            "planned",
+            "finalized"
+        ],
+        "expected the canonical 2-round MinionS record sequence"
+    );
+}
+
+/// Torn-write simulation: a partial final line (the state a crash
+/// mid-append leaves) must be discarded, and recovery from the intact
+/// prefix must still converge to the bit-identical baseline. A corrupted
+/// byte in the tail record (CRC mismatch) gets the same treatment.
+#[test]
+fn torn_and_corrupt_tails_recover_like_the_clean_prefix() {
+    let base = run_baseline("base-torn", "minions-2r", 1);
+    let n = base.lines.len();
+    for cut in 1..n {
+        // torn: half of the next record made it to disk
+        let torn = &base.lines[cut].as_bytes()[..base.lines[cut].len() / 2];
+        let dir = case_dir(&format!("torn-{cut}"));
+        write_wal(&wal::wal_path(&dir, base.id), &base.lines[..cut], Some(torn));
+        let (report, result) = recover_dir(&dir, base.id);
+        assert_eq!(report.resumed, 1, "torn cut {cut} must resume");
+        let (lines, rng) = result.unwrap();
+        assert_eq!(lines, base.lines, "torn cut {cut}: bit-identical WAL");
+        assert_eq!(rng, base.rng_final, "torn cut {cut}: rng state");
+
+        // corrupt: the last kept record's payload has a flipped byte —
+        // its CRC fails, so recovery must fall back to the records
+        // before it (never trust a corrupt record)
+        if cut >= 2 {
+            let mut kept: Vec<String> = base.lines[..cut].to_vec();
+            let idx = cut - 1;
+            let corrupted = kept[idx].replacen("\"type\":\"step\"", "\"type\":\"steP\"", 1);
+            assert_ne!(corrupted, kept[idx], "corruption must actually land");
+            kept[idx] = corrupted;
+            let dir = case_dir(&format!("corrupt-{cut}"));
+            write_wal(&wal::wal_path(&dir, base.id), &kept, None);
+            let (report, result) = recover_dir(&dir, base.id);
+            assert_eq!(report.resumed, 1, "corrupt cut {cut} must resume");
+            let (lines, rng) = result.unwrap();
+            assert_eq!(lines, base.lines, "corrupt cut {cut}: bit-identical WAL");
+            assert_eq!(rng, base.rng_final, "corrupt cut {cut}: rng state");
+        }
+    }
+}
+
+/// The silent-resurrection guard: a WAL whose last record is terminal
+/// (finalized here, cancelled below) is counted, deleted, and never
+/// re-enqueued.
+#[test]
+fn terminal_logs_are_skipped_not_resurrected() {
+    let base = run_baseline("base-terminal", "minions-2r", 2);
+    // finalized log
+    let dir = case_dir("terminal-finalized");
+    let path = wal::wal_path(&dir, base.id);
+    write_wal(&path, &base.lines, None);
+    let s = stack();
+    let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+    let report = runner.recover(&datasets(), &protocols(&s), None);
+    assert_eq!(report.resumed, 0);
+    assert_eq!(report.skipped_terminal, 1);
+    assert_eq!(runner.replay_skipped_terminal(), 1);
+    assert!(runner.get(base.id).is_none(), "must not re-register");
+    assert_eq!(runner.active(), 0, "must not consume a slot");
+    assert!(!path.exists(), "terminal log is deleted after the skip");
+    runner.shutdown();
+    s.batcher.stop();
+
+    // cancelled log: mid-run prefix + a cancelled terminal record
+    let dir = case_dir("terminal-cancelled");
+    let path = wal::wal_path(&dir, base.id);
+    let keep = 2.min(base.lines.len() - 1);
+    let mut lines: Vec<String> = base.lines[..keep].to_vec();
+    let cancel_line = wal::encode_record(keep as u64, &wal::cancelled_body());
+    lines.push(cancel_line.trim_end().to_string());
+    write_wal(&path, &lines, None);
+    let s = stack();
+    let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+    let report = runner.recover(&datasets(), &protocols(&s), None);
+    assert_eq!(report.resumed, 0);
+    assert_eq!(report.skipped_terminal, 1);
+    assert!(runner.get(base.id).is_none(), "cancelled session never reappears");
+    assert!(!path.exists());
+    runner.shutdown();
+    s.batcher.stop();
+}
+
+// ---------------------------------------------------------------------
+// Backoff records: a saturated-scheduler streak writes exactly one
+// (coalesced) WAL record, and a log ending in a backoff record resumes.
+// ---------------------------------------------------------------------
+
+/// Yields `Backoff` N times, then finalizes with a fixed answer.
+struct BackoffTimes {
+    n: usize,
+}
+
+impl Protocol for BackoffTimes {
+    fn name(&self) -> String {
+        format!("backoff[{}]", self.n)
+    }
+
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        Box::new(BackoffSession {
+            remaining: self.n,
+            truth: sample.query.answer.clone(),
+        })
+    }
+}
+
+struct BackoffSession {
+    remaining: usize,
+    truth: minions::data::Answer,
+}
+
+impl ProtocolSession for BackoffSession {
+    fn step(&mut self, _rng: &mut Rng) -> anyhow::Result<SessionEvent> {
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            return Ok(SessionEvent::Backoff);
+        }
+        Ok(SessionEvent::Finalized(minions::protocol::Outcome {
+            answer: self.truth.clone(),
+            ledger: minions::cost::Ledger::default(),
+            rounds: 1,
+            transcript: vec![],
+        }))
+    }
+}
+
+#[test]
+fn backoff_streaks_coalesce_to_one_record_and_backoff_tails_resume() {
+    let dir = case_dir("backoff-coalesce");
+    let proto: Arc<dyn Protocol> = Arc::new(BackoffTimes { n: 4 });
+    let ds = datasets();
+    let sample = &ds.get("micro").unwrap().samples[0];
+    let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+    let entry = runner.spawn_durable(
+        &proto,
+        sample,
+        Rng::seed_from(3),
+        None,
+        wal_meta("backoff", 0),
+    );
+    assert_eq!(entry.wait_done(), SessionStatus::Done);
+    assert_eq!(entry.backoffs(), 4);
+    let id = entry.id;
+    runner.shutdown();
+
+    // 4 backed-off retries coalesced into ONE backoff record:
+    // meta, backoff, finalized
+    let lines = read_wal_lines(&wal::wal_path(&dir, id));
+    let kinds: Vec<String> = lines
+        .iter()
+        .map(|l| {
+            let v = Json::parse(l).unwrap();
+            let body = v.get("body").unwrap();
+            match body.get("type").and_then(Json::as_str).unwrap() {
+                "step" => body
+                    .get("event")
+                    .and_then(|e| e.get("kind"))
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .to_string(),
+                t => t.to_string(),
+            }
+        })
+        .collect();
+    assert_eq!(kinds, vec!["meta", "backoff", "finalized"], "{lines:?}");
+
+    // a log whose last record is the backoff checkpoint must resume
+    let dir2 = case_dir("backoff-tail");
+    write_wal(&wal::wal_path(&dir2, id), &lines[..2], None);
+    let runner = SessionRunner::with_wal(1, TTL, &dir2).unwrap();
+    let s = stack();
+    let mut protos = protocols(&s);
+    protos.insert("backoff".into(), Arc::new(BackoffTimes { n: 0 }));
+    let report = runner.recover(&ds, &protos, None);
+    assert_eq!(report.resumed, 1, "backoff tail must resume");
+    let entry = runner.get(id).expect("registered");
+    assert_eq!(entry.wait_done(), SessionStatus::Done);
+    // the replayed backoff record is counted in the entry's stats
+    assert_eq!(entry.backoffs(), 1);
+    runner.shutdown();
+    s.batcher.stop();
+}
+
+// ---------------------------------------------------------------------
+// End-to-end cancellation durability: cancel a live durable session,
+// restart, and assert it stays dead.
+// ---------------------------------------------------------------------
+
+/// Endless stub protocol whose first step signals `entered` and then
+/// parks on `release` — the deterministic "mid-step" window the cancel
+/// path needs.
+struct Parked {
+    entered: Gate,
+    release: Gate,
+}
+
+impl Protocol for Parked {
+    fn name(&self) -> String {
+        "parked".into()
+    }
+
+    fn session(&self, _sample: &Sample) -> Box<dyn ProtocolSession> {
+        Box::new(ParkedSession {
+            entered: self.entered.clone(),
+            release: self.release.clone(),
+            step: 0,
+        })
+    }
+}
+
+struct ParkedSession {
+    entered: Gate,
+    release: Gate,
+    step: usize,
+}
+
+impl ProtocolSession for ParkedSession {
+    fn step(&mut self, _rng: &mut Rng) -> anyhow::Result<SessionEvent> {
+        self.step += 1;
+        if self.step == 1 {
+            self.entered.open();
+            self.release.wait();
+        }
+        Ok(SessionEvent::RoundExecuted {
+            round: self.step,
+            jobs: 1,
+            survivors: 0,
+        })
+    }
+}
+
+#[test]
+fn cancelled_durable_session_never_reappears_after_restart() {
+    let dir = case_dir("cancel-live");
+    let entered = Gate::default();
+    let release = Gate::default();
+    let proto: Arc<dyn Protocol> = Arc::new(Parked {
+        entered: entered.clone(),
+        release: release.clone(),
+    });
+    let ds = datasets();
+    let sample = &ds.get("micro").unwrap().samples[0];
+    let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+    let entry = runner.spawn_durable(
+        &proto,
+        sample,
+        Rng::seed_from(1),
+        None,
+        wal_meta("parked", 0),
+    );
+    // the worker is provably inside step 1 (it opened `entered` and is
+    // parked on `release`): this cancel takes the mid-step flag path —
+    // the conversion happens between steps, after the in-flight step's
+    // record is persisted
+    entered.wait();
+    assert_eq!(runner.cancel(entry.id), Some(CancelOutcome::Cancelling));
+    release.open();
+    assert_eq!(entry.wait_done(), SessionStatus::Cancelled);
+    assert_eq!(runner.active(), 0, "cancel must free the slot");
+    assert_eq!(runner.cancelled_total(), 1);
+    // cancelling again: documented no-op
+    assert_eq!(runner.cancel(entry.id), Some(CancelOutcome::AlreadyTerminal));
+    let id = entry.id;
+    runner.shutdown();
+
+    // the WAL ends with the cancelled record
+    let lines = read_wal_lines(&wal::wal_path(&dir, id));
+    let last = Json::parse(lines.last().unwrap()).unwrap();
+    assert_eq!(
+        last.get("body").and_then(|b| b.get("type")).and_then(Json::as_str),
+        Some("cancelled"),
+        "terminal record must be the cancel: {lines:?}"
+    );
+
+    // restart: the cancelled session must not be resurrected
+    let s = stack();
+    let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+    let mut protos = protocols(&s);
+    protos.insert(
+        "parked".into(),
+        Arc::new(Parked {
+            entered: Gate::default(),
+            release: Gate::default(),
+        }),
+    );
+    let report = runner.recover(&ds, &protos, None);
+    assert_eq!(report.resumed, 0);
+    assert_eq!(report.skipped_terminal, 1);
+    assert!(runner.get(id).is_none());
+    runner.shutdown();
+    s.batcher.stop();
+}

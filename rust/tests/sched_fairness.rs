@@ -22,6 +22,8 @@
 //! - **Registry bounding**: terminal sessions are evicted after the TTL
 //!   (404 afterwards is documented behavior).
 
+mod testutil;
+
 use anyhow::Result;
 use minions::cost::Ledger;
 use minions::data::{self, Answer, Sample};
@@ -31,16 +33,19 @@ use minions::protocol::{
     MinionS, MinionsConfig, Outcome, Protocol, ProtocolSession, SessionEvent,
 };
 use minions::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
-use minions::sched::{is_saturated, lane_scope, DynamicBatcher, Lane, ScoreRow, Ticket};
+use minions::sched::{
+    is_saturated, lane_scope, parse_lane_weights, DynamicBatcher, Lane, ScoreRow, Ticket,
+};
 use minions::server::session::{SessionRunner, SessionStatus};
 use minions::server::{http_get, http_post, http_post_raw, Metrics, Server, ServerState};
 use minions::util::json::Json;
-use minions::util::rng::{mix64, Rng};
+use minions::util::rng::Rng;
 use minions::vocab::{BATCH, CHUNK, QLEN};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+use testutil::{Gate, PseudoBackend};
 
 // ---------------------------------------------------------------------
 // Backends.
@@ -93,41 +98,9 @@ impl Backend for SlowEcho {
     }
 }
 
-/// Deterministic, content-sensitive, row-independent scorer (the same
-/// construction `tests/parallel_eval.rs` uses, via the shared
-/// `util::rng::mix64` SplitMix64 step).
-struct PseudoBackend;
-
-impl Backend for PseudoBackend {
-    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
-        let mut scores = vec![-1.0e30f32; BATCH * CHUNK];
-        let mut lse = vec![0f32; BATCH];
-        for b in 0..BATCH {
-            let q0 = req.q_tokens[b * QLEN] as u64;
-            let q1 = req.q_tokens[b * QLEN + 1] as u64;
-            for c in 0..CHUNK {
-                if req.c_mask[b * CHUNK + c] == 0.0 {
-                    continue;
-                }
-                let t = req.c_tokens[b * CHUNK + c] as u64;
-                let h = mix64(
-                    q0 ^ (q1 << 16) ^ (t << 32) ^ ((c as u64) << 48) ^ ((req.d as u64) << 60),
-                );
-                scores[b * CHUNK + c] = ((h >> 11) as f64 / (1u64 << 53) as f64 * 1.5) as f32;
-            }
-            lse[b] = 1.0;
-        }
-        Ok(ScoreResponse { scores, lse })
-    }
-
-    fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
-        unimplemented!("not used by these protocols")
-    }
-
-    fn name(&self) -> &'static str {
-        "pseudo"
-    }
-}
+// (the deterministic pseudo scorer lives in `testutil::PseudoBackend`,
+// shared with the session-server and durability suites so the
+// construction bit-identity rests on exists in exactly one place)
 
 fn row(tag: i32) -> ScoreRow {
     ScoreRow {
@@ -434,29 +407,9 @@ fn concurrent_submitters_during_stop_get_clean_errors() {
 }
 
 // ---------------------------------------------------------------------
-// Stub stepped protocol + gate (shared by the server-side tests).
+// Stub stepped protocol + gate (`testutil::Gate`, shared by the
+// server-side tests).
 // ---------------------------------------------------------------------
-
-#[derive(Clone, Default)]
-struct Gate {
-    state: Arc<(Mutex<bool>, Condvar)>,
-}
-
-impl Gate {
-    fn open(&self) {
-        let (lock, cv) = &*self.state;
-        *lock.lock().unwrap() = true;
-        cv.notify_all();
-    }
-
-    fn wait(&self) {
-        let (lock, cv) = &*self.state;
-        let mut open = lock.lock().unwrap();
-        while !*open {
-            open = cv.wait(open).unwrap();
-        }
-    }
-}
 
 struct Stepped {
     rounds: usize,
@@ -601,6 +554,19 @@ fn backed_off_sessions_requeue_with_delay_and_complete() {
         entry.status_json()
     );
     runner.shutdown();
+}
+
+/// `--lane-weights` parsing rejects zero-weight lanes outright: a lane
+/// with weight 0 would accrue no deficit credit and silently starve, so
+/// an operator typo must fail at parse time (the CLI warns and keeps the
+/// default) instead of shipping a starved lane into production.
+#[test]
+fn zero_weight_lanes_are_rejected_at_parse_time() {
+    assert_eq!(parse_lane_weights("0:1"), None);
+    assert_eq!(parse_lane_weights("1:0"), None);
+    assert_eq!(parse_lane_weights("0:0"), None);
+    assert_eq!(parse_lane_weights("4:1"), Some((4, 1)));
+    assert_eq!(parse_lane_weights("1:16"), Some((1, 16)));
 }
 
 #[test]

@@ -14,50 +14,35 @@
 //! - a repeated-chunk workload drives nonzero `cache_hits` on
 //!   `/metrics`, with identical responses for the cached re-run.
 
+mod testutil;
+
 use anyhow::Result;
 use minions::cache::ChunkCache;
 use minions::cost::Ledger;
 use minions::data::{self, Sample};
 use minions::model::{local, remote, LocalLm, RemoteLm};
 use minions::protocol::{MinionS, MinionsConfig, Outcome, Protocol, ProtocolSession, SessionEvent};
-use minions::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
+use minions::runtime::Manifest;
 use minions::sched::DynamicBatcher;
 use minions::server::session::SessionRunner;
-use minions::server::{http_get, http_post, Metrics, Server, ServerState};
+use minions::server::{
+    http_delete_raw, http_get, http_get_raw, http_post, http_post_raw, Metrics, Server,
+    ServerState,
+};
 use minions::util::json::Json;
 use minions::util::rng::Rng;
-use minions::vocab::{BATCH, CHUNK, QLEN};
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use testutil::{Gate, PseudoBackend};
 
 // ---------------------------------------------------------------------
 // Stub stepped protocol: N chat-style rounds, then finalize. An optional
-// gate blocks a chosen step until the test releases it.
+// gate (shared `testutil::Gate`) blocks a chosen step until the test
+// releases it.
 // ---------------------------------------------------------------------
-
-#[derive(Clone, Default)]
-struct Gate {
-    state: Arc<(Mutex<bool>, Condvar)>,
-}
-
-impl Gate {
-    fn open(&self) {
-        let (lock, cv) = &*self.state;
-        *lock.lock().unwrap() = true;
-        cv.notify_all();
-    }
-
-    fn wait(&self) {
-        let (lock, cv) = &*self.state;
-        let mut open = lock.lock().unwrap();
-        while !*open {
-            open = cv.wait(open).unwrap();
-        }
-    }
-}
 
 struct Stepped {
     rounds: usize,
@@ -261,52 +246,10 @@ fn events_endpoint_streams_lines_before_completion() {
 }
 
 // ---------------------------------------------------------------------
-// Real-protocol stack on the pseudo backend: session path == query path,
-// and repeated-chunk workloads hit the cache.
+// Real-protocol stack on the pseudo backend (`testutil::PseudoBackend`):
+// session path == query path, and repeated-chunk workloads hit the
+// cache.
 // ---------------------------------------------------------------------
-
-/// SplitMix64-style mixer for the pseudo scorer.
-fn mix(x: u64) -> u64 {
-    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
-    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-    z ^ (z >> 31)
-}
-
-/// Deterministic, content-sensitive, row-independent scorer (the same
-/// construction `tests/parallel_eval.rs` uses).
-struct PseudoBackend;
-
-impl Backend for PseudoBackend {
-    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
-        let mut scores = vec![-1.0e30f32; BATCH * CHUNK];
-        let mut lse = vec![0f32; BATCH];
-        for b in 0..BATCH {
-            let q0 = req.q_tokens[b * QLEN] as u64;
-            let q1 = req.q_tokens[b * QLEN + 1] as u64;
-            for c in 0..CHUNK {
-                if req.c_mask[b * CHUNK + c] == 0.0 {
-                    continue;
-                }
-                let t = req.c_tokens[b * CHUNK + c] as u64;
-                let h = mix(
-                    q0 ^ (q1 << 16) ^ (t << 32) ^ ((c as u64) << 48) ^ ((req.d as u64) << 60),
-                );
-                scores[b * CHUNK + c] = ((h >> 11) as f64 / (1u64 << 53) as f64 * 1.5) as f32;
-            }
-            lse[b] = 1.0;
-        }
-        Ok(ScoreResponse { scores, lse })
-    }
-
-    fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
-        unimplemented!("not used by these protocols")
-    }
-
-    fn name(&self) -> &'static str {
-        "pseudo"
-    }
-}
 
 fn cached_minions_state() -> (Arc<ServerState>, Arc<DynamicBatcher>) {
     let batcher = DynamicBatcher::new(Arc::new(PseudoBackend), Duration::from_millis(2));
@@ -395,5 +338,281 @@ fn repeated_chunk_workload_hits_cache_and_matches_query_path() {
     assert!(hits > 0, "expected cache hits, got metrics {metrics}");
     assert!(m.get("batch_cached_rows").unwrap().as_u64().unwrap() > 0);
     assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(1));
+    batcher.stop();
+}
+
+// ---------------------------------------------------------------------
+// Cancellation: DELETE mid-run returns 200 and the session reaches
+// Cancelled without leaking its scheduler slot (per-lane depth gauges
+// and sessions_active both return to zero); cancelling a done session
+// is the documented 409 no-op; unknown ids are 404.
+// ---------------------------------------------------------------------
+
+/// ServerState with the gated stub protocol *and* a batcher attached,
+/// so `/metrics` exposes the per-lane depth gauges the leak asserts use.
+fn gated_state_with_batcher(
+    rounds: usize,
+    gate: Option<(usize, Gate)>,
+) -> (Arc<ServerState>, Arc<DynamicBatcher>) {
+    let batcher = DynamicBatcher::new(Arc::new(PseudoBackend), Duration::from_millis(2));
+    let mut datasets = HashMap::new();
+    datasets.insert("micro".to_string(), data::micro::multistep_sweep(1, 2, 5));
+    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    protocols.insert("stepped".to_string(), Arc::new(Stepped { rounds, gate }));
+    let state = Arc::new(ServerState {
+        datasets,
+        protocols,
+        metrics: Arc::new(Metrics::default()),
+        seed: 7,
+        batcher: Some(Arc::clone(&batcher)),
+        cache: None,
+        sessions: SessionRunner::new(1),
+        max_sessions: 0,
+    });
+    (state, batcher)
+}
+
+#[test]
+fn delete_mid_run_returns_200_and_frees_the_slot() {
+    let gate = Gate::default();
+    // 100 rounds with step 2 gated: the session provably cannot finish
+    // before the test both cancels it and opens the gate
+    let (state, batcher) = gated_state_with_batcher(100, Some((2, gate.clone())));
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let resp = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"protocol":"stepped"}"#,
+    )
+    .unwrap();
+    let sid = Json::parse(&resp)
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .unwrap();
+
+    // DELETE while running: 200, body "cancelled" (was queued) or
+    // "cancelling" (a step was in flight; converted between steps)
+    let raw = http_delete_raw(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 200"), "cancel must be 200: {raw}");
+    assert!(
+        raw.contains("\"cancelled\"") || raw.contains("\"cancelling\""),
+        "{raw}"
+    );
+    gate.open();
+
+    // the session reaches the terminal Cancelled state...
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let status = http_get(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+        if status.contains("\"cancelled\"") {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "session never reached cancelled: {status}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // ...with 98 rounds never run and nothing leaked: the active gauge
+    // and both per-lane queue depths are back to zero
+    let metrics = http_get(&addr, "/metrics").unwrap();
+    let m = Json::parse(&metrics).unwrap();
+    assert_eq!(m.get("sessions_active").unwrap().as_u64(), Some(0));
+    assert_eq!(m.get("sessions_cancelled").unwrap().as_u64(), Some(1));
+    assert_eq!(
+        m.get("sched_queue_depth_interactive").unwrap().as_u64(),
+        Some(0),
+        "cancel leaked interactive-lane rows: {metrics}"
+    );
+    assert_eq!(
+        m.get("sched_queue_depth_batch").unwrap().as_u64(),
+        Some(0)
+    );
+
+    // cancelling the already-cancelled session: documented 409 no-op
+    let raw = http_delete_raw(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 409"), "expected 409: {raw}");
+    assert!(raw.contains("already terminal"), "{raw}");
+    // and the event stream ends with the cancelled event
+    let events = http_get(&addr, &format!("/v1/sessions/{sid}/events")).unwrap();
+    assert!(events.contains("\"cancelled\""), "{events}");
+    batcher.stop();
+}
+
+#[test]
+fn delete_done_session_is_409_and_unknown_is_404() {
+    let (state, batcher) = gated_state_with_batcher(1, None);
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let resp = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"protocol":"stepped"}"#,
+    )
+    .unwrap();
+    let sid = Json::parse(&resp)
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .unwrap();
+    // events-to-EOF is the completion barrier
+    let events = http_get(&addr, &format!("/v1/sessions/{sid}/events")).unwrap();
+    assert!(events.contains("\"finalized\""));
+
+    let raw = http_delete_raw(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 409"), "done session: {raw}");
+    let raw = http_delete_raw(&addr, "/v1/sessions/99999").unwrap();
+    assert!(raw.starts_with("HTTP/1.1 404"), "unknown id: {raw}");
+    // a cancelled metric was never incremented by the no-ops
+    let metrics = http_get(&addr, "/metrics").unwrap();
+    let m = Json::parse(&metrics).unwrap();
+    assert_eq!(m.get("sessions_cancelled").unwrap().as_u64(), Some(0));
+    batcher.stop();
+}
+
+/// Cancel a *real* MinionS run mid-flight: whichever way the race lands
+/// (cancelled or already finalized), no scheduler slot and no queued
+/// lane rows may leak.
+#[test]
+fn cancel_mid_real_minions_run_leaves_no_queued_rows() {
+    let (state, batcher) = cached_minions_state();
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let resp = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"protocol":"minions"}"#,
+    )
+    .unwrap();
+    let sid = Json::parse(&resp)
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .unwrap();
+    let raw = http_delete_raw(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+    assert!(
+        raw.starts_with("HTTP/1.1 200") || raw.starts_with("HTTP/1.1 409"),
+        "cancel must be 200 (accepted) or 409 (already done): {raw}"
+    );
+    // wait for the terminal state, then assert nothing leaked
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let status = http_get(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+        if !status.contains("\"running\"") {
+            break;
+        }
+        assert!(Instant::now() < deadline, "never left running: {status}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let metrics = http_get(&addr, "/metrics").unwrap();
+        let m = Json::parse(&metrics).unwrap();
+        let active = m.get("sessions_active").unwrap().as_u64().unwrap();
+        let qi = m
+            .get("sched_queue_depth_interactive")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+        let qb = m.get("sched_queue_depth_batch").unwrap().as_u64().unwrap();
+        if active == 0 && qi == 0 && qb == 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "leaked slots/rows: active={active} qi={qi} qb={qb}"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    batcher.stop();
+}
+
+// ---------------------------------------------------------------------
+// Coverage satellites: 404 after TTL eviction over HTTP, and a
+// malformed session body is a counted 400.
+// ---------------------------------------------------------------------
+
+#[test]
+fn evicted_session_polls_404_after_ttl() {
+    let ttl = Duration::from_millis(50);
+    let mut datasets = HashMap::new();
+    datasets.insert("micro".to_string(), data::micro::multistep_sweep(1, 2, 5));
+    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    protocols.insert(
+        "stepped".to_string(),
+        Arc::new(Stepped {
+            rounds: 1,
+            gate: None,
+        }),
+    );
+    let state = Arc::new(ServerState {
+        datasets,
+        protocols,
+        metrics: Arc::new(Metrics::default()),
+        seed: 7,
+        batcher: None,
+        cache: None,
+        sessions: SessionRunner::with_config(1, ttl),
+        max_sessions: 0,
+    });
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let body = r#"{"dataset":"micro","sample":0,"protocol":"stepped"}"#;
+    let resp = http_post(&addr, "/v1/sessions", body).unwrap();
+    let sid = Json::parse(&resp)
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .unwrap();
+    let events = http_get(&addr, &format!("/v1/sessions/{sid}/events")).unwrap();
+    assert!(events.contains("\"finalized\""));
+    // pollable before the TTL...
+    let raw = http_get_raw(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 200"), "{raw}");
+    // ...then evicted: a later spawn reaps, and the poll is a 404
+    std::thread::sleep(ttl + Duration::from_millis(100));
+    let resp = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":1,"protocol":"stepped"}"#,
+    )
+    .unwrap();
+    assert!(resp.contains("session_id"), "{resp}");
+    let raw = http_get_raw(&addr, &format!("/v1/sessions/{sid}")).unwrap();
+    assert!(
+        raw.starts_with("HTTP/1.1 404") && raw.contains("unknown session"),
+        "evicted session must 404: {raw}"
+    );
+}
+
+#[test]
+fn malformed_session_body_is_400_and_counted() {
+    let (state, batcher) = gated_state_with_batcher(1, None);
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let raw = http_post_raw(&addr, "/v1/sessions", "{not json").unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("bad json"), "{raw}");
+    // missing required field is a 400 too
+    let raw = http_post_raw(&addr, "/v1/sessions", r#"{"sample":0}"#).unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("missing 'dataset'"), "{raw}");
+
+    let metrics = http_get(&addr, "/metrics").unwrap();
+    let m = Json::parse(&metrics).unwrap();
+    assert_eq!(m.get("errors").unwrap().as_u64(), Some(2));
+    assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(0));
     batcher.stop();
 }

@@ -1,0 +1,274 @@
+//! Shared fixtures for the durability fault-injection suite
+//! (`tests/durability.rs`): the deterministic pseudo backend + protocol
+//! stack the parity tests already standardize on, a forced-two-round
+//! MinionS remote (so the kill-and-recover sweep always exercises a
+//! multi-round WAL), and the WAL corpus helpers (corpus root, torn-write
+//! prefixes). Artifact-free: everything runs in every environment.
+//!
+//! Corpus layout: each test case writes under `corpus_root()/<case>`;
+//! the CI `durability` job points `MINIONS_DURABILITY_DIR` at a tmpfs
+//! and uploads the whole corpus as an artifact when the suite fails, so
+//! a red run ships its WALs for post-mortem.
+
+#![allow(dead_code)]
+
+use anyhow::Result;
+use minions::data::{self, Answer, Dataset, Query};
+use minions::dsl;
+use minions::model::job::WorkerOutput;
+use minions::model::{local, remote, Decision, LocalLm, MinionsRemote, PlanConfig, RemoteLm};
+use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
+use minions::rag::{Rag, Retriever};
+use minions::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
+use minions::sched::DynamicBatcher;
+use minions::util::rng::{mix64, Rng};
+use minions::vocab::{BATCH, CHUNK, QLEN};
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Deterministic, content-sensitive, row-independent scorer (the same
+/// construction `tests/cache_parity.rs` and `tests/parallel_eval.rs`
+/// use). Purely functional: two processes given identical rows compute
+/// identical scores, which is what makes kill-and-recover bit-identity
+/// assertable at all.
+pub struct PseudoBackend;
+
+impl Backend for PseudoBackend {
+    fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        let mut scores = vec![-1.0e30f32; BATCH * CHUNK];
+        let mut lse = vec![0f32; BATCH];
+        for b in 0..BATCH {
+            let q0 = req.q_tokens[b * QLEN] as u64;
+            let q1 = req.q_tokens[b * QLEN + 1] as u64;
+            for c in 0..CHUNK {
+                if req.c_mask[b * CHUNK + c] == 0.0 {
+                    continue;
+                }
+                let t = req.c_tokens[b * CHUNK + c] as u64;
+                let h = mix64(
+                    q0 ^ (q1 << 16) ^ (t << 32) ^ ((c as u64) << 48) ^ ((req.d as u64) << 60),
+                );
+                scores[b * CHUNK + c] = ((h >> 11) as f64 / (1u64 << 53) as f64 * 1.5) as f32;
+            }
+            lse[b] = 1.0;
+        }
+        Ok(ScoreResponse { scores, lse })
+    }
+
+    fn embed(&self, _req: EmbedRequest) -> Result<Vec<f32>> {
+        unimplemented!("the durability suite runs the lexical retriever")
+    }
+
+    fn name(&self) -> &'static str {
+        "pseudo"
+    }
+}
+
+/// A MinionS remote that always runs exactly two rounds: `MoreRounds`
+/// after round 1, a deterministic `Final` after round 2 — so the
+/// recovery sweep always sees the full multi-round record sequence
+/// (meta, planned, round_executed, planned, finalized) regardless of
+/// what the data would make the real remote decide. It consumes one rng
+/// draw per synthesis, making the WAL's rng checkpoints load-bearing.
+pub struct ForcedTwoRounds;
+
+impl MinionsRemote for ForcedTwoRounds {
+    fn label(&self) -> String {
+        "forced-2r".into()
+    }
+
+    fn plan_minions(
+        &self,
+        query: &Query,
+        cfg: &PlanConfig,
+        _round: usize,
+        _advice: &str,
+        _had_answers: bool,
+    ) -> String {
+        let task = format!("EXTRACT {}", dsl::render_task_key(&query.keys[0]));
+        format!(
+            "tasks = [\"{task}\"]\n\
+             for task_id, task in enumerate(tasks):\n    \
+             for doc_id, document in enumerate(context):\n        \
+             chunks = chunk_on_multiple_pages(document, {})\n        \
+             for chunk_id, chunk in enumerate(chunks):\n            \
+             job_manifests.append(JobManifest(task_id=task_id, chunk=chunk, task=task, advice=\"\"))\n",
+            cfg.pages_per_chunk
+        )
+    }
+
+    fn synthesize(
+        &self,
+        _query: &Query,
+        outputs: &[WorkerOutput],
+        round: usize,
+        _max_rounds: usize,
+        rng: &mut Rng,
+    ) -> Result<Decision> {
+        // a deterministic draw: recovery must resume the stream exactly
+        // here for the final answer to come out bit-identical
+        let _ = rng.next_u64();
+        if round < 2 {
+            return Ok(Decision::MoreRounds {
+                advice: "one more round".into(),
+            });
+        }
+        let best = outputs
+            .iter()
+            .filter(|o| o.answer.is_some())
+            .max_by(|a, b| a.confidence.partial_cmp(&b.confidence).unwrap())
+            .and_then(|o| o.answer)
+            .unwrap_or(0);
+        Ok(Decision::Final(Answer::Value(best)))
+    }
+}
+
+/// Reusable open-once latch for deterministic scheduling in tests: a
+/// session step parks on `wait()` until the test calls `open()`.
+#[derive(Clone, Default)]
+pub struct Gate {
+    state: Arc<(std::sync::Mutex<bool>, std::sync::Condvar)>,
+}
+
+impl Gate {
+    pub fn open(&self) {
+        let (lock, cv) = &*self.state;
+        *lock.lock().unwrap() = true;
+        cv.notify_all();
+    }
+
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.state;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+    }
+}
+
+pub struct Stack {
+    pub batcher: Arc<DynamicBatcher>,
+    pub local: Arc<LocalLm>,
+    pub remote: Arc<RemoteLm>,
+}
+
+/// A fresh scoring stack — built per "process" so recovery runs against
+/// a cold batcher/cache exactly like a restarted server would.
+pub fn stack() -> Stack {
+    let batcher = DynamicBatcher::new(Arc::new(PseudoBackend), Duration::from_millis(2));
+    let manifest = Manifest::stub_for_tests(&[64, 128, 256, 1024], vec![1.0, 0.5, 0.25]);
+    let local = Arc::new(
+        LocalLm::with_cache(Arc::clone(&batcher), &manifest, local::LLAMA_3B, None).unwrap(),
+    );
+    let remote = Arc::new(
+        RemoteLm::with_cache(Arc::clone(&batcher), &manifest, remote::GPT_4O, None).unwrap(),
+    );
+    Stack {
+        batcher,
+        local,
+        remote,
+    }
+}
+
+/// Every protocol family keyed the way a server registry would key them;
+/// `minions-2r` is the forced-two-round variant the multi-round sweep
+/// relies on.
+pub fn protocols(s: &Stack) -> HashMap<String, Arc<dyn Protocol>> {
+    let mut map: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    map.insert(
+        "local".into(),
+        Arc::new(LocalOnly::new(Arc::clone(&s.local))),
+    );
+    map.insert(
+        "remote".into(),
+        Arc::new(RemoteOnly::new(Arc::clone(&s.remote))),
+    );
+    map.insert(
+        "minion".into(),
+        Arc::new(Minion::new(Arc::clone(&s.local), Arc::clone(&s.remote), 3)),
+    );
+    map.insert(
+        "minions".into(),
+        Arc::new(MinionS::new(
+            Arc::clone(&s.local),
+            Arc::clone(&s.remote),
+            MinionsConfig::default(),
+        )),
+    );
+    map.insert(
+        "minions-2r".into(),
+        Arc::new(MinionS::new(
+            Arc::clone(&s.local),
+            Arc::new(ForcedTwoRounds),
+            MinionsConfig {
+                max_rounds: 3,
+                ..MinionsConfig::default()
+            },
+        )),
+    );
+    map.insert(
+        "rag".into(),
+        Arc::new(Rag::new(
+            Arc::clone(&s.remote),
+            Arc::new(PseudoBackend),
+            Retriever::Bm25,
+            4,
+        )),
+    );
+    map
+}
+
+/// The dataset registry recovery resolves sessions against. Multi-part
+/// queries so the chat protocol runs several rounds.
+pub fn datasets() -> HashMap<String, Dataset> {
+    let mut map = HashMap::new();
+    map.insert("micro".to_string(), data::micro::multistep_sweep(2, 3, 5));
+    map
+}
+
+// ---------------------------------------------------------------------
+// WAL corpus helpers.
+// ---------------------------------------------------------------------
+
+/// Corpus root: `MINIONS_DURABILITY_DIR` when set (CI points it at a
+/// tmpfs and uploads it on failure), else a per-process temp dir.
+pub fn corpus_root() -> PathBuf {
+    match std::env::var("MINIONS_DURABILITY_DIR") {
+        Ok(dir) if !dir.is_empty() => PathBuf::from(dir),
+        _ => std::env::temp_dir().join(format!("minions-durability-{}", std::process::id())),
+    }
+}
+
+/// A fresh case directory under the corpus root (wiped if it exists, so
+/// re-runs are clean; left behind on panic for post-mortem upload).
+pub fn case_dir(name: &str) -> PathBuf {
+    let dir = corpus_root().join(name);
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).expect("create case dir");
+    dir
+}
+
+/// Read a WAL as its record lines (trailing newline stripped per line).
+pub fn read_wal_lines(path: &Path) -> Vec<String> {
+    let text = fs::read_to_string(path).expect("read wal");
+    text.lines().map(str::to_string).collect()
+}
+
+/// Write a truncated/torn WAL: `lines` verbatim (newline-terminated),
+/// then `torn_tail` raw bytes with no terminator — the on-disk state a
+/// crash mid-append leaves behind.
+pub fn write_wal(path: &Path, lines: &[String], torn_tail: Option<&[u8]>) {
+    let mut f = fs::File::create(path).expect("create wal");
+    for line in lines {
+        f.write_all(line.as_bytes()).unwrap();
+        f.write_all(b"\n").unwrap();
+    }
+    if let Some(tail) = torn_tail {
+        f.write_all(tail).unwrap();
+    }
+    f.flush().unwrap();
+}
