@@ -17,8 +17,8 @@ use minions::data;
 use minions::eval::{run_protocol, run_protocol_parallel};
 use minions::exp::Exp;
 use minions::latency::*;
-use minions::model::{local, remote, PlanConfig};
-use minions::protocol::{MinionS, MinionsConfig, Protocol};
+use minions::model::{local, remote};
+use minions::protocol::{Protocol, ProtocolSpec};
 use minions::runtime::{default_artifact_dir, ScoreRequest};
 use minions::sched::{lane_scope, DynamicBatcher, Lane, ScoreRow, Ticket};
 use minions::util::cli::Cli;
@@ -90,11 +90,11 @@ fn main() {
 
     // --- end-to-end MinionS throughput (uncached) ---
     let ds = data::generate("finance", 8, 3);
-    let llama8b = exp_nc.local(local::LLAMA_8B);
-    let gpt4o = exp_nc.remote(remote::GPT_4O);
-    let proto = MinionS::new(llama8b, gpt4o, MinionsConfig::default());
+    let proto = exp_nc
+        .protocol(&ProtocolSpec::minions(local::LLAMA_8B.name, remote::GPT_4O.name))
+        .expect("minions protocol");
     let s = bench(1, 3, || {
-        run_protocol(&proto, &ds, 5, true).unwrap();
+        run_protocol(proto.as_ref(), &ds, 5, true).unwrap();
     });
     println!(
         "== end-to-end MinionS ==\n8 finance queries: {} per batch ({:.2} queries/s)\n",
@@ -146,16 +146,10 @@ fn main() {
     // rows coalesce and occupancy rises with thread count while
     // wall-clock drops. This is the ISSUE's before/after exhibit.
     let ds_small = data::micro::context_sweep(2, 16, 11);
-    let cfg = MinionsConfig {
-        plan: PlanConfig {
-            tasks_per_round: 1,
-            ..PlanConfig::default()
-        },
-        ..MinionsConfig::default()
-    };
-    let llama3b = exp_nc.local(local::LLAMA_3B);
+    let mut coalesce_spec = ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name);
+    coalesce_spec.tasks_per_round = 1;
     let coalesce_proto: Arc<dyn Protocol> =
-        Arc::new(MinionS::new(llama3b, exp_nc.remote(remote::GPT_4O), cfg));
+        exp_nc.protocol(&coalesce_spec).expect("coalescing protocol");
     println!("== cross-sample coalescing (16 samples, 1 task/round, 2 chunks) ==");
     let mut t = Table::new(&["eval threads", "wall", "queries/s", "occupancy", "dispatches"]);
     let mut serial_wall = None;
@@ -202,11 +196,9 @@ fn main() {
     // tests/cache_parity.rs); only the work disappears.
     let cache = exp.cache().expect("harness cache on by default");
     let ds_docs = data::generate("finance", 8, 23);
-    let cache_proto = MinionS::new(
-        exp.local(local::LLAMA_3B),
-        exp.remote(remote::GPT_4O),
-        MinionsConfig::default(),
-    );
+    let cache_proto = exp
+        .protocol(&ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name))
+        .expect("cache protocol");
     println!("== repeated-chunk cache (8 finance queries, re-queried) ==");
     let mut t = Table::new(&["pass", "wall", "hit rate", "dispatches", "cached rows"]);
     let mut cold_result = None;
@@ -214,7 +206,7 @@ fn main() {
         let c0 = cache.snapshot();
         let b0 = exp.batcher_snapshot();
         let t0 = std::time::Instant::now();
-        let r = run_protocol(&cache_proto, &ds_docs, 9, true).expect("cache pass");
+        let r = run_protocol(cache_proto.as_ref(), &ds_docs, 9, true).expect("cache pass");
         let wall = t0.elapsed().as_secs_f64();
         let c1 = cache.snapshot();
         let b1 = exp.batcher_snapshot();

@@ -11,14 +11,12 @@ use minions::data;
 use minions::eval::run_protocol;
 use minions::exp::Exp;
 use minions::model::{local, remote};
-use minions::protocol::{Minion, MinionS, MinionsConfig, RoundStrategy};
+use minions::protocol::{ProtocolSpec, RoundStrategy};
 use minions::util::stats::Table;
 
 fn main() -> anyhow::Result<()> {
     let n = 16;
-    let mut exp = Exp::new("pjrt", 77)?;
-    let gpt4o = exp.remote(remote::GPT_4O);
-    let llama3b = exp.local(local::LLAMA_3B);
+    let exp = Exp::new("pjrt", 77)?;
     let ds = data::generate("health", n, 77);
     let multi = ds
         .samples
@@ -31,8 +29,12 @@ fn main() -> anyhow::Result<()> {
 
     let mut t = Table::new(&["System", "Rounds", "Strategy", "Acc", "$/query"]);
     for rounds in [1usize, 3, 5] {
-        let p = Minion::new(llama3b.clone(), gpt4o.clone(), rounds);
-        let r = run_protocol(&p, &ds, 5, true)?;
+        let p = exp.protocol(&ProtocolSpec::minion(
+            local::LLAMA_3B.name,
+            remote::GPT_4O.name,
+            rounds,
+        ))?;
+        let r = run_protocol(p.as_ref(), &ds, 5, true)?;
         t.row(vec![
             "Minion (chat)".into(),
             rounds.to_string(),
@@ -43,13 +45,11 @@ fn main() -> anyhow::Result<()> {
     }
     for strategy in [RoundStrategy::Retries, RoundStrategy::Scratchpad] {
         for rounds in [1usize, 2, 3] {
-            let cfg = MinionsConfig {
-                max_rounds: rounds,
-                strategy,
-                ..MinionsConfig::default()
-            };
-            let p = MinionS::new(llama3b.clone(), gpt4o.clone(), cfg);
-            let r = run_protocol(&p, &ds, 5, true)?;
+            let mut spec = ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name);
+            spec.max_rounds = rounds;
+            spec.strategy = strategy;
+            let p = exp.protocol(&spec)?;
+            let r = run_protocol(p.as_ref(), &ds, 5, true)?;
             t.row(vec![
                 "MinionS".into(),
                 rounds.to_string(),

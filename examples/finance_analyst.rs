@@ -9,30 +9,35 @@ use minions::data;
 use minions::eval::run_protocol;
 use minions::exp::Exp;
 use minions::model::{local, remote};
-use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
-use minions::rag::{Rag, Retriever};
+use minions::protocol::{Protocol, ProtocolSpec};
+use minions::rag::Retriever;
 use minions::util::stats::Table;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let n = 16;
-    let mut exp = Exp::new("pjrt", 1234)?;
-    let gpt4o = exp.remote(remote::GPT_4O);
-    let llama8b = exp.local(local::LLAMA_8B);
+    let exp = Exp::new("pjrt", 1234)?;
     let ds = data::generate("finance", n, 1234);
     println!(
         "finance workload: {n} filings, avg {} tokens each\n",
         ds.samples[0].context.total_tokens()
     );
 
-    let systems: Vec<Arc<dyn Protocol>> = vec![
-        Arc::new(RemoteOnly::new(gpt4o.clone())),
-        Arc::new(LocalOnly::new(llama8b.clone())),
-        Arc::new(Minion::new(llama8b.clone(), gpt4o.clone(), 3)),
-        Arc::new(MinionS::new(llama8b.clone(), gpt4o.clone(), MinionsConfig::default())),
-        Arc::new(Rag::new(gpt4o.clone(), Arc::clone(&exp.backend), Retriever::Bm25, 8)),
-        Arc::new(Rag::new(gpt4o.clone(), Arc::clone(&exp.backend), Retriever::Dense, 8)),
+    // every system side by side, each named by its spec
+    let gpt4o = remote::GPT_4O.name;
+    let llama8b = local::LLAMA_8B.name;
+    let specs = vec![
+        ProtocolSpec::remote_only(gpt4o),
+        ProtocolSpec::local_only(llama8b),
+        ProtocolSpec::minion(llama8b, gpt4o, 3),
+        ProtocolSpec::minions(llama8b, gpt4o),
+        ProtocolSpec::rag(Retriever::Bm25, gpt4o, 8),
+        ProtocolSpec::rag(Retriever::Dense, gpt4o, 8),
     ];
+    let systems: Vec<Arc<dyn Protocol>> = specs
+        .iter()
+        .map(|spec| exp.protocol(spec))
+        .collect::<anyhow::Result<_>>()?;
 
     let mut t = Table::new(&[
         "System",

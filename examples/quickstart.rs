@@ -13,13 +13,11 @@ use minions::data;
 use minions::eval::score_strict;
 use minions::exp::Exp;
 use minions::model::{local, remote};
-use minions::protocol::{MinionS, MinionsConfig, Protocol};
+use minions::protocol::{Protocol, ProtocolSpec};
 use minions::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let mut exp = Exp::new("pjrt", 42)?;
-    let local_lm = exp.local(local::LLAMA_8B);
-    let remote_lm = exp.remote(remote::GPT_4O);
+    let exp = Exp::new("pjrt", 42)?;
 
     let ds = data::generate("finance", 1, 7);
     let sample = &ds.samples[0];
@@ -30,7 +28,12 @@ fn main() -> anyhow::Result<()> {
         sample.context.total_tokens()
     );
 
-    let proto = MinionS::new(local_lm, remote_lm, MinionsConfig::default());
+    // every protocol is named by a spec and resolved through the
+    // harness's factory — the same path `minions run` and the server use
+    let proto = exp.protocol(&ProtocolSpec::minions(
+        local::LLAMA_8B.name,
+        remote::GPT_4O.name,
+    ))?;
     let mut rng = Rng::seed_from(1);
     let outcome = proto.run(sample, &mut rng)?;
 

@@ -22,8 +22,6 @@
 
 use minions::data;
 use minions::exp::Exp;
-use minions::model::{local, remote};
-use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
 use minions::server::session::SessionRunner;
 use minions::server::{http_delete_raw, http_get, http_post, http_post_raw, Server, ServerState};
 use minions::util::json::Json;
@@ -33,22 +31,22 @@ use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {
     let n_samples = 8usize;
-    let mut exp = Exp::new("pjrt", 42)?;
-    let gpt4o = exp.remote(remote::GPT_4O);
-    let llama8b = exp.local(local::LLAMA_8B);
+    let exp = Exp::new("pjrt", 42)?;
 
     let mut datasets = HashMap::new();
     for name in ["finance", "health", "qasper"] {
         datasets.insert(name.to_string(), data::generate(name, n_samples, 42));
     }
-    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
-    protocols.insert(
-        "minions".into(),
-        Arc::new(MinionS::new(llama8b.clone(), gpt4o.clone(), MinionsConfig::default())),
-    );
-    protocols.insert("minion".into(), Arc::new(Minion::new(llama8b.clone(), gpt4o.clone(), 3)));
-    protocols.insert("remote".into(), Arc::new(RemoteOnly::new(gpt4o.clone())));
-    protocols.insert("local".into(), Arc::new(LocalOnly::new(llama8b)));
+    // the registered aliases are the stock serve set (shared with
+    // `minions serve` via `default_aliases`, so the example can never
+    // drift from the real server), resolved through the harness factory
+    // — the same path inline request specs take
+    let factory = exp.factory();
+    let aliases = minions::server::default_aliases();
+    let mut protocols = HashMap::new();
+    for (name, spec) in &aliases {
+        protocols.insert(name.clone(), factory.resolve(spec)?);
+    }
 
     // durable sessions: WAL per session under a scratch state dir (the
     // `--state-dir` flag on `minions serve` does the same, plus recovery
@@ -63,6 +61,8 @@ fn main() -> anyhow::Result<()> {
     let state = Arc::new(ServerState {
         datasets,
         protocols,
+        aliases,
+        factory: Some(factory),
         metrics: Default::default(),
         seed: 42,
         batcher: Some(exp.batcher()),
@@ -96,6 +96,35 @@ fn main() -> anyhow::Result<()> {
     let events = http_get(&addr, &format!("/v1/sessions/{sid}/events"))?;
     println!("session {sid} events:\n{events}");
     assert!(events.contains("finalized"));
+
+    // --- per-request protocol configuration: an inline spec ---
+    // no boot-time registration: this request picks a different local
+    // rung and round budget on the wire, validated server-side
+    println!("\n== inline spec: llama-3b rung, 3 rounds, scratchpad ==");
+    let discovery = http_get(&addr, "/v1/protocols")?;
+    let d = Json::parse(&discovery)?;
+    assert!(d.get("aliases").and_then(|a| a.get("minions")).is_some());
+    assert!(d.get("schema").and_then(|s| s.get("strategy")).is_some());
+    let resp = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"finance","sample":1,"spec":{"kind":"minions","local":"llama-3b","max_rounds":3}}"#,
+    )?;
+    let spec_sid = Json::parse(&resp)?
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .expect("inline-spec session id");
+    let events = http_get(&addr, &format!("/v1/sessions/{spec_sid}/events"))?;
+    assert!(events.contains("\"finalized\""), "inline-spec session: {events}");
+    println!("inline-spec session {spec_sid} finalized");
+    // a misspelled spec is a structured 400, not a 404
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"finance","sample":0,"spec":{"kind":"minionz"}}"#,
+    )?;
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    println!("misspelled kind → {}", raw.lines().next().unwrap_or(""));
 
     // drive concurrent clients: every sample of every dataset via minions
     let t0 = std::time::Instant::now();

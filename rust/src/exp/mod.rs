@@ -2,20 +2,21 @@
 //! and figure of the paper's evaluation (the per-exhibit index lives in
 //! DESIGN.md §4). Used by the `minions` CLI and the `benches/` binaries.
 //!
-//! The harness owns the system's shared [`DynamicBatcher`]: every
-//! `LocalLm`/`RemoteLm` it builds scores through it, so concurrent
-//! samples coalesce into full dispatches. Set [`Exp::parallel`] > 1 to
-//! evaluate datasets over a worker pool — results are bit-identical to
-//! the serial path, tables included.
+//! The harness owns the system's shared [`DynamicBatcher`] and, since
+//! ISSUE 5, constructs every protocol through its [`ProtocolFactory`]:
+//! each exhibit names the configurations it sweeps as [`ProtocolSpec`]
+//! values and resolves them — so the CLI, the server, and the exhibits
+//! all share one construction path (and, via fingerprint memoization,
+//! one instance per distinct configuration). Set [`Exp::parallel`] > 1
+//! to evaluate datasets over a worker pool — results are bit-identical
+//! to the serial path, tables included.
 
 use crate::cache::{ChunkCache, DEFAULT_CACHE_CAPACITY};
 use crate::data::{self, Dataset};
 use crate::eval::{macro_average, rubric_score, run_protocol, run_protocol_on, RunResult};
-use crate::model::{local, remote, LocalLm, LocalProfile, PlanConfig, RemoteLm, RemoteProfile};
-use crate::protocol::{
-    LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly, RoundStrategy,
-};
-use crate::rag::{Rag, Retriever};
+use crate::model::{local, remote, LocalLm, LocalProfile, RemoteLm, RemoteProfile};
+use crate::protocol::{Protocol, ProtocolFactory, ProtocolSpec, RoundStrategy};
+use crate::rag::Retriever;
 use crate::runtime::{
     default_artifact_dir, Backend, Manifest, NativeBackend, PjrtBackend, RuntimeStats,
 };
@@ -23,7 +24,6 @@ use crate::sched::{BatcherSnapshot, DynamicBatcher, DEFAULT_MAX_WAIT};
 use crate::util::pool::Pool;
 use crate::util::stats::Table;
 use anyhow::{bail, Result};
-use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 pub struct Exp {
@@ -33,16 +33,14 @@ pub struct Exp {
     /// eval worker threads (1 = serial); results are bit-identical
     pub parallel: usize,
     batcher: Arc<DynamicBatcher>,
-    /// cross-request chunk cache shared by every model wrapper this
-    /// harness builds (None = disabled); results are bit-identical either
-    /// way — the cache only skips recomputation (`tests/cache_parity.rs`)
-    cache: Option<Arc<ChunkCache>>,
+    /// the single protocol construction path: resolves `ProtocolSpec`s
+    /// over this harness's backend/batcher/cache, memoized by spec
+    /// fingerprint (and per-profile for the model wrappers)
+    factory: Arc<ProtocolFactory>,
     /// lazily-built eval pool, reused across runs (rebuilt on size change)
     pool: Mutex<Option<(usize, Pool)>>,
     /// concrete handle kept alongside `backend` for engine stats
     pjrt: Option<Arc<PjrtBackend>>,
-    locals: HashMap<&'static str, Arc<LocalLm>>,
-    remotes: HashMap<&'static str, Arc<RemoteLm>>,
 }
 
 impl Exp {
@@ -59,38 +57,58 @@ impl Exp {
             other => bail!("unknown backend '{other}' (pjrt|native)"),
         };
         let batcher = DynamicBatcher::new(Arc::clone(&backend), DEFAULT_MAX_WAIT);
+        let factory = Arc::new(ProtocolFactory::new(
+            Arc::clone(&backend),
+            Arc::clone(&batcher),
+            manifest.clone(),
+            Some(ChunkCache::new(DEFAULT_CACHE_CAPACITY)),
+        ));
         Ok(Exp {
             backend,
             manifest,
             seed,
             parallel: 1,
             batcher,
-            cache: Some(ChunkCache::new(DEFAULT_CACHE_CAPACITY)),
+            factory,
             pool: Mutex::new(None),
             pjrt,
-            locals: HashMap::new(),
-            remotes: HashMap::new(),
         })
     }
 
-    /// Replace the chunk cache (`None` disables caching). Clears the
-    /// built model wrappers so later `local()`/`remote()` calls pick the
-    /// new cache up — call this before building protocols.
+    /// Replace the chunk cache (`None` disables caching). Rebuilds the
+    /// factory, clearing its memoized model wrappers and protocols so
+    /// later resolutions pick the new cache up — call this before
+    /// building protocols.
     pub fn set_cache(&mut self, cache: Option<Arc<ChunkCache>>) {
-        self.cache = cache;
-        self.locals.clear();
-        self.remotes.clear();
+        self.factory = Arc::new(ProtocolFactory::new(
+            Arc::clone(&self.backend),
+            Arc::clone(&self.batcher),
+            self.manifest.clone(),
+            cache,
+        ));
     }
 
     /// The shared chunk cache, when enabled (handed to the server for
     /// `/metrics`).
     pub fn cache(&self) -> Option<Arc<ChunkCache>> {
-        self.cache.clone()
+        self.factory.cache()
     }
 
     /// The shared scoring batcher (handed to the server for /metrics).
     pub fn batcher(&self) -> Arc<DynamicBatcher> {
         Arc::clone(&self.batcher)
+    }
+
+    /// The protocol factory (handed to the server, which resolves inline
+    /// specs and registered aliases through it at request time).
+    pub fn factory(&self) -> Arc<ProtocolFactory> {
+        Arc::clone(&self.factory)
+    }
+
+    /// Resolve a protocol spec against this harness's stack — the only
+    /// way the CLI, benches, and exhibits obtain a protocol.
+    pub fn protocol(&self, spec: &ProtocolSpec) -> Result<Arc<dyn Protocol>> {
+        self.factory.resolve(spec)
     }
 
     /// Configure the shared scheduler core: the bounded admission queue
@@ -114,26 +132,18 @@ impl Exp {
         RuntimeStats {
             engine: self.pjrt.as_ref().map(|p| p.stats()),
             batcher: Some(self.batcher.snapshot()),
-            cache: self.cache.as_ref().map(|c| c.snapshot()),
+            cache: self.factory.cache().map(|c| c.snapshot()),
         }
     }
 
-    pub fn local(&mut self, p: LocalProfile) -> Arc<LocalLm> {
-        let scorer = Arc::clone(&self.batcher);
-        let cache = self.cache.clone();
-        let manifest = &self.manifest;
-        Arc::clone(self.locals.entry(p.name).or_insert_with(|| {
-            Arc::new(LocalLm::with_cache(scorer, manifest, p, cache).unwrap())
-        }))
+    /// The local model wrapper for `p` (factory-memoized by name).
+    pub fn local(&self, p: LocalProfile) -> Arc<LocalLm> {
+        self.factory.local(p).expect("local model builds")
     }
 
-    pub fn remote(&mut self, p: RemoteProfile) -> Arc<RemoteLm> {
-        let scorer = Arc::clone(&self.batcher);
-        let cache = self.cache.clone();
-        let manifest = &self.manifest;
-        Arc::clone(self.remotes.entry(p.name).or_insert_with(|| {
-            Arc::new(RemoteLm::with_cache(scorer, manifest, p, cache).unwrap())
-        }))
+    /// The remote model wrapper for `p` (factory-memoized by name).
+    pub fn remote(&self, p: RemoteProfile) -> Arc<RemoteLm> {
+        self.factory.remote(p).expect("remote model builds")
     }
 
     fn run_with(&self, proto: Arc<dyn Protocol>, ds: &Dataset, strict: bool) -> Result<RunResult> {
@@ -174,7 +184,7 @@ impl Exp {
             .iter()
             .map(|name| data::generate(name, n, self.seed))
             .collect();
-        let gpt4o = self.remote(remote::GPT_4O);
+        let gpt4o = remote::GPT_4O.name;
         let locals = [local::LLAMA_8B, local::LLAMA_1B, local::LLAMA_3B, local::QWEN_3B];
 
         struct Row {
@@ -200,20 +210,20 @@ impl Exp {
         };
 
         // remote-only
-        rows.push(grid_row(self, Arc::new(RemoteOnly::new(gpt4o.clone())), "Remote Only", "—")?);
+        let p = self.protocol(&ProtocolSpec::remote_only(gpt4o))?;
+        rows.push(grid_row(self, p, "Remote Only", "—")?);
         // local-only ladder
         for lp in locals {
-            let p: Arc<dyn Protocol> = Arc::new(LocalOnly::new(self.local(lp)));
+            let p = self.protocol(&ProtocolSpec::local_only(lp.name))?;
             rows.push(grid_row(self, p, "Local Only", lp.name)?);
         }
         // Minion + MinionS for the three headline locals
         for lp in [local::LLAMA_8B, local::LLAMA_3B, local::QWEN_3B] {
-            let p: Arc<dyn Protocol> = Arc::new(Minion::new(self.local(lp), gpt4o.clone(), 3));
+            let p = self.protocol(&ProtocolSpec::minion(lp.name, gpt4o, 3))?;
             rows.push(grid_row(self, p, "Minion", lp.name)?);
         }
         for lp in [local::LLAMA_8B, local::LLAMA_3B, local::QWEN_3B] {
-            let p: Arc<dyn Protocol> =
-                Arc::new(MinionS::new(self.local(lp), gpt4o.clone(), MinionsConfig::default()));
+            let p = self.protocol(&ProtocolSpec::minions(lp.name, gpt4o))?;
             rows.push(grid_row(self, p, "MinionS", lp.name)?);
         }
 
@@ -254,11 +264,11 @@ impl Exp {
     // ------------------------------------------------------------------
 
     pub fn fig3(&mut self, n: usize) -> Result<String> {
-        let llama3b = self.local(local::LLAMA_3B);
+        let local_only = self.protocol(&ProtocolSpec::local_only(local::LLAMA_3B.name))?;
         let mut t = Table::new(&["Micro-benchmark", "x", "Accuracy"]);
         for chunks in [1usize, 4, 8, 16] {
             let ds = data::micro::context_sweep(chunks, n, self.seed);
-            let r = self.run(Arc::new(LocalOnly::new(llama3b.clone())), &ds)?;
+            let r = self.run(Arc::clone(&local_only), &ds)?;
             t.row(vec![
                 "context-length (Table 4)".into(),
                 format!("{chunks} chunks"),
@@ -267,7 +277,7 @@ impl Exp {
         }
         for k in [1usize, 2, 3, 4] {
             let ds = data::micro::multistep_sweep(k, n, self.seed);
-            let r = self.run(Arc::new(LocalOnly::new(llama3b.clone())), &ds)?;
+            let r = self.run(Arc::clone(&local_only), &ds)?;
             t.row(vec![
                 "multi-step (Table 5)".into(),
                 format!("{k} sub-tasks"),
@@ -275,11 +285,11 @@ impl Exp {
             ]);
         }
         // decomposed counterpart: the same k-part queries via MinionS
-        let gpt4o = self.remote(remote::GPT_4O);
+        let minions =
+            self.protocol(&ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name))?;
         for k in [2usize, 4] {
             let ds = data::micro::multistep_sweep(k, n, self.seed);
-            let p = MinionS::new(llama3b.clone(), gpt4o.clone(), MinionsConfig::default());
-            let r = self.run(Arc::new(p), &ds)?;
+            let r = self.run(Arc::clone(&minions), &ds)?;
             t.row(vec![
                 "multi-step, decomposed".into(),
                 format!("{k} sub-tasks"),
@@ -294,13 +304,11 @@ impl Exp {
     // ------------------------------------------------------------------
 
     pub fn fig4(&mut self, n: usize) -> Result<String> {
-        let gpt4o = self.remote(remote::GPT_4O);
         let ds_h = data::generate("health", n, self.seed);
         let ds_q = data::generate("qasper", n, self.seed);
         let mut t = Table::new(&["Local", "Macro Acc", "Prefill tok/query (k)", "IB view"]);
         for lp in local::LOCAL_PROFILES {
-            let p: Arc<dyn Protocol> =
-                Arc::new(MinionS::new(self.local(lp), gpt4o.clone(), MinionsConfig::default()));
+            let p = self.protocol(&ProtocolSpec::minions(lp.name, remote::GPT_4O.name))?;
             let rh = self.run(Arc::clone(&p), &ds_h)?;
             let rq = self.run(p, &ds_q)?;
             let acc = (rh.accuracy + rq.accuracy) / 2.0;
@@ -320,20 +328,13 @@ impl Exp {
     // ------------------------------------------------------------------
 
     pub fn fig5(&mut self, n: usize) -> Result<String> {
-        let gpt4o = self.remote(remote::GPT_4O);
-        let llama3b = self.local(local::LLAMA_3B);
         let ds = data::generate("health", n, self.seed);
         let mut t = Table::new(&["Knob", "Value", "Acc", "Remote tok/query (k)"]);
 
         for tasks in [1usize, 2, 4, 8, 16] {
-            let cfg = MinionsConfig {
-                plan: PlanConfig {
-                    tasks_per_round: tasks,
-                    ..PlanConfig::default()
-                },
-                ..MinionsConfig::default()
-            };
-            let r = self.run(Arc::new(MinionS::new(llama3b.clone(), gpt4o.clone(), cfg)), &ds)?;
+            let mut spec = ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name);
+            spec.tasks_per_round = tasks;
+            let r = self.run(self.protocol(&spec)?, &ds)?;
             t.row(vec![
                 "tasks/round".into(),
                 tasks.to_string(),
@@ -342,11 +343,9 @@ impl Exp {
             ]);
         }
         for samples in [1usize, 2, 4, 8, 16, 32] {
-            let cfg = MinionsConfig {
-                samples_per_task: samples,
-                ..MinionsConfig::default()
-            };
-            let r = self.run(Arc::new(MinionS::new(llama3b.clone(), gpt4o.clone(), cfg)), &ds)?;
+            let mut spec = ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name);
+            spec.samples_per_task = samples;
+            let r = self.run(self.protocol(&spec)?, &ds)?;
             t.row(vec![
                 "samples/task".into(),
                 samples.to_string(),
@@ -355,14 +354,9 @@ impl Exp {
             ]);
         }
         for ppc in [4usize, 2, 1] {
-            let cfg = MinionsConfig {
-                plan: PlanConfig {
-                    pages_per_chunk: ppc,
-                    ..PlanConfig::default()
-                },
-                ..MinionsConfig::default()
-            };
-            let r = self.run(Arc::new(MinionS::new(llama3b.clone(), gpt4o.clone(), cfg)), &ds)?;
+            let mut spec = ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name);
+            spec.pages_per_chunk = ppc;
+            let r = self.run(self.protocol(&spec)?, &ds)?;
             t.row(vec![
                 "pages/chunk".into(),
                 ppc.to_string(),
@@ -378,16 +372,17 @@ impl Exp {
     // ------------------------------------------------------------------
 
     pub fn fig6(&mut self, n: usize) -> Result<String> {
-        let gpt4o = self.remote(remote::GPT_4O);
-        let llama3b = self.local(local::LLAMA_3B);
         let mut t = Table::new(&["Protocol", "Strategy", "Max rounds", "Macro Acc", "$ / query"]);
         let datasets: Vec<Dataset> = data::DATASETS
             .iter()
             .map(|name| data::generate(name, n, self.seed))
             .collect();
         for rounds in 1..=5usize {
-            let p: Arc<dyn Protocol> =
-                Arc::new(Minion::new(llama3b.clone(), gpt4o.clone(), rounds));
+            let p = self.protocol(&ProtocolSpec::minion(
+                local::LLAMA_3B.name,
+                remote::GPT_4O.name,
+                rounds,
+            ))?;
             let results: Vec<RunResult> = datasets
                 .iter()
                 .map(|ds| self.run(Arc::clone(&p), ds))
@@ -404,13 +399,10 @@ impl Exp {
         }
         for strategy in [RoundStrategy::Retries, RoundStrategy::Scratchpad] {
             for rounds in [1usize, 2, 3] {
-                let cfg = MinionsConfig {
-                    max_rounds: rounds,
-                    strategy,
-                    ..MinionsConfig::default()
-                };
-                let p: Arc<dyn Protocol> =
-                    Arc::new(MinionS::new(llama3b.clone(), gpt4o.clone(), cfg));
+                let mut spec = ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name);
+                spec.max_rounds = rounds;
+                spec.strategy = strategy;
+                let p = self.protocol(&spec)?;
                 let results: Vec<RunResult> = datasets
                     .iter()
                     .map(|ds| self.run(Arc::clone(&p), ds))
@@ -434,17 +426,12 @@ impl Exp {
     // ------------------------------------------------------------------
 
     pub fn table2(&mut self, n: usize) -> Result<String> {
-        let llama3b = self.local(local::LLAMA_3B);
         let mut t = Table::new(&["Remote", "Release", "Fin Acc", "Hlth Acc", "Qasp Acc"]);
         let fin = data::generate("finance", n, self.seed);
         let hl = data::generate("health", n, self.seed);
         let qa = data::generate("qasper", n, self.seed);
         for rp in remote::REMOTE_PROFILES {
-            let p: Arc<dyn Protocol> = Arc::new(MinionS::new(
-                llama3b.clone(),
-                self.remote(rp),
-                MinionsConfig::default(),
-            ));
+            let p = self.protocol(&ProtocolSpec::minions(local::LLAMA_3B.name, rp.name))?;
             let rf = self.run(Arc::clone(&p), &fin)?;
             let rh = self.run(Arc::clone(&p), &hl)?;
             let rq = self.run(p, &qa)?;
@@ -470,11 +457,7 @@ impl Exp {
         let qa = data::generate("qasper", n, self.seed);
         let mut t = Table::new(&["Local", "Remote", "System date", "Hlth Acc", "Qasp Acc"]);
         for (lp, rp, date) in pairs {
-            let p: Arc<dyn Protocol> = Arc::new(MinionS::new(
-                self.local(lp),
-                self.remote(rp),
-                MinionsConfig::default(),
-            ));
+            let p = self.protocol(&ProtocolSpec::minions(lp.name, rp.name))?;
             let rh = self.run(Arc::clone(&p), &hl)?;
             let rq = self.run(p, &qa)?;
             t.row(vec![
@@ -486,7 +469,7 @@ impl Exp {
             ]);
         }
         // remote-only reference row (gpt-4-turbo alone, as in the paper)
-        let p: Arc<dyn Protocol> = Arc::new(RemoteOnly::new(self.remote(remote::GPT_4_TURBO)));
+        let p = self.protocol(&ProtocolSpec::remote_only(remote::GPT_4_TURBO.name))?;
         let rh = self.run(Arc::clone(&p), &hl)?;
         let rq = self.run(p, &qa)?;
         t.row(vec![
@@ -504,16 +487,15 @@ impl Exp {
     // ------------------------------------------------------------------
 
     pub fn fig8(&mut self, n: usize) -> Result<String> {
-        let gpt4o = self.remote(remote::GPT_4O);
-        let llama3b = self.local(local::LLAMA_3B);
         let fin = data::generate("finance", n, self.seed);
         let mut t = Table::new(&["System", "k", "Acc", "$ / query"]);
 
         for retriever in [Retriever::Bm25, Retriever::Dense] {
             for k in [1usize, 2, 4, 8, 16] {
-                let p = Rag::new(gpt4o.clone(), Arc::clone(&self.backend), retriever, k);
+                let p =
+                    self.protocol(&ProtocolSpec::rag(retriever, remote::GPT_4O.name, k))?;
                 let name = p.name();
-                let r = self.run(Arc::new(p), &fin)?;
+                let r = self.run(p, &fin)?;
                 t.row(vec![
                     name,
                     k.to_string(),
@@ -522,24 +504,29 @@ impl Exp {
                 ]);
             }
         }
-        let pm = Minion::new(llama3b.clone(), gpt4o.clone(), 3);
-        let r = self.run(Arc::new(pm), &fin)?;
+        let p = self.protocol(&ProtocolSpec::minion(
+            local::LLAMA_3B.name,
+            remote::GPT_4O.name,
+            3,
+        ))?;
+        let r = self.run(p, &fin)?;
         t.row(vec![
             "minion".into(),
             "—".into(),
             format!("{:.3}", r.accuracy),
             format!("${:.4}", r.mean_usd()),
         ]);
-        let ps = MinionS::new(llama3b.clone(), gpt4o.clone(), MinionsConfig::default());
-        let r = self.run(Arc::new(ps), &fin)?;
+        let p =
+            self.protocol(&ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name))?;
+        let r = self.run(p, &fin)?;
         t.row(vec![
             "minions".into(),
             "—".into(),
             format!("{:.3}", r.accuracy),
             format!("${:.4}", r.mean_usd()),
         ]);
-        let pr = RemoteOnly::new(gpt4o.clone());
-        let r = self.run(Arc::new(pr), &fin)?;
+        let p = self.protocol(&ProtocolSpec::remote_only(remote::GPT_4O.name))?;
+        let r = self.run(p, &fin)?;
         t.row(vec![
             "remote-only".into(),
             "—".into(),
@@ -551,8 +538,6 @@ impl Exp {
 
     /// Summarisation (BooookScore analogue): rubric scores (Table 7).
     pub fn summarization(&mut self, n: usize) -> Result<String> {
-        let gpt4o = self.remote(remote::GPT_4O);
-        let llama3b = self.local(local::LLAMA_3B);
         let books = data::generate("books", n, self.seed);
         let mut t = Table::new(&["Method", "Rubric (1-5)", "Remote tok/query (k)"]);
 
@@ -564,24 +549,25 @@ impl Exp {
             total / ds.samples.len().max(1) as f64
         };
 
-        let ps = MinionS::new(llama3b.clone(), gpt4o.clone(), MinionsConfig::default());
-        let r = self.run_lenient(Arc::new(ps), &books)?;
+        let p =
+            self.protocol(&ProtocolSpec::minions(local::LLAMA_3B.name, remote::GPT_4O.name))?;
+        let r = self.run_lenient(p, &books)?;
         t.row(vec![
             "MinionS".into(),
             format!("{:.2}", run_rubric(&r, &books)),
             format!("{:.2}", r.cost.mean_prefill_k()),
         ]);
-        let pr = RemoteOnly::new(gpt4o.clone());
-        let r = self.run_lenient(Arc::new(pr), &books)?;
+        let p = self.protocol(&ProtocolSpec::remote_only(remote::GPT_4O.name))?;
+        let r = self.run_lenient(p, &books)?;
         t.row(vec![
             "GPT-4o only".into(),
             format!("{:.2}", run_rubric(&r, &books)),
             format!("{:.2}", r.cost.mean_prefill_k()),
         ]);
         for retriever in [Retriever::Bm25, Retriever::Dense] {
-            let p = Rag::new(gpt4o.clone(), Arc::clone(&self.backend), retriever, 15);
+            let p = self.protocol(&ProtocolSpec::rag(retriever, remote::GPT_4O.name, 15))?;
             let name = p.name();
-            let r = self.run_lenient(Arc::new(p), &books)?;
+            let r = self.run_lenient(p, &books)?;
             t.row(vec![
                 name,
                 format!("{:.2}", run_rubric(&r, &books)),
@@ -629,5 +615,26 @@ mod tests {
         par.parallel = 4;
         let par_out = par.fig4(3).unwrap();
         assert_eq!(serial_out, par_out, "tables must be bit-identical");
+    }
+
+    #[test]
+    fn equal_specs_resolve_to_one_shared_instance() {
+        if !default_artifact_dir().join("manifest.json").exists() {
+            return;
+        }
+        let exp = Exp::new("native", 5).unwrap();
+        let a = exp
+            .protocol(&ProtocolSpec::minions("llama-3b", "gpt-4o"))
+            .unwrap();
+        let parsed = ProtocolSpec::parse(r#"{"kind":"minions","local":"llama-3b"}"#).unwrap();
+        let b = exp.protocol(&parsed).unwrap();
+        assert!(
+            Arc::ptr_eq(&a, &b),
+            "same canonical spec must share one memoized protocol"
+        );
+        let c = exp
+            .protocol(&ProtocolSpec::minions("llama-8b", "gpt-4o"))
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &c), "different rungs are distinct");
     }
 }

@@ -11,14 +11,17 @@
 //!   minions run --protocol minions --dataset finance --local llama-8b --n 16
 //!   minions bench table1 --n 32 --backend pjrt
 //!   minions serve --port 7171 --config configs/serve.toml
+//!
+//! `run`'s protocol flags are folded into a `ProtocolSpec` and validated
+//! exactly like an inline server spec (`POST /v1/sessions` with
+//! `"spec"`), so a misspelled protocol, profile, or strategy prints the
+//! same message here that the server returns as a 400.
 
 use minions::cache::{ChunkCache, DEFAULT_CACHE_CAPACITY};
 use minions::data;
 use minions::eval::run_protocol_parallel;
 use minions::exp::Exp;
-use minions::model::{local, local_profile, remote, remote_profile, PlanConfig};
-use minions::protocol::MinionsConfig;
-use minions::protocol::{LocalOnly, Minion, MinionS, Protocol, RemoteOnly, RoundStrategy};
+use minions::protocol::{ProtocolSpec, RoundStrategy};
 use minions::server::session::SessionRunner;
 use minions::server::{Server, ServerState};
 use minions::util::cli::{Args, Cli};
@@ -88,6 +91,42 @@ fn apply_sched_flags(exp: &Exp, a: &Args) {
     exp.configure_sched(depth, weights);
 }
 
+/// Fold the `run` protocol flags into a validated `ProtocolSpec` — the
+/// same validation path the server's inline-spec endpoint uses, so both
+/// surfaces report identical messages for the same mistake. Fallbacks
+/// come from the spec's own defaults (`ProtocolSpec::new`), not
+/// re-stated literals, so the CLI cannot drift from the wire form.
+fn spec_from_args(a: &Args) -> anyhow::Result<ProtocolSpec> {
+    // strict numeric parsing: a present-but-garbled flag must error like
+    // the server's 400 for the same field, never silently run defaults
+    let knob = |flag: &str, field: &str, default: usize| -> anyhow::Result<usize> {
+        match a.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                anyhow::anyhow!("spec field '{field}' must be a non-negative integer, got {v}")
+            }),
+        }
+    };
+    let kind = minions::protocol::ProtocolKind::parse(a.get_or("protocol", "minions"))?;
+    let mut spec = ProtocolSpec::new(kind);
+    if let Some(v) = a.get("local") {
+        spec.local = v.to_string();
+    }
+    if let Some(v) = a.get("remote") {
+        spec.remote = v.to_string();
+    }
+    if let Some(v) = a.get("strategy") {
+        spec.strategy = RoundStrategy::parse(v)?;
+    }
+    spec.max_rounds = knob("rounds", "max_rounds", spec.max_rounds)?;
+    spec.tasks_per_round = knob("tasks", "tasks_per_round", spec.tasks_per_round)?;
+    spec.samples_per_task = knob("samples", "samples_per_task", spec.samples_per_task)?;
+    spec.pages_per_chunk = knob("pages-per-chunk", "pages_per_chunk", spec.pages_per_chunk)?;
+    spec.top_k = knob("top-k", "top_k", spec.top_k)?;
+    spec.validate()?;
+    Ok(spec)
+}
+
 fn cmd_info(_args: Vec<String>) -> i32 {
     println!("minions {}", minions::version());
     match minions::runtime::Manifest::load(minions::runtime::default_artifact_dir()) {
@@ -114,22 +153,24 @@ fn cmd_info(_args: Vec<String>) -> i32 {
 fn cmd_run(args: Vec<String>) -> i32 {
     let cli = backend_opt(
         Cli::new("minions run", "run one protocol over one dataset")
-            .opt("protocol", "local|remote|minion|minions|rag-bm25|rag-dense", Some("minions"))
+            .protocol_opts()
             .opt("dataset", "finance|health|qasper|books", Some("finance"))
-            .opt("local", "local model profile", Some("llama-8b"))
-            .opt("remote", "remote model profile", Some("gpt-4o"))
-            .opt("rounds", "max rounds", Some("2"))
-            .opt("tasks", "tasks per round", Some("8"))
-            .opt("samples", "samples per task", Some("1"))
-            .opt("pages-per-chunk", "chunking granularity 1..4", Some("4"))
-            .opt("strategy", "retries|scratchpad", Some("scratchpad"))
-            .opt("top-k", "RAG retrieved chunks", Some("8"))
             .parallel_opt(),
     );
     let a = match cli.parse_from(args) {
         Ok(a) => a,
         Err(msg) => {
             eprintln!("{msg}");
+            return 2;
+        }
+    };
+    // validate the requested configuration before any startup work: an
+    // unknown protocol/profile/strategy is a usage error (exit 2) with
+    // the same message the server would return as a 400
+    let spec = match spec_from_args(&a) {
+        Ok(spec) => spec,
+        Err(e) => {
+            eprintln!("{e}");
             return 2;
         }
     };
@@ -145,47 +186,11 @@ fn cmd_run(args: Vec<String>) -> i32 {
     };
     apply_cache_flags(&mut exp, &a);
     apply_sched_flags(&exp, &a);
-    let Some(lp) = local_profile(a.get_or("local", "llama-8b")) else {
-        eprintln!("unknown local profile");
-        return 2;
-    };
-    let Some(rp) = remote_profile(a.get_or("remote", "gpt-4o")) else {
-        eprintln!("unknown remote profile");
-        return 2;
-    };
-    let cfg = MinionsConfig {
-        plan: PlanConfig {
-            tasks_per_round: a.parse_num("tasks", 8),
-            pages_per_chunk: a.parse_num("pages-per-chunk", 4),
-        },
-        samples_per_task: a.parse_num("samples", 1),
-        max_rounds: a.parse_num("rounds", 2),
-        strategy: if a.get_or("strategy", "scratchpad") == "retries" {
-            RoundStrategy::Retries
-        } else {
-            RoundStrategy::Scratchpad
-        },
-    };
-    let protocol: Arc<dyn Protocol> = match a.get_or("protocol", "minions") {
-        "local" => Arc::new(LocalOnly::new(exp.local(lp))),
-        "remote" => Arc::new(RemoteOnly::new(exp.remote(rp))),
-        "minion" => Arc::new(Minion::new(exp.local(lp), exp.remote(rp), cfg.max_rounds)),
-        "minions" => Arc::new(MinionS::new(exp.local(lp), exp.remote(rp), cfg)),
-        "rag-bm25" => Arc::new(minions::rag::Rag::new(
-            exp.remote(rp),
-            Arc::clone(&exp.backend),
-            minions::rag::Retriever::Bm25,
-            a.parse_num("top-k", 8),
-        )),
-        "rag-dense" => Arc::new(minions::rag::Rag::new(
-            exp.remote(rp),
-            Arc::clone(&exp.backend),
-            minions::rag::Retriever::Dense,
-            a.parse_num("top-k", 8),
-        )),
-        other => {
-            eprintln!("unknown protocol '{other}'");
-            return 2;
+    let protocol = match exp.protocol(&spec) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("protocol setup failed: {e}");
+            return 1;
         }
     };
     let ds = data::generate(a.get_or("dataset", "finance"), n, seed);
@@ -282,19 +287,23 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     for name in ["finance", "health", "qasper"] {
         datasets.insert(name.to_string(), data::generate(name, n, seed));
     }
-    let gpt4o = exp.remote(remote::GPT_4O);
-    let llama8b = exp.local(local::LLAMA_8B);
-    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
-    protocols.insert(
-        "minions".into(),
-        Arc::new(MinionS::new(llama8b.clone(), gpt4o.clone(), MinionsConfig::default())),
-    );
-    protocols.insert(
-        "minion".into(),
-        Arc::new(Minion::new(llama8b.clone(), gpt4o.clone(), 3)),
-    );
-    protocols.insert("remote".into(), Arc::new(RemoteOnly::new(gpt4o.clone())));
-    protocols.insert("local".into(), Arc::new(LocalOnly::new(llama8b)));
+    // the registered aliases: every legacy `"protocol": "<name>"` body
+    // keeps working, but each name is just a server-side ProtocolSpec
+    // resolved through the same factory that serves inline specs
+    let factory = exp.factory();
+    let aliases = minions::server::default_aliases();
+    let mut protocols = HashMap::new();
+    for (name, spec) in &aliases {
+        match factory.resolve(spec) {
+            Ok(p) => {
+                protocols.insert(name.clone(), p);
+            }
+            Err(e) => {
+                eprintln!("startup failed: alias '{name}': {e}");
+                return 1;
+            }
+        }
+    }
 
     let session_workers: usize = a.parse_num("session-workers", 4usize).max(1);
     let max_sessions: usize = a.parse_num("max-sessions", 256usize);
@@ -315,7 +324,14 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     };
     let metrics: Arc<minions::server::Metrics> = Default::default();
     if !state_dir.is_empty() {
-        let report = sessions.recover(&datasets, &protocols, Some(Arc::clone(&metrics)));
+        // v2 meta records resume straight from their embedded spec via
+        // the factory; v1 records resolve through the alias registry
+        let report = sessions.recover(
+            &datasets,
+            &protocols,
+            Some(&factory),
+            Some(Arc::clone(&metrics)),
+        );
         println!(
             "state-dir {state_dir}: resumed {} session(s), skipped {} terminal, {} unusable",
             report.resumed, report.skipped_terminal, report.skipped_unusable
@@ -324,6 +340,8 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     let state = Arc::new(ServerState {
         datasets,
         protocols,
+        aliases,
+        factory: Some(factory),
         metrics,
         seed,
         batcher: Some(exp.batcher()),

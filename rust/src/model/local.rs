@@ -91,10 +91,19 @@ pub const LLAMA2_7B: LocalProfile = LocalProfile {
 
 pub const LOCAL_PROFILES: [LocalProfile; 5] = [LLAMA_1B, LLAMA_3B, LLAMA_8B, QWEN_3B, QWEN_7B];
 
+/// Every profile [`local_profile`] resolves, including the Table-3
+/// retrospective preset (the ladder plus `llama2-7b`).
+const ALL_LOCAL_PROFILES: [LocalProfile; 6] =
+    [LLAMA_1B, LLAMA_3B, LLAMA_8B, QWEN_3B, QWEN_7B, LLAMA2_7B];
+
 pub fn local_profile(name: &str) -> Option<LocalProfile> {
-    [LLAMA_1B, LLAMA_3B, LLAMA_8B, QWEN_3B, QWEN_7B, LLAMA2_7B]
-        .into_iter()
-        .find(|p| p.name == name)
+    ALL_LOCAL_PROFILES.into_iter().find(|p| p.name == name)
+}
+
+/// Every name [`local_profile`] accepts — the `ProtocolSpec` validation
+/// error lists these so a typo'd rung is self-correcting.
+pub fn local_profile_names() -> Vec<&'static str> {
+    ALL_LOCAL_PROFILES.iter().map(|p| p.name).collect()
 }
 
 /// One extraction from a scored row.

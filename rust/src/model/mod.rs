@@ -9,7 +9,8 @@ pub mod local;
 pub mod remote;
 
 pub use job::{ChunkRef, Job, WorkerOutput};
-pub use local::{local_profile, LocalLm, LocalProfile, LOCAL_PROFILES};
+pub use local::{local_profile, local_profile_names, LocalLm, LocalProfile, LOCAL_PROFILES};
 pub use remote::{
-    remote_profile, Decision, MinionsRemote, PlanConfig, RemoteLm, RemoteProfile, REMOTE_PROFILES,
+    remote_profile, remote_profile_names, Decision, MinionsRemote, PlanConfig, RemoteLm,
+    RemoteProfile, REMOTE_PROFILES,
 };

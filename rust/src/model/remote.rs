@@ -113,6 +113,12 @@ pub fn remote_profile(name: &str) -> Option<RemoteProfile> {
     REMOTE_PROFILES.into_iter().find(|p| p.name == name)
 }
 
+/// Every name [`remote_profile`] accepts — the `ProtocolSpec` validation
+/// error lists these so a typo'd preset is self-correcting.
+pub fn remote_profile_names() -> Vec<&'static str> {
+    REMOTE_PROFILES.iter().map(|p| p.name).collect()
+}
+
 /// Planner knobs (the paper's parallel-workload hyper-parameters, §5.2).
 #[derive(Clone, Copy, Debug)]
 pub struct PlanConfig {

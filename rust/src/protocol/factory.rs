@@ -1,0 +1,204 @@
+//! The single place protocols are built: resolves a validated
+//! [`ProtocolSpec`] into an `Arc<dyn Protocol>` over the system's shared
+//! scoring substrate, memoized by spec fingerprint (DESIGN.md §9).
+//!
+//! A [`ProtocolFactory`] owns the wiring the `Exp` harness used to keep
+//! inline — the runtime [`Backend`], the shared [`DynamicBatcher`], the
+//! artifact [`Manifest`], and the optional cross-request [`ChunkCache`] —
+//! plus three memo tables behind one lock:
+//!
+//! - local model wrappers by profile name,
+//! - remote model wrappers by profile name,
+//! - resolved protocols by [`ProtocolSpec::fingerprint`].
+//!
+//! Memoization is the point, not an optimization: two concurrent
+//! sessions carrying the *same* spec (same canonical form, whatever key
+//! order or irrelevant fields their JSON had) resolve to one protocol
+//! instance and therefore share models, batcher coalescing, and the
+//! chunk cache — exactly like two requests against a boot-time registry
+//! entry did before specs existed. The construction itself happens under
+//! the factory lock, so a race of identical resolves can never build two
+//! instances.
+//!
+//! Everything routes through here: `Exp` delegates its `local`/`remote`
+//! accessors and resolves every exhibit's protocols from specs, the
+//! server resolves inline specs and registered aliases, and WAL v2
+//! recovery rebuilds crashed sessions from the spec embedded in their
+//! meta record — with no other call site constructing a protocol
+//! directly (the acceptance grep in ISSUE 5).
+
+use crate::cache::ChunkCache;
+use crate::model::{LocalLm, LocalProfile, RemoteLm, RemoteProfile};
+use crate::protocol::spec::{ProtocolKind, ProtocolSpec};
+use crate::protocol::{LocalOnly, Minion, MinionS, Protocol, RemoteOnly};
+use crate::rag::Rag;
+use crate::runtime::{Backend, Manifest};
+use crate::sched::DynamicBatcher;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Bound on the fingerprint-memo table. Distinct inline specs are
+/// client-controlled (every `max_rounds` value is a new fingerprint),
+/// so the memo must not grow without limit on a long-running server.
+/// At the cap an arbitrary entry is dropped before inserting: sessions
+/// already holding the evicted `Arc` are unaffected, and a re-resolve
+/// of that spec simply rebuilds it. The model-wrapper tables need no
+/// cap — they are keyed by profile name, a small closed set.
+const PROTOCOL_MEMO_CAP: usize = 1024;
+
+/// Memoized spec → protocol resolver (see module docs).
+pub struct ProtocolFactory {
+    backend: Arc<dyn Backend>,
+    batcher: Arc<DynamicBatcher>,
+    manifest: Manifest,
+    cache: Option<Arc<ChunkCache>>,
+    inner: Mutex<FactoryInner>,
+}
+
+#[derive(Default)]
+struct FactoryInner {
+    locals: HashMap<String, Arc<LocalLm>>,
+    remotes: HashMap<String, Arc<RemoteLm>>,
+    protocols: HashMap<u64, Arc<dyn Protocol>>,
+}
+
+impl ProtocolFactory {
+    /// A factory over an existing scoring substrate. `cache = None`
+    /// disables the cross-request chunk cache for every model wrapper
+    /// this factory builds (results are bit-identical either way).
+    pub fn new(
+        backend: Arc<dyn Backend>,
+        batcher: Arc<DynamicBatcher>,
+        manifest: Manifest,
+        cache: Option<Arc<ChunkCache>>,
+    ) -> ProtocolFactory {
+        ProtocolFactory {
+            backend,
+            batcher,
+            manifest,
+            cache,
+            inner: Mutex::new(FactoryInner::default()),
+        }
+    }
+
+    /// The shared scoring batcher every wrapper submits through.
+    pub fn batcher(&self) -> Arc<DynamicBatcher> {
+        Arc::clone(&self.batcher)
+    }
+
+    /// The shared chunk cache, when enabled.
+    pub fn cache(&self) -> Option<Arc<ChunkCache>> {
+        self.cache.clone()
+    }
+
+    /// The runtime backend (RAG retrieval embeds through it).
+    pub fn backend(&self) -> Arc<dyn Backend> {
+        Arc::clone(&self.backend)
+    }
+
+    /// The local model wrapper for `profile`, built once per name.
+    pub fn local(&self, profile: LocalProfile) -> Result<Arc<LocalLm>> {
+        let mut inner = self.inner.lock().unwrap();
+        self.local_locked(&mut inner, profile)
+    }
+
+    /// The remote model wrapper for `profile`, built once per name.
+    pub fn remote(&self, profile: RemoteProfile) -> Result<Arc<RemoteLm>> {
+        let mut inner = self.inner.lock().unwrap();
+        self.remote_locked(&mut inner, profile)
+    }
+
+    fn local_locked(
+        &self,
+        inner: &mut FactoryInner,
+        profile: LocalProfile,
+    ) -> Result<Arc<LocalLm>> {
+        if let Some(lm) = inner.locals.get(profile.name) {
+            return Ok(Arc::clone(lm));
+        }
+        let lm = Arc::new(LocalLm::with_cache(
+            Arc::clone(&self.batcher),
+            &self.manifest,
+            profile,
+            self.cache.clone(),
+        )?);
+        inner.locals.insert(profile.name.to_string(), Arc::clone(&lm));
+        Ok(lm)
+    }
+
+    fn remote_locked(
+        &self,
+        inner: &mut FactoryInner,
+        profile: RemoteProfile,
+    ) -> Result<Arc<RemoteLm>> {
+        if let Some(lm) = inner.remotes.get(profile.name) {
+            return Ok(Arc::clone(lm));
+        }
+        let lm = Arc::new(RemoteLm::with_cache(
+            Arc::clone(&self.batcher),
+            &self.manifest,
+            profile,
+            self.cache.clone(),
+        )?);
+        inner.remotes.insert(profile.name.to_string(), Arc::clone(&lm));
+        Ok(lm)
+    }
+
+    /// Resolve `spec` into its protocol instance. Validates first (so a
+    /// bad spec fails with the same message the parse path produces),
+    /// then returns the fingerprint-memoized instance — building it,
+    /// under the factory lock, only on first sight.
+    ///
+    /// Deliberate tradeoff: first-sight construction runs inside the
+    /// lock, so a concurrent resolve (even a memo hit) waits it out.
+    /// Construction is cheap today — model wrappers derive their state
+    /// from the already-loaded manifest; no artifact I/O happens here —
+    /// and the lock is what makes "equal specs share one instance"
+    /// race-free. Revisit with a per-fingerprint once-cell only if a
+    /// backend ever makes wrapper construction slow.
+    pub fn resolve(&self, spec: &ProtocolSpec) -> Result<Arc<dyn Protocol>> {
+        spec.validate()?;
+        let fp = spec.fingerprint();
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(p) = inner.protocols.get(&fp) {
+            return Ok(Arc::clone(p));
+        }
+        let proto: Arc<dyn Protocol> = match spec.kind {
+            ProtocolKind::LocalOnly => {
+                let local = self.local_locked(&mut inner, spec.local_profile()?)?;
+                Arc::new(LocalOnly::from_spec(spec, local)?)
+            }
+            ProtocolKind::RemoteOnly => {
+                let remote = self.remote_locked(&mut inner, spec.remote_profile()?)?;
+                Arc::new(RemoteOnly::from_spec(spec, remote)?)
+            }
+            ProtocolKind::Minion => {
+                let local = self.local_locked(&mut inner, spec.local_profile()?)?;
+                let remote = self.remote_locked(&mut inner, spec.remote_profile()?)?;
+                Arc::new(Minion::from_spec(spec, local, remote)?)
+            }
+            ProtocolKind::Minions => {
+                let local = self.local_locked(&mut inner, spec.local_profile()?)?;
+                let remote = self.remote_locked(&mut inner, spec.remote_profile()?)?;
+                Arc::new(MinionS::from_spec(spec, local, remote)?)
+            }
+            ProtocolKind::RagBm25 | ProtocolKind::RagDense => {
+                let remote = self.remote_locked(&mut inner, spec.remote_profile()?)?;
+                Arc::new(Rag::from_spec(spec, remote, Arc::clone(&self.backend))?)
+            }
+        };
+        if inner.protocols.len() >= PROTOCOL_MEMO_CAP {
+            if let Some(evict) = inner.protocols.keys().next().copied() {
+                inner.protocols.remove(&evict);
+            }
+        }
+        inner.protocols.insert(fp, Arc::clone(&proto));
+        Ok(proto)
+    }
+
+    /// Resolved protocols currently memoized (observability/tests).
+    pub fn resolved_count(&self) -> usize {
+        self.inner.lock().unwrap().protocols.len()
+    }
+}

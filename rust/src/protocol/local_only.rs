@@ -20,6 +20,16 @@ impl LocalOnly {
     pub fn new(local: Arc<LocalLm>) -> Self {
         LocalOnly { local }
     }
+
+    /// Spec-path constructor (`kind = "local"`): the only knob is the
+    /// local profile, which the caller has already resolved into `local`.
+    pub fn from_spec(
+        spec: &crate::protocol::ProtocolSpec,
+        local: Arc<LocalLm>,
+    ) -> Result<LocalOnly> {
+        spec.expect_kind(crate::protocol::ProtocolKind::LocalOnly)?;
+        Ok(LocalOnly::new(local))
+    }
 }
 
 impl Protocol for LocalOnly {

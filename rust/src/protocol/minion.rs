@@ -41,6 +41,17 @@ impl Minion {
             max_rounds: max_rounds.max(1),
         }
     }
+
+    /// Spec-path constructor (`kind = "minion"`): applies the spec's
+    /// `max_rounds` budget over the resolved model pair.
+    pub fn from_spec(
+        spec: &crate::protocol::ProtocolSpec,
+        local: Arc<LocalLm>,
+        remote: Arc<RemoteLm>,
+    ) -> Result<Minion> {
+        spec.expect_kind(crate::protocol::ProtocolKind::Minion)?;
+        Ok(Minion::new(local, remote, spec.max_rounds))
+    }
 }
 
 /// Per-part confidence the remote requires before it stops asking.

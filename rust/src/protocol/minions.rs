@@ -62,6 +62,19 @@ impl MinionS {
     pub fn new(local: Arc<LocalLm>, remote: Arc<dyn MinionsRemote>, cfg: MinionsConfig) -> Self {
         MinionS { local, remote, cfg }
     }
+
+    /// Spec-path constructor (`kind = "minions"`): applies the spec's
+    /// plan/sampling/round/strategy knobs over the resolved model pair.
+    /// (Custom [`MinionsRemote`] implementations — test stubs — are not
+    /// spec-expressible and keep using [`MinionS::new`].)
+    pub fn from_spec(
+        spec: &crate::protocol::ProtocolSpec,
+        local: Arc<LocalLm>,
+        remote: Arc<dyn MinionsRemote>,
+    ) -> Result<MinionS> {
+        spec.expect_kind(crate::protocol::ProtocolKind::Minions)?;
+        Ok(MinionS::new(local, remote, spec.minions_config()))
+    }
 }
 
 /// Fixed prompt overheads (the paper's p_decompose / p_synthesize texts).

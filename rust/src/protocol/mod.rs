@@ -17,11 +17,20 @@
 //!
 //! Every protocol returns an [`Outcome`] carrying the predicted answer and
 //! the token [`Ledger`] the cost model prices.
+//!
+//! Construction goes through exactly one path: a typed, validated
+//! [`spec::ProtocolSpec`] (protocol kind + every knob, canonical JSON
+//! form, stable fingerprint) resolved by a
+//! [`factory::ProtocolFactory`] into a shared `Arc<dyn Protocol>` —
+//! from the CLI, the serving API (inline specs and registered aliases),
+//! and WAL v2 crash recovery alike. See DESIGN.md §9.
 
+pub mod factory;
 pub mod local_only;
 pub mod minion;
 pub mod minions;
 pub mod remote_only;
+pub mod spec;
 
 use crate::cost::Ledger;
 use crate::data::{Answer, Sample};
@@ -211,6 +220,27 @@ pub enum RoundStrategy {
     Retries,
     /// the remote records what it learned (answered chunks) and zooms in
     Scratchpad,
+}
+
+impl RoundStrategy {
+    /// The wire name used by `ProtocolSpec` and the CLI `--strategy` flag.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RoundStrategy::Retries => "retries",
+            RoundStrategy::Scratchpad => "scratchpad",
+        }
+    }
+
+    /// Parse a wire name; the error lists both accepted values.
+    pub fn parse(s: &str) -> Result<RoundStrategy> {
+        match s {
+            "retries" => Ok(RoundStrategy::Retries),
+            "scratchpad" => Ok(RoundStrategy::Scratchpad),
+            other => Err(anyhow!(
+                "unknown round strategy '{other}' (supported: retries, scratchpad)"
+            )),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -454,10 +484,12 @@ pub fn event_from_json(j: &Json) -> Result<SessionEvent> {
     }
 }
 
+pub use factory::ProtocolFactory;
 pub use local_only::LocalOnly;
 pub use minion::Minion;
 pub use minions::{MinionS, MinionsConfig};
 pub use remote_only::RemoteOnly;
+pub use spec::{ProtocolKind, ProtocolSpec, SpecBuilder};
 
 #[cfg(test)]
 mod serde_tests {

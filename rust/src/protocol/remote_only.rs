@@ -18,6 +18,16 @@ impl RemoteOnly {
     pub fn new(remote: Arc<RemoteLm>) -> Self {
         RemoteOnly { remote }
     }
+
+    /// Spec-path constructor (`kind = "remote"`): the only knob is the
+    /// remote profile, already resolved into `remote` by the caller.
+    pub fn from_spec(
+        spec: &crate::protocol::ProtocolSpec,
+        remote: Arc<RemoteLm>,
+    ) -> Result<RemoteOnly> {
+        spec.expect_kind(crate::protocol::ProtocolKind::RemoteOnly)?;
+        Ok(RemoteOnly::new(remote))
+    }
 }
 
 impl Protocol for RemoteOnly {

@@ -1,0 +1,731 @@
+//! Typed protocol specifications: the single construction path for
+//! every protocol in the system (DESIGN.md §9).
+//!
+//! The paper's central finding is that the cost/quality trade-off is
+//! governed by *protocol configuration* — chunk size, rounds, planner
+//! quality, local-model ladder rung (§6 "key design choices") — so the
+//! configuration itself is a first-class, wire-travelling value here:
+//! a [`ProtocolSpec`] names a protocol kind plus every knob it consumes
+//! (model profiles by name, `MinionsConfig`/[`RoundStrategy`] settings,
+//! the RAG retriever and depth), validates them against the model
+//! registries, serializes to a **canonical JSON form**, and hashes to a
+//! stable [`ProtocolSpec::fingerprint`]. The companion
+//! [`ProtocolFactory`](crate::protocol::factory::ProtocolFactory)
+//! resolves specs into shared `Arc<dyn Protocol>` instances, memoized by
+//! that fingerprint.
+//!
+//! Everything that runs a protocol goes through a spec: the `minions
+//! run` CLI builds one from its flags, `POST /v1/sessions` accepts one
+//! inline (or a server-registered alias name), and the session WAL
+//! embeds the canonical form in its v2 meta records so crash recovery
+//! can rebuild a session without any boot-time registry.
+//!
+//! ## Canonical form
+//!
+//! [`ProtocolSpec::canonical`] emits a JSON object containing exactly
+//! the fields the spec's kind consumes (a `local`-kind spec never
+//! mentions `top_k`), with every field present — defaults are filled
+//! in, never omitted — and keys in sorted order (the [`Json`] writer
+//! serializes objects from a `BTreeMap`). Consequences:
+//!
+//! - canonical-JSON → spec → canonical-JSON is a fixed point;
+//! - the fingerprint (FNV-1a over the canonical string) is insensitive
+//!   to the key order of the JSON a client sent;
+//! - two specs that differ only in fields their kind ignores are the
+//!   *same* spec: same canonical form, same fingerprint, one shared
+//!   protocol instance in the factory.
+//!
+//! ## Validation
+//!
+//! [`ProtocolSpec::validate`] (run by [`SpecBuilder::build`],
+//! [`ProtocolSpec::from_json`], and the factory) checks the kind,
+//! resolves the local/remote profile names against the model registry
+//! ([`local_profile`]/[`remote_profile`]), and range-checks every
+//! relevant knob. Errors are client errors by construction: the server
+//! surfaces them as structured 400s and the CLI prints the identical
+//! message, so a misspelled protocol kind reads the same everywhere.
+
+use crate::data::PAGES_PER_CHUNK_MAX;
+use crate::model::{
+    local_profile, local_profile_names, remote_profile, remote_profile_names, LocalProfile,
+    PlanConfig, RemoteProfile,
+};
+use crate::protocol::{MinionsConfig, RoundStrategy};
+use crate::rag::Retriever;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+
+/// Which protocol family a spec instantiates (the `kind` field).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProtocolKind {
+    /// the on-device model alone (`"local"`)
+    LocalOnly,
+    /// the frontier model with full context (`"remote"`)
+    RemoteOnly,
+    /// free-form local↔remote chat, paper §4 (`"minion"`)
+    Minion,
+    /// decompose / execute / aggregate, paper §5 (`"minions"`)
+    Minions,
+    /// lexical retrieve-then-read baseline (`"rag-bm25"`)
+    RagBm25,
+    /// dense-embedding retrieve-then-read baseline (`"rag-dense"`)
+    RagDense,
+}
+
+/// Every kind, in the order the supported-kinds error message lists them.
+pub const KINDS: [ProtocolKind; 6] = [
+    ProtocolKind::LocalOnly,
+    ProtocolKind::RemoteOnly,
+    ProtocolKind::Minion,
+    ProtocolKind::Minions,
+    ProtocolKind::RagBm25,
+    ProtocolKind::RagDense,
+];
+
+impl ProtocolKind {
+    /// The wire name (CLI `--protocol` value and JSON `kind` field).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ProtocolKind::LocalOnly => "local",
+            ProtocolKind::RemoteOnly => "remote",
+            ProtocolKind::Minion => "minion",
+            ProtocolKind::Minions => "minions",
+            ProtocolKind::RagBm25 => "rag-bm25",
+            ProtocolKind::RagDense => "rag-dense",
+        }
+    }
+
+    /// Parse a wire name. The error message is shared verbatim by the
+    /// CLI (`minions run --protocol`) and the server's 400 body.
+    pub fn parse(s: &str) -> Result<ProtocolKind> {
+        KINDS
+            .into_iter()
+            .find(|k| k.as_str() == s)
+            .ok_or_else(|| anyhow!("unknown protocol '{s}' (supported: {})", supported_kinds()))
+    }
+
+    /// Whether this kind runs a local model (consumes the `local` field).
+    fn uses_local(&self) -> bool {
+        matches!(
+            self,
+            ProtocolKind::LocalOnly | ProtocolKind::Minion | ProtocolKind::Minions
+        )
+    }
+
+    /// Whether this kind calls the remote model (consumes `remote`).
+    fn uses_remote(&self) -> bool {
+        !matches!(self, ProtocolKind::LocalOnly)
+    }
+
+    /// Whether this kind is round-based (consumes `max_rounds`).
+    fn uses_rounds(&self) -> bool {
+        matches!(self, ProtocolKind::Minion | ProtocolKind::Minions)
+    }
+
+    /// Whether this kind takes the full MinionS plan/sampling knobs.
+    fn uses_plan(&self) -> bool {
+        matches!(self, ProtocolKind::Minions)
+    }
+
+    /// Whether this kind retrieves (consumes `top_k`).
+    fn uses_top_k(&self) -> bool {
+        matches!(self, ProtocolKind::RagBm25 | ProtocolKind::RagDense)
+    }
+}
+
+/// The `(supported: ...)` list in kind errors — one definition so the
+/// CLI and the server can never drift apart.
+pub fn supported_kinds() -> String {
+    KINDS
+        .iter()
+        .map(|k| k.as_str())
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// A validated, serde-able protocol configuration (see module docs).
+///
+/// All knob fields are always populated (with defaults when the source
+/// didn't set them); [`ProtocolSpec::canonical`] then projects out the
+/// subset the kind actually consumes. Construct one with the
+/// convenience constructors ([`ProtocolSpec::minions`], …), the
+/// [`SpecBuilder`], or [`ProtocolSpec::from_json`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProtocolSpec {
+    pub kind: ProtocolKind,
+    /// local model profile name (ladder rung), e.g. `"llama-8b"`
+    pub local: String,
+    /// remote model profile name, e.g. `"gpt-4o"`
+    pub remote: String,
+    /// round budget for the chat/decompose loops
+    pub max_rounds: usize,
+    /// MinionS planner: max distinct tasks emitted per round
+    pub tasks_per_round: usize,
+    /// MinionS planner: chunking granularity in pages (1..=4)
+    pub pages_per_chunk: usize,
+    /// MinionS: decode samples per job (repeated-sampling knob)
+    pub samples_per_task: usize,
+    /// MinionS: cross-round context strategy
+    pub strategy: RoundStrategy,
+    /// RAG: retrieved chunks shipped to the remote
+    pub top_k: usize,
+}
+
+pub const DEFAULT_LOCAL: &str = "llama-8b";
+pub const DEFAULT_REMOTE: &str = "gpt-4o";
+pub const DEFAULT_TOP_K: usize = 8;
+
+// Upper bounds on the wire-exposed knobs — generous multiples of the
+// paper's sweep ranges (rounds ≤ 5, samples ≤ 32, tasks ≤ 16, k ≤ 16).
+// Specs arrive from untrusted clients; without ceilings a single inline
+// spec could schedule effectively unbounded work on the shared batcher.
+pub const MAX_ROUNDS_CAP: usize = 32;
+pub const TASKS_PER_ROUND_CAP: usize = 64;
+pub const SAMPLES_PER_TASK_CAP: usize = 64;
+pub const TOP_K_CAP: usize = 128;
+
+impl ProtocolSpec {
+    /// A spec of `kind` with every knob at its default.
+    pub fn new(kind: ProtocolKind) -> ProtocolSpec {
+        let cfg = MinionsConfig::default();
+        ProtocolSpec {
+            kind,
+            local: DEFAULT_LOCAL.to_string(),
+            remote: DEFAULT_REMOTE.to_string(),
+            max_rounds: cfg.max_rounds,
+            tasks_per_round: cfg.plan.tasks_per_round,
+            pages_per_chunk: cfg.plan.pages_per_chunk,
+            samples_per_task: cfg.samples_per_task,
+            strategy: cfg.strategy,
+            top_k: DEFAULT_TOP_K,
+        }
+    }
+
+    /// Local-only baseline over `local`.
+    pub fn local_only(local: &str) -> ProtocolSpec {
+        let mut s = ProtocolSpec::new(ProtocolKind::LocalOnly);
+        s.local = local.to_string();
+        s
+    }
+
+    /// Remote-only baseline over `remote`.
+    pub fn remote_only(remote: &str) -> ProtocolSpec {
+        let mut s = ProtocolSpec::new(ProtocolKind::RemoteOnly);
+        s.remote = remote.to_string();
+        s
+    }
+
+    /// The chat protocol with a round budget.
+    pub fn minion(local: &str, remote: &str, max_rounds: usize) -> ProtocolSpec {
+        let mut s = ProtocolSpec::new(ProtocolKind::Minion);
+        s.local = local.to_string();
+        s.remote = remote.to_string();
+        s.max_rounds = max_rounds;
+        s
+    }
+
+    /// MinionS with the paper-default plan/sampling configuration; use
+    /// [`ProtocolSpec::builder`] for knob variants.
+    pub fn minions(local: &str, remote: &str) -> ProtocolSpec {
+        let mut s = ProtocolSpec::new(ProtocolKind::Minions);
+        s.local = local.to_string();
+        s.remote = remote.to_string();
+        s
+    }
+
+    /// A retrieve-then-read baseline over `remote`.
+    pub fn rag(retriever: Retriever, remote: &str, top_k: usize) -> ProtocolSpec {
+        let kind = match retriever {
+            Retriever::Bm25 => ProtocolKind::RagBm25,
+            Retriever::Dense => ProtocolKind::RagDense,
+        };
+        let mut s = ProtocolSpec::new(kind);
+        s.remote = remote.to_string();
+        s.top_k = top_k;
+        s
+    }
+
+    /// Start a builder for the kind named `kind` (wire name). Fails with
+    /// the shared supported-kinds message on an unknown kind.
+    pub fn builder(kind: &str) -> Result<SpecBuilder> {
+        Ok(SpecBuilder {
+            spec: ProtocolSpec::new(ProtocolKind::parse(kind)?),
+        })
+    }
+
+    /// The retriever a RAG-kind spec names (`None` for other kinds).
+    pub fn retriever(&self) -> Option<Retriever> {
+        match self.kind {
+            ProtocolKind::RagBm25 => Some(Retriever::Bm25),
+            ProtocolKind::RagDense => Some(Retriever::Dense),
+            _ => None,
+        }
+    }
+
+    /// The resolved local profile (validates the name).
+    pub fn local_profile(&self) -> Result<LocalProfile> {
+        local_profile(&self.local).ok_or_else(|| {
+            anyhow!(
+                "unknown local profile '{}' (known: {})",
+                self.local,
+                local_profile_names().join(", ")
+            )
+        })
+    }
+
+    /// The resolved remote profile (validates the name).
+    pub fn remote_profile(&self) -> Result<RemoteProfile> {
+        remote_profile(&self.remote).ok_or_else(|| {
+            anyhow!(
+                "unknown remote profile '{}' (known: {})",
+                self.remote,
+                remote_profile_names().join(", ")
+            )
+        })
+    }
+
+    /// The `MinionsConfig` a `minions`-kind spec denotes.
+    pub fn minions_config(&self) -> MinionsConfig {
+        MinionsConfig {
+            plan: PlanConfig {
+                tasks_per_round: self.tasks_per_round,
+                pages_per_chunk: self.pages_per_chunk,
+            },
+            samples_per_task: self.samples_per_task,
+            max_rounds: self.max_rounds,
+            strategy: self.strategy,
+        }
+    }
+
+    /// Check every knob the kind consumes (see module docs): profile
+    /// names resolve, and every count sits inside its closed range —
+    /// specs travel on the wire from untrusted clients, so each knob
+    /// has a ceiling as well as a floor. Knobs the kind ignores are
+    /// *not* validated — they don't reach the canonical form either.
+    pub fn validate(&self) -> Result<()> {
+        let in_range = |name: &str, value: usize, cap: usize| -> Result<()> {
+            if (1..=cap).contains(&value) {
+                Ok(())
+            } else {
+                Err(anyhow!("{name} must be 1..={cap}, got {value}"))
+            }
+        };
+        if self.kind.uses_local() {
+            self.local_profile()?;
+        }
+        if self.kind.uses_remote() {
+            self.remote_profile()?;
+        }
+        if self.kind.uses_rounds() {
+            in_range("max_rounds", self.max_rounds, MAX_ROUNDS_CAP)?;
+        }
+        if self.kind.uses_plan() {
+            in_range("tasks_per_round", self.tasks_per_round, TASKS_PER_ROUND_CAP)?;
+            in_range("samples_per_task", self.samples_per_task, SAMPLES_PER_TASK_CAP)?;
+            in_range("pages_per_chunk", self.pages_per_chunk, PAGES_PER_CHUNK_MAX)?;
+        }
+        if self.kind.uses_top_k() {
+            in_range("top_k", self.top_k, TOP_K_CAP)?;
+        }
+        Ok(())
+    }
+
+    /// The canonical JSON form: exactly the fields the kind consumes,
+    /// every one present, keys sorted (see module docs).
+    pub fn canonical(&self) -> Json {
+        let mut fields = vec![("kind", Json::str(self.kind.as_str()))];
+        if self.kind.uses_local() {
+            fields.push(("local", Json::str(self.local.clone())));
+        }
+        if self.kind.uses_remote() {
+            fields.push(("remote", Json::str(self.remote.clone())));
+        }
+        if self.kind.uses_rounds() {
+            fields.push(("max_rounds", Json::num(self.max_rounds as f64)));
+        }
+        if self.kind.uses_plan() {
+            fields.push(("tasks_per_round", Json::num(self.tasks_per_round as f64)));
+            fields.push(("pages_per_chunk", Json::num(self.pages_per_chunk as f64)));
+            fields.push(("samples_per_task", Json::num(self.samples_per_task as f64)));
+            fields.push(("strategy", Json::str(self.strategy.as_str())));
+        }
+        if self.kind.uses_top_k() {
+            fields.push(("top_k", Json::num(self.top_k as f64)));
+        }
+        Json::obj(fields)
+    }
+
+    /// [`ProtocolSpec::canonical`] as its serialized string — the
+    /// fingerprint preimage.
+    pub fn canonical_string(&self) -> String {
+        self.canonical().to_string()
+    }
+
+    /// Stable 64-bit identity: FNV-1a over the canonical string.
+    /// Equal configurations — regardless of the key order or irrelevant
+    /// fields of the JSON they arrived as — fingerprint identically,
+    /// which is what lets the factory share one protocol instance (and
+    /// its models, batcher slots, and cache) across sessions.
+    pub fn fingerprint(&self) -> u64 {
+        fnv1a64(self.canonical_string().as_bytes())
+    }
+
+    /// Parse and validate a spec from its JSON object form. Accepts any
+    /// key order; fills defaults for absent knobs; rejects unknown field
+    /// names (typo guard) with the allowed-field list.
+    pub fn from_json(j: &Json) -> Result<ProtocolSpec> {
+        let Json::Obj(map) = j else {
+            return Err(anyhow!("spec must be a JSON object, got {j}"));
+        };
+        let kind_s = map
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("spec missing 'kind' (supported: {})", supported_kinds()))?;
+        let mut spec = ProtocolSpec::new(ProtocolKind::parse(kind_s)?);
+        for (key, value) in map {
+            match key.as_str() {
+                "kind" => {}
+                "local" => spec.local = spec_str(value, key)?,
+                "remote" => spec.remote = spec_str(value, key)?,
+                "max_rounds" => spec.max_rounds = spec_usize(value, key)?,
+                "tasks_per_round" => spec.tasks_per_round = spec_usize(value, key)?,
+                "pages_per_chunk" => spec.pages_per_chunk = spec_usize(value, key)?,
+                "samples_per_task" => spec.samples_per_task = spec_usize(value, key)?,
+                "strategy" => spec.strategy = RoundStrategy::parse(&spec_str(value, key)?)?,
+                "top_k" => spec.top_k = spec_usize(value, key)?,
+                other => {
+                    return Err(anyhow!(
+                        "unknown spec field '{other}' (allowed: kind, local, remote, \
+                         max_rounds, tasks_per_round, pages_per_chunk, samples_per_task, \
+                         strategy, top_k)"
+                    ))
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Guard used by the per-protocol `from_spec` constructors: a spec
+    /// can only build the protocol family its kind names.
+    pub fn expect_kind(&self, want: ProtocolKind) -> Result<()> {
+        if self.kind == want {
+            Ok(())
+        } else {
+            Err(anyhow!(
+                "spec kind '{}' cannot build a '{}' protocol",
+                self.kind.as_str(),
+                want.as_str()
+            ))
+        }
+    }
+
+    /// [`ProtocolSpec::from_json`] over a raw JSON string.
+    pub fn parse(s: &str) -> Result<ProtocolSpec> {
+        let j = Json::parse(s).map_err(|e| anyhow!("spec is not valid JSON: {e}"))?;
+        ProtocolSpec::from_json(&j)
+    }
+}
+
+fn spec_str(value: &Json, key: &str) -> Result<String> {
+    value
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("spec field '{key}' must be a string, got {value}"))
+}
+
+fn spec_usize(value: &Json, key: &str) -> Result<usize> {
+    match value.as_f64() {
+        Some(n) if n.fract() == 0.0 && n >= 0.0 && n < 9e15 => Ok(n as usize),
+        _ => Err(anyhow!(
+            "spec field '{key}' must be a non-negative integer, got {value}"
+        )),
+    }
+}
+
+/// FNV-1a, 64-bit (offset 0xcbf29ce484222325, prime 0x100000001b3).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Fluent construction with validation at the end. Setters for knobs
+/// the kind ignores are harmless (the canonical form drops them).
+pub struct SpecBuilder {
+    spec: ProtocolSpec,
+}
+
+impl SpecBuilder {
+    pub fn local(mut self, name: &str) -> SpecBuilder {
+        self.spec.local = name.to_string();
+        self
+    }
+
+    pub fn remote(mut self, name: &str) -> SpecBuilder {
+        self.spec.remote = name.to_string();
+        self
+    }
+
+    pub fn max_rounds(mut self, rounds: usize) -> SpecBuilder {
+        self.spec.max_rounds = rounds;
+        self
+    }
+
+    pub fn tasks_per_round(mut self, tasks: usize) -> SpecBuilder {
+        self.spec.tasks_per_round = tasks;
+        self
+    }
+
+    pub fn pages_per_chunk(mut self, pages: usize) -> SpecBuilder {
+        self.spec.pages_per_chunk = pages;
+        self
+    }
+
+    pub fn samples_per_task(mut self, samples: usize) -> SpecBuilder {
+        self.spec.samples_per_task = samples;
+        self
+    }
+
+    pub fn strategy(mut self, strategy: RoundStrategy) -> SpecBuilder {
+        self.spec.strategy = strategy;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> SpecBuilder {
+        self.spec.top_k = k;
+        self
+    }
+
+    /// Validate and return the finished spec.
+    pub fn build(self) -> Result<ProtocolSpec> {
+        self.spec.validate()?;
+        Ok(self.spec)
+    }
+}
+
+/// The discovery document behind `GET /v1/protocols`: per-field help,
+/// default, and the kinds that consume it — enough for a client to
+/// compose a valid inline spec without reading the source. The
+/// `applies_to` lists are derived from the same `uses_*` predicates
+/// validation and canonicalization run on, so they cannot drift.
+pub fn schema_json() -> Json {
+    let defaults = MinionsConfig::default();
+    let applies = |pred: fn(&ProtocolKind) -> bool| -> Json {
+        Json::Arr(
+            KINDS
+                .iter()
+                .filter(|k| pred(k))
+                .map(|k| Json::str(k.as_str()))
+                .collect(),
+        )
+    };
+    let field = |help: &str, default: Json, kinds: Json| {
+        Json::obj(vec![
+            ("help", Json::str(help.to_string())),
+            ("default", default),
+            ("applies_to", kinds),
+        ])
+    };
+    Json::obj(vec![
+        (
+            "kind",
+            // required: from_json rejects a spec without it, so the
+            // schema must not advertise a default (the legacy
+            // "protocol" *name* field is what defaults to "minions")
+            field("protocol family (required)", Json::Null, applies(|_| true)),
+        ),
+        (
+            "local",
+            field(
+                "local model profile name (ladder rung)",
+                Json::str(DEFAULT_LOCAL),
+                applies(ProtocolKind::uses_local),
+            ),
+        ),
+        (
+            "remote",
+            field(
+                "remote model profile name",
+                Json::str(DEFAULT_REMOTE),
+                applies(ProtocolKind::uses_remote),
+            ),
+        ),
+        (
+            "max_rounds",
+            field(
+                &format!("round budget for the chat/decompose loops (1..={MAX_ROUNDS_CAP})"),
+                Json::num(defaults.max_rounds as f64),
+                applies(ProtocolKind::uses_rounds),
+            ),
+        ),
+        (
+            "tasks_per_round",
+            field(
+                &format!("max distinct planner tasks per round (1..={TASKS_PER_ROUND_CAP})"),
+                Json::num(defaults.plan.tasks_per_round as f64),
+                applies(ProtocolKind::uses_plan),
+            ),
+        ),
+        (
+            "pages_per_chunk",
+            field(
+                &format!("chunking granularity in pages (1..={PAGES_PER_CHUNK_MAX})"),
+                Json::num(defaults.plan.pages_per_chunk as f64),
+                applies(ProtocolKind::uses_plan),
+            ),
+        ),
+        (
+            "samples_per_task",
+            field(
+                &format!("decode samples per job, repeated sampling (1..={SAMPLES_PER_TASK_CAP})"),
+                Json::num(defaults.samples_per_task as f64),
+                applies(ProtocolKind::uses_plan),
+            ),
+        ),
+        (
+            "strategy",
+            field(
+                "cross-round context strategy: retries | scratchpad",
+                Json::str(defaults.strategy.as_str()),
+                applies(ProtocolKind::uses_plan),
+            ),
+        ),
+        (
+            "top_k",
+            field(
+                &format!("retrieved chunks shipped to the remote (1..={TOP_K_CAP})"),
+                Json::num(DEFAULT_TOP_K as f64),
+                applies(ProtocolKind::uses_top_k),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_json_is_a_fixed_point() {
+        let specs = [
+            ProtocolSpec::local_only("llama-3b"),
+            ProtocolSpec::remote_only("gpt-4o"),
+            ProtocolSpec::minion("llama-8b", "gpt-4o", 3),
+            ProtocolSpec::minions("qwen-3b", "gpt-4o-mini"),
+            ProtocolSpec::rag(Retriever::Dense, "gpt-4o", 16),
+        ];
+        for spec in specs {
+            let canon = spec.canonical_string();
+            let back = ProtocolSpec::parse(&canon).unwrap();
+            assert_eq!(back.canonical_string(), canon, "fixed point for {canon}");
+            assert_eq!(back.fingerprint(), spec.fingerprint());
+        }
+    }
+
+    #[test]
+    fn fingerprint_ignores_key_order_and_irrelevant_fields() {
+        let a = ProtocolSpec::parse(
+            r#"{"kind":"minions","local":"llama-3b","remote":"gpt-4o","max_rounds":3}"#,
+        )
+        .unwrap();
+        let b = ProtocolSpec::parse(
+            r#"{"max_rounds":3,"remote":"gpt-4o","local":"llama-3b","kind":"minions"}"#,
+        )
+        .unwrap();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.canonical_string(), b.canonical_string());
+        // a knob the kind ignores does not change the identity
+        let c = ProtocolSpec::parse(r#"{"kind":"local","local":"llama-3b","top_k":3}"#).unwrap();
+        let d = ProtocolSpec::parse(r#"{"kind":"local","local":"llama-3b"}"#).unwrap();
+        assert_eq!(c.fingerprint(), d.fingerprint());
+        // but a consumed knob does
+        let e = ProtocolSpec::minion("llama-8b", "gpt-4o", 2);
+        let f = ProtocolSpec::minion("llama-8b", "gpt-4o", 3);
+        assert_ne!(e.fingerprint(), f.fingerprint());
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs_with_helpful_messages() {
+        let err = ProtocolKind::parse("minionz").unwrap_err().to_string();
+        assert!(err.contains("unknown protocol 'minionz'"), "{err}");
+        assert!(err.contains("rag-dense"), "{err}");
+
+        let err = ProtocolSpec::parse(r#"{"kind":"minions","local":"llama-9t"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown local profile 'llama-9t'"), "{err}");
+        assert!(err.contains("llama-8b"), "{err}");
+
+        let err = ProtocolSpec::parse(r#"{"kind":"minions","pages_per_chunk":7}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pages_per_chunk"), "{err}");
+
+        let err = ProtocolSpec::parse(r#"{"kind":"minions","max_round":3}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown spec field 'max_round'"), "{err}");
+
+        let err = ProtocolSpec::parse(r#"{"kind":"rag-bm25","top_k":0}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("top_k"), "{err}");
+
+        // wire-exposed knobs are capped as well as floored
+        let err = ProtocolSpec::parse(r#"{"kind":"minions","samples_per_task":1000000}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("samples_per_task must be 1..="), "{err}");
+
+        // a non-object spec is called out as such
+        let err = ProtocolSpec::parse("[1,2]").unwrap_err().to_string();
+        assert!(err.contains("must be a JSON object"), "{err}");
+
+        let err = ProtocolSpec::parse(r#"{"kind":"minions","strategy":"zigzag"}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown round strategy"), "{err}");
+    }
+
+    #[test]
+    fn builder_round_trips_through_the_wire_form() {
+        let spec = ProtocolSpec::builder("minions")
+            .unwrap()
+            .local("llama-3b")
+            .remote("gpt-4o-mini")
+            .max_rounds(3)
+            .tasks_per_round(4)
+            .pages_per_chunk(2)
+            .samples_per_task(2)
+            .strategy(RoundStrategy::Retries)
+            .build()
+            .unwrap();
+        let back = ProtocolSpec::parse(&spec.canonical_string()).unwrap();
+        assert_eq!(back, spec);
+        assert_eq!(back.minions_config().plan.pages_per_chunk, 2);
+        assert_eq!(back.minions_config().strategy, RoundStrategy::Retries);
+    }
+
+    #[test]
+    fn schema_names_every_spec_field() {
+        let schema = schema_json();
+        for key in [
+            "kind",
+            "local",
+            "remote",
+            "max_rounds",
+            "tasks_per_round",
+            "pages_per_chunk",
+            "samples_per_task",
+            "strategy",
+            "top_k",
+        ] {
+            let f = schema.get(key).unwrap_or_else(|| panic!("missing {key}"));
+            assert!(f.get("help").is_some() && f.get("default").is_some());
+        }
+    }
+}

@@ -87,6 +87,19 @@ impl Rag {
         }
     }
 
+    /// Spec-path constructor (`kind = "rag-bm25"` or `"rag-dense"`):
+    /// the kind picks the retriever, `top_k` sets retrieval depth.
+    pub fn from_spec(
+        spec: &crate::protocol::ProtocolSpec,
+        remote: Arc<RemoteLm>,
+        backend: Arc<dyn Backend>,
+    ) -> Result<Rag> {
+        let retriever = spec.retriever().ok_or_else(|| {
+            anyhow::anyhow!("spec kind '{}' is not a RAG protocol", spec.kind.as_str())
+        })?;
+        Ok(Rag::new(remote, backend, retriever, spec.top_k))
+    }
+
     /// Rank chunks for the query; returns chunk indices.
     fn retrieve(
         &self,

@@ -10,7 +10,7 @@
 //! 2. **Fast test backend**: protocol/unit tests run against this backend
 //!    so they don't need artifact compilation.
 //! 3. **Offline engine kernel**: without the `xla-pjrt` feature the
-//!    engine thread executes [`score_kernel`] / [`embed_kernel`] directly
+//!    engine thread executes `score_kernel` / `embed_kernel` directly
 //!    (see `runtime::engine`), so the serving stack runs everywhere.
 
 use super::engine::{EmbedRequest, ScoreRequest, ScoreResponse};

@@ -11,6 +11,20 @@
 //!   the session worker pool, which interleaves `step()` calls across all
 //!   in-flight sessions (`server::session::SessionRunner`) instead of
 //!   pinning one thread per request.
+//!
+//!   Protocol selection, both endpoints: `"protocol": "<name>"` picks a
+//!   server-registered alias, or `"spec": {...}` carries an inline
+//!   [`ProtocolSpec`] — per-request protocol configuration (local-model
+//!   rung, rounds, chunking, retriever…) validated server-side and
+//!   resolved through the shared [`ProtocolFactory`], so concurrent
+//!   sessions with equal specs share one protocol instance (models,
+//!   batcher coalescing, chunk cache). Spec validation failures and
+//!   unknown protocol names are **400**s whose body names the problem
+//!   and the registered aliases; 404 is reserved for unknown session
+//!   ids.
+//! - `GET  /v1/protocols`  discovery: the registered aliases with their
+//!   canonical specs, the supported kinds, and the spec field schema
+//!   (help + default + applicable kinds per field).
 //! - `GET  /v1/sessions/:id`  poll status: running/done/failed, rounds,
 //!   event count, and the final result once finalized.
 //! - `GET  /v1/sessions/:id/events`  stream the session's
@@ -42,10 +56,12 @@
 //! of the shared scheduler so batch sweeps cannot starve it.
 //!
 //! Error handling: every route failure maps to a proper status — 400 for
-//! malformed bodies, 404 for unknown routes/resources (including
-//! TTL-evicted sessions), 429 for shed load, 500 for protocol failures —
-//! and is counted in `Metrics::errors`, as are transport-level failures
-//! (`Server::serve` no longer drops them).
+//! malformed bodies and for request-body selection errors (unknown
+//! protocol/dataset, sample out of range, invalid inline spec), 404 for
+//! unknown routes and unknown/TTL-evicted session ids, 429 for shed
+//! load, 500 for protocol failures — and is counted in
+//! `Metrics::errors`, as are transport-level failures (`Server::serve`
+//! no longer drops them).
 //!
 //! The serving path is entirely Rust + PJRT: no Python anywhere.
 //! Concurrent requests score through the shared `DynamicBatcher`, so load
@@ -61,14 +77,16 @@ use crate::cache::ChunkCache;
 use crate::cost::CostModel;
 use crate::data::Dataset;
 use crate::eval::score_strict;
-use crate::protocol::Protocol;
+use crate::model::{local, remote};
+use crate::protocol::spec::{schema_json, KINDS};
+use crate::protocol::{Protocol, ProtocolFactory, ProtocolSpec};
 use crate::sched::{lane_scope, DynamicBatcher, Lane};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
 use crate::util::rng::Rng;
 use anyhow::{anyhow, Result};
 use session::{SessionEntry, SessionRunner};
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -95,7 +113,20 @@ static NEXT_QUERY_LANE_ID: AtomicU64 = AtomicU64::new(0);
 
 pub struct ServerState {
     pub datasets: HashMap<String, Dataset>,
+    /// pre-built protocol instances by name: resolved aliases (the serve
+    /// boot path) and directly-registered stubs (tests)
     pub protocols: HashMap<String, Arc<dyn Protocol>>,
+    /// the specs behind registered alias names — listed on
+    /// `GET /v1/protocols` and embedded in WAL v2 meta records so alias
+    /// sessions recover registry-free too. Invariant: every key here is
+    /// also pre-resolved into `protocols` at boot (the factory memoizes,
+    /// so this costs one resolution per alias) — request handling has
+    /// exactly one alias resolution path, the instance map.
+    pub aliases: HashMap<String, ProtocolSpec>,
+    /// resolves inline/alias specs at request time (memoized by
+    /// fingerprint); `None` = instance-only server (tests), which
+    /// rejects inline specs with a 400
+    pub factory: Option<Arc<ProtocolFactory>>,
     pub metrics: Arc<Metrics>,
     pub seed: u64,
     /// the shared scoring batcher, when the protocols route through one —
@@ -377,15 +408,110 @@ fn find_header_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Parsed `{"dataset":..,"sample":..,"protocol":..}` run request, resolved
-/// against the preloaded state. The registry keys (`dataset`,
-/// `proto_key`) double as the session's WAL identity for crash recovery.
+/// Parsed run request (`{"dataset":..,"sample":..}` plus either
+/// `"protocol":"<alias>"` or an inline `"spec":{...}`), resolved against
+/// the preloaded state. `proto_key` + `spec` double as the session's WAL
+/// identity for crash recovery: spec-bearing requests write v2 meta
+/// records and recover registry-free.
 struct RunRequest<'a> {
     dataset: String,
     proto_key: String,
     sample_id: usize,
     sample: &'a crate::data::Sample,
-    protocol: &'a Arc<dyn Protocol>,
+    spec: Option<ProtocolSpec>,
+    protocol: Arc<dyn Protocol>,
+}
+
+/// Every name a `"protocol"` field may carry, sorted and deduped —
+/// the single source for both the 400 error body and `GET
+/// /v1/protocols`, so the two surfaces can never disagree.
+fn registered_name_list(state: &ServerState) -> Vec<&str> {
+    let mut names: Vec<&str> = state
+        .protocols
+        .keys()
+        .map(String::as_str)
+        .chain(state.aliases.keys().map(String::as_str))
+        .collect();
+    names.sort_unstable();
+    names.dedup();
+    names
+}
+
+fn registered_names(state: &ServerState) -> String {
+    registered_name_list(state).join(", ")
+}
+
+/// Resolve the request's protocol selection: an inline spec (validated,
+/// factory-resolved, memoized by fingerprint) or a registered name.
+/// Selection problems are client errors — 400, with the registered
+/// aliases listed; only post-validation factory failures are 500s.
+fn resolve_protocol(
+    body: &Json,
+    state: &ServerState,
+) -> Result<(String, Option<ProtocolSpec>, Arc<dyn Protocol>), ApiError> {
+    if let Some(spec_json) = body.get("spec") {
+        if body.get("protocol").is_some() {
+            return Err(bad_request("pass either 'protocol' or 'spec', not both"));
+        }
+        let spec = ProtocolSpec::from_json(spec_json)
+            .map_err(|e| bad_request(format!("invalid spec: {e}")))?;
+        let Some(factory) = &state.factory else {
+            return Err(bad_request(format!(
+                "this server does not accept inline specs; registered protocols: {}",
+                registered_names(state)
+            )));
+        };
+        let protocol = factory
+            .resolve(&spec)
+            .map_err(|e| internal(format!("spec resolution failed: {e}")))?;
+        let proto_key = format!("spec:{:016x}", spec.fingerprint());
+        return Ok((proto_key, Some(spec), protocol));
+    }
+    // a present-but-non-string "protocol" is a selection error, not a
+    // silent fall-through to the default
+    let name = match body.get("protocol") {
+        None => "minions",
+        Some(Json::Str(s)) => s.as_str(),
+        Some(other) => {
+            return Err(bad_request(format!(
+                "'protocol' must be a string, got {other}"
+            )))
+        }
+    };
+    // one alias path only: every registered alias is pre-resolved into
+    // the instance map at boot (see `ServerState::aliases`)
+    if let Some(p) = state.protocols.get(name) {
+        return Ok((name.to_string(), state.aliases.get(name).cloned(), Arc::clone(p)));
+    }
+    Err(bad_request(format!(
+        "unknown protocol '{name}' (registered: {})",
+        registered_names(state)
+    )))
+}
+
+/// The stock alias registry `minions serve` boots with (the serving
+/// example reuses it, so the two can never drift): each legacy
+/// `"protocol": "<name>"` body maps to one of these specs, resolved
+/// through the shared factory at boot.
+pub fn default_aliases() -> HashMap<String, ProtocolSpec> {
+    let mut aliases = HashMap::new();
+    aliases.insert(
+        "minions".to_string(),
+        ProtocolSpec::minions(local::LLAMA_8B.name, remote::GPT_4O.name),
+    );
+    aliases.insert(
+        "minion".to_string(),
+        ProtocolSpec::minion(local::LLAMA_8B.name, remote::GPT_4O.name, 3),
+    );
+    aliases.insert(
+        "remote".to_string(),
+        ProtocolSpec::remote_only(remote::GPT_4O.name),
+    );
+    aliases.insert(
+        "local".to_string(),
+        ProtocolSpec::local_only(local::LLAMA_8B.name),
+    );
+    aliases
 }
 
 fn parse_run_request<'a>(body: &str, state: &'a ServerState) -> Result<RunRequest<'a>, ApiError> {
@@ -398,28 +524,24 @@ fn parse_run_request<'a>(body: &str, state: &'a ServerState) -> Result<RunReques
         .get("sample")
         .and_then(Json::as_u64)
         .ok_or_else(|| bad_request("missing 'sample'"))? as usize;
-    let protocol = body
-        .get("protocol")
-        .and_then(Json::as_str)
-        .unwrap_or("minions");
+    // bad selections in the request body are client errors (400); 404 is
+    // reserved for unknown/evicted session ids
     let ds = state
         .datasets
         .get(dataset)
-        .ok_or_else(|| not_found(format!("unknown dataset '{dataset}'")))?;
+        .ok_or_else(|| bad_request(format!("unknown dataset '{dataset}'")))?;
     let sample = ds
         .samples
         .get(sample_id)
-        .ok_or_else(|| not_found(format!("sample {sample_id} out of range")))?;
-    let proto = state
-        .protocols
-        .get(protocol)
-        .ok_or_else(|| not_found(format!("unknown protocol '{protocol}'")))?;
+        .ok_or_else(|| bad_request(format!("sample {sample_id} out of range")))?;
+    let (proto_key, spec, protocol) = resolve_protocol(&body, state)?;
     Ok(RunRequest {
         dataset: dataset.to_string(),
-        proto_key: protocol.to_string(),
+        proto_key,
         sample_id,
         sample,
-        protocol: proto,
+        spec,
+        protocol,
     })
 }
 
@@ -438,6 +560,36 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
         ("GET", "/healthz") => Ok(Reply::Json(
             Json::obj(vec![("status", Json::str("ok"))]).to_string(),
         )),
+        ("GET", "/v1/protocols") => {
+            // discovery: registered aliases (with their canonical specs),
+            // every acceptable "protocol" name, the spec kinds, and the
+            // per-field schema — enough to compose a valid inline spec
+            let aliases: BTreeMap<String, Json> = state
+                .aliases
+                .iter()
+                .map(|(name, spec)| (name.clone(), spec.canonical()))
+                .collect();
+            let names = registered_name_list(state);
+            Ok(Reply::Json(
+                Json::obj(vec![
+                    ("aliases", Json::Obj(aliases)),
+                    (
+                        "registered",
+                        Json::Arr(names.into_iter().map(Json::str).collect()),
+                    ),
+                    (
+                        "kinds",
+                        Json::Arr(KINDS.iter().map(|k| Json::str(k.as_str())).collect()),
+                    ),
+                    (
+                        "accepts_inline_specs",
+                        Json::Bool(state.factory.is_some()),
+                    ),
+                    ("schema", schema_json()),
+                ])
+                .to_string(),
+            ))
+        }
         ("GET", "/metrics") => {
             let m = &state.metrics;
             let requests = m.requests.load(Ordering::Relaxed);
@@ -611,13 +763,17 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
             let run = parse_run_request(&req.body, state)?;
             // same stream as the blocking path: results agree bit-for-bit
             let rng = Rng::seed_from(state.seed ^ run.sample_id as u64);
+            // spec-bearing requests (inline specs and spec-backed
+            // aliases) write v2 meta records: the WAL carries the
+            // canonical spec, so recovery needs no matching registry
             let meta = wal::WalMeta {
                 proto_key: run.proto_key.clone(),
                 dataset: run.dataset.clone(),
                 sample: run.sample_id,
+                spec: run.spec.clone(),
             };
             let Some(entry) = state.sessions.spawn_capped(
-                run.protocol,
+                &run.protocol,
                 run.sample,
                 rng,
                 Some(Arc::clone(&state.metrics)),
@@ -765,6 +921,8 @@ pub fn state_with(
     Arc::new(ServerState {
         datasets,
         protocols,
+        aliases: HashMap::new(),
+        factory: None,
         metrics: Arc::new(Metrics::default()),
         seed,
         batcher: None,
@@ -847,7 +1005,7 @@ mod tests {
 
     #[test]
     fn errors_get_proper_statuses_and_are_counted() {
-        let (addr, h) = spawn_server(4);
+        let (addr, h) = spawn_server(5);
         let addr = addr.to_string();
         // unknown route → 404 with an error body
         let body = http_get(&addr, "/nope").unwrap();
@@ -855,12 +1013,21 @@ mod tests {
         // malformed json → 400
         let body = http_post(&addr, "/v1/query", "{oops").unwrap();
         assert!(body.contains("bad json"));
-        // unknown dataset → 404
+        // unknown dataset → 400 (request-body selection error)
         let body = http_post(&addr, "/v1/query", r#"{"dataset":"zzz","sample":0}"#).unwrap();
         assert!(body.contains("unknown dataset"));
+        // unknown protocol → 400 listing what is registered
+        let body = http_post(
+            &addr,
+            "/v1/query",
+            r#"{"dataset":"micro","sample":0,"protocol":"zzz"}"#,
+        )
+        .unwrap();
+        assert!(body.contains("unknown protocol 'zzz'"), "{body}");
+        assert!(body.contains("always42"), "{body}");
         let metrics = http_get(&addr, "/metrics").unwrap();
         let m = Json::parse(&metrics).unwrap();
-        assert_eq!(m.get("errors").unwrap().as_u64(), Some(3));
+        assert_eq!(m.get("errors").unwrap().as_u64(), Some(4));
         assert_eq!(m.get("requests").unwrap().as_u64(), Some(0));
         h.join().unwrap();
     }
@@ -938,6 +1105,8 @@ mod tests {
         let state = Arc::new(ServerState {
             datasets: HashMap::new(),
             protocols: HashMap::new(),
+            aliases: HashMap::new(),
+            factory: None,
             metrics: Arc::new(Metrics::default()),
             seed: 1,
             batcher: Some(Arc::clone(&batcher)),

@@ -50,7 +50,10 @@
 use crate::cost::CostModel;
 use crate::data::{Answer, Dataset, Sample};
 use crate::eval::score_strict;
-use crate::protocol::{event_from_json, rng_from_json, Protocol, ProtocolSession, SessionEvent};
+use crate::protocol::{
+    event_from_json, rng_from_json, Protocol, ProtocolFactory, ProtocolSession, ProtocolSpec,
+    SessionEvent,
+};
 use crate::sched::{lane_scope, Lane};
 use crate::server::wal::{self, ScannedLog, SessionWal, WalMeta};
 use crate::server::Metrics;
@@ -633,11 +636,18 @@ impl SessionRunner {
     /// dataset/protocol, restore failure) are left on disk for
     /// post-mortem and skipped with a warning.
     ///
+    /// Protocol resolution is versioned by the meta record: a v2 meta
+    /// embeds its canonical `ProtocolSpec` and resumes through `factory`
+    /// alone — the `protocols` registry can be empty — while a v1 meta
+    /// resolves its `proto_key` against `protocols` (the alias path).
+    /// A v2 log on a factory-less runner falls back to the registry.
+    ///
     /// Call once, after construction and before serving traffic.
     pub fn recover(
         &self,
         datasets: &HashMap<String, Dataset>,
         protocols: &HashMap<String, Arc<dyn Protocol>>,
+        factory: Option<&Arc<ProtocolFactory>>,
         metrics: Option<Arc<Metrics>>,
     ) -> RecoveryReport {
         let mut report = RecoveryReport::default();
@@ -656,7 +666,7 @@ impl SessionRunner {
             // logs — so a later spawn can never reuse it and truncate a
             // file recovery promised to preserve for post-mortem
             self.shared.next_id.fetch_max(log.id, Ordering::Relaxed);
-            match self.recover_one(&log, datasets, protocols, &metrics) {
+            match self.recover_one(&log, datasets, protocols, factory, &metrics) {
                 Ok(true) => report.resumed += 1,
                 Ok(false) => {
                     report.skipped_terminal += 1;
@@ -684,6 +694,7 @@ impl SessionRunner {
         log: &ScannedLog,
         datasets: &HashMap<String, Dataset>,
         protocols: &HashMap<String, Arc<dyn Protocol>>,
+        factory: Option<&Arc<ProtocolFactory>>,
         metrics: &Option<Arc<Metrics>>,
     ) -> Result<bool> {
         let Some(last) = log.records.last() else {
@@ -697,8 +708,12 @@ impl SessionRunner {
             return Err(anyhow!("first record is not a meta record"));
         }
         let version = meta.get("version").and_then(Json::as_u64).unwrap_or(0);
-        if version != wal::WAL_VERSION {
-            return Err(anyhow!("wal version {version}, want {}", wal::WAL_VERSION));
+        if version != wal::WAL_META_V1 && version != wal::WAL_META_V2 {
+            return Err(anyhow!(
+                "wal meta version {version}, want {} or {}",
+                wal::WAL_META_V1,
+                wal::WAL_META_V2
+            ));
         }
         let proto_key = meta
             .get("proto_key")
@@ -712,9 +727,27 @@ impl SessionRunner {
             .get("sample")
             .and_then(Json::as_u64)
             .ok_or_else(|| anyhow!("meta missing sample"))? as usize;
-        let protocol = protocols
-            .get(proto_key)
-            .ok_or_else(|| anyhow!("unknown protocol '{proto_key}'"))?;
+        // v2: the embedded spec is the protocol's identity — rebuild it
+        // through the factory with no registry dependency; v1 (or a
+        // factory-less runner) resolves the registry key instead
+        let from_registry = |key: &str| -> Result<Arc<dyn Protocol>> {
+            protocols
+                .get(key)
+                .cloned()
+                .ok_or_else(|| anyhow!("unknown protocol '{key}'"))
+        };
+        let protocol: Arc<dyn Protocol> = if version == wal::WAL_META_V2 {
+            let spec_json = meta
+                .get("spec")
+                .ok_or_else(|| anyhow!("v2 meta missing spec"))?;
+            let spec = ProtocolSpec::from_json(spec_json)?;
+            match factory {
+                Some(f) => f.resolve(&spec)?,
+                None => from_registry(proto_key)?,
+            }
+        } else {
+            from_registry(proto_key)?
+        };
         let sample = datasets
             .get(dataset_name)
             .and_then(|ds| ds.samples.get(sample_idx))

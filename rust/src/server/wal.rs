@@ -1,7 +1,8 @@
 //! Per-session write-ahead event log: the durability substrate behind
 //! `--state-dir` (DESIGN.md §8).
 //!
-//! Every [`ProtocolSession::step`] a `SessionRunner` executes appends one
+//! Every [`ProtocolSession::step`](crate::protocol::ProtocolSession::step)
+//! a `SessionRunner` executes appends one
 //! NDJSON record to `<state-dir>/session-<id>.wal` *before* the step's
 //! effects become observable to clients. A record is
 //!
@@ -14,11 +15,19 @@
 //!
 //! | type        | carries                                              |
 //! |-------------|------------------------------------------------------|
-//! | `meta`      | protocol registry key + name, dataset, sample, seed rng |
+//! | `meta`      | protocol registry key + name, dataset, sample, seed rng; v2 additionally embeds the canonical `ProtocolSpec` |
 //! | `step`      | a non-terminal event, post-step rng checkpoint, and the session's state snapshot |
 //! | `finalized` | the full `Outcome` (answer, ledger, transcript) + rng |
 //! | `failed`    | the error message (terminal)                         |
 //! | `cancelled` | nothing — the cooperative-cancel terminal marker     |
+//!
+//! Meta versioning: a v1 meta names only a registry key, so recovery
+//! needs a matching boot-time protocol registry to resume the session.
+//! A v2 meta (written whenever the session was constructed from a
+//! [`ProtocolSpec`] — inline server specs and registered aliases alike)
+//! embeds the spec's canonical JSON, so recovery rebuilds the protocol
+//! through the `ProtocolFactory` with no registry at all. v1 logs keep
+//! replaying through the registry path forever.
 //!
 //! Recovery (`SessionRunner::recover`) scans the directory, validates
 //! each log's longest intact prefix — a torn or corrupt tail (partial
@@ -34,16 +43,20 @@
 //! stably and a recovered run re-appends byte-identical records — the
 //! property `tests/durability.rs` pins by diffing whole WAL files.
 
-use crate::protocol::{event_to_json, rng_to_json, Outcome, SessionEvent};
+use crate::protocol::{event_to_json, rng_to_json, Outcome, ProtocolSpec, SessionEvent};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::fs::{File, OpenOptions};
 use std::io::{self, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
-/// Bumped when the record schema changes incompatibly; recovery refuses
-/// logs from a different version instead of misreading them.
-pub const WAL_VERSION: u64 = 1;
+/// Meta record v1: the session names a boot-time registry key only.
+pub const WAL_META_V1: u64 = 1;
+
+/// Meta record v2: the body additionally embeds the canonical
+/// [`ProtocolSpec`], making recovery registry-independent. Recovery
+/// accepts both; anything else is refused instead of misread.
+pub const WAL_META_V2: u64 = 2;
 
 // ---------------------------------------------------------------------
 // CRC-32 (IEEE 802.3), table-driven, built at compile time.
@@ -119,30 +132,44 @@ pub fn decode_record(line: &str, want_seq: u64) -> Result<Json, String> {
 // Body payloads.
 // ---------------------------------------------------------------------
 
-/// The identity a session needs to be rebuilt against a server's
-/// preloaded state: which dataset/sample it runs over and which registry
-/// entry (`proto_key`) owns it.
+/// The identity a session needs to be rebuilt: which dataset/sample it
+/// runs over, which registry entry (`proto_key`) owns it, and — when the
+/// session was spec-constructed — the [`ProtocolSpec`] itself, which
+/// makes the log recoverable without any boot-time registry (meta v2).
 #[derive(Clone, Debug)]
 pub struct WalMeta {
     pub proto_key: String,
     pub dataset: String,
     pub sample: usize,
+    /// `Some` ⇒ the meta record is written as v2 with the canonical
+    /// spec embedded; `None` ⇒ a v1 record (registry-resolved replay)
+    pub spec: Option<ProtocolSpec>,
 }
 
 pub fn meta_body(meta: &WalMeta, proto_name: &str, rng: &Rng) -> Json {
-    Json::obj(vec![
+    let version = if meta.spec.is_some() {
+        WAL_META_V2
+    } else {
+        WAL_META_V1
+    };
+    let mut fields = vec![
         ("type", Json::str("meta")),
-        ("version", Json::num(WAL_VERSION as f64)),
+        ("version", Json::num(version as f64)),
         ("proto_key", Json::str(meta.proto_key.clone())),
         ("proto_name", Json::str(proto_name.to_string())),
         ("dataset", Json::str(meta.dataset.clone())),
         ("sample", Json::num(meta.sample as f64)),
         ("rng", rng_to_json(rng)),
-    ])
+    ];
+    if let Some(spec) = &meta.spec {
+        fields.push(("spec", spec.canonical()));
+    }
+    Json::obj(fields)
 }
 
 /// A non-terminal step: the event, the post-step rng checkpoint, and the
-/// session's serialized state (what [`Protocol::restore`] consumes).
+/// session's serialized state (what
+/// [`Protocol::restore`](crate::protocol::Protocol::restore) consumes).
 pub fn step_body(event: &SessionEvent, rng: &Rng, snapshot: Json) -> Json {
     Json::obj(vec![
         ("type", Json::str("step")),
@@ -399,6 +426,7 @@ mod tests {
                 proto_key: "p".into(),
                 dataset: "d".into(),
                 sample: 0,
+                spec: None,
             },
             "proto",
             &Rng::seed_from(1),

@@ -111,6 +111,30 @@ impl Cli {
         )
     }
 
+    /// The per-request protocol-configuration knobs `minions run`
+    /// exposes — one flag per `ProtocolSpec` field, so the CLI is just
+    /// another source of specs (see `protocol::spec`): the flags are
+    /// folded into a builder and validated exactly like an inline
+    /// server spec, producing identical error messages.
+    pub fn protocol_opts(self) -> Self {
+        // defaults here are display hints only: `spec_from_args` falls
+        // back to `ProtocolSpec::new`'s defaults for anything the user
+        // did not pass, so the spec layer stays the single source
+        self.opt(
+            "protocol",
+            "local|remote|minion|minions|rag-bm25|rag-dense",
+            Some("minions"),
+        )
+        .opt("local", "local model profile", Some(crate::protocol::spec::DEFAULT_LOCAL))
+        .opt("remote", "remote model profile", Some(crate::protocol::spec::DEFAULT_REMOTE))
+        .opt("rounds", "max rounds", None)
+        .opt("tasks", "tasks per round", None)
+        .opt("samples", "samples per task", None)
+        .opt("pages-per-chunk", "chunking granularity 1..4", None)
+        .opt("strategy", "retries|scratchpad", None)
+        .opt("top-k", "RAG retrieved chunks", None)
+    }
+
     /// The durability knob for the serving stack: when set, every
     /// session's events are written-ahead to `<dir>/session-<id>.wal`
     /// and incomplete sessions are recovered (resumed from their last

@@ -24,7 +24,10 @@ use minions::util::rng::Rng;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
-use testutil::{case_dir, datasets, protocols, read_wal_lines, stack, write_wal, Gate};
+use testutil::{
+    case_dir, datasets, factory, protocols, read_wal_lines, spec_for, stack, v2_meta_mode,
+    write_wal, Gate,
+};
 
 const SEED: u64 = 11;
 const TTL: Duration = Duration::from_secs(600);
@@ -40,11 +43,21 @@ struct Baseline {
     outcome: String,
 }
 
+/// The session's WAL identity. In `MINIONS_WAL_META=v2` mode (the CI
+/// matrix's second leg) every spec-expressible protocol embeds its spec,
+/// so the sweep exercises factory-based recovery; protocols without a
+/// spec (the forced-two-round MinionS, ad-hoc stubs) stay on v1 records
+/// and keep the registry replay path covered in both modes.
 fn wal_meta(proto_key: &str, sample: usize) -> WalMeta {
     WalMeta {
         proto_key: proto_key.to_string(),
         dataset: "micro".to_string(),
         sample,
+        spec: if v2_meta_mode() {
+            spec_for(proto_key)
+        } else {
+            None
+        },
     }
 }
 
@@ -114,7 +127,10 @@ fn recover_dir(
     let protos = protocols(&s);
     let ds = datasets();
     let runner = SessionRunner::with_wal(1, TTL, dir).unwrap();
-    let report = runner.recover(&ds, &protos, None);
+    // the factory serves v2 (spec-bearing) metas; v1 metas resolve
+    // through the registry regardless
+    let f = factory(&s);
+    let report = runner.recover(&ds, &protos, Some(&f), None);
     let result = if report.resumed > 0 {
         let entry = runner.get(id).expect("recovered session is registered");
         assert_eq!(
@@ -255,7 +271,7 @@ fn terminal_logs_are_skipped_not_resurrected() {
     write_wal(&path, &base.lines, None);
     let s = stack();
     let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
-    let report = runner.recover(&datasets(), &protocols(&s), None);
+    let report = runner.recover(&datasets(), &protocols(&s), None, None);
     assert_eq!(report.resumed, 0);
     assert_eq!(report.skipped_terminal, 1);
     assert_eq!(runner.replay_skipped_terminal(), 1);
@@ -275,7 +291,7 @@ fn terminal_logs_are_skipped_not_resurrected() {
     write_wal(&path, &lines, None);
     let s = stack();
     let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
-    let report = runner.recover(&datasets(), &protocols(&s), None);
+    let report = runner.recover(&datasets(), &protocols(&s), None, None);
     assert_eq!(report.resumed, 0);
     assert_eq!(report.skipped_terminal, 1);
     assert!(runner.get(base.id).is_none(), "cancelled session never reappears");
@@ -374,7 +390,7 @@ fn backoff_streaks_coalesce_to_one_record_and_backoff_tails_resume() {
     let s = stack();
     let mut protos = protocols(&s);
     protos.insert("backoff".into(), Arc::new(BackoffTimes { n: 0 }));
-    let report = runner.recover(&ds, &protos, None);
+    let report = runner.recover(&ds, &protos, None, None);
     assert_eq!(report.resumed, 1, "backoff tail must resume");
     let entry = runner.get(id).expect("registered");
     assert_eq!(entry.wait_done(), SessionStatus::Done);
@@ -486,7 +502,7 @@ fn cancelled_durable_session_never_reappears_after_restart() {
             release: Gate::default(),
         }),
     );
-    let report = runner.recover(&ds, &protos, None);
+    let report = runner.recover(&ds, &protos, None, None);
     assert_eq!(report.resumed, 0);
     assert_eq!(report.skipped_terminal, 1);
     assert!(runner.get(id).is_none());

@@ -1,0 +1,254 @@
+//! Typed protocol-spec API integration tests (artifact-free, on the
+//! `testutil` pseudo-backend stack):
+//!
+//! - equal specs — whatever JSON key order or irrelevant fields they
+//!   arrived with — share ONE factory-cached protocol instance;
+//! - a session started from an inline spec, killed mid-run, recovers on
+//!   reboot from its WAL v2 meta record **alone**: the protocol
+//!   registry handed to recovery is empty, the embedded canonical spec
+//!   plus the factory rebuild everything, and the recovered run is
+//!   byte-identical to the uninterrupted one;
+//! - a checked-in WAL v1 meta record (fixture bytes, never regenerated)
+//!   still recovers through the registry path, alongside a v2 log in
+//!   the same state dir, with the fixture's bytes preserved verbatim
+//!   and the completion deterministic.
+
+mod testutil;
+
+use anyhow::Result;
+use minions::cost::Ledger;
+use minions::data::Sample;
+use minions::protocol::{OneShotSession, Outcome, Protocol, ProtocolSession, ProtocolSpec};
+use minions::server::session::{SessionRunner, SessionStatus};
+use minions::server::wal::{self, WalMeta};
+use minions::util::json::Json;
+use minions::util::rng::Rng;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+use testutil::{case_dir, datasets, factory, read_wal_lines, stack, write_wal};
+
+const TTL: Duration = Duration::from_secs(600);
+
+/// The WAL identity an inline-spec server session gets: a fingerprint
+/// key plus the embedded spec (v2 meta).
+fn spec_meta(spec: &ProtocolSpec, sample: usize) -> WalMeta {
+    WalMeta {
+        proto_key: format!("spec:{:016x}", spec.fingerprint()),
+        dataset: "micro".to_string(),
+        sample,
+        spec: Some(spec.clone()),
+    }
+}
+
+#[test]
+fn equal_specs_share_one_factory_cached_instance() {
+    let s = stack();
+    let f = factory(&s);
+    let a = f.resolve(&ProtocolSpec::minions("llama-3b", "gpt-4o")).unwrap();
+    // different key order on the wire, same canonical spec
+    let reordered =
+        ProtocolSpec::parse(r#"{"remote":"gpt-4o","kind":"minions","local":"llama-3b"}"#)
+            .unwrap();
+    let b = f.resolve(&reordered).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "equal specs must share one instance");
+    // a knob the kind ignores does not fork the instance
+    let widened =
+        ProtocolSpec::parse(r#"{"kind":"minions","local":"llama-3b","top_k":5}"#).unwrap();
+    let c = f.resolve(&widened).unwrap();
+    assert!(Arc::ptr_eq(&a, &c), "irrelevant knobs are not identity");
+    // a different rung is a different protocol
+    let d = f.resolve(&ProtocolSpec::minions("llama-1b", "gpt-4o")).unwrap();
+    assert!(!Arc::ptr_eq(&a, &d));
+    assert_eq!(f.resolved_count(), 2, "exactly two distinct resolutions");
+    s.batcher.stop();
+}
+
+/// Acceptance: kill an inline-spec session at every record boundary and
+/// recover with an EMPTY protocol registry — the v2 meta's embedded spec
+/// plus the factory must reproduce the uninterrupted run byte for byte.
+#[test]
+fn v2_spec_session_recovers_with_an_empty_registry() {
+    let spec = ProtocolSpec::minions("llama-3b", "gpt-4o");
+    let ds = datasets();
+    let sample = &ds.get("micro").unwrap().samples[0];
+
+    // uninterrupted durable baseline
+    let dir = case_dir("spec-v2-base");
+    let s = stack();
+    let f = factory(&s);
+    let proto = f.resolve(&spec).unwrap();
+    let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+    let entry = runner.spawn_durable(
+        &proto,
+        sample,
+        Rng::seed_from(11),
+        None,
+        spec_meta(&spec, 0),
+    );
+    assert_eq!(entry.wait_done(), SessionStatus::Done, "{}", entry.status_json());
+    let id = entry.id;
+    let rng_final = entry.rng_state();
+    runner.shutdown();
+    s.batcher.stop();
+    let base = read_wal_lines(&wal::wal_path(&dir, id));
+    assert!(base.len() >= 3, "multi-record baseline: {base:?}");
+    // the meta record is v2 and embeds the canonical spec
+    let meta = Json::parse(&base[0]).unwrap();
+    let body = meta.get("body").unwrap();
+    assert_eq!(body.get("version").and_then(Json::as_u64), Some(2));
+    assert_eq!(body.get("spec").unwrap().to_string(), spec.canonical_string());
+
+    for cut in 1..base.len() {
+        let dir = case_dir(&format!("spec-v2-cut-{cut}"));
+        write_wal(&wal::wal_path(&dir, id), &base[..cut], None);
+        let s = stack();
+        let f = factory(&s);
+        let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+        let empty: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+        let report = runner.recover(&ds, &empty, Some(&f), None);
+        assert_eq!(report.resumed, 1, "cut {cut}: must resume from the spec alone");
+        let entry = runner.get(id).expect("recovered under its original id");
+        assert_eq!(entry.wait_done(), SessionStatus::Done);
+        assert_eq!(entry.rng_state(), rng_final, "cut {cut}: rng bit-identity");
+        let lines = read_wal_lines(&wal::wal_path(&dir, id));
+        assert_eq!(lines, base, "cut {cut}: recovered WAL must be byte-identical");
+        runner.shutdown();
+        s.batcher.stop();
+    }
+}
+
+/// Without a factory, a v2 log falls back to the registry key — and a
+/// registry miss leaves the log on disk as unusable, never truncated.
+#[test]
+fn v2_log_without_factory_or_registry_is_unusable_not_destroyed() {
+    let spec = ProtocolSpec::minions("llama-3b", "gpt-4o");
+    let ds = datasets();
+    let sample = &ds.get("micro").unwrap().samples[1];
+    let dir = case_dir("spec-v2-no-factory");
+    let s = stack();
+    let f = factory(&s);
+    let proto = f.resolve(&spec).unwrap();
+    let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+    let entry = runner.spawn_durable(
+        &proto,
+        sample,
+        Rng::seed_from(12),
+        None,
+        spec_meta(&spec, 1),
+    );
+    assert_eq!(entry.wait_done(), SessionStatus::Done);
+    let id = entry.id;
+    runner.shutdown();
+    s.batcher.stop();
+    // truncate to a non-terminal prefix, then "reboot" with neither a
+    // factory nor a registry entry for the fingerprint key
+    let base = read_wal_lines(&wal::wal_path(&dir, id));
+    let dir2 = case_dir("spec-v2-no-factory-reboot");
+    let path = wal::wal_path(&dir2, id);
+    write_wal(&path, &base[..base.len() - 1], None);
+    let runner = SessionRunner::with_wal(1, TTL, &dir2).unwrap();
+    let empty: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    let report = runner.recover(&ds, &empty, None, None);
+    assert_eq!(report.resumed, 0);
+    assert_eq!(report.skipped_unusable, 1);
+    assert!(path.exists(), "unusable logs stay on disk for post-mortem");
+    runner.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// The checked-in v1 fixture.
+// ---------------------------------------------------------------------
+
+/// The deterministic stub the fixture's `proto_key` ("fixture") resolves
+/// to: one rng draw decides the ledger, so the WAL a recovery writes is
+/// a function of the recovered rng checkpoint — a real bit-identity
+/// probe, not a constant.
+struct FixtureProto;
+
+impl Protocol for FixtureProto {
+    fn name(&self) -> String {
+        "fixture".into()
+    }
+
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        let truth = sample.query.answer.clone();
+        OneShotSession::boxed(move |rng: &mut Rng| -> Result<Outcome> {
+            let mut ledger = Ledger::default();
+            ledger.remote_msg(rng.next_u64() % 100 + 1, 10);
+            Ok(Outcome {
+                answer: truth.clone(),
+                ledger,
+                rounds: 1,
+                transcript: vec![],
+            })
+        })
+    }
+}
+
+const FIXTURE_ID: u64 = 901;
+
+fn install_fixture(dir: &Path) -> &'static str {
+    let fixture = include_str!("fixtures/session-901.wal");
+    std::fs::write(wal::wal_path(dir, FIXTURE_ID), fixture).expect("install fixture");
+    fixture
+}
+
+#[test]
+fn checked_in_v1_fixture_recovers_byte_identically_alongside_v2() {
+    // build a non-terminal v2 log (meta + first step) to sit alongside
+    let spec = ProtocolSpec::minions("llama-3b", "gpt-4o");
+    let ds = datasets();
+    let sample = &ds.get("micro").unwrap().samples[0];
+    let prep = case_dir("v1-fixture-prep");
+    let s = stack();
+    let f = factory(&s);
+    let proto = f.resolve(&spec).unwrap();
+    let runner = SessionRunner::with_wal(1, TTL, &prep).unwrap();
+    let entry = runner.spawn_durable(
+        &proto,
+        sample,
+        Rng::seed_from(11),
+        None,
+        spec_meta(&spec, 0),
+    );
+    assert_eq!(entry.wait_done(), SessionStatus::Done);
+    let v2_id = entry.id;
+    runner.shutdown();
+    s.batcher.stop();
+    let v2_lines = read_wal_lines(&wal::wal_path(&prep, v2_id));
+
+    // one state dir, both generations: the fixture v1 log + a v2 prefix
+    let run = |case: &str| -> (Vec<String>, Vec<String>) {
+        let dir = case_dir(case);
+        let fixture = install_fixture(&dir);
+        write_wal(&wal::wal_path(&dir, v2_id), &v2_lines[..2], None);
+        let s = stack();
+        let f = factory(&s);
+        let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+        let mut protos: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+        protos.insert("fixture".to_string(), Arc::new(FixtureProto));
+        let report = runner.recover(&ds, &protos, Some(&f), None);
+        assert_eq!(report.resumed, 2, "v1 and v2 logs must both resume");
+        let v1 = runner.get(FIXTURE_ID).expect("fixture session registered");
+        assert_eq!(v1.wait_done(), SessionStatus::Done);
+        let v2 = runner.get(v2_id).expect("v2 session registered");
+        assert_eq!(v2.wait_done(), SessionStatus::Done);
+        runner.shutdown();
+        s.batcher.stop();
+        let v1_lines = read_wal_lines(&wal::wal_path(&dir, FIXTURE_ID));
+        // the checked-in meta record is preserved byte for byte
+        assert_eq!(format!("{}\n", v1_lines[0]), fixture);
+        assert!(v1_lines.len() >= 2, "completion appended records");
+        (v1_lines, read_wal_lines(&wal::wal_path(&dir, v2_id)))
+    };
+
+    // recovering the same fixture twice is byte-identical — the v1
+    // replay path is as deterministic as the spec path
+    let (a1, a2) = run("v1-fixture-a");
+    let (b1, b2) = run("v1-fixture-b");
+    assert_eq!(a1, b1, "v1 fixture recovery must be byte-identical");
+    assert_eq!(a2, b2, "v2 recovery must be byte-identical");
+    assert_eq!(a2, v2_lines, "v2 prefix converges to the uninterrupted run");
+}

@@ -611,6 +611,8 @@ fn saturated_admission_sheds_with_429_and_a_later_retry_succeeds() {
     let state = Arc::new(ServerState {
         datasets,
         protocols,
+        aliases: HashMap::new(),
+        factory: None,
         metrics: Arc::new(Metrics::default()),
         seed: 7,
         batcher: None,

@@ -21,7 +21,10 @@ use minions::cache::ChunkCache;
 use minions::cost::Ledger;
 use minions::data::{self, Sample};
 use minions::model::{local, remote, LocalLm, RemoteLm};
-use minions::protocol::{MinionS, MinionsConfig, Outcome, Protocol, ProtocolSession, SessionEvent};
+use minions::protocol::{
+    MinionS, MinionsConfig, Outcome, Protocol, ProtocolFactory, ProtocolSession, ProtocolSpec,
+    SessionEvent,
+};
 use minions::runtime::Manifest;
 use minions::sched::DynamicBatcher;
 use minions::server::session::SessionRunner;
@@ -283,10 +286,50 @@ fn cached_minions_state() -> (Arc<ServerState>, Arc<DynamicBatcher>) {
     let state = Arc::new(ServerState {
         datasets,
         protocols,
+        aliases: HashMap::new(),
+        factory: None,
         metrics: Arc::new(Metrics::default()),
         seed: 11,
         batcher: Some(Arc::clone(&batcher)),
         cache: Some(cache),
+        sessions: SessionRunner::new(2),
+        max_sessions: 0,
+    });
+    (state, batcher)
+}
+
+/// A spec-serving state: no pre-built instances beyond the resolved
+/// `minions` alias — everything else arrives as an inline spec through
+/// the factory (PseudoBackend stack, cache off).
+fn spec_server_state() -> (Arc<ServerState>, Arc<DynamicBatcher>) {
+    let batcher = DynamicBatcher::new(Arc::new(PseudoBackend), Duration::from_millis(2));
+    let manifest = Manifest::stub_for_tests(&[64, 128, 256, 1024], vec![1.0, 0.5, 0.25]);
+    let factory = Arc::new(ProtocolFactory::new(
+        Arc::new(PseudoBackend),
+        Arc::clone(&batcher),
+        manifest,
+        None,
+    ));
+    let mut aliases = HashMap::new();
+    aliases.insert(
+        "minions".to_string(),
+        ProtocolSpec::minions("llama-3b", "gpt-4o"),
+    );
+    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    for (name, spec) in &aliases {
+        protocols.insert(name.clone(), factory.resolve(spec).unwrap());
+    }
+    let mut datasets = HashMap::new();
+    datasets.insert("micro".to_string(), data::micro::multistep_sweep(2, 3, 3));
+    let state = Arc::new(ServerState {
+        datasets,
+        protocols,
+        aliases,
+        factory: Some(factory),
+        metrics: Arc::new(Metrics::default()),
+        seed: 11,
+        batcher: Some(Arc::clone(&batcher)),
+        cache: None,
         sessions: SessionRunner::new(2),
         max_sessions: 0,
     });
@@ -362,6 +405,8 @@ fn gated_state_with_batcher(
     let state = Arc::new(ServerState {
         datasets,
         protocols,
+        aliases: HashMap::new(),
+        factory: None,
         metrics: Arc::new(Metrics::default()),
         seed: 7,
         batcher: Some(Arc::clone(&batcher)),
@@ -556,6 +601,8 @@ fn evicted_session_polls_404_after_ttl() {
     let state = Arc::new(ServerState {
         datasets,
         protocols,
+        aliases: HashMap::new(),
+        factory: None,
         metrics: Arc::new(Metrics::default()),
         seed: 7,
         batcher: None,
@@ -614,5 +661,160 @@ fn malformed_session_body_is_400_and_counted() {
     let m = Json::parse(&metrics).unwrap();
     assert_eq!(m.get("errors").unwrap().as_u64(), Some(2));
     assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(0));
+    batcher.stop();
+}
+
+// ---------------------------------------------------------------------
+// Typed-spec API: unknown protocols are 400s (404 stays reserved for
+// session ids), inline specs are validated and run per request, and
+// GET /v1/protocols documents the surface.
+// ---------------------------------------------------------------------
+
+#[test]
+fn unknown_protocol_is_400_listing_registered_aliases() {
+    let (state, batcher) = gated_state_with_batcher(1, None);
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"protocol":"nope"}"#,
+    )
+    .unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "client error, not 404: {raw}");
+    assert!(raw.contains("unknown protocol 'nope'"), "{raw}");
+    assert!(raw.contains("stepped"), "must list registered aliases: {raw}");
+    // unknown dataset / out-of-range sample are 400s too
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"zzz","sample":0,"protocol":"stepped"}"#,
+    )
+    .unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":99,"protocol":"stepped"}"#,
+    )
+    .unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    // ...while 404 remains the unknown-session-id status
+    let raw = http_get_raw(&addr, "/v1/sessions/424242").unwrap();
+    assert!(raw.starts_with("HTTP/1.1 404"), "{raw}");
+    batcher.stop();
+}
+
+/// Acceptance: two concurrent sessions carrying *different* inline specs
+/// (different local-profile rungs) run on one server and both finalize.
+#[test]
+fn concurrent_inline_specs_with_different_rungs_both_finalize() {
+    let (state, batcher) = spec_server_state();
+    let server = Server::bind(state, "127.0.0.1:0", 4).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    // both sessions admitted before either is driven: the worker pool
+    // interleaves their steps, so they really do run concurrently
+    let bodies = [
+        r#"{"dataset":"micro","sample":0,"spec":{"kind":"minions","local":"llama-3b","remote":"gpt-4o"}}"#,
+        r#"{"dataset":"micro","sample":1,"spec":{"kind":"minions","local":"llama-1b","remote":"gpt-4o"}}"#,
+    ];
+    let mut sids = Vec::new();
+    for body in bodies {
+        let resp = http_post(&addr, "/v1/sessions", body).unwrap();
+        let sid = Json::parse(&resp)
+            .unwrap()
+            .get("session_id")
+            .and_then(Json::as_u64)
+            .unwrap_or_else(|| panic!("session admitted: {resp}"));
+        sids.push(sid);
+    }
+    for sid in sids {
+        let events = http_get(&addr, &format!("/v1/sessions/{sid}/events")).unwrap();
+        assert!(events.contains("\"finalized\""), "session {sid}: {events}");
+    }
+    let metrics = http_get(&addr, "/metrics").unwrap();
+    let m = Json::parse(&metrics).unwrap();
+    assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(2));
+    assert_eq!(m.get("sessions_active").unwrap().as_u64(), Some(0));
+    batcher.stop();
+}
+
+#[test]
+fn invalid_inline_specs_are_structured_400s() {
+    let (state, batcher) = spec_server_state();
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    // unknown kind: same message the CLI prints for --protocol minionz
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"spec":{"kind":"minionz"}}"#,
+    )
+    .unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("unknown protocol 'minionz'"), "{raw}");
+    assert!(raw.contains("rag-dense"), "must list supported kinds: {raw}");
+    // unknown profile rung
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"spec":{"kind":"minions","local":"llama-9t"}}"#,
+    )
+    .unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("unknown local profile"), "{raw}");
+    // typo'd field name
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"spec":{"kind":"minions","max_round":3}}"#,
+    )
+    .unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("unknown spec field"), "{raw}");
+    // ambiguous selection
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"protocol":"minions","spec":{"kind":"minions"}}"#,
+    )
+    .unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("not both"), "{raw}");
+
+    let metrics = http_get(&addr, "/metrics").unwrap();
+    let m = Json::parse(&metrics).unwrap();
+    assert_eq!(m.get("errors").unwrap().as_u64(), Some(4));
+    assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(0));
+    batcher.stop();
+}
+
+#[test]
+fn protocols_endpoint_lists_aliases_kinds_and_schema() {
+    let (state, batcher) = spec_server_state();
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let body = http_get(&addr, "/v1/protocols").unwrap();
+    let j = Json::parse(&body).unwrap();
+    // the registered alias appears with its canonical spec
+    let alias = j.get("aliases").and_then(|a| a.get("minions")).unwrap();
+    assert_eq!(alias.get("kind").and_then(Json::as_str), Some("minions"));
+    assert_eq!(alias.get("local").and_then(Json::as_str), Some("llama-3b"));
+    // kinds + per-field schema for composing inline specs
+    let kinds = j.get("kinds").and_then(Json::as_arr).unwrap();
+    assert!(kinds.iter().any(|k| k.as_str() == Some("rag-bm25")));
+    assert_eq!(j.get("accepts_inline_specs").and_then(Json::as_bool), Some(true));
+    let schema = j.get("schema").unwrap();
+    for field in ["local", "remote", "strategy", "top_k"] {
+        assert!(schema.get(field).is_some(), "schema missing {field}: {body}");
+    }
     batcher.stop();
 }

@@ -17,7 +17,9 @@ use minions::data::{self, Answer, Dataset, Query};
 use minions::dsl;
 use minions::model::job::WorkerOutput;
 use minions::model::{local, remote, Decision, LocalLm, MinionsRemote, PlanConfig, RemoteLm};
-use minions::protocol::{LocalOnly, Minion, MinionS, MinionsConfig, Protocol, RemoteOnly};
+use minions::protocol::{
+    LocalOnly, Minion, MinionS, MinionsConfig, Protocol, ProtocolFactory, ProtocolSpec, RemoteOnly,
+};
 use minions::rag::{Rag, Retriever};
 use minions::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
 use minions::sched::DynamicBatcher;
@@ -156,11 +158,16 @@ pub struct Stack {
     pub remote: Arc<RemoteLm>,
 }
 
+/// The stub manifest every artifact-free stack/factory shares.
+pub fn stub_manifest() -> Manifest {
+    Manifest::stub_for_tests(&[64, 128, 256, 1024], vec![1.0, 0.5, 0.25])
+}
+
 /// A fresh scoring stack — built per "process" so recovery runs against
 /// a cold batcher/cache exactly like a restarted server would.
 pub fn stack() -> Stack {
     let batcher = DynamicBatcher::new(Arc::new(PseudoBackend), Duration::from_millis(2));
-    let manifest = Manifest::stub_for_tests(&[64, 128, 256, 1024], vec![1.0, 0.5, 0.25]);
+    let manifest = stub_manifest();
     let local = Arc::new(
         LocalLm::with_cache(Arc::clone(&batcher), &manifest, local::LLAMA_3B, None).unwrap(),
     );
@@ -172,6 +179,41 @@ pub fn stack() -> Stack {
         local,
         remote,
     }
+}
+
+/// A `ProtocolFactory` over the stack's batcher and the stub manifest —
+/// what a spec-serving server (or WAL v2 recovery) would resolve specs
+/// through in these artifact-free tests. Cache off, matching `stack()`,
+/// so factory-built and stack-built protocols are bit-identical.
+pub fn factory(s: &Stack) -> Arc<ProtocolFactory> {
+    Arc::new(ProtocolFactory::new(
+        Arc::new(PseudoBackend),
+        Arc::clone(&s.batcher),
+        stub_manifest(),
+        None,
+    ))
+}
+
+/// The spec equivalent of each spec-expressible [`protocols`] registry
+/// entry, for the durability suite's WAL-v2 mode. `minions-2r` (custom
+/// forced-two-round remote) and ad-hoc test stubs have no spec — they
+/// stay on v1 meta records, keeping the registry replay path exercised.
+pub fn spec_for(proto_key: &str) -> Option<ProtocolSpec> {
+    match proto_key {
+        "local" => Some(ProtocolSpec::local_only("llama-3b")),
+        "remote" => Some(ProtocolSpec::remote_only("gpt-4o")),
+        "minion" => Some(ProtocolSpec::minion("llama-3b", "gpt-4o", 3)),
+        "minions" => Some(ProtocolSpec::minions("llama-3b", "gpt-4o")),
+        "rag" => Some(ProtocolSpec::rag(Retriever::Bm25, "gpt-4o", 4)),
+        _ => None,
+    }
+}
+
+/// `MINIONS_WAL_META=v2` flips the durability suite to spec-bearing v2
+/// meta records for every spec-expressible protocol (the CI matrix runs
+/// both modes); anything else means v1.
+pub fn v2_meta_mode() -> bool {
+    std::env::var("MINIONS_WAL_META").map(|v| v == "v2").unwrap_or(false)
 }
 
 /// Every protocol family keyed the way a server registry would key them;
