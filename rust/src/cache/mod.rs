@@ -45,6 +45,7 @@
 //! `cache_rejected_admission` on `/metrics`).
 
 use crate::sched::ScoreRow;
+use crate::util::sync::unpoisoned;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -243,7 +244,7 @@ impl ChunkCache {
     pub fn len(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.lock().unwrap().map.len())
+            .map(|s| unpoisoned(s).map.len())
             .sum()
     }
 
@@ -277,7 +278,7 @@ impl ChunkCache {
     /// once) by the backed-off retry, so the gauges stay an honest
     /// account of served demand under overload.
     pub fn probe(&self, key: &CacheKey) -> Option<Arc<Vec<f32>>> {
-        let mut shard = self.shards[self.shard_of(key)].lock().unwrap();
+        let mut shard = unpoisoned(&self.shards[self.shard_of(key)]);
         shard.map.get_mut(key).map(|e| {
             e.stamp = self.tick.fetch_add(1, Ordering::Relaxed);
             Arc::clone(&e.scores)
@@ -290,7 +291,7 @@ impl ChunkCache {
         if self.capacity == 0 {
             return;
         }
-        let mut shard = self.shards[self.shard_of(&key)].lock().unwrap();
+        let mut shard = unpoisoned(&self.shards[self.shard_of(&key)]);
         let stamp = self.tick.fetch_add(1, Ordering::Relaxed);
         if shard.map.len() >= self.shard_capacity && !shard.map.contains_key(&key) {
             let victim = shard

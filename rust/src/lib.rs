@@ -17,6 +17,10 @@
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for reproduction results.
 
+// The whole stack is safe Rust (the PJRT boundary lives behind a
+// subprocess, not FFI); forbid keeps it that way.
+#![forbid(unsafe_code)]
+
 pub mod cache;
 pub mod cost;
 pub mod data;
@@ -24,6 +28,7 @@ pub mod dsl;
 pub mod eval;
 pub mod exp;
 pub mod latency;
+pub mod lint;
 pub mod protocol;
 pub mod rag;
 pub mod sched;

@@ -1,0 +1,163 @@
+//! The panic-freedom ratchet: `LINT_BASELINE.json` (DESIGN.md §10).
+//!
+//! Rule 5's ~hundred findings cannot be fixed in one PR, so instead of
+//! flagging each one the lint counts them per file and compares against
+//! a checked-in baseline. The contract is a one-way ratchet:
+//!
+//! - a file whose count **rises** above its baseline entry fails CI
+//!   (new panic sites need a typed error or a justified pragma);
+//! - a file whose count **falls** is an improvement the baseline must
+//!   absorb (`minions lint --write-baseline`) — `tests/lint_self.rs`
+//!   asserts baseline == fresh counts, so a stale baseline cannot merge;
+//! - files absent from the baseline start at zero: new hot-path files
+//!   are born panic-free.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+pub const BASELINE_FILE: &str = "LINT_BASELINE.json";
+
+/// Per-file panic-site counts, as checked in.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Baseline {
+    pub counts: BTreeMap<String, usize>,
+}
+
+impl Baseline {
+    pub fn total(&self) -> usize {
+        self.counts.values().sum()
+    }
+}
+
+/// Load `<root>/LINT_BASELINE.json`; `Ok(None)` if absent.
+pub fn load(root: &Path) -> Result<Option<Baseline>> {
+    let path = root.join(BASELINE_FILE);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(anyhow!("read {}: {e}", path.display())),
+    };
+    let json =
+        Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+    let Some(Json::Obj(counts)) = json.get("counts") else {
+        return Err(anyhow!("{}: missing \"counts\" object", path.display()));
+    };
+    let mut out = BTreeMap::new();
+    for (file, v) in counts {
+        let n = v
+            .as_u64()
+            .ok_or_else(|| anyhow!("{}: non-integer count for {file}", path.display()))?;
+        out.insert(file.clone(), n as usize);
+    }
+    Ok(Some(Baseline { counts: out }))
+}
+
+/// Serialize fresh counts in the checked-in format.
+pub fn render(counts: &BTreeMap<String, usize>) -> String {
+    let total: usize = counts.values().sum();
+    let obj = Json::obj(vec![
+        ("rule", Json::str("panic-free")),
+        ("total", Json::num(total as f64)),
+        (
+            "counts",
+            Json::Obj(
+                counts
+                    .iter()
+                    .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    format!("{obj}\n")
+}
+
+/// Write `<root>/LINT_BASELINE.json` from fresh counts.
+pub fn write(root: &Path, counts: &BTreeMap<String, usize>) -> Result<()> {
+    let path = root.join(BASELINE_FILE);
+    std::fs::write(&path, render(counts)).map_err(|e| anyhow!("write {}: {e}", path.display()))
+}
+
+/// Ratchet verdict: `(failures, improvements)`. Failures gate CI;
+/// improvements are the files the next `--write-baseline` absorbs.
+pub fn compare(
+    fresh: &BTreeMap<String, usize>,
+    baseline: Option<&Baseline>,
+) -> (Vec<String>, Vec<String>) {
+    let Some(base) = baseline else {
+        let msg = format!(
+            "no {BASELINE_FILE} found: run `minions lint --write-baseline` and check it in"
+        );
+        return (vec![msg], Vec::new());
+    };
+    let mut failures = Vec::new();
+    let mut improvements = Vec::new();
+    for (file, &n) in fresh {
+        let b = base.counts.get(file).copied().unwrap_or(0);
+        if n > b {
+            failures.push(format!(
+                "{file}: {n} panic sites, baseline {b} — the ratchet only goes down \
+                 (add a typed error or a justified `lint: allow(panic-free, ..)` pragma)"
+            ));
+        } else if n < b {
+            improvements.push(format!("{file}: {n} panic sites, baseline {b}"));
+        }
+    }
+    for (file, &b) in &base.counts {
+        if !fresh.contains_key(file) && b > 0 {
+            improvements.push(format!("{file}: 0 panic sites, baseline {b}"));
+        }
+    }
+    (failures, improvements)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counts(pairs: &[(&str, usize)]) -> BTreeMap<String, usize> {
+        pairs.iter().map(|(k, v)| (k.to_string(), *v)).collect()
+    }
+
+    #[test]
+    fn render_round_trips_through_parse() {
+        let c = counts(&[("rust/src/sched/mod.rs", 3), ("rust/src/server/wal.rs", 7)]);
+        let dir = std::env::temp_dir().join(format!("lint-bl-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write(&dir, &c).unwrap();
+        let loaded = load(&dir).unwrap().unwrap();
+        assert_eq!(loaded.counts, c);
+        assert_eq!(loaded.total(), 10);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_baseline_is_a_failure() {
+        let (fail, imp) = compare(&counts(&[("a.rs", 1)]), None);
+        assert_eq!(fail.len(), 1);
+        assert!(imp.is_empty());
+    }
+
+    #[test]
+    fn ratchet_up_fails_down_improves() {
+        let base = Baseline {
+            counts: counts(&[("a.rs", 2), ("b.rs", 5), ("gone.rs", 1)]),
+        };
+        let fresh = counts(&[("a.rs", 3), ("b.rs", 4)]);
+        let (fail, imp) = compare(&fresh, Some(&base));
+        assert_eq!(fail.len(), 1);
+        assert!(fail[0].contains("a.rs"));
+        // b.rs went down and gone.rs vanished: two improvements
+        assert_eq!(imp.len(), 2);
+    }
+
+    #[test]
+    fn new_file_starts_at_zero() {
+        let base = Baseline {
+            counts: counts(&[]),
+        };
+        let (fail, _) = compare(&counts(&[("new.rs", 1)]), Some(&base));
+        assert_eq!(fail.len(), 1);
+    }
+}

@@ -1,0 +1,220 @@
+//! `minions lint` — a repo-invariant static analysis pass (DESIGN.md §10).
+//!
+//! The system's headline guarantees — byte-identical WAL recovery, one
+//! spec-driven construction path, typed saturation backpressure — are
+//! structural properties of the source, and the cheapest place to catch
+//! a violation is a token scan at CI time, not a fleet-wide replay
+//! divergence later. This module walks `rust/src`, `rust/tests`,
+//! `benches`, and `examples` and enforces five rules:
+//!
+//! 1. **determinism** — no clocks / hashed collections / precision
+//!    floats in serialization paths ([`rules`], rule 1);
+//! 2. **construction-path** — protocol/model constructors only in
+//!    `protocol/factory.rs`, defining files, and tests;
+//! 3. **error-taxonomy** — saturation detected only via
+//!    `sched::is_saturated`;
+//! 4. **lock-discipline** — no `let`-bound lock guard held across an
+//!    fsync/channel boundary in `sched`/`server`/`cache`;
+//! 5. **panic-free** — hot-path `unwrap`/`expect`/`panic!`/indexing
+//!    counted against [`baseline`] (`LINT_BASELINE.json`), which only
+//!    ratchets down.
+//!
+//! Diagnostics are machine-readable (`file:line: rule: msg [hint: …]`);
+//! the escape hatch is `// lint: allow(<rule>, "<reason>")` on (or in
+//! the comment block above) the flagged line. Self-tested against the
+//! known-bad corpus in `rust/tests/fixtures/lint/` — which is also why
+//! the walker skips any directory named `fixtures`.
+
+pub mod baseline;
+pub mod rules;
+pub mod scan;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use rules::Diag;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// The directories scanned, relative to the lint root.
+pub const LINT_DIRS: &[&str] = &["rust/src", "rust/tests", "benches", "examples"];
+
+/// Everything one pass produced: rule 1–4 diagnostics plus the rule 5
+/// counts and their ratchet verdict.
+#[derive(Debug)]
+pub struct LintOutcome {
+    pub diags: Vec<Diag>,
+    /// rule 5 per-file panic-site counts (hot-path files only)
+    pub counts: BTreeMap<String, usize>,
+    /// ratchet failures (count rose, or no baseline checked in)
+    pub ratchet: Vec<String>,
+    /// files now strictly below their baseline entry
+    pub improved: Vec<String>,
+    pub files_scanned: usize,
+}
+
+impl LintOutcome {
+    pub fn total_panic_sites(&self) -> usize {
+        self.counts.values().sum()
+    }
+
+    /// Gate verdict: no rule 1–4 diagnostics and no ratchet failure.
+    pub fn clean(&self) -> bool {
+        self.diags.is_empty() && self.ratchet.is_empty()
+    }
+
+    /// Human-readable report (one diagnostic per line, then the ratchet
+    /// summary).
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for d in &self.diags {
+            s.push_str(&d.to_string());
+            s.push('\n');
+        }
+        for r in &self.ratchet {
+            s.push_str(&format!("ratchet: {r}\n"));
+        }
+        for i in &self.improved {
+            s.push_str(&format!(
+                "ratchet: improved: {i} — run `minions lint --write-baseline`\n"
+            ));
+        }
+        s.push_str(&format!(
+            "lint: {} files, {} violation(s), {} ratchet failure(s), \
+             {} hot-path panic site(s) vs {}\n",
+            self.files_scanned,
+            self.diags.len(),
+            self.ratchet.len(),
+            self.total_panic_sites(),
+            baseline::BASELINE_FILE,
+        ));
+        s
+    }
+
+    /// The machine-readable report uploaded as a CI artifact.
+    pub fn report_json(&self) -> Json {
+        let diags: Vec<Json> = self
+            .diags
+            .iter()
+            .map(|d| {
+                Json::obj(vec![
+                    ("file", Json::str(d.path.clone())),
+                    ("line", Json::num(d.line as f64)),
+                    ("rule", Json::str(d.rule)),
+                    ("message", Json::str(d.msg.clone())),
+                    ("hint", Json::str(d.hint)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("violations", Json::Arr(diags)),
+            (
+                "ratchet",
+                Json::Arr(self.ratchet.iter().map(|s| Json::str(s.as_str())).collect()),
+            ),
+            (
+                "improved",
+                Json::Arr(self.improved.iter().map(|s| Json::str(s.as_str())).collect()),
+            ),
+            (
+                "panic_free",
+                Json::obj(vec![
+                    ("total", Json::num(self.total_panic_sites() as f64)),
+                    (
+                        "counts",
+                        Json::Obj(
+                            self.counts
+                                .iter()
+                                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+        ])
+    }
+}
+
+/// Collect the `.rs` files under the lint dirs, sorted for determinism.
+/// Directories named `fixtures` are skipped: the self-test corpus is
+/// deliberately in violation.
+pub fn collect_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for dir in LINT_DIRS {
+        let d = root.join(dir);
+        if d.is_dir() {
+            walk(&d, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| anyhow!("read_dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow!("read_dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "fixtures") {
+                continue;
+            }
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Root-relative path with forward slashes (the form every rule scope
+/// and baseline entry uses).
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Run the full pass over `root` (the repo checkout to lint).
+pub fn run(root: &Path) -> Result<LintOutcome> {
+    let files = collect_files(root)?;
+    if files.is_empty() {
+        return Err(anyhow!(
+            "nothing to lint under {} (expected {:?})",
+            root.display(),
+            LINT_DIRS
+        ));
+    }
+    let mut diags = Vec::new();
+    let mut counts = BTreeMap::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+        let rel = rel_path(root, path);
+        let scanned = scan::scan(&rel, &src);
+        rules::check_file(&scanned, &mut diags);
+        if rules::in_panic_scope(&rel) {
+            let n = rules::count_panic_sites(&scanned);
+            if n > 0 {
+                counts.insert(rel, n);
+            }
+        }
+    }
+    let base = baseline::load(root)?;
+    let (ratchet, improved) = baseline::compare(&counts, base.as_ref());
+    Ok(LintOutcome {
+        diags,
+        counts,
+        ratchet,
+        improved,
+        files_scanned: files.len(),
+    })
+}
+
+/// Rewrite `<root>/LINT_BASELINE.json` from this outcome's counts.
+pub fn write_baseline(root: &Path, outcome: &LintOutcome) -> Result<()> {
+    baseline::write(root, &outcome.counts)
+}

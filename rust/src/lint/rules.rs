@@ -1,0 +1,485 @@
+//! The five repo-invariant rules behind `minions lint` (DESIGN.md §10).
+//!
+//! Each rule is a lexical check over the scanner's line channels — no
+//! type information, so every rule trades a little precision for being
+//! runnable anywhere (CI, pre-commit, the fixture self-test) in
+//! milliseconds. Where a rule is deliberately imprecise (rule 4's
+//! boundary-call list, rule 5's indexing heuristic), the imprecision is
+//! documented inline and the `// lint: allow` pragma is the escape
+//! hatch for the justified exceptions.
+
+use crate::lint::scan::ScannedFile;
+
+/// One diagnostic: machine-readable (file, 1-based line, rule id) plus
+/// a human message and a fix hint.
+#[derive(Debug, Clone)]
+pub struct Diag {
+    pub path: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+    pub hint: &'static str,
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: {}: {} [hint: {}]",
+            self.path, self.line, self.rule, self.msg, self.hint
+        )
+    }
+}
+
+pub const RULE_DETERMINISM: &str = "determinism";
+pub const RULE_CONSTRUCTION: &str = "construction-path";
+pub const RULE_TAXONOMY: &str = "error-taxonomy";
+pub const RULE_LOCKS: &str = "lock-discipline";
+pub const RULE_PANIC: &str = "panic-free";
+
+/// Rule 1 scope: the files whose output must be byte-identical across
+/// runs and processes — WAL records, state snapshots, canonical spec
+/// JSON, and the rng/json substrates they serialize through. Hashed
+/// collections, clocks, and precision-formatted floats are banned here
+/// outright; everywhere else they are fine.
+const SERIALIZATION_PATHS: &[&str] = &[
+    "rust/src/server/wal.rs",
+    "rust/src/util/json.rs",
+    "rust/src/util/rng.rs",
+    "rust/src/protocol/spec.rs",
+    "rust/src/protocol/mod.rs",
+    "rust/src/protocol/factory.rs",
+    "rust/src/protocol/minions.rs",
+    "rust/src/protocol/minion.rs",
+    "rust/src/protocol/local_only.rs",
+    "rust/src/protocol/remote_only.rs",
+    "rust/src/rag/mod.rs",
+];
+
+/// Rule 2: the protocol/model constructors and the one file allowed to
+/// call each outside its own defining file — `protocol/factory.rs`.
+const CONSTRUCTORS: &[(&str, &str)] = &[
+    ("LocalOnly::new(", "rust/src/protocol/local_only.rs"),
+    ("RemoteOnly::new(", "rust/src/protocol/remote_only.rs"),
+    ("Minion::new(", "rust/src/protocol/minion.rs"),
+    ("MinionS::new(", "rust/src/protocol/minions.rs"),
+    ("Rag::new(", "rust/src/rag/mod.rs"),
+    ("LocalLm::new(", "rust/src/model/local.rs"),
+    ("LocalLm::with_cache(", "rust/src/model/local.rs"),
+    ("RemoteLm::new(", "rust/src/model/remote.rs"),
+    ("RemoteLm::with_cache(", "rust/src/model/remote.rs"),
+];
+
+const FACTORY_PATH: &str = "rust/src/protocol/factory.rs";
+
+/// Rule 4 scope prefixes: the modules whose locks sit on the serving
+/// path and must not be held across blocking boundaries.
+const LOCK_SCOPE: &[&str] = &["rust/src/sched/", "rust/src/server/", "rust/src/cache/"];
+
+/// Rule 4 boundary calls: primitives that block (fsync, channel ops)
+/// plus this repo's known fsync-wrapping helpers — the lexical pass
+/// cannot see through calls, so helpers that fsync internally are
+/// listed by name. Extend this list when adding such a helper.
+const BLOCKING_BOUNDARIES: &[&str] = &[
+    ".sync_data(",
+    ".sync_all(",
+    ".send(",
+    ".recv(",
+    ".recv_timeout(",
+    "wal_append(",
+    "finalize_cancelled(",
+];
+
+/// Rule 5 scope prefixes: the request-handling hot paths whose panic
+/// sites are counted against `LINT_BASELINE.json`.
+const PANIC_SCOPE: &[&str] = &["rust/src/server/", "rust/src/sched/"];
+
+/// Whether rule 5 counts panic sites in `path`.
+pub fn in_panic_scope(path: &str) -> bool {
+    PANIC_SCOPE.iter().any(|p| path.starts_with(p))
+}
+
+/// Run rules 1–4 over `file`, appending diagnostics. (Rule 5 counts via
+/// [`count_panic_sites`] and is judged against the baseline, not per
+/// occurrence.)
+pub fn check_file(file: &ScannedFile, out: &mut Vec<Diag>) {
+    rule_determinism(file, out);
+    rule_construction(file, out);
+    rule_taxonomy(file, out);
+    rule_locks(file, out);
+}
+
+fn push_unless_allowed(
+    file: &ScannedFile,
+    out: &mut Vec<Diag>,
+    idx: usize,
+    rule: &'static str,
+    msg: String,
+    hint: &'static str,
+) {
+    if !file.allowed(rule, idx) {
+        out.push(Diag {
+            path: file.path.clone(),
+            line: idx + 1,
+            rule,
+            msg,
+            hint,
+        });
+    }
+}
+
+/// **Rule 1 — determinism.** No wall clocks, hashed collections, or
+/// precision-formatted floats in the serialization paths: WAL CRCs,
+/// snapshot replay, and spec fingerprints all assume byte-identical
+/// re-serialization (DESIGN.md §8–§9).
+fn rule_determinism(file: &ScannedFile, out: &mut Vec<Diag>) {
+    if !SERIALIZATION_PATHS.contains(&file.path.as_str()) {
+        return;
+    }
+    const BANNED: &[(&str, &str)] = &[
+        ("SystemTime", "wall-clock time is nondeterministic"),
+        ("Instant::now", "monotonic clock reads are nondeterministic"),
+        ("HashMap", "hashed iteration order varies per process"),
+        ("HashSet", "hashed iteration order varies per process"),
+    ];
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for (tok, why) in BANNED {
+            if line.code.contains(tok) {
+                push_unless_allowed(
+                    file,
+                    out,
+                    idx,
+                    RULE_DETERMINISM,
+                    format!("`{tok}` in a serialization path: {why}"),
+                    "use BTreeMap/BTreeSet or thread a caller-supplied timestamp through",
+                );
+            }
+        }
+        if line.strings.contains("{:.") {
+            push_unless_allowed(
+                file,
+                out,
+                idx,
+                RULE_DETERMINISM,
+                "precision-formatted float in a serialization path: `{:.N}` loses \
+                 round-trip fidelity"
+                    .to_string(),
+                "serialize floats with `{}` (shortest round-trip) or as hex bits",
+            );
+        }
+    }
+}
+
+/// **Rule 2 — construction path.** Protocol/model constructors are
+/// called only by `protocol/factory.rs`, the constructor's own defining
+/// file (its `from_spec` bridge), and test code — PR 5's grep-clean
+/// acceptance rule, now enforced permanently.
+fn rule_construction(file: &ScannedFile, out: &mut Vec<Diag>) {
+    if file.path.starts_with("rust/tests/") || file.path == FACTORY_PATH {
+        return;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for (ctor, defining) in CONSTRUCTORS {
+            if file.path == *defining {
+                continue;
+            }
+            if line.code.contains(ctor) {
+                push_unless_allowed(
+                    file,
+                    out,
+                    idx,
+                    RULE_CONSTRUCTION,
+                    format!(
+                        "`{}` called outside protocol/factory.rs and its defining file",
+                        ctor.trim_end_matches('(')
+                    ),
+                    "build a ProtocolSpec and resolve it through ProtocolFactory::resolve",
+                );
+            }
+        }
+    }
+}
+
+/// **Rule 3 — error taxonomy.** Saturation is detected only via the
+/// typed `sched::is_saturated` helper; string-matching the rendered
+/// message anywhere else re-introduces the stringly-typed coupling the
+/// typed `SchedError` removed (DESIGN.md §7).
+fn rule_taxonomy(file: &ScannedFile, out: &mut Vec<Diag>) {
+    if file.path == "rust/src/sched/mod.rs" {
+        return; // is_saturated itself: the one sanctioned marker match
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        // lint: allow(error-taxonomy, "this is the detector itself: the probe strings trip their own rule")
+        if line.code.contains(".contains(") && line.strings.to_lowercase().contains("satur") {
+            push_unless_allowed(
+                file,
+                out,
+                idx,
+                RULE_TAXONOMY,
+                "saturation detected by string-matching the error message".to_string(),
+                "call sched::is_saturated(&err) instead",
+            );
+        }
+    }
+}
+
+/// **Rule 4 — lock discipline.** In `sched`/`server`/`cache`, a
+/// `let`-bound lock guard must not span an fsync, channel op, or known
+/// fsync-wrapping helper. The diagnostic anchors at the guard binding,
+/// so one pragma there covers the whole deliberate critical section.
+/// Temporary guards (`foo.lock()…` consumed within one statement) drop
+/// at the statement's end and are not tracked.
+fn rule_locks(file: &ScannedFile, out: &mut Vec<Diag>) {
+    if !LOCK_SCOPE.iter().any(|p| file.path.starts_with(p)) {
+        return;
+    }
+    struct Guard {
+        name: String,
+        bound_at: usize,
+        depth: i64,
+    }
+    let mut depth = 0i64;
+    let mut guards: Vec<Guard> = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        let code = &line.code;
+        // boundary calls hit the guards opened on *earlier* lines; a
+        // binding's own line is its initializer, not the held region
+        for b in BLOCKING_BOUNDARIES {
+            if !code.contains(b) {
+                continue;
+            }
+            for g in &guards {
+                push_unless_allowed(
+                    file,
+                    out,
+                    g.bound_at,
+                    RULE_LOCKS,
+                    format!(
+                        "lock guard `{}` (bound line {}) is held across `{}` (line {})",
+                        g.name,
+                        g.bound_at + 1,
+                        b.trim_start_matches('.').trim_end_matches('('),
+                        idx + 1
+                    ),
+                    "move the blocking call after the guard drops, or narrow the critical section",
+                );
+            }
+        }
+        // explicit early release
+        guards.retain(|g| !code.contains(&format!("drop({})", g.name)));
+        // scope tracking: a guard dies when its enclosing block closes
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    guards.retain(|g| g.depth <= depth);
+                }
+                _ => {}
+            }
+        }
+        if let Some(name) = guard_binding(code) {
+            guards.push(Guard {
+                name,
+                bound_at: idx,
+                depth,
+            });
+        }
+    }
+}
+
+/// If `code` binds a lock guard (`let g = x.lock()…` / `unpoisoned(…)`),
+/// the bound name. A chained temporary — `let v = unpoisoned(&m).get(k)`
+/// — releases its guard at the statement's end and is not a binding;
+/// only poison adapters (`unwrap`, `expect`, `unwrap_or_else`) keep the
+/// chain a guard. Condvar waits re-bind an existing guard and are
+/// already counted from its original binding.
+fn guard_binding(code: &str) -> Option<String> {
+    let after = code.trim_start().strip_prefix("let ")?;
+    let after = after.strip_prefix("mut ").unwrap_or(after);
+    let name: String = after
+        .chars()
+        .take_while(|c| c.is_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        return None;
+    }
+    let open = code
+        .find("unpoisoned(")
+        .map(|p| p + "unpoisoned".len())
+        .or_else(|| code.find(".lock(").map(|p| p + ".lock".len()))?;
+    let Some(mut rest) = skip_balanced_call(&code[open..]) else {
+        return Some(name); // call spans lines: conservatively a guard
+    };
+    loop {
+        rest = rest.trim_start();
+        let Some(chain) = rest.strip_prefix('.') else {
+            return Some(name); // statement ends here: the guard lives on
+        };
+        let method: String = chain
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if !matches!(method.as_str(), "unwrap" | "expect" | "unwrap_or_else") {
+            return None; // consumed as a temporary
+        }
+        match skip_balanced_call(&chain[method.len()..]) {
+            Some(r) => rest = r,
+            None => return Some(name),
+        }
+    }
+}
+
+/// Given a string starting at a `(`, the remainder past the matching
+/// `)` — or `None` if the call is unclosed on this line.
+fn skip_balanced_call(s: &str) -> Option<&str> {
+    let mut depth = 0i32;
+    for (i, b) in s.bytes().enumerate() {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(&s[i + 1..]);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+/// **Rule 5 — panic-freedom ratchet.** Count `unwrap()` / `expect(` /
+/// `panic!` / direct index expressions in the hot paths. Not judged per
+/// occurrence: the total per file is compared against the checked-in
+/// baseline, which may only ratchet down. Pragma'd lines are excluded —
+/// a justified panic site leaves the count entirely.
+pub fn count_panic_sites(file: &ScannedFile) -> usize {
+    let mut count = 0usize;
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test || file.allowed(RULE_PANIC, idx) {
+            continue;
+        }
+        let code = &line.code;
+        count += code.matches(".unwrap()").count();
+        count += code.matches(".expect(").count();
+        count += code.matches("panic!").count();
+        count += index_exprs(code);
+    }
+    count
+}
+
+/// Direct index expressions on a line: a `[` immediately following an
+/// identifier char, `)`, or `]` (rustfmt never separates indexing from
+/// its receiver, while array types/literals, attributes, and macro
+/// brackets are always preceded by something else).
+fn index_exprs(code: &str) -> usize {
+    let chars: Vec<char> = code.chars().collect();
+    chars
+        .iter()
+        .enumerate()
+        .filter(|(i, c)| {
+            **c == '['
+                && *i > 0
+                && (chars[i - 1].is_alphanumeric() || matches!(chars[i - 1], '_' | ')' | ']'))
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::scan;
+
+    fn diags(path: &str, src: &str) -> Vec<Diag> {
+        let f = scan(path, src);
+        let mut out = Vec::new();
+        check_file(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn determinism_flags_hashmap_in_scope_only() {
+        let bad = "use std::collections::HashMap;\n";
+        assert_eq!(diags("rust/src/server/wal.rs", bad).len(), 1);
+        assert!(diags("rust/src/server/mod.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn determinism_pragma_suppresses() {
+        let src = "// lint: allow(determinism, \"display only\")\nlet t = SystemTime::now();\n";
+        assert!(diags("rust/src/server/wal.rs", src).is_empty());
+    }
+
+    #[test]
+    fn construction_outside_factory_flagged() {
+        let src = "let p = MinionS::new(local, remote, cfg);\n";
+        let d = diags("rust/src/eval/mod.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_CONSTRUCTION);
+        // …but not in its defining file, the factory, or tests
+        assert!(diags("rust/src/protocol/minions.rs", src).is_empty());
+        assert!(diags("rust/src/protocol/factory.rs", src).is_empty());
+        assert!(diags("rust/tests/anything.rs", src).is_empty());
+    }
+
+    #[test]
+    fn taxonomy_flags_string_match() {
+        let src = "if e.to_string().contains(\"scheduler saturated\") { }\n";
+        let d = diags("rust/src/server/mod.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].rule, RULE_TAXONOMY);
+        assert!(diags("rust/src/sched/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_across_boundary_flagged_at_binding() {
+        let src = "fn f(&self) {\n    let mut st = unpoisoned(&self.state);\n    self.tx.send(1);\n}\n";
+        let d = diags("rust/src/sched/mod.rs", src);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].line, 2);
+        assert_eq!(d[0].rule, RULE_LOCKS);
+    }
+
+    #[test]
+    fn lock_dropped_before_boundary_clean() {
+        let src = "fn f(&self) {\n    let st = self.state.lock();\n    drop(st);\n    self.tx.send(1);\n}\n";
+        assert!(diags("rust/src/sched/mod.rs", src).is_empty());
+        let scoped =
+            "fn f(&self) {\n    {\n        let st = self.state.lock();\n    }\n    self.tx.send(1);\n}\n";
+        assert!(diags("rust/src/sched/mod.rs", scoped).is_empty());
+    }
+
+    #[test]
+    fn panic_sites_counted() {
+        let f = scan(
+            "rust/src/sched/mod.rs",
+            "let x = m.lock().unwrap();\nlet y = o.expect(\"y\");\npanic!(\"no\");\nlet z = xs[0];\n",
+        );
+        assert_eq!(count_panic_sites(&f), 4);
+    }
+
+    #[test]
+    fn panic_count_skips_tests_pragmas_and_lookalikes() {
+        let src = "let a = o.unwrap_or(0);\nlet b = &xs[..];\n// lint: allow(panic-free, \"startup only\")\nlet c = o.unwrap();\n#[cfg(test)]\nmod tests {\n    fn t() { o.unwrap(); }\n}\n";
+        let f = scan("rust/src/sched/mod.rs", src);
+        // only the `&xs[..]` slice counts: unwrap_or is not unwrap, the
+        // pragma'd unwrap is excluded, the test-mod unwrap is excluded
+        assert_eq!(count_panic_sites(&f), 1);
+    }
+
+    #[test]
+    fn index_heuristic_shapes() {
+        assert_eq!(index_exprs("let x = xs[0] + m[k];"), 2);
+        assert_eq!(index_exprs("fn f(v: &mut [u8]) -> [u8; 4] {"), 0);
+        assert_eq!(index_exprs("#[derive(Debug)]"), 0);
+        assert_eq!(index_exprs("let v = vec![1, 2];"), 0);
+        assert_eq!(index_exprs("let s = &buf[pos..end];"), 1);
+    }
+}

@@ -1,0 +1,391 @@
+//! Lexical scanner for `minions lint` (DESIGN.md §10).
+//!
+//! The rules never need a parse tree — every invariant they check is
+//! visible in token-level shape — but they do need the scanner to be
+//! *exact* about what is code and what is not. This file is the same
+//! idea as `dsl::lexer` (hand-rolled, line-addressed, zero deps) applied
+//! to Rust source: one pass splits a file into per-line channels —
+//!
+//! - `code`: the line with comments removed and every literal's
+//!   *contents* blanked (the delimiters stay, so token shapes like
+//!   `.contains(` and brace depth survive),
+//! - `strings`: the concatenated contents of string literals starting on
+//!   the line (rule 1's float-format facet and rule 3's marker hunt look
+//!   here),
+//! - `comment`: the text of `//` comments (where allow-pragmas live),
+//! - `in_test`: whether the line sits inside a `#[cfg(test)]` item or a
+//!   `#[test]` function (rules 2 and 5 skip those regions).
+//!
+//! Handled Rust lexical edge cases: nested block comments, escaped
+//! string characters, raw strings (`r#"…"#`, any hash depth), byte
+//! strings, char literals vs. lifetimes (`'a'` vs. `<'a>`), and literals
+//! spanning lines. Pragmas inside block comments are deliberately not
+//! recognized — a suppression should be greppable as one `//` line.
+
+/// One source line, split into channels (see module docs).
+#[derive(Debug, Default)]
+pub struct Line {
+    pub code: String,
+    pub strings: String,
+    pub comment: String,
+    pub in_test: bool,
+    pub pragmas: Vec<Pragma>,
+}
+
+/// A parsed `// lint: allow(<rule>, "<reason>")` suppression.
+#[derive(Debug, Clone)]
+pub struct Pragma {
+    pub rule: String,
+    pub reason: String,
+}
+
+/// A scanned file: root-relative path (forward slashes) plus its lines.
+#[derive(Debug)]
+pub struct ScannedFile {
+    pub path: String,
+    pub lines: Vec<Line>,
+}
+
+impl ScannedFile {
+    /// Whether a diagnostic for `rule` anchored at 0-based line `idx` is
+    /// suppressed: a pragma on the line itself, or anywhere in the
+    /// contiguous block of comment-only lines immediately above it.
+    pub fn allowed(&self, rule: &str, idx: usize) -> bool {
+        let hit = |l: &Line| l.pragmas.iter().any(|p| p.rule == rule);
+        if self.lines.get(idx).is_some_and(hit) {
+            return true;
+        }
+        let mut i = idx;
+        while i > 0 {
+            i -= 1;
+            let l = &self.lines[i];
+            let comment_only = l.code.trim().is_empty() && !l.comment.trim().is_empty();
+            if !comment_only {
+                return false;
+            }
+            if hit(l) {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+enum Mode {
+    Code,
+    Block(usize),
+    Str,
+    RawStr(usize),
+}
+
+/// Scan `src` into line channels. Never fails: unterminated literals or
+/// comments simply run to end-of-file (the lint must degrade gracefully
+/// on the known-bad fixture corpus).
+pub fn scan(path: &str, src: &str) -> ScannedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let mut mode = Mode::Code;
+    let mut i = 0usize;
+
+    macro_rules! endline {
+        () => {{
+            cur.pragmas = parse_pragmas(&cur.comment);
+            lines.push(std::mem::take(&mut cur));
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            endline!();
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    let mut j = i + 2;
+                    while j < n && chars[j] != '\n' {
+                        cur.comment.push(chars[j]);
+                        j += 1;
+                    }
+                    i = j;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if c == 'b' && next == Some('"') && !ident_before(&chars, i) {
+                    cur.code.push('"');
+                    mode = Mode::Str;
+                    i += 2;
+                } else if c == '\'' {
+                    i = scan_quote(&chars, i, &mut cur);
+                } else {
+                    let raw = if (c == 'r' || (c == 'b' && next == Some('r')))
+                        && !ident_before(&chars, i)
+                    {
+                        raw_str_hashes(&chars, i)
+                    } else {
+                        None
+                    };
+                    if let Some((hashes, body_at)) = raw {
+                        cur.code.push_str("r\"");
+                        mode = Mode::RawStr(hashes);
+                        i = body_at;
+                    } else {
+                        cur.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+            Mode::Block(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    mode = if depth == 1 {
+                        Mode::Code
+                    } else {
+                        Mode::Block(depth - 1)
+                    };
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    mode = Mode::Block(depth + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    i += 2; // the escaped char can never terminate the literal
+                } else if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    cur.strings.push(c);
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' && (1..=hashes).all(|k| chars.get(i + k) == Some(&'#')) {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                    i += 1 + hashes;
+                } else {
+                    cur.strings.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // a trailing newline already flushed its line: don't emit a phantom
+    // empty line after it (line indices must match the editor's)
+    if !(src.is_empty() || src.ends_with('\n')) {
+        endline!();
+    }
+
+    let mut file = ScannedFile {
+        path: path.to_string(),
+        lines,
+    };
+    mark_test_regions(&mut file.lines);
+    file
+}
+
+/// Whether the char before position `i` continues an identifier (so an
+/// `r` / `b` there is a name like `attr`, not a literal prefix).
+fn ident_before(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// If position `i` starts a raw (byte) string prefix, the hash count and
+/// the index just past the opening quote.
+fn raw_str_hashes(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i + 1; // past the `r`
+    if chars.get(i) == Some(&'b') {
+        j += 1; // `br`
+    }
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Disambiguate `'` at position `i`: a char literal is consumed (its
+/// contents blanked), a lifetime is emitted as code. Returns the next
+/// scan position.
+fn scan_quote(chars: &[char], i: usize, cur: &mut Line) -> usize {
+    let n = chars.len();
+    if i + 1 < n && chars[i + 1] == '\\' {
+        // escaped char literal: '\n', '\'', '\u{1F600}' …
+        let mut j = i + 2;
+        if chars.get(j) == Some(&'u') {
+            while j < n && chars[j] != '}' {
+                j += 1;
+            }
+        }
+        while j < n && chars[j] != '\'' {
+            j += 1;
+        }
+        cur.code.push_str("' '");
+        return j + 1;
+    }
+    if i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\'' {
+        cur.code.push_str("' '"); // plain char literal 'x'
+        return i + 3;
+    }
+    cur.code.push('\''); // lifetime
+    i + 1
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item or `#[test]` fn.
+/// Brace-counted on the masked code, so braces in literals or comments
+/// cannot derail the region.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut i = 0usize;
+    while i < lines.len() {
+        let t = lines[i].code.trim();
+        if !(t.starts_with("#[cfg(test)]") || t == "#[test]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            lines[j].in_test = true;
+            if opened && depth <= 0 {
+                break;
+            }
+            if !opened && lines[j].code.contains(';') {
+                break; // braceless item, e.g. `#[cfg(test)] mod tests;`
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+}
+
+/// Extract `lint: allow(<rule>, "<reason>")` pragmas from comment text.
+/// A pragma with an empty reason is ignored — the reason is the point.
+fn parse_pragmas(comment: &str) -> Vec<Pragma> {
+    const MARK: &str = "lint: allow(";
+    let mut out = Vec::new();
+    let mut rest = comment;
+    while let Some(pos) = rest.find(MARK) {
+        let after = &rest[pos + MARK.len()..];
+        if let Some((rule, tail)) = after.split_once(',') {
+            let rule = rule.trim();
+            let reason = tail
+                .split_once('"')
+                .and_then(|(_, t)| t.split_once('"'))
+                .map(|(r, _)| r.trim())
+                .unwrap_or("");
+            if !rule.is_empty() && !reason.is_empty() {
+                out.push(Pragma {
+                    rule: rule.to_string(),
+                    reason: reason.to_string(),
+                });
+            }
+        }
+        rest = &rest[pos + MARK.len()..];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        scan("t.rs", src).lines.iter().map(|l| l.code.clone()).collect()
+    }
+
+    #[test]
+    fn comments_stripped_strings_blanked() {
+        let f = scan(
+            "t.rs",
+            "let x = \"HashMap inside\"; // HashMap comment\nlet y = 1;",
+        );
+        assert_eq!(f.lines[0].code, "let x = \"\"; ");
+        assert_eq!(f.lines[0].strings, "HashMap inside");
+        assert!(f.lines[0].comment.contains("HashMap comment"));
+        assert_eq!(f.lines[1].code, "let y = 1;");
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let f = scan("t.rs", r##"let x = r#"a "quoted" b"#; let y = "\"";"##);
+        assert_eq!(f.lines[0].code, "let x = r\"\"; let y = \"\";");
+        assert!(f.lines[0].strings.contains("a \"quoted\" b"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let c = codes("let c = 'x'; fn f<'a>(v: &'a str) {}\nlet d = '\\n';");
+        assert!(c[0].contains("let c = ' ';"));
+        assert!(c[0].contains("<'a>"));
+        assert!(c[1].contains("' '"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let c = codes("a /* x /* y */ z */ b");
+        assert_eq!(c[0], "a  b");
+    }
+
+    #[test]
+    fn multiline_string_spans() {
+        let f = scan("t.rs", "let s = \"line one\nline two\";\nback();");
+        assert_eq!(f.lines[0].strings, "line one");
+        assert_eq!(f.lines[1].strings, "line two");
+        assert_eq!(f.lines[2].code, "back();");
+    }
+
+    #[test]
+    fn test_region_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn after() {}\n";
+        let f = scan("t.rs", src);
+        let flags: Vec<bool> = f.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn pragma_parsed_and_scoped() {
+        let src = "// lint: allow(determinism, \"clock is display-only\")\nlet t = 1;\nlet u = 2;\n";
+        let f = scan("t.rs", src);
+        assert_eq!(f.lines[0].pragmas.len(), 1);
+        assert_eq!(f.lines[0].pragmas[0].rule, "determinism");
+        assert!(f.allowed("determinism", 1));
+        assert!(!f.allowed("determinism", 2));
+        assert!(!f.allowed("panic-free", 1));
+    }
+
+    #[test]
+    fn reasonless_pragma_rejected() {
+        let f = scan("t.rs", "// lint: allow(determinism, \"\")\nlet t = 1;\n");
+        assert!(f.lines[0].pragmas.is_empty());
+        assert!(!f.allowed("determinism", 1));
+    }
+}

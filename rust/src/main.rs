@@ -6,11 +6,14 @@
 //!   serve                    start the HTTP serving front-end
 //!   bench <exhibit>          regenerate a paper table/figure
 //!                            (table1|table2|table3|fig3|fig4|fig5|fig6|fig8|summarization)
+//!   lint                     run the repo-invariant static analysis pass
+//!                            (DESIGN.md §10; `--ci` gates, `--write-baseline` ratchets)
 //!
 //! Examples:
 //!   minions run --protocol minions --dataset finance --local llama-8b --n 16
 //!   minions bench table1 --n 32 --backend pjrt
 //!   minions serve --port 7171 --config configs/serve.toml
+//!   minions lint --ci --report lint-report.json
 //!
 //! `run`'s protocol flags are folded into a `ProtocolSpec` and validated
 //! exactly like an inline server spec (`POST /v1/sessions` with
@@ -41,10 +44,11 @@ fn main() {
         "run" => cmd_run(args),
         "serve" => cmd_serve(args),
         "bench" => cmd_bench(args),
+        "lint" => cmd_lint(args),
         _ => {
             eprintln!(
                 "minions {} — local/remote LM collaboration (paper reproduction)\n\n\
-                 USAGE: minions <info|run|serve|bench> [options]\n\
+                 USAGE: minions <info|run|serve|bench|lint> [options]\n\
                  Try `minions run --help`.",
                 minions::version()
             );
@@ -428,4 +432,55 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
             1
         }
     }
+}
+
+fn cmd_lint(args: Vec<String>) -> i32 {
+    let cli = Cli::new("minions lint", "repo-invariant static analysis (DESIGN.md §10)")
+        .opt("root", "repo checkout to lint", Some("."))
+        .opt("report", "write the JSON diagnostic report here", None)
+        .flag("ci", "gate mode: also fail on panic-freedom ratchet regressions")
+        .flag(
+            "write-baseline",
+            "rewrite LINT_BASELINE.json from fresh counts (absorb improvements)",
+        );
+    let a = match cli.parse_from(args) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let root = std::path::PathBuf::from(a.get_or("root", "."));
+    let outcome = match minions::lint::run(&root) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("lint failed: {e}");
+            return 2;
+        }
+    };
+    if let Some(path) = a.get("report") {
+        if let Err(e) = std::fs::write(path, format!("{}\n", outcome.report_json())) {
+            eprintln!("lint: cannot write report {path}: {e}");
+            return 2;
+        }
+    }
+    print!("{}", outcome.render_text());
+    if a.flag("write-baseline") {
+        if let Err(e) = minions::lint::write_baseline(&root, &outcome) {
+            eprintln!("lint failed: {e}");
+            return 2;
+        }
+        println!(
+            "lint: wrote {} ({} panic site(s))",
+            minions::lint::baseline::BASELINE_FILE,
+            outcome.total_panic_sites()
+        );
+        // the baseline was just regenerated, so only rule 1-4 findings
+        // can still gate this invocation
+        return i32::from(!outcome.diags.is_empty());
+    }
+    // rule 1-4 violations always gate; the ratchet gates only in CI mode
+    // so an unratcheted local run stays informative, not blocking
+    let failed = !outcome.diags.is_empty() || (a.flag("ci") && !outcome.ratchet.is_empty());
+    i32::from(failed)
 }

@@ -474,7 +474,7 @@ impl LocalLm {
         // comparable across chunks: same query vector, same scale)
         let mut best: Option<&WorkerOutput> = None;
         for o in &outs {
-            if best.map_or(true, |b| o.confidence > b.confidence) {
+            if best.is_none_or(|b| o.confidence > b.confidence) {
                 best = Some(o);
             }
         }

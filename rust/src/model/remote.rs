@@ -209,6 +209,7 @@ impl RemoteLm {
             abstain_bias: 1.0,
             format_err: 0.0, // frontier models follow the schema
         };
+        // lint: allow(construction-path, "RemoteLm owns its reader-model wrapper: the factory memoizes the RemoteLm itself, so this internal build cannot fork the construction path")
         let reader = LocalLm::with_cache(scorer, manifest, reader_profile, cache)?;
         Ok(RemoteLm { profile, reader })
     }
@@ -348,7 +349,7 @@ impl RemoteLm {
                 for t in 0..n_parts {
                     if self
                         .best_for_task(query, outputs, t)?
-                        .map_or(false, |(_, w)| w > 0.5)
+                        .is_some_and(|(_, w)| w > 0.5)
                     {
                         found = true;
                         break;

@@ -34,8 +34,9 @@ use crate::protocol::{LocalOnly, Minion, MinionS, Protocol, RemoteOnly};
 use crate::rag::Rag;
 use crate::runtime::{Backend, Manifest};
 use crate::sched::DynamicBatcher;
+use crate::util::sync::unpoisoned;
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
 /// Bound on the fingerprint-memo table. Distinct inline specs are
@@ -58,9 +59,13 @@ pub struct ProtocolFactory {
 
 #[derive(Default)]
 struct FactoryInner {
-    locals: HashMap<String, Arc<LocalLm>>,
-    remotes: HashMap<String, Arc<RemoteLm>>,
-    protocols: HashMap<u64, Arc<dyn Protocol>>,
+    // BTreeMaps, not HashMaps: lookups are by exact key either way, and
+    // ordered maps make the at-cap eviction below deterministic (smallest
+    // fingerprint first) — plus the factory sits on the spec-resolution
+    // path that `minions lint` rule 1 scans for hashed collections.
+    locals: BTreeMap<String, Arc<LocalLm>>,
+    remotes: BTreeMap<String, Arc<RemoteLm>>,
+    protocols: BTreeMap<u64, Arc<dyn Protocol>>,
 }
 
 impl ProtocolFactory {
@@ -99,13 +104,13 @@ impl ProtocolFactory {
 
     /// The local model wrapper for `profile`, built once per name.
     pub fn local(&self, profile: LocalProfile) -> Result<Arc<LocalLm>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = unpoisoned(&self.inner);
         self.local_locked(&mut inner, profile)
     }
 
     /// The remote model wrapper for `profile`, built once per name.
     pub fn remote(&self, profile: RemoteProfile) -> Result<Arc<RemoteLm>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = unpoisoned(&self.inner);
         self.remote_locked(&mut inner, profile)
     }
 
@@ -160,7 +165,7 @@ impl ProtocolFactory {
     pub fn resolve(&self, spec: &ProtocolSpec) -> Result<Arc<dyn Protocol>> {
         spec.validate()?;
         let fp = spec.fingerprint();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = unpoisoned(&self.inner);
         if let Some(p) = inner.protocols.get(&fp) {
             return Ok(Arc::clone(p));
         }
@@ -189,6 +194,7 @@ impl ProtocolFactory {
             }
         };
         if inner.protocols.len() >= PROTOCOL_MEMO_CAP {
+            // deterministic eviction: the smallest memoized fingerprint
             if let Some(evict) = inner.protocols.keys().next().copied() {
                 inner.protocols.remove(&evict);
             }
@@ -199,6 +205,6 @@ impl ProtocolFactory {
 
     /// Resolved protocols currently memoized (observability/tests).
     pub fn resolved_count(&self) -> usize {
-        self.inner.lock().unwrap().protocols.len()
+        unpoisoned(&self.inner).protocols.len()
     }
 }

@@ -197,7 +197,7 @@ impl MinionSession {
                 .part_answers
                 .iter()
                 .enumerate()
-                .filter(|(_, a)| a.map_or(true, |(_, c)| c < ACCEPT_CONF))
+                .filter(|(_, a)| a.is_none_or(|(_, c)| c < ACCEPT_CONF))
                 .map(|(i, _)| i)
                 .collect();
             let Some(part) = missing.first().copied() else {
@@ -251,7 +251,7 @@ impl MinionSession {
                     .find(|i| self.part_answers[*i].is_none())
                     .unwrap_or(asked_parts[0])
             };
-            let better = self.part_answers[attach].map_or(true, |(_, c)| conf > c);
+            let better = self.part_answers[attach].is_none_or(|(_, c)| conf > c);
             if better {
                 self.part_answers[attach] = Some((t, conf));
             }
@@ -274,7 +274,7 @@ impl MinionSession {
         let resolved = self
             .part_answers
             .iter()
-            .filter(|a| a.map_or(false, |(_, c)| c >= ACCEPT_CONF))
+            .filter(|a| a.is_some_and(|(_, c)| c >= ACCEPT_CONF))
             .count();
         if resolved == self.n_parts {
             self.phase = MinionPhase::Finalize;
@@ -292,7 +292,7 @@ impl MinionSession {
         let answer = match &q.kind {
             QueryKind::Extract => Answer::Value(self.part_answers[0].map(|(t, _)| t).unwrap_or(0)),
             QueryKind::Bool => {
-                Answer::Bool(self.part_answers[0].map_or(false, |(_, c)| c >= ACCEPT_CONF))
+                Answer::Bool(self.part_answers[0].is_some_and(|(_, c)| c >= ACCEPT_CONF))
             }
             QueryKind::Compute(op) => match (self.part_answers[0], self.part_answers[1]) {
                 (Some((a, _)), Some((b, _))) => {

@@ -45,6 +45,7 @@
 //! flush thread will ever drain.
 
 use crate::runtime::{Backend, ScoreRequest, ScoreResponse};
+use crate::util::sync::unpoisoned;
 use crate::vocab::{BATCH, CHUNK, QLEN};
 use anyhow::{anyhow, Result};
 use std::cell::Cell;
@@ -256,7 +257,7 @@ impl CapacitySlot {
         for lane in &self.lanes {
             for sq in &lane.sessions {
                 if let Some(p) = sq.rows.front() {
-                    if best.map_or(true, |b| p.enqueued < b) {
+                    if best.is_none_or(|b| p.enqueued < b) {
                         best = Some(p.enqueued);
                     }
                 }
@@ -294,7 +295,9 @@ impl CapacitySlot {
             let Some(mut sq) = lane.sessions.pop_front() else {
                 break;
             };
-            let row = sq.rows.pop_front().expect("session queues are never empty");
+            let Some(row) = sq.rows.pop_front() else {
+                continue; // empty session queues are dropped, not served
+            };
             lane.len -= 1;
             if contended {
                 lane.credit -= 1;
@@ -514,6 +517,7 @@ impl DynamicBatcher {
                 std::thread::sleep(bt.max_wait / 2);
                 bt.drain_ready(usize::MAX);
             })
+            // lint: allow(panic-free, "thread spawn failure at construction is unrecoverable: without the flush thread, deadline batching stalls forever")
             .expect("spawn flush thread");
         b
     }
@@ -550,7 +554,7 @@ impl DynamicBatcher {
     /// Idempotent: repeated calls are no-ops.
     pub fn stop(&self) {
         let drained: Vec<(usize, Vec<Pending>)> = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = unpoisoned(&self.state);
             if self.shutdown.swap(true, Ordering::AcqRel) {
                 return; // already stopped and drained
             }
@@ -592,7 +596,7 @@ impl DynamicBatcher {
     fn submit_inner(&self, row: ScoreRow, lane: Lane, session: u64, group: u64) -> Result<Ticket> {
         let (tx, rx) = mpsc::channel();
         let slot_full = {
-            let mut st = self.state.lock().unwrap();
+            let mut st = unpoisoned(&self.state);
             if self.shutdown.load(Ordering::Acquire) {
                 return Err(SchedError::Stopped.into());
             }
@@ -653,7 +657,7 @@ impl DynamicBatcher {
     /// reachable when the sweep refills the slots a dispatch just freed
     /// within the same submit loop.
     fn retract_group(&self, d: usize, group: u64) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = unpoisoned(&self.state);
         let Some(i) = st.slots.iter().position(|s| s.d == d) else {
             return;
         };
@@ -743,7 +747,7 @@ impl DynamicBatcher {
     fn flush_capacity(&self, d: usize, max_batches: usize) {
         for _ in 0..max_batches {
             let batch = {
-                let mut st = self.state.lock().unwrap();
+                let mut st = unpoisoned(&self.state);
                 let Some(i) = st.slots.iter().position(|s| s.d == d) else {
                     return;
                 };
@@ -766,7 +770,7 @@ impl DynamicBatcher {
     /// Read the counters as one consistent-enough snapshot.
     pub fn snapshot(&self) -> BatcherSnapshot {
         let (queue_depth, lane_depth) = {
-            let st = self.state.lock().unwrap();
+            let st = unpoisoned(&self.state);
             let mut lanes = [0usize; Lane::COUNT];
             for slot in &st.slots {
                 for (i, l) in slot.lanes.iter().enumerate() {
@@ -808,11 +812,11 @@ impl DynamicBatcher {
         for (i, slot) in st.slots.iter().enumerate() {
             let Some(oldest) = slot.oldest() else { continue };
             if now.duration_since(oldest) >= self.max_wait
-                && starving.map_or(true, |(_, o, _)| oldest < o)
+                && starving.is_none_or(|(_, o, _)| oldest < o)
             {
                 starving = Some((i, oldest, slot.len()));
             }
-            if slot.len() >= BATCH && full.map_or(true, |(_, o)| oldest < o) {
+            if slot.len() >= BATCH && full.is_none_or(|(_, o)| oldest < o) {
                 full = Some((i, oldest));
             }
         }
@@ -844,7 +848,7 @@ impl DynamicBatcher {
     fn drain_ready(&self, limit: usize) {
         for _ in 0..limit {
             let picked = {
-                let mut st = self.state.lock().unwrap();
+                let mut st = unpoisoned(&self.state);
                 self.pick_locked(&mut st)
             };
             match picked {

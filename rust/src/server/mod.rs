@@ -755,7 +755,7 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
             if state
                 .batcher
                 .as_ref()
-                .map_or(false, |b| b.admission_high_water())
+                .is_some_and(|b| b.admission_high_water())
             {
                 state.metrics.shed.fetch_add(1, Ordering::Relaxed);
                 return Err(overloaded("scheduler admission queue past high water"));

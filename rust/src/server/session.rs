@@ -59,6 +59,7 @@ use crate::server::wal::{self, ScannedLog, SessionWal, WalMeta};
 use crate::server::Metrics;
 use crate::util::json::Json;
 use crate::util::rng::{mix64, Rng};
+use crate::util::sync::{cv_wait, cv_wait_timeout, unpoisoned};
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
@@ -138,14 +139,14 @@ impl SessionEntry {
     /// Block until events beyond `from` exist or the session has ended.
     /// Returns the new lines and whether the stream is complete.
     pub fn wait_events(&self, from: usize) -> (Vec<String>, bool) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = unpoisoned(&self.inner);
         loop {
             if inner.events.len() > from || inner.status != SessionStatus::Running {
                 let start = from.min(inner.events.len());
                 let fresh = inner.events[start..].to_vec();
                 return (fresh, inner.status != SessionStatus::Running);
             }
-            inner = self.events_cv.wait(inner).unwrap();
+            inner = cv_wait(&self.events_cv, inner);
         }
     }
 
@@ -156,7 +157,7 @@ impl SessionEntry {
     /// emits no lines, and an abandoned stream must still be noticed.
     pub fn wait_events_for(&self, from: usize, dur: Duration) -> (Vec<String>, bool) {
         let deadline = Instant::now() + dur;
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = unpoisoned(&self.inner);
         loop {
             if inner.events.len() > from || inner.status != SessionStatus::Running {
                 let start = from.min(inner.events.len());
@@ -167,39 +168,39 @@ impl SessionEntry {
             if left.is_zero() {
                 return (Vec::new(), false);
             }
-            let (guard, _) = self.events_cv.wait_timeout(inner, left).unwrap();
+            let (guard, _) = cv_wait_timeout(&self.events_cv, inner, left);
             inner = guard;
         }
     }
 
     /// Block until the session leaves `Running` (test/e2e convenience).
     pub fn wait_done(&self) -> SessionStatus {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = unpoisoned(&self.inner);
         while inner.status == SessionStatus::Running {
-            inner = self.events_cv.wait(inner).unwrap();
+            inner = cv_wait(&self.events_cv, inner);
         }
         inner.status
     }
 
     pub fn status(&self) -> SessionStatus {
-        self.inner.lock().unwrap().status
+        unpoisoned(&self.inner).status
     }
 
     /// Backed-off steps so far (saturated-scheduler retries).
     pub fn backoffs(&self) -> u64 {
-        self.inner.lock().unwrap().backoffs
+        unpoisoned(&self.inner).backoffs
     }
 
     /// The session rng's raw state — the bit-identity probe the
     /// durability tests compare between uninterrupted and recovered
     /// runs (a recovered stream must land on the same state).
     pub fn rng_state(&self) -> [u64; 4] {
-        self.inner.lock().unwrap().rng.state()
+        unpoisoned(&self.inner).rng.state()
     }
 
     /// The `GET /v1/sessions/:id` body.
     pub fn status_json(&self) -> String {
-        let inner = self.inner.lock().unwrap();
+        let inner = unpoisoned(&self.inner);
         let mut fields = vec![
             ("id", Json::num(self.id as f64)),
             ("protocol", Json::str(self.protocol.clone())),
@@ -348,6 +349,7 @@ impl SessionRunner {
                 std::thread::Builder::new()
                     .name(format!("session-worker-{i}"))
                     .spawn(move || worker_loop(shared))
+                    // lint: allow(panic-free, "worker-thread spawn failure at construction is unrecoverable: a runner with no workers can never step a session")
                     .expect("spawn session worker")
             })
             .collect();
@@ -369,8 +371,9 @@ impl SessionRunner {
         rng: Rng,
         metrics: Option<Arc<Metrics>>,
     ) -> Arc<SessionEntry> {
-        self.spawn_capped(protocol, sample, rng, metrics, 0, None)
-            .expect("uncapped spawn cannot be refused")
+        self.reap_expired();
+        self.shared.active.fetch_add(1, Ordering::Relaxed);
+        self.spawn_reserved(protocol, sample, rng, metrics, None)
     }
 
     /// [`Self::spawn`] with a WAL identity: on a durable runner the
@@ -383,8 +386,9 @@ impl SessionRunner {
         metrics: Option<Arc<Metrics>>,
         meta: WalMeta,
     ) -> Arc<SessionEntry> {
-        self.spawn_capped(protocol, sample, rng, metrics, 0, Some(meta))
-            .expect("uncapped spawn cannot be refused")
+        self.reap_expired();
+        self.shared.active.fetch_add(1, Ordering::Relaxed);
+        self.spawn_reserved(protocol, sample, rng, metrics, Some(meta))
     }
 
     /// [`Self::spawn`] with an atomically-enforced cap on in-flight
@@ -424,6 +428,20 @@ impl SessionRunner {
         } else {
             self.shared.active.fetch_add(1, Ordering::Relaxed);
         }
+        Some(self.spawn_reserved(protocol, sample, rng, metrics, meta))
+    }
+
+    /// The common spawn body, entered once an `active` slot has been
+    /// reserved (capped or not): creates the WAL (durable runners),
+    /// registers the entry, and queues its first step.
+    fn spawn_reserved(
+        &self,
+        protocol: &Arc<dyn Protocol>,
+        sample: &Sample,
+        rng: Rng,
+        metrics: Option<Arc<Metrics>>,
+        meta: Option<WalMeta>,
+    ) -> Arc<SessionEntry> {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         // durable sessions get their WAL (with the meta record) *before*
         // the first step can run: an empty or meta-only log is a valid
@@ -472,13 +490,9 @@ impl SessionRunner {
             }),
             events_cv: Condvar::new(),
         });
-        self.shared
-            .registry
-            .lock()
-            .unwrap()
-            .insert(id, Arc::clone(&entry));
+        unpoisoned(&self.shared.registry).insert(id, Arc::clone(&entry));
         self.shared.started_total.fetch_add(1, Ordering::Relaxed);
-        self.shared.queue.lock().unwrap().ready.push_back(id);
+        unpoisoned(&self.shared.queue).ready.push_back(id);
         self.shared.queue_cv.notify_one();
         // close the spawn-vs-shutdown race: if the runner shut down while
         // we were registering, its fail-Running sweep may have missed this
@@ -486,7 +500,7 @@ impl SessionRunner {
         // on a step no worker will ever execute. Both sides guard on
         // `Running` under the entry lock, so active is decremented once.
         if self.shared.shutdown.load(Ordering::Acquire) {
-            let mut inner = entry.inner.lock().unwrap();
+            let mut inner = unpoisoned(&entry.inner);
             if inner.status == SessionStatus::Running {
                 let msg = "session runner shut down before completion".to_string();
                 inner.events.push(
@@ -505,11 +519,11 @@ impl SessionRunner {
             drop(inner);
             entry.events_cv.notify_all();
         }
-        Some(entry)
+        entry
     }
 
     pub fn get(&self, id: u64) -> Option<Arc<SessionEntry>> {
-        self.shared.registry.lock().unwrap().get(&id).cloned()
+        unpoisoned(&self.shared.registry).get(&id).cloned()
     }
 
     /// Sessions currently `Running` (the `/metrics` gauge).
@@ -562,7 +576,8 @@ impl SessionRunner {
     /// run stays `Done` and billed).
     pub fn cancel(&self, id: u64) -> Option<CancelOutcome> {
         let entry = self.get(id)?;
-        let mut guard = entry.inner.lock().unwrap();
+        // lint: allow(lock-discipline, "deliberate: the cancelled record fsyncs under the entry lock so durability-before-observability holds for cancels too (see wal_append docs)")
+        let mut guard = unpoisoned(&entry.inner);
         let inner = &mut *guard;
         if inner.status != SessionStatus::Running {
             return Some(CancelOutcome::AlreadyTerminal);
@@ -587,17 +602,17 @@ impl SessionRunner {
         let now = Instant::now();
         {
             let interval = (self.ttl / 4).min(Duration::from_secs(1));
-            let mut last = self.shared.last_reap.lock().unwrap();
+            let mut last = unpoisoned(&self.shared.last_reap);
             if now.duration_since(*last) < interval {
                 return 0;
             }
             *last = now;
         }
-        let mut registry = self.shared.registry.lock().unwrap();
+        let mut registry = unpoisoned(&self.shared.registry);
         let expired: Vec<u64> = registry
             .iter()
             .filter_map(|(id, entry)| {
-                let inner = entry.inner.lock().unwrap();
+                let inner = unpoisoned(&entry.inner);
                 match inner.finished {
                     Some(t) if now.duration_since(t) >= self.ttl => Some(*id),
                     _ => None,
@@ -609,7 +624,7 @@ impl SessionRunner {
                 // a terminal session's WAL has served its post-mortem
                 // window: delete it so the state dir stays bounded and a
                 // future recovery has nothing to skip
-                if let Some(w) = entry.inner.lock().unwrap().wal.take() {
+                if let Some(w) = unpoisoned(&entry.inner).wal.take() {
                     let _ = std::fs::remove_file(w.path());
                 }
             }
@@ -624,7 +639,7 @@ impl SessionRunner {
     /// (bounded ring — oldest entries are evicted; used by the
     /// interleaving tests and for diagnostics).
     pub fn step_trace(&self) -> Vec<u64> {
-        self.shared.step_trace.lock().unwrap().iter().copied().collect()
+        unpoisoned(&self.shared.step_trace).iter().copied().collect()
     }
 
     /// Replay the `--state-dir` WALs on boot: sessions whose log ends in
@@ -831,14 +846,10 @@ impl SessionRunner {
             }),
             events_cv: Condvar::new(),
         });
-        self.shared
-            .registry
-            .lock()
-            .unwrap()
-            .insert(id, Arc::clone(&entry));
+        unpoisoned(&self.shared.registry).insert(id, Arc::clone(&entry));
         self.shared.active.fetch_add(1, Ordering::Relaxed);
         self.shared.recovered_total.fetch_add(1, Ordering::Relaxed);
-        self.shared.queue.lock().unwrap().ready.push_back(id);
+        unpoisoned(&self.shared.queue).ready.push_back(id);
         self.shared.queue_cv.notify_one();
         Ok(true)
     }
@@ -850,22 +861,16 @@ impl SessionRunner {
         self.shared.shutdown.store(true, Ordering::Release);
         self.shared.queue_cv.notify_all();
         {
-            let mut workers = self.workers.lock().unwrap();
+            let mut workers = unpoisoned(&self.workers);
             for handle in workers.drain(..) {
                 let _ = handle.join();
             }
         }
         // no worker is mid-step anymore: fail whatever never finished
-        let entries: Vec<Arc<SessionEntry>> = self
-            .shared
-            .registry
-            .lock()
-            .unwrap()
-            .values()
-            .cloned()
-            .collect();
+        let entries: Vec<Arc<SessionEntry>> =
+            unpoisoned(&self.shared.registry).values().cloned().collect();
         for entry in entries {
-            let mut inner = entry.inner.lock().unwrap();
+            let mut inner = unpoisoned(&entry.inner);
             if inner.status != SessionStatus::Running {
                 continue;
             }
@@ -987,7 +992,7 @@ fn backoff_delay(id: u64, streak: u32) -> Duration {
 fn worker_loop(shared: Arc<RunnerShared>) {
     loop {
         let id = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = unpoisoned(&shared.queue);
             loop {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
@@ -995,7 +1000,7 @@ fn worker_loop(shared: Arc<RunnerShared>) {
                 let now = Instant::now();
                 if !q.parked.is_empty() {
                     q.parked.sort_by_key(|(due, _)| *due);
-                    while q.parked.first().map_or(false, |(due, _)| *due <= now) {
+                    while q.parked.first().is_some_and(|(due, _)| *due <= now) {
                         let (_, pid) = q.parked.remove(0);
                         q.ready.push_back(pid);
                     }
@@ -1007,17 +1012,17 @@ fn worker_loop(shared: Arc<RunnerShared>) {
                 match next_due {
                     Some(due) => {
                         let wait = due.saturating_duration_since(now);
-                        let (guard, _) = shared.queue_cv.wait_timeout(q, wait).unwrap();
+                        let (guard, _) = cv_wait_timeout(&shared.queue_cv, q, wait);
                         q = guard;
                     }
-                    None => q = shared.queue_cv.wait(q).unwrap(),
+                    None => q = cv_wait(&shared.queue_cv, q),
                 }
             }
         };
-        let entry = shared.registry.lock().unwrap().get(&id).cloned();
+        let entry = unpoisoned(&shared.registry).get(&id).cloned();
         let Some(entry) = entry else { continue };
         {
-            let mut trace = shared.step_trace.lock().unwrap();
+            let mut trace = unpoisoned(&shared.step_trace);
             if trace.len() >= STEP_TRACE_CAP {
                 trace.pop_front();
             }
@@ -1027,16 +1032,11 @@ fn worker_loop(shared: Arc<RunnerShared>) {
             StepOutcome::Continue => {
                 // back of the queue — this is what interleaves many
                 // sessions over few workers
-                shared.queue.lock().unwrap().ready.push_back(id);
+                unpoisoned(&shared.queue).ready.push_back(id);
                 shared.queue_cv.notify_one();
             }
             StepOutcome::Backoff(delay) => {
-                shared
-                    .queue
-                    .lock()
-                    .unwrap()
-                    .parked
-                    .push((Instant::now() + delay, id));
+                unpoisoned(&shared.queue).parked.push((Instant::now() + delay, id));
                 // notify_all: a sleeping worker may need to shorten its
                 // wait to this session's due time
                 shared.queue_cv.notify_all();
@@ -1051,7 +1051,7 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> StepOutco
     // take the step state out so the (possibly long) protocol step runs
     // without holding the entry lock
     let (mut session, mut rng) = {
-        let mut inner = entry.inner.lock().unwrap();
+        let mut inner = unpoisoned(&entry.inner);
         if inner.status != SessionStatus::Running {
             return StepOutcome::Terminal;
         }
@@ -1068,7 +1068,8 @@ fn step_once(shared: &Arc<RunnerShared>, entry: &Arc<SessionEntry>) -> StepOutco
         session.step(&mut rng)
     };
 
-    let mut guard = entry.inner.lock().unwrap();
+    // lint: allow(lock-discipline, "deliberate: per-step WAL fsyncs run under the entry lock — durability-before-observability; see the wal_append doc comment for the tradeoff")
+    let mut guard = unpoisoned(&entry.inner);
     let inner = &mut *guard;
     inner.rng = rng;
     inner.steps += 1;

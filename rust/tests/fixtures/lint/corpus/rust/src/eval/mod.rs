@@ -1,0 +1,6 @@
+//! Fixture: rule 2 (construction-path) violation — a protocol built
+//! directly instead of through `ProtocolFactory::resolve`.
+
+pub fn build(local: Lm, remote: Lm, cfg: Config) -> MinionS {
+    MinionS::new(local, remote, cfg)
+}

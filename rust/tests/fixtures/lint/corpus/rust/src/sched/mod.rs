@@ -1,0 +1,17 @@
+//! Fixture: rule 4 (lock-discipline) violation — a guard held across a
+//! channel send — plus rule 5 (panic-free) sites for the count test.
+
+pub fn drain(&self) {
+    let mut st = self.state.lock().unwrap();
+    st.tick += 1;
+    self.tx.send(st.tick).unwrap();
+}
+
+pub fn peek(xs: &[u32]) -> u32 {
+    xs[0]
+}
+
+pub fn boot() {
+    // lint: allow(panic-free, "fixture: a justified panic site, excluded from the count")
+    spawn().expect("boot");
+}

@@ -1,0 +1,6 @@
+//! Fixture: rule 3 (error-taxonomy) violation — saturation detected by
+//! string-matching the rendered message instead of `sched::is_saturated`.
+
+pub fn is_busy(e: &anyhow::Error) -> bool {
+    e.to_string().contains("scheduler saturated")
+}

@@ -1,0 +1,22 @@
+//! Fixture: rule 1 (determinism) violations in a serialization path.
+//! This file never compiles — it exists to trip the lint on purpose.
+
+use std::collections::HashMap;
+use std::time::SystemTime;
+
+pub fn write_record(n: u64) -> String {
+    let t = SystemTime::now();
+    format!("{t:?} {n}")
+}
+
+pub fn render_cost(x: f64) -> String {
+    format!("{:.4}", x)
+}
+
+// lint: allow(determinism, "fixture: a justified exception that must not diagnose")
+pub type AllowedSet = std::collections::HashSet<u32>;
+
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap as TestMap; // test region: excluded
+}

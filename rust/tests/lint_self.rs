@@ -1,0 +1,133 @@
+//! Self-test for `minions lint` (DESIGN.md §10).
+//!
+//! Two subjects, one pass each way:
+//!
+//! - the **fixture corpus** (`rust/tests/fixtures/lint/corpus/`) carries
+//!   one known violation per rule plus pragma'd exceptions, and the
+//!   diagnostics must match the golden `expected.txt` byte-for-byte —
+//!   so a rule that stops firing (or starts over-firing) breaks here
+//!   before it silently stops protecting the tree;
+//! - the **real tree** must lint clean, and its fresh panic-site counts
+//!   must equal the checked-in `LINT_BASELINE.json` exactly — so an
+//!   improvement cannot merge without ratcheting the baseline down.
+
+use minions::lint;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn corpus_root() -> PathBuf {
+    repo_root().join("rust/tests/fixtures/lint/corpus")
+}
+
+#[test]
+fn corpus_matches_golden_diagnostics() {
+    let outcome = lint::run(&corpus_root()).expect("lint over corpus");
+    let got: Vec<String> = outcome.diags.iter().map(|d| d.to_string()).collect();
+    let golden_path = repo_root().join("rust/tests/fixtures/lint/expected.txt");
+    let golden = std::fs::read_to_string(&golden_path).expect("read golden diagnostics");
+    let want: Vec<String> = golden.lines().map(str::to_string).collect();
+    assert_eq!(
+        got, want,
+        "corpus diagnostics drifted from {}",
+        golden_path.display()
+    );
+}
+
+#[test]
+fn corpus_covers_every_rule_and_respects_pragmas() {
+    let outcome = lint::run(&corpus_root()).expect("lint over corpus");
+    for rule in [
+        lint::rules::RULE_DETERMINISM,
+        lint::rules::RULE_CONSTRUCTION,
+        lint::rules::RULE_TAXONOMY,
+        lint::rules::RULE_LOCKS,
+    ] {
+        assert!(
+            outcome.diags.iter().any(|d| d.rule == rule),
+            "corpus has no {rule} diagnostic"
+        );
+    }
+    // the pragma'd HashSet in the corpus wal.rs must not diagnose
+    assert!(
+        !outcome.diags.iter().any(|d| d.msg.contains("HashSet")),
+        "pragma'd HashSet line diagnosed anyway"
+    );
+    // rule 5: 2 unwraps + 1 index expr; the pragma'd expect is excluded
+    let counts: Vec<(&str, usize)> = outcome
+        .counts
+        .iter()
+        .map(|(k, v)| (k.as_str(), *v))
+        .collect();
+    assert_eq!(counts, vec![("rust/src/sched/mod.rs", 3)]);
+    // no baseline is checked into the corpus: that is itself a failure
+    assert_eq!(outcome.ratchet.len(), 1);
+    assert!(!outcome.clean());
+}
+
+#[test]
+fn real_tree_is_clean_and_baseline_is_fresh() {
+    let root = repo_root();
+    let outcome = lint::run(&root).expect("lint over the real tree");
+    assert!(
+        outcome.diags.is_empty(),
+        "rule violations in the tree:\n{}",
+        outcome.render_text()
+    );
+    let baseline = lint::baseline::load(&root)
+        .expect("read LINT_BASELINE.json")
+        .expect("LINT_BASELINE.json must be checked in");
+    // equality, not <=: a stale (too-high) baseline must not merge, so
+    // every improvement is forced through `lint --write-baseline`
+    assert_eq!(
+        outcome.counts, baseline.counts,
+        "LINT_BASELINE.json is stale — run `minions lint --write-baseline`"
+    );
+    assert!(outcome.ratchet.is_empty(), "{:?}", outcome.ratchet);
+    assert!(outcome.improved.is_empty(), "{:?}", outcome.improved);
+    assert!(outcome.clean());
+}
+
+fn run_lint(root: &Path) -> (i32, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_minions"))
+        .args(["lint", "--ci", "--root"])
+        .arg(root)
+        .output()
+        .expect("spawn minions lint");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+    )
+}
+
+#[test]
+fn cli_exit_codes_gate_ci() {
+    let (code, stdout) = run_lint(&corpus_root());
+    assert_eq!(code, 1, "corpus must fail the gate; stdout:\n{stdout}");
+    for rule in ["determinism", "construction-path", "error-taxonomy", "lock-discipline"] {
+        assert!(stdout.contains(rule), "missing {rule} in:\n{stdout}");
+    }
+    let (code, stdout) = run_lint(&repo_root());
+    assert_eq!(code, 0, "the real tree must pass the gate; stdout:\n{stdout}");
+}
+
+#[test]
+fn report_json_round_trips() {
+    let outcome = lint::run(&corpus_root()).expect("lint over corpus");
+    let report = format!("{}", outcome.report_json());
+    let parsed = minions::util::json::Json::parse(&report).expect("report parses");
+    let violations = parsed
+        .get("violations")
+        .and_then(|v| v.as_arr())
+        .expect("violations array");
+    assert_eq!(violations.len(), outcome.diags.len());
+    let total = parsed
+        .get("panic_free")
+        .and_then(|p| p.get("total"))
+        .and_then(|t| t.as_u64())
+        .expect("panic_free.total");
+    assert_eq!(total as usize, outcome.total_panic_sites());
+}
