@@ -12,6 +12,13 @@
 //!
 //! Exits cleanly when the compiled artifacts are absent so the CI bench
 //! smoke step can run in artifact-less environments.
+//!
+//! `--json` switches to the machine-readable perf report instead: the
+//! `minions-bench-v1` document (kernel reference-vs-factored rows/sec,
+//! engine worker-pool scaling, pooled-query memo and chunk-cache hit
+//! rates) written to `--out` (default `BENCH_runtime_hotpath.json`).
+//! JSON mode synthesizes deterministic artifacts when the real set is
+//! absent, so it produces a report everywhere — including CI.
 
 use minions::data;
 use minions::eval::{run_protocol, run_protocol_parallel};
@@ -53,9 +60,33 @@ fn main() {
     let cli = Cli::new("runtime_hotpath", "hot-path microbenchmarks + latency model")
         .opt("backend", "pjrt | native", Some("pjrt"))
         .opt("iters", "measured iterations", Some("20"))
-        .opt("seed", "seed", Some("42"));
+        .opt("seed", "seed", Some("42"))
+        .flag("json", "write the minions-bench-v1 perf report and exit")
+        .opt("out", "json: report path", Some("BENCH_runtime_hotpath.json"))
+        .opt(
+            "scale-requests",
+            "json: score requests per engine-scaling point",
+            None,
+        );
     let a = cli.parse();
     let iters: usize = a.parse_num("iters", 20);
+    if a.flag("json") {
+        let seed: u64 = a.parse_num("seed", 42);
+        let mut opts = minions::perf::HotpathOptions {
+            seed,
+            iters: iters.max(1),
+            ..Default::default()
+        };
+        opts.scale_requests = a.parse_num("scale-requests", opts.scale_requests).max(1);
+        let (manifest, synthetic) =
+            minions::perf::load_or_synth_manifest(&[64, 128], seed).expect("manifest");
+        let report =
+            minions::perf::hotpath_report(&manifest, &opts, synthetic).expect("hotpath report");
+        let out = std::path::PathBuf::from(a.get_or("out", "BENCH_runtime_hotpath.json"));
+        minions::perf::write_report(&out, &report).expect("write report");
+        println!("wrote {}", out.display());
+        return;
+    }
     if !default_artifact_dir().join("manifest.json").exists() {
         eprintln!("skipping runtime_hotpath: artifacts not built (run `make artifacts`)");
         return;

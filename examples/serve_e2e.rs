@@ -67,6 +67,7 @@ fn main() -> anyhow::Result<()> {
         seed: 42,
         batcher: Some(exp.batcher()),
         cache: exp.cache(),
+        engine: exp.pjrt(),
         sessions,
         // tiny on purpose: the burst below must trip the 429 shed path
         max_sessions: 2,

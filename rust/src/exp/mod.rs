@@ -45,12 +45,27 @@ pub struct Exp {
 
 impl Exp {
     pub fn new(backend_kind: &str, seed: u64) -> Result<Exp> {
+        Self::with_engine_threads(backend_kind, seed, 1)
+    }
+
+    /// Like [`Exp::new`] but with `engine_threads` workers in the engine
+    /// pool (pjrt backend only; the native oracle executes inline on the
+    /// calling thread and ignores the setting).
+    pub fn with_engine_threads(
+        backend_kind: &str,
+        seed: u64,
+        engine_threads: usize,
+    ) -> Result<Exp> {
         let manifest = Manifest::load(default_artifact_dir())?;
         let mut pjrt = None;
         let backend: Arc<dyn Backend> = match backend_kind {
             "native" => Arc::new(NativeBackend::new(manifest.clone())?),
             "pjrt" => {
-                let p = Arc::new(PjrtBackend::start(manifest.clone(), &[])?);
+                let p = Arc::new(PjrtBackend::start_pool(
+                    manifest.clone(),
+                    &[],
+                    engine_threads,
+                )?);
                 pjrt = Some(Arc::clone(&p));
                 p
             }
@@ -97,6 +112,12 @@ impl Exp {
     /// The shared scoring batcher (handed to the server for /metrics).
     pub fn batcher(&self) -> Arc<DynamicBatcher> {
         Arc::clone(&self.batcher)
+    }
+
+    /// The engine-backed backend handle, when running on the pjrt
+    /// backend (handed to the server for `/metrics` engine gauges).
+    pub fn pjrt(&self) -> Option<Arc<PjrtBackend>> {
+        self.pjrt.clone()
     }
 
     /// The protocol factory (handed to the server, which resolves inline

@@ -29,6 +29,7 @@ pub mod eval;
 pub mod exp;
 pub mod latency;
 pub mod lint;
+pub mod perf;
 pub mod protocol;
 pub mod rag;
 pub mod sched;

@@ -91,8 +91,9 @@ const BLOCKING_BOUNDARIES: &[&str] = &[
 ];
 
 /// Rule 5 scope prefixes: the request-handling hot paths whose panic
-/// sites are counted against `LINT_BASELINE.json`.
-const PANIC_SCOPE: &[&str] = &["rust/src/server/", "rust/src/sched/"];
+/// sites are counted against `LINT_BASELINE.json`. `runtime/` joined in
+/// PR 7 (the engine pool and kernels were burned down to zero sites).
+const PANIC_SCOPE: &[&str] = &["rust/src/server/", "rust/src/sched/", "rust/src/runtime/"];
 
 /// Whether rule 5 counts panic sites in `path`.
 pub fn in_panic_scope(path: &str) -> bool {

@@ -6,6 +6,8 @@
 //!   serve                    start the HTTP serving front-end
 //!   bench <exhibit>          regenerate a paper table/figure
 //!                            (table1|table2|table3|fig3|fig4|fig5|fig6|fig8|summarization)
+//!                            or the runtime perf report (hotpath; `--json`
+//!                            writes BENCH_runtime_hotpath.json)
 //!   lint                     run the repo-invariant static analysis pass
 //!                            (DESIGN.md §10; `--ci` gates, `--write-baseline` ratchets)
 //!
@@ -67,6 +69,14 @@ fn backend_opt(cli: Cli) -> Cli {
         .opt("n", "samples per dataset", Some("16"))
         .cache_opts()
         .sched_opts()
+        .engine_opt()
+}
+
+/// Build the experiment harness with the shared backend flags applied
+/// (`--backend`, `--seed`, `--engine-threads`).
+fn exp_from_args(backend_kind: &str, a: &Args, seed: u64) -> anyhow::Result<Exp> {
+    let engine_threads: usize = a.parse_num("engine-threads", 1usize).max(1);
+    Exp::with_engine_threads(backend_kind, seed, engine_threads)
 }
 
 /// Apply `--cache-capacity` / `--no-cache` to a freshly-built harness.
@@ -181,7 +191,7 @@ fn cmd_run(args: Vec<String>) -> i32 {
     let seed: u64 = a.parse_num("seed", 42);
     let n: usize = a.parse_num("n", 16);
     let parallel: usize = a.parse_num("parallel", 1usize).max(1);
-    let mut exp = match Exp::new(a.get_or("backend", "pjrt"), seed) {
+    let mut exp = match exp_from_args(a.get_or("backend", "pjrt"), &a, seed) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("startup failed: {e}");
@@ -278,7 +288,7 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         )
     };
 
-    let mut exp = match Exp::new(&backend_kind, seed) {
+    let mut exp = match exp_from_args(&backend_kind, &a, seed) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("startup failed: {e}");
@@ -350,6 +360,7 @@ fn cmd_serve(args: Vec<String>) -> i32 {
         seed,
         batcher: Some(exp.batcher()),
         cache: exp.cache(),
+        engine: exp.pjrt(),
         sessions,
         max_sessions,
     });
@@ -378,7 +389,18 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
     } else {
         args.remove(0)
     };
-    let cli = backend_opt(Cli::new("minions bench", "regenerate a paper exhibit").parallel_opt());
+    let cli = backend_opt(
+        Cli::new("minions bench", "regenerate a paper exhibit or perf report")
+            .parallel_opt()
+            .flag("json", "hotpath: write the minions-bench-v1 JSON report")
+            .opt("out", "hotpath: report path", Some("BENCH_runtime_hotpath.json"))
+            .opt("iters", "hotpath: timed kernel iterations per capacity", None)
+            .opt(
+                "scale-requests",
+                "hotpath: score requests per engine-scaling point",
+                None,
+            ),
+    );
     let a = match cli.parse_from(args) {
         Ok(a) => a,
         Err(msg) => {
@@ -386,9 +408,12 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    if exhibit == "hotpath" {
+        return cmd_bench_hotpath(&a);
+    }
     let seed: u64 = a.parse_num("seed", 42);
     let n: usize = a.parse_num("n", 16);
-    let mut exp = match Exp::new(a.get_or("backend", "pjrt"), seed) {
+    let mut exp = match exp_from_args(a.get_or("backend", "pjrt"), &a, seed) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("startup failed: {e}");
@@ -432,6 +457,46 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
             1
         }
     }
+}
+
+/// `minions bench hotpath [--json] [--out PATH]` — the runtime perf
+/// report (DESIGN.md §11): kernel rows/sec reference vs factored,
+/// engine worker-pool scaling, pooled-query memo hit rate, chunk-cache
+/// hit rate. Runs against the real artifacts when present, otherwise a
+/// deterministic synthetic set, so it works on a fresh checkout.
+fn cmd_bench_hotpath(a: &Args) -> i32 {
+    let seed: u64 = a.parse_num("seed", 42);
+    let mut opts = minions::perf::HotpathOptions {
+        seed,
+        ..Default::default()
+    };
+    opts.iters = a.parse_num("iters", opts.iters).max(1);
+    opts.scale_requests = a.parse_num("scale-requests", opts.scale_requests).max(1);
+    let (manifest, synthetic) = match minions::perf::load_or_synth_manifest(&[64, 128], seed) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            return 1;
+        }
+    };
+    let report = match minions::perf::hotpath_report(&manifest, &opts, synthetic) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            return 1;
+        }
+    };
+    if a.flag("json") {
+        let path = std::path::PathBuf::from(a.get_or("out", "BENCH_runtime_hotpath.json"));
+        if let Err(e) = minions::perf::write_report(&path, &report) {
+            eprintln!("bench failed: {e}");
+            return 1;
+        }
+        println!("wrote {}", path.display());
+    } else {
+        println!("{report}");
+    }
+    0
 }
 
 fn cmd_lint(args: Vec<String>) -> i32 {

@@ -1,0 +1,426 @@
+//! Performance harness: the naive reference kernel and the
+//! `BENCH_runtime_hotpath.json` report (DESIGN.md §11).
+//!
+//! Three exports:
+//!
+//! 1. [`score_kernel_reference`] — the pre-factorization scoring loop,
+//!    preserved verbatim as the bit-identity oracle for the factored
+//!    kernel (`runtime::native::score_kernel`) and as the "old" side of
+//!    the kernel benchmark.
+//! 2. [`hotpath_report`] — measures kernel rows/sec (reference vs
+//!    factored, per capacity), engine throughput scaling across worker
+//!    counts, the pooled-query memo hit rate, and a chunk-cache
+//!    re-reference workload, returning the `minions-bench-v1` JSON.
+//! 3. [`load_or_synth_manifest`] — the real artifact set when present,
+//!    otherwise deterministic synthetic artifacts
+//!    (`runtime::synth`) in a temp dir, so the bench runs everywhere.
+//!
+//! Invoked by `minions bench hotpath --json` and
+//! `cargo bench --bench runtime_hotpath -- --json`.
+
+use crate::cache::{model_fingerprint, CacheKey, ChunkCache};
+use crate::runtime::native::{load_model_weights, score_kernel, NEG_INF};
+use crate::runtime::synth::write_synthetic_artifacts;
+use crate::runtime::{default_artifact_dir, Engine, Manifest, ScoreRequest, ScoreResponse};
+use crate::sched::ScoreRow;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::vocab::{BATCH, CHUNK, QLEN};
+use anyhow::{Context, Result};
+use std::hint::black_box;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// The naive scoring loop the factored kernel replaced: recomputes the
+/// dot `q·ce[c+j]` for every `(c, j)` pair over a materialized
+/// `CHUNK×d` masked-embedding buffer. O(CHUNK·window·d) per row, kept
+/// byte-for-byte as the bit-identity oracle (see the parity tests in
+/// `runtime::native`) and as the benchmark baseline.
+pub fn score_kernel_reference(
+    emb: &[f32],
+    wpos: &[f32],
+    d: usize,
+    req: &ScoreRequest,
+) -> ScoreResponse {
+    let b = BATCH;
+    let window = wpos.len();
+    let mut scores = vec![NEG_INF; b * CHUNK];
+    let mut lse = vec![0f32; b];
+    let mut q = vec![0f32; d];
+    // reusable masked-embedding buffer for one row
+    let mut ce = vec![0f32; CHUNK * d];
+    for bi in 0..b {
+        // pooled query
+        q.iter_mut().for_each(|x| *x = 0.0);
+        for j in 0..QLEN {
+            let wgt = req.q_weights[bi * QLEN + j];
+            if wgt == 0.0 {
+                continue;
+            }
+            let tok = req.q_tokens[bi * QLEN + j] as usize;
+            let row = &emb[tok * d..(tok + 1) * d];
+            for (qk, ek) in q.iter_mut().zip(row) {
+                *qk += wgt * ek;
+            }
+        }
+        // masked token embeddings
+        for c in 0..CHUNK {
+            let m = req.c_mask[bi * CHUNK + c];
+            let dst = &mut ce[c * d..(c + 1) * d];
+            if m == 0.0 {
+                dst.iter_mut().for_each(|x| *x = 0.0);
+            } else {
+                let tok = req.c_tokens[bi * CHUNK + c] as usize;
+                let row = &emb[tok * d..(tok + 1) * d];
+                for (o, e) in dst.iter_mut().zip(row) {
+                    *o = m * e;
+                }
+            }
+        }
+        // windowed score: s[c] = q . sum_j wpos[j]*ce[c+j]
+        let mut max_s = NEG_INF;
+        for c in 0..CHUNK {
+            let m = req.c_mask[bi * CHUNK + c];
+            if m == 0.0 {
+                continue; // stays NEG_INF
+            }
+            let mut s = 0f32;
+            for (j, &wj) in wpos.iter().enumerate().take(window) {
+                if c + j >= CHUNK {
+                    break;
+                }
+                let row = &ce[(c + j) * d..(c + j + 1) * d];
+                let mut dot = 0f32;
+                for (qk, ek) in q.iter().zip(row) {
+                    dot += qk * ek;
+                }
+                s += wj * dot;
+            }
+            scores[bi * CHUNK + c] = s;
+            if s > max_s {
+                max_s = s;
+            }
+        }
+        // logsumexp over the row
+        let mut sum = 0f64;
+        for c in 0..CHUNK {
+            let s = scores[bi * CHUNK + c];
+            if s > NEG_INF / 2.0 {
+                sum += ((s - max_s) as f64).exp();
+            }
+        }
+        lse[bi] = if sum > 0.0 {
+            max_s + (sum as f32).ln()
+        } else {
+            NEG_INF
+        };
+    }
+    ScoreResponse { scores, lse }
+}
+
+/// Knobs for [`hotpath_report`]. Defaults suit a CI smoke run; the
+/// checked-in trajectory point uses larger `iters`.
+pub struct HotpathOptions {
+    /// timed kernel invocations per capacity (plus one warmup)
+    pub iters: usize,
+    /// total score requests per engine-scaling point
+    pub scale_requests: usize,
+    /// worker counts to sweep
+    pub threads: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for HotpathOptions {
+    fn default() -> HotpathOptions {
+        HotpathOptions {
+            iters: 10,
+            scale_requests: 96,
+            threads: vec![1, 2, 4],
+            seed: 42,
+        }
+    }
+}
+
+/// The real artifact set if `default_artifact_dir()` has one, else a
+/// deterministic synthetic set in a temp dir. Returns `(manifest,
+/// synthetic)`.
+pub fn load_or_synth_manifest(ds: &[usize], seed: u64) -> Result<(Manifest, bool)> {
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        return Ok((Manifest::load(dir)?, false));
+    }
+    let tmp = std::env::temp_dir().join(format!("minions-synth-artifacts-s{seed}"));
+    let m = write_synthetic_artifacts(&tmp, ds, 128, seed)?;
+    Ok((m, true))
+}
+
+/// Measure the full hotpath and build the `minions-bench-v1` report.
+pub fn hotpath_report(manifest: &Manifest, opts: &HotpathOptions, synthetic: bool) -> Result<Json> {
+    let ds = manifest.capacities();
+    let kernel = measure_kernel(manifest, opts)?;
+    let (scaling, pooled) = measure_scaling(manifest, opts)?;
+    let chunk_cache = measure_chunk_cache(manifest, opts)?;
+    Ok(Json::obj(vec![
+        ("format", Json::str("minions-bench-v1")),
+        ("bench", Json::str("runtime_hotpath")),
+        (
+            "producer",
+            Json::str("measured in-process by minions::perf::hotpath_report"),
+        ),
+        (
+            "artifacts",
+            Json::str(if synthetic { "synthetic" } else { "real" }),
+        ),
+        (
+            "config",
+            Json::obj(vec![
+                ("batch", Json::num(BATCH as f64)),
+                ("chunk", Json::num(CHUNK as f64)),
+                ("qlen", Json::num(QLEN as f64)),
+                ("iters", Json::num(opts.iters as f64)),
+                ("scale_requests", Json::num(opts.scale_requests as f64)),
+                (
+                    "ds",
+                    Json::Arr(ds.iter().map(|&d| Json::num(d as f64)).collect()),
+                ),
+                (
+                    "threads",
+                    Json::Arr(opts.threads.iter().map(|&n| Json::num(n as f64)).collect()),
+                ),
+            ]),
+        ),
+        ("kernel", Json::Arr(kernel)),
+        ("engine_scaling", scaling),
+        ("pooled_query", pooled),
+        ("chunk_cache", chunk_cache),
+    ]))
+}
+
+/// Write `report` (plus trailing newline) to `path`.
+pub fn write_report(path: &Path, report: &Json) -> Result<()> {
+    std::fs::write(path, format!("{report}\n"))
+        .with_context(|| format!("writing {}", path.display()))
+}
+
+fn time_rows_per_sec<F: FnMut()>(iters: usize, mut f: F) -> f64 {
+    f(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    (iters * BATCH) as f64 / secs
+}
+
+fn synth_request(d: usize, rng: &mut Rng) -> ScoreRequest {
+    ScoreRequest {
+        d,
+        q_tokens: (0..BATCH * QLEN)
+            .map(|_| rng.range(16, 4096) as i32)
+            .collect(),
+        q_weights: vec![0.2; BATCH * QLEN],
+        c_tokens: (0..BATCH * CHUNK)
+            .map(|_| rng.range(4096, 8192) as i32)
+            .collect(),
+        c_mask: vec![1.0; BATCH * CHUNK],
+    }
+}
+
+fn measure_kernel(manifest: &Manifest, opts: &HotpathOptions) -> Result<Vec<Json>> {
+    let mut rng = Rng::seed_from(opts.seed);
+    let mut out = Vec::new();
+    for d in manifest.capacities() {
+        let spec = manifest.score_module(d)?;
+        let w = load_model_weights(&spec.weights, d)?;
+        let req = synth_request(d, &mut rng);
+        let reference = time_rows_per_sec(opts.iters, || {
+            black_box(score_kernel_reference(&w.emb, &w.wpos, d, &req));
+        });
+        let factored = time_rows_per_sec(opts.iters, || {
+            black_box(score_kernel(&w.emb, &w.wpos, d, &req));
+        });
+        out.push(Json::obj(vec![
+            ("d", Json::num(d as f64)),
+            ("reference_rows_per_sec", Json::num(reference)),
+            ("factored_rows_per_sec", Json::num(factored)),
+            ("speedup", Json::num(factored / reference.max(1e-9))),
+            ("method", Json::str("measured")),
+        ]));
+    }
+    Ok(out)
+}
+
+/// Requests for one scaling point: `total` requests cycling through 4
+/// distinct query templates (all rows of a request share one template,
+/// as a MinionS dispatch wave does), with fresh chunk tokens per
+/// request so only the pooled-query pass can be memoized.
+fn scaling_requests(d: usize, total: usize, rng: &mut Rng) -> Vec<ScoreRequest> {
+    let templates: Vec<(Vec<i32>, Vec<f32>)> = (0..4)
+        .map(|_| {
+            (
+                (0..QLEN).map(|_| rng.range(16, 4096) as i32).collect(),
+                (0..QLEN).map(|_| (rng.f64() * 0.5 + 0.1) as f32).collect(),
+            )
+        })
+        .collect();
+    (0..total)
+        .map(|i| {
+            let (qt, qw) = &templates[i % templates.len()];
+            let mut q_tokens = Vec::with_capacity(BATCH * QLEN);
+            let mut q_weights = Vec::with_capacity(BATCH * QLEN);
+            for _ in 0..BATCH {
+                q_tokens.extend_from_slice(qt);
+                q_weights.extend_from_slice(qw);
+            }
+            ScoreRequest {
+                d,
+                q_tokens,
+                q_weights,
+                c_tokens: (0..BATCH * CHUNK)
+                    .map(|_| rng.range(4096, 8192) as i32)
+                    .collect(),
+                c_mask: vec![1.0; BATCH * CHUNK],
+            }
+        })
+        .collect()
+}
+
+fn measure_scaling(manifest: &Manifest, opts: &HotpathOptions) -> Result<(Json, Json)> {
+    let ds = manifest.capacities();
+    let d = if ds.contains(&128) {
+        128
+    } else {
+        ds.first().copied().context("manifest has no capacities")?
+    };
+    let mut rng = Rng::seed_from(opts.seed ^ 0x5ca1ab1e);
+    let mut points = Vec::new();
+    let mut base = 0f64;
+    let mut last = 0f64;
+    let mut pooled = Json::Null;
+    for &n in &opts.threads {
+        let engine = Engine::start_pool(manifest.clone(), &[d], n)?;
+        let reqs = scaling_requests(d, opts.scale_requests, &mut rng);
+        let total = reqs.len();
+        // split across 8 client threads to keep the queue fed
+        let clients = 8usize.min(total.max(1));
+        let mut chunks: Vec<Vec<ScoreRequest>> = (0..clients).map(|_| Vec::new()).collect();
+        for (i, r) in reqs.into_iter().enumerate() {
+            chunks[i % clients].push(r);
+        }
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for chunk in chunks {
+                let eng = engine.clone();
+                s.spawn(move || {
+                    for req in chunk {
+                        let _ = black_box(eng.score(req));
+                    }
+                });
+            }
+        });
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let dps = total as f64 / secs;
+        if base == 0.0 {
+            base = dps;
+            // single-worker point: deterministic memo counters
+            let st = engine.stats();
+            let lookups = (st.pooled_q_hits + st.pooled_q_misses).max(1);
+            pooled = Json::obj(vec![
+                ("hits", Json::num(st.pooled_q_hits as f64)),
+                ("misses", Json::num(st.pooled_q_misses as f64)),
+                (
+                    "hit_rate",
+                    Json::num(st.pooled_q_hits as f64 / lookups as f64),
+                ),
+                ("method", Json::str("measured")),
+            ]);
+        }
+        last = dps;
+        points.push(Json::obj(vec![
+            ("threads", Json::num(n as f64)),
+            ("dispatches_per_sec", Json::num(dps)),
+            ("speedup", Json::num(dps / base.max(1e-9))),
+        ]));
+    }
+    let scaling = Json::obj(vec![
+        ("d", Json::num(d as f64)),
+        ("requests_per_point", Json::num(opts.scale_requests as f64)),
+        ("points", Json::Arr(points)),
+        ("speedup_at_max", Json::num(last / base.max(1e-9))),
+        ("method", Json::str("measured")),
+    ]);
+    Ok((scaling, pooled))
+}
+
+/// Chunk-cache hit rate under uniform re-reference: 256 lookups drawn
+/// from 64 distinct rows, insert-on-miss — the access shape the
+/// coordinator produces when tasks revisit document chunks.
+fn measure_chunk_cache(manifest: &Manifest, opts: &HotpathOptions) -> Result<Json> {
+    let ds = manifest.capacities();
+    let d = ds.first().copied().context("manifest has no capacities")?;
+    let wpos = manifest.wpos(d)?;
+    let model = model_fingerprint(d, wpos);
+    let cache = ChunkCache::new(256);
+    let mut rng = Rng::seed_from(opts.seed ^ 0xc0ffee);
+    let rows: Vec<ScoreRow> = (0..64)
+        .map(|_| ScoreRow {
+            d,
+            q_tokens: (0..QLEN).map(|_| rng.range(16, 4096) as i32).collect(),
+            q_weights: vec![0.2; QLEN],
+            c_tokens: (0..CHUNK).map(|_| rng.range(4096, 8192) as i32).collect(),
+            c_mask: vec![1.0; CHUNK],
+        })
+        .collect();
+    for _ in 0..256 {
+        let row = &rows[rng.below(rows.len())];
+        let key = CacheKey::for_row(model, row);
+        if cache.get(&key).is_none() {
+            cache.insert(key, Arc::new(vec![0.0; CHUNK]));
+        }
+    }
+    let snap = cache.snapshot();
+    let lookups = (snap.hits + snap.misses).max(1);
+    Ok(Json::obj(vec![
+        ("hits", Json::num(snap.hits as f64)),
+        ("misses", Json::num(snap.misses as f64)),
+        ("hit_rate", Json::num(snap.hits as f64 / lookups as f64)),
+        (
+            "workload",
+            Json::str("256 uniform lookups over 64 distinct rows, insert-on-miss"),
+        ),
+        ("method", Json::str("measured")),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hotpath_report_smoke() {
+        let tmp = std::env::temp_dir().join(format!("minions-perf-{}", std::process::id()));
+        let manifest = write_synthetic_artifacts(&tmp, &[64], 64, 3).unwrap();
+        let opts = HotpathOptions {
+            iters: 2,
+            scale_requests: 8,
+            threads: vec![1, 2],
+            seed: 3,
+        };
+        let report = hotpath_report(&manifest, &opts, true).unwrap();
+        assert_eq!(
+            report.get("format").and_then(Json::as_str),
+            Some("minions-bench-v1")
+        );
+        let kernel = report.get("kernel").and_then(Json::as_arr).unwrap();
+        assert_eq!(kernel.len(), 1);
+        for k in kernel {
+            assert!(k.get("speedup").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        let pooled = report.get("pooled_query").unwrap();
+        // 8 requests x 8 rows over 4 templates on one worker: 4 misses
+        assert_eq!(pooled.get("misses").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(pooled.get("hits").and_then(Json::as_f64), Some(60.0));
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

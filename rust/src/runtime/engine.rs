@@ -1,26 +1,34 @@
 //! Execution engine: loads scorer artifacts and serves batched
-//! score/embed requests from a dedicated engine thread.
+//! score/embed requests from a pool of engine worker threads.
 //!
-//! A single engine thread owns the loaded modules and device state;
-//! callers talk to it through channels via the cloneable [`Engine`]
-//! handle. Two execution paths share this scaffolding:
+//! A shared work queue feeds `--engine-threads N` workers; callers talk
+//! to the pool through the cloneable [`Engine`] handle and get replies
+//! over per-request channels. Weights are loaded once and shared across
+//! workers via `Arc`, so the pool costs one copy of each embedding
+//! table regardless of width. Each response depends only on its request
+//! and the (immutable) weights, so parallel execution is trivially
+//! deterministic — see DESIGN.md §11. Two execution paths share this
+//! scaffolding:
 //!
 //! - **`xla-pjrt` feature** (production): HLO-text artifacts are compiled
 //!   on the PJRT CPU client and weight tensors are staged on-device once
-//!   at module-load time, exactly as before. Requires the external `xla`
-//!   bindings crate, which is not vendored in this offline build —
-//!   enabling the feature without it is a compile error by design.
-//! - **default** (offline): the engine thread executes the *same math*
-//!   as the pure-Rust native oracle (`runtime::native`) directly over the
+//!   at module-load time. Requires the external `xla` bindings crate,
+//!   which is not vendored in this offline build — enabling the feature
+//!   without it is a compile error by design. Device state lives behind
+//!   one mutex, so extra workers add queueing, not parallelism, here.
+//! - **default** (offline): workers execute the *same math* as the
+//!   pure-Rust native oracle (`runtime::native`) directly over the
 //!   artifact weight files. Module "compilation" is the one-time weight
 //!   load, so [`EngineStats`] keeps its meaning and the PJRT↔native
 //!   equivalence tests hold trivially.
 
 use super::manifest::Manifest;
-use crate::vocab::{BATCH, CHUNK, QLEN};
+use super::native::{PooledQueryCache, DEFAULT_POOLED_QUERY_CAP};
+use crate::util::sync::{cv_wait, unpoisoned};
+use crate::vocab::{BATCH, CHUNK, QLEN, VOCAB};
 use anyhow::{anyhow, bail, Context, Result};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 
 /// One batched scoring dispatch (B rows padded by the caller).
 #[derive(Clone, Debug)]
@@ -31,6 +39,29 @@ pub struct ScoreRequest {
     pub q_weights: Vec<f32>, // [B * QLEN]
     pub c_tokens: Vec<i32>,  // [B * CHUNK]
     pub c_mask: Vec<f32>,    // [B * CHUNK]
+}
+
+impl ScoreRequest {
+    /// Shape and token-range check, done once at the serving surface
+    /// ([`Engine::score`] / `NativeBackend::score`) so the kernels and
+    /// per-exec paths never re-validate.
+    pub fn validate(&self) -> Result<()> {
+        if self.q_tokens.len() != BATCH * QLEN
+            || self.q_weights.len() != BATCH * QLEN
+            || self.c_tokens.len() != BATCH * CHUNK
+            || self.c_mask.len() != BATCH * CHUNK
+        {
+            bail!(
+                "score request shape mismatch: q={} qw={} c={} cm={} (want B={BATCH})",
+                self.q_tokens.len(),
+                self.q_weights.len(),
+                self.c_tokens.len(),
+                self.c_mask.len()
+            );
+        }
+        check_tokens(&self.q_tokens)?;
+        check_tokens(&self.c_tokens)
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -45,46 +76,109 @@ pub struct EmbedRequest {
     pub c_mask: Vec<f32>,   // [B * CHUNK]
 }
 
+impl EmbedRequest {
+    /// Shape and token-range check (see [`ScoreRequest::validate`]).
+    pub fn validate(&self) -> Result<()> {
+        if self.c_tokens.len() != BATCH * CHUNK || self.c_mask.len() != BATCH * CHUNK {
+            bail!(
+                "embed request shape mismatch: c={} cm={} (want B={BATCH})",
+                self.c_tokens.len(),
+                self.c_mask.len()
+            );
+        }
+        check_tokens(&self.c_tokens)
+    }
+}
+
+fn check_tokens(toks: &[i32]) -> Result<()> {
+    match toks.iter().find(|&&t| t < 0 || t as usize >= VOCAB) {
+        Some(t) => bail!("token id {t} outside vocab [0, {VOCAB})"),
+        None => Ok(()),
+    }
+}
+
+/// Counters accumulated across the whole pool (plus queue gauges
+/// sampled by [`Engine::stats`]).
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
     pub dispatches: u64,
     pub rows: u64,
     pub exec_secs: f64,
     pub compile_secs: f64,
+    /// pooled-query memo hits/misses summed over all workers
+    pub pooled_q_hits: u64,
+    pub pooled_q_misses: u64,
+    /// pool size and queue gauges (sampled at stats time)
+    pub workers: u64,
+    pub queue_depth: u64,
+    pub max_queue_depth: u64,
 }
 
 enum Request {
     Score(ScoreRequest, mpsc::Sender<Result<ScoreResponse>>),
     Embed(EmbedRequest, mpsc::Sender<Result<Vec<f32>>>),
-    Stats(mpsc::Sender<EngineStats>),
-    Shutdown,
 }
 
-/// Cloneable handle to the engine thread.
+struct Queue {
+    items: VecDeque<Request>,
+    shutdown: bool,
+    max_depth: usize,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    cv: Condvar,
+}
+
+/// Cloneable handle to the engine worker pool.
 #[derive(Clone)]
 pub struct Engine {
-    tx: mpsc::Sender<Request>,
-    // joined on last drop
-    join: Arc<Mutex<Option<std::thread::JoinHandle<()>>>>,
+    shared: Arc<Shared>,
+    exec: Arc<exec::ExecShared>,
+    workers: usize,
+    // joined by the last handle's drop
+    joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
 }
 
 impl Engine {
-    /// Start the engine. Modules are compiled lazily on first use unless
-    /// listed in `precompile`.
+    /// Start a single-worker engine. Modules are compiled lazily on
+    /// first use unless listed in `precompile`.
     pub fn start(manifest: Manifest, precompile: &[usize]) -> Result<Engine> {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let pre: Vec<usize> = precompile.to_vec();
-        let join = std::thread::Builder::new()
-            .name("engine".into())
-            .spawn(move || engine_main(manifest, pre, rx, ready_tx))
-            .context("spawning engine thread")?;
-        ready_rx
-            .recv()
-            .context("engine thread died during startup")??;
+        Self::start_pool(manifest, precompile, 1)
+    }
+
+    /// Start a pool of `workers` engine threads sharing one work queue
+    /// and one `Arc`-loaded weight store. Precompilation happens on the
+    /// caller thread so startup errors surface before any worker spawns.
+    pub fn start_pool(manifest: Manifest, precompile: &[usize], workers: usize) -> Result<Engine> {
+        let workers = workers.max(1);
+        let exec = Arc::new(exec::ExecShared::new(manifest)?);
+        for d in precompile {
+            exec.ensure_score(*d)?;
+        }
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue {
+                items: VecDeque::new(),
+                shutdown: false,
+                max_depth: 0,
+            }),
+            cv: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            let ex = Arc::clone(&exec);
+            let h = std::thread::Builder::new()
+                .name(format!("engine-{i}"))
+                .spawn(move || worker_main(sh, ex))
+                .context("spawning engine worker")?;
+            handles.push(h);
+        }
         Ok(Engine {
-            tx,
-            join: Arc::new(Mutex::new(Some(join))),
+            shared,
+            exec,
+            workers,
+            joins: Arc::new(Mutex::new(handles)),
         })
     }
 
@@ -94,96 +188,97 @@ impl Engine {
         Engine::start(manifest, &[])
     }
 
-    pub fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
-        let b = req.q_tokens.len() / QLEN;
-        if req.q_tokens.len() != b * QLEN
-            || req.q_weights.len() != b * QLEN
-            || req.c_tokens.len() != b * CHUNK
-            || req.c_mask.len() != b * CHUNK
-            || b != BATCH
+    /// Number of worker threads in the pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn enqueue(&self, req: Request) -> Result<()> {
         {
-            bail!(
-                "score request shape mismatch: q={} qw={} c={} cm={} (want B={BATCH})",
-                req.q_tokens.len(),
-                req.q_weights.len(),
-                req.c_tokens.len(),
-                req.c_mask.len()
-            );
+            let mut q = unpoisoned(&self.shared.queue);
+            if q.shutdown {
+                bail!("engine is shut down");
+            }
+            q.items.push_back(req);
+            let depth = q.items.len();
+            if depth > q.max_depth {
+                q.max_depth = depth;
+            }
         }
+        self.shared.cv.notify_one();
+        Ok(())
+    }
+
+    pub fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
+        req.validate()?;
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Score(req, tx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
+        self.enqueue(Request::Score(req, tx))?;
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
     }
 
     pub fn embed(&self, req: EmbedRequest) -> Result<Vec<f32>> {
+        req.validate()?;
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Request::Embed(req, tx))
-            .map_err(|_| anyhow!("engine thread gone"))?;
+        self.enqueue(Request::Embed(req, tx))?;
         rx.recv().map_err(|_| anyhow!("engine dropped reply"))?
     }
 
+    /// Pool-wide counters plus sampled queue gauges. No worker
+    /// round-trip: counters live in the shared exec state.
     pub fn stats(&self) -> EngineStats {
-        let (tx, rx) = mpsc::channel();
-        if self.tx.send(Request::Stats(tx)).is_err() {
-            return EngineStats::default();
-        }
-        rx.recv().unwrap_or_default()
+        let mut s = self.exec.stats();
+        s.workers = self.workers as u64;
+        let q = unpoisoned(&self.shared.queue);
+        s.queue_depth = q.items.len() as u64;
+        s.max_queue_depth = q.max_depth as u64;
+        s
     }
 }
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        if Arc::strong_count(&self.join) == 1 {
-            let _ = self.tx.send(Request::Shutdown);
-            if let Some(h) = self.join.lock().unwrap().take() {
-                let _ = h.join();
-            }
+        if Arc::strong_count(&self.joins) != 1 {
+            return;
+        }
+        {
+            let mut q = unpoisoned(&self.shared.queue);
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        let mut handles = unpoisoned(&self.joins);
+        for h in handles.drain(..) {
+            let _ = h.join();
         }
     }
 }
 
-// ---------------------------------------------------------------------------
-// Engine thread main loop (shared by both execution paths)
-// ---------------------------------------------------------------------------
-
-fn engine_main(
-    manifest: Manifest,
-    precompile: Vec<usize>,
-    rx: mpsc::Receiver<Request>,
-    ready_tx: mpsc::Sender<Result<()>>,
-) {
-    let mut state = match exec::ExecState::new(manifest) {
-        Ok(s) => s,
-        Err(e) => {
-            let _ = ready_tx.send(Err(e));
-            return;
-        }
-    };
-    for d in &precompile {
-        if let Err(e) = state.ensure_score(*d) {
-            let _ = ready_tx.send(Err(e));
-            return;
-        }
-    }
-    let _ = ready_tx.send(Ok(()));
-
-    while let Ok(req) = rx.recv() {
+/// Worker loop: pop-or-wait, execute, reply. On shutdown the queue is
+/// drained before exiting so accepted requests still get answers.
+fn worker_main(shared: Arc<Shared>, exec: Arc<exec::ExecShared>) {
+    let mut memo = PooledQueryCache::new(DEFAULT_POOLED_QUERY_CAP);
+    loop {
+        let req = {
+            let mut q = unpoisoned(&shared.queue);
+            loop {
+                if let Some(item) = q.items.pop_front() {
+                    break Some(item);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = cv_wait(&shared.cv, q);
+            }
+        };
+        let Some(req) = req else { return };
         match req {
             Request::Score(r, reply) => {
-                let res = state.run_score(r);
+                let res = exec.run_score(&r, &mut memo);
                 let _ = reply.send(res);
             }
             Request::Embed(r, reply) => {
-                let res = state.run_embed(r);
+                let res = exec.run_embed(&r);
                 let _ = reply.send(res);
             }
-            Request::Stats(reply) => {
-                let _ = reply.send(state.stats());
-            }
-            Request::Shutdown => break,
         }
     }
 }
@@ -194,108 +289,96 @@ fn engine_main(
 
 #[cfg(not(feature = "xla-pjrt"))]
 mod exec {
-    use super::super::native::{embed_kernel, score_kernel};
-    use super::super::weights::WeightFile;
+    use super::super::native::{
+        embed_kernel, load_model_weights, score_kernel_memo, ModelWeights, PooledQueryCache,
+    };
     use super::{EmbedRequest, EngineStats, Manifest, Result, ScoreRequest, ScoreResponse};
-    use anyhow::bail;
-    use std::collections::HashMap;
+    use crate::util::sync::unpoisoned;
+    use std::collections::BTreeMap;
+    use std::sync::{Arc, Mutex};
     use std::time::Instant;
 
-    struct LoadedWeights {
-        d: usize,
-        emb: Vec<f32>,  // [V, d]
-        wpos: Vec<f32>, // [W]
-    }
-
-    pub(super) struct ExecState {
+    /// Weight store and counters shared by every worker in the pool.
+    /// Weights load once under the map lock and hand out as `Arc`s, so
+    /// N workers share a single copy of each embedding table.
+    pub(super) struct ExecShared {
         manifest: Manifest,
-        score_weights: HashMap<usize, LoadedWeights>,
-        embed_weights: Option<LoadedWeights>,
-        stats: EngineStats,
+        score_weights: Mutex<BTreeMap<usize, Arc<ModelWeights>>>,
+        embed_weights: Mutex<Option<Arc<ModelWeights>>>,
+        stats: Mutex<EngineStats>,
     }
 
-    impl ExecState {
-        pub(super) fn new(manifest: Manifest) -> Result<ExecState> {
-            Ok(ExecState {
+    impl ExecShared {
+        pub(super) fn new(manifest: Manifest) -> Result<ExecShared> {
+            Ok(ExecShared {
                 manifest,
-                score_weights: HashMap::new(),
-                embed_weights: None,
-                stats: EngineStats::default(),
+                score_weights: Mutex::new(BTreeMap::new()),
+                embed_weights: Mutex::new(None),
+                stats: Mutex::new(EngineStats::default()),
             })
         }
 
-        fn load(&mut self, weights_path: &std::path::Path, d: usize) -> Result<LoadedWeights> {
+        pub(super) fn ensure_score(&self, d: usize) -> Result<Arc<ModelWeights>> {
+            let mut map = unpoisoned(&self.score_weights);
+            if let Some(w) = map.get(&d) {
+                return Ok(Arc::clone(w));
+            }
+            // Load under the lock so a cold pool loads each table once.
             let t0 = Instant::now();
-            let wf = WeightFile::load(weights_path)?;
-            let emb = wf.get("emb")?;
-            let wpos = wf.get("wpos")?;
-            if emb.dims.len() != 2 || emb.dims[1] != d {
-                bail!("emb dims {:?} inconsistent with d={d}", emb.dims);
-            }
-            self.stats.compile_secs += t0.elapsed().as_secs_f64();
-            Ok(LoadedWeights {
-                d,
-                emb: emb.data.clone(),
-                wpos: wpos.data.clone(),
-            })
+            let path = self.manifest.score_module(d)?.weights.clone();
+            let w = Arc::new(load_model_weights(&path, d)?);
+            unpoisoned(&self.stats).compile_secs += t0.elapsed().as_secs_f64();
+            map.insert(d, Arc::clone(&w));
+            Ok(w)
         }
 
-        pub(super) fn ensure_score(&mut self, d: usize) -> Result<()> {
-            if !self.score_weights.contains_key(&d) {
-                let path = self.manifest.score_module(d)?.weights.clone();
-                let w = self.load(&path, d)?;
-                self.score_weights.insert(d, w);
+        fn ensure_embed(&self) -> Result<Arc<ModelWeights>> {
+            let mut slot = unpoisoned(&self.embed_weights);
+            if let Some(w) = slot.as_ref() {
+                return Ok(Arc::clone(w));
             }
-            Ok(())
-        }
-
-        fn ensure_embed(&mut self) -> Result<()> {
-            if self.embed_weights.is_none() {
-                let spec = self.manifest.embed_module()?;
-                let (path, d) = (spec.weights.clone(), spec.d);
-                self.embed_weights = Some(self.load(&path, d)?);
-            }
-            Ok(())
-        }
-
-        pub(super) fn run_score(&mut self, req: ScoreRequest) -> Result<ScoreResponse> {
-            if req.q_tokens.len() != super::BATCH * super::QLEN
-                || req.q_weights.len() != super::BATCH * super::QLEN
-                || req.c_tokens.len() != super::BATCH * super::CHUNK
-                || req.c_mask.len() != super::BATCH * super::CHUNK
-            {
-                // bail per-request instead of letting the kernel index out
-                // of bounds and kill the engine thread
-                bail!("score request shape mismatch");
-            }
-            self.ensure_score(req.d)?;
-            let w = self.score_weights.get(&req.d).unwrap();
             let t0 = Instant::now();
-            let resp = score_kernel(&w.emb, &w.wpos, w.d, &req);
-            self.stats.dispatches += 1;
-            self.stats.rows += super::BATCH as u64;
-            self.stats.exec_secs += t0.elapsed().as_secs_f64();
+            let spec = self.manifest.embed_module()?;
+            let (path, d) = (spec.weights.clone(), spec.d);
+            let w = Arc::new(load_model_weights(&path, d)?);
+            unpoisoned(&self.stats).compile_secs += t0.elapsed().as_secs_f64();
+            *slot = Some(Arc::clone(&w));
+            Ok(w)
+        }
+
+        pub(super) fn run_score(
+            &self,
+            req: &ScoreRequest,
+            memo: &mut PooledQueryCache,
+        ) -> Result<ScoreResponse> {
+            let w = self.ensure_score(req.d)?;
+            let t0 = Instant::now();
+            let resp = score_kernel_memo(&w.emb, &w.wpos, w.d, req, memo);
+            let secs = t0.elapsed().as_secs_f64();
+            let (hits, misses) = memo.take_counters();
+            let mut stats = unpoisoned(&self.stats);
+            stats.dispatches += 1;
+            stats.rows += crate::vocab::BATCH as u64;
+            stats.exec_secs += secs;
+            stats.pooled_q_hits += hits;
+            stats.pooled_q_misses += misses;
             Ok(resp)
         }
 
-        pub(super) fn run_embed(&mut self, req: EmbedRequest) -> Result<Vec<f32>> {
-            if req.c_tokens.len() != super::BATCH * super::CHUNK
-                || req.c_mask.len() != super::BATCH * super::CHUNK
-            {
-                bail!("embed request shape mismatch");
-            }
-            self.ensure_embed()?;
-            let w = self.embed_weights.as_ref().unwrap();
+        pub(super) fn run_embed(&self, req: &EmbedRequest) -> Result<Vec<f32>> {
+            let w = self.ensure_embed()?;
             let t0 = Instant::now();
-            let out = embed_kernel(&w.emb, w.d, &req);
-            self.stats.dispatches += 1;
-            self.stats.rows += super::BATCH as u64;
-            self.stats.exec_secs += t0.elapsed().as_secs_f64();
+            let out = embed_kernel(&w.emb, w.d, req);
+            let secs = t0.elapsed().as_secs_f64();
+            let mut stats = unpoisoned(&self.stats);
+            stats.dispatches += 1;
+            stats.rows += crate::vocab::BATCH as u64;
+            stats.exec_secs += secs;
             Ok(out)
         }
 
         pub(super) fn stats(&self) -> EngineStats {
-            self.stats.clone()
+            unpoisoned(&self.stats).clone()
         }
     }
 }
@@ -307,15 +390,53 @@ mod exec {
 #[cfg(feature = "xla-pjrt")]
 mod exec {
     use super::super::manifest::ModuleSpec;
+    use super::super::native::PooledQueryCache;
     use super::super::weights::WeightFile;
     use super::{
         EmbedRequest, EngineStats, Manifest, Result, ScoreRequest, ScoreResponse, BATCH, CHUNK,
         QLEN,
     };
+    use crate::util::sync::unpoisoned;
     use anyhow::{anyhow, bail};
     use std::collections::HashMap;
-    use std::sync::Arc;
+    use std::sync::{Arc, Mutex};
     use std::time::Instant;
+
+    /// One PJRT CPU client owns all device state, so the whole path is
+    /// serialized behind a single mutex: a worker pool adds queueing
+    /// fairness but no parallelism on this backend. Pooled-query
+    /// memoization is a no-op here — pooling happens inside the HLO.
+    pub(super) struct ExecShared {
+        state: Mutex<State>,
+    }
+
+    impl ExecShared {
+        pub(super) fn new(manifest: Manifest) -> Result<ExecShared> {
+            Ok(ExecShared {
+                state: Mutex::new(State::new(manifest)?),
+            })
+        }
+
+        pub(super) fn ensure_score(&self, d: usize) -> Result<()> {
+            unpoisoned(&self.state).ensure_score(d)
+        }
+
+        pub(super) fn run_score(
+            &self,
+            req: &ScoreRequest,
+            _memo: &mut PooledQueryCache,
+        ) -> Result<ScoreResponse> {
+            unpoisoned(&self.state).run_score(req)
+        }
+
+        pub(super) fn run_embed(&self, req: &EmbedRequest) -> Result<Vec<f32>> {
+            unpoisoned(&self.state).run_embed(req)
+        }
+
+        pub(super) fn stats(&self) -> EngineStats {
+            unpoisoned(&self.state).stats()
+        }
+    }
 
     struct LoadedModule {
         exe: xla::PjRtLoadedExecutable,
@@ -324,7 +445,7 @@ mod exec {
         spec: ModuleSpec,
     }
 
-    pub(super) struct ExecState {
+    struct State {
         client: xla::PjRtClient,
         manifest: Manifest,
         score_modules: HashMap<usize, LoadedModule>,
@@ -333,11 +454,11 @@ mod exec {
         stats: EngineStats,
     }
 
-    impl ExecState {
-        pub(super) fn new(manifest: Manifest) -> Result<ExecState> {
-            let client = xla::PjRtClient::cpu()
-                .map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
-            Ok(ExecState {
+    impl State {
+        fn new(manifest: Manifest) -> Result<State> {
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu failed: {e:?}"))?;
+            Ok(State {
                 client,
                 manifest,
                 score_modules: HashMap::new(),
@@ -392,7 +513,7 @@ mod exec {
             })
         }
 
-        pub(super) fn ensure_score(&mut self, d: usize) -> Result<()> {
+        fn ensure_score(&mut self, d: usize) -> Result<()> {
             if !self.score_modules.contains_key(&d) {
                 let spec = self.manifest.score_module(d)?.clone();
                 let m = self.load_module(&spec)?;
@@ -409,10 +530,12 @@ mod exec {
             Ok(())
         }
 
-        pub(super) fn run_score(&mut self, req: ScoreRequest) -> Result<ScoreResponse> {
+        fn run_score(&mut self, req: &ScoreRequest) -> Result<ScoreResponse> {
             self.ensure_score(req.d)?;
             let b = BATCH;
-            let module = self.score_modules.get(&req.d).unwrap();
+            let Some(module) = self.score_modules.get(&req.d) else {
+                bail!("score module d={} missing after ensure", req.d);
+            };
             let q_tok = buffer_i32(&self.client, &req.q_tokens, &[b, QLEN])?;
             let q_w = buffer_f32(&self.client, &req.q_weights, &[b, QLEN])?;
             let c_tok = buffer_i32(&self.client, &req.c_tokens, &[b, CHUNK])?;
@@ -432,7 +555,7 @@ mod exec {
                 .exe
                 .execute_b(&inputs)
                 .map_err(|e| anyhow!("execute {}: {e:?}", module.spec.name))?;
-            let out = result[0][0]
+            let out = first_output(&result)?
                 .to_literal_sync()
                 .map_err(|e| anyhow!("readback: {e:?}"))?;
             let (scores_lit, lse_lit) = out
@@ -458,13 +581,12 @@ mod exec {
             Ok(ScoreResponse { scores, lse })
         }
 
-        pub(super) fn run_embed(&mut self, req: EmbedRequest) -> Result<Vec<f32>> {
+        fn run_embed(&mut self, req: &EmbedRequest) -> Result<Vec<f32>> {
             self.ensure_embed()?;
             let b = BATCH;
-            if req.c_tokens.len() != b * CHUNK || req.c_mask.len() != b * CHUNK {
-                bail!("embed request shape mismatch");
-            }
-            let module = self.embed_module.as_ref().unwrap();
+            let Some(module) = self.embed_module.as_ref() else {
+                bail!("embed module missing after ensure");
+            };
             let c_tok = buffer_i32(&self.client, &req.c_tokens, &[b, CHUNK])?;
             let c_m = buffer_f32(&self.client, &req.c_mask, &[b, CHUNK])?;
             let mut inputs: Vec<&xla::PjRtBuffer> = Vec::new();
@@ -478,7 +600,7 @@ mod exec {
                 .exe
                 .execute_b(&inputs)
                 .map_err(|e| anyhow!("execute embed: {e:?}"))?;
-            let out = result[0][0]
+            let out = first_output(&result)?
                 .to_literal_sync()
                 .map_err(|e| anyhow!("readback: {e:?}"))?;
             let emb_lit = out
@@ -493,9 +615,17 @@ mod exec {
             Ok(emb)
         }
 
-        pub(super) fn stats(&self) -> EngineStats {
+        fn stats(&self) -> EngineStats {
             self.stats.clone()
         }
+    }
+
+    /// The single output buffer of a one-device execution.
+    fn first_output(result: &[Vec<xla::PjRtBuffer>]) -> Result<&xla::PjRtBuffer> {
+        result
+            .first()
+            .and_then(|per_device| per_device.first())
+            .ok_or_else(|| anyhow!("execute returned no output buffers"))
     }
 
     fn buffer_f32(

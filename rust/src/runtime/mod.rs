@@ -7,15 +7,15 @@
 pub mod engine;
 pub mod manifest;
 pub mod native;
+pub mod synth;
 pub mod weights;
 
 pub use engine::{EmbedRequest, Engine, EngineStats, ScoreRequest, ScoreResponse};
 pub use manifest::{default_artifact_dir, Manifest, ModuleSpec, WeightEntry};
-pub use native::NativeBackend;
+pub use native::{NativeBackend, PooledQueryCache};
 pub use weights::{Tensor, WeightFile};
 
 use anyhow::Result;
-use std::sync::Mutex;
 
 /// The scoring/embedding backend interface the coordinator programs to.
 pub trait Backend: Send + Sync {
@@ -28,7 +28,7 @@ pub trait Backend: Send + Sync {
 /// dynamic batcher's row/occupancy view (the serving-efficiency headline).
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
-    /// engine counters; `None` when the backend has no engine thread
+    /// engine counters; `None` when the backend has no engine workers
     /// (e.g. the native oracle)
     pub engine: Option<EngineStats>,
     /// shared-batcher counters; `None` when scoring bypasses the batcher
@@ -37,38 +37,39 @@ pub struct RuntimeStats {
     pub cache: Option<crate::cache::CacheSnapshot>,
 }
 
-/// PJRT-backed production backend. `mpsc::Sender` is `!Sync`, so the
-/// handle is wrapped in a mutex; actual execution happens on the engine
-/// thread (requests are serialized there anyway — one CPU device).
+/// Engine-backed production backend. The [`Engine`] handle is a shared
+/// work queue behind `Arc`s (`Send + Sync`), so requests from many
+/// coordinator threads fan out to the worker pool directly.
 pub struct PjrtBackend {
-    engine: Mutex<Engine>,
+    engine: Engine,
 }
 
 impl PjrtBackend {
     pub fn new(engine: Engine) -> Self {
-        PjrtBackend {
-            engine: Mutex::new(engine),
-        }
+        PjrtBackend { engine }
     }
 
     pub fn start(manifest: Manifest, precompile: &[usize]) -> Result<Self> {
         Ok(Self::new(Engine::start(manifest, precompile)?))
     }
 
+    /// Start with `workers` engine threads (see [`Engine::start_pool`]).
+    pub fn start_pool(manifest: Manifest, precompile: &[usize], workers: usize) -> Result<Self> {
+        Ok(Self::new(Engine::start_pool(manifest, precompile, workers)?))
+    }
+
     pub fn stats(&self) -> EngineStats {
-        self.engine.lock().unwrap().stats()
+        self.engine.stats()
     }
 }
 
 impl Backend for PjrtBackend {
     fn score(&self, req: ScoreRequest) -> Result<ScoreResponse> {
-        let engine = self.engine.lock().unwrap().clone();
-        engine.score(req)
+        self.engine.score(req)
     }
 
     fn embed(&self, req: EmbedRequest) -> Result<Vec<f32>> {
-        let engine = self.engine.lock().unwrap().clone();
-        engine.embed(req)
+        self.engine.embed(req)
     }
 
     fn name(&self) -> &'static str {

@@ -10,140 +10,359 @@
 //! 2. **Fast test backend**: protocol/unit tests run against this backend
 //!    so they don't need artifact compilation.
 //! 3. **Offline engine kernel**: without the `xla-pjrt` feature the
-//!    engine thread executes `score_kernel` / `embed_kernel` directly
+//!    engine workers execute `score_kernel` / `embed_kernel` directly
 //!    (see `runtime::engine`), so the serving stack runs everywhere.
+//!
+//! The scoring kernel is *factored* (DESIGN.md §11): instead of
+//! recomputing the dot `q·(m_{c+j}·emb[tok_{c+j}])` for every `(c, j)`
+//! pair — O(CHUNK·window·d) — it computes the per-position projection
+//! `p[c] = q·(m_c·emb[tok_c])` once and then the 1-D convolution
+//! `s[c] = Σ_j wpos[j]·p[c+j]` — O(CHUNK·d + CHUNK·window). The
+//! per-element FP operations happen in the same order as the naive
+//! loop, so results are bit-identical (the naive form is preserved as
+//! [`crate::perf::score_kernel_reference`] and the parity tests below
+//! compare bit patterns).
 
 use super::engine::{EmbedRequest, ScoreRequest, ScoreResponse};
 use super::manifest::Manifest;
 use super::weights::WeightFile;
+use crate::util::sync::unpoisoned;
 use crate::vocab::{BATCH, CHUNK, QLEN};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 pub const NEG_INF: f32 = -1.0e30;
 
-struct ModelWeights {
-    d: usize,
-    emb: Vec<f32>,  // [V, d]
-    wpos: Vec<f32>, // [W]
+/// Loaded weight tensors for one capacity `d`, shared (via `Arc`) by the
+/// native backend and the offline engine workers.
+pub(crate) struct ModelWeights {
+    pub(crate) d: usize,
+    pub(crate) emb: Vec<f32>,  // [V, d]
+    pub(crate) wpos: Vec<f32>, // [W]
+}
+
+/// Load and shape-check the `emb`/`wpos` tensors for capacity `d`.
+pub(crate) fn load_model_weights(path: &std::path::Path, d: usize) -> Result<ModelWeights> {
+    let wf = WeightFile::load(path)?;
+    let emb = wf.get("emb")?;
+    let wpos = wf.get("wpos")?;
+    if emb.dims.len() != 2 || emb.dims.last() != Some(&d) {
+        bail!("emb dims {:?} inconsistent with d={d}", emb.dims);
+    }
+    Ok(ModelWeights {
+        d,
+        emb: emb.data.clone(),
+        wpos: wpos.data.clone(),
+    })
+}
+
+/// The embedding row for `tok`, or the empty slice when out of range.
+///
+/// Token ids are range-checked once at the serving surface
+/// ([`ScoreRequest::validate`] / [`EmbedRequest::validate`]), so the
+/// empty fallback is unreachable on the serving path; returning `&[]`
+/// (a zero contribution through the zipped dot loops) keeps the kernel
+/// itself panic-free. Wrapping arithmetic so a hostile `tok` cannot
+/// overflow-panic in debug builds either.
+#[inline]
+fn emb_row(emb: &[f32], d: usize, tok: i32) -> &[f32] {
+    let start = (tok as usize).wrapping_mul(d);
+    emb.get(start..start.wrapping_add(d)).unwrap_or(&[])
+}
+
+/// Pool the weighted query embedding `q = Σ_j w_j·emb[tok_j]` into `q`,
+/// skipping zero-weight slots exactly like the lowered HLO.
+fn pool_query(emb: &[f32], d: usize, q_tokens: &[i32], q_weights: &[f32], q: &mut [f32]) {
+    q.iter_mut().for_each(|x| *x = 0.0);
+    for (&tok, &wgt) in q_tokens.iter().zip(q_weights) {
+        if wgt == 0.0 {
+            continue;
+        }
+        let row = emb_row(emb, d, tok);
+        for (qk, &ek) in q.iter_mut().zip(row) {
+            *qk += wgt * ek;
+        }
+    }
+}
+
+/// Score one row against a pooled query: the factored form.
+///
+/// Pass 1 computes `p[c] = q·(m_c·emb[tok_c])`; pass 2 the convolution
+/// `s[c] = Σ_j wpos[j]·p[c+j]`. Bit-identity with the naive loop: the
+/// naive form materializes `ce_k = m·e_k` (one f32 rounding) and then
+/// accumulates `dot += q_k·ce_k` in `k` order; here `q_k·(m·e_k)`
+/// evaluates `m·e_k` first with the same rounding, so the sequence of
+/// FP operations is identical. For masked positions the naive dot over
+/// a zeroed row sums `q_k·0.0` terms to `+0.0` (for finite `q`), which
+/// is exactly the `p[c] = 0.0` written here. The convolution truncates
+/// at the chunk edge via the `skip(c)` zip just like the reference's
+/// `c + j >= CHUNK` break, in the same `j` order.
+fn score_row(
+    wpos: &[f32],
+    q: &[f32],
+    emb: &[f32],
+    c_tokens: &[i32],
+    c_mask: &[f32],
+    p: &mut [f32],
+    scores: &mut [f32],
+) -> f32 {
+    let d = q.len();
+    // pass 1: masked per-position projections
+    for ((pc, &m), &tok) in p.iter_mut().zip(c_mask).zip(c_tokens) {
+        if m == 0.0 {
+            *pc = 0.0;
+            continue;
+        }
+        let row = emb_row(emb, d, tok);
+        let mut dot = 0f32;
+        for (&qk, &ek) in q.iter().zip(row) {
+            dot += qk * (m * ek);
+        }
+        *pc = dot;
+    }
+    // pass 2: windowed convolution; masked positions stay NEG_INF
+    let mut max_s = NEG_INF;
+    for (c, (sc, &m)) in scores.iter_mut().zip(c_mask).enumerate() {
+        if m == 0.0 {
+            continue;
+        }
+        let mut s = 0f32;
+        for (&wj, &pcj) in wpos.iter().zip(p.iter().skip(c)) {
+            s += wj * pcj;
+        }
+        *sc = s;
+        if s > max_s {
+            max_s = s;
+        }
+    }
+    // logsumexp over the row (f64 accumulator, as lowered)
+    let mut sum = 0f64;
+    for &s in scores.iter() {
+        if s > NEG_INF / 2.0 {
+            sum += ((s - max_s) as f64).exp();
+        }
+    }
+    if sum > 0.0 {
+        max_s + (sum as f32).ln()
+    } else {
+        NEG_INF
+    }
 }
 
 /// Score one full batch: mirrors `python/compile/model.py::local_score_fn`.
 /// `emb` is the `[V, d]` embedding table, `wpos` the window weights.
-/// Shapes are the caller's responsibility (`[BATCH*QLEN]` / `[BATCH*CHUNK]`).
+/// Shapes and token ranges are checked at the serving surfaces via
+/// [`ScoreRequest::validate`].
 pub(crate) fn score_kernel(
     emb: &[f32],
     wpos: &[f32],
     d: usize,
     req: &ScoreRequest,
 ) -> ScoreResponse {
-    let b = BATCH;
-    let window = wpos.len();
-    let mut scores = vec![NEG_INF; b * CHUNK];
-    let mut lse = vec![0f32; b];
+    let mut scores = vec![NEG_INF; BATCH * CHUNK];
+    let mut lse = vec![0f32; BATCH];
     let mut q = vec![0f32; d];
-    // reusable masked-embedding buffer for one row
-    let mut ce = vec![0f32; CHUNK * d];
-    for bi in 0..b {
-        // pooled query
-        q.iter_mut().for_each(|x| *x = 0.0);
-        for j in 0..QLEN {
-            let wgt = req.q_weights[bi * QLEN + j];
-            if wgt == 0.0 {
-                continue;
-            }
-            let tok = req.q_tokens[bi * QLEN + j] as usize;
-            let row = &emb[tok * d..(tok + 1) * d];
-            for (qk, ek) in q.iter_mut().zip(row) {
-                *qk += wgt * ek;
-            }
-        }
-        // masked token embeddings
-        for c in 0..CHUNK {
-            let m = req.c_mask[bi * CHUNK + c];
-            let dst = &mut ce[c * d..(c + 1) * d];
-            if m == 0.0 {
-                dst.iter_mut().for_each(|x| *x = 0.0);
-            } else {
-                let tok = req.c_tokens[bi * CHUNK + c] as usize;
-                let row = &emb[tok * d..(tok + 1) * d];
-                for (o, e) in dst.iter_mut().zip(row) {
-                    *o = m * e;
-                }
-            }
-        }
-        // windowed score: s[c] = q . sum_j wpos[j]*ce[c+j]
-        let mut max_s = NEG_INF;
-        for c in 0..CHUNK {
-            let m = req.c_mask[bi * CHUNK + c];
-            if m == 0.0 {
-                continue; // stays NEG_INF
-            }
-            let mut s = 0f32;
-            for (j, &wj) in wpos.iter().enumerate().take(window) {
-                if c + j >= CHUNK {
-                    break;
-                }
-                let row = &ce[(c + j) * d..(c + j + 1) * d];
-                let mut dot = 0f32;
-                for (qk, ek) in q.iter().zip(row) {
-                    dot += qk * ek;
-                }
-                s += wj * dot;
-            }
-            scores[bi * CHUNK + c] = s;
-            if s > max_s {
-                max_s = s;
-            }
-        }
-        // logsumexp over the row
-        let mut sum = 0f64;
-        for c in 0..CHUNK {
-            let s = scores[bi * CHUNK + c];
-            if s > NEG_INF / 2.0 {
-                sum += ((s - max_s) as f64).exp();
-            }
-        }
-        lse[bi] = if sum > 0.0 {
-            max_s + (sum as f32).ln()
-        } else {
-            NEG_INF
-        };
+    let mut p = vec![0f32; CHUNK];
+    let rows = req
+        .q_tokens
+        .chunks_exact(QLEN)
+        .zip(req.q_weights.chunks_exact(QLEN))
+        .zip(req.c_tokens.chunks_exact(CHUNK))
+        .zip(req.c_mask.chunks_exact(CHUNK))
+        .zip(scores.chunks_exact_mut(CHUNK))
+        .zip(lse.iter_mut());
+    for (((((qt, qw), ct), cm), srow), l) in rows {
+        pool_query(emb, d, qt, qw, &mut q);
+        *l = score_row(wpos, &q, emb, ct, cm, &mut p, srow);
+    }
+    ScoreResponse { scores, lse }
+}
+
+/// [`score_kernel`] with the pooled-query pass memoized through `memo`.
+/// Bit-identical to the unmemoized kernel: a cache hit returns the very
+/// vector a cold pooling pass would have produced (full key equality is
+/// checked on hash match, so collisions can only miss, never alias).
+pub(crate) fn score_kernel_memo(
+    emb: &[f32],
+    wpos: &[f32],
+    d: usize,
+    req: &ScoreRequest,
+    memo: &mut PooledQueryCache,
+) -> ScoreResponse {
+    let mut scores = vec![NEG_INF; BATCH * CHUNK];
+    let mut lse = vec![0f32; BATCH];
+    let mut p = vec![0f32; CHUNK];
+    let rows = req
+        .q_tokens
+        .chunks_exact(QLEN)
+        .zip(req.q_weights.chunks_exact(QLEN))
+        .zip(req.c_tokens.chunks_exact(CHUNK))
+        .zip(req.c_mask.chunks_exact(CHUNK))
+        .zip(scores.chunks_exact_mut(CHUNK))
+        .zip(lse.iter_mut());
+    for (((((qt, qw), ct), cm), srow), l) in rows {
+        let q = memo.query(emb, d, qt, qw);
+        *l = score_row(wpos, q, emb, ct, cm, &mut p, srow);
     }
     ScoreResponse { scores, lse }
 }
 
 /// Mean-pool chunk embedding: mirrors `embed_fn`.
 pub(crate) fn embed_kernel(emb: &[f32], d: usize, req: &EmbedRequest) -> Vec<f32> {
-    let b = BATCH;
-    let mut out = vec![0f32; b * d];
-    for bi in 0..b {
+    let mut out = vec![0f32; BATCH * d];
+    let rows = req
+        .c_tokens
+        .chunks_exact(CHUNK)
+        .zip(req.c_mask.chunks_exact(CHUNK))
+        .zip(out.chunks_exact_mut(d));
+    for ((ct, cm), orow) in rows {
         let mut count = 0f32;
-        for c in 0..CHUNK {
-            let m = req.c_mask[bi * CHUNK + c];
+        for (&tok, &m) in ct.iter().zip(cm) {
             if m == 0.0 {
                 continue;
             }
             count += m;
-            let tok = req.c_tokens[bi * CHUNK + c] as usize;
-            let row = &emb[tok * d..(tok + 1) * d];
-            let dst = &mut out[bi * d..(bi + 1) * d];
-            for (o, e) in dst.iter_mut().zip(row) {
+            let row = emb_row(emb, d, tok);
+            for (o, &e) in orow.iter_mut().zip(row) {
                 *o += m * e;
             }
         }
         let denom = count.max(1.0);
-        for o in &mut out[bi * d..(bi + 1) * d] {
+        for o in orow.iter_mut() {
             *o /= denom;
         }
     }
     out
 }
 
+// ---------------------------------------------------------------------------
+// Pooled-query memoization
+// ---------------------------------------------------------------------------
+
+/// Default per-worker capacity: a dispatch wave rarely carries more than
+/// a few dozen distinct task instructions.
+pub const DEFAULT_POOLED_QUERY_CAP: usize = 64;
+
+/// Bounded per-worker LRU memoizing pooled query vectors by
+/// `(d, hash(q_tokens, q_weights))`.
+///
+/// MinionS sends one task instruction across every chunk of a document,
+/// so within a dispatch wave most rows share their query and the QLEN·d
+/// pooling pass amortizes away. Reuse is bit-exact: on a hash match the
+/// full token/weight key is compared before the cached vector is served,
+/// so a collision can never substitute a different query's pooling — it
+/// just misses and pools cold.
+pub struct PooledQueryCache {
+    cap: usize,
+    entries: Vec<PooledEntry>,
+    hits: u64,
+    misses: u64,
+}
+
+struct PooledEntry {
+    d: usize,
+    hash: u64,
+    tokens: Vec<i32>,
+    weights: Vec<f32>,
+    q: Vec<f32>,
+}
+
+impl PooledQueryCache {
+    pub fn new(cap: usize) -> PooledQueryCache {
+        PooledQueryCache {
+            cap: cap.max(1),
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The pooled query for `(q_tokens, q_weights)` at capacity `d`,
+    /// pooling on miss. The returned slice is the most-recently-used
+    /// entry (moved to the front, evicting past `cap`).
+    pub fn query(&mut self, emb: &[f32], d: usize, q_tokens: &[i32], q_weights: &[f32]) -> &[f32] {
+        let hash = pooled_query_key(d, q_tokens, q_weights);
+        let found = self.entries.iter().position(|e| {
+            e.hash == hash && e.d == d && e.tokens == q_tokens && e.weights == q_weights
+        });
+        match found {
+            Some(i) => {
+                self.hits += 1;
+                let e = self.entries.remove(i);
+                self.entries.insert(0, e);
+            }
+            None => {
+                self.misses += 1;
+                let mut q = vec![0f32; d];
+                pool_query(emb, d, q_tokens, q_weights, &mut q);
+                self.entries.insert(
+                    0,
+                    PooledEntry {
+                        d,
+                        hash,
+                        tokens: q_tokens.to_vec(),
+                        weights: q_weights.to_vec(),
+                        q,
+                    },
+                );
+                self.entries.truncate(self.cap);
+            }
+        }
+        match self.entries.first() {
+            Some(e) => &e.q,
+            None => &[],
+        }
+    }
+
+    /// Hit/miss counters since the last call (reset-on-read, so each
+    /// worker can flush deltas into the shared `EngineStats`).
+    pub fn take_counters(&mut self) -> (u64, u64) {
+        (
+            std::mem::take(&mut self.hits),
+            std::mem::take(&mut self.misses),
+        )
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// FNV-1a over the exact bit patterns of the key components.
+fn pooled_query_key(d: usize, q_tokens: &[i32], q_weights: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |byte: u8| {
+        h ^= byte as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    for byte in (d as u64).to_le_bytes() {
+        eat(byte);
+    }
+    for t in q_tokens {
+        for byte in t.to_le_bytes() {
+            eat(byte);
+        }
+    }
+    for w in q_weights {
+        for byte in w.to_bits().to_le_bytes() {
+            eat(byte);
+        }
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
 pub struct NativeBackend {
     manifest: Manifest,
-    cache: Mutex<HashMap<usize, std::sync::Arc<ModelWeights>>>,
+    cache: Mutex<HashMap<usize, Arc<ModelWeights>>>,
     embed_d: usize,
 }
 
@@ -162,10 +381,10 @@ impl NativeBackend {
         Self::new(manifest)
     }
 
-    fn weights(&self, d: usize) -> Result<std::sync::Arc<ModelWeights>> {
-        let mut cache = self.cache.lock().unwrap();
+    fn weights(&self, d: usize) -> Result<Arc<ModelWeights>> {
+        let mut cache = unpoisoned(&self.cache);
         if let Some(w) = cache.get(&d) {
-            return Ok(std::sync::Arc::clone(w));
+            return Ok(Arc::clone(w));
         }
         let spec = self
             .manifest
@@ -173,36 +392,160 @@ impl NativeBackend {
             .iter()
             .find(|m| m.d == d)
             .with_context(|| format!("no module with d={d}"))?;
-        let wf = WeightFile::load(&spec.weights)?;
-        let emb = wf.get("emb")?;
-        let wpos = wf.get("wpos")?;
-        if emb.dims.len() != 2 || emb.dims[1] != d {
-            bail!("emb dims {:?} inconsistent with d={d}", emb.dims);
-        }
-        let w = std::sync::Arc::new(ModelWeights {
-            d,
-            emb: emb.data.clone(),
-            wpos: wpos.data.clone(),
-        });
-        cache.insert(d, std::sync::Arc::clone(&w));
+        let w = Arc::new(load_model_weights(&spec.weights, d)?);
+        cache.insert(d, Arc::clone(&w));
         Ok(w)
     }
 
     /// Score one batch through the shared kernel.
     pub fn score(&self, req: &ScoreRequest) -> Result<ScoreResponse> {
+        req.validate()?;
         let w = self.weights(req.d)?;
-        if req.q_tokens.len() != BATCH * QLEN || req.c_tokens.len() != BATCH * CHUNK {
-            bail!("native score shape mismatch");
-        }
         Ok(score_kernel(&w.emb, &w.wpos, w.d, req))
     }
 
     /// Mean-pool chunk embedding through the shared kernel.
     pub fn embed(&self, req: &EmbedRequest) -> Result<Vec<f32>> {
+        req.validate()?;
         let w = self.weights(self.embed_d)?;
-        if req.c_tokens.len() != BATCH * CHUNK {
-            bail!("native embed shape mismatch");
-        }
         Ok(embed_kernel(&w.emb, w.d, req))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perf::score_kernel_reference;
+    use crate::util::rng::Rng;
+    use crate::vocab::WINDOW;
+
+    /// Small synthetic vocab so the reference loop stays fast in debug.
+    const TEST_VOCAB: usize = 256;
+
+    fn rand_table(d: usize, rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+        let emb = (0..TEST_VOCAB * d)
+            .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+            .collect();
+        let wpos = (0..WINDOW).map(|_| rng.f64() as f32).collect();
+        (emb, wpos)
+    }
+
+    fn rand_req(d: usize, rng: &mut Rng) -> ScoreRequest {
+        let mask = |rng: &mut Rng| {
+            let r = rng.f64();
+            if r < 0.25 {
+                0.0
+            } else if r < 0.5 {
+                0.5
+            } else {
+                1.0
+            }
+        };
+        ScoreRequest {
+            d,
+            q_tokens: (0..BATCH * QLEN)
+                .map(|_| rng.below(TEST_VOCAB) as i32)
+                .collect(),
+            q_weights: (0..BATCH * QLEN)
+                .map(|_| {
+                    if rng.f64() < 0.2 {
+                        0.0
+                    } else {
+                        rng.f64() as f32
+                    }
+                })
+                .collect(),
+            c_tokens: (0..BATCH * CHUNK)
+                .map(|_| rng.below(TEST_VOCAB) as i32)
+                .collect(),
+            c_mask: (0..BATCH * CHUNK).map(|_| mask(rng)).collect(),
+        }
+    }
+
+    fn assert_bits_eq(fast: &ScoreResponse, slow: &ScoreResponse, tag: &str) {
+        assert_eq!(fast.scores.len(), slow.scores.len(), "{tag}: scores len");
+        for (i, (a, b)) in fast.scores.iter().zip(&slow.scores).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: scores[{i}]: {a} vs {b}");
+        }
+        assert_eq!(fast.lse.len(), slow.lse.len(), "{tag}: lse len");
+        for (i, (a, b)) in fast.lse.iter().zip(&slow.lse).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{tag}: lse[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn factored_kernel_bit_identical_to_reference() {
+        let mut rng = Rng::seed_from(41);
+        for d in [64usize, 128, 256, 1024] {
+            let (emb, wpos) = rand_table(d, &mut rng);
+            for trial in 0..2 {
+                let mut req = rand_req(d, &mut rng);
+                if trial == 0 {
+                    // row 0 fully masked; row 1 zero-weight query
+                    for m in req.c_mask.iter_mut().take(CHUNK) {
+                        *m = 0.0;
+                    }
+                    for w in req.q_weights.iter_mut().skip(QLEN).take(QLEN) {
+                        *w = 0.0;
+                    }
+                }
+                let fast = score_kernel(&emb, &wpos, d, &req);
+                let slow = score_kernel_reference(&emb, &wpos, d, &req);
+                assert_bits_eq(&fast, &slow, &format!("d={d} trial={trial}"));
+            }
+        }
+    }
+
+    #[test]
+    fn memoized_kernel_bit_identical_and_counts_hits() {
+        let mut rng = Rng::seed_from(43);
+        let d = 64;
+        let (emb, wpos) = rand_table(d, &mut rng);
+        let mut req = rand_req(d, &mut rng);
+        // all rows share one query: 1 miss + (BATCH-1) hits on a cold cache
+        let qt: Vec<i32> = req.q_tokens.iter().take(QLEN).copied().collect();
+        let qw: Vec<f32> = req.q_weights.iter().take(QLEN).copied().collect();
+        for b in 1..BATCH {
+            req.q_tokens[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qt);
+            req.q_weights[b * QLEN..(b + 1) * QLEN].copy_from_slice(&qw);
+        }
+        let mut memo = PooledQueryCache::new(DEFAULT_POOLED_QUERY_CAP);
+        let fast = score_kernel_memo(&emb, &wpos, d, &req, &mut memo);
+        let slow = score_kernel_reference(&emb, &wpos, d, &req);
+        assert_bits_eq(&fast, &slow, "memo cold");
+        assert_eq!(memo.take_counters(), (BATCH as u64 - 1, 1));
+        // warm pass: all hits, still bit-identical
+        let warm = score_kernel_memo(&emb, &wpos, d, &req, &mut memo);
+        assert_bits_eq(&warm, &slow, "memo warm");
+        assert_eq!(memo.take_counters(), (BATCH as u64, 0));
+    }
+
+    #[test]
+    fn pooled_query_cache_is_bounded_and_collision_safe() {
+        let mut rng = Rng::seed_from(47);
+        let d = 64;
+        let (emb, _) = rand_table(d, &mut rng);
+        let mut memo = PooledQueryCache::new(2);
+        let qs: Vec<(Vec<i32>, Vec<f32>)> = (0..3)
+            .map(|i| {
+                (
+                    (0..QLEN).map(|j| (i * QLEN + j) as i32 % 200).collect(),
+                    vec![0.5f32; QLEN],
+                )
+            })
+            .collect();
+        for (qt, qw) in &qs {
+            memo.query(&emb, d, qt, qw);
+        }
+        assert_eq!(memo.len(), 2, "capacity bound");
+        // the oldest entry was evicted: querying it again is a miss
+        memo.take_counters();
+        let (qt0, qw0) = (&qs[0].0, &qs[0].1);
+        let got = memo.query(&emb, d, qt0, qw0).to_vec();
+        assert_eq!(memo.take_counters(), (0, 1), "evicted entry misses");
+        // and the served vector matches a cold pooling pass
+        let mut want = vec![0f32; d];
+        pool_query(&emb, d, qt0, qw0, &mut want);
+        assert_eq!(got, want);
     }
 }

@@ -1,0 +1,221 @@
+//! Synthetic artifact generation: a self-contained `manifest.json` +
+//! MNW1 weight files + stub `.hlo` texts, written to any directory.
+//!
+//! The real artifacts come out of the Python AOT pass (`make
+//! artifacts`), which CI and fresh checkouts don't run. The offline
+//! engine only ever reads the manifest and the weight files — the HLO
+//! stubs exist to satisfy path checks — so a synthetic set is enough to
+//! exercise the full engine/bench stack: deterministic weights from
+//! [`crate::util::rng::Rng`], real `[VOCAB, d]` embedding tables, and
+//! the same descending window weights shape the compiler emits.
+//!
+//! Used by the engine-pool tests and by `minions bench hotpath --json`
+//! / `cargo bench --bench runtime_hotpath -- --json` when no real
+//! artifact directory is present.
+
+use super::manifest::Manifest;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::vocab::{BATCH, CHUNK, QLEN, VOCAB, WINDOW};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Descending positional weights normalized to sum 1 — the same shape
+/// the real artifacts carry (e.g. `[0.5, 0.3, 0.2]` for WINDOW=3).
+pub fn window_weights() -> Vec<f32> {
+    let total: f32 = (1..=WINDOW).map(|j| j as f32).sum();
+    (0..WINDOW).map(|j| (WINDOW - j) as f32 / total).collect()
+}
+
+/// Write a complete synthetic artifact set under `dir` and load it back
+/// through the ordinary [`Manifest::load`] path. `ds` lists the score
+/// capacities; `embed_d` selects the embed module's width (its weight
+/// file is added if not already in `ds`). Weights are deterministic in
+/// `seed`, so two calls with the same arguments produce byte-identical
+/// files.
+pub fn write_synthetic_artifacts(
+    dir: &Path,
+    ds: &[usize],
+    embed_d: usize,
+    seed: u64,
+) -> Result<Manifest> {
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating artifact dir {}", dir.display()))?;
+    let mut all: Vec<usize> = ds.to_vec();
+    all.push(embed_d);
+    all.sort_unstable();
+    all.dedup();
+
+    let wpos = window_weights();
+    for &d in &all {
+        let mut rng = Rng::seed_from(seed ^ (d as u64).wrapping_mul(0x9e3779b97f4a7c15));
+        let emb: Vec<f32> = (0..VOCAB * d)
+            .map(|_| (rng.f64() * 0.2 - 0.1) as f32)
+            .collect();
+        let mut buf = Vec::with_capacity(emb.len() * 4 + 128);
+        buf.extend_from_slice(b"MNW1");
+        buf.extend_from_slice(&2u32.to_le_bytes());
+        push_tensor(&mut buf, "emb", &[VOCAB, d], &emb);
+        push_tensor(&mut buf, "wpos", &[WINDOW], &wpos);
+        let wname = format!("weights_d{d}.mnw");
+        std::fs::write(dir.join(&wname), &buf)
+            .with_context(|| format!("writing {wname}"))?;
+    }
+    let stub = "// synthetic HLO stub — the offline engine executes the native kernel\n";
+    for &d in ds {
+        std::fs::write(dir.join(format!("score_d{d}.hlo")), stub)
+            .with_context(|| format!("writing score_d{d}.hlo"))?;
+    }
+    std::fs::write(dir.join("embed.hlo"), stub).context("writing embed.hlo")?;
+
+    let manifest = manifest_json(ds, embed_d, &wpos, &all);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())
+        .context("writing manifest.json")?;
+    Manifest::load(dir)
+}
+
+fn push_tensor(buf: &mut Vec<u8>, name: &str, dims: &[usize], data: &[f32]) {
+    buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+    buf.extend_from_slice(name.as_bytes());
+    buf.push(0); // dtype f32
+    buf.push(dims.len() as u8);
+    for &d in dims {
+        buf.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn io(name: &str, shape: &[usize], dtype: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        (
+            "shape",
+            Json::Arr(shape.iter().map(|&x| Json::num(x as f64)).collect()),
+        ),
+        ("dtype", Json::str(dtype)),
+    ])
+}
+
+fn manifest_json(ds: &[usize], embed_d: usize, wpos: &[f32], all: &[usize]) -> Json {
+    let mut modules: Vec<Json> = ds
+        .iter()
+        .map(|&d| {
+            Json::obj(vec![
+                ("name", Json::str(format!("score_d{d}"))),
+                ("kind", Json::str("score")),
+                ("file", Json::str(format!("score_d{d}.hlo"))),
+                ("d", Json::num(d as f64)),
+                ("batch", Json::num(BATCH as f64)),
+                ("chunk", Json::num(CHUNK as f64)),
+                ("weights", Json::str(format!("weights_d{d}.mnw"))),
+                (
+                    "inputs",
+                    Json::Arr(vec![
+                        io("emb", &[VOCAB, d], "f32"),
+                        io("wpos", &[WINDOW], "f32"),
+                        io("q_tokens", &[BATCH, QLEN], "s32"),
+                        io("q_weights", &[BATCH, QLEN], "f32"),
+                        io("c_tokens", &[BATCH, CHUNK], "s32"),
+                        io("c_mask", &[BATCH, CHUNK], "f32"),
+                    ]),
+                ),
+                (
+                    "outputs",
+                    Json::Arr(vec![
+                        io("scores", &[BATCH, CHUNK], "f32"),
+                        io("lse", &[BATCH], "f32"),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    modules.push(Json::obj(vec![
+        ("name", Json::str(format!("embed_d{embed_d}"))),
+        ("kind", Json::str("embed")),
+        ("file", Json::str("embed.hlo")),
+        ("d", Json::num(embed_d as f64)),
+        ("batch", Json::num(BATCH as f64)),
+        ("chunk", Json::num(CHUNK as f64)),
+        ("weights", Json::str(format!("weights_d{embed_d}.mnw"))),
+        (
+            "inputs",
+            Json::Arr(vec![
+                io("emb", &[VOCAB, embed_d], "f32"),
+                io("c_tokens", &[BATCH, CHUNK], "s32"),
+                io("c_mask", &[BATCH, CHUNK], "f32"),
+            ]),
+        ),
+        (
+            "outputs",
+            Json::Arr(vec![io("chunk_emb", &[BATCH, embed_d], "f32")]),
+        ),
+    ]));
+    let weights: Vec<Json> = all
+        .iter()
+        .map(|&d| {
+            Json::obj(vec![
+                ("file", Json::str(format!("weights_d{d}.mnw"))),
+                ("d", Json::num(d as f64)),
+                (
+                    "wpos",
+                    Json::Arr(wpos.iter().map(|&w| Json::num(w as f64)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("format", Json::str("minions-artifacts-v1")),
+        ("vocab", Json::num(VOCAB as f64)),
+        ("qlen", Json::num(QLEN as f64)),
+        ("window", Json::num(WINDOW as f64)),
+        ("batch", Json::num(BATCH as f64)),
+        ("chunk", Json::num(CHUNK as f64)),
+        ("modules", Json::Arr(modules)),
+        ("weights", Json::Arr(weights)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{EmbedRequest, NativeBackend, ScoreRequest};
+
+    #[test]
+    fn synthetic_artifacts_load_and_score() {
+        let tmp = std::env::temp_dir().join(format!("minions-synth-{}", std::process::id()));
+        let m = write_synthetic_artifacts(&tmp, &[64], 64, 7).unwrap();
+        assert_eq!(m.capacities(), vec![64]);
+        assert_eq!(m.wpos(64).unwrap().len(), WINDOW);
+
+        let backend = NativeBackend::new(m).unwrap();
+        let req = ScoreRequest {
+            d: 64,
+            q_tokens: vec![1; BATCH * QLEN],
+            q_weights: vec![0.5; BATCH * QLEN],
+            c_tokens: (0..BATCH * CHUNK).map(|i| (i % VOCAB) as i32).collect(),
+            c_mask: vec![1.0; BATCH * CHUNK],
+        };
+        let resp = backend.score(&req).unwrap();
+        assert_eq!(resp.scores.len(), BATCH * CHUNK);
+        assert!(resp.lse.iter().all(|l| l.is_finite()));
+
+        let emb = backend
+            .embed(&EmbedRequest {
+                c_tokens: req.c_tokens.clone(),
+                c_mask: req.c_mask.clone(),
+            })
+            .unwrap();
+        assert_eq!(emb.len(), BATCH * 64);
+
+        // determinism: a second write produces byte-identical weights
+        let tmp2 = std::env::temp_dir().join(format!("minions-synth2-{}", std::process::id()));
+        write_synthetic_artifacts(&tmp2, &[64], 64, 7).unwrap();
+        let a = std::fs::read(tmp.join("weights_d64.mnw")).unwrap();
+        let b = std::fs::read(tmp2.join("weights_d64.mnw")).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&tmp).ok();
+        std::fs::remove_dir_all(&tmp2).ok();
+    }
+}

@@ -11,7 +11,7 @@
 //!     f32*    row-major data (little-endian)
 //! ```
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 
@@ -36,30 +36,43 @@ struct Cursor<'a> {
     pos: usize,
 }
 
+/// Fixed-width view of a `Cursor::take` result. The length always
+/// matches by construction, so the error arm is unreachable; mapping it
+/// (instead of unwrapping) keeps the parser panic-free on any input.
+fn array<const N: usize>(s: &[u8]) -> Result<[u8; N]> {
+    s.try_into()
+        .map_err(|_| anyhow!("internal: slice width != {N}"))
+}
+
 impl<'a> Cursor<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            bail!("truncated weight file at byte {}", self.pos);
+        let slice = self
+            .pos
+            .checked_add(n)
+            .and_then(|end| self.buf.get(self.pos..end));
+        match slice {
+            Some(s) => {
+                self.pos += n;
+                Ok(s)
+            }
+            None => bail!("truncated weight file at byte {}", self.pos),
         }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
     }
 
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(array(self.take(2)?)?))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(array(self.take(4)?)?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(array(self.take(8)?)?))
     }
 
     fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        Ok(self.take(1)?.first().copied().unwrap_or_default())
     }
 }
 
@@ -91,11 +104,17 @@ impl WeightFile {
             for _ in 0..ndim {
                 dims.push(c.u64()? as usize);
             }
-            let numel: usize = dims.iter().product();
-            let raw = c.take(numel * 4)?;
+            let numel = dims
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .with_context(|| format!("tensor '{name}' dims overflow"))?;
+            let nbytes = numel
+                .checked_mul(4)
+                .with_context(|| format!("tensor '{name}' size overflow"))?;
+            let raw = c.take(nbytes)?;
             let mut data = Vec::with_capacity(numel);
             for chunk in raw.chunks_exact(4) {
-                data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+                data.push(f32::from_le_bytes(array(chunk)?));
             }
             tensors.insert(name, Tensor { dims, data });
         }

@@ -135,6 +135,10 @@ pub struct ServerState {
     /// the shared chunk cache, when enabled — surfaces hit/miss/eviction
     /// gauges on `/metrics`
     pub cache: Option<Arc<ChunkCache>>,
+    /// the engine-backed backend, when running on the pjrt backend —
+    /// surfaces worker-pool gauges (dispatches, rows, exec/compile secs,
+    /// queue depth, pooled-query memo hits) on `/metrics`
+    pub engine: Option<Arc<crate::runtime::PjrtBackend>>,
     /// registry + step scheduler behind the `/v1/sessions` endpoints
     pub sessions: Arc<SessionRunner>,
     /// admission control: shed `POST /v1/sessions` with 429 once this
@@ -365,7 +369,7 @@ fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
         if n == 0 {
             return Err(anyhow!("connection closed mid-request"));
         }
-        buf.extend_from_slice(&tmp[..n]);
+        buf.extend_from_slice(tmp.get(..n).unwrap_or_default());
         if let Some(pos) = find_header_end(&buf) {
             header_end = pos;
             break;
@@ -374,7 +378,7 @@ fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
             return Err(anyhow!("headers too large"));
         }
     }
-    let head = std::str::from_utf8(&buf[..header_end])?.to_string();
+    let head = std::str::from_utf8(buf.get(..header_end).unwrap_or_default())?.to_string();
     let mut lines = head.lines();
     let request_line = lines.next().ok_or_else(|| anyhow!("empty request"))?;
     let mut parts = request_line.split_whitespace();
@@ -388,13 +392,13 @@ fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
             }
         }
     }
-    let mut body_bytes = buf[header_end + 4..].to_vec();
+    let mut body_bytes = buf.get(header_end + 4..).unwrap_or_default().to_vec();
     while body_bytes.len() < content_length {
         let n = stream.read(&mut tmp)?;
         if n == 0 {
             break;
         }
-        body_bytes.extend_from_slice(&tmp[..n]);
+        body_bytes.extend_from_slice(tmp.get(..n).unwrap_or_default());
     }
     body_bytes.truncate(content_length);
     Ok(HttpRequest {
@@ -650,6 +654,8 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
             ];
             if let Some(batcher) = &state.batcher {
                 let b = batcher.snapshot();
+                let depth_of = |lane: Lane| b.lane_depth.get(lane.index()).copied().unwrap_or(0);
+                let rows_of = |lane: Lane| b.lane_rows.get(lane.index()).copied().unwrap_or(0);
                 fields.push(("batch_dispatches", Json::num(b.dispatches as f64)));
                 fields.push(("batch_rows", Json::num(b.rows as f64)));
                 fields.push(("batch_padded_rows", Json::num(b.padded_rows as f64)));
@@ -659,21 +665,21 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                 fields.push(("sched_queue_depth", Json::num(b.queue_depth as f64)));
                 fields.push((
                     "sched_queue_depth_interactive",
-                    Json::num(b.lane_depth[Lane::Interactive.index()] as f64),
+                    Json::num(depth_of(Lane::Interactive) as f64),
                 ));
                 fields.push((
                     "sched_queue_depth_batch",
-                    Json::num(b.lane_depth[Lane::Batch.index()] as f64),
+                    Json::num(depth_of(Lane::Batch) as f64),
                 ));
                 fields.push(("sched_saturated_rejections", Json::num(b.saturated as f64)));
                 fields.push(("sched_preemptions", Json::num(b.preemptions as f64)));
                 fields.push((
                     "lane_interactive_rows",
-                    Json::num(b.lane_rows[Lane::Interactive.index()] as f64),
+                    Json::num(rows_of(Lane::Interactive) as f64),
                 ));
                 fields.push((
                     "lane_batch_rows",
-                    Json::num(b.lane_rows[Lane::Batch.index()] as f64),
+                    Json::num(rows_of(Lane::Batch) as f64),
                 ));
                 fields.push((
                     "lane_interactive_mean_wait_us",
@@ -695,6 +701,24 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                 ));
                 fields.push(("cache_entries", Json::num(c.entries as f64)));
                 fields.push(("cache_hit_rate", Json::num(c.hit_rate())));
+            }
+            if let Some(engine) = &state.engine {
+                let e = engine.stats();
+                fields.push(("engine_dispatches", Json::num(e.dispatches as f64)));
+                fields.push(("engine_rows", Json::num(e.rows as f64)));
+                fields.push(("engine_exec_secs", Json::num(e.exec_secs)));
+                fields.push(("engine_compile_secs", Json::num(e.compile_secs)));
+                fields.push(("engine_pooled_q_hits", Json::num(e.pooled_q_hits as f64)));
+                fields.push((
+                    "engine_pooled_q_misses",
+                    Json::num(e.pooled_q_misses as f64),
+                ));
+                fields.push(("engine_workers", Json::num(e.workers as f64)));
+                fields.push(("engine_queue_depth", Json::num(e.queue_depth as f64)));
+                fields.push((
+                    "engine_max_queue_depth",
+                    Json::num(e.max_queue_depth as f64),
+                ));
             }
             Ok(Reply::Json(Json::obj(fields).to_string()))
         }
@@ -927,6 +951,7 @@ pub fn state_with(
         seed,
         batcher: None,
         cache: None,
+        engine: None,
         sessions: SessionRunner::new(2),
         max_sessions: 0,
     })
@@ -1111,6 +1136,7 @@ mod tests {
             seed: 1,
             batcher: Some(Arc::clone(&batcher)),
             cache: None,
+            engine: None,
             sessions: SessionRunner::new(1),
             max_sessions: 0,
         });

@@ -143,7 +143,7 @@ impl SessionEntry {
         loop {
             if inner.events.len() > from || inner.status != SessionStatus::Running {
                 let start = from.min(inner.events.len());
-                let fresh = inner.events[start..].to_vec();
+                let fresh = inner.events.get(start..).unwrap_or_default().to_vec();
                 return (fresh, inner.status != SessionStatus::Running);
             }
             inner = cv_wait(&self.events_cv, inner);
@@ -161,7 +161,7 @@ impl SessionEntry {
         loop {
             if inner.events.len() > from || inner.status != SessionStatus::Running {
                 let start = from.min(inner.events.len());
-                let fresh = inner.events[start..].to_vec();
+                let fresh = inner.events.get(start..).unwrap_or_default().to_vec();
                 return (fresh, inner.status != SessionStatus::Running);
             }
             let left = deadline.saturating_duration_since(Instant::now());
@@ -718,7 +718,9 @@ impl SessionRunner {
         if wal::is_terminal(last) {
             return Ok(false);
         }
-        let meta = &log.records[0];
+        let Some(meta) = log.records.first() else {
+            return Err(anyhow!("no intact records"));
+        };
         if wal::body_type(meta) != Some("meta") {
             return Err(anyhow!("first record is not a meta record"));
         }
@@ -770,7 +772,10 @@ impl SessionRunner {
 
         // resume point: the last step record's snapshot + rng, or the
         // meta record's initial rng when no step ever committed
-        let steps: Vec<&Json> = log.records[1..]
+        let steps: Vec<&Json> = log
+            .records
+            .get(1..)
+            .unwrap_or_default()
             .iter()
             .filter(|r| wal::body_type(r) == Some("step"))
             .collect();

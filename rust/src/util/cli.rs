@@ -135,6 +135,19 @@ impl Cli {
         .opt("top-k", "RAG retrieved chunks", None)
     }
 
+    /// The engine worker-pool knob shared by the binaries: how many
+    /// engine threads serve score/embed dispatches (pjrt backend;
+    /// weights are `Arc`-shared, so N workers cost one copy of each
+    /// table). Results are bit-identical at any value — each response
+    /// depends only on its request and the immutable weights.
+    pub fn engine_opt(self) -> Self {
+        self.opt(
+            "engine-threads",
+            "engine worker threads (pjrt backend; bit-identical results)",
+            Some("1"),
+        )
+    }
+
     /// The durability knob for the serving stack: when set, every
     /// session's events are written-ahead to `<dir>/session-<id>.wal`
     /// and incomplete sessions are recovered (resumed from their last

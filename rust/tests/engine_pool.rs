@@ -1,0 +1,156 @@
+//! Integration: the engine worker pool (DESIGN.md §11).
+//!
+//! Runs entirely against synthetic artifacts (`runtime::synth`), so it
+//! needs neither `make artifacts` nor the `xla-pjrt` feature. Asserts:
+//!
+//! - bit-identical responses at 1, 4, and 8 workers (and vs the native
+//!   oracle) — parallel dispatch reorders work, never results;
+//! - the shared stats counters (dispatches, rows, workers, pooled-query
+//!   memo hits/misses) account for every request exactly once;
+//! - malformed requests are rejected at the handle with the shared
+//!   validation message, and the pool keeps serving afterwards.
+
+#![cfg(not(feature = "xla-pjrt"))]
+
+use minions::runtime::synth::write_synthetic_artifacts;
+use minions::runtime::{EmbedRequest, Engine, Manifest, NativeBackend, ScoreRequest};
+use minions::util::rng::Rng;
+use minions::vocab::{BATCH, CHUNK, QLEN, VOCAB};
+
+fn synth_manifest(tag: &str) -> (Manifest, std::path::PathBuf) {
+    let dir = std::env::temp_dir()
+        .join(format!("minions-engine-pool-{tag}-{}", std::process::id()));
+    let m = write_synthetic_artifacts(&dir, &[64], 64, 11).expect("synthetic artifacts");
+    (m, dir)
+}
+
+fn rand_request(rng: &mut Rng) -> ScoreRequest {
+    ScoreRequest {
+        d: 64,
+        q_tokens: (0..BATCH * QLEN).map(|_| rng.below(VOCAB) as i32).collect(),
+        q_weights: (0..BATCH * QLEN)
+            .map(|_| if rng.bool(0.2) { 0.0 } else { rng.f32() })
+            .collect(),
+        c_tokens: (0..BATCH * CHUNK).map(|_| rng.below(VOCAB) as i32).collect(),
+        c_mask: (0..BATCH * CHUNK)
+            .map(|_| if rng.bool(0.25) { 0.0 } else { 1.0 })
+            .collect(),
+    }
+}
+
+#[test]
+fn pool_results_bit_identical_across_worker_counts() {
+    let (manifest, dir) = synth_manifest("det");
+    let native = NativeBackend::new(manifest.clone()).expect("native oracle");
+    let mut rng = Rng::seed_from(5);
+    let reqs: Vec<ScoreRequest> = (0..12).map(|_| rand_request(&mut rng)).collect();
+    let oracle: Vec<_> = reqs.iter().map(|r| native.score(r).expect("oracle")).collect();
+
+    for workers in [1usize, 4, 8] {
+        let engine = Engine::start_pool(manifest.clone(), &[64], workers).expect("pool");
+        assert_eq!(engine.workers(), workers);
+        // concurrent clients: one per request, all in flight at once
+        let responses: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = reqs
+                .iter()
+                .map(|r| {
+                    let eng = engine.clone();
+                    let req = r.clone();
+                    s.spawn(move || eng.score(req).expect("score"))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("join")).collect()
+        });
+        for (i, (got, want)) in responses.iter().zip(&oracle).enumerate() {
+            let got_bits: Vec<u32> = got.scores.iter().map(|v| v.to_bits()).collect();
+            let want_bits: Vec<u32> = want.scores.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got_bits, want_bits, "scores diverge at {workers} workers, req {i}");
+            let got_lse: Vec<u32> = got.lse.iter().map(|v| v.to_bits()).collect();
+            let want_lse: Vec<u32> = want.lse.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got_lse, want_lse, "lse diverges at {workers} workers, req {i}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn stats_account_for_every_dispatch_and_memo_hit() {
+    let (manifest, dir) = synth_manifest("stats");
+    let engine = Engine::start_pool(manifest, &[64], 1).expect("pool");
+    let mut rng = Rng::seed_from(9);
+    // one shared query template across all rows and requests: after the
+    // single cold miss, every pooled-query lookup on the one worker hits
+    let qt: Vec<i32> = (0..QLEN).map(|_| rng.below(VOCAB) as i32).collect();
+    let qw: Vec<f32> = (0..QLEN).map(|_| rng.f32() * 0.5 + 0.1).collect();
+    let n_reqs = 6;
+    for _ in 0..n_reqs {
+        let mut q_tokens = Vec::with_capacity(BATCH * QLEN);
+        let mut q_weights = Vec::with_capacity(BATCH * QLEN);
+        for _ in 0..BATCH {
+            q_tokens.extend_from_slice(&qt);
+            q_weights.extend_from_slice(&qw);
+        }
+        let req = ScoreRequest {
+            d: 64,
+            q_tokens,
+            q_weights,
+            c_tokens: (0..BATCH * CHUNK).map(|_| rng.below(VOCAB) as i32).collect(),
+            c_mask: vec![1.0; BATCH * CHUNK],
+        };
+        engine.score(req).expect("score");
+    }
+    let st = engine.stats();
+    assert_eq!(st.dispatches, n_reqs as u64);
+    assert_eq!(st.rows, (n_reqs * BATCH) as u64);
+    assert_eq!(st.workers, 1);
+    assert_eq!(st.pooled_q_misses, 1, "one cold template");
+    assert_eq!(st.pooled_q_hits, (n_reqs * BATCH - 1) as u64);
+    assert!(st.exec_secs > 0.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn malformed_requests_rejected_and_pool_survives() {
+    let (manifest, dir) = synth_manifest("reject");
+    let engine = Engine::start_pool(manifest, &[64], 2).expect("pool");
+
+    // wrong q_tokens length: caught by the shared handle-side validation
+    let bad_shape = ScoreRequest {
+        d: 64,
+        q_tokens: vec![1; QLEN], // one row, not BATCH
+        q_weights: vec![0.5; BATCH * QLEN],
+        c_tokens: vec![1; BATCH * CHUNK],
+        c_mask: vec![1.0; BATCH * CHUNK],
+    };
+    let err = engine.score(bad_shape).expect_err("shape mismatch must fail");
+    assert!(err.to_string().contains("shape mismatch"), "got: {err}");
+
+    // out-of-vocab token id: caught before any embedding lookup
+    let mut bad_token = ScoreRequest {
+        d: 64,
+        q_tokens: vec![1; BATCH * QLEN],
+        q_weights: vec![0.5; BATCH * QLEN],
+        c_tokens: vec![1; BATCH * CHUNK],
+        c_mask: vec![1.0; BATCH * CHUNK],
+    };
+    bad_token.c_tokens[3] = VOCAB as i32;
+    let err = engine.score(bad_token.clone()).expect_err("token range must fail");
+    assert!(err.to_string().contains("outside vocab"), "got: {err}");
+
+    // malformed embed: same shared validation path
+    let err = engine
+        .embed(EmbedRequest {
+            c_tokens: vec![1; CHUNK],
+            c_mask: vec![1.0; BATCH * CHUNK],
+        })
+        .expect_err("embed shape mismatch must fail");
+    assert!(err.to_string().contains("shape mismatch"), "got: {err}");
+
+    // the pool is still healthy: a valid request round-trips
+    bad_token.c_tokens[3] = 1;
+    let resp = engine.score(bad_token).expect("valid request after rejects");
+    assert_eq!(resp.scores.len(), BATCH * CHUNK);
+    let st = engine.stats();
+    assert_eq!(st.dispatches, 1, "rejected requests never reach a worker");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -617,6 +617,7 @@ fn saturated_admission_sheds_with_429_and_a_later_retry_succeeds() {
         seed: 7,
         batcher: None,
         cache: None,
+        engine: None,
         sessions: SessionRunner::new(2),
         max_sessions: 1, // tiny on purpose: the second POST must shed
     });

@@ -292,6 +292,7 @@ fn cached_minions_state() -> (Arc<ServerState>, Arc<DynamicBatcher>) {
         seed: 11,
         batcher: Some(Arc::clone(&batcher)),
         cache: Some(cache),
+        engine: None,
         sessions: SessionRunner::new(2),
         max_sessions: 0,
     });
@@ -330,6 +331,7 @@ fn spec_server_state() -> (Arc<ServerState>, Arc<DynamicBatcher>) {
         seed: 11,
         batcher: Some(Arc::clone(&batcher)),
         cache: None,
+        engine: None,
         sessions: SessionRunner::new(2),
         max_sessions: 0,
     });
@@ -411,6 +413,7 @@ fn gated_state_with_batcher(
         seed: 7,
         batcher: Some(Arc::clone(&batcher)),
         cache: None,
+        engine: None,
         sessions: SessionRunner::new(1),
         max_sessions: 0,
     });
@@ -607,6 +610,7 @@ fn evicted_session_polls_404_after_ttl() {
         seed: 7,
         batcher: None,
         cache: None,
+        engine: None,
         sessions: SessionRunner::with_config(1, ttl),
         max_sessions: 0,
     });
