@@ -44,6 +44,7 @@ pub const RULE_PANIC: &str = "panic-free";
 /// outright; everywhere else they are fine.
 const SERIALIZATION_PATHS: &[&str] = &[
     "rust/src/server/wal.rs",
+    "rust/src/server/wal/segment.rs",
     "rust/src/util/json.rs",
     "rust/src/util/rng.rs",
     "rust/src/protocol/spec.rs",
@@ -88,6 +89,8 @@ const BLOCKING_BOUNDARIES: &[&str] = &[
     ".recv_timeout(",
     "wal_append(",
     "finalize_cancelled(",
+    ".append_record(",
+    ".import(",
 ];
 
 /// Rule 5 scope prefixes: the request-handling hot paths whose panic

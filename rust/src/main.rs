@@ -27,7 +27,8 @@ use minions::data;
 use minions::eval::run_protocol_parallel;
 use minions::exp::Exp;
 use minions::protocol::{ProtocolSpec, RoundStrategy};
-use minions::server::session::SessionRunner;
+use minions::server::session::{SessionRunner, WalMode};
+use minions::server::wal::segment::SegmentConfig;
 use minions::server::{Server, ServerState};
 use minions::util::cli::{Args, Cli};
 use minions::util::config::{load_config, ConfigExt};
@@ -256,7 +257,19 @@ fn cmd_serve(args: Vec<String>) -> i32 {
                 "seconds before terminal sessions are evicted from the registry",
                 Some("600"),
             )
-            .state_dir_opt(),
+            .state_dir_opt()
+            .opt(
+                "wal-mode",
+                "durability backend under --state-dir: shared group-commit \
+                 segments or one file per session (segmented|per-session)",
+                Some("segmented"),
+            )
+            .opt(
+                "wal-commit-interval",
+                "segmented mode: group-commit grace window in milliseconds \
+                 (0 = flush each batch immediately)",
+                Some("1"),
+            ),
     );
     let a = match cli.parse_from(args) {
         Ok(a) => a,
@@ -325,10 +338,28 @@ fn cmd_serve(args: Vec<String>) -> i32 {
     // durability: with --state-dir, sessions write-ahead their events and
     // incomplete runs found on disk are resumed before serving traffic
     let state_dir = a.get_or("state-dir", "").to_string();
+    let wal_mode = match WalMode::parse(a.get_or("wal-mode", "segmented")) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let commit_ms: u64 = a.parse_num("wal-commit-interval", 1u64);
     let sessions = if state_dir.is_empty() {
         SessionRunner::with_config(session_workers, session_ttl)
     } else {
-        match SessionRunner::with_wal(session_workers, session_ttl, &state_dir) {
+        let cfg = SegmentConfig {
+            commit_interval: std::time::Duration::from_millis(commit_ms),
+            ..SegmentConfig::default()
+        };
+        match SessionRunner::with_wal_mode(
+            session_workers,
+            session_ttl,
+            &state_dir,
+            wal_mode,
+            cfg,
+        ) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!("startup failed: {e}");

@@ -9,8 +9,10 @@
 //!    the kernel benchmark.
 //! 2. [`hotpath_report`] — measures kernel rows/sec (reference vs
 //!    factored, per capacity), engine throughput scaling across worker
-//!    counts, the pooled-query memo hit rate, and a chunk-cache
-//!    re-reference workload, returning the `minions-bench-v1` JSON.
+//!    counts, the pooled-query memo hit rate, a chunk-cache
+//!    re-reference workload, and the WAL backend comparison
+//!    (per-session fsync-per-record files vs group-commit segments),
+//!    returning the `minions-bench-v1` JSON.
 //! 3. [`load_or_synth_manifest`] — the real artifact set when present,
 //!    otherwise deterministic synthetic artifacts
 //!    (`runtime::synth`) in a temp dir, so the bench runs everywhere.
@@ -23,12 +25,15 @@ use crate::runtime::native::{load_model_weights, score_kernel, NEG_INF};
 use crate::runtime::synth::write_synthetic_artifacts;
 use crate::runtime::{default_artifact_dir, Engine, Manifest, ScoreRequest, ScoreResponse};
 use crate::sched::ScoreRow;
+use crate::server::wal::segment::{SegmentConfig, SegmentStore};
+use crate::server::wal::SessionWal;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::vocab::{BATCH, CHUNK, QLEN};
 use anyhow::{Context, Result};
 use std::hint::black_box;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -129,6 +134,12 @@ pub struct HotpathOptions {
     /// worker counts to sweep
     pub threads: Vec<usize>,
     pub seed: u64,
+    /// synthetic durable sessions per WAL backend
+    pub wal_sessions: usize,
+    /// step records appended per WAL session (plus one meta-like record)
+    pub wal_steps: usize,
+    /// threads driving the WAL sessions concurrently
+    pub wal_workers: usize,
 }
 
 impl Default for HotpathOptions {
@@ -138,6 +149,9 @@ impl Default for HotpathOptions {
             scale_requests: 96,
             threads: vec![1, 2, 4],
             seed: 42,
+            wal_sessions: 24,
+            wal_steps: 6,
+            wal_workers: 8,
         }
     }
 }
@@ -161,6 +175,7 @@ pub fn hotpath_report(manifest: &Manifest, opts: &HotpathOptions, synthetic: boo
     let kernel = measure_kernel(manifest, opts)?;
     let (scaling, pooled) = measure_scaling(manifest, opts)?;
     let chunk_cache = measure_chunk_cache(manifest, opts)?;
+    let wal = measure_wal(opts)?;
     Ok(Json::obj(vec![
         ("format", Json::str("minions-bench-v1")),
         ("bench", Json::str("runtime_hotpath")),
@@ -194,6 +209,7 @@ pub fn hotpath_report(manifest: &Manifest, opts: &HotpathOptions, synthetic: boo
         ("engine_scaling", scaling),
         ("pooled_query", pooled),
         ("chunk_cache", chunk_cache),
+        ("wal", wal),
     ]))
 }
 
@@ -393,6 +409,138 @@ fn measure_chunk_cache(manifest: &Manifest, opts: &HotpathOptions) -> Result<Jso
     ]))
 }
 
+/// A synthetic step-sized record body (~200 bytes encoded), shared by
+/// both WAL backends so the byte counts are comparable.
+fn wal_body(seq: u64) -> Json {
+    Json::obj(vec![
+        ("type", Json::str("step")),
+        ("seq", Json::num(seq as f64)),
+        ("payload", Json::str("x".repeat(160))),
+    ])
+}
+
+/// One bench thread's share of the per-session-file leg: sessions
+/// `first, first+stride, ...`, one `SessionWal` each, which fsyncs on
+/// every append by construction.
+fn per_session_worker(
+    dir: &Path,
+    first: u64,
+    stride: u64,
+    sessions: u64,
+    records: u64,
+    bytes: &AtomicU64,
+) {
+    let mut sid = first;
+    while sid < sessions {
+        let mut wal = SessionWal::create(dir, sid).expect("bench create");
+        for seq in 0..records {
+            let n = wal.append(&wal_body(seq)).expect("bench append");
+            bytes.fetch_add(n, Ordering::Relaxed);
+        }
+        sid += stride;
+    }
+}
+
+/// One bench thread's share of the segmented leg: the same
+/// session/record schedule, appended through the shared group
+/// committer so concurrent sessions share fsyncs.
+fn segmented_worker(
+    store: &SegmentStore,
+    first: u64,
+    stride: u64,
+    sessions: u64,
+    records: u64,
+    bytes: &AtomicU64,
+) {
+    let mut sid = first;
+    while sid < sessions {
+        let mut handle = store.handle(sid, 0);
+        for seq in 0..records {
+            let n = handle.append_record(&wal_body(seq)).expect("bench append");
+            bytes.fetch_add(n, Ordering::Relaxed);
+        }
+        sid += stride;
+    }
+}
+
+/// WAL backend comparison: `wal_sessions` synthetic sessions, each
+/// appending `wal_steps` step records plus one meta-sized record,
+/// driven by `wal_workers` threads. The per-session backend fsyncs
+/// every append; the segmented backend group-commits, so its fsync
+/// count is the number of flush batches (DESIGN.md §12). The
+/// durability suite pins replay equivalence between the backends;
+/// this pins the cost difference.
+fn measure_wal(opts: &HotpathOptions) -> Result<Json> {
+    let sessions = opts.wal_sessions.max(1) as u64;
+    let records = opts.wal_steps as u64 + 1;
+    let workers = opts.wal_workers.max(1) as u64;
+    let root = std::env::temp_dir().join(format!("minions-wal-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    let per_dir = root.join("per-session");
+    std::fs::create_dir_all(&per_dir).context("create wal bench dir")?;
+    let per_bytes = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let (dir, bytes) = (&per_dir, &per_bytes);
+            s.spawn(move || per_session_worker(dir, w, workers, sessions, records, bytes));
+        }
+    });
+    let per_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let per_fsyncs = sessions * records;
+
+    let seg_dir = root.join("segmented");
+    let (store, _) = SegmentStore::open(&seg_dir, SegmentConfig::default())
+        .context("open segmented wal bench store")?;
+    let seg_bytes = AtomicU64::new(0);
+    let t1 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let (store, bytes) = (&store, &seg_bytes);
+            s.spawn(move || segmented_worker(store, w, workers, sessions, records, bytes));
+        }
+    });
+    store.shutdown();
+    let seg_secs = t1.elapsed().as_secs_f64().max(1e-9);
+    let stats = store.stats();
+    let _ = std::fs::remove_dir_all(&root);
+
+    let total = (sessions * records) as f64;
+    Ok(Json::obj(vec![
+        ("sessions", Json::num(sessions as f64)),
+        ("records_per_session", Json::num(records as f64)),
+        ("workers", Json::num(workers as f64)),
+        (
+            "per_session",
+            Json::obj(vec![
+                ("fsyncs", Json::num(per_fsyncs as f64)),
+                ("fsyncs_per_record", Json::num(per_fsyncs as f64 / total)),
+                ("wal_bytes", Json::num(per_bytes.load(Ordering::Relaxed) as f64)),
+                ("sessions_per_sec", Json::num(sessions as f64 / per_secs)),
+            ]),
+        ),
+        (
+            "segmented",
+            Json::obj(vec![
+                ("fsyncs", Json::num(stats.fsyncs as f64)),
+                ("fsyncs_per_record", Json::num(stats.fsyncs as f64 / total)),
+                ("wal_bytes", Json::num(seg_bytes.load(Ordering::Relaxed) as f64)),
+                ("sessions_per_sec", Json::num(sessions as f64 / seg_secs)),
+                ("commit_batch_p50", Json::num(stats.batch_p50 as f64)),
+                ("commit_batch_p95", Json::num(stats.batch_p95 as f64)),
+                ("segments", Json::num(stats.segments as f64)),
+                ("compactions", Json::num(stats.compactions as f64)),
+            ]),
+        ),
+        (
+            "fsync_reduction",
+            Json::num(per_fsyncs as f64 / stats.fsyncs.max(1) as f64),
+        ),
+        ("method", Json::str("measured")),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -406,6 +554,9 @@ mod tests {
             scale_requests: 8,
             threads: vec![1, 2],
             seed: 3,
+            wal_sessions: 4,
+            wal_steps: 2,
+            wal_workers: 2,
         };
         let report = hotpath_report(&manifest, &opts, true).unwrap();
         assert_eq!(
@@ -421,6 +572,13 @@ mod tests {
         // 8 requests x 8 rows over 4 templates on one worker: 4 misses
         assert_eq!(pooled.get("misses").and_then(Json::as_f64), Some(4.0));
         assert_eq!(pooled.get("hits").and_then(Json::as_f64), Some(60.0));
+        let wal = report.get("wal").unwrap();
+        let per = wal.get("per_session").unwrap();
+        // 4 sessions x 3 records, one fsync per append
+        assert_eq!(per.get("fsyncs").and_then(Json::as_f64), Some(12.0));
+        let seg = wal.get("segmented").unwrap();
+        let batches = seg.get("fsyncs").and_then(Json::as_f64).unwrap();
+        assert!((1.0..=12.0).contains(&batches), "group-commit batches: {batches}");
         std::fs::remove_dir_all(&tmp).ok();
     }
 }

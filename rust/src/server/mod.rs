@@ -652,6 +652,22 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                     Json::num(state.sessions.wal_bytes() as f64),
                 ),
             ];
+            let wal = state.sessions.wal_stats();
+            fields.push(("wal_errors", Json::num(wal.errors as f64)));
+            fields.push(("wal_fsyncs", Json::num(wal.fsyncs as f64)));
+            if let Some(seg) = wal.segmented {
+                fields.push(("wal_segments", Json::num(seg.segments as f64)));
+                fields.push(("wal_compactions", Json::num(seg.compactions as f64)));
+                fields.push(("wal_live_bytes", Json::num(seg.live_bytes as f64)));
+                fields.push((
+                    "wal_commit_batch_p50",
+                    Json::num(seg.batch_p50 as f64),
+                ));
+                fields.push((
+                    "wal_commit_batch_p95",
+                    Json::num(seg.batch_p95 as f64),
+                ));
+            }
             if let Some(batcher) = &state.batcher {
                 let b = batcher.snapshot();
                 let depth_of = |lane: Lane| b.lane_depth.get(lane.index()).copied().unwrap_or(0);

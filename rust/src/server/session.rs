@@ -32,14 +32,19 @@
 //! a backed-off step consumed no rng and no ledger).
 //!
 //! Durability: a runner built with [`SessionRunner::with_wal`] appends
-//! every step (event + rng checkpoint + state snapshot) to a per-session
-//! write-ahead log under `--state-dir` *before* the step's effects are
-//! observable, and [`SessionRunner::recover`] replays those logs on boot:
-//! incomplete sessions resume from their last checkpoint (no committed
-//! round is re-scored — `kill -9` costs at most the in-flight step),
-//! while logs whose final record is terminal are skipped, never
-//! resurrected (`wal_replay_skipped_terminal`). See `server::wal` and
-//! DESIGN.md §8.
+//! every step (event + rng checkpoint + state snapshot) to a write-ahead
+//! log under `--state-dir` *before* the step's effects are observable.
+//! Two backends implement that contract (`--wal-mode`): one fsync'd
+//! `session-<id>.wal` file per session, or shared group-commit segments
+//! (`server::wal::segment`) where appends park on a commit ticket and a
+//! single fsync covers the whole flush batch. [`SessionRunner::recover`]
+//! replays the log on boot: incomplete sessions resume from their last
+//! checkpoint (no committed round is re-scored — `kill -9` costs at most
+//! the in-flight step), while sessions whose final record is terminal
+//! are skipped, never resurrected (`wal_replay_skipped_terminal`). A
+//! segmented boot also folds legacy per-session files into the segment
+//! store, so `--wal-mode segmented` upgrades a state dir in place. See
+//! `server::wal`, `server::wal::segment`, and DESIGN.md §8/§12.
 //!
 //! Cancellation: `DELETE /v1/sessions/:id` (or a client abandoning its
 //! event stream) sets a cooperative cancel flag; the runner checks it
@@ -55,14 +60,18 @@ use crate::protocol::{
     SessionEvent,
 };
 use crate::sched::{lane_scope, Lane};
+use crate::server::wal::segment::{
+    RecoveredSession, SegmentConfig, SegmentStats, SegmentStore, SessionHandle,
+};
 use crate::server::wal::{self, ScannedLog, SessionWal, WalMeta};
 use crate::server::Metrics;
 use crate::util::json::Json;
 use crate::util::rng::{mix64, Rng};
 use crate::util::sync::{cv_wait, cv_wait_timeout, unpoisoned};
 use anyhow::{anyhow, Result};
-use std::collections::{HashMap, VecDeque};
-use std::path::PathBuf;
+use std::collections::{BTreeSet, HashMap, VecDeque};
+use std::io;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -131,8 +140,9 @@ struct EntryInner {
     /// is in flight; the worker converts the session to `Cancelled`
     /// between `step()` calls
     cancel_requested: bool,
-    /// the session's write-ahead log, when the runner is durable
-    wal: Option<SessionWal>,
+    /// the session's durable log, when the runner persists one (a file
+    /// of its own or a handle into the shared segmented store)
+    wal: Option<SessionLog>,
 }
 
 impl SessionEntry {
@@ -209,6 +219,7 @@ impl SessionEntry {
             ("steps", Json::num(inner.steps as f64)),
             ("backoffs", Json::num(inner.backoffs as f64)),
             ("events", Json::num(inner.events.len() as f64)),
+            ("durable", Json::Bool(inner.wal.is_some())),
         ];
         if let Some(result) = &inner.result {
             match inner.status {
@@ -231,6 +242,38 @@ struct RunQueue {
     parked: Vec<(Instant, u64)>,
 }
 
+/// The durability backend behind a runner (`--state-dir` + `--wal-mode`).
+enum WalBackend {
+    /// not durable: no `--state-dir`
+    None,
+    /// one fsync'd `session-<id>.wal` file per session under this dir
+    PerSession(PathBuf),
+    /// shared group-commit segments; the boot scan's sessions wait in
+    /// `recovered` until [`SessionRunner::recover`] claims them
+    Segmented {
+        dir: PathBuf,
+        store: SegmentStore,
+        recovered: Mutex<Vec<RecoveredSession>>,
+    },
+}
+
+/// A live session's durable log: its own file, or an append handle into
+/// the shared segmented store (which parks on the group committer).
+enum SessionLog {
+    File(SessionWal),
+    Segmented(SessionHandle),
+}
+
+impl SessionLog {
+    /// Append one record body; returns its bytes once durable on disk.
+    fn append(&mut self, body: &Json) -> io::Result<u64> {
+        match self {
+            SessionLog::File(w) => w.append(body),
+            SessionLog::Segmented(h) => h.append_record(body),
+        }
+    }
+}
+
 struct RunnerShared {
     /// session ids ready for their next step (FIFO → round-robin), plus
     /// the backoff-parked tier
@@ -248,8 +291,14 @@ struct RunnerShared {
     recovered_total: AtomicU64,
     replay_skipped_terminal: AtomicU64,
     wal_bytes: AtomicU64,
-    /// `--state-dir`: present iff this runner persists session WALs
-    wal_dir: Option<PathBuf>,
+    /// WAL create/append failures — the affected session keeps running
+    /// but is no longer durable (`wal_errors` on `/metrics`)
+    wal_errors: AtomicU64,
+    /// fsyncs issued by per-session-file appends; segmented-mode fsyncs
+    /// are counted by the store and merged in [`SessionRunner::wal_stats`]
+    wal_fsyncs: AtomicU64,
+    /// the durability backend (`--state-dir` + `--wal-mode`)
+    wal: WalBackend,
     shutdown: AtomicBool,
     /// ring of recently-stepped session ids (diagnostics + tests)
     step_trace: Mutex<VecDeque<u64>>,
@@ -289,6 +338,74 @@ pub struct RecoveryReport {
     pub skipped_unusable: usize,
 }
 
+/// Which durability backend a [`SessionRunner::with_wal_mode`] runner
+/// persists sessions with (`--wal-mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WalMode {
+    /// one CRC'd `session-<id>.wal` file per session, one fsync per
+    /// appended record — simple, but O(steps) fsyncs
+    PerSession,
+    /// shared `wal-<epoch>.seg` segments with group-commit fsync and
+    /// snapshot compaction (`server::wal::segment`) — O(flushes) fsyncs
+    Segmented,
+}
+
+impl WalMode {
+    /// Parse the `--wal-mode` flag value.
+    pub fn parse(s: &str) -> Result<WalMode> {
+        match s {
+            "per-session" => Ok(WalMode::PerSession),
+            "segmented" => Ok(WalMode::Segmented),
+            other => Err(anyhow!("unknown wal mode '{other}' (want per-session|segmented)")),
+        }
+    }
+
+    /// The durability test matrix's toggle: `MINIONS_WAL_MODE=segmented`
+    /// flips [`SessionRunner::with_wal`]; unset (or any other value)
+    /// keeps the per-session default so fixture tests read plain files.
+    pub fn from_env() -> WalMode {
+        match std::env::var("MINIONS_WAL_MODE") {
+            Ok(v) if v == "segmented" => WalMode::Segmented,
+            _ => WalMode::PerSession,
+        }
+    }
+}
+
+/// WAL observability counters for `/metrics`, merged across backends by
+/// [`SessionRunner::wal_stats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WalStats {
+    /// WAL create/append failures (each left a session running but
+    /// non-durable — the status body's `durable: false`)
+    pub errors: u64,
+    /// total fsyncs: per-session appends plus segmented commit batches
+    pub fsyncs: u64,
+    /// the segmented store's gauges, when that backend is active
+    pub segmented: Option<SegmentStats>,
+}
+
+/// The lookup context recovery needs to rebuild sessions: datasets and
+/// protocol resolution, plus the metrics sink restored entries report to.
+struct RecoverCtx<'a> {
+    datasets: &'a HashMap<String, Dataset>,
+    protocols: &'a HashMap<String, Arc<dyn Protocol>>,
+    factory: Option<&'a Arc<ProtocolFactory>>,
+    metrics: &'a Option<Arc<Metrics>>,
+}
+
+/// A session rebuilt from its WAL records, ready to register and
+/// re-enqueue (backend-agnostic: the caller attaches the log).
+struct RestoredState {
+    protocol: Arc<dyn Protocol>,
+    session: Box<dyn ProtocolSession>,
+    rng: Rng,
+    events: Vec<String>,
+    rounds: usize,
+    steps: u64,
+    backoffs: u64,
+    truth: Answer,
+}
+
 /// What a completed step asks the worker loop to do with the session.
 enum StepOutcome {
     /// still running: requeue immediately (the round-robin path)
@@ -307,24 +424,55 @@ impl SessionRunner {
     /// `ttl` bounds how long terminal entries stay pollable before the
     /// registry evicts them (404 afterwards — documented behavior).
     pub fn with_config(workers: usize, ttl: Duration) -> Arc<SessionRunner> {
-        Self::build(workers, ttl, None)
+        Self::build(workers, ttl, WalBackend::None)
     }
 
     /// A durable runner: every session appends its steps to a WAL under
     /// `state_dir` (created if absent), and [`SessionRunner::recover`]
-    /// resumes incomplete sessions found there on boot.
+    /// resumes incomplete sessions found there on boot. The backend is
+    /// the per-session default unless `MINIONS_WAL_MODE=segmented` (the
+    /// durability test matrix's toggle); servers pass an explicit mode
+    /// through [`SessionRunner::with_wal_mode`] instead.
     pub fn with_wal(
         workers: usize,
         ttl: Duration,
         state_dir: impl Into<PathBuf>,
     ) -> Result<Arc<SessionRunner>> {
+        let mode = WalMode::from_env();
+        Self::with_wal_mode(workers, ttl, state_dir, mode, SegmentConfig::default())
+    }
+
+    /// [`Self::with_wal`] with an explicit backend choice and segment
+    /// tuning — the server's `--wal-mode` / `--wal-commit-interval`
+    /// path. Opening a segmented store scans the segments, truncates
+    /// any torn tail, and holds the recovered sessions for
+    /// [`SessionRunner::recover`].
+    pub fn with_wal_mode(
+        workers: usize,
+        ttl: Duration,
+        state_dir: impl Into<PathBuf>,
+        mode: WalMode,
+        cfg: SegmentConfig,
+    ) -> Result<Arc<SessionRunner>> {
         let dir = state_dir.into();
         std::fs::create_dir_all(&dir)
             .map_err(|e| anyhow!("cannot create --state-dir {}: {e}", dir.display()))?;
-        Ok(Self::build(workers, ttl, Some(dir)))
+        let backend = match mode {
+            WalMode::PerSession => WalBackend::PerSession(dir),
+            WalMode::Segmented => {
+                let (store, recovered) = SegmentStore::open(&dir, cfg)
+                    .map_err(|e| anyhow!("cannot open segmented wal in {}: {e}", dir.display()))?;
+                WalBackend::Segmented {
+                    dir,
+                    store,
+                    recovered: Mutex::new(recovered),
+                }
+            }
+        };
+        Ok(Self::build(workers, ttl, backend))
     }
 
-    fn build(workers: usize, ttl: Duration, wal_dir: Option<PathBuf>) -> Arc<SessionRunner> {
+    fn build(workers: usize, ttl: Duration, wal: WalBackend) -> Arc<SessionRunner> {
         let shared = Arc::new(RunnerShared {
             queue: Mutex::new(RunQueue::default()),
             queue_cv: Condvar::new(),
@@ -339,7 +487,9 @@ impl SessionRunner {
             recovered_total: AtomicU64::new(0),
             replay_skipped_terminal: AtomicU64::new(0),
             wal_bytes: AtomicU64::new(0),
-            wal_dir,
+            wal_errors: AtomicU64::new(0),
+            wal_fsyncs: AtomicU64::new(0),
+            wal,
             shutdown: AtomicBool::new(false),
             step_trace: Mutex::new(VecDeque::new()),
         });
@@ -445,15 +595,19 @@ impl SessionRunner {
         let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed) + 1;
         // durable sessions get their WAL (with the meta record) *before*
         // the first step can run: an empty or meta-only log is a valid
-        // recovery point, a step record without a meta is not
-        let wal = match (&self.shared.wal_dir, &meta) {
-            (Some(dir), Some(meta)) => match SessionWal::create(dir, id) {
+        // recovery point, a step record without a meta is not. Failures
+        // are loud, counted in `wal_errors`, and surfaced as
+        // `durable: false` in the status body — the session still runs.
+        let wal = match (&self.shared.wal, &meta) {
+            (WalBackend::PerSession(dir), Some(meta)) => match SessionWal::create(dir, id) {
                 Ok(mut w) => match w.append(&wal::meta_body(meta, &protocol.name(), &rng)) {
                     Ok(bytes) => {
                         self.shared.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
-                        Some(w)
+                        self.shared.wal_fsyncs.fetch_add(1, Ordering::Relaxed);
+                        Some(SessionLog::File(w))
                     }
                     Err(e) => {
+                        self.shared.wal_errors.fetch_add(1, Ordering::Relaxed);
                         eprintln!("wal: session {id}: meta append failed ({e}); not durable");
                         // remove the partial file: a meta-less log is
                         // unusable and would clutter every future boot
@@ -462,10 +616,25 @@ impl SessionRunner {
                     }
                 },
                 Err(e) => {
+                    self.shared.wal_errors.fetch_add(1, Ordering::Relaxed);
                     eprintln!("wal: session {id}: create failed ({e}); not durable");
                     None
                 }
             },
+            (WalBackend::Segmented { store, .. }, Some(meta)) => {
+                let mut h = store.handle(id, 0);
+                match h.append_record(&wal::meta_body(meta, &protocol.name(), &rng)) {
+                    Ok(bytes) => {
+                        self.shared.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+                        Some(SessionLog::Segmented(h))
+                    }
+                    Err(e) => {
+                        self.shared.wal_errors.fetch_add(1, Ordering::Relaxed);
+                        eprintln!("wal: session {id}: meta append failed ({e}); not durable");
+                        None
+                    }
+                }
+            }
             _ => None,
         };
         let entry = Arc::new(SessionEntry {
@@ -566,6 +735,22 @@ impl SessionRunner {
         self.shared.wal_bytes.load(Ordering::Relaxed)
     }
 
+    /// WAL observability counters: error and fsync totals, plus the
+    /// segmented store's gauges when that backend is active.
+    pub fn wal_stats(&self) -> WalStats {
+        let mut stats = WalStats {
+            errors: self.shared.wal_errors.load(Ordering::Relaxed),
+            fsyncs: self.shared.wal_fsyncs.load(Ordering::Relaxed),
+            segmented: None,
+        };
+        if let WalBackend::Segmented { store, .. } = &self.shared.wal {
+            let seg = store.stats();
+            stats.fsyncs += seg.fsyncs;
+            stats.segmented = Some(seg);
+        }
+        stats
+    }
+
     /// Cooperatively cancel session `id`. Returns `None` for an unknown
     /// (or TTL-evicted) id; otherwise see [`CancelOutcome`]. A queued
     /// session is finalized `Cancelled` immediately (freeing its
@@ -621,10 +806,12 @@ impl SessionRunner {
             .collect();
         for id in &expired {
             if let Some(entry) = registry.remove(id) {
-                // a terminal session's WAL has served its post-mortem
-                // window: delete it so the state dir stays bounded and a
-                // future recovery has nothing to skip
-                if let Some(w) = unpoisoned(&entry.inner).wal.take() {
+                // a terminal session's per-session WAL has served its
+                // post-mortem window: delete it so the state dir stays
+                // bounded and a future recovery has nothing to skip.
+                // (Segmented records were already marked dead when the
+                // terminal record committed; compaction reclaims them.)
+                if let Some(SessionLog::File(w)) = unpoisoned(&entry.inner).wal.take() {
                     let _ = std::fs::remove_file(w.path());
                 }
             }
@@ -642,11 +829,11 @@ impl SessionRunner {
         unpoisoned(&self.shared.step_trace).iter().copied().collect()
     }
 
-    /// Replay the `--state-dir` WALs on boot: sessions whose log ends in
+    /// Replay the `--state-dir` WAL on boot: sessions whose log ends in
     /// a non-terminal record are restored from their last snapshot + rng
     /// checkpoint and re-enqueued (same session id, events replayed, no
-    /// committed round re-scored); logs ending in a terminal record are
-    /// counted in `wal_replay_skipped_terminal` and deleted, never
+    /// committed round re-scored); sessions ending in a terminal record
+    /// are counted in `wal_replay_skipped_terminal` and never
     /// resurrected. Logs that cannot be used (missing meta, unknown
     /// dataset/protocol, restore failure) are left on disk for
     /// post-mortem and skipped with a warning.
@@ -657,6 +844,12 @@ impl SessionRunner {
     /// resolves its `proto_key` against `protocols` (the alias path).
     /// A v2 log on a factory-less runner falls back to the registry.
     ///
+    /// A segmented runner recovers from the store's boot scan and then
+    /// *migrates* any legacy `session-<id>.wal` files into the segments
+    /// (one commit batch per file, the file deleted once its records
+    /// are durable there) — `--wal-mode segmented` upgrades a
+    /// per-session state dir in place.
+    ///
     /// Call once, after construction and before serving traffic.
     pub fn recover(
         &self,
@@ -665,11 +858,30 @@ impl SessionRunner {
         factory: Option<&Arc<ProtocolFactory>>,
         metrics: Option<Arc<Metrics>>,
     ) -> RecoveryReport {
-        let mut report = RecoveryReport::default();
-        let Some(dir) = self.shared.wal_dir.clone() else {
-            return report;
+        let ctx = RecoverCtx {
+            datasets,
+            protocols,
+            factory,
+            metrics: &metrics,
         };
-        let logs = match wal::scan_dir(&dir) {
+        match &self.shared.wal {
+            WalBackend::None => RecoveryReport::default(),
+            WalBackend::PerSession(dir) => self.recover_per_session(dir, &ctx),
+            WalBackend::Segmented {
+                dir,
+                store,
+                recovered,
+            } => {
+                let sessions = take_recovered(recovered);
+                self.recover_segmented(dir, store, sessions, &ctx)
+            }
+        }
+    }
+
+    /// Per-session-file recovery: scan the dir, restore each log.
+    fn recover_per_session(&self, dir: &Path, ctx: &RecoverCtx<'_>) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        let logs = match wal::scan_dir(dir) {
             Ok(logs) => logs,
             Err(e) => {
                 eprintln!("wal: cannot scan {}: {e}", dir.display());
@@ -681,7 +893,7 @@ impl SessionRunner {
             // logs — so a later spawn can never reuse it and truncate a
             // file recovery promised to preserve for post-mortem
             self.shared.next_id.fetch_max(log.id, Ordering::Relaxed);
-            match self.recover_one(&log, datasets, protocols, factory, &metrics) {
+            match self.recover_file(&log, ctx) {
                 Ok(true) => report.resumed += 1,
                 Ok(false) => {
                     report.skipped_terminal += 1;
@@ -702,23 +914,142 @@ impl SessionRunner {
         report
     }
 
-    /// Recover one scanned log. `Ok(true)` = resumed, `Ok(false)` =
+    /// Recover one per-session log. `Ok(true)` = resumed, `Ok(false)` =
     /// terminal (skip + delete), `Err` = unusable (skip + keep).
-    fn recover_one(
+    fn recover_file(&self, log: &ScannedLog, ctx: &RecoverCtx<'_>) -> Result<bool> {
+        let Some(state) = self.restore_state(&log.records, ctx)? else {
+            return Ok(false);
+        };
+        // re-open the WAL at its valid prefix (truncating any torn tail)
+        let wal = SessionWal::reopen(&log.path, log.valid_len, log.records.len() as u64)
+            .map_err(|e| anyhow!("cannot reopen wal: {e}"))?;
+        self.register_restored(log.id, state, Some(SessionLog::File(wal)), ctx.metrics);
+        Ok(true)
+    }
+
+    /// Segmented recovery: resume the boot scan's non-terminal sessions
+    /// against the store, then fold legacy per-session files in.
+    fn recover_segmented(
         &self,
-        log: &ScannedLog,
-        datasets: &HashMap<String, Dataset>,
-        protocols: &HashMap<String, Arc<dyn Protocol>>,
-        factory: Option<&Arc<ProtocolFactory>>,
-        metrics: &Option<Arc<Metrics>>,
-    ) -> Result<bool> {
-        let Some(last) = log.records.last() else {
+        dir: &Path,
+        store: &SegmentStore,
+        sessions: Vec<RecoveredSession>,
+        ctx: &RecoverCtx<'_>,
+    ) -> RecoveryReport {
+        let mut report = RecoveryReport::default();
+        let mut seg_sids = BTreeSet::new();
+        for rs in sessions {
+            seg_sids.insert(rs.sid);
+            self.shared.next_id.fetch_max(rs.sid, Ordering::Relaxed);
+            if rs.terminal {
+                // the index already marked the whole session dead, so
+                // compaction reclaims its bytes; nothing to delete here
+                report.skipped_terminal += 1;
+                self.shared
+                    .replay_skipped_terminal
+                    .fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            match self.restore_state(&rs.records, ctx) {
+                Ok(Some(state)) => {
+                    let log = SessionLog::Segmented(store.handle(rs.sid, rs.next_seq));
+                    self.register_restored(rs.sid, state, Some(log), ctx.metrics);
+                    report.resumed += 1;
+                }
+                Ok(None) => {
+                    report.skipped_terminal += 1;
+                    self.shared
+                        .replay_skipped_terminal
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    report.skipped_unusable += 1;
+                    eprintln!("wal: segmented session {} not recoverable ({e}); kept", rs.sid);
+                }
+            }
+        }
+        self.migrate_legacy(dir, store, &seg_sids, ctx, &mut report);
+        report
+    }
+
+    /// Fold legacy per-session `session-<id>.wal` files into the
+    /// segmented store: each resumable log is imported as one commit
+    /// batch (one fsync) and its file deleted once durable; terminal
+    /// logs are counted and deleted; unusable logs stay for post-mortem.
+    /// A file whose id the segments already hold is a stale leftover
+    /// from an interrupted earlier migration — the segment copy is
+    /// newer, so the file is simply removed.
+    fn migrate_legacy(
+        &self,
+        dir: &Path,
+        store: &SegmentStore,
+        seg_sids: &BTreeSet<u64>,
+        ctx: &RecoverCtx<'_>,
+        report: &mut RecoveryReport,
+    ) {
+        let logs = match wal::scan_dir(dir) {
+            Ok(logs) => logs,
+            Err(e) => {
+                eprintln!("wal: cannot scan {}: {e}", dir.display());
+                return;
+            }
+        };
+        for log in logs {
+            self.shared.next_id.fetch_max(log.id, Ordering::Relaxed);
+            if seg_sids.contains(&log.id) {
+                let _ = std::fs::remove_file(&log.path);
+                continue;
+            }
+            match self.restore_state(&log.records, ctx) {
+                Ok(Some(state)) => match store.import(log.id, &log.records) {
+                    Ok(bytes) => {
+                        self.shared.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+                        let _ = std::fs::remove_file(&log.path);
+                        let seq = log.records.len() as u64;
+                        let seg = SessionLog::Segmented(store.handle(log.id, seq));
+                        self.register_restored(log.id, state, Some(seg), ctx.metrics);
+                        report.resumed += 1;
+                    }
+                    Err(e) => {
+                        report.skipped_unusable += 1;
+                        eprintln!("wal: session-{}.wal import failed ({e}); kept", log.id);
+                    }
+                },
+                Ok(None) => {
+                    report.skipped_terminal += 1;
+                    self.shared
+                        .replay_skipped_terminal
+                        .fetch_add(1, Ordering::Relaxed);
+                    let _ = std::fs::remove_file(&log.path);
+                }
+                Err(e) => {
+                    report.skipped_unusable += 1;
+                    eprintln!(
+                        "wal: session-{}.wal not recoverable ({e}); left for post-mortem",
+                        log.id
+                    );
+                }
+            }
+        }
+    }
+
+    /// Rebuild a session's live state from its WAL record sequence
+    /// (shared by per-session recovery, segmented recovery, and legacy
+    /// migration — record bodies are identical across backends).
+    /// `Ok(None)` = the log ends terminal (nothing to resume); `Err` =
+    /// unusable.
+    fn restore_state(
+        &self,
+        records: &[Json],
+        ctx: &RecoverCtx<'_>,
+    ) -> Result<Option<RestoredState>> {
+        let Some(last) = records.last() else {
             return Err(anyhow!("no intact records"));
         };
         if wal::is_terminal(last) {
-            return Ok(false);
+            return Ok(None);
         }
-        let Some(meta) = log.records.first() else {
+        let Some(meta) = records.first() else {
             return Err(anyhow!("no intact records"));
         };
         if wal::body_type(meta) != Some("meta") {
@@ -748,32 +1079,29 @@ impl SessionRunner {
         // through the factory with no registry dependency; v1 (or a
         // factory-less runner) resolves the registry key instead
         let from_registry = |key: &str| -> Result<Arc<dyn Protocol>> {
-            protocols
-                .get(key)
-                .cloned()
-                .ok_or_else(|| anyhow!("unknown protocol '{key}'"))
+            let found = ctx.protocols.get(key).cloned();
+            found.ok_or_else(|| anyhow!("unknown protocol '{key}'"))
         };
         let protocol: Arc<dyn Protocol> = if version == wal::WAL_META_V2 {
             let spec_json = meta
                 .get("spec")
                 .ok_or_else(|| anyhow!("v2 meta missing spec"))?;
             let spec = ProtocolSpec::from_json(spec_json)?;
-            match factory {
+            match ctx.factory {
                 Some(f) => f.resolve(&spec)?,
                 None => from_registry(proto_key)?,
             }
         } else {
             from_registry(proto_key)?
         };
-        let sample = datasets
-            .get(dataset_name)
+        let dataset = ctx.datasets.get(dataset_name);
+        let sample = dataset
             .and_then(|ds| ds.samples.get(sample_idx))
             .ok_or_else(|| anyhow!("unknown sample {dataset_name}/{sample_idx}"))?;
 
         // resume point: the last step record's snapshot + rng, or the
         // meta record's initial rng when no step ever committed
-        let steps: Vec<&Json> = log
-            .records
+        let steps: Vec<&Json> = records
             .get(1..)
             .unwrap_or_default()
             .iter()
@@ -820,34 +1148,47 @@ impl SessionRunner {
                 events.push(line);
             }
         }
+        Ok(Some(RestoredState {
+            protocol,
+            session,
+            rng,
+            events,
+            rounds,
+            steps: steps.len() as u64,
+            backoffs,
+            truth: sample.query.answer.clone(),
+        }))
+    }
 
-        // re-open the WAL at its valid prefix (truncating any torn tail)
-        let wal = SessionWal::reopen(&log.path, log.valid_len, log.records.len() as u64)
-            .map_err(|e| anyhow!("cannot reopen wal: {e}"))?;
-
-        // (the id was already claimed against next_id by the recover()
-        // loop, which does it for every scanned log, not just resumable
-        // ones)
-        let id = log.id;
+    /// Register a restored session and queue its next step (the common
+    /// tail of every recovery path; the id was already claimed against
+    /// `next_id` by the caller).
+    fn register_restored(
+        &self,
+        id: u64,
+        state: RestoredState,
+        wal: Option<SessionLog>,
+        metrics: &Option<Arc<Metrics>>,
+    ) {
         let entry = Arc::new(SessionEntry {
             id,
-            protocol: protocol.name(),
+            protocol: state.protocol.name(),
             inner: Mutex::new(EntryInner {
-                session: Some(session),
-                rng,
+                session: Some(state.session),
+                rng: state.rng,
                 status: SessionStatus::Running,
-                events,
-                rounds,
-                steps: steps.len() as u64,
-                backoffs,
+                events: state.events,
+                rounds: state.rounds,
+                steps: state.steps,
+                backoffs: state.backoffs,
                 backoff_streak: 0,
                 result: None,
-                truth: sample.query.answer.clone(),
+                truth: state.truth,
                 metrics: metrics.clone(),
                 started: Instant::now(),
                 finished: None,
                 cancel_requested: false,
-                wal: Some(wal),
+                wal,
             }),
             events_cv: Condvar::new(),
         });
@@ -856,7 +1197,6 @@ impl SessionRunner {
         self.shared.recovered_total.fetch_add(1, Ordering::Relaxed);
         unpoisoned(&self.shared.queue).ready.push_back(id);
         self.shared.queue_cv.notify_one();
-        Ok(true)
     }
 
     /// Stop the workers. In-flight steps finish; queued-but-unfinished
@@ -893,6 +1233,13 @@ impl SessionRunner {
             inner.session = None;
             self.shared.active.fetch_sub(1, Ordering::Relaxed);
             entry.events_cv.notify_all();
+        }
+        // stop the group committer only after the workers are joined and
+        // every leftover entry is failed: no step can append anymore, so
+        // the final batch drains and the segments end at a clean record
+        // boundary
+        if let WalBackend::Segmented { store, .. } = &self.shared.wal {
+            store.shutdown();
         }
     }
 }
@@ -934,32 +1281,49 @@ fn progress_line(ev: &SessionEvent) -> Option<String> {
     }
 }
 
-/// Append `body` to the entry's WAL (if durable), tracking `wal_bytes`.
-/// An append failure is loud but non-fatal: the session keeps running,
-/// it just stops being durable from here on.
+/// Drain the segmented boot scan's sessions (recovery consumes them
+/// exactly once; later calls see an empty list).
+fn take_recovered(recovered: &Mutex<Vec<RecoveredSession>>) -> Vec<RecoveredSession> {
+    let mut rec = unpoisoned(recovered);
+    std::mem::take(&mut *rec)
+}
+
+/// Append `body` to the entry's durable log (if any), tracking
+/// `wal_bytes` (and, for per-session files, `wal_fsyncs` — the
+/// segmented store counts its own batch fsyncs). An append failure is
+/// loud but non-fatal: it bumps `wal_errors` and the session keeps
+/// running (status body: `durable: false`), it just stops being durable.
 ///
-/// Deliberate tradeoff: the append (flush + fsync) runs under the entry
-/// lock, so a status poll or cancel issued mid-append waits out one
-/// fsync. That serializes the two WAL writers (the stepping worker and
-/// the queued-path cancel) through a single seq counter and keeps
-/// durability-before-observability trivially correct; with per-step
-/// fsyncs bounded by protocol-step granularity the contention window is
-/// small. Revisit only if poll latency under durable load ever shows up
-/// in the lane-wait gauges.
+/// Deliberate tradeoff: the append runs under the entry lock — a
+/// per-session fsync, or a park on the segmented group committer — so a
+/// status poll or cancel issued mid-append waits out one commit. That
+/// serializes the two WAL writers (the stepping worker and the
+/// queued-path cancel) through a single seq counter and keeps
+/// durability-before-observability trivially correct; the group
+/// committer bounds the park at one flush interval. Revisit only if
+/// poll latency under durable load ever shows up in the lane-wait
+/// gauges.
 fn wal_append(shared: &RunnerShared, inner: &mut EntryInner, id: u64, body: &Json) {
-    if let Some(w) = inner.wal.as_mut() {
-        match w.append(body) {
+    if let Some(log) = inner.wal.as_mut() {
+        match log.append(body) {
             Ok(bytes) => {
                 shared.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+                if matches!(log, SessionLog::File(_)) {
+                    shared.wal_fsyncs.fetch_add(1, Ordering::Relaxed);
+                }
             }
             Err(e) => {
+                shared.wal_errors.fetch_add(1, Ordering::Relaxed);
                 eprintln!("wal: session {id}: append failed ({e}); dropping the log");
-                // delete, don't just abandon: a stale non-terminal log
-                // would make the next boot resurrect and re-run a
-                // session that may well complete in *this* process —
-                // losing durability for this session is strictly better
-                // than duplicating its work after a restart
-                if let Some(w) = inner.wal.take() {
+                // delete the per-session file, don't just abandon it: a
+                // stale non-terminal log would make the next boot
+                // resurrect and re-run a session that may well complete
+                // in *this* process — losing durability for this session
+                // is strictly better than duplicating its work after a
+                // restart. (Segmented records can't be unwritten; a
+                // failed store poisons every later append and the
+                // duplicate-work window is documented in DESIGN.md §12.)
+                if let Some(SessionLog::File(w)) = inner.wal.take() {
                     let _ = std::fs::remove_file(w.path());
                 }
             }

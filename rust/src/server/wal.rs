@@ -50,6 +50,8 @@ use std::fs::{File, OpenOptions};
 use std::io::{self, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
+pub mod segment;
+
 /// Meta record v1: the session names a boot-time registry key only.
 pub const WAL_META_V1: u64 = 1;
 

@@ -1,0 +1,1336 @@
+//! Segmented shared write-ahead logs: group-commit fsync batching and
+//! snapshot compaction (DESIGN.md §12).
+//!
+//! The per-session WAL (one `session-<id>.wal` per session, one
+//! `sync_data` per appended record — [`super::SessionWal`]) pays a
+//! per-step fsync tax and a file-per-session wall that caps durable
+//! sessions/sec long before the scheduler saturates. This module keeps
+//! the durability contract — durability-before-observability,
+//! byte-identical-per-session replay — while amortizing both costs:
+//!
+//! - **Segments.** All sessions append to one shared, append-only
+//!   segment file `wal-<epoch>.seg`; when the active segment passes
+//!   `segment_cap` bytes the committer seals it and rotates to
+//!   `wal-<epoch+1>.seg`. Each record line carries the session id next
+//!   to the per-session sequence number:
+//!   `{"crc":"<crc32 hex>","seq":<n>,"sid":<id>,"body":{...}}`. The
+//!   CRC covers the canonically serialized body, exactly as in the
+//!   per-session format ([`super::encode_record`]).
+//! - **Group commit.** Appenders enqueue their framed line into a
+//!   shared buffer under the store lock, take a commit ticket, and
+//!   park on the durable condvar. A dedicated committer thread drains
+//!   the buffer, grants one bounded grace interval (`commit_interval`)
+//!   so concurrent steps can join the batch, then issues a single
+//!   `write_all` + `sync_data` for the whole batch and wakes every
+//!   parked appender. A step still never becomes observable before its
+//!   record is durable, but the fsync count drops from O(steps) to
+//!   O(flushes). Batch width self-limits at the number of concurrently
+//!   parked appenders (each session has at most one append in flight).
+//! - **Compaction.** A record is *superseded* once a newer one makes
+//!   it irrelevant for recovery: an older step snapshot by a newer
+//!   step, meta + steps by a terminal record, a terminal record by the
+//!   disappearance of every other physical record of its session. The
+//!   in-memory index tracks dead bytes per sealed segment; once the
+//!   dead fraction passes `compact_min_dead` (or the segment is fully
+//!   dead) the committer rewrites the segment's live records into
+//!   `wal-<epoch>.seg.tmp`, fsyncs, and atomically renames it over the
+//!   original — bounding the recovery scan by live bytes, not by
+//!   history. Compaction preserves *resumability* (meta, latest step
+//!   snapshot, terminal marker), not the full event history; the
+//!   durability suite pins that resumed sessions still produce
+//!   byte-identical outcomes, rng checkpoints, and subsequent records.
+//! - **Recovery.** One scan over the segments in epoch order rebuilds
+//!   the per-session index. Per-session sequence numbers must be
+//!   strictly increasing (gaps are legal after compaction); the first
+//!   torn, CRC-bad, or non-monotonic line cuts the global suffix — the
+//!   offending file is truncated at its last valid byte and every
+//!   later-epoch segment is deleted, mirroring the per-session
+//!   torn-tail rule (bytes after a bad record were written after it
+//!   and are untrusted).
+//!
+//! Lock discipline: the store mutex is never held across `write_all`,
+//! `sync_data`, or file creation — the committer takes the batch out
+//! under the lock, drops the guard, performs IO, then re-locks to
+//! publish durability and index updates (a guard held across the
+//! batched fsync would stall every parked appender).
+
+use crate::server::wal::{self, crc32};
+use crate::util::json::Json;
+use crate::util::sync::{cv_wait, cv_wait_timeout, unpoisoned};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Record framing.
+// ---------------------------------------------------------------------
+
+/// Frame one segment record line (trailing newline included). Same CRC
+/// and body canonicalization as [`super::encode_record`], plus the
+/// session id.
+pub fn encode_seg_record(sid: u64, seq: u64, body: &Json) -> String {
+    let body_s = body.to_string();
+    let crc = crc32(body_s.as_bytes());
+    format!("{{\"crc\":\"{crc:08x}\",\"seq\":{seq},\"sid\":{sid},\"body\":{body_s}}}\n")
+}
+
+/// One decoded segment record.
+#[derive(Clone, Debug)]
+pub struct SegRecord {
+    pub sid: u64,
+    pub seq: u64,
+    pub body: Json,
+}
+
+/// Parse and validate one segment record line (no trailing newline).
+/// Any failure — bad JSON, missing fields, CRC mismatch — renders the
+/// line (and, because segments are shared, every byte after it)
+/// untrusted. Sequence monotonicity is the scanner's job: unlike the
+/// per-session decoder there is no expected seq here, since compaction
+/// legitimately leaves gaps.
+pub fn decode_seg_record(line: &str) -> Result<SegRecord, String> {
+    let v = Json::parse(line).map_err(|e| format!("unparseable record: {e}"))?;
+    let crc_hex = v
+        .get("crc")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "missing crc".to_string())?;
+    let sid = v
+        .get("sid")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "missing sid".to_string())?;
+    let seq = v
+        .get("seq")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| "missing seq".to_string())?;
+    let body = v.get("body").ok_or_else(|| "missing body".to_string())?;
+    let want = u32::from_str_radix(crc_hex, 16).map_err(|_| format!("bad crc '{crc_hex}'"))?;
+    let got = crc32(body.to_string().as_bytes());
+    if got != want {
+        return Err(format!("crc mismatch: {got:08x} != {want:08x}"));
+    }
+    let body = body.clone();
+    Ok(SegRecord { sid, seq, body })
+}
+
+pub fn segment_path(dir: &Path, epoch: u64) -> PathBuf {
+    dir.join(format!("wal-{epoch}.seg"))
+}
+
+/// Parse an epoch back out of a `wal-<epoch>.seg` file name.
+pub fn parse_segment_name(name: &str) -> Option<u64> {
+    name.strip_prefix("wal-")?.strip_suffix(".seg")?.parse().ok()
+}
+
+// ---------------------------------------------------------------------
+// Configuration.
+// ---------------------------------------------------------------------
+
+/// Group-commit and compaction knobs (`--wal-commit-interval` feeds
+/// `commit_interval`; the rest are serving defaults, overridable by
+/// tests to force rotation and compaction deterministically).
+#[derive(Clone, Debug)]
+pub struct SegmentConfig {
+    /// Grace the committer grants after a buffered record so
+    /// concurrent steps can join the batch (each arrival restarts it).
+    /// Zero flushes as soon as the buffer is non-empty; batching still
+    /// emerges while a previous fsync is in flight.
+    pub commit_interval: Duration,
+    /// Flush without further grace once the buffer holds this many
+    /// bytes — bounds commit latency under a steady trickle.
+    pub commit_high_water: usize,
+    /// Seal the active segment and rotate once it reaches this size.
+    pub segment_cap: u64,
+    /// Compact a sealed segment once its dead-byte fraction reaches
+    /// this threshold (a fully dead segment is always collected).
+    pub compact_min_dead: f64,
+}
+
+impl Default for SegmentConfig {
+    fn default() -> SegmentConfig {
+        SegmentConfig {
+            commit_interval: Duration::from_millis(1),
+            commit_high_water: 64 * 1024,
+            segment_cap: 4 * 1024 * 1024,
+            compact_min_dead: 0.5,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The in-memory index.
+// ---------------------------------------------------------------------
+
+/// What a record means for recovery liveness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum RecKind {
+    Meta,
+    Step,
+    Terminal,
+}
+
+fn rec_kind(body: &Json) -> RecKind {
+    if wal::is_terminal(body) {
+        RecKind::Terminal
+    } else if wal::body_type(body) == Some("meta") {
+        RecKind::Meta
+    } else {
+        RecKind::Step
+    }
+}
+
+/// Physical location of a record. `(epoch, seq)` identifies it
+/// uniquely per session; `len` is carried for dead-byte accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct RecLoc {
+    epoch: u64,
+    seq: u64,
+    len: u64,
+}
+
+/// Per-segment byte accounting.
+#[derive(Clone, Copy, Debug, Default)]
+struct SegMeta {
+    len: u64,
+    dead: u64,
+}
+
+/// Per-session index entry: where the records recovery needs live, and
+/// how many physical records the session still has per segment. The
+/// counts feed the terminal-collection guard — a terminal marker may
+/// only die once it is the session's last physical record, or a crash
+/// between two compactions could resurrect the session from a
+/// surviving meta/step record.
+#[derive(Clone, Debug, Default)]
+struct SessionIdx {
+    meta: Option<RecLoc>,
+    last_step: Option<RecLoc>,
+    terminal: Option<RecLoc>,
+    terminal_dead: bool,
+    counts: BTreeMap<u64, u64>,
+}
+
+/// Whether the physical record at `loc` is still needed for recovery.
+fn rec_live(idx: &SessionIdx, loc: RecLoc, kind: RecKind) -> bool {
+    match kind {
+        RecKind::Meta => idx.terminal.is_none() && idx.meta == Some(loc),
+        RecKind::Step => idx.terminal.is_none() && idx.last_step == Some(loc),
+        RecKind::Terminal => !idx.terminal_dead && idx.terminal == Some(loc),
+    }
+}
+
+fn mark_dead(segments: &mut BTreeMap<u64, SegMeta>, loc: RecLoc) {
+    if let Some(m) = segments.get_mut(&loc.epoch) {
+        m.dead += loc.len;
+    }
+}
+
+/// The terminal-collection guard: once a terminal session's only
+/// remaining physical record is the terminal marker itself, the marker
+/// becomes dead too, so the next compaction of its segment drops the
+/// session entirely (recovery skips terminal sessions anyway).
+fn maybe_collect_terminal(idx: &mut SessionIdx, segments: &mut BTreeMap<u64, SegMeta>) {
+    if idx.terminal_dead {
+        return;
+    }
+    let Some(t) = idx.terminal else {
+        return;
+    };
+    if idx.counts.len() != 1 {
+        return;
+    }
+    if idx.counts.get(&t.epoch).copied().unwrap_or(0) != 1 {
+        return;
+    }
+    idx.terminal_dead = true;
+    if let Some(m) = segments.get_mut(&t.epoch) {
+        m.dead += t.len;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Commit state + store.
+// ---------------------------------------------------------------------
+
+/// One record waiting in the commit buffer. Index updates happen at
+/// flush time, not append time: a record's epoch is only known once
+/// the committer writes it (a rotation may intervene).
+struct PendingRec {
+    sid: u64,
+    seq: u64,
+    len: u64,
+    kind: RecKind,
+}
+
+/// Commit-batch size ring capacity (`wal_commit_batch_p50/p95`).
+const BATCH_RING: usize = 1024;
+
+struct CommitState {
+    buf: String,
+    recs: Vec<PendingRec>,
+    /// commit tickets issued: monotonic count of enqueued records
+    issued: u64,
+    /// records durable so far; ticket `t` is released once `durable >= t`
+    durable: u64,
+    shutdown: bool,
+    /// a failed batch write poisons the store: the batch's durability
+    /// is unknown, so every parked and future append errors out
+    failed: Option<String>,
+    active_epoch: u64,
+    segments: BTreeMap<u64, SegMeta>,
+    sessions: BTreeMap<u64, SessionIdx>,
+    fsyncs: u64,
+    compactions: u64,
+    batch_ring: Vec<u64>,
+    batch_pos: usize,
+}
+
+struct StoreInner {
+    dir: PathBuf,
+    cfg: SegmentConfig,
+    state: Mutex<CommitState>,
+    /// appenders (and shutdown) notify the committer here
+    appended_cv: Condvar,
+    /// the committer wakes parked appenders here after each fsync
+    durable_cv: Condvar,
+}
+
+/// Aggregate store counters for `/metrics` and the bench report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SegmentStats {
+    pub fsyncs: u64,
+    pub segments: u64,
+    pub compactions: u64,
+    pub live_bytes: u64,
+    pub batch_p50: u64,
+    pub batch_p95: u64,
+}
+
+/// A session found by the boot-time segment scan: its surviving record
+/// bodies in append order (sequence gaps are legal after compaction)
+/// and the sequence number appends must resume at.
+pub struct RecoveredSession {
+    pub sid: u64,
+    pub records: Vec<Json>,
+    pub next_seq: u64,
+    pub terminal: bool,
+}
+
+/// The shared segmented store: owns the committer thread; sessions
+/// append through per-session [`SessionHandle`]s.
+pub struct SegmentStore {
+    inner: Arc<StoreInner>,
+    committer: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// One session's append handle into the shared store. An append blocks
+/// until the commit batch containing its record is fsync'd.
+pub struct SessionHandle {
+    inner: Arc<StoreInner>,
+    sid: u64,
+    next_seq: u64,
+}
+
+fn store_failed(msg: &str) -> io::Error {
+    io::Error::other(format!("segmented wal unavailable: {msg}"))
+}
+
+/// Best-effort directory fsync after segment create/rename/remove, so
+/// the file's existence is as durable as its contents (one syscall per
+/// rotation/compaction, not per batch; the per-session WAL never did
+/// even this).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+impl StoreInner {
+    /// Enqueue a pre-framed group of records and park until the batch
+    /// holding them is durable. Returns the bytes appended.
+    fn append_group(&self, lines: String, recs: Vec<PendingRec>) -> io::Result<u64> {
+        let total = lines.len() as u64;
+        let n = recs.len() as u64;
+        let mut st = unpoisoned(&self.state);
+        if let Some(msg) = &st.failed {
+            return Err(store_failed(msg));
+        }
+        if st.shutdown {
+            return Err(io::Error::other("segmented wal is shut down"));
+        }
+        st.buf.push_str(&lines);
+        st.recs.extend(recs);
+        st.issued += n;
+        let ticket = st.issued;
+        self.appended_cv.notify_all();
+        while st.durable < ticket {
+            if let Some(msg) = &st.failed {
+                return Err(store_failed(msg));
+            }
+            st = cv_wait(&self.durable_cv, st);
+        }
+        Ok(total)
+    }
+}
+
+impl SessionHandle {
+    /// Append one record for this session; blocks until it is durable.
+    /// Returns the bytes written (for `wal_bytes`).
+    pub fn append_record(&mut self, body: &Json) -> io::Result<u64> {
+        let line = encode_seg_record(self.sid, self.next_seq, body);
+        let rec = PendingRec {
+            sid: self.sid,
+            seq: self.next_seq,
+            len: line.len() as u64,
+            kind: rec_kind(body),
+        };
+        let n = self.inner.append_group(line, vec![rec])?;
+        self.next_seq += 1;
+        Ok(n)
+    }
+
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    pub fn sid(&self) -> u64 {
+        self.sid
+    }
+}
+
+impl SegmentStore {
+    /// Open (or create) the segmented store under `dir`: scan the
+    /// segments, rebuild the index, truncate/delete any invalid
+    /// suffix, and start the committer. Returns the store plus every
+    /// session the scan found, for the runner's recovery pass.
+    pub fn open(
+        dir: &Path,
+        cfg: SegmentConfig,
+    ) -> io::Result<(SegmentStore, Vec<RecoveredSession>)> {
+        std::fs::create_dir_all(dir)?;
+        let scan = scan_segments(dir)?;
+        let active_epoch = scan.active_epoch;
+        let active_len = match scan.segments.get(&active_epoch) {
+            Some(m) => m.len,
+            None => 0,
+        };
+        let mut segments = scan.segments;
+        segments.entry(active_epoch).or_default();
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(segment_path(dir, active_epoch))?;
+        sync_dir(dir);
+        let state = CommitState {
+            buf: String::new(),
+            recs: Vec::new(),
+            issued: 0,
+            durable: 0,
+            shutdown: false,
+            failed: None,
+            active_epoch,
+            segments,
+            sessions: scan.sessions,
+            fsyncs: 0,
+            compactions: 0,
+            batch_ring: Vec::new(),
+            batch_pos: 0,
+        };
+        let inner = Arc::new(StoreInner {
+            dir: dir.to_path_buf(),
+            cfg,
+            state: Mutex::new(state),
+            appended_cv: Condvar::new(),
+            durable_cv: Condvar::new(),
+        });
+        let thread_inner = Arc::clone(&inner);
+        let handle = std::thread::Builder::new()
+            .name("wal-committer".into())
+            .spawn(move || committer_loop(&thread_inner, file, active_epoch, active_len))
+            .map_err(|e| io::Error::other(format!("cannot spawn wal committer: {e}")))?;
+        let store = SegmentStore {
+            inner,
+            committer: Mutex::new(Some(handle)),
+        };
+        Ok((store, scan.recovered))
+    }
+
+    /// An append handle for session `sid`, resuming at `next_seq`
+    /// (0 for a fresh session).
+    pub fn handle(&self, sid: u64, next_seq: u64) -> SessionHandle {
+        SessionHandle {
+            inner: Arc::clone(&self.inner),
+            sid,
+            next_seq,
+        }
+    }
+
+    /// Migrate a legacy per-session log: append all its records (seq
+    /// `0..n`) as one group — one commit batch, one fsync. Returns the
+    /// bytes written.
+    pub fn import(&self, sid: u64, bodies: &[Json]) -> io::Result<u64> {
+        let mut lines = String::new();
+        let mut recs = Vec::new();
+        for (i, body) in bodies.iter().enumerate() {
+            let line = encode_seg_record(sid, i as u64, body);
+            recs.push(PendingRec {
+                sid,
+                seq: i as u64,
+                len: line.len() as u64,
+                kind: rec_kind(body),
+            });
+            lines.push_str(&line);
+        }
+        if recs.is_empty() {
+            return Ok(0);
+        }
+        self.inner.append_group(lines, recs)
+    }
+
+    pub fn stats(&self) -> SegmentStats {
+        let st = unpoisoned(&self.inner.state);
+        let mut live_bytes = 0u64;
+        for m in st.segments.values() {
+            live_bytes += m.len.saturating_sub(m.dead);
+        }
+        let mut sorted = st.batch_ring.clone();
+        sorted.sort_unstable();
+        SegmentStats {
+            fsyncs: st.fsyncs,
+            segments: st.segments.len() as u64,
+            compactions: st.compactions,
+            live_bytes,
+            batch_p50: percentile(&sorted, 50),
+            batch_p95: percentile(&sorted, 95),
+        }
+    }
+
+    /// Flush the commit buffer and stop the committer. Idempotent.
+    /// Appends already parked complete (the final drain flushes
+    /// everything buffered); appends arriving afterwards fail — they
+    /// could no longer be made durable.
+    pub fn shutdown(&self) {
+        self.request_shutdown();
+        if let Some(h) = self.take_committer() {
+            let _ = h.join();
+        }
+    }
+
+    fn request_shutdown(&self) {
+        let mut st = unpoisoned(&self.inner.state);
+        st.shutdown = true;
+        self.inner.appended_cv.notify_all();
+    }
+
+    fn take_committer(&self) -> Option<JoinHandle<()>> {
+        let mut h = unpoisoned(&self.committer);
+        h.take()
+    }
+}
+
+impl Drop for SegmentStore {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Nearest-rank p-th percentile of an already-sorted slice (0 when
+/// empty).
+fn percentile(sorted: &[u64], p: u64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (p * sorted.len() as u64 + 99) / 100;
+    let idx = rank.saturating_sub(1) as usize;
+    sorted.get(idx).copied().unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------
+// The committer thread.
+// ---------------------------------------------------------------------
+
+struct Batch {
+    buf: String,
+    recs: Vec<PendingRec>,
+}
+
+/// Wait for work; once the buffer is non-empty, grant one grace
+/// interval for concurrent appends to widen the batch (each arrival
+/// restarts it; shutdown, a zero interval, and the byte high-water cut
+/// it short), then take the whole buffer. `None` means shutdown with
+/// nothing left to drain.
+fn next_batch(inner: &StoreInner) -> Option<Batch> {
+    let mut st = unpoisoned(&inner.state);
+    loop {
+        if !st.buf.is_empty() {
+            if st.shutdown
+                || inner.cfg.commit_interval.is_zero()
+                || st.buf.len() >= inner.cfg.commit_high_water
+            {
+                return Some(take_batch(&mut st));
+            }
+            let (g, timeout) = cv_wait_timeout(&inner.appended_cv, st, inner.cfg.commit_interval);
+            st = g;
+            if timeout.timed_out() {
+                return Some(take_batch(&mut st));
+            }
+            continue;
+        }
+        if st.shutdown {
+            return None;
+        }
+        st = cv_wait(&inner.appended_cv, st);
+    }
+}
+
+fn take_batch(st: &mut CommitState) -> Batch {
+    Batch {
+        buf: std::mem::take(&mut st.buf),
+        recs: std::mem::take(&mut st.recs),
+    }
+}
+
+fn write_batch(file: &mut File, buf: &str) -> io::Result<()> {
+    file.write_all(buf.as_bytes())?;
+    file.flush()?;
+    file.sync_data()
+}
+
+/// A failed batch write/fsync: the batch's durability is unknown, so
+/// the store is poisoned — wake every parked appender with the error.
+fn fail(inner: &StoreInner, err: &io::Error) {
+    let mut st = unpoisoned(&inner.state);
+    st.failed = Some(err.to_string());
+    inner.durable_cv.notify_all();
+}
+
+/// Publish a durably committed batch: advance the durable ticket, wake
+/// parked appenders, and apply the index updates now that the batch's
+/// epoch is final. Records are processed in order, so same-batch
+/// supersession (an imported log's older steps) lands correctly.
+fn apply_batch(inner: &StoreInner, epoch: u64, recs: Vec<PendingRec>, bytes: u64) {
+    let n = recs.len() as u64;
+    let mut st = unpoisoned(&inner.state);
+    let CommitState { segments, sessions, .. } = &mut *st;
+    if let Some(seg) = segments.get_mut(&epoch) {
+        seg.len += bytes;
+    }
+    for rec in recs {
+        let loc = RecLoc {
+            epoch,
+            seq: rec.seq,
+            len: rec.len,
+        };
+        let idx = sessions.entry(rec.sid).or_default();
+        *idx.counts.entry(epoch).or_insert(0) += 1;
+        match rec.kind {
+            RecKind::Meta => {
+                if let Some(old) = idx.meta.replace(loc) {
+                    mark_dead(segments, old);
+                }
+            }
+            RecKind::Step => {
+                if let Some(old) = idx.last_step.replace(loc) {
+                    mark_dead(segments, old);
+                }
+            }
+            RecKind::Terminal => {
+                if let Some(old) = idx.meta.take() {
+                    mark_dead(segments, old);
+                }
+                if let Some(old) = idx.last_step.take() {
+                    mark_dead(segments, old);
+                }
+                if let Some(old) = idx.terminal.replace(loc) {
+                    mark_dead(segments, old);
+                }
+                maybe_collect_terminal(idx, segments);
+            }
+        }
+    }
+    st.durable += n;
+    st.fsyncs += 1;
+    if st.batch_ring.len() < BATCH_RING {
+        st.batch_ring.push(n);
+    } else if let Some(slot) = st.batch_ring.get_mut(st.batch_pos % BATCH_RING) {
+        *slot = n;
+    }
+    st.batch_pos += 1;
+    inner.durable_cv.notify_all();
+}
+
+/// Seal the active segment and open the next epoch. The new file is
+/// created (and the directory synced) *before* the epoch is published,
+/// so a batch never spans two files and a mid-rotation kill leaves at
+/// worst an empty trailing segment.
+fn rotate(inner: &StoreInner, epoch: u64) -> io::Result<File> {
+    let next = epoch + 1;
+    let file = OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(segment_path(&inner.dir, next))?;
+    sync_dir(&inner.dir);
+    let mut st = unpoisoned(&inner.state);
+    st.active_epoch = next;
+    st.segments.entry(next).or_default();
+    Ok(file)
+}
+
+fn committer_loop(inner: &Arc<StoreInner>, mut file: File, mut epoch: u64, mut seg_len: u64) {
+    while let Some(batch) = next_batch(inner) {
+        let bytes = batch.buf.len() as u64;
+        if let Err(e) = write_batch(&mut file, &batch.buf) {
+            fail(inner, &e);
+            return;
+        }
+        apply_batch(inner, epoch, batch.recs, bytes);
+        seg_len += bytes;
+        if seg_len >= inner.cfg.segment_cap {
+            match rotate(inner, epoch) {
+                Ok(next) => {
+                    file = next;
+                    epoch += 1;
+                    seg_len = 0;
+                }
+                Err(e) => {
+                    fail(inner, &e);
+                    return;
+                }
+            }
+        }
+        for _ in 0..16 {
+            let Some(cand) = compact_candidate(inner) else {
+                break;
+            };
+            if let Err(e) = compact_segment(inner, cand) {
+                eprintln!("wal: compaction of segment {cand} failed: {e}");
+                break;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compaction.
+// ---------------------------------------------------------------------
+
+/// Lowest sealed segment whose dead fraction passes the threshold.
+fn compact_candidate(inner: &StoreInner) -> Option<u64> {
+    let st = unpoisoned(&inner.state);
+    for (epoch, m) in st.segments.iter() {
+        if *epoch >= st.active_epoch || m.len == 0 {
+            continue;
+        }
+        let frac = inner.cfg.compact_min_dead;
+        if m.dead >= m.len || (m.dead as f64) >= (m.len as f64) * frac {
+            return Some(*epoch);
+        }
+    }
+    None
+}
+
+struct CompactRec {
+    sid: u64,
+    seq: u64,
+    kind: RecKind,
+    line: String,
+}
+
+/// Phase 1 (no lock): read a sealed segment back as its record lines.
+/// Sealed segments are immutable, so this races with nothing. A decode
+/// failure aborts the compaction — never rewrite what cannot be read.
+fn read_segment_lines(path: &Path) -> io::Result<Vec<CompactRec>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut recs = Vec::new();
+    for line in text.lines() {
+        let r = decode_seg_record(line)
+            .map_err(|e| io::Error::other(format!("sealed segment re-read failed: {e}")))?;
+        recs.push(CompactRec {
+            sid: r.sid,
+            seq: r.seq,
+            kind: rec_kind(&r.body),
+            line: format!("{line}\n"),
+        });
+    }
+    Ok(recs)
+}
+
+/// Phase 2 (lock): decide which records survive, by current liveness.
+fn mark_keeps(inner: &StoreInner, epoch: u64, recs: &[CompactRec]) -> Vec<bool> {
+    let st = unpoisoned(&inner.state);
+    let mut keeps = Vec::with_capacity(recs.len());
+    for r in recs {
+        let loc = RecLoc {
+            epoch,
+            seq: r.seq,
+            len: r.line.len() as u64,
+        };
+        let live = match st.sessions.get(&r.sid) {
+            Some(idx) => rec_live(idx, loc, r.kind),
+            None => false,
+        };
+        keeps.push(live);
+    }
+    keeps
+}
+
+/// Phase 3 (no lock): rewrite the kept records into `<path>.tmp`,
+/// fsync, and atomically rename over the original — or delete the
+/// segment outright when nothing survives. Returns the kept bytes.
+fn rewrite_segment(
+    inner: &StoreInner,
+    epoch: u64,
+    recs: &[CompactRec],
+    keeps: &[bool],
+) -> io::Result<u64> {
+    let path = segment_path(&inner.dir, epoch);
+    let mut kept = String::new();
+    for (rec, keep) in recs.iter().zip(keeps.iter()) {
+        if *keep {
+            kept.push_str(&rec.line);
+        }
+    }
+    if kept.is_empty() {
+        std::fs::remove_file(&path)?;
+        sync_dir(&inner.dir);
+        return Ok(0);
+    }
+    let tmp = tmp_path(&path);
+    let mut f = File::create(&tmp)?;
+    f.write_all(kept.as_bytes())?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, &path)?;
+    sync_dir(&inner.dir);
+    Ok(kept.len() as u64)
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Phase 4 (lock): publish the rewrite. Dropped records leave the
+/// per-session counts; kept records are re-checked for liveness (a
+/// concurrent flush may have superseded them while phase 3 wrote the
+/// file — liveness transitions are irreversible, so a record live in
+/// phase 2 and dead now just counts as dead bytes of the new segment).
+fn finish_compaction(
+    inner: &StoreInner,
+    epoch: u64,
+    recs: &[CompactRec],
+    keeps: &[bool],
+    kept_bytes: u64,
+) {
+    let mut st = unpoisoned(&inner.state);
+    let CommitState { segments, sessions, .. } = &mut *st;
+    let mut new_dead = 0u64;
+    let mut touched: Vec<u64> = Vec::new();
+    for (rec, keep) in recs.iter().zip(keeps.iter()) {
+        let loc = RecLoc {
+            epoch,
+            seq: rec.seq,
+            len: rec.line.len() as u64,
+        };
+        if *keep {
+            if let Some(idx) = sessions.get(&rec.sid) {
+                if !rec_live(idx, loc, rec.kind) {
+                    new_dead += loc.len;
+                }
+            }
+            continue;
+        }
+        touched.push(rec.sid);
+        if let Some(idx) = sessions.get_mut(&rec.sid) {
+            if let Some(c) = idx.counts.get_mut(&epoch) {
+                *c = c.saturating_sub(1);
+                if *c == 0 {
+                    idx.counts.remove(&epoch);
+                }
+            }
+        }
+    }
+    if kept_bytes == 0 {
+        segments.remove(&epoch);
+    } else {
+        let m = segments.entry(epoch).or_default();
+        m.len = kept_bytes;
+        m.dead = new_dead;
+    }
+    touched.sort_unstable();
+    touched.dedup();
+    for sid in touched {
+        let remove = match sessions.get_mut(&sid) {
+            Some(idx) => {
+                if idx.counts.is_empty() {
+                    true
+                } else {
+                    maybe_collect_terminal(idx, segments);
+                    false
+                }
+            }
+            None => false,
+        };
+        if remove {
+            sessions.remove(&sid);
+        }
+    }
+    st.compactions += 1;
+}
+
+fn compact_segment(inner: &StoreInner, epoch: u64) -> io::Result<()> {
+    let path = segment_path(&inner.dir, epoch);
+    let recs = read_segment_lines(&path)?;
+    let keeps = mark_keeps(inner, epoch, &recs);
+    let kept_bytes = rewrite_segment(inner, epoch, &recs, &keeps)?;
+    finish_compaction(inner, epoch, &recs, &keeps, kept_bytes);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Recovery scan.
+// ---------------------------------------------------------------------
+
+struct ScanOutcome {
+    active_epoch: u64,
+    segments: BTreeMap<u64, SegMeta>,
+    sessions: BTreeMap<u64, SessionIdx>,
+    recovered: Vec<RecoveredSession>,
+}
+
+struct SidScan {
+    recs: Vec<(RecLoc, RecKind)>,
+    bodies: Vec<Json>,
+    last_seq: u64,
+}
+
+/// One pass over `wal-*.seg` in epoch order: decode every line,
+/// enforce per-session strictly increasing sequence numbers, and cut
+/// the global suffix at the first invalid byte (truncate that file,
+/// delete every later segment). Leftover `*.seg.tmp` files from an
+/// interrupted compaction are removed. Builds the segment/session
+/// index and the per-session record lists recovery resumes from.
+fn scan_segments(dir: &Path) -> io::Result<ScanOutcome> {
+    let mut epochs: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if name.ends_with(".seg.tmp") {
+            let _ = std::fs::remove_file(entry.path());
+            continue;
+        }
+        if let Some(epoch) = parse_segment_name(name) {
+            epochs.push((epoch, entry.path()));
+        }
+    }
+    epochs.sort_by_key(|(e, _)| *e);
+
+    let mut segments: BTreeMap<u64, SegMeta> = BTreeMap::new();
+    let mut by_sid: BTreeMap<u64, SidScan> = BTreeMap::new();
+    let mut cut = false;
+    for (epoch, path) in &epochs {
+        if cut {
+            // everything after the cut point was written after the bad
+            // byte and is untrusted
+            let _ = std::fs::remove_file(path);
+            continue;
+        }
+        let valid_len = scan_one_segment(*epoch, path, &mut by_sid, &mut cut)?;
+        if cut {
+            let f = OpenOptions::new().write(true).open(path)?;
+            f.set_len(valid_len)?;
+        }
+        let m = segments.entry(*epoch).or_default();
+        m.len = valid_len;
+    }
+
+    let mut sessions: BTreeMap<u64, SessionIdx> = BTreeMap::new();
+    let mut recovered = Vec::new();
+    for (sid, scan) in by_sid {
+        let mut idx = SessionIdx::default();
+        for (loc, _) in &scan.recs {
+            *idx.counts.entry(loc.epoch).or_insert(0) += 1;
+        }
+        let terminal = scan
+            .recs
+            .iter()
+            .rev()
+            .find(|(_, k)| *k == RecKind::Terminal)
+            .map(|(loc, _)| *loc);
+        if let Some(t) = terminal {
+            idx.terminal = Some(t);
+            for (loc, _) in &scan.recs {
+                if *loc != t {
+                    mark_dead(&mut segments, *loc);
+                }
+            }
+            maybe_collect_terminal(&mut idx, &mut segments);
+        } else {
+            for (loc, kind) in &scan.recs {
+                match kind {
+                    RecKind::Meta => {
+                        if let Some(old) = idx.meta.replace(*loc) {
+                            mark_dead(&mut segments, old);
+                        }
+                    }
+                    RecKind::Step => {
+                        if let Some(old) = idx.last_step.replace(*loc) {
+                            mark_dead(&mut segments, old);
+                        }
+                    }
+                    RecKind::Terminal => {}
+                }
+            }
+        }
+        recovered.push(RecoveredSession {
+            sid,
+            records: scan.bodies,
+            next_seq: scan.last_seq + 1,
+            terminal: terminal.is_some(),
+        });
+        sessions.insert(sid, idx);
+    }
+
+    let active_epoch = segments.keys().next_back().copied().unwrap_or(0);
+    Ok(ScanOutcome {
+        active_epoch,
+        segments,
+        sessions,
+        recovered,
+    })
+}
+
+/// Scan one segment file; returns its valid byte length and sets `cut`
+/// when an invalid line was found (the caller truncates this file and
+/// drops the rest of the directory).
+fn scan_one_segment(
+    epoch: u64,
+    path: &Path,
+    by_sid: &mut BTreeMap<u64, SidScan>,
+    cut: &mut bool,
+) -> io::Result<u64> {
+    let mut bytes = Vec::new();
+    File::open(path)?.read_to_end(&mut bytes)?;
+    let mut valid_len = 0usize;
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let rest = bytes.get(pos..).unwrap_or_default();
+        let Some(nl) = rest.iter().position(|b| *b == b'\n') else {
+            // final line has no newline: a torn append
+            *cut = true;
+            break;
+        };
+        let line_bytes = rest.get(..nl).unwrap_or_default();
+        let ok = match std::str::from_utf8(line_bytes) {
+            Ok(line) => match decode_seg_record(line) {
+                Ok(rec) => accept_record(epoch, nl + 1, rec, by_sid),
+                Err(e) => {
+                    eprintln!("wal: wal-{epoch}.seg at byte {pos}: {e}; cutting suffix");
+                    false
+                }
+            },
+            Err(_) => false,
+        };
+        if !ok {
+            *cut = true;
+            break;
+        }
+        pos += nl + 1;
+        valid_len = pos;
+    }
+    if pos < bytes.len() {
+        *cut = true;
+    }
+    Ok(valid_len as u64)
+}
+
+/// Validate the per-session sequence (strictly increasing; gaps are
+/// legal after compaction) and fold the record into the scan.
+fn accept_record(
+    epoch: u64,
+    line_len: usize,
+    rec: SegRecord,
+    by_sid: &mut BTreeMap<u64, SidScan>,
+) -> bool {
+    let loc = RecLoc {
+        epoch,
+        seq: rec.seq,
+        len: line_len as u64,
+    };
+    let kind = rec_kind(&rec.body);
+    match by_sid.get_mut(&rec.sid) {
+        Some(scan) => {
+            if rec.seq <= scan.last_seq {
+                eprintln!(
+                    "wal: session {} sequence not increasing ({} after {}); cutting suffix",
+                    rec.sid, rec.seq, scan.last_seq
+                );
+                return false;
+            }
+            scan.last_seq = rec.seq;
+            scan.recs.push((loc, kind));
+            scan.bodies.push(rec.body);
+            true
+        }
+        None => {
+            let scan = SidScan {
+                recs: vec![(loc, kind)],
+                bodies: vec![rec.body],
+                last_seq: rec.seq,
+            };
+            by_sid.insert(rec.sid, scan);
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::wal::cancelled_body;
+    use std::sync::Arc;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("seg-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn meta() -> Json {
+        Json::obj(vec![("type", Json::str("meta")), ("v", Json::num(1.0))])
+    }
+
+    fn step(n: u64) -> Json {
+        Json::obj(vec![("type", Json::str("step")), ("n", Json::num(n as f64))])
+    }
+
+    fn fast() -> SegmentConfig {
+        SegmentConfig {
+            commit_interval: Duration::ZERO,
+            ..SegmentConfig::default()
+        }
+    }
+
+    #[test]
+    fn seg_record_round_trips_and_rejects_corruption() {
+        let body = step(3);
+        let line = encode_seg_record(9, 4, &body);
+        assert!(line.ends_with('\n'));
+        let rec = decode_seg_record(line.trim_end()).unwrap();
+        assert_eq!(rec.sid, 9);
+        assert_eq!(rec.seq, 4);
+        assert_eq!(rec.body, body);
+        let bad = line.replace("step", "sTep");
+        assert!(decode_seg_record(bad.trim_end()).is_err());
+    }
+
+    #[test]
+    fn segment_names_round_trip() {
+        assert_eq!(parse_segment_name("wal-42.seg"), Some(42));
+        assert_eq!(parse_segment_name("wal-.seg"), None);
+        assert_eq!(parse_segment_name("session-3.wal"), None);
+        let p = segment_path(Path::new("/tmp/x"), 7);
+        assert_eq!(parse_segment_name(p.file_name().unwrap().to_str().unwrap()), Some(7));
+    }
+
+    #[test]
+    fn append_shutdown_reopen_recovers_sessions() {
+        let dir = test_dir("reopen");
+        let (store, recovered) = SegmentStore::open(&dir, fast()).unwrap();
+        assert!(recovered.is_empty());
+        let mut h1 = store.handle(1, 0);
+        h1.append_record(&meta()).unwrap();
+        h1.append_record(&step(0)).unwrap();
+        h1.append_record(&cancelled_body()).unwrap();
+        let mut h2 = store.handle(2, 0);
+        h2.append_record(&meta()).unwrap();
+        h2.append_record(&step(0)).unwrap();
+        assert_eq!(h2.next_seq(), 2);
+        drop(store);
+
+        let (store, mut recovered) = SegmentStore::open(&dir, fast()).unwrap();
+        recovered.sort_by_key(|r| r.sid);
+        assert_eq!(recovered.len(), 2);
+        assert_eq!(recovered[0].sid, 1);
+        assert!(recovered[0].terminal);
+        assert_eq!(recovered[0].records.len(), 3);
+        assert_eq!(recovered[1].sid, 2);
+        assert!(!recovered[1].terminal);
+        assert_eq!(recovered[1].records.len(), 2);
+        assert_eq!(recovered[1].next_seq, 2);
+        assert_eq!(recovered[1].records[1], step(0));
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn group_commit_batches_concurrent_appends() {
+        let dir = test_dir("batch");
+        let cfg = SegmentConfig {
+            commit_interval: Duration::from_millis(250),
+            ..SegmentConfig::default()
+        };
+        let (store, _) = SegmentStore::open(&dir, cfg).unwrap();
+        let store = Arc::new(store);
+        let mut joins = Vec::new();
+        for sid in 0..4u64 {
+            let s = Arc::clone(&store);
+            joins.push(std::thread::spawn(move || {
+                let mut h = s.handle(sid, 0);
+                h.append_record(&step(sid)).unwrap();
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        store.shutdown();
+        let stats = store.stats();
+        assert!(stats.fsyncs >= 1, "at least one flush");
+        assert!(stats.fsyncs <= 2, "4 concurrent appends must batch, got {}", stats.fsyncs);
+        assert!(stats.batch_p95 >= 2, "widest batch must hold >1 record");
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rotation_seals_segments_at_cap() {
+        let dir = test_dir("rotate");
+        let cfg = SegmentConfig {
+            commit_interval: Duration::ZERO,
+            segment_cap: 1,
+            ..SegmentConfig::default()
+        };
+        let (store, _) = SegmentStore::open(&dir, cfg.clone()).unwrap();
+        for sid in 0..5u64 {
+            let mut h = store.handle(sid, 0);
+            h.append_record(&step(sid)).unwrap();
+        }
+        store.shutdown();
+        let stats = store.stats();
+        assert!(stats.segments >= 5, "tiny cap must rotate per batch, got {}", stats.segments);
+        assert_eq!(stats.compactions, 0, "all records live: nothing to compact");
+        drop(store);
+
+        let (store, recovered) = SegmentStore::open(&dir, cfg).unwrap();
+        assert_eq!(recovered.len(), 5);
+        for r in &recovered {
+            assert_eq!(r.records.len(), 1);
+            assert!(!r.terminal);
+        }
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn compaction_collects_superseded_and_terminal_records() {
+        let dir = test_dir("compact");
+        let cfg = SegmentConfig {
+            commit_interval: Duration::ZERO,
+            segment_cap: 1,
+            ..SegmentConfig::default()
+        };
+        let (store, _) = SegmentStore::open(&dir, cfg.clone()).unwrap();
+        let mut h = store.handle(7, 0);
+        h.append_record(&meta()).unwrap();
+        for n in 0..6u64 {
+            h.append_record(&step(n)).unwrap();
+        }
+        h.append_record(&cancelled_body()).unwrap();
+        store.shutdown();
+        let stats = store.stats();
+        assert!(stats.compactions >= 3, "superseded steps must compact, got {}", stats.compactions);
+        assert_eq!(stats.live_bytes, 0, "terminal session fully collected");
+        drop(store);
+
+        let (store, recovered) = SegmentStore::open(&dir, cfg).unwrap();
+        assert!(recovered.is_empty(), "collected terminal session must not reappear");
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_segment_tail_is_truncated() {
+        let dir = test_dir("torn");
+        let (store, _) = SegmentStore::open(&dir, fast()).unwrap();
+        let mut h = store.handle(5, 0);
+        h.append_record(&meta()).unwrap();
+        h.append_record(&step(0)).unwrap();
+        h.append_record(&step(1)).unwrap();
+        drop(store);
+
+        let path = segment_path(&dir, 0);
+        let intact = std::fs::read(&path).unwrap();
+        let torn_line = encode_seg_record(5, 3, &step(2));
+        let half = &torn_line.as_bytes()[..torn_line.len() / 2];
+        let mut bytes = intact.clone();
+        bytes.extend_from_slice(half);
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (store, recovered) = SegmentStore::open(&dir, fast()).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].records.len(), 3, "torn tail must be discarded");
+        assert_eq!(recovered[0].next_seq, 3);
+        drop(store);
+        assert_eq!(std::fs::read(&path).unwrap(), intact, "file truncated to valid prefix");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_record_cuts_every_later_segment() {
+        let dir = test_dir("cut");
+        let cfg = SegmentConfig {
+            commit_interval: Duration::ZERO,
+            segment_cap: 1,
+            ..SegmentConfig::default()
+        };
+        let (store, _) = SegmentStore::open(&dir, cfg.clone()).unwrap();
+        for sid in 0..3u64 {
+            let mut h = store.handle(sid, 0);
+            h.append_record(&step(sid)).unwrap();
+        }
+        store.shutdown();
+        drop(store);
+
+        // flip a body byte in segment 1: CRC fails, suffix is cut
+        let p1 = segment_path(&dir, 1);
+        let text = std::fs::read_to_string(&p1).unwrap();
+        std::fs::write(&p1, text.replace("step", "sTep")).unwrap();
+
+        let (store, recovered) = SegmentStore::open(&dir, cfg).unwrap();
+        assert_eq!(recovered.len(), 1, "only the prefix before the corruption survives");
+        assert_eq!(recovered[0].sid, 0);
+        assert_eq!(std::fs::read(&p1).unwrap().len(), 0, "corrupt segment truncated");
+        assert!(!segment_path(&dir, 2).exists(), "later segments deleted");
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn import_is_one_batch_and_round_trips() {
+        let dir = test_dir("import");
+        let (store, _) = SegmentStore::open(&dir, fast()).unwrap();
+        let bodies = vec![meta(), step(0), step(1)];
+        let n = store.import(9, &bodies).unwrap();
+        assert!(n > 0);
+        assert_eq!(store.import(10, &[]).unwrap(), 0);
+        store.shutdown();
+        let stats = store.stats();
+        assert_eq!(stats.fsyncs, 1, "an imported log commits as one batch");
+        drop(store);
+
+        let (store, recovered) = SegmentStore::open(&dir, fast()).unwrap();
+        assert_eq!(recovered.len(), 1);
+        assert_eq!(recovered[0].sid, 9);
+        assert_eq!(recovered[0].records, bodies);
+        assert_eq!(recovered[0].next_seq, 3);
+        assert!(!recovered[0].terminal);
+        drop(store);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

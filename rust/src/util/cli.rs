@@ -149,13 +149,15 @@ impl Cli {
     }
 
     /// The durability knob for the serving stack: when set, every
-    /// session's events are written-ahead to `<dir>/session-<id>.wal`
-    /// and incomplete sessions are recovered (resumed from their last
-    /// checkpoint) on the next boot. Empty disables durability.
+    /// session's events are written-ahead under `<dir>` (shared
+    /// group-commit segments by default, or one `session-<id>.wal`
+    /// per session via `--wal-mode`) and incomplete sessions are
+    /// recovered (resumed from their last checkpoint) on the next
+    /// boot. Empty disables durability.
     pub fn state_dir_opt(self) -> Self {
         self.opt(
             "state-dir",
-            "directory for per-session write-ahead logs; crash recovery \
+            "directory for session write-ahead logs; crash recovery \
              resumes incomplete sessions from here on boot (empty = off)",
             Some(""),
         )

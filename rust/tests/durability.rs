@@ -1,12 +1,20 @@
 //! Deterministic fault-injection suite for the session WAL (DESIGN.md
-//! §8). The discipline is the same bit-identity `cache_parity.rs` and
-//! `sched_fairness.rs` pin elsewhere: a crash is simulated by truncating
-//! (or corrupting) the log at a record boundary, a "restarted server" is
-//! a fresh scoring stack + runner recovering the directory, and the
-//! assertion is that the recovered run's **entire WAL** — every event,
-//! rng checkpoint, snapshot, ledger total, and the final answer — is
-//! byte-identical to the uninterrupted run's, for every protocol and
-//! every kill point.
+//! §8, §12). The discipline is the same bit-identity `cache_parity.rs`
+//! and `sched_fairness.rs` pin elsewhere: a crash is simulated by
+//! truncating (or corrupting) the log at a record boundary, a
+//! "restarted server" is a fresh scoring stack + runner recovering the
+//! directory, and the assertion is that the recovered run's **entire
+//! WAL** — every event, rng checkpoint, snapshot, ledger total, and the
+//! final answer — is byte-identical to the uninterrupted run's, for
+//! every protocol and every kill point.
+//!
+//! The whole suite runs against both durability backends: the
+//! `MINIONS_WAL_MODE=segmented` env toggle (a CI matrix leg, like
+//! `MINIONS_WAL_META`) flips every default runner to the shared
+//! group-commit segments, and the `segmented_*` tests below pin the
+//! segment-only failure modes (torn segment tails, mid-rotation kills,
+//! compaction, legacy-file migration) explicitly so plain `cargo test`
+//! covers them too.
 //!
 //! Run with `--test-threads=1` (the CI `durability` job does): the
 //! pseudo-backend stacks are cheap but each case spins its own batcher
@@ -17,7 +25,8 @@ mod testutil;
 
 use minions::data::Sample;
 use minions::protocol::{Protocol, ProtocolSession, SessionEvent};
-use minions::server::session::{CancelOutcome, SessionRunner, SessionStatus};
+use minions::server::session::{CancelOutcome, SessionRunner, SessionStatus, WalMode};
+use minions::server::wal::segment::{self, SegmentConfig};
 use minions::server::wal::{self, WalMeta};
 use minions::util::json::Json;
 use minions::util::rng::Rng;
@@ -25,8 +34,9 @@ use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
 use testutil::{
-    case_dir, datasets, factory, protocols, read_wal_lines, spec_for, stack, v2_meta_mode,
-    write_wal, Gate,
+    case_dir, datasets, encode_record_line, factory, protocols, read_wal_lines,
+    reframe_segmented, segment_lines_for, segmented_mode, session_lines, spec_for, stack,
+    v2_meta_mode, write_session_wal, write_wal, Gate,
 };
 
 const SEED: u64 = 11;
@@ -103,7 +113,7 @@ fn run_baseline(case: &str, proto_key: &str, sample: usize) -> Baseline {
     let id = entry.id;
     runner.shutdown();
     s.batcher.stop();
-    let lines = read_wal_lines(&wal::wal_path(&dir, id));
+    let lines = session_lines(&dir, id);
     let outcome = finalized_outcome(&lines);
     Baseline {
         id,
@@ -111,6 +121,93 @@ fn run_baseline(case: &str, proto_key: &str, sample: usize) -> Baseline {
         rng_final,
         outcome,
     }
+}
+
+/// Group-commit knobs for the explicit segmented tests: flush each
+/// batch immediately (no grace window), production-default rotation and
+/// compaction thresholds.
+fn seg_cfg() -> SegmentConfig {
+    SegmentConfig {
+        commit_interval: Duration::ZERO,
+        ..SegmentConfig::default()
+    }
+}
+
+/// [`run_baseline`], but on an explicitly `mode`-backed runner
+/// regardless of the env toggle — the segment-only tests and the
+/// legacy-migration tests both need a backend they can rely on.
+fn run_baseline_mode(case: &str, proto_key: &str, sample: usize, mode: WalMode) -> Baseline {
+    let dir = case_dir(case);
+    let s = stack();
+    let protos = protocols(&s);
+    let ds = datasets();
+    let cfg = seg_cfg();
+    let runner = SessionRunner::with_wal_mode(1, TTL, &dir, mode, cfg).unwrap();
+    let proto = protos.get(proto_key).unwrap();
+    let sample_ref = &ds.get("micro").unwrap().samples[sample];
+    let entry = runner.spawn_durable(
+        proto,
+        sample_ref,
+        Rng::seed_from(SEED ^ sample as u64),
+        None,
+        wal_meta(proto_key, sample),
+    );
+    assert_eq!(
+        entry.wait_done(),
+        SessionStatus::Done,
+        "{proto_key} baseline must finish: {}",
+        entry.status_json()
+    );
+    let rng_final = entry.rng_state();
+    let id = entry.id;
+    runner.shutdown();
+    s.batcher.stop();
+    let lines = match mode {
+        WalMode::Segmented => segment_lines_for(&dir, id),
+        WalMode::PerSession => read_wal_lines(&wal::wal_path(&dir, id)),
+    };
+    let outcome = finalized_outcome(&lines);
+    Baseline {
+        id,
+        lines,
+        rng_final,
+        outcome,
+    }
+}
+
+/// [`recover_dir`], but on an explicitly segmented runner. Record lines
+/// are read only after shutdown, once the group committer has drained
+/// and any compaction has settled.
+fn recover_dir_segmented(
+    dir: &Path,
+    id: u64,
+) -> (
+    minions::server::session::RecoveryReport,
+    Option<(Vec<String>, [u64; 4])>,
+) {
+    let s = stack();
+    let protos = protocols(&s);
+    let ds = datasets();
+    let cfg = seg_cfg();
+    let runner = SessionRunner::with_wal_mode(1, TTL, dir, WalMode::Segmented, cfg).unwrap();
+    let f = factory(&s);
+    let report = runner.recover(&ds, &protos, Some(&f), None);
+    let rng = if report.resumed > 0 {
+        let entry = runner.get(id).expect("recovered session is registered");
+        assert_eq!(
+            entry.wait_done(),
+            SessionStatus::Done,
+            "recovered session must finish: {}",
+            entry.status_json()
+        );
+        Some(entry.rng_state())
+    } else {
+        None
+    };
+    runner.shutdown();
+    s.batcher.stop();
+    let result = rng.map(|r| (segment_lines_for(dir, id), r));
+    (report, result)
 }
 
 /// "Restart the server" over `dir`: fresh stack, recover, drive the
@@ -140,7 +237,7 @@ fn recover_dir(
             entry.status_json()
         );
         let rng = entry.rng_state();
-        Some((read_wal_lines(&wal::wal_path(dir, id)), rng))
+        Some((session_lines(dir, id), rng))
     } else {
         None
     };
@@ -161,7 +258,7 @@ fn kill_and_recover_at_every_record_boundary_is_bit_identical() {
         assert!(n >= 2, "{proto_key}: wal has meta + finalized at least");
         for cut in 1..n {
             let dir = case_dir(&format!("cut-{proto_key}-{cut}"));
-            write_wal(&wal::wal_path(&dir, base.id), &base.lines[..cut], None);
+            write_session_wal(&dir, base.id, &base.lines[..cut], None);
             let (report, result) = recover_dir(&dir, base.id);
             assert_eq!(
                 report.resumed, 1,
@@ -232,7 +329,7 @@ fn torn_and_corrupt_tails_recover_like_the_clean_prefix() {
         // torn: half of the next record made it to disk
         let torn = &base.lines[cut].as_bytes()[..base.lines[cut].len() / 2];
         let dir = case_dir(&format!("torn-{cut}"));
-        write_wal(&wal::wal_path(&dir, base.id), &base.lines[..cut], Some(torn));
+        write_session_wal(&dir, base.id, &base.lines[..cut], Some(torn));
         let (report, result) = recover_dir(&dir, base.id);
         assert_eq!(report.resumed, 1, "torn cut {cut} must resume");
         let (lines, rng) = result.unwrap();
@@ -249,7 +346,7 @@ fn torn_and_corrupt_tails_recover_like_the_clean_prefix() {
             assert_ne!(corrupted, kept[idx], "corruption must actually land");
             kept[idx] = corrupted;
             let dir = case_dir(&format!("corrupt-{cut}"));
-            write_wal(&wal::wal_path(&dir, base.id), &kept, None);
+            write_session_wal(&dir, base.id, &kept, None);
             let (report, result) = recover_dir(&dir, base.id);
             assert_eq!(report.resumed, 1, "corrupt cut {cut} must resume");
             let (lines, rng) = result.unwrap();
@@ -267,8 +364,7 @@ fn terminal_logs_are_skipped_not_resurrected() {
     let base = run_baseline("base-terminal", "minions-2r", 2);
     // finalized log
     let dir = case_dir("terminal-finalized");
-    let path = wal::wal_path(&dir, base.id);
-    write_wal(&path, &base.lines, None);
+    write_session_wal(&dir, base.id, &base.lines, None);
     let s = stack();
     let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
     let report = runner.recover(&datasets(), &protocols(&s), None, None);
@@ -277,25 +373,30 @@ fn terminal_logs_are_skipped_not_resurrected() {
     assert_eq!(runner.replay_skipped_terminal(), 1);
     assert!(runner.get(base.id).is_none(), "must not re-register");
     assert_eq!(runner.active(), 0, "must not consume a slot");
-    assert!(!path.exists(), "terminal log is deleted after the skip");
+    if !segmented_mode() {
+        // per-session cleanup is eager; segmented records wait for
+        // compaction to reclaim their bytes
+        let path = wal::wal_path(&dir, base.id);
+        assert!(!path.exists(), "terminal log is deleted after the skip");
+    }
     runner.shutdown();
     s.batcher.stop();
 
     // cancelled log: mid-run prefix + a cancelled terminal record
     let dir = case_dir("terminal-cancelled");
-    let path = wal::wal_path(&dir, base.id);
     let keep = 2.min(base.lines.len() - 1);
     let mut lines: Vec<String> = base.lines[..keep].to_vec();
-    let cancel_line = wal::encode_record(keep as u64, &wal::cancelled_body());
-    lines.push(cancel_line.trim_end().to_string());
-    write_wal(&path, &lines, None);
+    lines.push(encode_record_line(base.id, keep as u64, &wal::cancelled_body()));
+    write_session_wal(&dir, base.id, &lines, None);
     let s = stack();
     let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
     let report = runner.recover(&datasets(), &protocols(&s), None, None);
     assert_eq!(report.resumed, 0);
     assert_eq!(report.skipped_terminal, 1);
     assert!(runner.get(base.id).is_none(), "cancelled session never reappears");
-    assert!(!path.exists());
+    if !segmented_mode() {
+        assert!(!wal::wal_path(&dir, base.id).exists());
+    }
     runner.shutdown();
     s.batcher.stop();
 }
@@ -359,12 +460,16 @@ fn backoff_streaks_coalesce_to_one_record_and_backoff_tails_resume() {
     );
     assert_eq!(entry.wait_done(), SessionStatus::Done);
     assert_eq!(entry.backoffs(), 4);
+    // the WAL satellite of the status body: a session whose log opened
+    // cleanly reports itself durable
+    let status = Json::parse(&entry.status_json()).unwrap();
+    assert_eq!(status.get("durable").and_then(Json::as_bool), Some(true));
     let id = entry.id;
     runner.shutdown();
 
     // 4 backed-off retries coalesced into ONE backoff record:
     // meta, backoff, finalized
-    let lines = read_wal_lines(&wal::wal_path(&dir, id));
+    let lines = session_lines(&dir, id);
     let kinds: Vec<String> = lines
         .iter()
         .map(|l| {
@@ -385,7 +490,7 @@ fn backoff_streaks_coalesce_to_one_record_and_backoff_tails_resume() {
 
     // a log whose last record is the backoff checkpoint must resume
     let dir2 = case_dir("backoff-tail");
-    write_wal(&wal::wal_path(&dir2, id), &lines[..2], None);
+    write_session_wal(&dir2, id, &lines[..2], None);
     let runner = SessionRunner::with_wal(1, TTL, &dir2).unwrap();
     let s = stack();
     let mut protos = protocols(&s);
@@ -483,7 +588,7 @@ fn cancelled_durable_session_never_reappears_after_restart() {
     runner.shutdown();
 
     // the WAL ends with the cancelled record
-    let lines = read_wal_lines(&wal::wal_path(&dir, id));
+    let lines = session_lines(&dir, id);
     let last = Json::parse(lines.last().unwrap()).unwrap();
     assert_eq!(
         last.get("body").and_then(|b| b.get("type")).and_then(Json::as_str),
@@ -508,4 +613,184 @@ fn cancelled_durable_session_never_reappears_after_restart() {
     assert!(runner.get(id).is_none());
     runner.shutdown();
     s.batcher.stop();
+}
+
+// ---------------------------------------------------------------------
+// Segment-only failure modes (DESIGN.md §12), pinned explicitly so a
+// plain `cargo test` covers the segmented backend even when the
+// MINIONS_WAL_MODE matrix leg is not active.
+// ---------------------------------------------------------------------
+
+/// A torn tail inside a shared segment — the state a crash mid
+/// group-commit leaves — is discarded, and recovery from the intact
+/// prefix converges to the bit-identical baseline.
+#[test]
+fn segmented_torn_segment_tail_recovers_bit_identical() {
+    let base = run_baseline_mode("seg-base-torn", "minions-2r", 1, WalMode::Segmented);
+    let n = base.lines.len();
+    for cut in 1..n {
+        let torn = &base.lines[cut].as_bytes()[..base.lines[cut].len() / 2];
+        let dir = case_dir(&format!("seg-torn-{cut}"));
+        write_wal(&segment::segment_path(&dir, 0), &base.lines[..cut], Some(torn));
+        let (report, result) = recover_dir_segmented(&dir, base.id);
+        assert_eq!(report.resumed, 1, "seg torn cut {cut} must resume");
+        let (lines, rng) = result.unwrap();
+        assert_eq!(lines, base.lines, "seg torn cut {cut}: bit-identical records");
+        assert_eq!(rng, base.rng_final, "seg torn cut {cut}: rng state");
+    }
+}
+
+/// A kill mid-rotation: the crash lands right after rotation created
+/// the next segment file, so the intact records are split across sealed
+/// segments and the fresh active segment holds only a torn first
+/// record. Recovery must stitch the global order back together; the
+/// resumed continuation (which lands in the active segment, beyond
+/// compaction's reach) must be byte-identical to the baseline's suffix.
+#[test]
+fn segmented_mid_rotation_kill_recovers() {
+    let base = run_baseline_mode("seg-base-rot", "minions-2r", 0, WalMode::Segmented);
+    let n = base.lines.len();
+    assert!(n >= 3, "multi-round baseline expected");
+    for cut in 2..n {
+        let split = cut / 2;
+        let torn = &base.lines[cut].as_bytes()[..base.lines[cut].len() / 2];
+        let dir = case_dir(&format!("seg-rot-{cut}"));
+        write_wal(&segment::segment_path(&dir, 0), &base.lines[..split], None);
+        write_wal(&segment::segment_path(&dir, 1), &base.lines[split..cut], None);
+        write_wal(&segment::segment_path(&dir, 2), &[], Some(torn));
+        let (report, result) = recover_dir_segmented(&dir, base.id);
+        assert_eq!(report.resumed, 1, "seg rot cut {cut} must resume");
+        let (lines, rng) = result.unwrap();
+        assert_eq!(
+            &lines[lines.len() - (n - cut)..],
+            &base.lines[cut..],
+            "seg rot cut {cut}: continuation is byte-identical"
+        );
+        assert_eq!(rng, base.rng_final, "seg rot cut {cut}: rng state");
+        assert_eq!(finalized_outcome(&lines), base.outcome);
+    }
+}
+
+/// Recovery after compaction: a sealed segment holding only a finished
+/// session is fully dead once scanned; a restart must collect it while
+/// the incomplete session resumes, and the resumed continuation must
+/// still be byte-identical.
+#[test]
+fn segmented_compaction_collects_dead_segments_and_recovery_converges() {
+    let base = run_baseline_mode("seg-base-compact", "minions-2r", 2, WalMode::Segmented);
+    let n = base.lines.len();
+    let cut = 2;
+    assert!(n > cut, "need records beyond the cut");
+    let live_id = base.id + 1;
+    let live = reframe_segmented(&base.lines, live_id);
+
+    // crash state: segment 0 = the finished session (every byte dead
+    // once scanned), segment 1 (active) = the live session's prefix
+    let dir = case_dir("seg-compact");
+    write_wal(&segment::segment_path(&dir, 0), &base.lines, None);
+    write_wal(&segment::segment_path(&dir, 1), &live[..cut], None);
+
+    let s = stack();
+    let protos = protocols(&s);
+    let ds = datasets();
+    let cfg = seg_cfg();
+    let runner = SessionRunner::with_wal_mode(1, TTL, &dir, WalMode::Segmented, cfg).unwrap();
+    let f = factory(&s);
+    let report = runner.recover(&ds, &protos, Some(&f), None);
+    assert_eq!(report.skipped_terminal, 1, "finished session must not resurrect");
+    assert_eq!(report.resumed, 1, "live session must resume");
+    let entry = runner.get(live_id).expect("live session registered");
+    assert_eq!(entry.wait_done(), SessionStatus::Done);
+    let rng = entry.rng_state();
+    runner.shutdown();
+    let stats = runner.wal_stats();
+    assert!(
+        stats.segmented.expect("segmented stats").compactions >= 1,
+        "fully dead segment must be collected"
+    );
+    s.batcher.stop();
+
+    let lines = segment_lines_for(&dir, live_id);
+    assert!(
+        segment_lines_for(&dir, base.id).is_empty(),
+        "the finished session's records are reclaimed"
+    );
+    assert_eq!(
+        &lines[lines.len() - (n - cut)..],
+        &live[cut..],
+        "resumed continuation is byte-identical"
+    );
+    assert_eq!(rng, base.rng_final);
+    assert_eq!(finalized_outcome(&lines), base.outcome);
+
+    // a second restart: the collected session stays gone, the completed
+    // one is terminal — nothing resumes
+    let (report2, result2) = recover_dir_segmented(&dir, live_id);
+    assert_eq!(report2.resumed, 0);
+    assert_eq!(report2.skipped_terminal, 1);
+    assert!(result2.is_none());
+}
+
+/// Legacy migration: per-session WAL files cut mid-run are what an
+/// upgraded server finds on its first segmented boot. Recovery imports
+/// the prefix into the shared segments as one commit batch, deletes the
+/// legacy file, resumes the session, and converges to the per-session
+/// baseline's records re-framed as segment records.
+#[test]
+fn legacy_per_session_wal_migrates_into_segments_and_converges() {
+    let base = run_baseline_mode("migrate-base", "minions-2r", 0, WalMode::PerSession);
+    let n = base.lines.len();
+    for cut in 1..n {
+        let dir = case_dir(&format!("migrate-{cut}"));
+        write_wal(&wal::wal_path(&dir, base.id), &base.lines[..cut], None);
+        let (report, result) = recover_dir_segmented(&dir, base.id);
+        assert_eq!(report.resumed, 1, "migrate cut {cut} must resume");
+        assert!(
+            !wal::wal_path(&dir, base.id).exists(),
+            "legacy file is deleted once its records are in the segments"
+        );
+        let (lines, rng) = result.unwrap();
+        assert_eq!(
+            lines,
+            reframe_segmented(&base.lines, base.id),
+            "migrate cut {cut}: records"
+        );
+        assert_eq!(rng, base.rng_final, "migrate cut {cut}: rng state");
+    }
+}
+
+/// The checked-in v1 fixture survives the backend upgrade too: a
+/// segmented boot over a state dir holding `session-901.wal` imports
+/// it, preserves its v1 meta record, and resumes it.
+#[test]
+fn checked_in_v1_fixture_migrates_into_segments() {
+    const FIX_ID: u64 = 901;
+    let dir = case_dir("seg-v1-fixture");
+    let fixture = include_str!("fixtures/session-901.wal");
+    std::fs::write(wal::wal_path(&dir, FIX_ID), fixture).expect("install fixture");
+    let s = stack();
+    let ds = datasets();
+    let mut protos = protocols(&s);
+    protos.insert("fixture".into(), Arc::new(BackoffTimes { n: 0 }));
+    let cfg = seg_cfg();
+    let runner = SessionRunner::with_wal_mode(1, TTL, &dir, WalMode::Segmented, cfg).unwrap();
+    let report = runner.recover(&ds, &protos, None, None);
+    assert_eq!(report.resumed, 1, "fixture must migrate and resume");
+    assert!(
+        !wal::wal_path(&dir, FIX_ID).exists(),
+        "legacy fixture file replaced by segment records"
+    );
+    let entry = runner.get(FIX_ID).expect("fixture session registered");
+    assert_eq!(entry.wait_done(), SessionStatus::Done);
+    runner.shutdown();
+    s.batcher.stop();
+    let lines = segment_lines_for(&dir, FIX_ID);
+    assert!(lines.len() >= 2, "completion appended records");
+    let meta = Json::parse(&lines[0]).unwrap();
+    let body = meta.get("body").expect("meta body");
+    assert_eq!(
+        body.get("version").and_then(Json::as_u64),
+        Some(1),
+        "v1 meta preserved through migration"
+    );
 }

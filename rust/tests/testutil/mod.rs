@@ -23,6 +23,8 @@ use minions::protocol::{
 use minions::rag::{Rag, Retriever};
 use minions::runtime::{Backend, EmbedRequest, Manifest, ScoreRequest, ScoreResponse};
 use minions::sched::DynamicBatcher;
+use minions::server::wal::{self, segment};
+use minions::util::json::Json;
 use minions::util::rng::{mix64, Rng};
 use minions::vocab::{BATCH, CHUNK, QLEN};
 use std::collections::HashMap;
@@ -313,4 +315,87 @@ pub fn write_wal(path: &Path, lines: &[String], torn_tail: Option<&[u8]>) {
         f.write_all(tail).unwrap();
     }
     f.flush().unwrap();
+}
+
+/// `MINIONS_WAL_MODE=segmented` flips the durability suite's runners to
+/// the shared segmented WAL (the CI matrix runs both backends); unset
+/// (or any other value) means per-session files.
+pub fn segmented_mode() -> bool {
+    std::env::var("MINIONS_WAL_MODE").map(|v| v == "segmented").unwrap_or(false)
+}
+
+/// Every segment file under `dir`, in epoch order — the order the
+/// boot-time scan reads them, so concatenating their records gives the
+/// global append order.
+pub fn segment_files(dir: &Path) -> Vec<PathBuf> {
+    let mut epochs: Vec<u64> = fs::read_dir(dir)
+        .expect("read segment dir")
+        .filter_map(|e| segment::parse_segment_name(e.ok()?.file_name().to_str()?))
+        .collect();
+    epochs.sort_unstable();
+    epochs.iter().map(|e| segment::segment_path(dir, *e)).collect()
+}
+
+/// One session's record lines collected from the shared segments in
+/// storage order. Lines keep their full framing (`crc`, `seq`, `sid`,
+/// `body`), so they are byte-comparable across kill/recover cycles.
+pub fn segment_lines_for(dir: &Path, sid: u64) -> Vec<String> {
+    let mut out = Vec::new();
+    for path in segment_files(dir) {
+        for line in read_wal_lines(&path) {
+            let v = Json::parse(&line).expect("parse segment record");
+            if v.get("sid").and_then(Json::as_u64) == Some(sid) {
+                out.push(line);
+            }
+        }
+    }
+    out
+}
+
+/// A session's record lines regardless of backend: the per-session
+/// file's lines verbatim, or its records gathered from the shared
+/// segments.
+pub fn session_lines(dir: &Path, id: u64) -> Vec<String> {
+    if segmented_mode() {
+        segment_lines_for(dir, id)
+    } else {
+        read_wal_lines(&wal::wal_path(dir, id))
+    }
+}
+
+/// Write a session's crash state the way the active backend would leave
+/// it: a per-session WAL file, or a single `wal-0.seg` shared segment
+/// holding the same framed lines (plus an optional torn tail).
+pub fn write_session_wal(dir: &Path, id: u64, lines: &[String], torn_tail: Option<&[u8]>) {
+    if segmented_mode() {
+        write_wal(&segment::segment_path(dir, 0), lines, torn_tail);
+    } else {
+        write_wal(&wal::wal_path(dir, id), lines, torn_tail);
+    }
+}
+
+/// Encode `body` as record `seq` of session `id` in the active
+/// backend's framing, newline-stripped to match `read_wal_lines`.
+pub fn encode_record_line(id: u64, seq: u64, body: &Json) -> String {
+    let line = if segmented_mode() {
+        segment::encode_seg_record(id, seq, body)
+    } else {
+        wal::encode_record(seq, body)
+    };
+    line.trim_end().to_string()
+}
+
+/// Re-frame per-session (or foreign-sid) record lines as session `sid`
+/// segment records, `seq` renumbered from zero — what `import` writes
+/// when a legacy file migrates into the shared segments.
+pub fn reframe_segmented(lines: &[String], sid: u64) -> Vec<String> {
+    lines
+        .iter()
+        .enumerate()
+        .map(|(i, line)| {
+            let v = Json::parse(line).expect("parse record");
+            let body = v.get("body").expect("record body");
+            segment::encode_seg_record(sid, i as u64, body).trim_end().to_string()
+        })
+        .collect()
 }
