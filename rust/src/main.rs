@@ -4,10 +4,13 @@
 //!   info                     print stack/artifact info
 //!   run                      run one protocol on one dataset
 //!   serve                    start the HTTP serving front-end
+//!   gateway                  front a fleet of serve workers: consistent-hash
+//!                            session routing, fleet /metrics, health probes,
+//!                            and WAL migration off dead workers (DESIGN.md §13)
 //!   bench <exhibit>          regenerate a paper table/figure
 //!                            (table1|table2|table3|fig3|fig4|fig5|fig6|fig8|summarization)
-//!                            or the runtime perf report (hotpath; `--json`
-//!                            writes BENCH_runtime_hotpath.json)
+//!                            or a perf report (hotpath → BENCH_runtime_hotpath.json,
+//!                            fleet → BENCH_fleet.json; with `--json`)
 //!   lint                     run the repo-invariant static analysis pass
 //!                            (DESIGN.md §10; `--ci` gates, `--write-baseline` ratchets)
 //!
@@ -27,6 +30,7 @@ use minions::data;
 use minions::eval::run_protocol_parallel;
 use minions::exp::Exp;
 use minions::protocol::{ProtocolSpec, RoundStrategy};
+use minions::server::gateway::{GatewayConfig, GatewayServer};
 use minions::server::session::{SessionRunner, WalMode};
 use minions::server::wal::segment::SegmentConfig;
 use minions::server::{Server, ServerState};
@@ -46,12 +50,13 @@ fn main() {
         "info" => cmd_info(args),
         "run" => cmd_run(args),
         "serve" => cmd_serve(args),
+        "gateway" => cmd_gateway(args),
         "bench" => cmd_bench(args),
         "lint" => cmd_lint(args),
         _ => {
             eprintln!(
                 "minions {} — local/remote LM collaboration (paper reproduction)\n\n\
-                 USAGE: minions <info|run|serve|bench|lint> [options]\n\
+                 USAGE: minions <info|run|serve|gateway|bench|lint> [options]\n\
                  Try `minions run --help`.",
                 minions::version()
             );
@@ -269,6 +274,17 @@ fn cmd_serve(args: Vec<String>) -> i32 {
                 "segmented mode: group-commit grace window in milliseconds \
                  (0 = flush each batch immediately)",
                 Some("1"),
+            )
+            .opt(
+                "session-id-base",
+                "start session ids at this value; give fleet workers disjoint \
+                 bases so migrated sessions keep their ids collision-free",
+                Some("0"),
+            )
+            .flag(
+                "synthetic-artifacts",
+                "write a deterministic synthetic artifact set if none is present \
+                 (CI fleet drills boot real workers without `make artifacts`)",
             ),
     );
     let a = match cli.parse_from(args) {
@@ -300,6 +316,26 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             a.parse_num("workers", 4usize),
         )
     };
+
+    if a.flag("synthetic-artifacts") {
+        let dir = minions::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            // every capacity the model profiles can request (local 64-256,
+            // remote extraction up to 1024), so any alias boots
+            match minions::runtime::synth::write_synthetic_artifacts(
+                &dir,
+                &[64, 128, 256, 1024],
+                128,
+                seed,
+            ) {
+                Ok(_) => println!("wrote synthetic artifacts to {}", dir.display()),
+                Err(e) => {
+                    eprintln!("startup failed: synthetic artifacts: {e}");
+                    return 1;
+                }
+            }
+        }
+    }
 
     let mut exp = match exp_from_args(&backend_kind, &a, seed) {
         Ok(e) => e,
@@ -367,6 +403,12 @@ fn cmd_serve(args: Vec<String>) -> i32 {
             }
         }
     };
+    // fleet deployments give each worker a disjoint id range so a
+    // session migrated onto a peer keeps its id without collision
+    let id_base: u64 = a.parse_num("session-id-base", 0u64);
+    if id_base > 0 {
+        sessions.claim_id_floor(id_base);
+    }
     let metrics: Arc<minions::server::Metrics> = Default::default();
     if !state_dir.is_empty() {
         // v2 meta records resume straight from their embedded spec via
@@ -423,12 +465,27 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
     let cli = backend_opt(
         Cli::new("minions bench", "regenerate a paper exhibit or perf report")
             .parallel_opt()
-            .flag("json", "hotpath: write the minions-bench-v1 JSON report")
-            .opt("out", "hotpath: report path", Some("BENCH_runtime_hotpath.json"))
+            .flag("json", "hotpath/fleet: write the minions-bench-v1 JSON report")
+            .opt(
+                "out",
+                "hotpath/fleet: report path (default BENCH_<exhibit>.json)",
+                None,
+            )
             .opt("iters", "hotpath: timed kernel iterations per capacity", None)
             .opt(
                 "scale-requests",
                 "hotpath: score requests per engine-scaling point",
+                None,
+            )
+            .opt(
+                "fleet-sessions",
+                "fleet: sessions per worker at every scaling point",
+                None,
+            )
+            .opt("fleet-rounds", "fleet: protocol steps per session", None)
+            .opt(
+                "fleet-step-ms",
+                "fleet: service time per step, milliseconds",
                 None,
             ),
     );
@@ -441,6 +498,9 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
     };
     if exhibit == "hotpath" {
         return cmd_bench_hotpath(&a);
+    }
+    if exhibit == "fleet" {
+        return cmd_bench_fleet(&a);
     }
     let seed: u64 = a.parse_num("seed", 42);
     let n: usize = a.parse_num("n", 16);
@@ -526,6 +586,122 @@ fn cmd_bench_hotpath(a: &Args) -> i32 {
         println!("wrote {}", path.display());
     } else {
         println!("{report}");
+    }
+    0
+}
+
+/// `minions bench fleet [--json] [--out PATH]` — the gateway scaling
+/// exhibit (DESIGN.md §13): boots an in-process fleet (W workers behind
+/// one gateway, W ∈ {1,2,4}) and measures session throughput through
+/// the gateway with pre-balanced routing. CI gates on
+/// `scaling.speedup_at_max` ≥ 3.2.
+fn cmd_bench_fleet(a: &Args) -> i32 {
+    let mut opts = minions::perf::fleet::FleetOptions {
+        seed: a.parse_num("seed", 42u64),
+        ..Default::default()
+    };
+    opts.sessions_per_worker = a
+        .parse_num("fleet-sessions", opts.sessions_per_worker)
+        .max(1);
+    opts.rounds = a.parse_num("fleet-rounds", opts.rounds).max(1);
+    opts.step_ms = a.parse_num("fleet-step-ms", opts.step_ms).max(1);
+    let report = match minions::perf::fleet::fleet_report(&opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            return 1;
+        }
+    };
+    if a.flag("json") {
+        let path = std::path::PathBuf::from(a.get_or("out", "BENCH_fleet.json"));
+        if let Err(e) = minions::perf::write_report(&path, &report) {
+            eprintln!("bench failed: {e}");
+            return 1;
+        }
+        println!("wrote {}", path.display());
+    } else {
+        println!("{report}");
+    }
+    0
+}
+
+/// `minions gateway --workers a,b,... [--state-dir DIR]` — the fleet
+/// front-end (DESIGN.md §13). Routes sessions across workers by
+/// consistent hash, proxies event streams byte-for-byte, aggregates
+/// fleet /metrics, health-checks the workers, and — when the fleet's
+/// state-dir layout is known — migrates a dead worker's WAL-durable
+/// sessions onto live peers mid-flight.
+fn cmd_gateway(args: Vec<String>) -> i32 {
+    let cli = Cli::new("minions gateway", "fleet front-end for `minions serve` workers")
+        .opt(
+            "workers",
+            "comma-separated worker addresses, e.g. 127.0.0.1:7172,127.0.0.1:7173 \
+             (order fixes the hash ring and the worker-<i> state-dir layout)",
+            None,
+        )
+        .opt("port", "listen port (0 = ephemeral)", Some("7171"))
+        .opt("conn-workers", "connection worker threads", Some("8"))
+        .opt(
+            "state-dir",
+            "fleet state root: worker i's WAL dir is <root>/worker-<i> \
+             (enables migration off dead workers; empty = routing only)",
+            Some(""),
+        )
+        .opt(
+            "probe-interval-ms",
+            "health-probe period, milliseconds",
+            Some("1000"),
+        )
+        .opt(
+            "probe-fails",
+            "consecutive failed probes before a worker is declared dead",
+            Some("3"),
+        )
+        .opt("max-requests", "stop after N requests (0 = forever)", Some("0"));
+    let a = match cli.parse_from(args) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return 2;
+        }
+    };
+    let workers: Vec<String> = a
+        .get_or("workers", "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect();
+    if workers.is_empty() {
+        eprintln!("gateway needs --workers addr[,addr...]");
+        return 2;
+    }
+    let mut cfg = GatewayConfig::new(workers);
+    let state_root = a.get_or("state-dir", "");
+    if !state_root.is_empty() {
+        cfg.state_root = Some(std::path::PathBuf::from(state_root));
+    }
+    cfg.probe_interval =
+        std::time::Duration::from_millis(a.parse_num("probe-interval-ms", 1000u64).max(10));
+    cfg.probe_fails = a.parse_num("probe-fails", 3u32).max(1);
+    let n_workers = cfg.workers.len();
+    let port: u16 = a.parse_num("port", 7171u16);
+    let conn_workers: usize = a.parse_num("conn-workers", 8usize).max(1);
+    let server = match GatewayServer::bind(cfg, &format!("127.0.0.1:{port}"), conn_workers) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("bind failed: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "minions gateway on http://{} fronting {n_workers} worker(s) ({conn_workers} conn workers)",
+        server.addr
+    );
+    let max: u64 = a.parse_num("max-requests", 0);
+    if let Err(e) = server.serve(if max == 0 { None } else { Some(max) }) {
+        eprintln!("gateway error: {e}");
+        return 1;
     }
     0
 }

@@ -1,0 +1,384 @@
+//! `minions bench fleet` — gateway scaling exhibit (DESIGN.md §13).
+//!
+//! Boots an in-process fleet — W worker [`Server`]s, each with its own
+//! single-threaded [`SessionRunner`], behind one [`GatewayServer`] — and
+//! measures session throughput through the gateway at W ∈ {1, 2, 4}.
+//!
+//! The workload is an explicit **service-time model**, not a model
+//! inference: each session performs `rounds` steps of `step_ms`
+//! wall-clock milliseconds each (a `thread::sleep` holding the session
+//! worker, exactly as a real scoring step holds it) and then finalizes
+//! with the sample's ground-truth answer. Sleeping instead of burning
+//! CPU keeps the exhibit honest on small CI runners: with compute-bound
+//! steps a 4-worker fleet on 4 cores would be measuring the core count,
+//! not the gateway. What the bench *does* exercise end-to-end is the
+//! gateway hot path — routing, create-capture, table updates, and
+//! status proxying all sit inside the timed region.
+//!
+//! Each point drives `sessions_per_worker × W` sessions, **pre-balanced**
+//! with [`Gateway::plan_route`]: sample ids are chosen so the hash ring
+//! assigns exactly `sessions_per_worker` sessions to every worker.
+//! Unbalanced hash skew would otherwise cap 4-worker speedup well below
+//! the fleet's capacity and the exhibit would measure the skew of one
+//! particular key set rather than gateway overhead. The reported
+//! speedup is throughput at W workers over throughput at 1 — near-linear
+//! (≥ 3.2× at 4) is the acceptance bar wired into CI.
+
+use crate::data::{micro, Answer, Dataset, Sample};
+use crate::protocol::{Outcome, Protocol, ProtocolSession, SessionEvent};
+use crate::server::gateway::{Gateway, GatewayConfig, GatewayServer};
+use crate::server::session::SessionRunner;
+use crate::server::{http_get, http_post, Metrics, Server, ServerState};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+pub struct FleetOptions {
+    /// fleet sizes to measure (throughput at the first point is the
+    /// speedup baseline)
+    pub worker_points: Vec<usize>,
+    /// sessions routed to each worker at every point — load per worker
+    /// is constant, so ideal scaling is flat wall-clock
+    pub sessions_per_worker: usize,
+    /// protocol steps per session
+    pub rounds: usize,
+    /// service time per step, milliseconds
+    pub step_ms: u64,
+    /// concurrent client threads driving the gateway
+    pub clients: usize,
+    pub seed: u64,
+}
+
+impl Default for FleetOptions {
+    fn default() -> FleetOptions {
+        FleetOptions {
+            worker_points: vec![1, 2, 4],
+            sessions_per_worker: 20,
+            rounds: 4,
+            step_ms: 5,
+            clients: 8,
+            seed: 42,
+        }
+    }
+}
+
+/// The service-time workload: `rounds` steps of `step` each, then
+/// finalize with the sample's own truth (so accuracy gauges stay 1.0
+/// and the exhibit never depends on model quality).
+struct SpinProtocol {
+    rounds: usize,
+    step: Duration,
+}
+
+impl Protocol for SpinProtocol {
+    fn name(&self) -> String {
+        "spin".to_string()
+    }
+
+    fn session(&self, sample: &Sample) -> Box<dyn ProtocolSession> {
+        Box::new(SpinSession {
+            truth: sample.query.answer.clone(),
+            rounds: self.rounds.max(1),
+            step: self.step,
+            done: 0,
+        })
+    }
+}
+
+struct SpinSession {
+    truth: Answer,
+    rounds: usize,
+    step: Duration,
+    done: usize,
+}
+
+impl ProtocolSession for SpinSession {
+    fn step(&mut self, _rng: &mut Rng) -> Result<SessionEvent> {
+        std::thread::sleep(self.step);
+        self.done += 1;
+        if self.done < self.rounds {
+            Ok(SessionEvent::RoundExecuted {
+                round: self.done,
+                jobs: 1,
+                survivors: 1,
+            })
+        } else {
+            let mut ledger = crate::cost::Ledger::default();
+            ledger.remote_msg(64, 16);
+            Ok(SessionEvent::Finalized(Outcome {
+                answer: self.truth.clone(),
+                ledger,
+                rounds: self.rounds,
+                transcript: Vec::new(),
+            }))
+        }
+    }
+}
+
+/// One in-process worker: a full HTTP server over a single-threaded
+/// session runner, serving the spin protocol and the shared dataset.
+fn boot_worker(dataset: &Dataset, opts: &FleetOptions) -> Result<(String, Arc<ServerState>)> {
+    let mut datasets = HashMap::new();
+    datasets.insert("micro".to_string(), dataset.clone());
+    let mut protocols: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+    protocols.insert(
+        "spin".to_string(),
+        Arc::new(SpinProtocol {
+            rounds: opts.rounds,
+            step: Duration::from_millis(opts.step_ms),
+        }),
+    );
+    let state = Arc::new(ServerState {
+        datasets,
+        protocols,
+        aliases: HashMap::new(),
+        factory: None,
+        metrics: Arc::new(Metrics::default()),
+        seed: opts.seed,
+        batcher: None,
+        cache: None,
+        engine: None,
+        sessions: SessionRunner::new(1),
+        max_sessions: 0,
+    });
+    let server = Server::bind(Arc::clone(&state), "127.0.0.1:0", opts.clients.max(4))?;
+    let addr = server.addr.to_string();
+    // bench servers are driven to a known request count and then
+    // abandoned; the thread parks on accept() until process exit
+    std::thread::Builder::new()
+        .name(format!("fleet-worker-{addr}"))
+        .spawn(move || {
+            let _ = server.serve(None);
+        })
+        .map_err(|e| anyhow!("cannot spawn worker thread: {e}"))?;
+    Ok((addr, state))
+}
+
+/// Sample ids pre-balanced over the ring: exactly `per_worker` ids
+/// routed to each of the fleet's workers.
+fn balanced_plan(gw: &Gateway, n_workers: usize, per_worker: usize, n_samples: usize) -> Result<Vec<usize>> {
+    let mut counts = vec![0usize; n_workers];
+    let mut plan = Vec::with_capacity(n_workers * per_worker);
+    for id in 0..n_samples {
+        let Some(w) = gw.plan_route("spin", "micro", id as u64) else {
+            continue;
+        };
+        if counts.get(w).copied().unwrap_or(per_worker) < per_worker {
+            if let Some(c) = counts.get_mut(w) {
+                *c += 1;
+            }
+            plan.push(id);
+        }
+        if plan.len() == n_workers * per_worker {
+            return Ok(plan);
+        }
+    }
+    Err(anyhow!(
+        "could not balance {per_worker} sessions/worker across {n_workers} workers \
+         from {n_samples} candidate sample ids (got {})",
+        plan.len()
+    ))
+}
+
+/// Drive one fleet size: create every planned session through the
+/// gateway, then poll (through the gateway) until all are terminal.
+/// Returns the wall-clock seconds for the whole batch.
+fn drive_point(gateway_addr: &str, plan: &[usize], clients: usize) -> Result<f64> {
+    let t0 = Instant::now();
+    let mut sids = Vec::with_capacity(plan.len());
+    for id in plan {
+        let body = format!("{{\"protocol\":\"spin\",\"dataset\":\"micro\",\"sample\":{id}}}");
+        let resp = http_post(gateway_addr, "/v1/sessions", &body)?;
+        let sid = Json::parse(&resp)
+            .ok()
+            .and_then(|j| j.get("session_id").and_then(Json::as_u64))
+            .ok_or_else(|| anyhow!("create through gateway failed: {resp}"))?;
+        sids.push(sid);
+    }
+    let shards: Vec<Vec<u64>> = (0..clients.max(1))
+        .map(|c| sids.iter().skip(c).step_by(clients.max(1)).copied().collect())
+        .collect();
+    let mut handles = Vec::new();
+    for shard in shards {
+        let addr = gateway_addr.to_string();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            for sid in shard {
+                loop {
+                    let status = http_get(&addr, &format!("/v1/sessions/{sid}"))?;
+                    let s = Json::parse(&status)
+                        .ok()
+                        .and_then(|j| j.get("status").and_then(|v| v.as_str().map(String::from)))
+                        .unwrap_or_default();
+                    match s.as_str() {
+                        "done" => break,
+                        "failed" | "cancelled" => {
+                            return Err(anyhow!("session {sid} ended '{s}'"))
+                        }
+                        _ => std::thread::sleep(Duration::from_millis(2)),
+                    }
+                }
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow!("client thread panicked"))??;
+    }
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+/// Measure the fleet scaling curve and build the `minions-bench-v1`
+/// report.
+pub fn fleet_report(opts: &FleetOptions) -> Result<Json> {
+    let max_workers = opts.worker_points.iter().copied().max().unwrap_or(1);
+    // enough candidate ids that every worker can reach its quota even
+    // under worst-case ring skew
+    let n_samples = (opts.sessions_per_worker * max_workers * 16).max(256);
+    let dataset = micro::multistep_sweep(2, n_samples, opts.seed);
+    let mut points = Vec::new();
+    let mut baseline: Option<f64> = None;
+    let mut last_gateway: Option<Arc<Gateway>> = None;
+    for &w in &opts.worker_points {
+        let mut addrs = Vec::with_capacity(w);
+        for _ in 0..w {
+            let (addr, _state) = boot_worker(&dataset, opts)?;
+            addrs.push(addr);
+        }
+        let mut cfg = GatewayConfig::new(addrs);
+        // liveness probing is idle-path machinery; keep it out of the
+        // timed region's way (nothing dies in this bench)
+        cfg.probe_interval = Duration::from_secs(3600);
+        let gw_server = GatewayServer::bind(cfg, "127.0.0.1:0", (opts.clients * 2).max(8))
+            .context("binding gateway")?;
+        let gw_addr = gw_server.addr.to_string();
+        let gw = gw_server.gateway();
+        std::thread::Builder::new()
+            .name(format!("fleet-gateway-{w}"))
+            .spawn(move || {
+                let _ = gw_server.serve(None);
+            })
+            .map_err(|e| anyhow!("cannot spawn gateway thread: {e}"))?;
+        let plan = balanced_plan(&gw, w, opts.sessions_per_worker, n_samples)?;
+        let secs = drive_point(&gw_addr, &plan, opts.clients)?;
+        let sessions = plan.len();
+        let per_sec = sessions as f64 / secs.max(1e-9);
+        let speedup = match baseline {
+            None => {
+                baseline = Some(per_sec);
+                1.0
+            }
+            Some(base) => per_sec / base.max(1e-9),
+        };
+        points.push(Json::obj(vec![
+            ("workers", Json::num(w as f64)),
+            ("sessions", Json::num(sessions as f64)),
+            ("secs", Json::num(secs)),
+            ("sessions_per_sec", Json::num(per_sec)),
+            ("speedup", Json::num(speedup)),
+        ]));
+        last_gateway = Some(gw);
+    }
+    let speedup_at_max = points
+        .last()
+        .and_then(|p| p.get("speedup").and_then(Json::as_f64))
+        .unwrap_or(0.0);
+    let gw_metrics = match &last_gateway {
+        Some(gw) => {
+            let m = &gw.metrics;
+            Json::obj(vec![
+                (
+                    "proxied",
+                    Json::num(m.proxied.load(Ordering::Relaxed) as f64),
+                ),
+                ("errors", Json::num(m.errors.load(Ordering::Relaxed) as f64)),
+                (
+                    "probe_failures",
+                    Json::num(m.probe_failures.load(Ordering::Relaxed) as f64),
+                ),
+            ])
+        }
+        None => Json::Null,
+    };
+    Ok(Json::obj(vec![
+        ("format", Json::str("minions-bench-v1")),
+        ("bench", Json::str("fleet")),
+        (
+            "config",
+            Json::obj(vec![
+                ("sessions_per_worker", Json::num(opts.sessions_per_worker as f64)),
+                ("rounds", Json::num(opts.rounds as f64)),
+                ("step_ms", Json::num(opts.step_ms as f64)),
+                ("clients", Json::num(opts.clients as f64)),
+                ("seed", Json::num(opts.seed as f64)),
+                (
+                    "workload",
+                    Json::str(
+                        "service-time model: each step sleeps step_ms on its worker's \
+                         single session thread; throughput measures gateway + session \
+                         scheduling overhead, not model compute",
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "scaling",
+            Json::obj(vec![
+                ("points", Json::Arr(points)),
+                ("speedup_at_max", Json::num(speedup_at_max)),
+            ]),
+        ),
+        ("gateway", gw_metrics),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_report_shape_and_scaling() {
+        // tiny load: shape + plumbing, not the CI scaling bar
+        let opts = FleetOptions {
+            worker_points: vec![1, 2],
+            sessions_per_worker: 3,
+            rounds: 2,
+            step_ms: 2,
+            clients: 3,
+            seed: 7,
+        };
+        let report = fleet_report(&opts).unwrap();
+        assert_eq!(
+            report.get("format").and_then(Json::as_str),
+            Some("minions-bench-v1")
+        );
+        assert_eq!(report.get("bench").and_then(Json::as_str), Some("fleet"));
+        let points = report
+            .get("scaling")
+            .and_then(|s| s.get("points"))
+            .and_then(Json::as_arr)
+            .unwrap()
+            .to_vec();
+        assert_eq!(points.len(), 2);
+        for (i, p) in points.iter().enumerate() {
+            let w = p.get("workers").and_then(Json::as_u64).unwrap();
+            assert_eq!(w, [1u64, 2][i]);
+            assert_eq!(
+                p.get("sessions").and_then(Json::as_u64),
+                Some(3 * w),
+                "each point drives sessions_per_worker x workers sessions"
+            );
+            assert!(p.get("sessions_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+        }
+        let speedup = report
+            .get("scaling")
+            .and_then(|s| s.get("speedup_at_max"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(speedup > 0.5, "2-worker speedup collapsed: {speedup}");
+    }
+}

@@ -19,6 +19,11 @@
 //!
 //! Invoked by `minions bench hotpath --json` and
 //! `cargo bench --bench runtime_hotpath -- --json`.
+//!
+//! The gateway scaling exhibit (`minions bench fleet --json`,
+//! `BENCH_fleet.json`) lives in [`fleet`].
+
+pub mod fleet;
 
 use crate::cache::{model_fingerprint, CacheKey, ChunkCache};
 use crate::runtime::native::{load_model_weights, score_kernel, NEG_INF};

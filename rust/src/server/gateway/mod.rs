@@ -1,0 +1,869 @@
+//! `minions gateway` — the fleet front-end (DESIGN.md §13).
+//!
+//! A gateway owns no models, datasets, or sessions. It fans the session
+//! API across N `minions serve` worker processes:
+//!
+//! - `POST /v1/sessions` / `POST /v1/query` route by consistent hash of
+//!   (protocol identity, dataset, sample) — see [`ring`] — so equal
+//!   specs land on the worker whose `ChunkCache` and factory-memoized
+//!   models are already warm. The session-create response is captured
+//!   once to learn the assigned id (recorded in the routing table), then
+//!   relayed to the client byte-for-byte.
+//! - `GET /v1/sessions/:id[/events]` and `DELETE /v1/sessions/:id` look
+//!   the owner up in the routing table (falling back to a fleet-wide
+//!   probe for ids created before this gateway started) and proxy the
+//!   worker's response through **unmodified** — event streams are a raw
+//!   byte copy of the worker's chunked NDJSON, so a stream observed
+//!   through the gateway is identical to one read directly.
+//! - `GET /metrics` aggregates the fleet: numeric counters are summed
+//!   across alive workers, each worker's full snapshot is nested under
+//!   `workers.<addr>`, and the gateway adds its own `gateway_*` gauges.
+//! - `GET /healthz` reports the fleet view (per-worker liveness).
+//!
+//! **Failure detection and migration** (the WAL-durability payoff): a
+//! background monitor probes each worker's `/healthz`; after
+//! `probe_fails` consecutive failures (proxy connect failures count
+//! too) the worker is marked dead. If the gateway knows the fleet's
+//! state-dir layout (`--state-dir` root, worker *i* under
+//! `worker-<i>/`), it then *migrates* the dead worker's sessions: the
+//! dead dir's segments are scanned with the exact boot-scan algorithm
+//! (torn tails truncated, terminal sessions skipped), every
+//! non-terminal session's records are re-keyed through the ring and
+//! POSTed to a live peer's `/v1/admin/adopt`, and the peer's
+//! [`SessionRunner::adopt`](crate::server::session::SessionRunner::adopt)
+//! persists them into its own WAL before resuming the session
+//! mid-flight. Because v2 metas embed their `ProtocolSpec` and replay
+//! shares its line formatter with the live path, the resumed event
+//! stream is byte-identical to an uninterrupted run (modulo the
+//! wall-clock `latency_ms` in the final line). Migrated segment files
+//! are archived under `migrated/` in the dead dir so a zombie restart
+//! cannot double-resume them.
+//!
+//! Fleets keep session-id ranges disjoint via `minions serve
+//! --session-id-base`, so an adopted session keeps its id with no risk
+//! of colliding with the peer's own spawns. A migrated-away worker
+//! rejoining the fleet is not supported (restart the gateway).
+
+pub mod ring;
+
+use super::{
+    bad_request, not_found, parse_session_path, read_request, write_response, ApiError,
+    HttpRequest, ReadError,
+};
+use crate::protocol::ProtocolSpec;
+use crate::server::wal::segment::{parse_segment_name, scan_dir_sessions, RecoveredSession};
+use crate::util::json::Json;
+use crate::util::pool::Pool;
+use crate::util::sync::unpoisoned;
+use anyhow::{anyhow, Result};
+use ring::{route_key, Ring};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// How long a proxy/probe connect may take before the worker counts as
+/// unreachable (a dead host must not stall a conn thread for the
+/// kernel's full SYN patience).
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(1000);
+
+/// Read timeout for captured (non-streaming) worker responses and
+/// health probes. Event-stream proxies deliberately set none: a session
+/// parked in a long backoff emits no bytes for longer than any sane
+/// timeout, and stream liveness is the *worker's* job to monitor.
+const CAPTURE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// 502 — the worker behind this request could not be reached.
+fn bad_gateway(msg: impl Into<String>) -> ApiError {
+    ApiError {
+        status: "502 Bad Gateway",
+        msg: msg.into(),
+        retry_after: None,
+    }
+}
+
+/// 503 — no alive worker to route to.
+fn unavailable(msg: impl Into<String>) -> ApiError {
+    ApiError {
+        status: "503 Service Unavailable",
+        msg: msg.into(),
+        retry_after: Some(1),
+    }
+}
+
+/// Gateway-side observability counters (`gateway_*` on `/metrics`).
+#[derive(Default)]
+pub struct GatewayMetrics {
+    /// requests proxied to a worker (captured or streamed)
+    pub proxied: AtomicU64,
+    /// requests answered with an error status by the gateway itself
+    pub errors: AtomicU64,
+    /// failed health probes + failed proxy connects
+    pub probe_failures: AtomicU64,
+    /// workers declared dead so far
+    pub workers_dead: AtomicU64,
+    /// sessions re-homed onto a peer (adopt returned 200)
+    pub sessions_migrated: AtomicU64,
+    /// terminal sessions found (and skipped) during migration
+    pub migrate_skipped_terminal: AtomicU64,
+    /// sessions whose adoption failed (files kept for retry/post-mortem)
+    pub migrate_failures: AtomicU64,
+}
+
+/// One fleet member.
+pub struct Worker {
+    pub addr: String,
+    /// the worker's `--state-dir`, when the gateway knows the fleet
+    /// layout — required for migration, optional for pure routing
+    state_dir: Option<PathBuf>,
+    alive: AtomicBool,
+    /// consecutive failed probes/connects; reset on success
+    fails: AtomicU32,
+    /// migration ran (or was declared impossible) for this worker
+    migrated: AtomicBool,
+}
+
+/// Gateway configuration (the `minions gateway` flags).
+pub struct GatewayConfig {
+    /// worker addresses, in `--workers` order (the order fixes both the
+    /// ring and the `worker-<i>` state-dir convention)
+    pub workers: Vec<String>,
+    /// fleet state root: worker *i*'s WAL dir is `<root>/worker-<i>`.
+    /// `None` disables migration (routing and health still work).
+    pub state_root: Option<PathBuf>,
+    /// health-probe period
+    pub probe_interval: Duration,
+    /// consecutive failures before a worker is declared dead
+    pub probe_fails: u32,
+}
+
+impl GatewayConfig {
+    pub fn new(workers: Vec<String>) -> GatewayConfig {
+        GatewayConfig {
+            workers,
+            state_root: None,
+            probe_interval: Duration::from_millis(1000),
+            probe_fails: 3,
+        }
+    }
+}
+
+/// The shared gateway core: membership, ring, routing table, counters.
+pub struct Gateway {
+    workers: Vec<Worker>,
+    ring: Ring,
+    /// session id → worker index, learned from session-create responses
+    /// and updated by migration
+    table: Mutex<HashMap<u64, usize>>,
+    pub metrics: GatewayMetrics,
+    probe_fails: u32,
+}
+
+impl Gateway {
+    pub fn new(cfg: &GatewayConfig) -> Gateway {
+        let workers = cfg
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(i, addr)| Worker {
+                addr: addr.clone(),
+                state_dir: cfg.state_root.as_ref().map(|r| r.join(format!("worker-{i}"))),
+                alive: AtomicBool::new(true),
+                fails: AtomicU32::new(0),
+                migrated: AtomicBool::new(false),
+            })
+            .collect();
+        Gateway {
+            workers,
+            ring: Ring::build(&cfg.workers),
+            table: Mutex::new(HashMap::new()),
+            metrics: GatewayMetrics::default(),
+            probe_fails: cfg.probe_fails.max(1),
+        }
+    }
+
+    pub fn workers(&self) -> &[Worker] {
+        &self.workers
+    }
+
+    pub fn worker_alive(&self, i: usize) -> bool {
+        self.workers.get(i).is_some_and(|w| w.alive.load(Ordering::Relaxed))
+    }
+
+    /// Where the ring would place this request — the same computation
+    /// live routing uses, exposed so benches/tests can plan balanced
+    /// loads against ephemeral worker addresses.
+    pub fn plan_route(&self, proto_key: &str, dataset: &str, sample: u64) -> Option<usize> {
+        self.route(route_key(proto_key, dataset, sample))
+    }
+
+    /// The routing table's owner for a session id, if known.
+    pub fn table_lookup(&self, sid: u64) -> Option<usize> {
+        unpoisoned(&self.table).get(&sid).copied()
+    }
+
+    fn route(&self, key: u64) -> Option<usize> {
+        self.ring.route(key, |w| self.worker_alive(w))
+    }
+
+    /// A connect/probe failure for worker `i`. Crossing the threshold
+    /// declares it dead and (once) kicks off migration.
+    fn record_failure(&self, i: usize) {
+        self.metrics.probe_failures.fetch_add(1, Ordering::Relaxed);
+        let Some(w) = self.workers.get(i) else { return };
+        let fails = w.fails.fetch_add(1, Ordering::Relaxed) + 1;
+        if fails >= self.probe_fails {
+            self.mark_dead(i);
+        }
+    }
+
+    fn record_success(&self, i: usize) {
+        if let Some(w) = self.workers.get(i) {
+            w.fails.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Declare worker `i` dead and migrate its sessions (at most once).
+    fn mark_dead(&self, i: usize) {
+        let Some(w) = self.workers.get(i) else { return };
+        if w.alive.swap(false, Ordering::AcqRel) {
+            self.metrics.workers_dead.fetch_add(1, Ordering::Relaxed);
+            eprintln!("gateway: worker {} ({}) marked dead", i, w.addr);
+        }
+        if !w.migrated.swap(true, Ordering::AcqRel) {
+            self.migrate(i);
+        }
+    }
+
+    /// Re-home a dead worker's WAL-durable sessions onto live peers.
+    /// Scans the dead `--state-dir` with the boot-scan algorithm, then
+    /// POSTs each non-terminal session's records to a ring-chosen
+    /// peer's `/v1/admin/adopt`. Successfully-adopted segments are
+    /// archived under `migrated/` so a zombie restart of the dead
+    /// worker cannot double-resume them; on any adoption failure the
+    /// files stay in place for retry/post-mortem.
+    fn migrate(&self, dead: usize) {
+        let Some(w) = self.workers.get(dead) else { return };
+        let Some(dir) = &w.state_dir else {
+            eprintln!(
+                "gateway: worker {} has no known state dir; its sessions cannot be migrated",
+                w.addr
+            );
+            return;
+        };
+        let sessions = match scan_dir_sessions(dir) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("gateway: cannot scan {}: {e}; migration skipped", dir.display());
+                return;
+            }
+        };
+        let mut all_ok = true;
+        let mut moved = 0usize;
+        for rs in &sessions {
+            if rs.terminal {
+                self.metrics
+                    .migrate_skipped_terminal
+                    .fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            match self.adopt_on_peer(dead, rs) {
+                Ok(target) => {
+                    unpoisoned(&self.table).insert(rs.sid, target);
+                    self.metrics.sessions_migrated.fetch_add(1, Ordering::Relaxed);
+                    moved += 1;
+                }
+                Err(e) => {
+                    self.metrics.migrate_failures.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("gateway: session {} not migrated: {e}", rs.sid);
+                    all_ok = false;
+                }
+            }
+        }
+        if all_ok {
+            archive_segments(dir);
+        }
+        eprintln!(
+            "gateway: migrated {moved} session(s) off {} ({} scanned)",
+            w.addr,
+            sessions.len()
+        );
+    }
+
+    /// Choose a live peer for a recovered session (re-keyed from its own
+    /// meta record, so placement stays spec-affine) and adopt it there.
+    fn adopt_on_peer(&self, dead: usize, rs: &RecoveredSession) -> Result<usize> {
+        let key = meta_route_key(rs).unwrap_or(rs.sid);
+        let target = self
+            .ring
+            .route(key, |w| w != dead && self.worker_alive(w))
+            .ok_or_else(|| anyhow!("no alive peer to adopt it"))?;
+        let addr = self
+            .workers
+            .get(target)
+            .map(|w| w.addr.clone())
+            .ok_or_else(|| anyhow!("ring produced an unknown worker"))?;
+        let body = Json::obj(vec![
+            ("sid", Json::num(rs.sid as f64)),
+            ("records", Json::Arr(rs.records.clone())),
+        ])
+        .to_string();
+        let req = HttpRequest {
+            method: "POST".to_string(),
+            path: "/v1/admin/adopt".to_string(),
+            body,
+        };
+        let resp = capture(&addr, &req)?;
+        let status = status_code(&resp);
+        match status {
+            // 409 = the peer already has it (an earlier partial
+            // migration): the session is homed, just not by us — done
+            200 | 409 => Ok(target),
+            code => Err(anyhow!("peer {addr} answered {code} to adopt")),
+        }
+    }
+
+    /// Find which worker owns session `sid`: the routing table first,
+    /// then a probe of every alive worker's status endpoint (ids from
+    /// before this gateway started, or whose create response was lost).
+    fn owner_of(&self, sid: u64) -> Option<usize> {
+        if let Some(w) = self.table_lookup(sid) {
+            if self.worker_alive(w) {
+                return Some(w);
+            }
+        }
+        for (i, w) in self.workers.iter().enumerate() {
+            if !w.alive.load(Ordering::Relaxed) {
+                continue;
+            }
+            let req = HttpRequest {
+                method: "GET".to_string(),
+                path: format!("/v1/sessions/{sid}"),
+                body: String::new(),
+            };
+            if let Ok(resp) = capture(&w.addr, &req) {
+                if status_code(&resp) == 200 {
+                    unpoisoned(&self.table).insert(sid, i);
+                    return Some(i);
+                }
+            }
+        }
+        None
+    }
+
+    /// The fleet-wide `/metrics` body: numeric counters summed across
+    /// alive workers, per-worker snapshots nested under `workers`, and
+    /// the gateway's own counters prefixed `gateway_`.
+    fn metrics_json(&self) -> String {
+        let mut totals: BTreeMap<String, f64> = BTreeMap::new();
+        let mut per_worker: BTreeMap<String, Json> = BTreeMap::new();
+        let mut alive = 0u64;
+        for (i, w) in self.workers.iter().enumerate() {
+            if !w.alive.load(Ordering::Relaxed) {
+                per_worker.insert(
+                    w.addr.clone(),
+                    Json::obj(vec![("alive", Json::Bool(false))]),
+                );
+                continue;
+            }
+            let req = HttpRequest {
+                method: "GET".to_string(),
+                path: "/metrics".to_string(),
+                body: String::new(),
+            };
+            match capture(&w.addr, &req).map_err(|e| e.to_string()).and_then(|resp| {
+                Json::parse(body_of(&resp)).map_err(|e| e.to_string())
+            }) {
+                Ok(snapshot) => {
+                    alive += 1;
+                    if let Json::Obj(map) = &snapshot {
+                        for (k, v) in map {
+                            if let Some(n) = v.as_f64() {
+                                *totals.entry(k.clone()).or_insert(0.0) += n;
+                            }
+                        }
+                    }
+                    per_worker.insert(w.addr.clone(), snapshot);
+                    self.record_success(i);
+                }
+                Err(e) => {
+                    self.record_failure(i);
+                    per_worker.insert(
+                        w.addr.clone(),
+                        Json::obj(vec![
+                            ("alive", Json::Bool(false)),
+                            ("error", Json::str(e)),
+                        ]),
+                    );
+                }
+            }
+        }
+        let m = &self.metrics;
+        let mut out: BTreeMap<String, Json> = totals
+            .into_iter()
+            .map(|(k, v)| (k, Json::num(v)))
+            .collect();
+        out.insert("gateway_workers".to_string(), Json::num(self.workers.len() as f64));
+        out.insert("gateway_workers_alive".to_string(), Json::num(alive as f64));
+        out.insert(
+            "gateway_proxied".to_string(),
+            Json::num(m.proxied.load(Ordering::Relaxed) as f64),
+        );
+        out.insert(
+            "gateway_errors".to_string(),
+            Json::num(m.errors.load(Ordering::Relaxed) as f64),
+        );
+        out.insert(
+            "gateway_probe_failures".to_string(),
+            Json::num(m.probe_failures.load(Ordering::Relaxed) as f64),
+        );
+        out.insert(
+            "gateway_workers_dead".to_string(),
+            Json::num(m.workers_dead.load(Ordering::Relaxed) as f64),
+        );
+        out.insert(
+            "gateway_sessions_migrated".to_string(),
+            Json::num(m.sessions_migrated.load(Ordering::Relaxed) as f64),
+        );
+        out.insert(
+            "gateway_migrate_failures".to_string(),
+            Json::num(m.migrate_failures.load(Ordering::Relaxed) as f64),
+        );
+        out.insert("workers".to_string(), Json::Obj(per_worker));
+        Json::Obj(out).to_string()
+    }
+
+    /// The fleet `/healthz` body.
+    fn healthz_json(&self) -> String {
+        let views: Vec<Json> = self
+            .workers
+            .iter()
+            .map(|w| {
+                Json::obj(vec![
+                    ("addr", Json::str(w.addr.clone())),
+                    ("alive", Json::Bool(w.alive.load(Ordering::Relaxed))),
+                ])
+            })
+            .collect();
+        let all_alive = self
+            .workers
+            .iter()
+            .all(|w| w.alive.load(Ordering::Relaxed));
+        Json::obj(vec![
+            ("status", Json::str(if all_alive { "ok" } else { "degraded" })),
+            ("workers", Json::Arr(views)),
+        ])
+        .to_string()
+    }
+}
+
+/// Archive a migrated dir's segment files under `migrated/`: the
+/// records now live in a peer's WAL, and a zombie restart of the dead
+/// worker must not boot-scan (and double-resume) them.
+fn archive_segments(dir: &std::path::Path) {
+    let arch = dir.join("migrated");
+    if std::fs::create_dir_all(&arch).is_err() {
+        return;
+    }
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if parse_segment_name(name).is_some() {
+            let _ = std::fs::rename(entry.path(), arch.join(name));
+        }
+    }
+}
+
+/// The routing key embedded in a recovered session's own meta record —
+/// migration re-keys from the WAL, not from any in-memory state.
+fn meta_route_key(rs: &RecoveredSession) -> Option<u64> {
+    let meta = rs.records.first()?;
+    let proto = meta.get("proto_key").and_then(Json::as_str)?;
+    let dataset = meta.get("dataset").and_then(Json::as_str)?;
+    let sample = meta.get("sample").and_then(Json::as_u64)?;
+    Some(route_key(proto, dataset, sample))
+}
+
+/// The routing key for an incoming run-request body. Malformed bodies
+/// key to 0 — they are still proxied (to whatever worker owns that
+/// point) so the client receives the worker's own 400, identical to a
+/// direct request.
+fn body_route_key(body: &str) -> u64 {
+    let Ok(j) = Json::parse(body) else { return 0 };
+    let proto = match j.get("spec") {
+        Some(spec_json) => match ProtocolSpec::from_json(spec_json) {
+            Ok(spec) => format!("spec:{:016x}", spec.fingerprint()),
+            Err(_) => "invalid-spec".to_string(),
+        },
+        None => j
+            .get("protocol")
+            .and_then(Json::as_str)
+            .unwrap_or("minions")
+            .to_string(),
+    };
+    let dataset = j.get("dataset").and_then(Json::as_str).unwrap_or("");
+    let sample = j.get("sample").and_then(Json::as_u64).unwrap_or(0);
+    route_key(&proto, dataset, sample)
+}
+
+// ---------------------------------------------------------------------
+// Worker-side HTTP plumbing.
+// ---------------------------------------------------------------------
+
+/// Connect with a bounded timeout (resolving first; `TcpStream::connect`
+/// alone would wait out the kernel's default SYN patience on a dead
+/// host).
+fn connect(addr: &str) -> std::io::Result<TcpStream> {
+    let mut last = std::io::Error::other(format!("cannot resolve {addr}"));
+    for sa in addr.to_socket_addrs()? {
+        match TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = e,
+        }
+    }
+    Err(last)
+}
+
+/// Re-frame a parsed request for the worker hop. Headers are
+/// normalized (the gateway already consumed the originals); workers
+/// key off method/path/body only, so responses are unaffected.
+fn raw_request(req: &HttpRequest) -> String {
+    format!(
+        "{} {} HTTP/1.1\r\nHost: minions\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        req.method,
+        req.path,
+        req.body.len(),
+        req.body
+    )
+}
+
+/// Send `req` to `addr` and capture the full response (status line +
+/// headers + body). For bounded, non-streaming exchanges.
+fn capture(addr: &str, req: &HttpRequest) -> Result<String> {
+    let mut stream = connect(addr)?;
+    stream.set_read_timeout(Some(CAPTURE_TIMEOUT))?;
+    stream.write_all(raw_request(req).as_bytes())?;
+    let mut resp = String::new();
+    stream.read_to_string(&mut resp)?;
+    Ok(resp)
+}
+
+/// Send `req` to `addr` and relay the response to `client` byte-for-
+/// byte as it arrives — the event-stream path (chunked NDJSON flows
+/// through unmodified). No read timeout: an idle stream is legitimate
+/// (parked session), and a dead worker surfaces as EOF/reset.
+fn stream_through(addr: &str, req: &HttpRequest, client: &mut TcpStream) -> Result<()> {
+    let mut worker = connect(addr)?;
+    worker.write_all(raw_request(req).as_bytes())?;
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = worker.read(&mut buf)?;
+        if n == 0 {
+            return Ok(());
+        }
+        client.write_all(buf.get(..n).unwrap_or_default())?;
+    }
+}
+
+/// The HTTP status code in a captured response's status line (0 when
+/// unparseable).
+fn status_code(resp: &str) -> u32 {
+    resp.split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+/// The body of a captured response (empty if the split fails).
+fn body_of(resp: &str) -> &str {
+    resp.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+// ---------------------------------------------------------------------
+// The gateway's own HTTP server.
+// ---------------------------------------------------------------------
+
+/// The listening front half: accepts client connections on a thread
+/// pool and dispatches them against the shared [`Gateway`] core, plus
+/// the background health monitor.
+pub struct GatewayServer {
+    gateway: Arc<Gateway>,
+    pool: Pool,
+    listener: TcpListener,
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl GatewayServer {
+    /// Bind the gateway and start the health monitor.
+    pub fn bind(cfg: GatewayConfig, addr: &str, conn_workers: usize) -> Result<GatewayServer> {
+        if cfg.workers.is_empty() {
+            return Err(anyhow!("gateway needs at least one worker address"));
+        }
+        let gateway = Arc::new(Gateway::new(&cfg));
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let monitor = health::spawn_monitor(
+            Arc::clone(&gateway),
+            cfg.probe_interval,
+            Arc::clone(&stop),
+        );
+        Ok(GatewayServer {
+            gateway,
+            pool: Pool::new(conn_workers.max(1), conn_workers.max(1) * 4),
+            listener,
+            addr,
+            stop,
+            monitor: Mutex::new(monitor),
+        })
+    }
+
+    /// The shared core (bench/test introspection: route planning,
+    /// liveness, the routing table).
+    pub fn gateway(&self) -> Arc<Gateway> {
+        Arc::clone(&self.gateway)
+    }
+
+    /// Serve until `max_requests` connections have been handled
+    /// (None = forever). Mirrors [`super::Server::serve`].
+    pub fn serve(&self, max_requests: Option<u64>) -> Result<()> {
+        let served = Arc::new(AtomicU64::new(0));
+        for stream in self.listener.incoming() {
+            let stream = stream?;
+            let gw = Arc::clone(&self.gateway);
+            let served2 = Arc::clone(&served);
+            self.pool.execute(move || {
+                if handle_conn(stream, &gw).is_err() {
+                    gw.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                served2.fetch_add(1, Ordering::SeqCst);
+            });
+            if let Some(max) = max_requests {
+                if served.load(Ordering::SeqCst) + 1 >= max {
+                    break;
+                }
+            }
+        }
+        self.pool.wait_idle();
+        Ok(())
+    }
+}
+
+impl Drop for GatewayServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = unpoisoned(&self.monitor).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One client connection: frame the request, route it, answer. The
+/// framing hardening is shared with the worker server (`read_request`),
+/// so a gateway front cannot be tricked by the truncation/oversize
+/// bodies the workers reject.
+fn handle_conn(mut stream: TcpStream, gw: &Gateway) -> Result<()> {
+    stream.set_read_timeout(Some(CAPTURE_TIMEOUT))?;
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err(ReadError::Http(e)) => {
+            gw.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let body = Json::obj(vec![("error", Json::str(e.msg))]).to_string();
+            let _ = write_response(&mut stream, e.status, e.retry_after, &body);
+            return Ok(());
+        }
+        Err(ReadError::Transport(e)) => return Err(e),
+    };
+    match dispatch(&req, gw, &mut stream) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            gw.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let body = Json::obj(vec![("error", Json::str(e.msg))]).to_string();
+            let _ = write_response(&mut stream, e.status, e.retry_after, &body);
+            Ok(())
+        }
+    }
+}
+
+fn dispatch(req: &HttpRequest, gw: &Gateway, client: &mut TcpStream) -> Result<(), ApiError> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let body = gw.healthz_json();
+            write_response(client, "200 OK", None, &body).map_err(drop_client)
+        }
+        ("GET", "/metrics") => {
+            let body = gw.metrics_json();
+            write_response(client, "200 OK", None, &body).map_err(drop_client)
+        }
+        ("POST", "/v1/sessions") => {
+            // capture (to learn the assigned session id), then relay the
+            // worker's bytes verbatim — the client sees exactly what a
+            // direct request would have returned
+            let key = body_route_key(&req.body);
+            let (resp, worker) = capture_routed(gw, key, req)?;
+            if status_code(&resp) == 200 {
+                if let Some(sid) = Json::parse(body_of(&resp))
+                    .ok()
+                    .and_then(|j| j.get("session_id").and_then(Json::as_u64))
+                {
+                    unpoisoned(&gw.table).insert(sid, worker);
+                }
+            }
+            client.write_all(resp.as_bytes()).map_err(drop_client)
+        }
+        ("POST", "/v1/query") => {
+            let key = body_route_key(&req.body);
+            let (resp, _) = capture_routed(gw, key, req)?;
+            client.write_all(resp.as_bytes()).map_err(drop_client)
+        }
+        ("GET", "/v1/protocols") => {
+            // registry/schema discovery: every worker boots the same
+            // aliases, so any alive one can answer
+            let (resp, _) = capture_routed(gw, 0, req)?;
+            client.write_all(resp.as_bytes()).map_err(drop_client)
+        }
+        (method, path) if path.starts_with("/v1/sessions/") => {
+            if !matches!(method, "GET" | "DELETE") {
+                return Err(not_found(format!("no route for {method} {path}")));
+            }
+            let (sid, _) = parse_session_path(path)
+                .ok_or_else(|| not_found(format!("no route for {method} {path}")))?;
+            let owner = gw
+                .owner_of(sid)
+                .ok_or_else(|| not_found(format!("unknown session {sid}")))?;
+            let addr = gw
+                .workers
+                .get(owner)
+                .map(|w| w.addr.clone())
+                .ok_or_else(|| bad_gateway("routing table names an unknown worker"))?;
+            gw.metrics.proxied.fetch_add(1, Ordering::Relaxed);
+            match stream_through(&addr, req, client) {
+                Ok(()) => Ok(()),
+                Err(e) => {
+                    gw.record_failure(owner);
+                    Err(bad_gateway(format!("worker {addr}: {e}")))
+                }
+            }
+        }
+        ("POST", "/v1/admin/adopt") => {
+            // adoption is a worker-internal surface the gateway itself
+            // drives during migration; re-proxying it would let a client
+            // forge session history through the fleet front door
+            Err(bad_request(
+                "adopt is a worker-internal endpoint (not proxied)",
+            ))
+        }
+        (method, path) => Err(not_found(format!("no route for {method} {path}"))),
+    }
+}
+
+/// Route `key` to an alive worker and capture the response, retrying
+/// once on the next ring candidate if the first hop's transport fails
+/// (the request never reached a handler, so the retry cannot duplicate
+/// work).
+fn capture_routed(
+    gw: &Gateway,
+    key: u64,
+    req: &HttpRequest,
+) -> Result<(String, usize), ApiError> {
+    let first = gw
+        .route(key)
+        .ok_or_else(|| unavailable("no alive workers"))?;
+    let mut target = first;
+    for attempt in 0..2 {
+        let Some(addr) = gw.workers.get(target).map(|w| w.addr.clone()) else {
+            return Err(bad_gateway("ring produced an unknown worker"));
+        };
+        gw.metrics.proxied.fetch_add(1, Ordering::Relaxed);
+        match capture(&addr, req) {
+            Ok(resp) => {
+                gw.record_success(target);
+                return Ok((resp, target));
+            }
+            Err(e) => {
+                gw.record_failure(target);
+                if attempt == 1 {
+                    return Err(bad_gateway(format!("worker {addr}: {e}")));
+                }
+                target = gw
+                    .ring
+                    .route(key, |w| w != first && gw.worker_alive(w))
+                    .ok_or_else(|| bad_gateway(format!("worker {addr}: {e} (no peer to retry)")))?;
+            }
+        }
+    }
+    Err(unavailable("no alive workers"))
+}
+
+/// A write toward the client failed: the client is gone; surface it as
+/// a transport-ish 499 the conn handler won't be able to deliver (it
+/// still counts the error).
+fn drop_client(e: impl std::fmt::Display) -> ApiError {
+    ApiError {
+        status: "499 Client Closed Request",
+        msg: e.to_string(),
+        retry_after: None,
+    }
+}
+
+mod health {
+    //! The background liveness monitor: one thread, one `/healthz`
+    //! probe per worker per interval. Failures accumulate in the same
+    //! per-worker counter proxy failures feed, so either signal can
+    //! cross the `probe_fails` threshold and trigger migration.
+
+    use super::{capture, status_code, Gateway, HttpRequest};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    pub(super) fn spawn_monitor(
+        gw: Arc<Gateway>,
+        interval: Duration,
+        stop: Arc<AtomicBool>,
+    ) -> Option<std::thread::JoinHandle<()>> {
+        let res = std::thread::Builder::new()
+            .name("gateway-health".to_string())
+            .spawn(move || run(gw, interval, stop));
+        match res {
+            Ok(h) => Some(h),
+            Err(e) => {
+                eprintln!("gateway: cannot spawn health monitor ({e}); probing disabled");
+                None
+            }
+        }
+    }
+
+    fn run(gw: Arc<Gateway>, interval: Duration, stop: Arc<AtomicBool>) {
+        while !stop.load(Ordering::Acquire) {
+            for (i, w) in gw.workers.iter().enumerate() {
+                if !w.alive.load(Ordering::Relaxed) {
+                    continue;
+                }
+                let req = HttpRequest {
+                    method: "GET".to_string(),
+                    path: "/healthz".to_string(),
+                    body: String::new(),
+                };
+                match capture(&w.addr, &req) {
+                    Ok(resp) if status_code(&resp) == 200 => gw.record_success(i),
+                    _ => gw.record_failure(i),
+                }
+            }
+            // sleep in short slices so shutdown stays responsive even
+            // with a long probe interval
+            let mut left = interval;
+            while !left.is_zero() && !stop.load(Ordering::Acquire) {
+                let slice = left.min(Duration::from_millis(50));
+                std::thread::sleep(slice);
+                left = left.saturating_sub(slice);
+            }
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Consistent-hash ring for spec-affine session routing (DESIGN.md §13).
+//!
+//! Each worker contributes `VNODES` virtual points hashed from
+//! `"<addr>#<replica>"`; a request keyed by (protocol identity, dataset,
+//! sample) lands on the first point clockwise from its own hash whose
+//! worker is alive. Properties the gateway relies on:
+//!
+//! - **Affinity**: equal keys always pick the same worker while the
+//!   alive set is stable, so sessions with equal specs land where the
+//!   `ChunkCache` and factory-memoized models are already warm.
+//! - **Minimal disruption**: a worker dying re-homes only the keys whose
+//!   clockwise walk passed through its points — every other key keeps
+//!   its placement (the classic consistent-hashing contract; a modulo
+//!   table would reshuffle nearly everything).
+//! - **Determinism**: the ring is a pure function of the `--workers`
+//!   list, so the gateway's migration pass and a bench's route plan
+//!   compute placements identical to live routing.
+
+/// Virtual points per worker. 64 keeps the per-worker load spread
+/// within a few percent for small fleets while the ring stays tiny
+/// (4 workers = 256 points, one binary search to route).
+const VNODES: usize = 64;
+
+/// FNV-1a, the repo's stock dependency-free string hash.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The canonical routing key: protocol identity (an alias name or the
+/// factory's `spec:<fingerprint>` key), dataset, and document/sample id.
+/// One function, used by live routing, migration re-keying, and bench
+/// route planning, so the three can never disagree.
+pub fn route_key(proto_key: &str, dataset: &str, sample: u64) -> u64 {
+    fnv1a(format!("{proto_key}|{dataset}|{sample}").as_bytes())
+}
+
+/// The ring: sorted virtual points, each owned by a worker index into
+/// the gateway's `--workers` list.
+pub struct Ring {
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    pub fn build(addrs: &[String]) -> Ring {
+        let mut points = Vec::with_capacity(addrs.len() * VNODES);
+        for (i, addr) in addrs.iter().enumerate() {
+            for r in 0..VNODES {
+                points.push((fnv1a(format!("{addr}#{r}").as_bytes()), i));
+            }
+        }
+        points.sort_unstable();
+        Ring { points }
+    }
+
+    /// The first worker at or clockwise after `key` for which `alive`
+    /// holds. `None` when every worker is down (or the ring is empty).
+    pub fn route<F: Fn(usize) -> bool>(&self, key: u64, alive: F) -> Option<usize> {
+        let n = self.points.len();
+        if n == 0 {
+            return None;
+        }
+        let start = self.points.partition_point(|(p, _)| *p < key);
+        for off in 0..n {
+            let (_, w) = *self.points.get((start + off) % n)?;
+            if alive(w) {
+                return Some(w);
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("127.0.0.1:7{i:03}")).collect()
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_total() {
+        let ring = Ring::build(&addrs(4));
+        for k in 0..200u64 {
+            let key = route_key("minions", "finance", k);
+            let a = ring.route(key, |_| true).unwrap();
+            let b = ring.route(key, |_| true).unwrap();
+            assert_eq!(a, b);
+            assert!(a < 4);
+        }
+    }
+
+    #[test]
+    fn load_spreads_across_workers() {
+        let ring = Ring::build(&addrs(4));
+        let mut counts = [0usize; 4];
+        for k in 0..1000u64 {
+            let w = ring
+                .route(route_key("spec:00ff", "micro", k), |_| true)
+                .unwrap();
+            counts[w] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            assert!(*c > 100, "worker {i} got {c}/1000 keys — ring badly skewed");
+        }
+    }
+
+    #[test]
+    fn dead_worker_moves_only_its_keys() {
+        let ring = Ring::build(&addrs(4));
+        let keys: Vec<u64> = (0..500).map(|k| route_key("m", "d", k)).collect();
+        let before: Vec<usize> = keys.iter().map(|k| ring.route(*k, |_| true).unwrap()).collect();
+        let after: Vec<usize> = keys
+            .iter()
+            .map(|k| ring.route(*k, |w| w != 2).unwrap())
+            .collect();
+        let mut moved = 0;
+        for (b, a) in before.iter().zip(&after) {
+            if *b != 2 {
+                assert_eq!(b, a, "a survivor's key must not move");
+            } else {
+                assert_ne!(*a, 2);
+                moved += 1;
+            }
+        }
+        assert!(moved > 0, "worker 2 owned no keys out of 500?");
+    }
+
+    #[test]
+    fn all_dead_is_none() {
+        let ring = Ring::build(&addrs(2));
+        assert!(ring.route(7, |_| false).is_none());
+        let empty = Ring::build(&[]);
+        assert!(empty.route(7, |_| true).is_none());
+    }
+}

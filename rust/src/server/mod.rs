@@ -56,12 +56,15 @@
 //! of the shared scheduler so batch sweeps cannot starve it.
 //!
 //! Error handling: every route failure maps to a proper status — 400 for
-//! malformed bodies and for request-body selection errors (unknown
-//! protocol/dataset, sample out of range, invalid inline spec), 404 for
-//! unknown routes and unknown/TTL-evicted session ids, 429 for shed
-//! load, 500 for protocol failures — and is counted in
+//! malformed bodies, malformed `Content-Length` headers, and request-body
+//! selection errors (unknown protocol/dataset, sample out of range,
+//! invalid inline spec), 404 for unknown routes and unknown/TTL-evicted
+//! session ids, 413 for bodies past the `MAX_BODY_BYTES` cap, 429 for
+//! shed load, 500 for protocol failures — and is counted in
 //! `Metrics::errors`, as are transport-level failures (`Server::serve`
-//! no longer drops them).
+//! no longer drops them). A peer that closes mid-body gets no reply (the
+//! socket is gone) but the truncated body is never handed to a route
+//! handler as if it were complete.
 //!
 //! The serving path is entirely Rust + PJRT: no Python anywhere.
 //! Concurrent requests score through the shared `DynamicBatcher`, so load
@@ -70,6 +73,7 @@
 //! across requests are served from the `cache::ChunkCache` without
 //! touching the batcher at all.
 
+pub mod gateway;
 pub mod session;
 pub mod wal;
 
@@ -92,6 +96,20 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Per-connection read timeout for request framing. `client_hung_up`
+/// temporarily narrows it to probe an idle stream for a FIN and must
+/// restore it afterwards.
+const READ_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(10);
+
+/// Header-section cap (request line + headers).
+const MAX_HEADER_BYTES: usize = 1 << 20;
+
+/// Request-body cap: a `Content-Length` past this is refused with
+/// `413 Payload Too Large` *before* any buffer grows to match the
+/// claimed size — the header is attacker-controlled and must not size
+/// an allocation.
+pub(crate) const MAX_BODY_BYTES: usize = 8 << 20;
 
 #[derive(Default)]
 pub struct Metrics {
@@ -242,6 +260,29 @@ fn conflict(msg: impl Into<String>) -> ApiError {
     }
 }
 
+/// 413 — the request-body allocation cap ([`MAX_BODY_BYTES`]).
+fn payload_too_large(msg: impl Into<String>) -> ApiError {
+    ApiError {
+        status: "413 Payload Too Large",
+        msg: msg.into(),
+        retry_after: None,
+    }
+}
+
+/// Why request framing failed: the transport died under us (no response
+/// is possible — `Server::serve` counts it), or the client sent
+/// something that deserves a 4xx before the connection closes.
+enum ReadError {
+    Transport(anyhow::Error),
+    Http(ApiError),
+}
+
+impl From<std::io::Error> for ReadError {
+    fn from(e: std::io::Error) -> Self {
+        ReadError::Transport(e.into())
+    }
+}
+
 /// What a successful route produces: a JSON body, or a handle to stream
 /// events from.
 enum Reply {
@@ -250,8 +291,20 @@ enum Reply {
 }
 
 fn handle_conn(mut stream: TcpStream, state: &ServerState) -> Result<()> {
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
-    let req = read_request(&mut stream)?;
+    stream.set_read_timeout(Some(READ_TIMEOUT))?;
+    let req = match read_request(&mut stream) {
+        Ok(req) => req,
+        Err(ReadError::Http(e)) => {
+            // a framing problem the client can act on (malformed
+            // Content-Length, oversized body) gets a real 4xx response,
+            // counted exactly like a route error
+            state.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let body = Json::obj(vec![("error", Json::str(e.msg))]).to_string();
+            let _ = write_response(&mut stream, e.status, e.retry_after, &body);
+            return Ok(());
+        }
+        Err(ReadError::Transport(e)) => return Err(e),
+    };
     match route(&req, state) {
         Ok(Reply::Json(body)) => write_json(&mut stream, "200 OK", &body),
         Ok(Reply::EventStream(entry)) => {
@@ -350,37 +403,52 @@ fn client_hung_up(stream: &mut TcpStream) -> bool {
         return true;
     }
     let mut probe = [0u8; 1];
-    matches!(stream.read(&mut probe), Ok(0))
+    let hung_up = matches!(stream.read(&mut probe), Ok(0));
+    // restore the framing timeout: the 1 ms probe setting must not leak
+    // into later reads on this connection (it used to, permanently)
+    if stream.set_read_timeout(Some(READ_TIMEOUT)).is_err() {
+        return true;
+    }
+    hung_up
 }
 
-struct HttpRequest {
-    method: String,
-    path: String,
-    body: String,
+pub(crate) struct HttpRequest {
+    pub(crate) method: String,
+    pub(crate) path: String,
+    pub(crate) body: String,
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+fn read_request(stream: &mut TcpStream) -> Result<HttpRequest, ReadError> {
     let mut buf = Vec::new();
     let mut tmp = [0u8; 4096];
-    // read until end of headers
+    // read until end of headers, resuming the terminator scan where the
+    // previous read left off (backing up 3 bytes in case "\r\n\r\n"
+    // straddles a read boundary) — linear even on dribbled headers
     let header_end;
+    let mut searched = 0usize;
     loop {
         let n = stream.read(&mut tmp)?;
         if n == 0 {
-            return Err(anyhow!("connection closed mid-request"));
+            return Err(ReadError::Transport(anyhow!("connection closed mid-request")));
         }
         buf.extend_from_slice(tmp.get(..n).unwrap_or_default());
-        if let Some(pos) = find_header_end(&buf) {
-            header_end = pos;
+        let from = searched.saturating_sub(3);
+        if let Some(pos) = find_header_end(buf.get(from..).unwrap_or_default()) {
+            header_end = from + pos;
             break;
         }
-        if buf.len() > 1 << 20 {
-            return Err(anyhow!("headers too large"));
+        searched = buf.len();
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(ReadError::Transport(anyhow!("headers too large")));
         }
     }
-    let head = std::str::from_utf8(buf.get(..header_end).unwrap_or_default())?.to_string();
+    let head = std::str::from_utf8(buf.get(..header_end).unwrap_or_default())
+        .map_err(|_| ReadError::Http(bad_request("request head is not valid UTF-8")))?
+        .to_string();
     let mut lines = head.lines();
-    let request_line = lines.next().ok_or_else(|| anyhow!("empty request"))?;
+    let request_line = lines
+        .next()
+        .ok_or_else(|| ReadError::Transport(anyhow!("empty request")))?;
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("/").to_string();
@@ -388,24 +456,41 @@ fn read_request(stream: &mut TcpStream) -> Result<HttpRequest> {
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().unwrap_or(0);
+                // a malformed length is a client error, not "no body":
+                // silently parsing it as 0 used to drop the body and hand
+                // routes an empty request
+                content_length = v.trim().parse().map_err(|_| {
+                    ReadError::Http(bad_request(format!(
+                        "malformed Content-Length '{}'",
+                        v.trim()
+                    )))
+                })?;
             }
         }
+    }
+    // refuse before allocating: the claimed length must not size a buffer
+    if content_length > MAX_BODY_BYTES {
+        return Err(ReadError::Http(payload_too_large(format!(
+            "request body of {content_length} bytes exceeds the {MAX_BODY_BYTES}-byte cap"
+        ))));
     }
     let mut body_bytes = buf.get(header_end + 4..).unwrap_or_default().to_vec();
     while body_bytes.len() < content_length {
         let n = stream.read(&mut tmp)?;
         if n == 0 {
-            break;
+            // a short body must never reach a route handler looking
+            // complete — it used to, as truncated (often invalid) JSON
+            return Err(ReadError::Transport(anyhow!(
+                "connection closed mid-body ({} of {content_length} bytes)",
+                body_bytes.len()
+            )));
         }
         body_bytes.extend_from_slice(tmp.get(..n).unwrap_or_default());
     }
     body_bytes.truncate(content_length);
-    Ok(HttpRequest {
-        method,
-        path,
-        body: String::from_utf8(body_bytes)?,
-    })
+    let body = String::from_utf8(body_bytes)
+        .map_err(|_| ReadError::Http(bad_request("request body is not valid UTF-8")))?;
+    Ok(HttpRequest { method, path, body })
 }
 
 fn find_header_end(buf: &[u8]) -> Option<usize> {
@@ -839,6 +924,56 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                 ])
                 .to_string(),
             ))
+        }
+        ("POST", "/v1/admin/adopt") => {
+            // fleet-internal migration endpoint (DESIGN.md §13): the
+            // gateway posts a dead peer's recovered WAL records here;
+            // this worker re-persists them into its own WAL and resumes
+            // the session mid-flight. The gateway front door refuses to
+            // proxy this path, so it is only reachable worker-direct.
+            let j = Json::parse(&req.body)
+                .map_err(|e| bad_request(format!("adopt body is not valid JSON: {e}")))?;
+            let sid = j
+                .get("sid")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| bad_request("adopt body needs a numeric 'sid'"))?;
+            let records = match j.get("records").and_then(Json::as_arr) {
+                Some(r) if !r.is_empty() => r.to_vec(),
+                _ => {
+                    return Err(bad_request(
+                        "adopt body needs a non-empty 'records' array",
+                    ))
+                }
+            };
+            match state.sessions.adopt(
+                sid,
+                &records,
+                &state.datasets,
+                &state.protocols,
+                state.factory.as_ref(),
+                Some(Arc::clone(&state.metrics)),
+            ) {
+                Ok(session::AdoptOutcome::Resumed) => Ok(Reply::Json(
+                    Json::obj(vec![
+                        ("session_id", Json::num(sid as f64)),
+                        ("status", Json::str("running")),
+                        ("adopted", Json::Bool(true)),
+                    ])
+                    .to_string(),
+                )),
+                Ok(session::AdoptOutcome::SkippedTerminal) => Ok(Reply::Json(
+                    Json::obj(vec![
+                        ("session_id", Json::num(sid as f64)),
+                        ("status", Json::str("terminal")),
+                        ("adopted", Json::Bool(false)),
+                    ])
+                    .to_string(),
+                )),
+                Ok(session::AdoptOutcome::Conflict) => Err(conflict(format!(
+                    "session {sid} already registered here"
+                ))),
+                Err(e) => Err(internal(format!("adopt {sid}: {e}"))),
+            }
         }
         ("GET", path) if path.starts_with("/v1/sessions/") => {
             let (id, wants_events) = parse_session_path(path)

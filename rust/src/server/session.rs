@@ -326,6 +326,20 @@ pub enum CancelOutcome {
     AlreadyTerminal,
 }
 
+/// What [`SessionRunner::adopt`] did with a migrated session's records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdoptOutcome {
+    /// restored from its records, persisted into this runner's own WAL
+    /// backend, and re-enqueued mid-session
+    Resumed,
+    /// the record sequence ends in a terminal record — nothing to
+    /// resume (counted in `wal_replay_skipped_terminal`)
+    SkippedTerminal,
+    /// this runner already has a session with that id — the HTTP 409
+    /// path (a double migration, or colliding `--session-id-base`s)
+    Conflict,
+}
+
 /// What [`SessionRunner::recover`] found in the state dir.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct RecoveryReport {
@@ -1031,6 +1045,82 @@ impl SessionRunner {
                 }
             }
         }
+    }
+
+    /// Reserve every id up to and including `floor`: later spawns get
+    /// strictly larger ids. Fleet workers boot with disjoint
+    /// `--session-id-base` ranges so sessions migrated between peers
+    /// can keep their ids without colliding with locally-spawned ones.
+    pub fn claim_id_floor(&self, floor: u64) {
+        self.shared.next_id.fetch_max(floor, Ordering::Relaxed);
+    }
+
+    /// Adopt a session migrated from another worker's state dir: restore
+    /// it from `records` (the same bodies, in the same order, its own
+    /// boot scan would have replayed), persist those records into *this*
+    /// runner's WAL backend, and re-enqueue it mid-session — the
+    /// gateway's `POST /v1/admin/adopt` path after failure detection.
+    ///
+    /// Ordering guarantees mirror recovery: the records are durable in
+    /// the new home before the session becomes steppable, so a crash of
+    /// the adopting worker loses no more than a crash of the original
+    /// would have. A WAL persistence failure is an `Err` (nothing is
+    /// registered) so the caller keeps the source files and can retry on
+    /// another peer.
+    pub fn adopt(
+        &self,
+        sid: u64,
+        records: &[Json],
+        datasets: &HashMap<String, Dataset>,
+        protocols: &HashMap<String, Arc<dyn Protocol>>,
+        factory: Option<&Arc<ProtocolFactory>>,
+        metrics: Option<Arc<Metrics>>,
+    ) -> Result<AdoptOutcome> {
+        if unpoisoned(&self.shared.registry).contains_key(&sid) {
+            return Ok(AdoptOutcome::Conflict);
+        }
+        // claim the id before any work so spawns racing this adoption
+        // allocate past it (fleets keep ranges disjoint via
+        // --session-id-base; this is the local backstop)
+        self.shared.next_id.fetch_max(sid, Ordering::Relaxed);
+        let ctx = RecoverCtx {
+            datasets,
+            protocols,
+            factory,
+            metrics: &metrics,
+        };
+        let Some(state) = self.restore_state(records, &ctx)? else {
+            self.shared
+                .replay_skipped_terminal
+                .fetch_add(1, Ordering::Relaxed);
+            return Ok(AdoptOutcome::SkippedTerminal);
+        };
+        let wal = match &self.shared.wal {
+            WalBackend::None => None,
+            WalBackend::PerSession(dir) => {
+                let mut w = SessionWal::create(dir, sid)
+                    .map_err(|e| anyhow!("adopt {sid}: cannot create wal: {e}"))?;
+                for body in records {
+                    let bytes = w
+                        .append(body)
+                        .map_err(|e| anyhow!("adopt {sid}: wal append failed: {e}"))?;
+                    self.shared.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+                    self.shared.wal_fsyncs.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(SessionLog::File(w))
+            }
+            WalBackend::Segmented { store, .. } => {
+                // one commit batch, one fsync — the legacy-migration
+                // import path re-used for peer-to-peer re-homing
+                let bytes = store
+                    .import(sid, records)
+                    .map_err(|e| anyhow!("adopt {sid}: segment import failed: {e}"))?;
+                self.shared.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+                Some(SessionLog::Segmented(store.handle(sid, records.len() as u64)))
+            }
+        };
+        self.register_restored(sid, state, wal, &metrics);
+        Ok(AdoptOutcome::Resumed)
     }
 
     /// Rebuild a session's live state from its WAL record sequence

@@ -902,6 +902,17 @@ struct ScanOutcome {
     recovered: Vec<RecoveredSession>,
 }
 
+/// Scan a segmented state directory *without* opening a store on it:
+/// the gateway's migration path reads a dead worker's `--state-dir`
+/// this way, then re-homes each non-terminal session's records into a
+/// live peer. Runs the exact boot-scan algorithm, including torn-tail
+/// truncation — a worker killed mid-write leaves the same suffix a
+/// crashed server would, and migration must trust exactly what a
+/// restart would have trusted, no more.
+pub fn scan_dir_sessions(dir: &Path) -> io::Result<Vec<RecoveredSession>> {
+    Ok(scan_segments(dir)?.recovered)
+}
+
 struct SidScan {
     recs: Vec<(RecLoc, RecKind)>,
     bodies: Vec<Json>,

@@ -1,0 +1,203 @@
+//! Fleet failover acceptance (DESIGN.md §13): kill a worker mid-session
+//! and the gateway re-homes its WAL segments into a peer's state dir,
+//! where adoption resumes the session — with the event stream served
+//! through the gateway byte-identical to an uninterrupted run, and the
+//! peer's re-persisted WAL byte-identical to the original's.
+//!
+//! The crash discipline mirrors `tests/durability.rs`: the "dead"
+//! worker is a state dir holding a record-boundary prefix of a known
+//! baseline WAL plus an address nothing listens on; the baseline and
+//! the reference event stream come from one uninterrupted HTTP run on
+//! an identical worker stack, so every compared byte is deterministic
+//! (only the wall-clock `latency_ms` field is normalized).
+
+mod testutil;
+
+use minions::sched::DynamicBatcher;
+use minions::server::gateway::{GatewayConfig, GatewayServer};
+use minions::server::session::{SessionRunner, WalMode};
+use minions::server::wal::segment::{self, SegmentConfig};
+use minions::server::{http_get, http_get_raw, http_post, Metrics, Server, ServerState};
+use minions::util::json::Json;
+use std::collections::HashMap;
+use std::net::TcpListener;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use testutil::{case_dir, datasets, factory, protocols, segment_lines_for, stack, write_wal};
+
+const SEED: u64 = 11;
+const TTL: Duration = Duration::from_secs(600);
+
+/// A full serving worker on the deterministic pseudo-backend stack,
+/// segmented-WAL-backed under `dir` — the same registry, seed, and
+/// group-commit knobs on every instantiation, so two workers given the
+/// same session produce the same bytes.
+fn worker_state(dir: &Path) -> (Arc<ServerState>, Arc<DynamicBatcher>, Arc<SessionRunner>) {
+    let s = stack();
+    let protos = protocols(&s);
+    let ds = datasets();
+    let f = factory(&s);
+    let cfg = SegmentConfig {
+        commit_interval: Duration::ZERO,
+        ..SegmentConfig::default()
+    };
+    let runner = SessionRunner::with_wal_mode(1, TTL, dir, WalMode::Segmented, cfg).unwrap();
+    let batcher = Arc::clone(&s.batcher);
+    let state = Arc::new(ServerState {
+        datasets: ds,
+        protocols: protos,
+        aliases: HashMap::new(),
+        factory: Some(f),
+        metrics: Arc::new(Metrics::default()),
+        seed: SEED,
+        batcher: Some(Arc::clone(&batcher)),
+        cache: None,
+        engine: None,
+        sessions: Arc::clone(&runner),
+        max_sessions: 0,
+    });
+    (state, batcher, runner)
+}
+
+/// Split a raw chunked-transfer response into its payload lines.
+fn dechunked_lines(raw: &str) -> Vec<String> {
+    let body = raw.split_once("\r\n\r\n").map(|x| x.1).unwrap_or(raw);
+    let mut lines = Vec::new();
+    let mut rest = body;
+    while let Some((size_hex, tail)) = rest.split_once("\r\n") {
+        let Ok(size) = usize::from_str_radix(size_hex.trim(), 16) else {
+            break;
+        };
+        if size == 0 || tail.len() < size {
+            break;
+        }
+        lines.push(tail[..size].trim_end().to_string());
+        rest = tail.get(size + 2..).unwrap_or("");
+    }
+    lines
+}
+
+/// Zero out the wall-clock `latency_ms` field so runs on different
+/// workers compare equal; everything else is deterministic.
+fn normalize_latency(line: &str) -> String {
+    let mut out = String::new();
+    let mut rest = line;
+    while let Some(pos) = rest.find("\"latency_ms\":") {
+        let after = pos + "\"latency_ms\":".len();
+        out.push_str(&rest[..after]);
+        out.push('0');
+        let tail = &rest[after..];
+        let end = tail
+            .find(|c: char| !(c.is_ascii_digit() || ".eE+-".contains(c)))
+            .unwrap_or(tail.len());
+        rest = &tail[end..];
+    }
+    out.push_str(rest);
+    out
+}
+
+fn event_lines(addr: &str, sid: u64) -> Vec<String> {
+    let raw = http_get_raw(addr, &format!("/v1/sessions/{sid}/events")).unwrap();
+    dechunked_lines(&raw)
+        .iter()
+        .map(|l| normalize_latency(l))
+        .collect()
+}
+
+#[test]
+fn killed_worker_session_migrates_to_peer_byte_identically() {
+    // ---- uninterrupted reference: one HTTP run on worker R ----------
+    let dir_r = case_dir("fleet-ref");
+    let (state_r, batcher_r, runner_r) = worker_state(&dir_r);
+    let server_r = Server::bind(state_r, "127.0.0.1:0", 2).unwrap();
+    let addr_r = server_r.addr.to_string();
+    std::thread::spawn(move || server_r.serve(None));
+
+    let body = r#"{"dataset":"micro","sample":0,"protocol":"minions-2r"}"#;
+    let resp = http_post(&addr_r, "/v1/sessions", body).unwrap();
+    let sid = Json::parse(&resp)
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .unwrap();
+    let ref_lines = event_lines(&addr_r, sid); // events-to-EOF barrier
+    assert!(
+        ref_lines.last().unwrap().contains("\"finalized\""),
+        "{ref_lines:?}"
+    );
+    runner_r.shutdown(); // drain the group committer so segments are complete
+    batcher_r.stop();
+    let base_lines = segment_lines_for(&dir_r, sid);
+    assert!(
+        base_lines.len() >= 3,
+        "need meta + step(s) + finalized, got {}",
+        base_lines.len()
+    );
+
+    // ---- crash state: worker A is a WAL prefix + a dead address -----
+    let root = case_dir("fleet-migration");
+    let dir_a = root.join("worker-0");
+    let dir_b = root.join("worker-1");
+    std::fs::create_dir_all(&dir_a).unwrap();
+    std::fs::create_dir_all(&dir_b).unwrap();
+    // meta + first step: killed mid-session, well before the finalize
+    write_wal(&segment::segment_path(&dir_a, 0), &base_lines[..2], None);
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+        // listener dropped: probes to this address are refused
+    };
+
+    // ---- the surviving peer and the gateway over both ---------------
+    let (state_b, batcher_b, runner_b) = worker_state(&dir_b);
+    let server_b = Server::bind(state_b, "127.0.0.1:0", 2).unwrap();
+    let addr_b = server_b.addr.to_string();
+    std::thread::spawn(move || server_b.serve(None));
+
+    let mut cfg = GatewayConfig::new(vec![dead_addr, addr_b.clone()]);
+    cfg.state_root = Some(root.clone());
+    cfg.probe_interval = Duration::from_millis(50);
+    cfg.probe_fails = 1;
+    let gw = GatewayServer::bind(cfg, "127.0.0.1:0", 4).unwrap();
+    let addr_g = gw.addr.to_string();
+    std::thread::spawn(move || gw.serve(None));
+
+    // failure detection → segment re-homing → adoption on the peer
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let m = Json::parse(&http_get(&addr_g, "/metrics").unwrap()).unwrap();
+        if m.get("gateway_sessions_migrated").and_then(Json::as_u64) >= Some(1) {
+            assert_eq!(m.get("gateway_workers_dead").unwrap().as_u64(), Some(1));
+            assert_eq!(m.get("gateway_migrate_failures").unwrap().as_u64(), Some(0));
+            break;
+        }
+        assert!(Instant::now() < deadline, "migration never completed: {m}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // the resumed stream through the gateway is the uninterrupted one
+    let migrated_lines = event_lines(&addr_g, sid);
+    assert_eq!(
+        migrated_lines, ref_lines,
+        "migrated session's event stream must match the uninterrupted run"
+    );
+    let status = http_get(&addr_g, &format!("/v1/sessions/{sid}")).unwrap();
+    assert!(status.contains("\"done\""), "{status}");
+
+    // the dead worker's segments were archived, not deleted
+    assert!(
+        segment::scan_dir_sessions(&dir_a).unwrap().is_empty(),
+        "re-homed segments must leave worker-0's scan empty"
+    );
+    assert!(dir_a.join("migrated").is_dir(), "archive dir missing");
+
+    // and the peer's re-persisted WAL converged to the baseline bytes
+    runner_b.shutdown();
+    batcher_b.stop();
+    assert_eq!(
+        segment_lines_for(&dir_b, sid),
+        base_lines,
+        "adopted WAL must be byte-identical to the uninterrupted WAL"
+    );
+}

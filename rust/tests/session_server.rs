@@ -12,7 +12,12 @@
 //! - the session path and the blocking `/v1/query` path agree
 //!   bit-for-bit on the same sample;
 //! - a repeated-chunk workload drives nonzero `cache_hits` on
-//!   `/metrics`, with identical responses for the cached re-run.
+//!   `/metrics`, with identical responses for the cached re-run;
+//! - the HTTP edge survives hostile framing: bodies split across writes,
+//!   peers that close mid-body, oversized or malformed `Content-Length`,
+//!   and headers dribbled one byte at a time;
+//! - the `minions gateway` front door proxies requests byte-identically
+//!   to a direct worker hit (bodies and event lines agree).
 
 mod testutil;
 
@@ -27,6 +32,7 @@ use minions::protocol::{
 };
 use minions::runtime::Manifest;
 use minions::sched::DynamicBatcher;
+use minions::server::gateway::{GatewayConfig, GatewayServer};
 use minions::server::session::SessionRunner;
 use minions::server::{
     http_delete_raw, http_get, http_get_raw, http_post, http_post_raw, Metrics, Server,
@@ -821,4 +827,257 @@ fn protocols_endpoint_lists_aliases_kinds_and_schema() {
         assert!(schema.get(field).is_some(), "schema missing {field}: {body}");
     }
     batcher.stop();
+}
+
+// ---------------------------------------------------------------------
+// HTTP-edge torture: hostile framing must produce an explicit status (or
+// an explicit counted drop), never a truncated body handed to a route.
+// ---------------------------------------------------------------------
+
+/// Write raw request pieces with a pause between them (so the server
+/// observes genuinely split reads), optionally FIN-ing the write side
+/// mid-request, then read whatever response arrives to EOF. An empty
+/// return means the server (correctly) sent nothing.
+fn raw_pieces(addr: &str, pieces: &[&str], delay_ms: u64, close_early: bool) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    for p in pieces {
+        stream.write_all(p.as_bytes()).unwrap();
+        std::thread::sleep(Duration::from_millis(delay_ms));
+    }
+    if close_early {
+        stream.shutdown(std::net::Shutdown::Write).unwrap();
+    }
+    stream
+        .set_read_timeout(Some(Duration::from_secs(20)))
+        .unwrap();
+    let mut resp = String::new();
+    let _ = stream.read_to_string(&mut resp);
+    resp
+}
+
+/// Poll `/metrics` until the named counter reaches `want` (connection
+/// handling is pooled, so error accounting is asynchronous).
+fn wait_for_counter(addr: &str, key: &str, want: u64) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = Json::parse(&http_get(addr, "/metrics").unwrap()).unwrap();
+        let got = m.get(key).and_then(Json::as_u64).unwrap_or(0);
+        if got >= want {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{key} stuck at {got}, want {want}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn body_split_across_writes_still_parses() {
+    let (state, batcher) = gated_state_with_batcher(1, None);
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    let body = r#"{"dataset":"micro","sample":0,"protocol":"stepped"}"#;
+    let head = format!(
+        "POST /v1/sessions HTTP/1.1\r\nHost: minions\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    // headers in one write, then the body in two halves 30ms apart: the
+    // server must keep reading until Content-Length bytes have arrived
+    let (a, b) = body.split_at(body.len() / 2);
+    let resp = raw_pieces(&addr, &[&head, a, b], 30, false);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("session_id"), "{resp}");
+    batcher.stop();
+}
+
+#[test]
+fn peer_close_mid_body_is_counted_and_never_reaches_a_route() {
+    let (state, batcher) = gated_state_with_batcher(1, None);
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    // claim 100 bytes, send 10, hang up: no reply is possible (the
+    // socket is gone), but the truncated body must not be routed — it
+    // used to arrive looking complete and parse as garbage
+    let head = "POST /v1/sessions HTTP/1.1\r\nHost: minions\r\nContent-Length: 100\r\n\r\n";
+    let resp = raw_pieces(&addr, &[head, r#"{"dataset""#], 30, true);
+    assert!(resp.is_empty(), "no response possible after FIN: {resp:?}");
+    wait_for_counter(&addr, "errors", 1);
+    let m = Json::parse(&http_get(&addr, "/metrics").unwrap()).unwrap();
+    assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(0));
+    batcher.stop();
+}
+
+#[test]
+fn oversized_body_is_413_before_any_allocation() {
+    let (state, batcher) = gated_state_with_batcher(1, None);
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    // 9 MiB claimed against the 8 MiB cap: refused from the header alone,
+    // without waiting for (or buffering) a single body byte
+    let head = format!(
+        "POST /v1/sessions HTTP/1.1\r\nHost: minions\r\nContent-Length: {}\r\n\r\n",
+        9 << 20
+    );
+    let resp = raw_pieces(&addr, &[head.as_str()], 0, false);
+    assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+    assert!(resp.contains("exceeds"), "{resp}");
+    wait_for_counter(&addr, "errors", 1);
+    let m = Json::parse(&http_get(&addr, "/metrics").unwrap()).unwrap();
+    assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(0));
+    batcher.stop();
+}
+
+#[test]
+fn malformed_and_absent_content_length_are_400s() {
+    let (state, batcher) = gated_state_with_batcher(1, None);
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    // unparsable Content-Length: a 400, not a silent zero that drops the
+    // body on the floor
+    let head = "POST /v1/sessions HTTP/1.1\r\nHost: minions\r\nContent-Length: banana\r\n\r\n";
+    let resp = raw_pieces(&addr, &[head], 0, false);
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    assert!(resp.contains("malformed Content-Length"), "{resp}");
+
+    // absent Content-Length on a POST: the body reads as empty and the
+    // route rejects it as bad json — still a 400, never a hang
+    let head = "POST /v1/sessions HTTP/1.1\r\nHost: minions\r\n\r\n{\"dataset\":\"micro\"}";
+    let resp = raw_pieces(&addr, &[head], 0, false);
+    assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+    assert!(resp.contains("bad json"), "{resp}");
+
+    wait_for_counter(&addr, "errors", 2);
+    batcher.stop();
+}
+
+#[test]
+fn headers_dribbled_one_byte_at_a_time_still_complete() {
+    let (state, batcher) = gated_state_with_batcher(1, None);
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    // one byte per write: the incremental terminator scan must stay
+    // linear and the per-read timeout must not fire between bytes
+    let req = "GET /healthz HTTP/1.1\r\nHost: m\r\n\r\n";
+    let pieces: Vec<String> = req.chars().map(|c| c.to_string()).collect();
+    let refs: Vec<&str> = pieces.iter().map(String::as_str).collect();
+    let resp = raw_pieces(&addr, &refs, 2, false);
+    assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+    assert!(resp.contains("\"ok\""), "{resp}");
+    batcher.stop();
+}
+
+// ---------------------------------------------------------------------
+// Gateway proxy parity: the same request through `minions gateway` and
+// against a worker directly must yield byte-identical responses —
+// create bodies, error bodies, and the streamed event lines.
+// ---------------------------------------------------------------------
+
+/// Split a raw chunked-transfer response into its payload lines.
+fn dechunked_lines(raw: &str) -> Vec<String> {
+    let body = raw.split_once("\r\n\r\n").map(|x| x.1).unwrap_or(raw);
+    let mut lines = Vec::new();
+    let mut rest = body;
+    while let Some((size_hex, tail)) = rest.split_once("\r\n") {
+        let Ok(size) = usize::from_str_radix(size_hex.trim(), 16) else {
+            break;
+        };
+        if size == 0 || tail.len() < size {
+            break;
+        }
+        lines.push(tail[..size].trim_end().to_string());
+        rest = tail.get(size + 2..).unwrap_or("");
+    }
+    lines
+}
+
+/// Zero out the wall-clock `latency_ms` field so deterministic runs on
+/// different workers compare equal.
+fn normalize_latency(line: &str) -> String {
+    let mut out = String::new();
+    let mut rest = line;
+    while let Some(pos) = rest.find("\"latency_ms\":") {
+        let after = pos + "\"latency_ms\":".len();
+        out.push_str(&rest[..after]);
+        out.push('0');
+        let tail = &rest[after..];
+        let end = tail
+            .find(|c: char| !(c.is_ascii_digit() || ".eE+-".contains(c)))
+            .unwrap_or(tail.len());
+        rest = &tail[end..];
+    }
+    out.push_str(rest);
+    out
+}
+
+#[test]
+fn gateway_proxies_byte_identical_to_direct_worker() {
+    // two identical single-worker stacks (same seed, same registry): one
+    // hit directly, one only ever reached through the gateway
+    let (state_d, batcher_d) = gated_state_with_batcher(2, None);
+    let (state_g, batcher_g) = gated_state_with_batcher(2, None);
+    let direct = Server::bind(state_d, "127.0.0.1:0", 2).unwrap();
+    let addr_d = direct.addr.to_string();
+    std::thread::spawn(move || direct.serve(None));
+    let worker = Server::bind(state_g, "127.0.0.1:0", 2).unwrap();
+    let addr_w = worker.addr.to_string();
+    std::thread::spawn(move || worker.serve(None));
+
+    let mut cfg = GatewayConfig::new(vec![addr_w.clone()]);
+    cfg.probe_interval = Duration::from_secs(3600); // quiet during the test
+    let gw = GatewayServer::bind(cfg, "127.0.0.1:0", 2).unwrap();
+    let addr_g = gw.addr.to_string();
+    std::thread::spawn(move || gw.serve(None));
+
+    // create: both workers assign session id 1, so the relayed bytes
+    // (status line, headers, body) must match the direct hit exactly
+    let body = r#"{"dataset":"micro","sample":0,"protocol":"stepped"}"#;
+    let raw_d = http_post_raw(&addr_d, "/v1/sessions", body).unwrap();
+    let raw_g = http_post_raw(&addr_g, "/v1/sessions", body).unwrap();
+    assert!(raw_d.starts_with("HTTP/1.1 200"), "{raw_d}");
+    assert_eq!(raw_d, raw_g, "gateway must relay the worker bytes verbatim");
+    let sid = Json::parse(raw_d.split("\r\n\r\n").nth(1).unwrap())
+        .unwrap()
+        .get("session_id")
+        .and_then(Json::as_u64)
+        .unwrap();
+
+    // event streams: identical lines once the wall-clock latency field
+    // is zeroed (everything else is deterministic under the fixed seed)
+    let ev_d = http_get_raw(&addr_d, &format!("/v1/sessions/{sid}/events")).unwrap();
+    let ev_g = http_get_raw(&addr_g, &format!("/v1/sessions/{sid}/events")).unwrap();
+    let lines_d: Vec<String> = dechunked_lines(&ev_d).iter().map(|l| normalize_latency(l)).collect();
+    let lines_g: Vec<String> = dechunked_lines(&ev_g).iter().map(|l| normalize_latency(l)).collect();
+    assert!(!lines_d.is_empty(), "no event lines: {ev_d}");
+    assert!(lines_d.last().unwrap().contains("\"finalized\""), "{lines_d:?}");
+    assert_eq!(lines_d, lines_g, "event lines diverged through the gateway");
+
+    // error parity: a malformed body produces the same 400 either way
+    let err_d = http_post_raw(&addr_d, "/v1/sessions", "{not json").unwrap();
+    let err_g = http_post_raw(&addr_g, "/v1/sessions", "{not json").unwrap();
+    assert!(err_d.starts_with("HTTP/1.1 400"), "{err_d}");
+    assert_eq!(err_d, err_g, "error responses must relay verbatim");
+
+    // the migration endpoint is worker-internal: the front door refuses it
+    let adopt = http_post_raw(&addr_g, "/v1/admin/adopt", r#"{"sid":1}"#).unwrap();
+    assert!(adopt.starts_with("HTTP/1.1 400"), "{adopt}");
+    assert!(adopt.contains("worker-internal"), "{adopt}");
+
+    // fleet metrics: worker counters aggregate, gateway counters appear
+    let m = Json::parse(&http_get(&addr_g, "/metrics").unwrap()).unwrap();
+    assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(1));
+    assert_eq!(m.get("gateway_workers").unwrap().as_u64(), Some(1));
+    assert_eq!(m.get("gateway_workers_alive").unwrap().as_u64(), Some(1));
+    assert!(m.get("gateway_proxied").unwrap().as_u64().unwrap() >= 3);
+    batcher_d.stop();
+    batcher_g.stop();
 }
