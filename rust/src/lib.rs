@@ -32,6 +32,7 @@ pub mod lint;
 pub mod perf;
 pub mod protocol;
 pub mod rag;
+pub mod router;
 pub mod sched;
 pub mod server;
 pub mod model;

@@ -10,7 +10,8 @@
 //!   bench <exhibit>          regenerate a paper table/figure
 //!                            (table1|table2|table3|fig3|fig4|fig5|fig6|fig8|summarization)
 //!                            or a perf report (hotpath → BENCH_runtime_hotpath.json,
-//!                            fleet → BENCH_fleet.json; with `--json`)
+//!                            fleet → BENCH_fleet.json,
+//!                            router → BENCH_router.json; with `--json`)
 //!   lint                     run the repo-invariant static analysis pass
 //!                            (DESIGN.md §10; `--ci` gates, `--write-baseline` ratchets)
 //!
@@ -24,6 +25,9 @@
 //! exactly like an inline server spec (`POST /v1/sessions` with
 //! `"spec"`), so a misspelled protocol, profile, or strategy prints the
 //! same message here that the server returns as a 400.
+//! `--protocol auto` instead folds the flags into an `AutoSpec`
+//! (DESIGN.md §14): every sample is routed through the difficulty
+//! probe + cost function and executed on its chosen rung.
 
 use minions::cache::{ChunkCache, DEFAULT_CACHE_CAPACITY};
 use minions::data;
@@ -184,6 +188,11 @@ fn cmd_run(args: Vec<String>) -> i32 {
             return 2;
         }
     };
+    // the auto meta-kind routes per sample instead of resolving one
+    // spec up front — its own driver below
+    if a.get_or("protocol", "minions") == minions::router::AUTO_KIND {
+        return cmd_run_auto(&a);
+    }
     // validate the requested configuration before any startup work: an
     // unknown protocol/profile/strategy is a usage error (exit 2) with
     // the same message the server would return as a 400
@@ -238,6 +247,151 @@ fn cmd_run(args: Vec<String>) -> i32 {
             1
         }
     }
+}
+
+/// Fold the auto-routing flags into a validated `AutoSpec` — the same
+/// validation path the server's inline `{"kind":"auto"}` spec runs, so
+/// both surfaces report identical messages for the same mistake.
+fn auto_spec_from_args(a: &Args) -> anyhow::Result<minions::router::AutoSpec> {
+    let mut auto = minions::router::AutoSpec::default();
+    if let Some(v) = a.get("local") {
+        auto.local = v.to_string();
+    }
+    if let Some(v) = a.get("remote") {
+        auto.remote = v.to_string();
+    }
+    if let Some(v) = a.get("route-weights") {
+        auto.weights = minions::router::RouteWeights::parse(v)?;
+    }
+    if let Some(v) = a.get("probe-budget") {
+        auto.probe_budget = v.parse().map_err(|_| {
+            anyhow::anyhow!("spec field 'probe_budget' must be a non-negative integer, got {v}")
+        })?;
+    }
+    auto.validate()?;
+    Ok(auto)
+}
+
+/// `minions run --protocol auto`: probe and route every sample through
+/// the difficulty-aware cost function (DESIGN.md §14), then execute the
+/// samples grouped by routed rung. Offline runs see idle scheduler
+/// signals — there is no live queue to observe.
+fn cmd_run_auto(a: &Args) -> i32 {
+    use minions::cost::{CostModel, CostSummary};
+
+    let auto = match auto_spec_from_args(a) {
+        Ok(auto) => auto,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let seed: u64 = a.parse_num("seed", 42);
+    let n: usize = a.parse_num("n", 16);
+    let parallel: usize = a.parse_num("parallel", 1usize).max(1);
+    let mut exp = match exp_from_args(a.get_or("backend", "pjrt"), a, seed) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("startup failed: {e}");
+            return 1;
+        }
+    };
+    apply_cache_flags(&mut exp, a);
+    apply_sched_flags(&exp, a);
+    let factory = exp.factory();
+    let Some(profile) = minions::model::local_profile(&auto.local) else {
+        eprintln!("unknown local profile '{}'", auto.local);
+        return 2;
+    };
+    let probe = match factory.local(profile) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("protocol setup failed: {e}");
+            return 1;
+        }
+    };
+    let ds = data::generate(a.get_or("dataset", "finance"), n, seed);
+    let signals = minions::router::Signals::idle();
+    let mut decisions = Vec::with_capacity(ds.samples.len());
+    for sample in &ds.samples {
+        match minions::router::route_sample(&auto, sample, &probe, &signals) {
+            Ok(d) => decisions.push(d),
+            Err(e) => {
+                eprintln!("routing failed: {e}");
+                return 1;
+            }
+        }
+    }
+    // group samples by routed rung (sample order preserved per group)
+    let mut groups: Vec<(ProtocolSpec, data::Dataset)> = Vec::new();
+    for (sample, decision) in ds.samples.iter().zip(&decisions) {
+        match groups
+            .iter_mut()
+            .find(|(spec, _)| spec.kind == decision.chosen.kind)
+        {
+            Some((_, group)) => group.samples.push(sample.clone()),
+            None => groups.push((
+                decision.chosen.clone(),
+                data::Dataset {
+                    name: ds.name.clone(),
+                    samples: vec![sample.clone()],
+                },
+            )),
+        }
+    }
+    let counts: Vec<String> = groups
+        .iter()
+        .map(|(spec, group)| format!("{}={}", spec.kind.as_str(), group.samples.len()))
+        .collect();
+    println!(
+        "routing: {} (weights {}, probe budget {})",
+        counts.join(" "),
+        auto.weights.as_string(),
+        auto.probe_budget
+    );
+    let mut cost = CostSummary::new(CostModel::GPT4O_JAN2025);
+    let mut score_sum = 0.0;
+    let mut rounds_sum = 0.0;
+    let mut total = 0usize;
+    for (spec, group) in &groups {
+        let protocol = match exp.protocol(spec) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("protocol setup failed: {e}");
+                return 1;
+            }
+        };
+        match run_protocol_parallel(protocol, group, seed, true, parallel) {
+            Ok(r) => {
+                for outcome in &r.outcomes {
+                    cost.push(&outcome.ledger);
+                }
+                score_sum += r.scores.iter().sum::<f64>();
+                rounds_sum += r.mean_rounds * r.n as f64;
+                total += r.n;
+            }
+            Err(e) => {
+                eprintln!("run failed: {e}");
+                return 1;
+            }
+        }
+    }
+    let denom = total.max(1) as f64;
+    let b = exp.batcher_snapshot();
+    println!(
+        "auto on {}: accuracy={:.3} cost=${:.4}/query prefill={:.2}k decode={:.2}k rounds={:.2}",
+        ds.name,
+        score_sum / denom,
+        cost.mean_usd(),
+        cost.mean_prefill_k(),
+        cost.mean_decode_k(),
+        rounds_sum / denom
+    );
+    println!("hot path: {b} ({parallel} threads)");
+    if let Some(c) = exp.cache() {
+        println!("chunk cache: {}", c.snapshot());
+    }
+    0
 }
 
 fn cmd_serve(args: Vec<String>) -> i32 {
@@ -465,10 +619,13 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
     let cli = backend_opt(
         Cli::new("minions bench", "regenerate a paper exhibit or perf report")
             .parallel_opt()
-            .flag("json", "hotpath/fleet: write the minions-bench-v1 JSON report")
+            .flag(
+                "json",
+                "hotpath/fleet/router: write the minions-bench-v1 JSON report",
+            )
             .opt(
                 "out",
-                "hotpath/fleet: report path (default BENCH_<exhibit>.json)",
+                "hotpath/fleet/router: report path (default BENCH_<exhibit>.json)",
                 None,
             )
             .opt("iters", "hotpath: timed kernel iterations per capacity", None)
@@ -487,6 +644,22 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
                 "fleet-step-ms",
                 "fleet: service time per step, milliseconds",
                 None,
+            )
+            .opt(
+                "router-datasets",
+                "router: comma-separated dataset names to sweep",
+                None,
+            )
+            .opt("router-n", "router: samples per dataset arm", None)
+            .opt(
+                "route-weights",
+                "router: latency:cost:quality integer weights",
+                None,
+            )
+            .opt(
+                "probe-budget",
+                "router: probe spans per sample (1..=32)",
+                None,
             ),
     );
     let a = match cli.parse_from(args) {
@@ -501,6 +674,9 @@ fn cmd_bench(mut args: Vec<String>) -> i32 {
     }
     if exhibit == "fleet" {
         return cmd_bench_fleet(&a);
+    }
+    if exhibit == "router" {
+        return cmd_bench_router(&a);
     }
     let seed: u64 = a.parse_num("seed", 42);
     let n: usize = a.parse_num("n", 16);
@@ -614,6 +790,65 @@ fn cmd_bench_fleet(a: &Args) -> i32 {
     };
     if a.flag("json") {
         let path = std::path::PathBuf::from(a.get_or("out", "BENCH_fleet.json"));
+        if let Err(e) = minions::perf::write_report(&path, &report) {
+            eprintln!("bench failed: {e}");
+            return 1;
+        }
+        println!("wrote {}", path.display());
+    } else {
+        println!("{report}");
+    }
+    0
+}
+
+/// `minions bench router [--json] [--out PATH]` — the auto-routing
+/// cost/quality exhibit (DESIGN.md §14): sweeps the `auto` router
+/// against every fixed rung it may choose from, over generated
+/// datasets, on the native backend (synthetic artifacts when the real
+/// set is absent), and reports the measured cost/quality frontier plus
+/// the fixed arms auto dominates outright.
+fn cmd_bench_router(a: &Args) -> i32 {
+    let mut opts = minions::perf::router::RouterOptions {
+        seed: a.parse_num("seed", 42u64),
+        ..Default::default()
+    };
+    opts.n = a.parse_num("router-n", opts.n).max(1);
+    if let Some(list) = a.get("router-datasets") {
+        opts.datasets = list
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+    }
+    if let Some(w) = a.get("route-weights") {
+        opts.weights = match minions::router::RouteWeights::parse(w) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        };
+    }
+    opts.probe_budget = a.parse_num("probe-budget", opts.probe_budget).max(1);
+    // the sweep's profiles span every capacity (local ladder + remote)
+    let capacities = [64usize, 128, 256, 1024];
+    let (manifest, synthetic) = match minions::perf::load_or_synth_manifest(&capacities, opts.seed)
+    {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            return 1;
+        }
+    };
+    let report = match minions::perf::router::router_report(&manifest, &opts, synthetic) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench failed: {e}");
+            return 1;
+        }
+    };
+    if a.flag("json") {
+        let path = std::path::PathBuf::from(a.get_or("out", "BENCH_router.json"));
         if let Err(e) = minions::perf::write_report(&path, &report) {
             eprintln!("bench failed: {e}");
             return 1;

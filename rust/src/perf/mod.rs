@@ -21,9 +21,12 @@
 //! `cargo bench --bench runtime_hotpath -- --json`.
 //!
 //! The gateway scaling exhibit (`minions bench fleet --json`,
-//! `BENCH_fleet.json`) lives in [`fleet`].
+//! `BENCH_fleet.json`) lives in [`fleet`]; the auto-routing
+//! cost/quality exhibit (`minions bench router --json`,
+//! `BENCH_router.json`) lives in [`router`].
 
 pub mod fleet;
+pub mod router;
 
 use crate::cache::{model_fingerprint, CacheKey, ChunkCache};
 use crate::runtime::native::{load_model_weights, score_kernel, NEG_INF};

@@ -1,0 +1,368 @@
+//! `minions bench router` — the auto-routing cost/quality exhibit
+//! (DESIGN.md §14).
+//!
+//! Sweeps the difficulty-aware router (`kind: "auto"`) against every
+//! fixed rung it may choose from, over generated datasets, on the
+//! native backend (synthetic artifacts when the real set is absent, so
+//! the exhibit runs on a fresh checkout). Every arm is a real
+//! [`run_protocol`] run — measured accuracy and measured token ledgers
+//! — and the auto arm replays the router's actual per-sample pipeline:
+//! probe → feature vector → cost function → rung, exactly the path
+//! `minions run --protocol auto` and the server's inline `"auto"`
+//! specs take ([`crate::router`]).
+//!
+//! The report (`BENCH_router.json`, `minions-bench-v1`) carries, per
+//! dataset: each arm's measured (cost, accuracy) point, the auto arm's
+//! routing histogram plus the est-space aggregates of its chosen
+//! rungs, the cost/quality frontier (arms no other arm dominates), and
+//! the fixed arms the auto arm dominates outright (cost ≤ auto's,
+//! accuracy ≤ auto's, one strict).
+//!
+//! The auto arm executes its samples grouped by routed rung — one
+//! [`run_protocol`] per rung over that rung's sub-dataset. Grouping
+//! re-forks the per-sample rng streams inside each group, so a
+//! sample's draw under auto may differ from the same sample under the
+//! fixed arm: the exhibit compares runs, it does not replay one.
+//! Routing itself consumes no rng (DESIGN.md §14).
+
+use crate::cost::{CostModel, CostSummary};
+use crate::data::{self, Dataset};
+use crate::eval::run_protocol;
+use crate::model::local_profile;
+use crate::protocol::{ProtocolFactory, ProtocolKind, ProtocolSpec};
+use crate::router::{self, AutoSpec, RouteDecision, RouteWeights, Signals};
+use crate::runtime::{Backend, Manifest, NativeBackend};
+use crate::sched::{DynamicBatcher, DEFAULT_MAX_WAIT};
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Knobs for [`router_report`]. Defaults suit a CI smoke run.
+pub struct RouterOptions {
+    /// generated datasets to sweep (`data::generate` names)
+    pub datasets: Vec<String>,
+    /// samples per dataset
+    pub n: usize,
+    pub seed: u64,
+    /// the auto arm's latency:cost:quality weights
+    pub weights: RouteWeights,
+    /// spans the confidence probe scores per sample
+    pub probe_budget: usize,
+}
+
+impl Default for RouterOptions {
+    fn default() -> RouterOptions {
+        RouterOptions {
+            datasets: vec![
+                "finance".to_string(),
+                "health".to_string(),
+                "qasper".to_string(),
+            ],
+            n: 16,
+            seed: 42,
+            weights: RouteWeights::default(),
+            probe_budget: router::DEFAULT_PROBE_BUDGET,
+        }
+    }
+}
+
+/// One measured (dataset, arm) point of the sweep.
+struct ArmRow {
+    dataset: String,
+    /// `"auto"` or a fixed rung's wire name
+    arm: String,
+    accuracy: f64,
+    mean_usd: f64,
+    mean_prefill_k: f64,
+    mean_decode_k: f64,
+    mean_rounds: f64,
+    /// auto arm only: per-rung sample counts, ladder order
+    routing: Option<Vec<(ProtocolKind, usize)>>,
+    /// auto arm only: mean est (cost_usd, quality) of the chosen rungs
+    est: Option<(f64, f64)>,
+}
+
+impl ArmRow {
+    fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("dataset", Json::Str(self.dataset.clone())),
+            ("arm", Json::Str(self.arm.clone())),
+            ("accuracy", Json::num(self.accuracy)),
+            ("mean_usd", Json::num(self.mean_usd)),
+            ("mean_prefill_k", Json::num(self.mean_prefill_k)),
+            ("mean_decode_k", Json::num(self.mean_decode_k)),
+            ("mean_rounds", Json::num(self.mean_rounds)),
+            ("method", Json::str("measured")),
+        ];
+        if let Some(routing) = &self.routing {
+            let hist = routing
+                .iter()
+                .map(|(kind, count)| {
+                    Json::obj(vec![
+                        ("kind", Json::str(kind.as_str())),
+                        ("sessions", Json::num(*count as f64)),
+                    ])
+                })
+                .collect();
+            fields.push(("routing", Json::Arr(hist)));
+        }
+        if let Some((est_usd, est_quality)) = self.est {
+            fields.push(("est_mean_usd", Json::num(est_usd)));
+            fields.push(("est_mean_quality", Json::num(est_quality)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Route every sample of `ds` (idle scheduler signals — the bench is
+/// offline), then execute the samples grouped by routed rung.
+fn run_auto_arm(
+    factory: &ProtocolFactory,
+    auto: &AutoSpec,
+    ds: &Dataset,
+    seed: u64,
+) -> Result<ArmRow> {
+    let profile = local_profile(&auto.local)
+        .ok_or_else(|| anyhow!("unknown local profile '{}'", auto.local))?;
+    let probe = factory.local(profile)?;
+    let signals = Signals::idle();
+    let decisions: Vec<RouteDecision> = ds
+        .samples
+        .iter()
+        .map(|s| router::route_sample(auto, s, &probe, &signals))
+        .collect::<Result<_>>()?;
+
+    // group by routed rung, preserving sample order within each group
+    let mut groups: Vec<(ProtocolSpec, Dataset)> = Vec::new();
+    for (sample, decision) in ds.samples.iter().zip(&decisions) {
+        match groups
+            .iter_mut()
+            .find(|(spec, _)| spec.kind == decision.chosen.kind)
+        {
+            Some((_, group)) => group.samples.push(sample.clone()),
+            None => groups.push((
+                decision.chosen.clone(),
+                Dataset {
+                    name: ds.name.clone(),
+                    samples: vec![sample.clone()],
+                },
+            )),
+        }
+    }
+
+    let mut cost = CostSummary::new(CostModel::GPT4O_JAN2025);
+    let mut score_sum = 0.0;
+    let mut rounds_sum = 0.0;
+    let mut n = 0usize;
+    for (spec, sub) in &groups {
+        let protocol = factory.resolve(spec)?;
+        let r = run_protocol(protocol.as_ref(), sub, seed, true)?;
+        for outcome in &r.outcomes {
+            cost.push(&outcome.ledger);
+        }
+        score_sum += r.scores.iter().sum::<f64>();
+        rounds_sum += r.mean_rounds * r.n as f64;
+        n += r.n;
+    }
+    let denom = n.max(1) as f64;
+
+    let routing = router::LADDER
+        .iter()
+        .map(|&kind| {
+            let count = decisions
+                .iter()
+                .filter(|d| d.chosen.kind == kind)
+                .count();
+            (kind, count)
+        })
+        .filter(|(_, count)| *count > 0)
+        .collect();
+    let (mut est_usd, mut est_quality) = (0.0, 0.0);
+    for d in &decisions {
+        if let Some(c) = d.scores.iter().find(|c| c.kind == d.chosen.kind) {
+            est_usd += c.cost_usd;
+            est_quality += c.quality;
+        }
+    }
+
+    Ok(ArmRow {
+        dataset: ds.name.clone(),
+        arm: router::AUTO_KIND.to_string(),
+        accuracy: score_sum / denom,
+        mean_usd: cost.mean_usd(),
+        mean_prefill_k: cost.mean_prefill_k(),
+        mean_decode_k: cost.mean_decode_k(),
+        mean_rounds: rounds_sum / denom,
+        routing: Some(routing),
+        est: Some((
+            est_usd / decisions.len().max(1) as f64,
+            est_quality / decisions.len().max(1) as f64,
+        )),
+    })
+}
+
+fn run_fixed_arm(
+    factory: &ProtocolFactory,
+    spec: &ProtocolSpec,
+    ds: &Dataset,
+    seed: u64,
+) -> Result<ArmRow> {
+    let protocol = factory.resolve(spec)?;
+    let r = run_protocol(protocol.as_ref(), ds, seed, true)?;
+    Ok(ArmRow {
+        dataset: ds.name.clone(),
+        arm: spec.kind.as_str().to_string(),
+        accuracy: r.accuracy,
+        mean_usd: r.mean_usd(),
+        mean_prefill_k: r.cost.mean_prefill_k(),
+        mean_decode_k: r.cost.mean_decode_k(),
+        mean_rounds: r.mean_rounds,
+        routing: None,
+        est: None,
+    })
+}
+
+/// `a` dominates `b` on the (cost, accuracy) plane: no worse on both
+/// axes, strictly better on at least one.
+fn dominates(a: &ArmRow, b: &ArmRow) -> bool {
+    a.mean_usd <= b.mean_usd
+        && a.accuracy >= b.accuracy
+        && (a.mean_usd < b.mean_usd || a.accuracy > b.accuracy)
+}
+
+/// The cost/quality frontier of one dataset's rows: every arm no other
+/// arm dominates.
+fn frontier_arms(rows: &[&ArmRow]) -> Vec<Json> {
+    rows.iter()
+        .filter(|row| !rows.iter().any(|other| dominates(other, row)))
+        .map(|row| Json::Str(row.arm.clone()))
+        .collect()
+}
+
+/// Measure the sweep and build the `minions-bench-v1` report.
+pub fn router_report(manifest: &Manifest, opts: &RouterOptions, synthetic: bool) -> Result<Json> {
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend::new(manifest.clone())?);
+    let batcher = DynamicBatcher::new(Arc::clone(&backend), DEFAULT_MAX_WAIT);
+    let factory = ProtocolFactory::new(backend, batcher, manifest.clone(), None);
+    let auto = AutoSpec {
+        weights: opts.weights,
+        probe_budget: opts.probe_budget,
+        ..AutoSpec::default()
+    };
+    auto.validate()?;
+
+    let mut rows: Vec<ArmRow> = Vec::new();
+    for name in &opts.datasets {
+        let ds = data::generate(name, opts.n, opts.seed);
+        rows.push(run_auto_arm(&factory, &auto, &ds, opts.seed)?);
+        for &kind in &auto.allowed {
+            rows.push(run_fixed_arm(&factory, &auto.candidate(kind), &ds, opts.seed)?);
+        }
+    }
+
+    // per-dataset frontier + the fixed arms auto dominates outright
+    let mut frontier = Vec::new();
+    let mut dominated = Vec::new();
+    for name in &opts.datasets {
+        let dataset_rows: Vec<&ArmRow> = rows.iter().filter(|r| &r.dataset == name).collect();
+        frontier.push(Json::obj(vec![
+            ("dataset", Json::Str(name.clone())),
+            ("arms", Json::Arr(frontier_arms(&dataset_rows))),
+        ]));
+        if let Some(auto_row) = dataset_rows.iter().find(|r| r.arm == router::AUTO_KIND) {
+            for row in &dataset_rows {
+                if row.arm != router::AUTO_KIND && dominates(auto_row, row) {
+                    dominated.push(Json::obj(vec![
+                        ("dataset", Json::Str(name.clone())),
+                        ("arm", Json::Str(row.arm.clone())),
+                    ]));
+                }
+            }
+        }
+    }
+
+    Ok(Json::obj(vec![
+        ("format", Json::str("minions-bench-v1")),
+        ("bench", Json::str("router")),
+        (
+            "producer",
+            Json::str("measured in-process by minions::perf::router::router_report"),
+        ),
+        (
+            "artifacts",
+            Json::str(if synthetic { "synthetic" } else { "real" }),
+        ),
+        (
+            "config",
+            Json::obj(vec![
+                (
+                    "datasets",
+                    Json::Arr(opts.datasets.iter().map(|d| Json::Str(d.clone())).collect()),
+                ),
+                ("n", Json::num(opts.n as f64)),
+                ("seed", Json::num(opts.seed as f64)),
+                ("weights", Json::Str(opts.weights.as_string())),
+                ("probe_budget", Json::num(opts.probe_budget as f64)),
+                (
+                    "allowed",
+                    Json::Arr(
+                        auto.allowed
+                            .iter()
+                            .map(|k| Json::str(k.as_str()))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        ("arms", Json::Arr(rows.iter().map(ArmRow::to_json).collect())),
+        ("frontier", Json::Arr(frontier)),
+        ("dominated", Json::Arr(dominated)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::synth::write_synthetic_artifacts;
+
+    #[test]
+    fn router_report_shape() {
+        let tmp = std::env::temp_dir().join(format!("minions-perf-router-{}", std::process::id()));
+        let manifest = write_synthetic_artifacts(&tmp, &[256, 1024], 64, 5).unwrap();
+        let opts = RouterOptions {
+            datasets: vec!["finance".to_string()],
+            n: 3,
+            seed: 5,
+            weights: RouteWeights::default(),
+            probe_budget: 2,
+        };
+        let report = router_report(&manifest, &opts, true).unwrap();
+        assert_eq!(
+            report.get("format").and_then(Json::as_str),
+            Some("minions-bench-v1")
+        );
+        assert_eq!(report.get("bench").and_then(Json::as_str), Some("router"));
+        let arms = report.get("arms").and_then(Json::as_arr).unwrap();
+        // auto + the 5 default rungs, one dataset
+        assert_eq!(arms.len(), 6);
+        let auto_row = arms
+            .iter()
+            .find(|a| a.get("arm").and_then(Json::as_str) == Some("auto"))
+            .unwrap();
+        let routed: f64 = auto_row
+            .get("routing")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|h| h.get("sessions").and_then(Json::as_f64).unwrap_or(0.0))
+            .sum();
+        assert_eq!(routed, 3.0, "every sample routes to exactly one rung");
+        let frontier = report.get("frontier").and_then(Json::as_arr).unwrap();
+        assert_eq!(frontier.len(), 1);
+        assert!(
+            !frontier[0].get("arms").and_then(Json::as_arr).unwrap().is_empty(),
+            "a cost/quality frontier always has at least one arm"
+        );
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

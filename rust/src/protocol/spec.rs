@@ -96,12 +96,27 @@ impl ProtocolKind {
     }
 
     /// Parse a wire name. The error message is shared verbatim by the
-    /// CLI (`minions run --protocol`) and the server's 400 body.
+    /// CLI (`minions run --protocol`) and the server's 400 body; both
+    /// name `auto`, the routing meta-kind handled *before* this parse
+    /// (see [`crate::router`]) — a spec that reaches here with
+    /// `kind: "auto"` took a path that cannot route it.
     pub fn parse(s: &str) -> Result<ProtocolKind> {
+        if s == "auto" {
+            return Err(anyhow!(
+                "protocol 'auto' is the routing meta-kind and cannot be resolved here \
+                 (concrete kinds: {})",
+                supported_kinds()
+            ));
+        }
         KINDS
             .into_iter()
             .find(|k| k.as_str() == s)
-            .ok_or_else(|| anyhow!("unknown protocol '{s}' (supported: {})", supported_kinds()))
+            .ok_or_else(|| {
+                anyhow!(
+                    "unknown protocol '{s}' (supported: {}, auto)",
+                    supported_kinds()
+                )
+            })
     }
 
     /// Whether this kind runs a local model (consumes the `local` field).
@@ -444,7 +459,9 @@ fn spec_usize(value: &Json, key: &str) -> Result<usize> {
 }
 
 /// FNV-1a, 64-bit (offset 0xcbf29ce484222325, prime 0x100000001b3).
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// Shared with [`crate::router::AutoSpec::fingerprint`] so auto and
+/// concrete specs hash in the same identity space.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;
@@ -653,6 +670,11 @@ mod tests {
         let err = ProtocolKind::parse("minionz").unwrap_err().to_string();
         assert!(err.contains("unknown protocol 'minionz'"), "{err}");
         assert!(err.contains("rag-dense"), "{err}");
+        // the unknown-kind message names the auto meta-kind, and auto
+        // itself is called out as unresolvable on the concrete path
+        assert!(err.contains("auto"), "{err}");
+        let err = ProtocolKind::parse("auto").unwrap_err().to_string();
+        assert!(err.contains("routing meta-kind"), "{err}");
 
         let err = ProtocolSpec::parse(r#"{"kind":"minions","local":"llama-9t"}"#)
             .unwrap_err()

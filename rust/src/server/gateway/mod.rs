@@ -495,6 +495,17 @@ fn meta_route_key(rs: &RecoveredSession) -> Option<u64> {
 fn body_route_key(body: &str) -> u64 {
     let Ok(j) = Json::parse(body) else { return 0 };
     let proto = match j.get("spec") {
+        // the routing meta-kind hashes on its *own* canonical
+        // fingerprint at create time (the rung is not known until the
+        // owning worker probes); once the worker resolves it, the WAL
+        // meta's proto_key holds the resolved spec's fingerprint, so
+        // migration re-keys spec-affine via meta_route_key
+        Some(spec_json) if crate::router::AutoSpec::is_auto(spec_json) => {
+            match crate::router::AutoSpec::from_json(spec_json) {
+                Ok(auto) => format!("auto:{:016x}", auto.fingerprint()),
+                Err(_) => "invalid-spec".to_string(),
+            }
+        }
         Some(spec_json) => match ProtocolSpec::from_json(spec_json) {
             Ok(spec) => format!("spec:{:016x}", spec.fingerprint()),
             Err(_) => "invalid-spec".to_string(),

@@ -21,7 +21,12 @@
 //!   batcher coalescing, chunk cache). Spec validation failures and
 //!   unknown protocol names are **400**s whose body names the problem
 //!   and the registered aliases; 404 is reserved for unknown session
-//!   ids.
+//!   ids. A spec of `{"kind":"auto"}` (or `"protocol":"auto"`) runs the
+//!   difficulty router (`crate::router`) instead: a cached local probe
+//!   plus live scheduler signals pick one concrete rung, the request
+//!   proceeds on the *resolved* spec, and the decision is persisted in
+//!   the session's v3 WAL meta and surfaced as `routed` on the
+//!   response/status bodies and `router_*` counters on `/metrics`.
 //! - `GET  /v1/protocols`  discovery: the registered aliases with their
 //!   canonical specs, the supported kinds, and the spec field schema
 //!   (help + default + applicable kinds per field).
@@ -81,9 +86,10 @@ use crate::cache::ChunkCache;
 use crate::cost::CostModel;
 use crate::data::Dataset;
 use crate::eval::score_strict;
-use crate::model::{local, remote};
+use crate::model::{local, local_profile, remote};
 use crate::protocol::spec::{schema_json, KINDS};
 use crate::protocol::{Protocol, ProtocolFactory, ProtocolSpec};
+use crate::router::{self, AutoSpec};
 use crate::sched::{lane_scope, DynamicBatcher, Lane};
 use crate::util::json::Json;
 use crate::util::pool::Pool;
@@ -122,6 +128,24 @@ pub struct Metrics {
     /// session requests shed with 429 (registry full or scheduler past
     /// high water)
     pub shed: AtomicU64,
+    /// requests routed through the `kind:"auto"` difficulty router
+    pub routed: AtomicU64,
+    /// routing decisions per chosen rung, in `router::LADDER` order
+    pub routed_by_kind: [AtomicU64; router::LADDER.len()],
+}
+
+/// The `/metrics` counter name for each rung the router can choose
+/// (static names: `Json::obj` borrows its keys).
+fn router_counter_name(kind: crate::protocol::spec::ProtocolKind) -> &'static str {
+    use crate::protocol::spec::ProtocolKind::*;
+    match kind {
+        LocalOnly => "router_chosen_local",
+        RagBm25 => "router_chosen_rag_bm25",
+        RagDense => "router_chosen_rag_dense",
+        Minion => "router_chosen_minion",
+        Minions => "router_chosen_minions",
+        RemoteOnly => "router_chosen_remote",
+    }
 }
 
 /// Distinct interactive-lane ids for blocking `/v1/query` runs (counted
@@ -509,6 +533,10 @@ struct RunRequest<'a> {
     sample: &'a crate::data::Sample,
     spec: Option<ProtocolSpec>,
     protocol: Arc<dyn Protocol>,
+    /// the router's decision payload when the request selected
+    /// `kind:"auto"` — persisted in the v3 WAL meta and surfaced on the
+    /// session entry; `None` for concrete selections
+    routed: Option<Json>,
 }
 
 /// Every name a `"protocol"` field may carry, sorted and deduped —
@@ -603,6 +631,75 @@ pub fn default_aliases() -> HashMap<String, ProtocolSpec> {
     aliases
 }
 
+/// Detect an auto selection: an inline `"spec"` whose kind is `auto`,
+/// or the `"protocol": "auto"` shorthand (the all-defaults
+/// [`AutoSpec`]). Runs *before* [`resolve_protocol`], which rejects the
+/// auto kind — auto is a routing decision, not a protocol instance.
+fn auto_selection(body: &Json) -> Result<Option<AutoSpec>, ApiError> {
+    if let Some(spec_json) = body.get("spec") {
+        if AutoSpec::is_auto(spec_json) {
+            if body.get("protocol").is_some() {
+                return Err(bad_request("pass either 'protocol' or 'spec', not both"));
+            }
+            let auto = AutoSpec::from_json(spec_json)
+                .map_err(|e| bad_request(format!("invalid spec: {e}")))?;
+            return Ok(Some(auto));
+        }
+        return Ok(None);
+    }
+    match body.get("protocol") {
+        Some(Json::Str(s)) if s == router::AUTO_KIND => Ok(Some(AutoSpec::default())),
+        _ => Ok(None),
+    }
+}
+
+/// Run the difficulty router for an auto request: probe the sample
+/// through the factory's (cached) local model, snapshot the live
+/// scheduler, pick a rung, and resolve the *chosen* concrete spec —
+/// the WAL identity and cost accounting all key on the resolved spec,
+/// never on the literal `auto`.
+fn route_auto(
+    auto: &AutoSpec,
+    sample: &crate::data::Sample,
+    state: &ServerState,
+) -> Result<(String, Option<ProtocolSpec>, Arc<dyn Protocol>, Json), ApiError> {
+    let Some(factory) = &state.factory else {
+        return Err(bad_request(format!(
+            "this server cannot route 'auto' (no protocol factory attached); \
+             registered protocols: {}",
+            registered_names(state)
+        )));
+    };
+    // AutoSpec validation already vetted the profile name; a miss here
+    // would be a registry drift bug, surfaced as a 400 naming the rung
+    let profile = local_profile(&auto.local).ok_or_else(|| {
+        bad_request(format!("invalid spec: unknown local profile '{}'", auto.local))
+    })?;
+    let probe = factory
+        .local(profile)
+        .map_err(|e| internal(format!("router probe model: {e}")))?;
+    let signals = match &state.batcher {
+        Some(b) => router::Signals::from_snapshot(&b.snapshot(), b.admission_high_water()),
+        None => router::Signals::idle(),
+    };
+    let decision = router::route_sample(auto, sample, &probe, &signals)
+        .map_err(|e| internal(format!("router probe failed: {e}")))?;
+    let spec = decision.chosen.clone();
+    let protocol = factory
+        .resolve(&spec)
+        .map_err(|e| internal(format!("routed spec resolution failed: {e}")))?;
+    state.metrics.routed.fetch_add(1, Ordering::Relaxed);
+    if let Some(counter) = state
+        .metrics
+        .routed_by_kind
+        .get(router::ladder_index(spec.kind))
+    {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+    let proto_key = format!("spec:{:016x}", spec.fingerprint());
+    Ok((proto_key, Some(spec), protocol, decision.to_json()))
+}
+
 fn parse_run_request<'a>(body: &str, state: &'a ServerState) -> Result<RunRequest<'a>, ApiError> {
     let body = Json::parse(body).map_err(|e| bad_request(format!("bad json: {e}")))?;
     let dataset = body
@@ -623,7 +720,16 @@ fn parse_run_request<'a>(body: &str, state: &'a ServerState) -> Result<RunReques
         .samples
         .get(sample_id)
         .ok_or_else(|| bad_request(format!("sample {sample_id} out of range")))?;
-    let (proto_key, spec, protocol) = resolve_protocol(&body, state)?;
+    let (proto_key, spec, protocol, routed) = match auto_selection(&body)? {
+        Some(auto) => {
+            let (key, spec, protocol, decision) = route_auto(&auto, sample, state)?;
+            (key, spec, protocol, Some(decision))
+        }
+        None => {
+            let (key, spec, protocol) = resolve_protocol(&body, state)?;
+            (key, spec, protocol, None)
+        }
+    };
     Ok(RunRequest {
         dataset: dataset.to_string(),
         proto_key,
@@ -631,6 +737,7 @@ fn parse_run_request<'a>(body: &str, state: &'a ServerState) -> Result<RunReques
         sample,
         spec,
         protocol,
+        routed,
     })
 }
 
@@ -668,13 +775,23 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                     ),
                     (
                         "kinds",
-                        Json::Arr(KINDS.iter().map(|k| Json::str(k.as_str())).collect()),
+                        Json::Arr(
+                            KINDS
+                                .iter()
+                                .map(|k| Json::str(k.as_str()))
+                                .chain(std::iter::once(Json::str(router::AUTO_KIND)))
+                                .collect(),
+                        ),
                     ),
                     (
                         "accepts_inline_specs",
                         Json::Bool(state.factory.is_some()),
                     ),
                     ("schema", schema_json()),
+                    // the routing meta-kind's own per-field schema and
+                    // defaults (route weights, probe budget, allowed
+                    // rungs) — enough to compose a {"kind":"auto"} spec
+                    ("auto", router::auto_schema_json()),
                 ])
                 .to_string(),
             ))
@@ -737,6 +854,16 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                     Json::num(state.sessions.wal_bytes() as f64),
                 ),
             ];
+            fields.push((
+                "router_requests",
+                Json::num(m.routed.load(Ordering::Relaxed) as f64),
+            ));
+            for (kind, counter) in router::LADDER.iter().zip(m.routed_by_kind.iter()) {
+                fields.push((
+                    router_counter_name(*kind),
+                    Json::num(counter.load(Ordering::Relaxed) as f64),
+                ));
+            }
             let wal = state.sessions.wal_stats();
             fields.push(("wal_errors", Json::num(wal.errors as f64)));
             fields.push(("wal_fsyncs", Json::num(wal.fsyncs as f64)));
@@ -849,27 +976,28 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
             m.latency_us_total
                 .fetch_add(latency.as_micros() as u64, Ordering::Relaxed);
 
-            Ok(Reply::Json(
-                Json::obj(vec![
-                    ("protocol", Json::str(run.protocol.name())),
-                    ("correct", Json::Bool(s >= 0.999)),
-                    ("rounds", Json::num(outcome.rounds as f64)),
-                    (
-                        "usd",
-                        Json::num(CostModel::GPT4O_JAN2025.usd(&outcome.ledger)),
-                    ),
-                    (
-                        "remote_prefill",
-                        Json::num(outcome.ledger.remote_prefill as f64),
-                    ),
-                    (
-                        "remote_decode",
-                        Json::num(outcome.ledger.remote_decode as f64),
-                    ),
-                    ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
-                ])
-                .to_string(),
-            ))
+            let mut fields = vec![
+                ("protocol", Json::str(run.protocol.name())),
+                ("correct", Json::Bool(s >= 0.999)),
+                ("rounds", Json::num(outcome.rounds as f64)),
+                (
+                    "usd",
+                    Json::num(CostModel::GPT4O_JAN2025.usd(&outcome.ledger)),
+                ),
+                (
+                    "remote_prefill",
+                    Json::num(outcome.ledger.remote_prefill as f64),
+                ),
+                (
+                    "remote_decode",
+                    Json::num(outcome.ledger.remote_decode as f64),
+                ),
+                ("latency_ms", Json::num(latency.as_secs_f64() * 1e3)),
+            ];
+            if let Some(routed) = &run.routed {
+                fields.push(("routed", routed.clone()));
+            }
+            Ok(Reply::Json(Json::obj(fields).to_string()))
         }
         ("POST", "/v1/sessions") => {
             // admission control, two gates (429 + Retry-After, counted in
@@ -890,12 +1018,16 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
             let rng = Rng::seed_from(state.seed ^ run.sample_id as u64);
             // spec-bearing requests (inline specs and spec-backed
             // aliases) write v2 meta records: the WAL carries the
-            // canonical spec, so recovery needs no matching registry
+            // canonical spec, so recovery needs no matching registry.
+            // Auto-routed requests additionally carry the routing
+            // decision (v3) — the spec field already holds the resolved
+            // rung, so replay never re-probes.
             let meta = wal::WalMeta {
                 proto_key: run.proto_key.clone(),
                 dataset: run.dataset.clone(),
                 sample: run.sample_id,
                 spec: run.spec.clone(),
+                routed: run.routed.clone(),
             };
             let Some(entry) = state.sessions.spawn_capped(
                 &run.protocol,
@@ -912,18 +1044,19 @@ fn route(req: &HttpRequest, state: &ServerState) -> Result<Reply, ApiError> {
                     state.max_sessions
                 )));
             };
-            Ok(Reply::Json(
-                Json::obj(vec![
-                    ("session_id", Json::num(entry.id as f64)),
-                    ("protocol", Json::str(entry.protocol.clone())),
-                    ("status", Json::str("running")),
-                    (
-                        "events",
-                        Json::str(format!("/v1/sessions/{}/events", entry.id)),
-                    ),
-                ])
-                .to_string(),
-            ))
+            let mut fields = vec![
+                ("session_id", Json::num(entry.id as f64)),
+                ("protocol", Json::str(entry.protocol.clone())),
+                ("status", Json::str("running")),
+                (
+                    "events",
+                    Json::str(format!("/v1/sessions/{}/events", entry.id)),
+                ),
+            ];
+            if let Some(routed) = &entry.routed {
+                fields.push(("routed", routed.clone()));
+            }
+            Ok(Reply::Json(Json::obj(fields).to_string()))
         }
         ("POST", "/v1/admin/adopt") => {
             // fleet-internal migration endpoint (DESIGN.md §13): the

@@ -110,7 +110,14 @@ impl SessionStatus {
 /// computes.
 pub struct SessionEntry {
     pub id: u64,
+    /// The *resolved* protocol name — for an auto-routed session this is
+    /// the chosen concrete rung (e.g. `spec:…`/`minions`), never the
+    /// literal `auto`, so status bodies and cost accounting stay truthful
     pub protocol: String,
+    /// The router's decision payload for auto-routed sessions (the same
+    /// JSON persisted in the v3 WAL meta), surfaced on the status body;
+    /// `None` for sessions whose spec was concrete from the start
+    pub routed: Option<Json>,
     inner: Mutex<EntryInner>,
     events_cv: Condvar,
 }
@@ -221,6 +228,9 @@ impl SessionEntry {
             ("events", Json::num(inner.events.len() as f64)),
             ("durable", Json::Bool(inner.wal.is_some())),
         ];
+        if let Some(routed) = &self.routed {
+            fields.push(("routed", routed.clone()));
+        }
         if let Some(result) = &inner.result {
             match inner.status {
                 SessionStatus::Failed => fields.push(("error", Json::str(result.clone()))),
@@ -418,6 +428,9 @@ struct RestoredState {
     steps: u64,
     backoffs: u64,
     truth: Answer,
+    /// v3 meta only: the persisted routing decision, re-surfaced on the
+    /// restored entry's status body exactly as the original emitted it
+    routed: Option<Json>,
 }
 
 /// What a completed step asks the worker loop to do with the session.
@@ -651,9 +664,11 @@ impl SessionRunner {
             }
             _ => None,
         };
+        let routed = meta.as_ref().and_then(|m| m.routed.clone());
         let entry = Arc::new(SessionEntry {
             id,
             protocol: protocol.name(),
+            routed,
             inner: Mutex::new(EntryInner {
                 session: Some(protocol.session(sample)),
                 rng,
@@ -1146,11 +1161,11 @@ impl SessionRunner {
             return Err(anyhow!("first record is not a meta record"));
         }
         let version = meta.get("version").and_then(Json::as_u64).unwrap_or(0);
-        if version != wal::WAL_META_V1 && version != wal::WAL_META_V2 {
+        if !(wal::WAL_META_V1..=wal::WAL_META_V3).contains(&version) {
             return Err(anyhow!(
-                "wal meta version {version}, want {} or {}",
+                "wal meta version {version}, want {}..={}",
                 wal::WAL_META_V1,
-                wal::WAL_META_V2
+                wal::WAL_META_V3
             ));
         }
         let proto_key = meta
@@ -1165,17 +1180,20 @@ impl SessionRunner {
             .get("sample")
             .and_then(Json::as_u64)
             .ok_or_else(|| anyhow!("meta missing sample"))? as usize;
-        // v2: the embedded spec is the protocol's identity — rebuild it
-        // through the factory with no registry dependency; v1 (or a
-        // factory-less runner) resolves the registry key instead
+        // v2/v3: the embedded spec is the protocol's identity — rebuild
+        // it through the factory with no registry dependency; v1 (or a
+        // factory-less runner) resolves the registry key instead. A v3
+        // meta additionally carries the router's `routed` decision, but
+        // its `spec` already holds the *resolved* concrete rung, so
+        // replay resolves it exactly like v2 and never re-probes.
         let from_registry = |key: &str| -> Result<Arc<dyn Protocol>> {
             let found = ctx.protocols.get(key).cloned();
             found.ok_or_else(|| anyhow!("unknown protocol '{key}'"))
         };
-        let protocol: Arc<dyn Protocol> = if version == wal::WAL_META_V2 {
+        let protocol: Arc<dyn Protocol> = if version >= wal::WAL_META_V2 {
             let spec_json = meta
                 .get("spec")
-                .ok_or_else(|| anyhow!("v2 meta missing spec"))?;
+                .ok_or_else(|| anyhow!("v{version} meta missing spec"))?;
             let spec = ProtocolSpec::from_json(spec_json)?;
             match ctx.factory {
                 Some(f) => f.resolve(&spec)?,
@@ -1184,6 +1202,7 @@ impl SessionRunner {
         } else {
             from_registry(proto_key)?
         };
+        let routed = meta.get("routed").cloned();
         let dataset = ctx.datasets.get(dataset_name);
         let sample = dataset
             .and_then(|ds| ds.samples.get(sample_idx))
@@ -1247,6 +1266,7 @@ impl SessionRunner {
             steps: steps.len() as u64,
             backoffs,
             truth: sample.query.answer.clone(),
+            routed,
         }))
     }
 
@@ -1263,6 +1283,7 @@ impl SessionRunner {
         let entry = Arc::new(SessionEntry {
             id,
             protocol: state.protocol.name(),
+            routed: state.routed,
             inner: Mutex::new(EntryInner {
                 session: Some(state.session),
                 rng: state.rng,

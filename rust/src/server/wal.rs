@@ -15,7 +15,7 @@
 //!
 //! | type        | carries                                              |
 //! |-------------|------------------------------------------------------|
-//! | `meta`      | protocol registry key + name, dataset, sample, seed rng; v2 additionally embeds the canonical `ProtocolSpec` |
+//! | `meta`      | protocol registry key + name, dataset, sample, seed rng; v2 additionally embeds the canonical `ProtocolSpec`; v3 additionally embeds the auto router's `routed` decision payload |
 //! | `step`      | a non-terminal event, post-step rng checkpoint, and the session's state snapshot |
 //! | `finalized` | the full `Outcome` (answer, ledger, transcript) + rng |
 //! | `failed`    | the error message (terminal)                         |
@@ -26,8 +26,13 @@
 //! A v2 meta (written whenever the session was constructed from a
 //! [`ProtocolSpec`] — inline server specs and registered aliases alike)
 //! embeds the spec's canonical JSON, so recovery rebuilds the protocol
-//! through the `ProtocolFactory` with no registry at all. v1 logs keep
-//! replaying through the registry path forever.
+//! through the `ProtocolFactory` with no registry at all. A v3 meta is
+//! a v2 meta plus the `routed` payload of an auto-routed session
+//! ([`crate::router::RouteDecision::to_json`]): the spec field already
+//! holds the *resolved* concrete spec, so replay resolves it exactly
+//! like v2 and never re-probes — the routing decision is data, not
+//! code, on the recovery path. v1 logs keep replaying through the
+//! registry path forever.
 //!
 //! Recovery (`SessionRunner::recover`) scans the directory, validates
 //! each log's longest intact prefix — a torn or corrupt tail (partial
@@ -56,9 +61,15 @@ pub mod segment;
 pub const WAL_META_V1: u64 = 1;
 
 /// Meta record v2: the body additionally embeds the canonical
-/// [`ProtocolSpec`], making recovery registry-independent. Recovery
-/// accepts both; anything else is refused instead of misread.
+/// [`ProtocolSpec`], making recovery registry-independent.
 pub const WAL_META_V2: u64 = 2;
+
+/// Meta record v3: a v2 body plus the auto router's `routed` decision
+/// payload. The embedded spec is the *resolved* concrete spec, so the
+/// replay path is v2's; the payload rides along for status surfacing
+/// and audit. Recovery accepts v1..=v3; anything else is refused
+/// instead of misread.
+pub const WAL_META_V3: u64 = 3;
 
 // ---------------------------------------------------------------------
 // CRC-32 (IEEE 802.3), table-driven, built at compile time.
@@ -146,13 +157,20 @@ pub struct WalMeta {
     /// `Some` ⇒ the meta record is written as v2 with the canonical
     /// spec embedded; `None` ⇒ a v1 record (registry-resolved replay)
     pub spec: Option<ProtocolSpec>,
+    /// `Some` ⇒ the session was auto-routed and the meta is written as
+    /// v3 with the decision payload embedded (requires `spec` to hold
+    /// the resolved concrete spec). All floats inside the payload are
+    /// hex bit patterns, so it re-encodes byte-identically.
+    pub routed: Option<Json>,
 }
 
 pub fn meta_body(meta: &WalMeta, proto_name: &str, rng: &Rng) -> Json {
-    let version = if meta.spec.is_some() {
-        WAL_META_V2
-    } else {
-        WAL_META_V1
+    let version = match (&meta.spec, &meta.routed) {
+        (Some(_), Some(_)) => WAL_META_V3,
+        (Some(_), None) => WAL_META_V2,
+        // a routed payload without a resolved spec has no replay path;
+        // fall back to v1 rather than write an unreadable record
+        (None, _) => WAL_META_V1,
     };
     let mut fields = vec![
         ("type", Json::str("meta")),
@@ -165,6 +183,9 @@ pub fn meta_body(meta: &WalMeta, proto_name: &str, rng: &Rng) -> Json {
     ];
     if let Some(spec) = &meta.spec {
         fields.push(("spec", spec.canonical()));
+        if let Some(routed) = &meta.routed {
+            fields.push(("routed", routed.clone()));
+        }
     }
     Json::obj(fields)
 }
@@ -429,6 +450,7 @@ mod tests {
                 dataset: "d".into(),
                 sample: 0,
                 spec: None,
+                routed: None,
             },
             "proto",
             &Rng::seed_from(1),
@@ -461,6 +483,38 @@ mod tests {
         drop(wal);
         assert_eq!(std::fs::read(&path).unwrap(), bytes);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn meta_version_tracks_spec_and_routed_payloads() {
+        let rng = Rng::seed_from(9);
+        let mut meta = WalMeta {
+            proto_key: "spec:0".into(),
+            dataset: "d".into(),
+            sample: 1,
+            spec: None,
+            routed: None,
+        };
+        let v = |m: &WalMeta| {
+            meta_body(m, "minions", &rng)
+                .get("version")
+                .and_then(Json::as_u64)
+                .unwrap()
+        };
+        assert_eq!(v(&meta), WAL_META_V1);
+        meta.spec = Some(ProtocolSpec::minions("llama-8b", "gpt-4o"));
+        assert_eq!(v(&meta), WAL_META_V2);
+        let decision = Json::obj(vec![("chosen_kind", Json::str("minions"))]);
+        meta.routed = Some(decision.clone());
+        assert_eq!(v(&meta), WAL_META_V3);
+        let body = meta_body(&meta, "minions", &rng);
+        assert_eq!(body.get("routed"), Some(&decision));
+        assert!(body.get("spec").is_some());
+        // routed without a spec has no replay path: degrade to v1
+        meta.spec = None;
+        let body = meta_body(&meta, "minions", &rng);
+        assert_eq!(body.get("version").and_then(Json::as_u64), Some(WAL_META_V1));
+        assert!(body.get("routed").is_none());
     }
 
     #[test]

@@ -122,7 +122,7 @@ impl Cli {
         // did not pass, so the spec layer stays the single source
         self.opt(
             "protocol",
-            "local|remote|minion|minions|rag-bm25|rag-dense",
+            "local|remote|minion|minions|rag-bm25|rag-dense|auto",
             Some("minions"),
         )
         .opt("local", "local model profile", Some(crate::protocol::spec::DEFAULT_LOCAL))
@@ -133,6 +133,16 @@ impl Cli {
         .opt("pages-per-chunk", "chunking granularity 1..4", None)
         .opt("strategy", "retries|scratchpad", None)
         .opt("top-k", "RAG retrieved chunks", None)
+        .opt(
+            "route-weights",
+            "auto: latency:cost:quality integer weights, e.g. 1:1:1",
+            None,
+        )
+        .opt(
+            "probe-budget",
+            "auto: spans scored by the local confidence probe (1..=32)",
+            None,
+        )
     }
 
     /// The engine worker-pool knob shared by the binaries: how many

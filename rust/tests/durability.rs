@@ -24,12 +24,14 @@
 mod testutil;
 
 use minions::data::Sample;
-use minions::protocol::{Protocol, ProtocolSession, SessionEvent};
+use minions::protocol::{Protocol, ProtocolKind, ProtocolSession, SessionEvent};
+use minions::router::{self, AutoSpec};
 use minions::server::session::{CancelOutcome, SessionRunner, SessionStatus, WalMode};
 use minions::server::wal::segment::{self, SegmentConfig};
 use minions::server::wal::{self, WalMeta};
 use minions::util::json::Json;
 use minions::util::rng::Rng;
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Duration;
@@ -68,6 +70,7 @@ fn wal_meta(proto_key: &str, sample: usize) -> WalMeta {
         } else {
             None
         },
+        routed: None,
     }
 }
 
@@ -756,6 +759,163 @@ fn legacy_per_session_wal_migrates_into_segments_and_converges() {
             "migrate cut {cut}: records"
         );
         assert_eq!(rng, base.rng_final, "migrate cut {cut}: rng state");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Auto-routed sessions (DESIGN.md §14): the v3 meta embeds BOTH the
+// resolved concrete spec and the router's decision payload, so
+// kill-and-recover needs neither a registry entry nor a re-probe — the
+// replayed session runs the originally routed rung byte for byte, and
+// the restored status body re-surfaces the original decision verbatim.
+// Auto metas are v3 regardless of the MINIONS_WAL_META matrix leg (that
+// env toggle covers legacy registry protocols, not routed sessions).
+// ---------------------------------------------------------------------
+
+/// Route sample `sample` through the real probe + cost function, assert
+/// the policy deterministically picked `expect`, run the routed session
+/// to completion on a durable runner, and return the baseline plus the
+/// decision's canonical payload bytes.
+fn run_auto_baseline(
+    case: &str,
+    auto_json: &str,
+    expect: ProtocolKind,
+    sample: usize,
+) -> (Baseline, String) {
+    let auto = AutoSpec::parse(auto_json).unwrap();
+    let dir = case_dir(case);
+    let s = stack();
+    let f = factory(&s);
+    let ds = datasets();
+    let sample_ref = &ds.get("micro").unwrap().samples[sample];
+    let decision =
+        router::route_sample(&auto, sample_ref, &s.local, &router::Signals::idle()).unwrap();
+    assert_eq!(decision.chosen.kind, expect, "{:?}", decision.scores);
+    let routed_bytes = decision.to_json().to_string();
+    let proto = f.resolve(&decision.chosen).unwrap();
+    let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+    let meta = WalMeta {
+        proto_key: format!("spec:{:016x}", decision.chosen.fingerprint()),
+        dataset: "micro".to_string(),
+        sample,
+        spec: Some(decision.chosen.clone()),
+        routed: Some(decision.to_json()),
+    };
+    let entry = runner.spawn_durable(
+        &proto,
+        sample_ref,
+        Rng::seed_from(SEED ^ sample as u64),
+        None,
+        meta,
+    );
+    assert_eq!(
+        entry.wait_done(),
+        SessionStatus::Done,
+        "auto baseline must finish: {}",
+        entry.status_json()
+    );
+    // the live entry already surfaces the decision on its status body
+    let status = Json::parse(&entry.status_json()).unwrap();
+    assert_eq!(
+        status.get("routed").map(|r| r.to_string()),
+        Some(routed_bytes.clone())
+    );
+    let rng_final = entry.rng_state();
+    let id = entry.id;
+    runner.shutdown();
+    s.batcher.stop();
+    let lines = session_lines(&dir, id);
+    // the meta record is v3: resolved spec AND routing decision embedded
+    let meta_rec = Json::parse(&lines[0]).unwrap();
+    let body = meta_rec.get("body").unwrap();
+    assert_eq!(body.get("version").and_then(Json::as_u64), Some(3));
+    assert_eq!(
+        body.get("spec").unwrap().to_string(),
+        decision.chosen.canonical_string()
+    );
+    assert_eq!(body.get("routed").unwrap().to_string(), routed_bytes);
+    let outcome = finalized_outcome(&lines);
+    (
+        Baseline {
+            id,
+            lines,
+            rng_final,
+            outcome,
+        },
+        routed_bytes,
+    )
+}
+
+/// The durability matrix's auto rows: an auto spec routed to MinionS
+/// and one routed to LocalOnly, each killed at every record boundary
+/// and recovered with an EMPTY protocol registry — the v3 meta alone
+/// (resolved spec + persisted decision) must reproduce the
+/// uninterrupted run byte for byte, without re-running the probe.
+#[test]
+fn auto_routed_sessions_recover_bit_identical_with_an_empty_registry() {
+    // quality-first over {local, minions} always escalates to MinionS
+    // (its estimate dominates LocalOnly's at every difficulty);
+    // cost-first over the full ladder always stays local (the only
+    // zero-dollar rung) — both decisions are deterministic in the
+    // probe's features.
+    let cases = [
+        (
+            "minions",
+            r#"{"kind":"auto","local":"llama-3b","route_weights":"0:0:1","allowed":["local","minions"]}"#,
+            ProtocolKind::Minions,
+        ),
+        (
+            "local",
+            r#"{"kind":"auto","local":"llama-3b","route_weights":"0:1:0"}"#,
+            ProtocolKind::LocalOnly,
+        ),
+    ];
+    for (tag, auto_json, expect) in cases {
+        let (base, routed_bytes) =
+            run_auto_baseline(&format!("auto-base-{tag}"), auto_json, expect, 0);
+        let n = base.lines.len();
+        assert!(n >= 2, "auto-{tag}: wal has meta + finalized at least");
+        for cut in 1..n {
+            let dir = case_dir(&format!("auto-cut-{tag}-{cut}"));
+            write_session_wal(&dir, base.id, &base.lines[..cut], None);
+            let s = stack();
+            let f = factory(&s);
+            let runner = SessionRunner::with_wal(1, TTL, &dir).unwrap();
+            let empty: HashMap<String, Arc<dyn Protocol>> = HashMap::new();
+            let report = runner.recover(&datasets(), &empty, Some(&f), None);
+            assert_eq!(
+                report.resumed, 1,
+                "auto-{tag} cut {cut}: the v3 meta alone must resume"
+            );
+            let entry = runner.get(base.id).expect("recovered under its original id");
+            assert_eq!(entry.wait_done(), SessionStatus::Done);
+            // the restored status body re-surfaces the persisted
+            // decision verbatim and names the resolved rung, not "auto"
+            let status = Json::parse(&entry.status_json()).unwrap();
+            assert_eq!(
+                status.get("routed").map(|r| r.to_string()),
+                Some(routed_bytes.clone()),
+                "auto-{tag} cut {cut}: decision must replay, never re-probe"
+            );
+            assert_ne!(
+                status.get("protocol").and_then(Json::as_str),
+                Some("auto"),
+                "status names the resolved rung"
+            );
+            assert_eq!(
+                entry.rng_state(),
+                base.rng_final,
+                "auto-{tag} cut {cut}: rng stream must land on the same state"
+            );
+            runner.shutdown();
+            s.batcher.stop();
+            let lines = session_lines(&dir, base.id);
+            assert_eq!(
+                lines, base.lines,
+                "auto-{tag} cut {cut}: recovered WAL must be byte-identical"
+            );
+            assert_eq!(finalized_outcome(&lines), base.outcome);
+        }
     }
 }
 

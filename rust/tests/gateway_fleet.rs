@@ -201,3 +201,123 @@ fn killed_worker_session_migrates_to_peer_byte_identically() {
         "adopted WAL must be byte-identical to the uninterrupted WAL"
     );
 }
+
+/// The auto satellite of the migration acceptance: a session created
+/// from an inline `{"kind":"auto"}` spec is killed mid-run and adopted
+/// by a peer, which resumes the *originally routed* rung from the v3
+/// meta — the same decision bytes, never a re-probe (the peer's live
+/// queue state differs, so a re-probe could route differently).
+#[test]
+fn auto_session_migrates_and_peer_resumes_the_routed_rung() {
+    // ---- uninterrupted reference: one HTTP auto run on worker R -----
+    let dir_r = case_dir("fleet-auto-ref");
+    let (state_r, batcher_r, runner_r) = worker_state(&dir_r);
+    let server_r = Server::bind(state_r, "127.0.0.1:0", 2).unwrap();
+    let addr_r = server_r.addr.to_string();
+    std::thread::spawn(move || server_r.serve(None));
+
+    // quality-first over {local, minions} deterministically escalates
+    // to MinionS whatever the probe reports — the decision is stable
+    // even though live scheduler signals feed the generic cost function
+    let body = http_post(
+        &addr_r,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"spec":{"kind":"auto","local":"llama-3b","route_weights":"0:0:1","allowed":["local","minions"]}}"#,
+    )
+    .unwrap();
+    let resp = Json::parse(&body).unwrap();
+    let sid = resp.get("session_id").and_then(Json::as_u64).unwrap();
+    let routed = resp.get("routed").expect("create response carries the decision");
+    assert_eq!(
+        routed.get("chosen_kind").and_then(Json::as_str),
+        Some("minions"),
+        "{routed}"
+    );
+    assert_ne!(
+        resp.get("protocol").and_then(Json::as_str),
+        Some("auto"),
+        "the create response names the resolved rung"
+    );
+    let routed_bytes = routed.to_string();
+    let ref_lines = event_lines(&addr_r, sid); // events-to-EOF barrier
+    assert!(
+        ref_lines.last().unwrap().contains("\"finalized\""),
+        "{ref_lines:?}"
+    );
+    runner_r.shutdown();
+    batcher_r.stop();
+    let base_lines = segment_lines_for(&dir_r, sid);
+    assert!(
+        base_lines.len() >= 3,
+        "need meta + step(s) + finalized, got {}",
+        base_lines.len()
+    );
+    // the meta record is v3: resolved spec + the decision, never "auto"
+    let meta = Json::parse(&base_lines[0]).unwrap();
+    let mbody = meta.get("body").unwrap();
+    assert_eq!(mbody.get("version").and_then(Json::as_u64), Some(3));
+    assert_eq!(mbody.get("routed").unwrap().to_string(), routed_bytes);
+
+    // ---- crash state: worker A is a WAL prefix + a dead address -----
+    let root = case_dir("fleet-auto-migration");
+    let dir_a = root.join("worker-0");
+    let dir_b = root.join("worker-1");
+    std::fs::create_dir_all(&dir_a).unwrap();
+    std::fs::create_dir_all(&dir_b).unwrap();
+    write_wal(&segment::segment_path(&dir_a, 0), &base_lines[..2], None);
+    let dead_addr = {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+
+    // ---- the surviving peer and the gateway over both ---------------
+    let (state_b, batcher_b, runner_b) = worker_state(&dir_b);
+    let server_b = Server::bind(state_b, "127.0.0.1:0", 2).unwrap();
+    let addr_b = server_b.addr.to_string();
+    std::thread::spawn(move || server_b.serve(None));
+
+    let mut cfg = GatewayConfig::new(vec![dead_addr, addr_b.clone()]);
+    cfg.state_root = Some(root.clone());
+    cfg.probe_interval = Duration::from_millis(50);
+    cfg.probe_fails = 1;
+    let gw = GatewayServer::bind(cfg, "127.0.0.1:0", 4).unwrap();
+    let addr_g = gw.addr.to_string();
+    std::thread::spawn(move || gw.serve(None));
+
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let m = Json::parse(&http_get(&addr_g, "/metrics").unwrap()).unwrap();
+        if m.get("gateway_sessions_migrated").and_then(Json::as_u64) >= Some(1) {
+            assert_eq!(m.get("gateway_migrate_failures").unwrap().as_u64(), Some(0));
+            break;
+        }
+        assert!(Instant::now() < deadline, "migration never completed: {m}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // the adopted session finishes on the originally routed rung and
+    // its status body re-surfaces the persisted decision verbatim
+    let migrated_lines = event_lines(&addr_g, sid);
+    assert_eq!(
+        migrated_lines, ref_lines,
+        "migrated auto session's event stream must match the uninterrupted run"
+    );
+    let status = Json::parse(&http_get(&addr_g, &format!("/v1/sessions/{sid}")).unwrap()).unwrap();
+    assert_eq!(status.get("status").and_then(Json::as_str), Some("done"));
+    assert_eq!(
+        status.get("routed").map(|r| r.to_string()),
+        Some(routed_bytes),
+        "adopted session must carry the original decision, not a re-probe"
+    );
+    assert_ne!(status.get("protocol").and_then(Json::as_str), Some("auto"));
+
+    // the peer's re-persisted WAL converged to the baseline bytes —
+    // including the v3 meta record with the routing decision
+    runner_b.shutdown();
+    batcher_b.stop();
+    assert_eq!(
+        segment_lines_for(&dir_b, sid),
+        base_lines,
+        "adopted WAL must be byte-identical to the uninterrupted WAL"
+    );
+}

@@ -39,6 +39,7 @@ fn spec_meta(spec: &ProtocolSpec, sample: usize) -> WalMeta {
         dataset: "micro".to_string(),
         sample,
         spec: Some(spec.clone()),
+        routed: None,
     }
 }
 

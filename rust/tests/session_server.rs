@@ -770,6 +770,7 @@ fn invalid_inline_specs_are_structured_400s() {
     assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
     assert!(raw.contains("unknown protocol 'minionz'"), "{raw}");
     assert!(raw.contains("rag-dense"), "must list supported kinds: {raw}");
+    assert!(raw.contains("auto"), "unknown-kind 400 must name auto: {raw}");
     // unknown profile rung
     let raw = http_post_raw(
         &addr,
@@ -797,10 +798,27 @@ fn invalid_inline_specs_are_structured_400s() {
     .unwrap();
     assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
     assert!(raw.contains("not both"), "{raw}");
+    // malformed auto specs take the same structured path
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"spec":{"kind":"auto","route_weights":"fast"}}"#,
+    )
+    .unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("route_weights"), "{raw}");
+    let raw = http_post_raw(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"spec":{"kind":"auto","budget":3}}"#,
+    )
+    .unwrap();
+    assert!(raw.starts_with("HTTP/1.1 400"), "{raw}");
+    assert!(raw.contains("unknown auto spec field 'budget'"), "{raw}");
 
     let metrics = http_get(&addr, "/metrics").unwrap();
     let m = Json::parse(&metrics).unwrap();
-    assert_eq!(m.get("errors").unwrap().as_u64(), Some(4));
+    assert_eq!(m.get("errors").unwrap().as_u64(), Some(6));
     assert_eq!(m.get("sessions_started").unwrap().as_u64(), Some(0));
     batcher.stop();
 }
@@ -826,6 +844,72 @@ fn protocols_endpoint_lists_aliases_kinds_and_schema() {
     for field in ["local", "remote", "strategy", "top_k"] {
         assert!(schema.get(field).is_some(), "schema missing {field}: {body}");
     }
+    // the auto meta-kind is documented alongside, with per-field
+    // help/defaults for composing a {"kind":"auto"} spec
+    let auto = j.get("auto").unwrap_or_else(|| panic!("no auto section: {body}"));
+    for field in ["kind", "local", "remote", "route_weights", "probe_budget", "allowed"] {
+        let f = auto.get(field).unwrap_or_else(|| panic!("auto missing {field}: {body}"));
+        assert!(f.get("help").is_some() && f.get("default").is_some(), "{body}");
+    }
+    batcher.stop();
+}
+
+/// Acceptance: an inline `{"kind":"auto"}` session routes through the
+/// difficulty probe, runs on the chosen rung, and every surface — the
+/// create response, the status body, the cost-accounted query reply,
+/// `/metrics` — reports the *resolved* protocol, never the literal
+/// `auto`.
+#[test]
+fn auto_sessions_route_and_account_on_the_resolved_rung() {
+    let (state, batcher) = spec_server_state();
+    let server = Server::bind(state, "127.0.0.1:0", 2).unwrap();
+    let addr = server.addr.to_string();
+    std::thread::spawn(move || server.serve(None));
+
+    // quality-first over {local, minions} deterministically escalates
+    let resp = http_post(
+        &addr,
+        "/v1/sessions",
+        r#"{"dataset":"micro","sample":0,"spec":{"kind":"auto","local":"llama-3b","route_weights":"0:0:1","allowed":["local","minions"]}}"#,
+    )
+    .unwrap();
+    let j = Json::parse(&resp).unwrap();
+    let sid = j.get("session_id").and_then(Json::as_u64).unwrap_or_else(|| panic!("{resp}"));
+    assert_ne!(j.get("protocol").and_then(Json::as_str), Some("auto"), "{resp}");
+    let routed = j.get("routed").unwrap_or_else(|| panic!("no routed payload: {resp}"));
+    assert_eq!(routed.get("chosen_kind").and_then(Json::as_str), Some("minions"));
+    assert!(routed.get("features").is_some() && routed.get("scores").is_some(), "{resp}");
+    let events = http_get(&addr, &format!("/v1/sessions/{sid}/events")).unwrap();
+    assert!(events.contains("\"finalized\""), "{events}");
+    let status = Json::parse(&http_get(&addr, &format!("/v1/sessions/{sid}")).unwrap()).unwrap();
+    assert_ne!(status.get("protocol").and_then(Json::as_str), Some("auto"));
+    assert_eq!(
+        status.get("routed").and_then(|r| r.get("chosen_kind")).and_then(Json::as_str),
+        Some("minions")
+    );
+
+    // the blocking query path routes too; cost fields account the
+    // resolved rung (cost-first stays on the zero-dollar local rung)
+    let reply = http_post(
+        &addr,
+        "/v1/query",
+        r#"{"dataset":"micro","sample":1,"spec":{"kind":"auto","local":"llama-3b","route_weights":"0:1:0"}}"#,
+    )
+    .unwrap();
+    let q = Json::parse(&reply).unwrap();
+    assert_ne!(q.get("protocol").and_then(Json::as_str), Some("auto"), "{reply}");
+    assert_eq!(
+        q.get("routed").and_then(|r| r.get("chosen_kind")).and_then(Json::as_str),
+        Some("local"),
+        "{reply}"
+    );
+    assert_eq!(q.get("usd").and_then(Json::as_f64), Some(0.0), "{reply}");
+
+    let m = Json::parse(&http_get(&addr, "/metrics").unwrap()).unwrap();
+    assert_eq!(m.get("router_requests").unwrap().as_u64(), Some(2));
+    assert_eq!(m.get("router_chosen_minions").unwrap().as_u64(), Some(1));
+    assert_eq!(m.get("router_chosen_local").unwrap().as_u64(), Some(1));
+    assert_eq!(m.get("router_chosen_remote").unwrap().as_u64(), Some(0));
     batcher.stop();
 }
 
